@@ -1,0 +1,48 @@
+//! Failure handling demo (§5.4): a training run in which a client is
+//! hard-killed and a server slot is lost mid-run. The scheduler's
+//! failover respawns the client from its barrier-free snapshot, the
+//! server manager freezes the system, rebinds the slot to a fresh node
+//! restored from *its* snapshot, and training converges anyway.
+//!
+//! ```sh
+//! cargo run --release --example failover_demo
+//! ```
+
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+use std::time::Duration;
+
+fn main() {
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 20;
+    cfg.corpus.n_docs = 1_200;
+    cfg.corpus.vocab_size = 2_000;
+    cfg.corpus.n_topics = 20;
+    cfg.corpus.doc_len_mean = 40.0;
+    cfg.cluster.clients = 4;
+    cfg.iterations = 12;
+    cfg.eval_every = 3;
+    cfg.test_docs = 80;
+    // Slow the workers slightly so the injected failures land mid-run.
+    cfg.cluster.worker_slowdown = Duration::from_micros(300);
+    // Barrier-free snapshots every 100 ms (paper: "every N minutes").
+    cfg.cluster.snapshot_every = Some(Duration::from_millis(100));
+    // The failure plan: kill client 2 at iteration 3, server slot 0 at 6.
+    cfg.failures.kill_clients = vec![(3, 2)];
+    cfg.failures.kill_servers = vec![(6, 0)];
+
+    println!("failover demo: killing client 2 @ iter 3 and server slot 0 @ iter 6\n");
+    let report = Trainer::new(cfg).run().expect("training failed");
+    report.print_table();
+
+    println!("\nreassignments (client failovers): {}", report.reassignments);
+    assert!(
+        report.reassignments >= 1,
+        "expected at least one client failover"
+    );
+    println!(
+        "final perplexity {:.1} — training survived both failures.",
+        report.final_perplexity()
+    );
+}

@@ -1,0 +1,63 @@
+//! Model zoo: the four samplers of the paper on one corpus, one table —
+//! YahooLDA (sparse baseline), AliasLDA, AliasPDP, AliasHDP. Shows the
+//! generality claim: one parameter-server system, four latent variable
+//! models, the alias machinery shared by the last three.
+//!
+//! ```sh
+//! cargo run --release --example model_zoo
+//! ```
+
+use hplvm::bench;
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+
+fn main() {
+    let models = [
+        ModelKind::YahooLda,
+        ModelKind::AliasLda,
+        ModelKind::AliasPdp,
+        ModelKind::AliasHdp,
+    ];
+    let mut rows = Vec::new();
+    for model in models {
+        let mut cfg = TrainConfig::default();
+        cfg.model = model;
+        cfg.params.topics = if model == ModelKind::AliasHdp { 60 } else { 30 };
+        cfg.corpus.n_docs = 1_200;
+        cfg.corpus.vocab_size = 2_500;
+        cfg.corpus.n_topics = 20;
+        cfg.corpus.doc_len_mean = 40.0;
+        if model == ModelKind::AliasPdp {
+            cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+        }
+        cfg.cluster.clients = 4;
+        cfg.iterations = 10;
+        cfg.eval_every = 5;
+        cfg.test_docs = 80;
+        println!("running {} ...", model.name());
+        let report = Trainer::new(cfg).run().expect("train");
+        rows.push(vec![
+            model.name().to_string(),
+            format!("{:.1}", report.final_perplexity()),
+            format!("{:.4}", report.final_log_lik()),
+            format!("{:.3}", report.steady_state_iter_secs()),
+            format!("{:.2}M", report.tokens_per_sec / 1e6),
+            report.corrections.to_string(),
+        ]);
+    }
+    println!();
+    bench::table(
+        &[
+            "model",
+            "perplexity",
+            "loglik/token",
+            "iter time(s)",
+            "tokens/s",
+            "corrections",
+        ],
+        &rows,
+    );
+    println!("\nNote: PDP runs on a power-law (PYP-generated) corpus — its perplexity is");
+    println!("not directly comparable to the LDA rows; corrections > 0 only for the");
+    println!("constrained models (PDP/HDP), exactly as §5.5 predicts.");
+}

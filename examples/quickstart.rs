@@ -1,0 +1,35 @@
+//! Quickstart: train AliasLDA on a synthetic corpus over a simulated
+//! 4-client / 2-server parameter-server cluster and print the paper-style
+//! per-iteration table.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hplvm::config::TrainConfig;
+use hplvm::coordinator::trainer::Trainer;
+
+fn main() {
+    let mut cfg = TrainConfig::small_lda();
+    cfg.iterations = 15;
+    cfg.eval_every = 5;
+
+    println!(
+        "quickstart: {} | {} docs, vocab {}, K={} | {} clients / {} servers",
+        cfg.model.name(),
+        cfg.corpus.n_docs,
+        cfg.corpus.vocab_size,
+        cfg.params.topics,
+        cfg.cluster.clients,
+        cfg.cluster.n_servers(),
+    );
+
+    let report = Trainer::new(cfg).run().expect("training failed");
+    report.print_table();
+
+    println!(
+        "\nfinal test perplexity: {:.1} (lower is better; vocab-size {} would be chance)",
+        report.final_perplexity(),
+        2_000
+    );
+}

@@ -1,0 +1,68 @@
+//! Topic discovery: train on a corpus with a known ground truth, then
+//! inspect what the model recovered — top words per topic, topic shares,
+//! and the document-side sparsity the alias sampler exploits.
+//!
+//! ```sh
+//! cargo run --release --example topic_discovery
+//! ```
+
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::model::ModelSampler;
+use hplvm::corpus::vocab::Vocabulary;
+use hplvm::eval::topics::{top_words, topic_shares};
+use hplvm::util::rng::Rng;
+
+fn main() {
+    // Single-machine training for direct access to the learned counts.
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 12;
+    cfg.corpus.n_docs = 1_500;
+    cfg.corpus.vocab_size = 3_000;
+    cfg.corpus.n_topics = 12;
+    cfg.corpus.doc_len_mean = 60.0;
+
+    let (corpus, _) = cfg.corpus.generate();
+    let vocab = Vocabulary::new(cfg.corpus.vocab_size, cfg.corpus.zipf_s);
+    let mut rng = Rng::new(7);
+    let mut sampler = ModelSampler::build(&cfg, corpus.docs.clone(), cfg.corpus.vocab_size, None, &mut rng);
+
+    println!("training {} sweeps on {} tokens ...", 30, corpus.total_tokens());
+    for sweep in 0..30 {
+        for d in 0..corpus.docs.len() {
+            sampler.sample_doc(d, &mut rng);
+        }
+        if sweep % 10 == 9 {
+            println!(
+                "  sweep {:>2}: topics/word {:.2}, MH acceptance {:.2}",
+                sweep + 1,
+                sampler.topics_per_word(),
+                sampler.acceptance_rate()
+            );
+        }
+    }
+
+    println!("\ntop words per topic (synthetic ids; rank 0 = most frequent type):");
+    let tops = top_words(sampler.primary(), 8);
+    for (t, words) in tops.iter().enumerate() {
+        if words.is_empty() {
+            continue;
+        }
+        let line: Vec<String> = words
+            .iter()
+            .map(|&(w, c)| format!("{}({})", vocab.surface(w), c))
+            .collect();
+        println!("  topic {t:>2}: {}", line.join(" "));
+    }
+
+    let shares = topic_shares(sampler.primary());
+    println!("\ntopic shares (sorted): {:?}", &shares[..shares.len().min(12)]
+        .iter()
+        .map(|s| format!("{:.3}", s))
+        .collect::<Vec<_>>());
+    println!(
+        "ground truth had {} topics; effective topics (share > 1%): {}",
+        cfg.corpus.n_topics,
+        shares.iter().filter(|&&s| s > 0.01).count()
+    );
+}

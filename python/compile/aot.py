@@ -1,0 +1,106 @@
+"""AOT compiler: lower the Layer-2 graphs to HLO text + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime then loads
+`artifacts/*.hlo.txt` through the PJRT C API and python never runs again.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+(see /opt/xla-example/README.md and aot_recipe).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--k 512] [--batch 256]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static shapes the artifacts are specialized to. K is padded by the rust
+# caller; 512 covers every configuration the benches use (larger K falls
+# back to the bit-identical rust path).
+DEFAULT_K = 512
+LOG_DOT_BATCH = 256
+PHI_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_log_dot(batch, k, use_pallas):
+    spec = jax.ShapeDtypeStruct((batch, k), jnp.float32)
+    fn = lambda t, p: model.eval_log_dot(t, p, use_pallas=use_pallas)  # noqa: E731
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_phi_dense(batch, k, use_pallas):
+    counts = jax.ShapeDtypeStruct((batch, k), jnp.float32)
+    denom = jax.ShapeDtypeStruct((k,), jnp.float32)
+    beta = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = lambda c, d, b: model.dense_phi(c, d, b, use_pallas=use_pallas)  # noqa: E731
+    return jax.jit(fn).lower(counts, denom, beta)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--k", type=int, default=DEFAULT_K)
+    ap.add_argument("--log-dot-batch", type=int, default=LOG_DOT_BATCH)
+    ap.add_argument("--phi-batch", type=int, default=PHI_BATCH)
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+
+    use_pallas = not args.no_pallas
+    flavor = "pallas" if use_pallas else "jnp"
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+
+    text = to_hlo_text(lower_log_dot(args.log_dot_batch, args.k, use_pallas))
+    path = os.path.join(args.out_dir, "log_dot.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["log_dot"] = {
+        "file": "log_dot.hlo.txt",
+        "batch": args.log_dot_batch,
+        "k": args.k,
+        "flavor": flavor,
+    }
+    print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    text = to_hlo_text(lower_phi_dense(args.phi_batch, args.k, use_pallas))
+    path = os.path.join(args.out_dir, "phi_dense.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["phi_dense"] = {
+        "file": "phi_dense.hlo.txt",
+        "batch": args.phi_batch,
+        "k": args.k,
+        "flavor": flavor,
+    }
+    print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

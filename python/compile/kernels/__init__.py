@@ -1,0 +1,7 @@
+# Layer 1: Pallas kernels for the dense math of the alias sampler and the
+# perplexity estimator. Build-time only — lowered to HLO by ../aot.py and
+# never imported at runtime.
+from .log_dot import log_dot_pallas
+from .phi_dense import phi_dense_pallas
+
+__all__ = ["log_dot_pallas", "phi_dense_pallas"]

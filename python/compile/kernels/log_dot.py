@@ -1,0 +1,59 @@
+"""Pallas kernel: the perplexity estimator's scoring pass.
+
+For a batch of test tokens the rust coordinator gathers the fold-in
+mixture theta[b, :] and the model row phi[b, :] (phi[b, t] = p(w_b | t));
+the kernel computes
+
+    out[b] = log( sum_t theta[b, t] * phi[b, t] )
+
+which is `log p(w_b | d)` in the paper's estimator (Section 6).
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"): tokens tile the sublane
+axis (block of 8), topics live on the 128-wide lane axis and are reduced
+in-register; the multiply-reduce feeds the MXU-adjacent VPU with both
+operands streamed HBM->VMEM once. `interpret=True` everywhere in this
+environment: the CPU PJRT plugin cannot execute Mosaic custom-calls, so
+the kernel lowers to plain HLO with identical numerics (the gotcha list
+in /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sublane-aligned token block (8 is the f32 sublane count on TPU).
+BLOCK_B = 8
+
+
+def _log_dot_kernel(theta_ref, phi_ref, out_ref):
+    """One (BLOCK_B, K) tile: elementwise product, lane reduce, log."""
+    t = theta_ref[...]
+    p = phi_ref[...]
+    acc = jnp.sum(t * p, axis=1)
+    # Clamp to a tiny positive value: unseen words can have all-zero
+    # statistics (the paper evaluates them with zero stats, not by
+    # skipping), and log(0) would poison the batch.
+    acc = jnp.maximum(acc, jnp.float32(1e-30))
+    out_ref[...] = jnp.log(acc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def log_dot_pallas(theta, phi, interpret=True):
+    """out[b] = log(sum_t theta[b,t] * phi[b,t]); shapes [B, K] -> [B]."""
+    b, k = theta.shape
+    assert phi.shape == (b, k)
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _log_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(theta.astype(jnp.float32), phi.astype(jnp.float32))

@@ -1,0 +1,55 @@
+"""Pallas kernel: dense word-given-topic probabilities.
+
+phi[b, t] = (counts[b, t] + beta) / denom[t]
+
+with denom[t] = n_t + beta_bar precomputed by the caller. This is the
+dense factor of eq. (4) — the quantity the alias sampler snapshots into
+its stale per-word proposal tables and the evaluator uses for phi rows.
+
+TPU mapping: word rows tile the sublane axis, topics the lane axis;
+`denom` is O(K) and stays resident in VMEM across the whole grid (the
+BlockSpec pins it to block (K,) at every grid point), so each tile costs
+one HBM read of the counts block and no re-fetches — the BlockSpec
+expresses what a CUDA port would do with a shared-memory broadcast.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 8
+
+
+def _phi_dense_kernel(counts_ref, denom_ref, beta_ref, out_ref):
+    c = counts_ref[...]
+    d = denom_ref[...]
+    beta = beta_ref[0]
+    # Guard: relaxed consistency can transiently produce negative counts
+    # or zero denominators; clamp like the rust hot path does.
+    c = jnp.maximum(c, 0.0)
+    d = jnp.maximum(d, jnp.float32(1e-9))
+    out_ref[...] = (c + beta) / d[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def phi_dense_pallas(counts, denom, beta, interpret=True):
+    """phi[b,t] = (max(counts,0)+beta)/denom[t]; [B,K],[K],scalar -> [B,K]."""
+    b, k = counts.shape
+    assert denom.shape == (k,)
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    beta_arr = jnp.asarray(beta, dtype=jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _phi_dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(counts.astype(jnp.float32), denom.astype(jnp.float32), beta_arr)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel has a reference here; pytest asserts allclose across shapes
+and dtypes (hypothesis sweeps). The rust fallback evaluator implements
+the same math, so this file is the single source of truth for numerics.
+"""
+
+import jax.numpy as jnp
+
+
+def log_dot_ref(theta, phi):
+    """out[b] = log(max(sum_t theta[b,t]*phi[b,t], 1e-30))."""
+    theta = theta.astype(jnp.float32)
+    phi = phi.astype(jnp.float32)
+    acc = jnp.sum(theta * phi, axis=1)
+    return jnp.log(jnp.maximum(acc, jnp.float32(1e-30)))
+
+
+def phi_dense_ref(counts, denom, beta):
+    """phi[b,t] = (max(counts,0)+beta)/max(denom,1e-9)."""
+    counts = jnp.maximum(counts.astype(jnp.float32), 0.0)
+    denom = jnp.maximum(denom.astype(jnp.float32), jnp.float32(1e-9))
+    beta = jnp.float32(beta)
+    return (counts + beta) / denom[None, :]

@@ -1,0 +1,44 @@
+"""Layer 2: the JAX compute graphs the rust runtime executes.
+
+Each function here is a jit-able graph calling the Layer-1 Pallas
+kernels; `aot.py` lowers them once to HLO text. The graphs are small on
+purpose — the paper's contribution is the coordination layer, so L2 is
+the *dense* math of the system: the perplexity scoring pass and the
+phi/dense-proposal normalization (the stale distribution the alias
+sampler snapshots).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import log_dot_pallas, phi_dense_pallas
+from .kernels.ref import log_dot_ref, phi_dense_ref
+
+
+def eval_log_dot(theta, phi, *, use_pallas=True):
+    """Perplexity scoring pass: out[b] = log p(w_b | d_b).
+
+    The graph returns a 1-tuple so the rust side can unwrap uniformly
+    (`to_tuple1`, see /opt/xla-example/load_hlo.rs).
+    """
+    if use_pallas:
+        return (log_dot_pallas(theta, phi),)
+    return (log_dot_ref(theta, phi),)
+
+
+def dense_phi(counts, denom, beta, *, use_pallas=True):
+    """phi[b,t] = (counts[b,t]+beta)/denom[t] over a row batch."""
+    if use_pallas:
+        return (phi_dense_pallas(counts, denom, beta),)
+    return (phi_dense_ref(counts, denom, beta),)
+
+
+def dense_proposal(counts, denom, alpha, beta, *, use_pallas=True):
+    """The alias sampler's stale dense weights q_w(t) = alpha_t * phi_tw
+    plus their row sums (eq. 4's dense term and its normalizer).
+
+    alpha: [K] per-topic document smoothing.
+    Returns (q [B,K], qsum [B]).
+    """
+    (phi,) = dense_phi(counts, denom, beta, use_pallas=use_pallas)
+    q = phi * alpha[None, :].astype(jnp.float32)
+    return q, jnp.sum(q, axis=1)

@@ -1,0 +1,163 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes (including the degenerate
+states relaxed consistency produces: zero rows, negative counts, zero
+denominators); fixed cases pin the exact edge semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import log_dot_pallas, phi_dense_pallas
+from compile.kernels.ref import log_dot_ref, phi_dense_ref
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, shape, lo=0.0, hi=1.0, dtype=np.float32):
+    return (rng.uniform(lo, hi, size=shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- log_dot
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    k=st.sampled_from([1, 7, 64, 128, 200, 512]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_log_dot_matches_ref(blocks, k, seed):
+    rng = np.random.default_rng(seed)
+    b = 8 * blocks
+    theta = rand(rng, (b, k))
+    phi = rand(rng, (b, k))
+    got = np.asarray(log_dot_pallas(jnp.asarray(theta), jnp.asarray(phi)))
+    want = np.asarray(log_dot_ref(jnp.asarray(theta), jnp.asarray(phi)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_log_dot_known_values():
+    theta = jnp.full((8, 4), 0.25, dtype=jnp.float32)
+    phi = jnp.full((8, 4), 0.5, dtype=jnp.float32)
+    out = np.asarray(log_dot_pallas(theta, phi))
+    np.testing.assert_allclose(out, np.log(0.5), rtol=1e-6)
+
+
+def test_log_dot_zero_rows_clamp():
+    theta = jnp.zeros((8, 16), dtype=jnp.float32)
+    phi = jnp.zeros((8, 16), dtype=jnp.float32)
+    out = np.asarray(log_dot_pallas(theta, phi))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, np.log(1e-30), rtol=1e-5)
+
+
+def test_log_dot_accepts_f64_inputs():
+    rng = np.random.default_rng(0)
+    theta = rand(rng, (8, 32), dtype=np.float64)
+    phi = rand(rng, (8, 32), dtype=np.float64)
+    got = np.asarray(log_dot_pallas(jnp.asarray(theta), jnp.asarray(phi)))
+    want = np.asarray(log_dot_ref(jnp.asarray(theta), jnp.asarray(phi)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_log_dot_rejects_unaligned_batch():
+    with pytest.raises(AssertionError):
+        log_dot_pallas(jnp.zeros((7, 8)), jnp.zeros((7, 8)))
+
+
+# -------------------------------------------------------------- phi_dense
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    k=st.sampled_from([1, 5, 64, 128, 512]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_phi_dense_matches_ref(blocks, k, seed):
+    rng = np.random.default_rng(seed)
+    b = 8 * blocks
+    counts = rand(rng, (b, k), lo=-3.0, hi=50.0)  # include negatives
+    denom = rand(rng, (k,), lo=0.0, hi=100.0)  # include ~zero denominators
+    beta = float(rng.uniform(0.001, 1.0))
+    got = np.asarray(phi_dense_pallas(jnp.asarray(counts), jnp.asarray(denom), beta))
+    want = np.asarray(phi_dense_ref(jnp.asarray(counts), jnp.asarray(denom), beta))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_phi_dense_known_values():
+    counts = jnp.asarray(np.arange(8 * 4, dtype=np.float32).reshape(8, 4))
+    denom = jnp.full((4,), 10.0, dtype=jnp.float32)
+    out = np.asarray(phi_dense_pallas(counts, denom, 0.5))
+    want = (np.arange(32, dtype=np.float32).reshape(8, 4) + 0.5) / 10.0
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_phi_dense_clamps_negative_counts():
+    counts = jnp.full((8, 2), -5.0, dtype=jnp.float32)
+    denom = jnp.ones((2,), dtype=jnp.float32)
+    out = np.asarray(phi_dense_pallas(counts, denom, 0.25))
+    np.testing.assert_allclose(out, 0.25, rtol=1e-6)
+
+
+# ------------------------------------------------------------------- L2
+
+def test_model_graphs_pallas_vs_jnp_agree():
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(rand(rng, (16, 64)))
+    phi = jnp.asarray(rand(rng, (16, 64)))
+    (a,) = model.eval_log_dot(theta, phi, use_pallas=True)
+    (b,) = model.eval_log_dot(theta, phi, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    counts = jnp.asarray(rand(rng, (8, 64), hi=30.0))
+    denom = jnp.asarray(rand(rng, (64,), lo=1.0, hi=40.0))
+    (pa,) = model.dense_phi(counts, denom, 0.1, use_pallas=True)
+    (pb,) = model.dense_phi(counts, denom, 0.1, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), rtol=1e-5)
+
+
+def test_dense_proposal_sums():
+    rng = np.random.default_rng(9)
+    counts = jnp.asarray(rand(rng, (8, 32), hi=20.0))
+    denom = jnp.asarray(rand(rng, (32,), lo=1.0, hi=30.0))
+    alpha = jnp.asarray(rand(rng, (32,), lo=0.01, hi=0.5))
+    q, qsum = model.dense_proposal(counts, denom, alpha, 0.05)
+    np.testing.assert_allclose(
+        np.asarray(qsum), np.asarray(q).sum(axis=1), rtol=1e-5
+    )
+    assert np.all(np.asarray(q) >= 0)
+
+
+# ------------------------------------------------------------------- AOT
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    from compile import aot
+
+    text = aot.to_hlo_text(aot.lower_log_dot(16, 32, use_pallas=True))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    text2 = aot.to_hlo_text(aot.lower_phi_dense(8, 32, use_pallas=True))
+    assert "HloModule" in text2
+
+
+def test_aot_main_writes_manifest(tmp_path, monkeypatch):
+    import sys
+    from compile import aot
+
+    out = tmp_path / "artifacts"
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["aot", "--out-dir", str(out), "--k", "32", "--log-dot-batch", "16", "--phi-batch", "8"],
+    )
+    aot.main()
+    import json
+
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["log_dot"]["k"] == 32
+    assert (out / "log_dot.hlo.txt").exists()
+    assert (out / "phi_dense.hlo.txt").exists()

@@ -1,0 +1,92 @@
+//! Figure 8: HDP with vs without projection — the ablation showing why
+//! §5.5 exists. Without corrections the shared table/count statistics
+//! drift out of the model's polytope under relaxed consistency and the
+//! perplexity estimate degrades/diverges; with Algorithm 2 it converges.
+//! An aggressive transport (drops + latency) makes the conflicts frequent
+//! like a 200-client production run.
+
+use hplvm::bench;
+use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+use std::time::Duration;
+
+fn cfg(model: ModelKind, projection: ProjectionMode) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model;
+    cfg.params.topics = 80;
+    cfg.corpus.n_docs = 1_600;
+    cfg.corpus.vocab_size = 3_000;
+    cfg.corpus.n_topics = 20;
+    cfg.corpus.doc_len_mean = 40.0;
+    if model == ModelKind::AliasPdp {
+        cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+    }
+    cfg.cluster.clients = 8;
+    // Hostile consistency regime: real drops and latency.
+    cfg.cluster.net.base_latency = Duration::from_micros(300);
+    cfg.cluster.net.jitter = Duration::from_micros(700);
+    cfg.cluster.net.drop_prob = 0.08;
+    cfg.projection = projection;
+    cfg.iterations = 12;
+    cfg.eval_every = 3;
+    cfg.test_docs = 60;
+    cfg
+}
+
+fn run_panel(model: ModelKind) {
+    println!("\n## {} — 8 clients, with vs without projection", model.name());
+    let mut curves = Vec::new();
+    for (label, mode) in [
+        ("with projection (Alg 2)", ProjectionMode::Distributed),
+        ("WITHOUT projection", ProjectionMode::Off),
+    ] {
+        let report = Trainer::new(cfg(model, mode)).run().expect("train");
+        let curve: Vec<(u64, f64, f64)> = report
+            .per_iteration
+            .iter()
+            .filter(|r| r.perplexity.count() > 0)
+            .map(|r| (r.iteration, r.perplexity.mean(), r.perplexity.std()))
+            .collect();
+        println!(
+            "\n-- {label}: corrections={} final={:.1} --",
+            report.corrections,
+            report.final_perplexity()
+        );
+        curves.push((label, curve, report.final_perplexity()));
+    }
+    bench::section("perplexity curves");
+    let max_len = curves.iter().map(|(_, c, _)| c.len()).max().unwrap_or(0);
+    let mut rows = Vec::new();
+    for i in 0..max_len {
+        let mut row = vec![curves[0].1.get(i).map(|c| c.0.to_string()).unwrap_or_default()];
+        for (_, curve, _) in &curves {
+            row.push(
+                curve
+                    .get(i)
+                    .map(|c| format!("{:.1} ±{:.1}", c.1, c.2))
+                    .unwrap_or_default(),
+            );
+        }
+        rows.push(row);
+    }
+    bench::table(&["iter", "with projection", "without projection"], &rows);
+    let with = curves[0].2;
+    let without = curves[1].2;
+    println!(
+        "\nfinal: with={with:.1} without={without:.1} (ratio {:.2}x)",
+        without / with
+    );
+}
+
+fn main() {
+    println!("# Figure 8 — with vs without projection (paper: HDP @ 200 clients)");
+    // The paper's panel is HDP; we also run PDP, whose word-level
+    // (s_tw ≤ m_tw) polytope is hit by *every* conflicting update and
+    // shows the mechanism's work most clearly.
+    run_panel(ModelKind::AliasHdp);
+    run_panel(ModelKind::AliasPdp);
+    println!("\nExpected shape (paper Fig 8): the no-projection run converges slower and/or");
+    println!("diverges; the projected run is strictly better at matched iterations. In this");
+    println!("repro the HDP document-side tables are repaired locally by construction, so");
+    println!("the separation is strongest on PDP's shared word-level polytope.");
+}

@@ -1,0 +1,61 @@
+//! Communication-filter ablation (§5.3): the paper's magnitude-priority
+//! + uniform-sampling filter vs sending everything. The filter trades
+//! network bytes against staleness; the measurement is bytes-on-the-wire
+//! and perplexity at matched iterations.
+
+use hplvm::bench;
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+use hplvm::ps::filter::Filter;
+use std::time::Duration;
+
+fn cfg(filter: Filter) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 100;
+    cfg.corpus.n_docs = 1_600;
+    cfg.corpus.vocab_size = 4_000;
+    cfg.corpus.n_topics = 25;
+    cfg.corpus.doc_len_mean = 40.0;
+    cfg.cluster.clients = 8;
+    cfg.cluster.filter = filter;
+    cfg.cluster.net.base_latency = Duration::from_micros(100);
+    cfg.cluster.net.jitter = Duration::from_micros(200);
+    cfg.iterations = 10;
+    cfg.eval_every = 5;
+    cfg.test_docs = 60;
+    cfg
+}
+
+fn main() {
+    println!("# Table — communication filters (§5.3 ablation)");
+    let variants = [
+        ("send everything", Filter::default()),
+        ("magnitude 50% + uniform 10%", Filter::magnitude_priority()),
+        (
+            "magnitude 25% + uniform 5%",
+            Filter {
+                magnitude_fraction: 0.25,
+                uniform_prob: 0.05,
+            },
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (label, filter) in variants {
+        let report = Trainer::new(cfg(filter)).run().expect("train");
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}", report.net.3 as f64 / (1024.0 * 1024.0)),
+            report.net.0.to_string(),
+            format!("{:.1}", report.final_perplexity()),
+            format!("{:.3}", report.steady_state_iter_secs()),
+        ]);
+    }
+    bench::table(
+        &["filter", "MiB on wire", "messages", "perplexity", "iter(s)"],
+        &rows,
+    );
+    println!("\nExpected shape (§5.3): the filter cuts wire volume materially while the");
+    println!("uniform-sampling rescue keeps perplexity within noise of send-everything");
+    println!("at matched iterations (retained rows are re-queued, not lost).");
+}

@@ -1,0 +1,183 @@
+//! Throughput table (§6.3 "many machines ... above one million tokens per
+//! second" + §6.1's central scaling claim): raw single-thread sampling
+//! rate per model, the AliasLDA-vs-SparseLDA sweep over topic counts
+//! (alias stays flat, sparse grows with topics-per-word), and the
+//! multi-thread stash pool rate.
+
+use hplvm::bench;
+use hplvm::corpus::generator::{CorpusConfig, GenerativeModel};
+use hplvm::sampler::alias::AliasTable;
+use hplvm::sampler::alias_lda::AliasLda;
+use hplvm::sampler::hdp::AliasHdp;
+use hplvm::sampler::pdp::AliasPdp;
+use hplvm::sampler::sparse_lda::SparseLda;
+use hplvm::sampler::DocSampler;
+use hplvm::util::rng::Rng;
+
+fn corpus(vocab: usize, n_docs: usize, truth: usize, pyp: bool) -> Vec<hplvm::corpus::doc::Document> {
+    let (c, _) = CorpusConfig {
+        n_docs,
+        vocab_size: vocab,
+        n_topics: truth,
+        doc_len_mean: 50.0,
+        model: if pyp { GenerativeModel::Pyp } else { GenerativeModel::Lda },
+        seed: 99,
+        ..Default::default()
+    }
+    .generate();
+    c.docs
+}
+
+fn main() {
+    println!("# Throughput — tokens/second/client (paper: ~1M/client at 2000 topics)");
+    let vocab = 5_000;
+    let docs = corpus(vocab, 1_500, 30, false);
+    let tokens: usize = docs.iter().map(|d| d.len()).sum();
+
+    bench::section("K-sweep: per-token cost vs topic count (the paper's central claim)");
+    let mut rows = Vec::new();
+    for k in [100usize, 400, 1600] {
+        let mut rng = Rng::new(1);
+        let mut alias = AliasLda::new(docs.clone(), vocab, k, 0.1, 0.01, &mut rng);
+        // Warm into the dense regime so topics-per-word is realistic.
+        for d in 0..alias.docs.len() {
+            alias.sample_doc(d, &mut rng);
+        }
+        let r_alias = bench::time_units(&format!("AliasLDA K={k}"), 1, 3, tokens as f64, || {
+            for d in 0..alias.docs.len() {
+                alias.sample_doc(d, &mut rng);
+            }
+        });
+        let mut rng = Rng::new(1);
+        let mut sparse = SparseLda::new(docs.clone(), vocab, k, 0.1, 0.01, &mut rng);
+        for d in 0..sparse.docs.len() {
+            sparse.sample_doc(d, &mut rng);
+        }
+        let r_sparse = bench::time_units(&format!("SparseLDA K={k}"), 1, 3, tokens as f64, || {
+            for d in 0..sparse.docs.len() {
+                sparse.sample_doc(d, &mut rng);
+            }
+        });
+        let tpw = sparse.nwt.avg_topics_per_word();
+        rows.push(vec![
+            k.to_string(),
+            format!("{:.2}", tpw),
+            format!("{:.2}M", r_alias.throughput() / 1e6),
+            format!("{:.2}M", r_sparse.throughput() / 1e6),
+            format!("{:.2}x", r_alias.throughput() / r_sparse.throughput().max(1.0)),
+        ]);
+    }
+    bench::table(
+        &["K", "topics/word", "AliasLDA tok/s", "SparseLDA tok/s", "speedup"],
+        &rows,
+    );
+
+    bench::section("all four models at K=200 (single thread)");
+    let k = 200;
+    let mut rows = Vec::new();
+    {
+        let mut rng = Rng::new(2);
+        let mut s = AliasLda::new(docs.clone(), vocab, k, 0.1, 0.01, &mut rng);
+        let r = bench::time_units("AliasLDA", 1, 3, tokens as f64, || {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        });
+        rows.push(vec!["AliasLDA".into(), format!("{:.2}M", r.throughput() / 1e6)]);
+    }
+    {
+        let mut rng = Rng::new(2);
+        let mut s = SparseLda::new(docs.clone(), vocab, k, 0.1, 0.01, &mut rng);
+        let r = bench::time_units("YahooLDA", 1, 3, tokens as f64, || {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        });
+        rows.push(vec!["YahooLDA".into(), format!("{:.2}M", r.throughput() / 1e6)]);
+    }
+    {
+        let pyp_docs = corpus(vocab, 800, 30, true);
+        let pyp_tokens: usize = pyp_docs.iter().map(|d| d.len()).sum();
+        let mut rng = Rng::new(2);
+        let mut s = AliasPdp::new(pyp_docs, vocab, k, 0.1, 0.1, 10.0, 0.5, &mut rng);
+        let r = bench::time_units("AliasPDP", 1, 2, pyp_tokens as f64, || {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        });
+        rows.push(vec!["AliasPDP".into(), format!("{:.2}M", r.throughput() / 1e6)]);
+    }
+    {
+        let mut rng = Rng::new(2);
+        let mut s = AliasHdp::new(docs.clone(), vocab, k, 1.0, 1.0, 0.01, &mut rng);
+        let r = bench::time_units("AliasHDP", 1, 2, tokens as f64, || {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        });
+        rows.push(vec!["AliasHDP".into(), format!("{:.2}M", r.throughput() / 1e6)]);
+    }
+    bench::table(&["model", "tokens/s"], &rows);
+
+    bench::section("multi-thread stash pool (§5.1): draws/s across sampling threads");
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = std::sync::Arc::new(hplvm::sampler::stash::AliasPool::spawn(
+            256,
+            1024,
+            move |w| {
+                let mut rng = Rng::new(w as u64);
+                (0..200).map(|_| rng.f64() + 0.01).collect()
+            },
+            5,
+        ));
+        let draws_per_thread = 400_000usize;
+        let r = bench::time_units(
+            &format!("{threads} threads"),
+            0,
+            3,
+            (draws_per_thread * threads) as f64,
+            || {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let pool = pool.clone();
+                        std::thread::spawn(move || {
+                            let mut acc = 0u64;
+                            for i in 0..draws_per_thread {
+                                acc += pool.pop(((i * 7 + t) % 256) as u32).0 as u64;
+                            }
+                            acc
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let _ = h.join();
+                }
+            },
+        );
+        rows.push(vec![
+            threads.to_string(),
+            format!("{:.1}M", r.throughput() / 1e6),
+        ]);
+    }
+    bench::table(&["sampling threads", "draws/s"], &rows);
+
+    bench::section("alias-table primitive (O(l) build, O(1) draw)");
+    let mut rng = Rng::new(7);
+    let weights: Vec<f64> = (0..2000).map(|_| rng.f64() + 1e-3).collect();
+    let table = AliasTable::build(&weights);
+    let r_build = bench::time_units("build l=2000", 2, 20, 2000.0, || {
+        std::hint::black_box(AliasTable::build(&weights));
+    });
+    let r_draw = bench::time_units("draw", 1, 5, 1_000_000.0, || {
+        let mut acc = 0usize;
+        for _ in 0..1_000_000 {
+            acc += table.sample(&mut rng);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", r_build.row());
+    println!("{}", r_draw.row());
+    println!("\nExpected shape (paper): alias throughput FLAT in K; sparse degrades as");
+    println!("topics-per-word rises; absolute per-client rate near the 1M tok/s mark.");
+}

@@ -1,0 +1,168 @@
+//! Mini benchmark harness (criterion is unavailable offline): warmup +
+//! timed repetitions with mean/std/min, and paper-style table printing.
+//! Every `rust/benches/*.rs` target (`harness = false`) drives this.
+
+use crate::util::stats::RunningStats;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Seconds per repetition.
+    pub stats: RunningStats,
+    /// Optional work units per repetition (tokens, draws, …) for
+    /// throughput reporting.
+    pub units_per_rep: f64,
+}
+
+impl BenchResult {
+    /// Mean seconds per repetition.
+    pub fn mean_secs(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    /// Units per second (0 when no units were declared).
+    pub fn throughput(&self) -> f64 {
+        if self.units_per_rep > 0.0 && self.stats.mean() > 0.0 {
+            self.units_per_rep / self.stats.mean()
+        } else {
+            0.0
+        }
+    }
+
+    /// One formatted row.
+    pub fn row(&self) -> String {
+        if self.units_per_rep > 0.0 {
+            format!(
+                "{:<44} {:>11.6}s ±{:>9.6}  {:>14.0} units/s",
+                self.name,
+                self.stats.mean(),
+                self.stats.std(),
+                self.throughput()
+            )
+        } else {
+            format!(
+                "{:<44} {:>11.6}s ±{:>9.6}",
+                self.name,
+                self.stats.mean(),
+                self.stats.std()
+            )
+        }
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` unmeasured ones.
+pub fn time_fn(name: &str, warmup: usize, reps: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = RunningStats::new();
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        stats,
+        units_per_rep: 0.0,
+    }
+}
+
+/// Like [`time_fn`] but records `units` work items per repetition.
+pub fn time_units(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    units: f64,
+    f: impl FnMut(),
+) -> BenchResult {
+    let mut r = time_fn(name, warmup, reps, f);
+    r.units_per_rep = units;
+    r
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!();
+    println!("### {title}");
+    println!("{}", "-".repeat(title.len() + 4));
+}
+
+/// Print an aligned table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i.min(widths.len() - 1)]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(headers.iter().map(|s| s.to_string()).collect())
+    );
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+/// The published-system survey behind Fig 1 (parameters vs cores), as
+/// reported in the paper's related-work comparison; this repo's own runs
+/// append a live row.
+pub fn fig1_survey() -> Vec<(&'static str, f64, f64, &'static str)> {
+    // (system, #parameters, #cores, kind)
+    vec![
+        ("VW (Langford)", 1e9, 1e3, "supervised"),
+        ("Graphlab", 1e9, 1e3, "unsupervised"),
+        ("Naiad", 1e9, 1e2, "supervised"),
+        ("REEF", 1e8, 1e2, "supervised"),
+        ("Petuum", 1e10, 1e3, "unsupervised"),
+        ("MLbase", 1e7, 1e2, "supervised"),
+        ("YahooLDA", 1e10, 1e3, "unsupervised"),
+        ("DistBelief", 1e9, 1e4, "supervised"),
+        ("Parameter Server [12]", 1e11, 1e4, "supervised"),
+        ("THIS WORK (paper)", 4e12, 6e4, "unsupervised"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let r = time_fn("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.stats.count(), 5);
+        assert!(r.mean_secs() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_uses_units() {
+        let r = time_units("u", 0, 3, 1000.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let tp = r.throughput();
+        assert!(tp > 0.0 && tp < 1_500_000.0, "tp {tp}");
+    }
+
+    #[test]
+    fn fig1_has_this_work() {
+        let s = fig1_survey();
+        assert!(s.iter().any(|(n, _, _, _)| n.contains("THIS WORK")));
+        assert!(s.iter().all(|&(_, p, c, _)| p > 0.0 && c > 0.0));
+    }
+}

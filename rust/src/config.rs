@@ -1,0 +1,369 @@
+//! Training configuration: model family, sampler, cluster topology,
+//! consistency and failure-injection knobs — plus JSON round-tripping so
+//! experiment presets live in files and CLI flags override them.
+
+use crate::corpus::generator::{CorpusConfig, GenerativeModel};
+use crate::ps::network::NetConfig;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Which latent variable model to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// LDA with the YahooLDA sparse sampler (the baseline).
+    YahooLda,
+    /// LDA with the Metropolis-Hastings-Walker sampler.
+    AliasLda,
+    /// Pitman-Yor topic model (PDP language model).
+    AliasPdp,
+    /// Hierarchical Dirichlet Process topic model.
+    AliasHdp,
+}
+
+impl ModelKind {
+    /// Parse from a CLI/JSON string.
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "yahoolda" | "yahoo" | "sparse" | "sparselda" => Some(ModelKind::YahooLda),
+            "aliaslda" | "alias" | "lda" => Some(ModelKind::AliasLda),
+            "aliaspdp" | "pdp" => Some(ModelKind::AliasPdp),
+            "aliashdp" | "hdp" => Some(ModelKind::AliasHdp),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::YahooLda => "YahooLDA",
+            ModelKind::AliasLda => "AliasLDA",
+            ModelKind::AliasPdp => "AliasPDP",
+            ModelKind::AliasHdp => "AliasHDP",
+        }
+    }
+
+    /// Does this model carry the table polytope (needs projection)?
+    pub fn has_table_constraints(&self) -> bool {
+        matches!(self, ModelKind::AliasPdp | ModelKind::AliasHdp)
+    }
+}
+
+/// Where constraint projection runs (§5.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionMode {
+    /// No projection (Fig 8's diverging ablation).
+    Off,
+    /// Algorithm 1: single designated client.
+    SingleMachine,
+    /// Algorithm 2: partitioned across clients (paper's reported choice).
+    Distributed,
+    /// Algorithm 3: server-side on-demand.
+    OnDemandServer,
+}
+
+impl ProjectionMode {
+    /// Parse from a CLI/JSON string.
+    pub fn parse(s: &str) -> Option<ProjectionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(ProjectionMode::Off),
+            "single" | "alg1" => Some(ProjectionMode::SingleMachine),
+            "distributed" | "alg2" => Some(ProjectionMode::Distributed),
+            "ondemand" | "server" | "alg3" => Some(ProjectionMode::OnDemandServer),
+            _ => None,
+        }
+    }
+}
+
+/// Model hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    /// Number of topics (truncation `K_max` for HDP).
+    pub topics: usize,
+    /// Document-topic Dirichlet α (LDA/PDP).
+    pub alpha: f64,
+    /// Topic-word Dirichlet β (LDA/HDP).
+    pub beta: f64,
+    /// PDP discount `a`.
+    pub pdp_discount: f64,
+    /// PDP concentration `b`.
+    pub pdp_concentration: f64,
+    /// PDP root smoothing γ.
+    pub pdp_gamma: f64,
+    /// HDP root concentration b₀.
+    pub hdp_b0: f64,
+    /// HDP document concentration b₁.
+    pub hdp_b1: f64,
+    /// MH chain length per token.
+    pub mh_steps: usize,
+}
+
+impl Default for ModelParams {
+    fn default() -> Self {
+        ModelParams {
+            topics: 100,
+            alpha: 0.1,
+            beta: 0.01,
+            pdp_discount: 0.1,
+            pdp_concentration: 10.0,
+            pdp_gamma: 0.5,
+            hdp_b0: 1.0,
+            hdp_b1: 1.0,
+            mh_steps: 2,
+        }
+    }
+}
+
+/// Cluster topology + consistency knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Client (worker) nodes — one shard each, like the paper.
+    pub clients: usize,
+    /// Server nodes as a fraction of clients (paper: 40%).
+    pub server_fraction: f64,
+    /// Virtual ring points per server slot.
+    pub vnodes: usize,
+    /// Transport behaviour.
+    pub net: NetConfig,
+    /// Pull cadence: pull every `sync_every` documents sampled.
+    pub sync_every_docs: usize,
+    /// Snapshot cadence (None disables).
+    pub snapshot_every: Option<Duration>,
+    /// Snapshot directory (defaults under the target dir).
+    pub snapshot_dir: Option<std::path::PathBuf>,
+    /// Communication filter applied to every push (§5.3): magnitude
+    /// priority + uniform-sampling rescue. Default = send everything.
+    pub filter: crate::ps::filter::Filter,
+    /// Artificial per-document delay for *initially spawned* workers —
+    /// simulates slow/preemptable machines (replacement nodes run at full
+    /// speed, like the paper's reassignment to fresh machines).
+    pub worker_slowdown: Duration,
+    /// Clients (by index) that get an extra 10× slowdown — deterministic
+    /// straggler injection.
+    pub slow_clients: Vec<usize>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            clients: 4,
+            server_fraction: 0.4,
+            vnodes: 64,
+            net: NetConfig::default(),
+            sync_every_docs: 64,
+            snapshot_every: None,
+            snapshot_dir: None,
+            filter: crate::ps::filter::Filter::default(),
+            worker_slowdown: Duration::ZERO,
+            slow_clients: Vec::new(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Server count: `max(1, round(clients × server_fraction))` (§6:
+    /// "the number of [server] nodes is 40% of the total client nodes").
+    pub fn n_servers(&self) -> usize {
+        ((self.clients as f64 * self.server_fraction).round() as usize).max(1)
+    }
+}
+
+/// Failure-injection schedule (reproduces the shared-cluster preemption
+/// environment of §6).
+#[derive(Clone, Debug, Default)]
+pub struct FailurePlan {
+    /// `(iteration, client_index)` kills.
+    pub kill_clients: Vec<(u64, usize)>,
+    /// `(iteration, server_slot)` kills.
+    pub kill_servers: Vec<(u64, usize)>,
+}
+
+/// The complete training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model family + sampler.
+    pub model: ModelKind,
+    /// Hyper-parameters.
+    pub params: ModelParams,
+    /// Corpus synthesis.
+    pub corpus: CorpusConfig,
+    /// Cluster topology.
+    pub cluster: ClusterConfig,
+    /// Projection placement.
+    pub projection: ProjectionMode,
+    /// Training iterations (full Gibbs sweeps).
+    pub iterations: u64,
+    /// Evaluate test perplexity every `eval_every` iterations (paper: 5).
+    pub eval_every: u64,
+    /// Held-out test documents (paper: 2000).
+    pub test_docs: usize,
+    /// Failure injection.
+    pub failures: FailurePlan,
+    /// Global seed.
+    pub seed: u64,
+    /// Use the PJRT evaluation artifacts when available.
+    pub use_pjrt_eval: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: ModelKind::AliasLda,
+            params: ModelParams::default(),
+            corpus: CorpusConfig::default(),
+            cluster: ClusterConfig::default(),
+            projection: ProjectionMode::Distributed,
+            iterations: 50,
+            eval_every: 5,
+            test_docs: 200,
+            failures: FailurePlan::default(),
+            seed: 42,
+            use_pjrt_eval: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// A fast LDA preset for tests/examples.
+    pub fn small_lda() -> Self {
+        let mut cfg = TrainConfig::default();
+        cfg.params.topics = 20;
+        cfg.corpus.n_docs = 800;
+        cfg.corpus.vocab_size = 2_000;
+        cfg.corpus.n_topics = 20;
+        cfg.corpus.doc_len_mean = 40.0;
+        cfg.iterations = 20;
+        cfg.cluster.clients = 4;
+        cfg
+    }
+
+    /// A PDP preset on a power-law corpus.
+    pub fn small_pdp() -> Self {
+        let mut cfg = TrainConfig::small_lda();
+        cfg.model = ModelKind::AliasPdp;
+        cfg.corpus.model = GenerativeModel::Pyp;
+        cfg
+    }
+
+    /// An HDP preset.
+    pub fn small_hdp() -> Self {
+        let mut cfg = TrainConfig::small_lda();
+        cfg.model = ModelKind::AliasHdp;
+        cfg.params.topics = 40; // truncation
+        cfg
+    }
+
+    /// Serialize (subset used by presets; see `from_json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.name().into())),
+            ("topics", Json::Num(self.params.topics as f64)),
+            ("alpha", Json::Num(self.params.alpha)),
+            ("beta", Json::Num(self.params.beta)),
+            ("mh_steps", Json::Num(self.params.mh_steps as f64)),
+            ("n_docs", Json::Num(self.corpus.n_docs as f64)),
+            ("vocab_size", Json::Num(self.corpus.vocab_size as f64)),
+            ("doc_len_mean", Json::Num(self.corpus.doc_len_mean)),
+            ("clients", Json::Num(self.cluster.clients as f64)),
+            (
+                "server_fraction",
+                Json::Num(self.cluster.server_fraction),
+            ),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("test_docs", Json::Num(self.test_docs as f64)),
+            (
+                "projection",
+                Json::Str(
+                    match self.projection {
+                        ProjectionMode::Off => "off",
+                        ProjectionMode::SingleMachine => "single",
+                        ProjectionMode::Distributed => "distributed",
+                        ProjectionMode::OnDemandServer => "ondemand",
+                    }
+                    .into(),
+                ),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// Overlay JSON fields onto `self` (missing fields keep defaults).
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            self.model = ModelKind::parse(v).ok_or_else(|| format!("bad model {v:?}"))?;
+        }
+        if let Some(v) = j.get("projection").and_then(Json::as_str) {
+            self.projection =
+                ProjectionMode::parse(v).ok_or_else(|| format!("bad projection {v:?}"))?;
+        }
+        macro_rules! num {
+            ($key:literal, $field:expr, $ty:ty) => {
+                if let Some(v) = j.get($key).and_then(Json::as_f64) {
+                    $field = v as $ty;
+                }
+            };
+        }
+        num!("topics", self.params.topics, usize);
+        num!("alpha", self.params.alpha, f64);
+        num!("beta", self.params.beta, f64);
+        num!("mh_steps", self.params.mh_steps, usize);
+        num!("n_docs", self.corpus.n_docs, usize);
+        num!("vocab_size", self.corpus.vocab_size, usize);
+        num!("doc_len_mean", self.corpus.doc_len_mean, f64);
+        num!("clients", self.cluster.clients, usize);
+        num!("server_fraction", self.cluster.server_fraction, f64);
+        num!("iterations", self.iterations, u64);
+        num!("eval_every", self.eval_every, u64);
+        num!("test_docs", self.test_docs, usize);
+        num!("seed", self.seed, u64);
+        // Keep the corpus ground truth aligned with the model topics by
+        // default (explicit "true_topics" overrides).
+        num!("true_topics", self.corpus.n_topics, usize);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_parsing() {
+        assert_eq!(ModelKind::parse("yahoolda"), Some(ModelKind::YahooLda));
+        assert_eq!(ModelKind::parse("AliasLDA"), Some(ModelKind::AliasLda));
+        assert_eq!(ModelKind::parse("PDP"), Some(ModelKind::AliasPdp));
+        assert_eq!(ModelKind::parse("hdp"), Some(ModelKind::AliasHdp));
+        assert_eq!(ModelKind::parse("gpt"), None);
+    }
+
+    #[test]
+    fn server_fraction_rule() {
+        let mut c = ClusterConfig::default();
+        c.clients = 10;
+        c.server_fraction = 0.4;
+        assert_eq!(c.n_servers(), 4);
+        c.clients = 1;
+        assert_eq!(c.n_servers(), 1, "at least one server");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let mut cfg = TrainConfig::small_pdp();
+        cfg.iterations = 77;
+        cfg.seed = 123;
+        let j = cfg.to_json();
+        let mut back = TrainConfig::default();
+        back.apply_json(&j).unwrap();
+        assert_eq!(back.model, ModelKind::AliasPdp);
+        assert_eq!(back.iterations, 77);
+        assert_eq!(back.seed, 123);
+        assert_eq!(back.params.topics, cfg.params.topics);
+    }
+
+    #[test]
+    fn apply_json_rejects_bad_model() {
+        let mut cfg = TrainConfig::default();
+        let j = Json::parse(r#"{"model":"nonsense"}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Per-iteration metrics, aggregated exactly the way the paper's figures
+//! report them: for each iteration, across clients — max, min, mean,
+//! ±1 std-dev and the **number of data points** (which shrinks as fast
+//! workers finish and the 90% rule fires).
+
+use crate::util::json::Json;
+use crate::util::stats::RunningStats;
+
+/// One worker's record for one completed iteration.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// Shard (stable identity across reassignments).
+    pub shard: usize,
+    /// Client index within the group.
+    pub client_idx: usize,
+    /// Iteration number (1-based).
+    pub iteration: u64,
+    /// Wall-clock seconds for the iteration (sampling + sync).
+    pub secs: f64,
+    /// Seconds spent in sampling only.
+    pub sample_secs: f64,
+    /// Tokens resampled.
+    pub tokens: u64,
+    /// Test perplexity, when this iteration was an eval iteration.
+    pub perplexity: Option<f64>,
+    /// Mean per-token train log-likelihood.
+    pub avg_ll: f64,
+    /// Average non-zero topics per word in the local replica.
+    pub topics_per_word: f64,
+    /// MH acceptance rate.
+    pub acceptance: f64,
+    /// Projection corrections performed this iteration.
+    pub corrections: u64,
+}
+
+/// Cross-client aggregates for one iteration — one row of a paper figure.
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    /// Iteration number.
+    pub iteration: u64,
+    /// Running-time panel.
+    pub time: RunningStats,
+    /// Perplexity panel (empty between eval iterations).
+    pub perplexity: RunningStats,
+    /// Log-likelihood panel (Fig 6).
+    pub log_lik: RunningStats,
+    /// Topics-per-word panel.
+    pub topics_per_word: RunningStats,
+    /// Number of clients reporting — the data-points panel.
+    pub datapoints: u64,
+}
+
+/// The full training outcome.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Model display name.
+    pub model: String,
+    /// Aggregated per-iteration rows.
+    pub per_iteration: Vec<IterStats>,
+    /// Total tokens sampled across the run.
+    pub total_tokens: u64,
+    /// Wall-clock of the whole run (seconds).
+    pub wall_secs: f64,
+    /// Aggregate sampling throughput (tokens/second across clients).
+    pub tokens_per_sec: f64,
+    /// Transport stats `(sent, dropped, dead_letters, bytes)`.
+    pub net: (u64, u64, u64, u64),
+    /// Total projection corrections (client + server side).
+    pub corrections: u64,
+    /// Worker reassignments (failovers + straggler kills).
+    pub reassignments: u64,
+}
+
+impl TrainReport {
+    /// Aggregate raw records.
+    pub fn from_records(
+        model: &str,
+        records: &[IterRecord],
+        wall_secs: f64,
+        net: (u64, u64, u64, u64),
+        server_corrections: u64,
+        reassignments: u64,
+    ) -> TrainReport {
+        let max_iter = records.iter().map(|r| r.iteration).max().unwrap_or(0);
+        let mut per_iteration = Vec::with_capacity(max_iter as usize);
+        for it in 1..=max_iter {
+            let mut row = IterStats {
+                iteration: it,
+                time: RunningStats::new(),
+                perplexity: RunningStats::new(),
+                log_lik: RunningStats::new(),
+                topics_per_word: RunningStats::new(),
+                datapoints: 0,
+            };
+            for r in records.iter().filter(|r| r.iteration == it) {
+                row.time.push(r.secs);
+                row.log_lik.push(r.avg_ll);
+                row.topics_per_word.push(r.topics_per_word);
+                if let Some(p) = r.perplexity {
+                    row.perplexity.push(p);
+                }
+                row.datapoints += 1;
+            }
+            per_iteration.push(row);
+        }
+        let total_tokens: u64 = records.iter().map(|r| r.tokens).sum();
+        let sample_secs: f64 = records.iter().map(|r| r.sample_secs).sum();
+        let client_corrections: u64 = records.iter().map(|r| r.corrections).sum();
+        TrainReport {
+            model: model.to_string(),
+            per_iteration,
+            total_tokens,
+            wall_secs,
+            tokens_per_sec: if sample_secs > 0.0 {
+                total_tokens as f64 / sample_secs
+            } else {
+                0.0
+            },
+            net,
+            corrections: client_corrections + server_corrections,
+            reassignments,
+        }
+    }
+
+    /// Last measured mean perplexity (NaN if never evaluated).
+    pub fn final_perplexity(&self) -> f64 {
+        self.per_iteration
+            .iter()
+            .rev()
+            .find(|r| r.perplexity.count() > 0)
+            .map(|r| r.perplexity.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Last mean log-likelihood.
+    pub fn final_log_lik(&self) -> f64 {
+        self.per_iteration
+            .iter()
+            .rev()
+            .find(|r| r.log_lik.count() > 0)
+            .map(|r| r.log_lik.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Mean per-iteration wall time over the last half of training.
+    pub fn steady_state_iter_secs(&self) -> f64 {
+        let n = self.per_iteration.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let tail = &self.per_iteration[n / 2..];
+        let mut s = RunningStats::new();
+        for row in tail {
+            if row.time.count() > 0 {
+                s.push(row.time.mean());
+            }
+        }
+        s.mean()
+    }
+
+    /// Print the paper-style table (one row per iteration).
+    pub fn print_table(&self) {
+        println!("== {} ==", self.model);
+        println!(
+            "{:>5} {:>8} {:>12} {:>11} {:>12} {:>11} {:>6}",
+            "iter", "time(s)", "±std", "perplexity", "±std", "topics/word", "n"
+        );
+        for row in &self.per_iteration {
+            println!(
+                "{:>5} {:>8.3} {:>12.3} {:>11.1} {:>12.1} {:>11.2} {:>6}",
+                row.iteration,
+                row.time.mean(),
+                row.time.std(),
+                if row.perplexity.count() > 0 {
+                    row.perplexity.mean()
+                } else {
+                    f64::NAN
+                },
+                if row.perplexity.count() > 0 {
+                    row.perplexity.std()
+                } else {
+                    f64::NAN
+                },
+                row.topics_per_word.mean(),
+                row.datapoints,
+            );
+        }
+        println!(
+            "throughput {:.0} tokens/s | net: {} msgs, {} dropped, {:.1} MiB | corrections {} | reassignments {}",
+            self.tokens_per_sec,
+            self.net.0,
+            self.net.1,
+            self.net.3 as f64 / (1024.0 * 1024.0),
+            self.corrections,
+            self.reassignments,
+        );
+    }
+
+    /// JSON dump for downstream plotting.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .per_iteration
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("iteration", Json::Num(r.iteration as f64)),
+                    ("time_mean", Json::Num(r.time.mean())),
+                    ("time_std", Json::Num(r.time.std())),
+                    ("time_min", Json::Num(nan_to_null(r.time.min()))),
+                    ("time_max", Json::Num(nan_to_null(r.time.max()))),
+                    (
+                        "perplexity_mean",
+                        Json::Num(if r.perplexity.count() > 0 {
+                            r.perplexity.mean()
+                        } else {
+                            -1.0
+                        }),
+                    ),
+                    ("perplexity_std", Json::Num(r.perplexity.std())),
+                    ("loglik_mean", Json::Num(r.log_lik.mean())),
+                    ("topics_per_word", Json::Num(r.topics_per_word.mean())),
+                    ("datapoints", Json::Num(r.datapoints as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("rows", Json::Arr(rows)),
+            ("total_tokens", Json::Num(self.total_tokens as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+            ("net_msgs", Json::Num(self.net.0 as f64)),
+            ("net_bytes", Json::Num(self.net.3 as f64)),
+            ("corrections", Json::Num(self.corrections as f64)),
+            ("reassignments", Json::Num(self.reassignments as f64)),
+        ])
+    }
+}
+
+fn nan_to_null(x: f64) -> f64 {
+    if x.is_nan() {
+        -1.0
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(shard: usize, iter: u64, secs: f64, perp: Option<f64>) -> IterRecord {
+        IterRecord {
+            shard,
+            client_idx: shard,
+            iteration: iter,
+            secs,
+            sample_secs: secs * 0.8,
+            tokens: 1000,
+            perplexity: perp,
+            avg_ll: -7.0,
+            topics_per_word: 3.0,
+            acceptance: 0.95,
+            corrections: 1,
+        }
+    }
+
+    #[test]
+    fn aggregates_per_iteration() {
+        let records = vec![
+            rec(0, 1, 1.0, Some(900.0)),
+            rec(1, 1, 2.0, Some(1100.0)),
+            rec(0, 2, 1.0, None),
+        ];
+        let rep = TrainReport::from_records("test", &records, 10.0, (5, 0, 0, 100), 2, 0);
+        assert_eq!(rep.per_iteration.len(), 2);
+        let r1 = &rep.per_iteration[0];
+        assert_eq!(r1.datapoints, 2);
+        assert!((r1.time.mean() - 1.5).abs() < 1e-12);
+        assert!((r1.perplexity.mean() - 1000.0).abs() < 1e-12);
+        let r2 = &rep.per_iteration[1];
+        assert_eq!(r2.datapoints, 1, "data points shrink");
+        assert_eq!(r2.perplexity.count(), 0);
+        assert_eq!(rep.total_tokens, 3000);
+        assert_eq!(rep.corrections, 3 + 2);
+    }
+
+    #[test]
+    fn final_perplexity_skips_non_eval_iters() {
+        let records = vec![rec(0, 1, 1.0, Some(500.0)), rec(0, 2, 1.0, None)];
+        let rep = TrainReport::from_records("t", &records, 1.0, (0, 0, 0, 0), 0, 0);
+        assert_eq!(rep.final_perplexity(), 500.0);
+    }
+
+    #[test]
+    fn json_has_rows() {
+        let rep = TrainReport::from_records("t", &[rec(0, 1, 1.0, None)], 1.0, (0, 0, 0, 0), 0, 0);
+        let j = rep.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

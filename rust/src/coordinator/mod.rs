@@ -1,0 +1,12 @@
+//! The training coordinator (Layer 3): wires corpus shards, the parameter
+//! server, worker clients, the scheduler, failure injection and metrics
+//! into the paper's full training loop (§5.2, §6).
+
+pub mod metrics;
+pub mod model;
+pub mod trainer;
+pub mod worker;
+
+pub use metrics::{IterRecord, IterStats, TrainReport};
+pub use model::ModelSampler;
+pub use trainer::Trainer;

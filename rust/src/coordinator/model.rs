@@ -1,0 +1,365 @@
+//! Model-agnostic sampler dispatch: one enum the worker drives, hiding
+//! which of the four samplers (and which set of shared matrices) is
+//! underneath.
+
+use crate::config::{ModelKind, TrainConfig};
+use crate::corpus::doc::Document;
+use crate::eval::perplexity::TopicModelView;
+use crate::ps::snapshot::ClientSnapshot;
+use crate::sampler::alias_lda::AliasLda;
+use crate::sampler::counts::CountMatrix;
+use crate::sampler::hdp::AliasHdp;
+use crate::sampler::pdp::AliasPdp;
+use crate::sampler::sparse_lda::SparseLda;
+use crate::sampler::DocSampler;
+use crate::util::rng::Rng;
+
+/// Matrix-id layout shared with the servers:
+/// * LDA (both samplers): `0 = n_tw`
+/// * PDP: `0 = m_tw`, `1 = s_tw`
+/// * HDP: `0 = n_tw`, `1 = root tables (row 0)`
+pub const MATRIX_PRIMARY: u8 = 0;
+/// Secondary matrix id (tables).
+pub const MATRIX_TABLES: u8 = 1;
+
+/// The dispatching sampler.
+pub enum ModelSampler {
+    /// YahooLDA baseline.
+    Yahoo(SparseLda),
+    /// AliasLDA.
+    Alias(AliasLda),
+    /// AliasPDP.
+    Pdp(AliasPdp),
+    /// AliasHDP.
+    Hdp(AliasHdp),
+}
+
+impl ModelSampler {
+    /// Build the configured sampler over a shard, optionally restoring
+    /// topic assignments from a client snapshot (failover path).
+    pub fn build(
+        cfg: &TrainConfig,
+        docs: Vec<Document>,
+        vocab: usize,
+        resume: Option<&ClientSnapshot>,
+        rng: &mut Rng,
+    ) -> ModelSampler {
+        let p = &cfg.params;
+        let init = resume.map(|s| s.z.as_slice());
+        match cfg.model {
+            ModelKind::YahooLda => ModelSampler::Yahoo(SparseLda::new_with_init(
+                docs, vocab, p.topics, p.alpha, p.beta, init, rng,
+            )),
+            ModelKind::AliasLda => {
+                let mut s = AliasLda::new_with_init(
+                    docs, vocab, p.topics, p.alpha, p.beta, init, rng,
+                );
+                s.mh_steps = p.mh_steps;
+                ModelSampler::Alias(s)
+            }
+            ModelKind::AliasPdp => {
+                let mut s = AliasPdp::new_with_init(
+                    docs,
+                    vocab,
+                    p.topics,
+                    p.alpha,
+                    p.pdp_discount,
+                    p.pdp_concentration,
+                    p.pdp_gamma,
+                    init,
+                    rng,
+                );
+                s.mh_steps = p.mh_steps;
+                // Fig 8 semantics: "without projection" means the raw,
+                // unrepaired statistics drive the sampler.
+                s.raw_mode = cfg.projection == crate::config::ProjectionMode::Off;
+                ModelSampler::Pdp(s)
+            }
+            ModelKind::AliasHdp => {
+                let mut s = AliasHdp::new_with_init(
+                    docs,
+                    vocab,
+                    p.topics,
+                    p.hdp_b0,
+                    p.hdp_b1,
+                    p.beta,
+                    init,
+                    rng,
+                );
+                s.mh_steps = p.mh_steps;
+                ModelSampler::Hdp(s)
+            }
+        }
+    }
+
+    /// Resample one document.
+    pub fn sample_doc(&mut self, d: usize, rng: &mut Rng) -> usize {
+        match self {
+            ModelSampler::Yahoo(s) => s.sample_doc(d, rng),
+            ModelSampler::Alias(s) => s.sample_doc(d, rng),
+            ModelSampler::Pdp(s) => s.sample_doc(d, rng),
+            ModelSampler::Hdp(s) => s.sample_doc(d, rng),
+        }
+    }
+
+    /// Shard documents.
+    pub fn docs(&self) -> &[Document] {
+        match self {
+            ModelSampler::Yahoo(s) => &s.docs,
+            ModelSampler::Alias(s) => &s.docs,
+            ModelSampler::Pdp(s) => &s.docs,
+            ModelSampler::Hdp(s) => &s.docs,
+        }
+    }
+
+    /// Latent assignments (for snapshots / log-likelihood).
+    pub fn assignments(&self) -> (&[Vec<u32>], &[Vec<bool>]) {
+        match self {
+            ModelSampler::Yahoo(s) => (&s.state.z, &s.state.r),
+            ModelSampler::Alias(s) => (&s.state.z, &s.state.r),
+            ModelSampler::Pdp(s) => (&s.state.z, &s.state.r),
+            ModelSampler::Hdp(s) => (&s.state.z, &s.state.r),
+        }
+    }
+
+    /// The shared matrices this model synchronizes, as `(id, replica)`.
+    pub fn matrices(&mut self) -> Vec<(u8, &mut CountMatrix)> {
+        match self {
+            ModelSampler::Yahoo(s) => vec![(MATRIX_PRIMARY, &mut s.nwt)],
+            ModelSampler::Alias(s) => vec![(MATRIX_PRIMARY, &mut s.nwt)],
+            ModelSampler::Pdp(s) => {
+                vec![(MATRIX_PRIMARY, &mut s.m), (MATRIX_TABLES, &mut s.s)]
+            }
+            ModelSampler::Hdp(s) => {
+                vec![(MATRIX_PRIMARY, &mut s.nwt), (MATRIX_TABLES, &mut s.tables)]
+            }
+        }
+    }
+
+    /// Fold pulled rows into a replica + invalidate stale caches (§3.3).
+    pub fn apply_rows(&mut self, matrix: u8, rows: &[(u32, Box<[i32]>)]) {
+        match self {
+            ModelSampler::Yahoo(s) => {
+                for (w, row) in rows {
+                    s.nwt.apply_pull(*w, row);
+                    s.refresh_word(*w);
+                }
+            }
+            ModelSampler::Alias(s) => {
+                for (w, row) in rows {
+                    s.nwt.apply_pull(*w, row);
+                    s.invalidate_word(*w);
+                }
+            }
+            ModelSampler::Pdp(s) => {
+                for (w, row) in rows {
+                    match matrix {
+                        MATRIX_PRIMARY => s.m.apply_pull(*w, row),
+                        _ => s.s.apply_pull(*w, row),
+                    }
+                    s.invalidate_word(*w);
+                }
+            }
+            ModelSampler::Hdp(s) => {
+                for (w, row) in rows {
+                    match matrix {
+                        MATRIX_PRIMARY => {
+                            s.nwt.apply_pull(*w, row);
+                            s.invalidate_word(*w);
+                        }
+                        _ => {
+                            s.tables.apply_pull(*w, row);
+                            // θ₀ changed for every word's dense proposal.
+                            s.invalidate_all();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluation view.
+    pub fn view(&self) -> &dyn TopicModelView {
+        match self {
+            ModelSampler::Yahoo(s) => s,
+            ModelSampler::Alias(s) => s,
+            ModelSampler::Pdp(s) => s,
+            ModelSampler::Hdp(s) => s,
+        }
+    }
+
+    /// Average non-zero topics per word (figure panel).
+    pub fn topics_per_word(&self) -> f64 {
+        match self {
+            ModelSampler::Yahoo(s) => s.nwt.avg_topics_per_word(),
+            ModelSampler::Alias(s) => s.nwt.avg_topics_per_word(),
+            ModelSampler::Pdp(s) => s.m.avg_topics_per_word(),
+            ModelSampler::Hdp(s) => s.nwt.avg_topics_per_word(),
+        }
+    }
+
+    /// Primary count matrix (read-only; topic inspection).
+    pub fn primary(&self) -> &CountMatrix {
+        match self {
+            ModelSampler::Yahoo(s) => &s.nwt,
+            ModelSampler::Alias(s) => &s.nwt,
+            ModelSampler::Pdp(s) => &s.m,
+            ModelSampler::Hdp(s) => &s.nwt,
+        }
+    }
+
+    /// Model display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelSampler::Yahoo(s) => s.name(),
+            ModelSampler::Alias(s) => s.name(),
+            ModelSampler::Pdp(s) => s.name(),
+            ModelSampler::Hdp(s) => s.name(),
+        }
+    }
+
+    /// End-of-iteration client-side projection (Algorithms 1/2). Returns
+    /// corrections performed.
+    pub fn project(
+        &mut self,
+        mode: crate::config::ProjectionMode,
+        client_idx: usize,
+        n_clients: usize,
+        salt: u64,
+    ) -> u64 {
+        use crate::config::ProjectionMode as PM;
+        use crate::projection::{DistributedProjection, SingleMachineProjection};
+        match self {
+            // LDA statistics have no pairwise polytope; totals are
+            // re-derived continuously. Nothing to do.
+            ModelSampler::Yahoo(_) | ModelSampler::Alias(_) => 0,
+            ModelSampler::Pdp(s) => match mode {
+                PM::Off | PM::OnDemandServer => 0,
+                PM::SingleMachine => {
+                    if client_idx == 0 {
+                        SingleMachineProjection::default().project_all(&mut s.s, &mut s.m)
+                    } else {
+                        0
+                    }
+                }
+                PM::Distributed => DistributedProjection::new(client_idx, n_clients, salt)
+                    .project_owned(&mut s.s, &mut s.m),
+            },
+            ModelSampler::Hdp(s) => match mode {
+                PM::Off | PM::OnDemandServer => 0,
+                PM::SingleMachine | PM::Distributed => {
+                    // Root constraint t_k ∈ [min(1, n_k), n_k]: the sweep
+                    // is tiny (one row), so the designated owner of key 0
+                    // performs it.
+                    let owner = if mode == PM::SingleMachine {
+                        client_idx == 0
+                    } else {
+                        DistributedProjection::new(client_idx, n_clients, salt).owns(0)
+                    };
+                    if !owner {
+                        return 0;
+                    }
+                    let mut corrections = 0u64;
+                    for t in 0..s.tables.k() {
+                        let tk = s.tables.get(0, t);
+                        let nk = s.nwt.total(t).clamp(0, i32::MAX as i64) as i32;
+                        let (tk1, _) =
+                            crate::projection::project_pair(
+                                crate::projection::PairRule::TablePolytope,
+                                tk,
+                                nk,
+                            );
+                        if tk1 != tk {
+                            s.tables.inc(0, t, tk1 - tk);
+                            corrections += 1;
+                        }
+                    }
+                    corrections
+                }
+            },
+        }
+    }
+
+    /// MH acceptance-rate diagnostic (1.0 for the exact sparse sampler).
+    pub fn acceptance_rate(&self) -> f64 {
+        match self {
+            ModelSampler::Yahoo(_) => 1.0,
+            ModelSampler::Alias(s) => s.acceptance_rate(),
+            ModelSampler::Pdp(s) => s.acceptance_rate(),
+            ModelSampler::Hdp(s) => s.acceptance_rate(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::CorpusConfig;
+
+    fn docs() -> Vec<Document> {
+        let (c, _) = CorpusConfig {
+            n_docs: 30,
+            vocab_size: 120,
+            n_topics: 4,
+            doc_len_mean: 15.0,
+            ..Default::default()
+        }
+        .generate();
+        c.docs
+    }
+
+    #[test]
+    fn builds_all_four_models() {
+        for model in [
+            ModelKind::YahooLda,
+            ModelKind::AliasLda,
+            ModelKind::AliasPdp,
+            ModelKind::AliasHdp,
+        ] {
+            let mut cfg = TrainConfig::default();
+            cfg.model = model;
+            cfg.params.topics = 8;
+            let mut rng = Rng::new(1);
+            let mut s = ModelSampler::build(&cfg, docs(), 120, None, &mut rng);
+            assert_eq!(s.view().k(), 8);
+            let acc = s.sample_doc(0, &mut rng);
+            assert!(acc <= s.docs()[0].tokens.len() * cfg.params.mh_steps.max(1));
+            assert!(!s.matrices().is_empty());
+            assert!(s.topics_per_word() > 0.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_reproduces_assignments() {
+        let mut cfg = TrainConfig::default();
+        cfg.model = ModelKind::AliasLda;
+        cfg.params.topics = 6;
+        let d = docs();
+        let mut rng = Rng::new(2);
+        let s = ModelSampler::build(&cfg, d.clone(), 120, None, &mut rng);
+        let (z, r) = s.assignments();
+        let snap = crate::ps::snapshot::ClientSnapshot {
+            shard: 0,
+            iteration: 5,
+            z: z.to_vec(),
+            r: r.to_vec(),
+        };
+        let mut rng2 = Rng::new(99);
+        let restored = ModelSampler::build(&cfg, d, 120, Some(&snap), &mut rng2);
+        assert_eq!(restored.assignments().0, snap.z.as_slice());
+    }
+
+    #[test]
+    fn projection_dispatch_counts_corrections() {
+        let mut cfg = TrainConfig::small_pdp();
+        cfg.params.topics = 4;
+        let mut rng = Rng::new(3);
+        let mut s = ModelSampler::build(&cfg, docs(), 120, None, &mut rng);
+        // Wreck the polytope deliberately.
+        if let ModelSampler::Pdp(p) = &mut s {
+            p.s.inc_local(0, 0, 100);
+        }
+        let fixed = s.project(crate::config::ProjectionMode::SingleMachine, 0, 1, 7);
+        assert!(fixed > 0);
+    }
+}

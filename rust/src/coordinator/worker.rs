@@ -1,0 +1,253 @@
+//! The client worker: one thread per shard running the full §5.2 loop —
+//! sample documents with the configured sampler, push delta batches
+//! through the communication filter, pull fresh rows without blocking
+//! (eventual consistency), run client-side projection at the end of each
+//! iteration, evaluate perplexity on the paper's cadence, snapshot, and
+//! obey the scheduler's control messages.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::IterRecord;
+use super::model::ModelSampler;
+use crate::config::TrainConfig;
+use crate::corpus::doc::Corpus;
+use crate::corpus::shard::Shard;
+use crate::eval::perplexity::perplexity;
+use crate::ps::client::{ClientEvent, PsClient};
+use crate::ps::msg::{Control, NodeId};
+use crate::ps::network::SimNet;
+use crate::ps::snapshot::{self, ClientSnapshot};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Why a worker exited.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// Reached the target iteration count.
+    Finished,
+    /// Killed (failure injection or straggler policy).
+    Killed,
+    /// Told to stop by the scheduler's Terminate broadcast.
+    Terminated,
+}
+
+/// Everything a worker thread needs.
+pub struct WorkerCtx {
+    /// Full config (shared).
+    pub cfg: Arc<TrainConfig>,
+    /// The shard to work.
+    pub shard: Shard,
+    /// Stable client index (shard index).
+    pub client_idx: usize,
+    /// Total clients.
+    pub n_clients: usize,
+    /// Transport handle.
+    pub net: SimNet,
+    /// This worker's node id.
+    pub node: NodeId,
+    /// Server ring + slot bindings + freeze flag.
+    pub ring: crate::ps::ring::Ring,
+    /// Slot → node binding (shared with the manager).
+    pub slots: Arc<std::sync::RwLock<Vec<NodeId>>>,
+    /// Freeze flag (server failover in progress).
+    pub frozen: Arc<std::sync::atomic::AtomicBool>,
+    /// Scheduler node for progress reports.
+    pub scheduler: NodeId,
+    /// Held-out test corpus.
+    pub test: Arc<Corpus>,
+    /// Metric sink.
+    pub records: Arc<Mutex<Vec<IterRecord>>>,
+    /// Optional PJRT evaluation service (shared; the engine itself lives
+    /// on a dedicated thread).
+    pub engine: Option<Arc<crate::runtime::EvalService>>,
+    /// Resume state (client failover).
+    pub resume: Option<ClientSnapshot>,
+    /// Client snapshot directory.
+    pub snapshot_dir: Option<std::path::PathBuf>,
+    /// Artificial per-document slowdown (straggler injection; 0 = none).
+    pub slowdown: Duration,
+}
+
+/// Spawn a worker thread.
+pub fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<WorkerExit> {
+    std::thread::Builder::new()
+        .name(format!("worker-{}", ctx.client_idx))
+        .spawn(move || run_worker(ctx))
+        .expect("spawn worker")
+}
+
+fn run_worker(ctx: WorkerCtx) -> WorkerExit {
+    let cfg = &*ctx.cfg;
+    let mut rng = Rng::new(cfg.seed).derive(1000 + ctx.node as u64);
+    let start_iteration = ctx.resume.as_ref().map(|s| s.iteration).unwrap_or(0);
+    let mut sampler = ModelSampler::build(
+        cfg,
+        ctx.shard.docs.clone(),
+        cfg.corpus.vocab_size,
+        ctx.resume.as_ref(),
+        &mut rng,
+    );
+    let mut client = PsClient::new(
+        ctx.net.clone(),
+        ctx.node,
+        ctx.ring.clone(),
+        ctx.slots.clone(),
+        ctx.frozen.clone(),
+        cfg.cluster.filter,
+        cfg.seed ^ (0xF117E8 + ctx.node as u64),
+    );
+
+    // The words this shard touches (plus the tables row for HDP) — the
+    // pull set.
+    let mut shard_words: Vec<u32> = {
+        let mut seen = vec![false; cfg.corpus.vocab_size];
+        for d in &ctx.shard.docs {
+            for &w in &d.tokens {
+                seen[w as usize] = true;
+            }
+        }
+        (0..cfg.corpus.vocab_size as u32)
+            .filter(|&w| seen[w as usize])
+            .collect()
+    };
+    shard_words.sort_unstable();
+
+    let n_docs = ctx.shard.docs.len();
+    let mut iteration = start_iteration;
+    // Push the (re)initialization deltas so global counts include us.
+    for (m, replica) in sampler.matrices() {
+        client.push_matrix(m, replica);
+    }
+
+    while iteration < cfg.iterations {
+        if ctx.net.is_dead(ctx.node) {
+            return WorkerExit::Killed;
+        }
+        let iter_watch = Instant::now();
+        let mut sample_watch = Stopwatch::new();
+        let mut tokens = 0u64;
+
+        for d in 0..n_docs {
+            sample_watch.start();
+            sampler.sample_doc(d, &mut rng);
+            sample_watch.stop();
+            tokens += sampler.docs()[d].tokens.len() as u64;
+            if !ctx.slowdown.is_zero() {
+                std::thread::sleep(ctx.slowdown);
+            }
+            // Eventual-consistency sync point.
+            if (d + 1) % cfg.cluster.sync_every_docs == 0 || d + 1 == n_docs {
+                if ctx.net.is_dead(ctx.node) {
+                    return WorkerExit::Killed;
+                }
+                for (m, replica) in sampler.matrices() {
+                    client.push_matrix(m, replica);
+                }
+                // Best-effort drain of anything that already arrived.
+                for ev in client.drain_responses(Duration::ZERO) {
+                    match ev {
+                        ClientEvent::Rows(m, rows) => sampler.apply_rows(m, &rows),
+                        ClientEvent::Control(Control::Kill) => return WorkerExit::Killed,
+                        ClientEvent::Control(Control::Terminate) => {
+                            return WorkerExit::Terminated
+                        }
+                        ClientEvent::Control(Control::Reroute) => {}
+                    }
+                }
+            }
+        }
+
+        // End-of-iteration: request fresh rows for the shard vocabulary
+        // (and the tables row), give them one latency window to arrive.
+        client.request_rows(super::model::MATRIX_PRIMARY, &shard_words);
+        if matches!(
+            cfg.model,
+            crate::config::ModelKind::AliasPdp | crate::config::ModelKind::AliasHdp
+        ) {
+            let secondary: Vec<u32> = match cfg.model {
+                crate::config::ModelKind::AliasHdp => vec![0],
+                _ => shard_words.clone(),
+            };
+            client.request_rows(super::model::MATRIX_TABLES, &secondary);
+        }
+        let wait = cfg.cluster.net.base_latency * 4 + Duration::from_millis(2);
+        for ev in client.drain_responses(wait) {
+            match ev {
+                ClientEvent::Rows(m, rows) => sampler.apply_rows(m, &rows),
+                ClientEvent::Control(Control::Kill) => return WorkerExit::Killed,
+                ClientEvent::Control(Control::Terminate) => return WorkerExit::Terminated,
+                ClientEvent::Control(Control::Reroute) => {}
+            }
+        }
+
+        // Client-side projection (Algorithms 1/2) + push the corrections.
+        let corrections = sampler.project(
+            cfg.projection,
+            ctx.client_idx,
+            ctx.n_clients,
+            cfg.seed ^ 0x9909,
+        );
+        if corrections > 0 {
+            for (m, replica) in sampler.matrices() {
+                client.push_matrix(m, replica);
+            }
+        }
+
+        iteration += 1;
+
+        // Metrics: perplexity every `eval_every`, log-lik every iteration.
+        let perp = if iteration % cfg.eval_every == 0 || iteration == cfg.iterations {
+            let rep = perplexity(
+                sampler.view(),
+                &ctx.test,
+                3,
+                ctx.engine
+                    .as_deref()
+                    .map(|e| e as &dyn crate::runtime::DenseEval),
+            );
+            Some(rep.perplexity)
+        } else {
+            None
+        };
+        let (z, _) = sampler.assignments();
+        let avg_ll = crate::eval::loglik::mean_token_log_likelihood(
+            sampler.view(),
+            sampler.docs(),
+            z,
+        );
+        ctx.records.lock().unwrap().push(IterRecord {
+            shard: ctx.shard.id,
+            client_idx: ctx.client_idx,
+            iteration,
+            secs: iter_watch.elapsed().as_secs_f64(),
+            sample_secs: sample_watch.elapsed().as_secs_f64(),
+            tokens,
+            perplexity: perp,
+            avg_ll,
+            topics_per_word: sampler.topics_per_word(),
+            acceptance: sampler.acceptance_rate(),
+            corrections,
+        });
+        client.report_progress(ctx.scheduler, ctx.shard.id, iteration, tokens);
+
+        // Barrier-free client snapshot (§5.4).
+        if let Some(dir) = &ctx.snapshot_dir {
+            let (z, r) = sampler.assignments();
+            let snap = ClientSnapshot {
+                shard: ctx.shard.id,
+                iteration,
+                z: z.to_vec(),
+                r: r.to_vec(),
+            };
+            let path = dir.join(format!("client_shard{}.snap", ctx.shard.id));
+            let _ = snapshot::write_atomic(&path, &snapshot::encode_client(&snap));
+        }
+    }
+
+    // Flush remaining deltas before leaving.
+    for (m, replica) in sampler.matrices() {
+        client.push_matrix(m, replica);
+    }
+    WorkerExit::Finished
+}

@@ -1,0 +1,118 @@
+//! Documents and corpora.
+
+/// A bag-of-words document: the flat token sequence (word ids).
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    /// Token stream (word ids into the vocabulary).
+    pub tokens: Vec<u32>,
+}
+
+impl Document {
+    /// Number of tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True iff no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// A corpus: documents + vocabulary size (+ the generator's ground truth
+/// when synthetic, for diagnostics).
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// All documents.
+    pub docs: Vec<Document>,
+    /// Number of token-types the ids range over.
+    pub vocab_size: usize,
+    /// Ground-truth number of topics used by the generator (diagnostics).
+    pub true_topics: usize,
+}
+
+impl Corpus {
+    /// Total token count.
+    pub fn total_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    /// Number of *distinct* token-types actually present.
+    pub fn observed_types(&self) -> usize {
+        let mut seen = vec![false; self.vocab_size];
+        let mut n = 0usize;
+        for d in &self.docs {
+            for &w in &d.tokens {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Split off the last `n_docs` documents as a held-out test set
+    /// (the paper evaluates perplexity on a fixed 2000-document test set).
+    pub fn split_test(mut self, n_docs: usize) -> (Corpus, Corpus) {
+        let n_docs = n_docs.min(self.docs.len().saturating_sub(1));
+        let test_docs = self.docs.split_off(self.docs.len() - n_docs);
+        let test = Corpus {
+            docs: test_docs,
+            vocab_size: self.vocab_size,
+            true_topics: self.true_topics,
+        };
+        (self, test)
+    }
+
+    /// Per-word frequency histogram (diagnostics: verifying the power law).
+    pub fn word_frequencies(&self) -> Vec<u64> {
+        let mut freq = vec![0u64; self.vocab_size];
+        for d in &self.docs {
+            for &w in &d.tokens {
+                freq[w as usize] += 1;
+            }
+        }
+        freq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Corpus {
+        Corpus {
+            docs: vec![
+                Document { tokens: vec![0, 1, 2] },
+                Document { tokens: vec![1, 1] },
+                Document { tokens: vec![3] },
+            ],
+            vocab_size: 5,
+            true_topics: 2,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let c = tiny();
+        assert_eq!(c.total_tokens(), 6);
+        assert_eq!(c.observed_types(), 4);
+        assert_eq!(c.word_frequencies(), vec![1, 3, 1, 1, 0]);
+    }
+
+    #[test]
+    fn split_test_partitions() {
+        let (train, test) = tiny().split_test(1);
+        assert_eq!(train.docs.len(), 2);
+        assert_eq!(test.docs.len(), 1);
+        assert_eq!(test.docs[0].tokens, vec![3]);
+    }
+
+    #[test]
+    fn split_test_never_empties_train() {
+        let (train, test) = tiny().split_test(100);
+        assert_eq!(train.docs.len(), 1);
+        assert_eq!(test.docs.len(), 2);
+    }
+}

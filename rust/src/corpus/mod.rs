@@ -1,0 +1,24 @@
+//! Synthetic corpus substrate.
+//!
+//! The paper trains on an anonymized proprietary collection (~50M tokens,
+//! ~200k documents, ~2M token-types *per shard*). We cannot obtain it, so —
+//! per the substitution rule — this module generates corpora from a
+//! ground-truth generative process with the three properties the samplers'
+//! cost model actually depends on:
+//!
+//! 1. **document-side sparsity** `k_d` (topics per document stays small),
+//! 2. **word-side density** (every word can take every topic via the prior,
+//!    so `n_tw` becomes dense at scale — the regime where sparse samplers
+//!    lose and the alias sampler wins),
+//! 3. **power-law vocabulary** (word frequencies Zipf-distributed; the PYP
+//!    generator reproduces the natural-language tail the PDP model targets).
+
+pub mod doc;
+pub mod generator;
+pub mod shard;
+pub mod vocab;
+
+pub use doc::{Corpus, Document};
+pub use generator::{CorpusConfig, GenerativeModel};
+pub use shard::{Shard, ShardSet};
+pub use vocab::Vocabulary;

@@ -1,0 +1,131 @@
+//! Corpus sharding: the unit of work assigned to a client node.
+//!
+//! The paper shards the corpus so each shard has ~50M tokens / ~200k docs
+//! and assigns one client machine per shard (§6 Environment). Here a
+//! [`ShardSet`] partitions a synthetic corpus the same way (round-robin by
+//! document, so shard token counts are balanced) and the scheduler hands
+//! shards to clients — including *re*-assignment when a client is killed.
+
+use super::doc::{Corpus, Document};
+
+/// A shard: a contiguous slice of the corpus owned by one client at a time.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Stable shard id (0-based).
+    pub id: usize,
+    /// Documents in this shard.
+    pub docs: Vec<Document>,
+    /// Token count (cached).
+    pub tokens: usize,
+}
+
+impl Shard {
+    fn new(id: usize, docs: Vec<Document>) -> Self {
+        let tokens = docs.iter().map(|d| d.len()).sum();
+        Shard { id, docs, tokens }
+    }
+}
+
+/// The full partition of a training corpus into shards.
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    /// All shards.
+    pub shards: Vec<Shard>,
+    /// Vocabulary size (shared).
+    pub vocab_size: usize,
+}
+
+impl ShardSet {
+    /// Round-robin partition of `corpus` into `n_shards` balanced shards.
+    pub fn partition(corpus: &Corpus, n_shards: usize) -> ShardSet {
+        assert!(n_shards > 0, "need at least one shard");
+        let mut buckets: Vec<Vec<Document>> = (0..n_shards).map(|_| Vec::new()).collect();
+        for (i, d) in corpus.docs.iter().enumerate() {
+            buckets[i % n_shards].push(d.clone());
+        }
+        let shards = buckets
+            .into_iter()
+            .enumerate()
+            .map(|(id, docs)| Shard::new(id, docs))
+            .collect();
+        ShardSet {
+            shards,
+            vocab_size: corpus.vocab_size,
+        }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True iff no shards.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Total tokens across shards.
+    pub fn total_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.tokens).sum()
+    }
+
+    /// Imbalance ratio: max shard tokens / mean shard tokens.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.total_tokens() as f64 / self.len() as f64;
+        let max = self.shards.iter().map(|s| s.tokens).max().unwrap_or(0) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::CorpusConfig;
+
+    #[test]
+    fn partition_preserves_all_tokens() {
+        let (c, _) = CorpusConfig {
+            n_docs: 331,
+            vocab_size: 500,
+            ..Default::default()
+        }
+        .generate();
+        let total = c.total_tokens();
+        let s = ShardSet::partition(&c, 7);
+        assert_eq!(s.len(), 7);
+        assert_eq!(s.total_tokens(), total);
+        assert_eq!(
+            s.shards.iter().map(|sh| sh.docs.len()).sum::<usize>(),
+            331
+        );
+    }
+
+    #[test]
+    fn shards_are_balanced() {
+        let (c, _) = CorpusConfig {
+            n_docs: 1000,
+            vocab_size: 500,
+            doc_len_mean: 32.0,
+            ..Default::default()
+        }
+        .generate();
+        let s = ShardSet::partition(&c, 8);
+        assert!(s.imbalance() < 1.15, "imbalance {}", s.imbalance());
+    }
+
+    #[test]
+    fn single_shard_is_whole_corpus() {
+        let (c, _) = CorpusConfig {
+            n_docs: 10,
+            vocab_size: 100,
+            ..Default::default()
+        }
+        .generate();
+        let s = ShardSet::partition(&c, 1);
+        assert_eq!(s.shards[0].docs.len(), 10);
+    }
+}

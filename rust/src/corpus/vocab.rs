@@ -1,0 +1,70 @@
+//! Synthetic vocabulary with a Zipf base measure.
+
+use crate::util::rng::Zipf;
+
+/// A vocabulary of `size` token-types with Zipf(s) base frequencies.
+///
+/// Word ids are ranks: id 0 is the most frequent type. Surface forms are
+/// synthesized on demand (`w000123`) — the samplers never need strings, but
+/// the topic-inspection example does.
+pub struct Vocabulary {
+    size: usize,
+    /// Zipf base measure over ranks (also the PYP base distribution ψ₀).
+    pub base: Zipf,
+}
+
+impl Vocabulary {
+    /// Build a vocabulary of `size` types with Zipf exponent `s`
+    /// (natural language ≈ 1.0–1.2).
+    pub fn new(size: usize, zipf_s: f64) -> Self {
+        Vocabulary {
+            size,
+            base: Zipf::new(size, zipf_s),
+        }
+    }
+
+    /// Number of token-types.
+    pub fn len(&self) -> usize {
+        self.size
+    }
+
+    /// True iff the vocabulary is empty (it never is in practice).
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Base probability of a word id under the Zipf measure.
+    pub fn base_prob(&self, word: u32) -> f64 {
+        self.base.probs[word as usize]
+    }
+
+    /// Synthetic surface form for a word id.
+    pub fn surface(&self, word: u32) -> String {
+        format!("w{word:06}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_is_normalized_and_monotone() {
+        let v = Vocabulary::new(5000, 1.07);
+        assert_eq!(v.len(), 5000);
+        let sum: f64 = (0..5000).map(|w| v.base_prob(w)).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        for w in 1..5000u32 {
+            assert!(v.base_prob(w) <= v.base_prob(w - 1));
+        }
+    }
+
+    #[test]
+    fn surface_forms_unique() {
+        let v = Vocabulary::new(10, 1.0);
+        let mut forms: Vec<String> = (0..10).map(|w| v.surface(w)).collect();
+        forms.sort();
+        forms.dedup();
+        assert_eq!(forms.len(), 10);
+    }
+}

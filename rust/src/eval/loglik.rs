@@ -1,0 +1,82 @@
+//! Training-set document log-likelihood — the metric of Fig 6 (the
+//! 5-billion-document LDA run reports log-likelihood rather than held-out
+//! perplexity).
+
+use super::perplexity::TopicModelView;
+use crate::corpus::doc::Document;
+
+/// Joint log-likelihood of the assigned tokens under the current model:
+/// `Σ_{d,i} log p(w_di | z_di)` — cheap, local, and what the paper plots
+/// at the largest scale.
+pub fn doc_log_likelihood(
+    view: &dyn TopicModelView,
+    docs: &[Document],
+    z: &[Vec<u32>],
+) -> f64 {
+    let mut ll = 0.0;
+    for (doc, zs) in docs.iter().zip(z.iter()) {
+        for (&w, &t) in doc.tokens.iter().zip(zs.iter()) {
+            ll += view.phi(w, t as usize).max(1e-300).ln();
+        }
+    }
+    ll
+}
+
+/// Per-token normalization of [`doc_log_likelihood`].
+pub fn mean_token_log_likelihood(
+    view: &dyn TopicModelView,
+    docs: &[Document],
+    z: &[Vec<u32>],
+) -> f64 {
+    let tokens: usize = docs.iter().map(|d| d.tokens.len()).sum();
+    if tokens == 0 {
+        return 0.0;
+    }
+    doc_log_likelihood(view, docs, z) / tokens as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Toy;
+    impl TopicModelView for Toy {
+        fn k(&self) -> usize {
+            2
+        }
+        fn phi(&self, w: u32, t: usize) -> f64 {
+            if (w as usize) == t {
+                0.8
+            } else {
+                0.2
+            }
+        }
+        fn doc_prior(&self, _t: usize) -> f64 {
+            0.5
+        }
+    }
+
+    #[test]
+    fn perfect_assignment_beats_bad() {
+        let docs = vec![Document { tokens: vec![0, 1, 0, 1] }];
+        let good = vec![vec![0, 1, 0, 1]];
+        let bad = vec![vec![1, 0, 1, 0]];
+        let ll_good = doc_log_likelihood(&Toy, &docs, &good);
+        let ll_bad = doc_log_likelihood(&Toy, &docs, &bad);
+        assert!(ll_good > ll_bad);
+        assert!((ll_good - 4.0 * 0.8f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_is_normalized() {
+        let docs = vec![Document { tokens: vec![0, 0] }];
+        let z = vec![vec![0, 0]];
+        let m = mean_token_log_likelihood(&Toy, &docs, &z);
+        assert!((m - 0.8f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_docs_are_zero() {
+        assert_eq!(mean_token_log_likelihood(&Toy, &[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation: the paper's test-perplexity estimator (§6 "Evaluation
+//! criteria"), document log-likelihood (Fig 6), and topic diagnostics
+//! (the "average topics per word" panels).
+//!
+//! The estimator's hot loop — `log Σ_t θ̂_dt·φ̂_tw` over every test token —
+//! runs through the AOT-compiled PJRT artifact when available
+//! ([`crate::runtime`]), with a bit-equivalent pure-rust fallback.
+
+pub mod loglik;
+pub mod perplexity;
+pub mod topics;
+
+pub use perplexity::{perplexity, PerplexityReport, TopicModelView};

@@ -1,0 +1,228 @@
+//! Test perplexity (§6):
+//!
+//! ```text
+//! π(W|rest) := [Σ_d N_d]⁻¹ Σ_d log p(w_d|rest)
+//! p(w_d|rest) = Π_i Σ_t p(w_i|z=t, rest)·p(z=t|rest)
+//! ```
+//!
+//! `p(w|z=t)` comes from the model under training; the test document's
+//! topic weights are folded in with a few EM steps (deterministic, so all
+//! clients agree on the estimator). "Unseen words are evaluated by
+//! assuming sufficient statistics related to the word are zero instead of
+//! being totally ignored" — zero rows flow through the same formula.
+//!
+//! The final scoring pass (the dense `log Σ_t θ·φ` over gathered rows) is
+//! exactly the `perplexity` PJRT artifact; [`perplexity`] takes an
+//! optional [`crate::runtime::Engine`] and falls back to pure rust.
+
+use crate::corpus::doc::Corpus;
+
+/// A trained model's view of `p(w|t)` — implemented by every sampler.
+pub trait TopicModelView {
+    /// Number of topics.
+    fn k(&self) -> usize;
+    /// `p(w | z=t)` under the current statistics.
+    fn phi(&self, w: u32, t: usize) -> f64;
+    /// Document-topic smoothing mass used for fold-in (α, or b₁θ₀ for HDP).
+    fn doc_prior(&self, t: usize) -> f64;
+    /// Fill `out[t] = phi(w, t)` (batch row gather for the PJRT path).
+    fn phi_row(&self, w: u32, out: &mut [f64]) {
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = self.phi(w, t);
+        }
+    }
+}
+
+/// Evaluation output.
+#[derive(Clone, Copy, Debug)]
+pub struct PerplexityReport {
+    /// Mean per-token log-likelihood (the paper's π).
+    pub avg_log_lik: f64,
+    /// `exp(−avg_log_lik)` — conventional perplexity.
+    pub perplexity: f64,
+    /// Tokens scored.
+    pub tokens: u64,
+}
+
+/// Fold-in EM: estimate θ̂_d for one test document against fixed φ.
+fn fold_in(view: &dyn TopicModelView, tokens: &[u32], em_iters: usize) -> Vec<f64> {
+    let k = view.k();
+    let prior: Vec<f64> = (0..k).map(|t| view.doc_prior(t).max(1e-12)).collect();
+    let prior_sum: f64 = prior.iter().sum();
+    let mut theta: Vec<f64> = prior.iter().map(|p| p / prior_sum).collect();
+    let mut resp = vec![0.0f64; k];
+    for _ in 0..em_iters {
+        let mut acc = prior.clone();
+        for &w in tokens {
+            let mut z = 0.0;
+            for t in 0..k {
+                resp[t] = theta[t] * view.phi(w, t);
+                z += resp[t];
+            }
+            if z <= 0.0 {
+                continue;
+            }
+            for t in 0..k {
+                acc[t] += resp[t] / z;
+            }
+        }
+        let s: f64 = acc.iter().sum();
+        for t in 0..k {
+            theta[t] = acc[t] / s;
+        }
+    }
+    theta
+}
+
+/// Score a test corpus. When `engine` is provided and the artifact fits
+/// (`K ≤` the artifact's padded width), the dense scoring pass runs on the
+/// AOT-compiled PJRT executable; otherwise pure rust.
+pub fn perplexity(
+    view: &dyn TopicModelView,
+    test: &Corpus,
+    em_iters: usize,
+    engine: Option<&dyn crate::runtime::DenseEval>,
+) -> PerplexityReport {
+    let k = view.k();
+    let mut total_ll = 0.0f64;
+    let mut tokens = 0u64;
+
+    // Batch buffers for the PJRT path.
+    let mut theta_batch: Vec<f32> = Vec::new();
+    let mut phi_batch: Vec<f32> = Vec::new();
+    let mut pending = 0usize;
+    let use_engine = engine
+        .map(|e| e.supports_log_dot(k))
+        .unwrap_or(false);
+
+    let flush =
+        |theta_batch: &mut Vec<f32>, phi_batch: &mut Vec<f32>, pending: &mut usize| -> f64 {
+            if *pending == 0 {
+                return 0.0;
+            }
+            let e = engine.unwrap();
+            let lls = e
+                .log_dot(theta_batch, phi_batch, *pending, k)
+                .expect("PJRT log_dot failed");
+            theta_batch.clear();
+            phi_batch.clear();
+            let s: f64 = lls.iter().take(*pending).map(|&x| x as f64).sum();
+            *pending = 0;
+            s
+        };
+
+    let mut phi_row = vec![0.0f64; k];
+    for doc in &test.docs {
+        if doc.tokens.is_empty() {
+            continue;
+        }
+        let theta = fold_in(view, &doc.tokens, em_iters);
+        for &w in &doc.tokens {
+            tokens += 1;
+            if use_engine {
+                view.phi_row(w, &mut phi_row);
+                theta_batch.extend(theta.iter().map(|&x| x as f32));
+                phi_batch.extend(phi_row.iter().map(|&x| x as f32));
+                pending += 1;
+                if pending == crate::runtime::LOG_DOT_BATCH {
+                    total_ll += flush(&mut theta_batch, &mut phi_batch, &mut pending);
+                }
+            } else {
+                let mut p = 0.0;
+                for t in 0..k {
+                    p += theta[t] * view.phi(w, t);
+                }
+                total_ll += p.max(1e-300).ln();
+            }
+        }
+    }
+    if use_engine {
+        total_ll += flush(&mut theta_batch, &mut phi_batch, &mut pending);
+    }
+
+    let avg = if tokens == 0 {
+        0.0
+    } else {
+        total_ll / tokens as f64
+    };
+    PerplexityReport {
+        avg_log_lik: avg,
+        perplexity: (-avg).exp(),
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::doc::{Corpus, Document};
+
+    /// A fixed two-topic model for closed-form checks.
+    struct Toy;
+    impl TopicModelView for Toy {
+        fn k(&self) -> usize {
+            2
+        }
+        fn phi(&self, w: u32, t: usize) -> f64 {
+            // topic 0 → word 0, topic 1 → word 1, smoothed.
+            match (w, t) {
+                (0, 0) | (1, 1) => 0.9,
+                _ => 0.1,
+            }
+        }
+        fn doc_prior(&self, _t: usize) -> f64 {
+            0.5
+        }
+    }
+
+    fn corpus(docs: Vec<Vec<u32>>) -> Corpus {
+        Corpus {
+            docs: docs.into_iter().map(|tokens| Document { tokens }).collect(),
+            vocab_size: 2,
+            true_topics: 2,
+        }
+    }
+
+    #[test]
+    fn pure_topic_doc_scores_high() {
+        let c = corpus(vec![vec![0; 50]]);
+        let rep = perplexity(&Toy, &c, 10, None);
+        // θ̂ → (1, 0): p(w=0) ≈ 0.9 → perplexity ≈ 1/0.9.
+        assert_eq!(rep.tokens, 50);
+        assert!((rep.perplexity - 1.0 / 0.9).abs() < 0.05, "{}", rep.perplexity);
+    }
+
+    #[test]
+    fn mixed_doc_scores_lower_than_pure() {
+        let pure = perplexity(&Toy, &corpus(vec![vec![0; 40]]), 10, None);
+        let mixed = perplexity(&Toy, &corpus(vec![vec![0, 1].repeat(20)]), 10, None);
+        assert!(mixed.perplexity > pure.perplexity);
+        assert!(mixed.avg_log_lik < pure.avg_log_lik);
+    }
+
+    #[test]
+    fn unseen_words_do_not_panic() {
+        struct Zeroish;
+        impl TopicModelView for Zeroish {
+            fn k(&self) -> usize {
+                3
+            }
+            fn phi(&self, _w: u32, _t: usize) -> f64 {
+                0.0 // all-zero stats for unseen words
+            }
+            fn doc_prior(&self, _t: usize) -> f64 {
+                0.1
+            }
+        }
+        let rep = perplexity(&Zeroish, &corpus(vec![vec![0, 1]]), 3, None);
+        assert!(rep.avg_log_lik.is_finite());
+        assert!(rep.perplexity.is_finite());
+    }
+
+    #[test]
+    fn empty_corpus_is_neutral() {
+        let rep = perplexity(&Toy, &corpus(vec![]), 3, None);
+        assert_eq!(rep.tokens, 0);
+        assert_eq!(rep.avg_log_lik, 0.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Topic diagnostics: the "average number of topics per word" panel of
+//! Figs 4/5/7 and top-word inspection for the examples.
+
+use crate::sampler::counts::CountMatrix;
+
+/// Average number of non-zero topics across words present in the counts —
+/// exactly the figures' definition ("the average number of non-zero
+/// topics across all words in the local vocabulary").
+pub fn avg_topics_per_word(nwt: &CountMatrix) -> f64 {
+    nwt.avg_topics_per_word()
+}
+
+/// The `n` highest-count words for each topic (word id, count).
+pub fn top_words(nwt: &CountMatrix, n: usize) -> Vec<Vec<(u32, i32)>> {
+    let k = nwt.k();
+    let mut tops: Vec<Vec<(u32, i32)>> = vec![Vec::new(); k];
+    for (w, row) in nwt.iter_rows() {
+        for (t, &c) in row.iter().enumerate() {
+            if c > 0 {
+                tops[t].push((w, c));
+            }
+        }
+    }
+    for top in tops.iter_mut() {
+        top.sort_unstable_by_key(|&(_, c)| std::cmp::Reverse(c));
+        top.truncate(n);
+    }
+    tops
+}
+
+/// Topic share: fraction of tokens per topic (sorted descending) — a
+/// quick skew diagnostic used by the examples.
+pub fn topic_shares(nwt: &CountMatrix) -> Vec<f64> {
+    let total: i64 = nwt.grand_total().max(1);
+    let mut shares: Vec<f64> = nwt
+        .totals()
+        .iter()
+        .map(|&c| c.max(0) as f64 / total as f64)
+        .collect();
+    shares.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts() -> CountMatrix {
+        let mut m = CountMatrix::new(4, 3);
+        m.inc_local(0, 0, 10);
+        m.inc_local(0, 1, 2);
+        m.inc_local(1, 1, 5);
+        m.inc_local(2, 2, 1);
+        m
+    }
+
+    #[test]
+    fn topics_per_word() {
+        // words 0 (2 topics), 1 (1), 2 (1) → mean 4/3.
+        assert!((avg_topics_per_word(&counts()) - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_words_sorted() {
+        let tops = top_words(&counts(), 2);
+        assert_eq!(tops[0], vec![(0, 10)]);
+        assert_eq!(tops[1], vec![(1, 5), (0, 2)]);
+        assert_eq!(tops[2], vec![(2, 1)]);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let s = topic_shares(&counts());
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(s[0] >= s[1] && s[1] >= s[2]);
+    }
+}

@@ -1,0 +1,50 @@
+//! # hplvm — High Performance Latent Variable Models
+//!
+//! A reproduction of *"High Performance Latent Variable Models"*
+//! (Li, Ahmed, Li, Josifovski, Smola — 2015): a third-generation
+//! **parameter server** carrying the sufficient statistics of topic models
+//! (LDA, Poisson-Dirichlet-Process, Hierarchical-Dirichlet-Process),
+//! combined with the **Metropolis-Hastings-Walker (alias) sampler** for
+//! amortized `O(k_d)` collapsed Gibbs sampling, **eventual consistency**
+//! with communication filters, and **parameter projection** to repair the
+//! constraint violations relaxed consistency causes.
+//!
+//! ## Layering
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
+//!   simulated cluster transport, server group / client groups / scheduler /
+//!   server manager, samplers, projection, metrics, CLI.
+//! * **Layer 2 (python/compile, build-time)** — JAX dense-math graphs
+//!   (φ normalization, dense alias proposals, the test-perplexity
+//!   estimator), AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   the L2 hot spots, verified against a pure-jnp oracle.
+//! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through
+//!   the PJRT C API (`xla` crate) so the evaluation path runs the compiled
+//!   kernels with **no python at training time**.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hplvm::config::TrainConfig;
+//! use hplvm::coordinator::trainer::Trainer;
+//!
+//! let mut cfg = TrainConfig::small_lda();
+//! cfg.iterations = 20;
+//! let report = Trainer::new(cfg).run().expect("training failed");
+//! println!("final perplexity: {:.1}", report.final_perplexity());
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod projection;
+pub mod ps;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

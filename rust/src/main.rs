@@ -1,0 +1,195 @@
+//! `hplvm` — CLI for the High Performance Latent Variable Models system.
+//!
+//! ```text
+//! hplvm train [--model aliaslda|yahoolda|pdp|hdp] [--clients N] [--topics K]
+//!             [--iterations N] [--docs N] [--vocab V] [--projection MODE]
+//!             [--config file.json] [--out report.json] [--pjrt] [-v|-q]
+//! hplvm eval-engine          # check PJRT artifacts load and execute
+//! hplvm info                 # print the resolved configuration
+//! ```
+
+use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+use hplvm::util::json::Json;
+use hplvm::util::logging::{self, Level};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: hplvm <train|eval-engine|info> [options]\n\
+         options:\n\
+           --model NAME          yahoolda | aliaslda | pdp | hdp\n\
+           --clients N           client (worker) count\n\
+           --topics K            topic count / HDP truncation\n\
+           --iterations N        Gibbs sweeps\n\
+           --docs N              synthetic corpus documents\n\
+           --vocab V             vocabulary size\n\
+           --doc-len L           mean document length\n\
+           --projection MODE     off | single | distributed | ondemand\n\
+           --seed S              global seed\n\
+           --config FILE         JSON config overlay\n\
+           --out FILE            write the report JSON here\n\
+           --pjrt                evaluate through the PJRT artifacts\n\
+           -v / -q               verbose / quiet"
+    );
+    std::process::exit(2)
+}
+
+struct ArgIter<'a> {
+    args: &'a [String],
+    i: usize,
+}
+
+impl<'a> ArgIter<'a> {
+    fn next(&mut self) -> Option<&'a str> {
+        let v = self.args.get(self.i).map(String::as_str);
+        self.i += 1;
+        v
+    }
+    fn value(&mut self, flag: &str) -> &'a str {
+        match self.next() {
+            Some(v) => v,
+            None => {
+                eprintln!("missing value for {flag}");
+                usage()
+            }
+        }
+    }
+}
+
+fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
+    let mut cfg = TrainConfig::default();
+    let mut out = None;
+    let mut it = ArgIter { args, i: 0 };
+    while let Some(arg) = it.next() {
+        match arg {
+            "--model" => {
+                let v = it.value("--model");
+                cfg.model = ModelKind::parse(v).unwrap_or_else(|| usage());
+            }
+            "--clients" => {
+                cfg.cluster.clients = it.value("--clients").parse().unwrap_or_else(|_| usage())
+            }
+            "--topics" => {
+                cfg.params.topics = it.value("--topics").parse().unwrap_or_else(|_| usage());
+                cfg.corpus.n_topics = cfg.params.topics.min(64);
+            }
+            "--iterations" => {
+                cfg.iterations = it.value("--iterations").parse().unwrap_or_else(|_| usage())
+            }
+            "--docs" => {
+                cfg.corpus.n_docs = it.value("--docs").parse().unwrap_or_else(|_| usage())
+            }
+            "--vocab" => {
+                cfg.corpus.vocab_size = it.value("--vocab").parse().unwrap_or_else(|_| usage())
+            }
+            "--doc-len" => {
+                cfg.corpus.doc_len_mean =
+                    it.value("--doc-len").parse().unwrap_or_else(|_| usage())
+            }
+            "--projection" => {
+                let v = it.value("--projection");
+                cfg.projection = ProjectionMode::parse(v).unwrap_or_else(|| usage());
+            }
+            "--seed" => {
+                cfg.seed = it.value("--seed").parse().unwrap_or_else(|_| usage());
+                cfg.corpus.seed = cfg.seed;
+            }
+            "--config" => {
+                let path = it.value("--config");
+                let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                    eprintln!("cannot read {path}: {e}");
+                    std::process::exit(2)
+                });
+                let j = Json::parse(&text).unwrap_or_else(|e| {
+                    eprintln!("bad JSON in {path}: {e}");
+                    std::process::exit(2)
+                });
+                cfg.apply_json(&j).unwrap_or_else(|e| {
+                    eprintln!("bad config: {e}");
+                    std::process::exit(2)
+                });
+            }
+            "--out" => out = Some(it.value("--out").to_string()),
+            "--pjrt" => cfg.use_pjrt_eval = true,
+            "-v" => logging::set_level(Level::Debug),
+            "-q" => logging::set_level(Level::Warn),
+            _ => {
+                eprintln!("unknown option {arg}");
+                usage()
+            }
+        }
+    }
+    (cfg, out)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "train" => {
+            let (cfg, out) = parse_args(&args[1..]);
+            println!(
+                "training {} | K={} clients={} servers={} iterations={} projection={:?}",
+                cfg.model.name(),
+                cfg.params.topics,
+                cfg.cluster.clients,
+                cfg.cluster.n_servers(),
+                cfg.iterations,
+                cfg.projection,
+            );
+            match Trainer::new(cfg).run() {
+                Ok(report) => {
+                    report.print_table();
+                    if let Some(path) = out {
+                        std::fs::write(&path, report.to_json().to_string())
+                            .unwrap_or_else(|e| eprintln!("cannot write {path}: {e}"));
+                        println!("report written to {path}");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("training failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "eval-engine" => match hplvm::runtime::Engine::load(std::path::Path::new("artifacts")) {
+            Ok(Some(engine)) => {
+                println!("PJRT platform: {}", engine.platform());
+                for (name, meta) in &engine.manifest().entries {
+                    println!(
+                        "  artifact {name}: file={} batch={} k={} flavor={}",
+                        meta.file, meta.batch, meta.k, meta.flavor
+                    );
+                }
+                // Smoke-execute log_dot with known numbers.
+                let k = engine.manifest().entries["log_dot"].k.min(8);
+                let theta = vec![1.0f32 / k as f32; k];
+                let phi = vec![0.5f32; k];
+                match engine.log_dot(&theta, &phi, 1, k) {
+                    Ok(v) => println!(
+                        "log_dot([uniform]·[0.5]) = {} (expect {})",
+                        v[0],
+                        0.5f32.ln()
+                    ),
+                    Err(e) => {
+                        eprintln!("execution failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            Ok(None) => {
+                eprintln!("no artifacts/manifest.json — run `make artifacts` first");
+                std::process::exit(1);
+            }
+            Err(e) => {
+                eprintln!("PJRT unavailable: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        "info" => {
+            let (cfg, _) = parse_args(&args[1..]);
+            println!("{}", cfg.to_json());
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,145 @@
+//! Constraint rules and their proximal (nearest-consistent-value)
+//! projections.
+//!
+//! `C₁` rules constrain two same-shaped parameter collections `(A, B)`
+//! cell-wise — here `(s_tw, m_tw)` ("tables", "customers"). `C₂` rules
+//! tie an aggregate to its parts (`B = Σᵢ Aᵢ` — the `n_t` totals), which
+//! clients maintain by re-deriving the aggregate (§5.5: "easily maintained
+//! by deriving the aggregation parameter from its counterparts").
+
+/// A cell-wise rule over a pair of parameters `(a, b)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairRule {
+    /// The PDP/HDP table polytope: `b ≥ 0`, `0 ≤ a ≤ b`, `b>0 ⇒ a>0`
+    /// (`a` = tables `s`, `b` = customers `m`).
+    TablePolytope,
+    /// Both parameters merely non-negative.
+    NonNegative,
+}
+
+/// An aggregate rule: `total = Σ rows` for one matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggRule {
+    /// Re-derive per-topic totals from rows.
+    RederiveTotals,
+}
+
+impl PairRule {
+    /// Does `(a, b)` satisfy the rule?
+    #[inline]
+    pub fn holds(&self, a: i32, b: i32) -> bool {
+        match self {
+            PairRule::TablePolytope => b >= 0 && a >= 0 && a <= b && !(b > 0 && a == 0),
+            PairRule::NonNegative => a >= 0 && b >= 0,
+        }
+    }
+}
+
+/// Proximal projection of `(a, b)` onto the rule's feasible set:
+/// the feasible point minimizing `|a'−a| + |b'−b|`, preferring to move
+/// `a` alone when possible (Algorithm 1's two-tier `argmin`: first try
+/// `A_i' : c(A_i', B_i)`, only then move both).
+#[inline]
+pub fn project_pair(rule: PairRule, a: i32, b: i32) -> (i32, i32) {
+    if rule.holds(a, b) {
+        return (a, b);
+    }
+    match rule {
+        PairRule::NonNegative => (a.max(0), b.max(0)),
+        PairRule::TablePolytope => {
+            // Tier 1: fix a for the given b (b == 0 → a = 0; b > 0 →
+            // a ∈ [1, b]).
+            if b >= 0 {
+                let a1 = if b == 0 { 0 } else { a.clamp(1, b) };
+                return (a1, b);
+            }
+            // Tier 2: b < 0 — move both to the nearest feasible point,
+            // which is (0, 0) (or (1, 1) when a is large, but (max(a,0)
+            // clamped) — L1-nearest: b→0 costs |b|; then a→0 costs |a|;
+            // alternatively b→max(1,?) costs more. (0,0) unless a ≥ 1,
+            // where (1,1) costs |b|+1+|a−1| vs (0,0) costs |b|+|a| — for
+            // a ≥ 1, (1,1) is never worse and keeps the table occupied.
+            if a >= 1 {
+                (1, 1)
+            } else {
+                (0, 0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_points_are_fixed() {
+        for (a, b) in [(0, 0), (1, 1), (1, 5), (3, 3), (2, 7)] {
+            assert!(PairRule::TablePolytope.holds(a, b));
+            assert_eq!(project_pair(PairRule::TablePolytope, a, b), (a, b));
+        }
+    }
+
+    #[test]
+    fn fig3_example_customers_without_table() {
+        // Fig 3 left: m=3, s=0 (update zeroed tables) → s must become 1.
+        assert_eq!(project_pair(PairRule::TablePolytope, 0, 3), (1, 3));
+    }
+
+    #[test]
+    fn fig3_example_tables_exceed_customers() {
+        // Fig 3 right: m=1, s=2 → s clamps to m.
+        assert_eq!(project_pair(PairRule::TablePolytope, 2, 1), (1, 1));
+    }
+
+    #[test]
+    fn zero_customers_forces_zero_tables() {
+        assert_eq!(project_pair(PairRule::TablePolytope, 2, 0), (0, 0));
+    }
+
+    #[test]
+    fn negative_counts_are_repaired() {
+        assert_eq!(project_pair(PairRule::TablePolytope, -3, 4), (1, 4));
+        assert_eq!(project_pair(PairRule::TablePolytope, 2, -1), (1, 1));
+        assert_eq!(project_pair(PairRule::TablePolytope, -2, -5), (0, 0));
+        assert_eq!(project_pair(PairRule::NonNegative, -1, -2), (0, 0));
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        for a in -4..6 {
+            for b in -4..6 {
+                let (a1, b1) = project_pair(PairRule::TablePolytope, a, b);
+                assert!(
+                    PairRule::TablePolytope.holds(a1, b1),
+                    "({a},{b}) → ({a1},{b1}) infeasible"
+                );
+                assert_eq!(
+                    project_pair(PairRule::TablePolytope, a1, b1),
+                    (a1, b1),
+                    "not idempotent at ({a},{b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn projection_is_l1_minimal() {
+        // Exhaustive check against brute force on a small grid.
+        for a in -4..8 {
+            for b in -4..8 {
+                let (a1, b1) = project_pair(PairRule::TablePolytope, a, b);
+                let cost = (a1 - a).abs() + (b1 - b).abs();
+                let mut best = i32::MAX;
+                for aa in -1..12 {
+                    for bb in -1..12 {
+                        if PairRule::TablePolytope.holds(aa, bb) {
+                            best = best.min((aa - a).abs() + (bb - b).abs());
+                        }
+                    }
+                }
+                assert_eq!(cost, best, "({a},{b}) projected to ({a1},{b1}) cost {cost} best {best}");
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! **Algorithm 2 — Distributed Projection** (the variant the paper
+//! reports: "the second approach works particularly well in practice").
+//!
+//! Correction tasks are partitioned across clients by parameter id
+//! ("randomly allocate parameter correction tasks to each client ... such
+//! that correction task of each ID is only assigned to one client"); at
+//! the end of each iteration every client sweeps *its own* partition with
+//! the Algorithm-1 kernel and pushes the corrections like any other
+//! update.
+
+use super::single::SingleMachineProjection;
+use crate::sampler::counts::CountMatrix;
+use crate::util::rng::splitmix64;
+
+/// Algorithm-2 executor for one client.
+#[derive(Clone, Debug)]
+pub struct DistributedProjection {
+    inner: SingleMachineProjection,
+    /// This client's index within the group.
+    pub client_idx: usize,
+    /// Total clients sharing the sweep.
+    pub n_clients: usize,
+    /// Salt for the random (but agreed) id → client allocation.
+    pub salt: u64,
+}
+
+impl DistributedProjection {
+    /// New executor for client `client_idx` of `n_clients`.
+    pub fn new(client_idx: usize, n_clients: usize, salt: u64) -> Self {
+        assert!(n_clients > 0 && client_idx < n_clients);
+        DistributedProjection {
+            inner: SingleMachineProjection::default(),
+            client_idx,
+            n_clients,
+            salt,
+        }
+    }
+
+    /// Is word `w`'s correction task allocated to this client?
+    #[inline]
+    pub fn owns(&self, w: u32) -> bool {
+        let mut h = self.salt ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        (splitmix64(&mut h) as usize % self.n_clients) == self.client_idx
+    }
+
+    /// End-of-iteration sweep over this client's partition.
+    pub fn project_owned(&self, a: &mut CountMatrix, b: &mut CountMatrix) -> u64 {
+        let vocab = a.vocab() as u32;
+        let owned: Vec<u32> = (0..vocab).filter(|&w| self.owns(w)).collect();
+        self.inner.project_words(a, b, owned.into_iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::constraint::PairRule;
+
+    #[test]
+    fn partition_is_exact_and_exhaustive() {
+        let n = 5;
+        let mut owners = vec![0usize; 1000];
+        for c in 0..n {
+            let p = DistributedProjection::new(c, n, 42);
+            for w in 0..1000u32 {
+                if p.owns(w) {
+                    owners[w as usize] += 1;
+                }
+            }
+        }
+        assert!(
+            owners.iter().all(|&o| o == 1),
+            "every id must belong to exactly one client"
+        );
+    }
+
+    #[test]
+    fn partition_is_roughly_balanced() {
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for c in 0..n {
+            let p = DistributedProjection::new(c, n, 7);
+            counts[c] = (0..10_000u32).filter(|&w| p.owns(w)).count();
+        }
+        for &c in &counts {
+            assert!((1800..3200).contains(&c), "unbalanced partition {counts:?}");
+        }
+    }
+
+    #[test]
+    fn union_of_client_sweeps_repairs_everything() {
+        let n_clients = 3;
+        let vocab = 60;
+        let k = 4;
+        let mut s = CountMatrix::new(vocab, k);
+        let mut m = CountMatrix::new(vocab, k);
+        // Scatter violations everywhere.
+        for w in 0..vocab as u32 {
+            m.inc_local(w, (w % k as u32) as usize, 3); // customers, no tables
+            s.inc_local(w, ((w + 1) % k as u32) as usize, 2); // tables, no customers
+        }
+        for c in 0..n_clients {
+            let p = DistributedProjection::new(c, n_clients, 99);
+            p.project_owned(&mut s, &mut m);
+        }
+        for w in 0..vocab as u32 {
+            for t in 0..k {
+                assert!(
+                    PairRule::TablePolytope.holds(s.get(w, t), m.get(w, t)),
+                    "({w},{t}) unrepaired after all clients swept"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_sweeps_do_not_double_correct() {
+        let vocab = 40;
+        let mut s = CountMatrix::new(vocab, 2);
+        let mut m = CountMatrix::new(vocab, 2);
+        for w in 0..vocab as u32 {
+            m.inc_local(w, 0, 1);
+        } // each needs one table
+        let p0 = DistributedProjection::new(0, 2, 1);
+        let p1 = DistributedProjection::new(1, 2, 1);
+        let c0 = p0.project_owned(&mut s, &mut m);
+        let c1 = p1.project_owned(&mut s, &mut m);
+        assert_eq!(c0 + c1, vocab as u64, "exactly one correction per word");
+    }
+}

@@ -1,0 +1,30 @@
+//! Parameter projection for constraint-violation resolution (§5.5).
+//!
+//! Relaxed consistency lets clients' delta streams interleave into states
+//! that violate the models' polytope constraints (Fig 3): in PDP the
+//! word-topic-table counts must satisfy `0 ≤ s_tw ≤ m_tw` and
+//! `m_tw > 0 ⇒ s_tw > 0`; HDP has the analogous relation between root
+//! table counts and item counts. Sampling from violating statistics
+//! "may easily produce NaN, infinite, or other unstable probabilities" —
+//! Fig 8 shows the divergence.
+//!
+//! The fix is a **proximal projection**: round parameters to their nearest
+//! consistent values. Three placements are implemented, exactly the
+//! paper's three algorithms:
+//!
+//! * [`single`] — **Algorithm 1**: one designated client sweeps all
+//!   parameters at the end of each iteration (batch).
+//! * [`distributed`] — **Algorithm 2**: the sweep is partitioned across
+//!   clients by parameter id (the variant the paper reports).
+//! * [`ondemand`] — **Algorithm 3**: the server corrects every touched row
+//!   in real time as updates arrive.
+
+pub mod constraint;
+pub mod distributed;
+pub mod ondemand;
+pub mod single;
+
+pub use constraint::{project_pair, AggRule, PairRule};
+pub use distributed::DistributedProjection;
+pub use ondemand::OnDemandProjection;
+pub use single::SingleMachineProjection;

@@ -1,0 +1,118 @@
+//! **Algorithm 3 — On-demand projection on the server.**
+//!
+//! "Performed on the server for every update ... must be done in
+//! real-time and requires high performance." The server group installs
+//! this hook; after folding a pushed row delta into `(matrix, word)`, the
+//! hook projects that row against its paired matrix's row so the store
+//! never serves a violating pair.
+
+use super::constraint::{project_pair, PairRule};
+use crate::ps::snapshot::Store;
+
+/// Server-side projection hook over `(a_matrix, b_matrix)` pairs.
+#[derive(Clone, Debug)]
+pub struct OnDemandProjection {
+    /// `(a, b, rule)` triples — `a` is the table-like matrix, `b` the
+    /// customer-like matrix.
+    pub pairs: Vec<(u8, u8, PairRule)>,
+}
+
+impl OnDemandProjection {
+    /// Hook for the PDP layout (`m` = matrix 0, `s` = matrix 1).
+    pub fn pdp() -> Self {
+        OnDemandProjection {
+            pairs: vec![(1, 0, PairRule::TablePolytope)],
+        }
+    }
+
+    /// Hook applying plain non-negativity to every matrix (LDA).
+    pub fn nonneg() -> Self {
+        OnDemandProjection { pairs: Vec::new() }
+    }
+
+    /// Correct the row pair containing `(touched_matrix, word)`.
+    /// Returns the number of corrected cells.
+    pub fn correct(&self, store: &mut Store, touched_matrix: u8, word: u32) -> u64 {
+        let mut corrections = 0u64;
+        for &(am, bm, rule) in &self.pairs {
+            if touched_matrix != am && touched_matrix != bm {
+                continue;
+            }
+            // Both rows must exist to be comparable; absent = all zeros.
+            let a_row = store.get(&(am, word)).cloned().unwrap_or_default();
+            let b_row = store.get(&(bm, word)).cloned().unwrap_or_default();
+            let k = a_row.len().max(b_row.len());
+            if k == 0 {
+                continue;
+            }
+            let mut a_new = a_row.clone();
+            let mut b_new = b_row.clone();
+            a_new.resize(k, 0);
+            b_new.resize(k, 0);
+            let mut changed = false;
+            for t in 0..k {
+                let (a1, b1) = project_pair(rule, a_new[t], b_new[t]);
+                if a1 != a_new[t] {
+                    a_new[t] = a1;
+                    corrections += 1;
+                    changed = true;
+                }
+                if b1 != b_new[t] {
+                    b_new[t] = b1;
+                    corrections += 1;
+                    changed = true;
+                }
+            }
+            if changed {
+                store.insert((am, word), a_new);
+                store.insert((bm, word), b_new);
+            }
+        }
+        corrections
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corrects_violating_store_rows() {
+        let mut store = Store::new();
+        store.insert((0, 5), vec![3, 0, 1]); // m
+        store.insert((1, 5), vec![0, 2, 1]); // s: violations at t=0 (m>0,s=0) and t=1 (s>m)
+        let p = OnDemandProjection::pdp();
+        let n = p.correct(&mut store, 0, 5);
+        assert!(n >= 2);
+        assert_eq!(store[&(1, 5)], vec![1, 0, 1]);
+        assert_eq!(store[&(0, 5)], vec![3, 0, 1]);
+    }
+
+    #[test]
+    fn absent_partner_row_is_created_when_needed() {
+        let mut store = Store::new();
+        store.insert((0, 9), vec![4, 0]); // customers, no table row at all
+        let p = OnDemandProjection::pdp();
+        let n = p.correct(&mut store, 0, 9);
+        assert_eq!(n, 1);
+        assert_eq!(store[&(1, 9)], vec![1, 0]);
+    }
+
+    #[test]
+    fn untouched_matrices_are_ignored() {
+        let mut store = Store::new();
+        store.insert((7, 1), vec![-5]);
+        let p = OnDemandProjection::pdp();
+        assert_eq!(p.correct(&mut store, 7, 1), 0);
+        assert_eq!(store[&(7, 1)], vec![-5]);
+    }
+
+    #[test]
+    fn clean_rows_cost_nothing() {
+        let mut store = Store::new();
+        store.insert((0, 2), vec![5, 2]);
+        store.insert((1, 2), vec![2, 1]);
+        let p = OnDemandProjection::pdp();
+        assert_eq!(p.correct(&mut store, 1, 2), 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! **Algorithm 1 — Simple Single Machine Projection.**
+//!
+//! At the end of each iteration, one designated client sweeps every
+//! parameter pair, replaces violating cells with their nearest consistent
+//! values, and *sends the corrections as updates* (the `SendUpdate` calls
+//! of the pseudo-code — here: the corrections land in the replicas' delta
+//! logs, so the next push propagates them to the servers). `C₂`
+//! aggregates are re-derived afterwards.
+
+use super::constraint::{project_pair, AggRule, PairRule};
+use crate::sampler::counts::CountMatrix;
+
+/// Algorithm-1 executor.
+#[derive(Clone, Debug)]
+pub struct SingleMachineProjection {
+    /// The C₁ rule applied to `(a, b)` matrix pairs.
+    pub rule: PairRule,
+    /// The C₂ rule (aggregate re-derivation).
+    pub agg: AggRule,
+}
+
+impl Default for SingleMachineProjection {
+    fn default() -> Self {
+        SingleMachineProjection {
+            rule: PairRule::TablePolytope,
+            agg: AggRule::RederiveTotals,
+        }
+    }
+}
+
+impl SingleMachineProjection {
+    /// Sweep all words of the pair `(a, b)` — in PDP terms `(s_tw, m_tw)`
+    /// — projecting violations. Returns the number of corrected cells.
+    ///
+    /// `words` limits the sweep (Algorithm 2 passes this client's
+    /// partition; Algorithm 1 passes everything).
+    pub fn project_words(
+        &self,
+        a: &mut CountMatrix,
+        b: &mut CountMatrix,
+        words: impl Iterator<Item = u32>,
+    ) -> u64 {
+        let k = a.k();
+        let mut corrections = 0u64;
+        for w in words {
+            for t in 0..k {
+                let av = a.get(w, t);
+                let bv = b.get(w, t);
+                let (a1, b1) = project_pair(self.rule, av, bv);
+                if a1 != av {
+                    // The correction is itself an update (SendUpdate).
+                    a.inc(w, t, a1 - av);
+                    corrections += 1;
+                }
+                if b1 != bv {
+                    b.inc(w, t, b1 - bv);
+                    corrections += 1;
+                }
+            }
+        }
+        if corrections > 0 {
+            match self.agg {
+                AggRule::RederiveTotals => {
+                    a.rebuild_totals();
+                    b.rebuild_totals();
+                }
+            }
+        }
+        corrections
+    }
+
+    /// Algorithm 1 proper: sweep *all* words.
+    pub fn project_all(&self, a: &mut CountMatrix, b: &mut CountMatrix) -> u64 {
+        let vocab = a.vocab() as u32;
+        self.project_words(a, b, 0..vocab)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violating_pair() -> (CountMatrix, CountMatrix) {
+        let mut s = CountMatrix::new(4, 3);
+        let mut m = CountMatrix::new(4, 3);
+        // word 0: consistent (s=1, m=2)
+        s.inc_local(0, 0, 1);
+        m.inc_local(0, 0, 2);
+        // word 1: customers without tables (m=3, s=0)
+        m.inc_local(1, 1, 3);
+        // word 2: tables exceed customers (s=4, m=1)
+        s.inc_local(2, 2, 4);
+        m.inc_local(2, 2, 1);
+        // word 3: negative customer count (m=-2, s=1)
+        m.inc_local(3, 0, -2);
+        s.inc_local(3, 0, 1);
+        (s, m)
+    }
+
+    #[test]
+    fn sweep_repairs_all_violations() {
+        let (mut s, mut m) = violating_pair();
+        let proj = SingleMachineProjection::default();
+        let n = proj.project_all(&mut s, &mut m);
+        assert!(n >= 3, "expected ≥3 corrections, got {n}");
+        for w in 0..4u32 {
+            for t in 0..3 {
+                assert!(
+                    PairRule::TablePolytope.holds(s.get(w, t), m.get(w, t)),
+                    "({w},{t}) still violating: s={} m={}",
+                    s.get(w, t),
+                    m.get(w, t)
+                );
+            }
+        }
+        // Specific repairs.
+        assert_eq!(s.get(1, 1), 1, "tables opened for orphan customers");
+        assert_eq!(s.get(2, 2), 1, "tables clamped to customers");
+        assert_eq!(m.get(3, 0), 1, "negative customers repaired");
+    }
+
+    #[test]
+    fn corrections_become_pushable_deltas() {
+        let (mut s, mut m) = violating_pair();
+        // Simulate flushed state: clear the init deltas first.
+        let _ = s.drain_deltas();
+        let _ = m.drain_deltas();
+        let proj = SingleMachineProjection::default();
+        proj.project_all(&mut s, &mut m);
+        // The corrections must be sitting in the delta logs (SendUpdate).
+        assert!(s.pending_rows() + m.pending_rows() > 0);
+    }
+
+    #[test]
+    fn totals_rederived_after_sweep() {
+        let (mut s, mut m) = violating_pair();
+        let proj = SingleMachineProjection::default();
+        proj.project_all(&mut s, &mut m);
+        let mut expect_s = vec![0i64; 3];
+        let mut expect_m = vec![0i64; 3];
+        for w in 0..4u32 {
+            for t in 0..3 {
+                expect_s[t] += s.get(w, t) as i64;
+                expect_m[t] += m.get(w, t) as i64;
+            }
+        }
+        assert_eq!(s.totals(), &expect_s[..]);
+        assert_eq!(m.totals(), &expect_m[..]);
+    }
+
+    #[test]
+    fn clean_state_is_untouched() {
+        let mut s = CountMatrix::new(4, 2);
+        let mut m = CountMatrix::new(4, 2);
+        s.inc_local(0, 0, 2);
+        m.inc_local(0, 0, 5);
+        let proj = SingleMachineProjection::default();
+        assert_eq!(proj.project_all(&mut s, &mut m), 0);
+    }
+}

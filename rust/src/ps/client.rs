@@ -1,0 +1,282 @@
+//! The client-side parameter-server API: asynchronous push/pull with
+//! batched rows, communication filters, and the freeze protocol.
+//!
+//! A client never blocks on synchronization (eventual consistency, §5.3):
+//! `push_matrix` drains a replica's delta log through the filter and fires
+//! the batches at the owning servers; `request_rows` fires pull requests;
+//! `drain_responses` collects whatever has arrived. The worker folds
+//! responses into its replicas between documents.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use super::filter::Filter;
+use super::msg::{NodeId, Payload, RowBatch};
+use super::network::SimNet;
+use super::ring::Ring;
+use crate::sampler::counts::CountMatrix;
+use crate::util::rng::Rng;
+
+/// Client-side handle to the server group.
+pub struct PsClient {
+    /// This client's node id.
+    pub id: NodeId,
+    net: SimNet,
+    ring: Ring,
+    slots: Arc<RwLock<Vec<NodeId>>>,
+    frozen: Arc<AtomicBool>,
+    /// Communication filter for pushes.
+    pub filter: Filter,
+    rng: Rng,
+    next_req: u64,
+    /// Rows pushed (after filtering).
+    pub rows_pushed: u64,
+    /// Rows retained by the filter for a later push.
+    pub rows_retained: u64,
+}
+
+/// Messages a worker may receive that are not pull responses.
+#[derive(Debug)]
+pub enum ClientEvent {
+    /// Fresh rows for a matrix.
+    Rows(u8, RowBatch),
+    /// A control-plane message (kill/terminate/reroute).
+    Control(super::msg::Control),
+}
+
+impl PsClient {
+    /// Create a client bound to `id` against a server group's ring/slots.
+    pub fn new(
+        net: SimNet,
+        id: NodeId,
+        ring: Ring,
+        slots: Arc<RwLock<Vec<NodeId>>>,
+        frozen: Arc<AtomicBool>,
+        filter: Filter,
+        seed: u64,
+    ) -> Self {
+        PsClient {
+            id,
+            net,
+            ring,
+            slots,
+            frozen,
+            filter,
+            rng: Rng::new(seed),
+            next_req: 0,
+            rows_pushed: 0,
+            rows_retained: 0,
+        }
+    }
+
+    /// Spin while the manager has the system frozen (server failover).
+    /// A killed client stops waiting — its worker exits at the next
+    /// liveness check instead of idling forever.
+    fn wait_unfrozen(&self) {
+        while self.frozen.load(Ordering::SeqCst) && !self.net.is_dead(self.id) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn node_for(&self, matrix: u8, word: u32) -> NodeId {
+        let slot = self.ring.route(matrix, word);
+        self.slots.read().unwrap()[slot as usize]
+    }
+
+    /// Drain `replica`'s delta log through the filter and push the
+    /// selected row batches to their owning servers. Retained rows are
+    /// re-queued into the replica's delta log.
+    pub fn push_matrix(&mut self, matrix: u8, replica: &mut CountMatrix) {
+        self.wait_unfrozen();
+        let deltas = replica.drain_deltas();
+        if deltas.is_empty() {
+            return;
+        }
+        let (send, retain) = self.filter.select(deltas, &mut self.rng);
+        self.rows_retained += retain.len() as u64;
+        for (w, row) in retain {
+            replica.requeue_delta(w, row);
+        }
+        // Group by destination server.
+        let n_slots = self.ring.slots();
+        let mut by_slot: Vec<RowBatch> = (0..n_slots).map(|_| Vec::new()).collect();
+        for (w, row) in send {
+            by_slot[self.ring.route(matrix, w) as usize].push((w, row));
+            self.rows_pushed += 1;
+        }
+        for (slot, rows) in by_slot.into_iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let node = self.slots.read().unwrap()[slot];
+            self.net.send(self.id, node, Payload::Push { matrix, rows });
+        }
+    }
+
+    /// Fire pull requests for `words` of `matrix` (responses arrive
+    /// asynchronously; collect with [`PsClient::drain_responses`]).
+    pub fn request_rows(&mut self, matrix: u8, words: &[u32]) {
+        self.wait_unfrozen();
+        let n_slots = self.ring.slots();
+        let mut by_slot: Vec<Vec<u32>> = (0..n_slots).map(|_| Vec::new()).collect();
+        for &w in words {
+            by_slot[self.ring.route(matrix, w) as usize].push(w);
+        }
+        for (slot, ws) in by_slot.into_iter().enumerate() {
+            if ws.is_empty() {
+                continue;
+            }
+            self.next_req += 1;
+            let node = self.slots.read().unwrap()[slot];
+            self.net.send(
+                self.id,
+                node,
+                Payload::PullReq {
+                    matrix,
+                    words: ws,
+                    req_id: self.next_req,
+                },
+            );
+        }
+        let _ = self.node_for(matrix, 0); // keep resolver exercised in debug
+    }
+
+    /// Collect everything that has arrived within `wait` (may return
+    /// early; never blocks past the deadline).
+    pub fn drain_responses(&mut self, wait: Duration) -> Vec<ClientEvent> {
+        let mut out = Vec::new();
+        let deadline = std::time::Instant::now() + wait;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.net.recv_timeout(self.id, remaining) {
+                Some(env) => match env.payload {
+                    Payload::PullResp { matrix, rows, .. } => {
+                        out.push(ClientEvent::Rows(matrix, rows))
+                    }
+                    Payload::Control(c) => out.push(ClientEvent::Control(c)),
+                    _ => {}
+                },
+                None => break,
+            }
+            if std::time::Instant::now() >= deadline {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Report progress to the scheduler node.
+    pub fn report_progress(&self, scheduler: NodeId, shard: usize, iteration: u64, tokens: u64) {
+        self.net.send(
+            self.id,
+            scheduler,
+            Payload::Progress {
+                shard,
+                iteration,
+                tokens,
+            },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::network::NetConfig;
+    use crate::ps::server::{ServerConfig, ServerGroup};
+
+    #[test]
+    fn push_pull_through_client_api() {
+        let net = SimNet::new(
+            0,
+            NetConfig {
+                base_latency: Duration::from_micros(50),
+                jitter: Duration::ZERO,
+                drop_prob: 0.0,
+                seed: 5,
+            },
+        );
+        let me = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 3,
+                row_width: 4,
+                ..Default::default()
+            },
+        );
+        let mut client = PsClient::new(
+            net.clone(),
+            me,
+            group.ring.clone(),
+            group.slots.clone(),
+            group.frozen.clone(),
+            Filter::default(),
+            7,
+        );
+        let mut replica = CountMatrix::new(50, 4);
+        for w in 0..50u32 {
+            replica.inc(w, (w % 4) as usize, (w + 1) as i32);
+        }
+        client.push_matrix(0, &mut replica);
+        assert_eq!(replica.pending_rows(), 0);
+        std::thread::sleep(Duration::from_millis(40));
+
+        let words: Vec<u32> = (0..50).collect();
+        client.request_rows(0, &words);
+        let mut got = std::collections::HashMap::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while got.len() < 50 && std::time::Instant::now() < deadline {
+            for ev in client.drain_responses(Duration::from_millis(50)) {
+                if let ClientEvent::Rows(0, rows) = ev {
+                    for (w, row) in rows {
+                        got.insert(w, row);
+                    }
+                }
+            }
+        }
+        assert_eq!(got.len(), 50, "missing pull responses");
+        for w in 0..50u32 {
+            let row = &got[&w];
+            assert_eq!(row[(w % 4) as usize], (w + 1) as i32, "row {w}");
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn filter_retains_rows_in_delta_log() {
+        let net = SimNet::new(0, NetConfig::default());
+        let me = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 1,
+                row_width: 2,
+                ..Default::default()
+            },
+        );
+        let mut client = PsClient::new(
+            net.clone(),
+            me,
+            group.ring.clone(),
+            group.slots.clone(),
+            group.frozen.clone(),
+            Filter {
+                magnitude_fraction: 0.2,
+                uniform_prob: 0.0,
+            },
+            9,
+        );
+        let mut replica = CountMatrix::new(10, 2);
+        for w in 0..10u32 {
+            replica.inc(w, 0, 1 + w as i32);
+        }
+        client.push_matrix(0, &mut replica);
+        // 20% of 10 rows sent, the rest retained in the delta log.
+        assert_eq!(client.rows_pushed, 2);
+        assert_eq!(client.rows_retained, 8);
+        assert_eq!(replica.pending_rows(), 8);
+        group.shutdown();
+    }
+}

@@ -1,0 +1,135 @@
+//! User-defined communication filters (§5.3).
+//!
+//! The paper's filter "sends the parameters with priority proportional to
+//! the magnitude of the updates since synchronized last time" plus "a
+//! uniform sampling strategy ... to avoid stale parameters even if they
+//! have small local updates". [`Filter::select`] implements exactly that
+//! pair: the top-`fraction` rows by L1 delta magnitude are sent, every
+//! other row is sent with probability `uniform_prob`, and unsent rows are
+//! *retained* (their deltas re-queued) for a later push.
+
+use crate::util::rng::Rng;
+
+/// Filter configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Filter {
+    /// Fraction of candidate rows sent by magnitude priority (1.0 = send
+    /// everything, disabling the filter).
+    pub magnitude_fraction: f64,
+    /// Probability a non-selected row is sent anyway (staleness guard).
+    pub uniform_prob: f64,
+}
+
+impl Default for Filter {
+    fn default() -> Self {
+        Filter {
+            magnitude_fraction: 1.0,
+            uniform_prob: 0.0,
+        }
+    }
+}
+
+impl Filter {
+    /// A filter matching the paper's description with sensible defaults.
+    pub fn magnitude_priority() -> Self {
+        Filter {
+            magnitude_fraction: 0.5,
+            uniform_prob: 0.1,
+        }
+    }
+
+    /// Partition candidate `(word, delta-row)` batches into
+    /// `(send_now, retain)`.
+    pub fn select(
+        &self,
+        mut rows: Vec<(u32, Box<[i32]>)>,
+        rng: &mut Rng,
+    ) -> (Vec<(u32, Box<[i32]>)>, Vec<(u32, Box<[i32]>)>) {
+        if self.magnitude_fraction >= 1.0 || rows.len() <= 1 {
+            return (rows, Vec::new());
+        }
+        // Sort by descending L1 magnitude.
+        rows.sort_by_cached_key(|(_, r)| {
+            std::cmp::Reverse(r.iter().map(|&x| x.unsigned_abs() as u64).sum::<u64>())
+        });
+        let cut = ((rows.len() as f64) * self.magnitude_fraction).ceil() as usize;
+        let cut = cut.clamp(1, rows.len());
+        let mut send = Vec::with_capacity(cut);
+        let mut retain = Vec::new();
+        for (i, row) in rows.into_iter().enumerate() {
+            if i < cut || rng.coin(self.uniform_prob) {
+                send.push(row);
+            } else {
+                retain.push(row);
+            }
+        }
+        (send, retain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(mags: &[i32]) -> Vec<(u32, Box<[i32]>)> {
+        mags.iter()
+            .enumerate()
+            .map(|(w, &m)| (w as u32, vec![m, 0, 0].into_boxed_slice()))
+            .collect()
+    }
+
+    #[test]
+    fn passthrough_when_fraction_one() {
+        let f = Filter::default();
+        let mut rng = Rng::new(1);
+        let (send, retain) = f.select(rows(&[1, 2, 3]), &mut rng);
+        assert_eq!(send.len(), 3);
+        assert!(retain.is_empty());
+    }
+
+    #[test]
+    fn magnitude_priority_keeps_biggest() {
+        let f = Filter {
+            magnitude_fraction: 0.34,
+            uniform_prob: 0.0,
+        };
+        let mut rng = Rng::new(2);
+        let (send, retain) = f.select(rows(&[1, 100, 5, 50, 2, 3]), &mut rng);
+        assert_eq!(send.len(), 3); // ceil(6 * 0.34) = 3
+        let sent_words: Vec<u32> = send.iter().map(|(w, _)| *w).collect();
+        assert!(sent_words.contains(&1)); // |100|
+        assert!(sent_words.contains(&3)); // |50|
+        assert_eq!(send.len() + retain.len(), 6);
+    }
+
+    #[test]
+    fn uniform_sampling_rescues_small_rows() {
+        let f = Filter {
+            magnitude_fraction: 0.1,
+            uniform_prob: 0.5,
+        };
+        let mut rng = Rng::new(3);
+        let mut rescued = 0;
+        for _ in 0..200 {
+            let (send, _) = f.select(rows(&[100, 1, 1, 1, 1, 1, 1, 1, 1, 1]), &mut rng);
+            rescued += send.len() - 1; // beyond the magnitude pick
+        }
+        // E[rescued per call] = 9 * 0.5 = 4.5.
+        assert!((600..1200).contains(&rescued), "rescued {rescued}");
+    }
+
+    #[test]
+    fn nothing_lost() {
+        let f = Filter::magnitude_priority();
+        let mut rng = Rng::new(4);
+        let input = rows(&[5, 3, 8, 1, 9, 2, 7]);
+        let words_in: std::collections::BTreeSet<u32> = input.iter().map(|(w, _)| *w).collect();
+        let (send, retain) = f.select(input, &mut rng);
+        let words_out: std::collections::BTreeSet<u32> = send
+            .iter()
+            .chain(retain.iter())
+            .map(|(w, _)| *w)
+            .collect();
+        assert_eq!(words_in, words_out);
+    }
+}

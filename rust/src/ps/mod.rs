@@ -1,0 +1,32 @@
+//! The parameter-server substrate (§4, §5.2–5.4).
+//!
+//! A faithful in-process rebuild of the third-generation parameter server
+//! the paper runs on: a **server group** holding globally-shared
+//! `(key → row)` statistics partitioned by a Chord-style consistent-hash
+//! ring, **client groups** that push row *deltas* and pull fresh rows
+//! asynchronously (eventual consistency), **user-defined communication
+//! filters**, a **server manager** (liveness + partition reassignment) and
+//! a **scheduler** (progress tracking, straggler policy, the 90%
+//! completion rule).
+//!
+//! Every node is an OS thread; the [`network::SimNet`] transport injects
+//! per-message latency, jitter, drops and node kills from a deterministic
+//! RNG — the consistency phenomena the paper's techniques respond to
+//! (stale reads, conflicting updates, lost deltas after a failover) all
+//! arise for real, on the real code paths.
+
+pub mod client;
+pub mod filter;
+pub mod msg;
+pub mod network;
+pub mod ring;
+pub mod scheduler;
+pub mod server;
+pub mod snapshot;
+
+pub use client::PsClient;
+pub use msg::{Control, Envelope, NodeId, Payload};
+pub use network::{NetConfig, SimNet};
+pub use ring::Ring;
+pub use scheduler::Scheduler;
+pub use server::{ServerConfig, ServerGroup};

@@ -1,0 +1,154 @@
+//! Wire messages of the parameter server.
+//!
+//! Rows are batched (§5.3 "batched communication"): a push/pull carries
+//! whole `K`-wide rows keyed by word id, never individual `(key, value)`
+//! pairs. `matrix` distinguishes the statistics a model shares (LDA: one
+//! matrix `n_tw`; PDP: `m_tw` and `s_tw`; HDP: `n_tw` and root tables).
+
+use std::time::Instant;
+
+/// Node identifier (index into the simulated network's inbox table).
+pub type NodeId = u32;
+
+/// A batched row set: `(word id, K-wide row)`.
+pub type RowBatch = Vec<(u32, Box<[i32]>)>;
+
+/// Control-plane commands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Control {
+    /// Hard-kill the receiving node (failure injection / straggler
+    /// termination).
+    Kill,
+    /// Stop cleanly at the end of the current unit of work.
+    Terminate,
+    /// Server manager → clients: routing epoch changed; re-resolve
+    /// servers (after a server failover).
+    Reroute,
+}
+
+/// Message payloads.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Client → server: row **deltas** to fold into the store.
+    Push {
+        /// Which shared matrix.
+        matrix: u8,
+        /// Batched row deltas.
+        rows: RowBatch,
+    },
+    /// Client → server: request fresh rows.
+    PullReq {
+        /// Which shared matrix.
+        matrix: u8,
+        /// Row keys wanted.
+        words: Vec<u32>,
+        /// Correlation id (echoed in the response).
+        req_id: u64,
+    },
+    /// Server → client: fresh rows.
+    PullResp {
+        /// Which shared matrix.
+        matrix: u8,
+        /// Batched row values (absolute, not deltas).
+        rows: RowBatch,
+        /// Correlation id.
+        req_id: u64,
+    },
+    /// Client → scheduler: progress report (every iteration).
+    Progress {
+        /// Shard the client is working.
+        shard: usize,
+        /// Completed iterations.
+        iteration: u64,
+        /// Tokens sampled so far in this assignment.
+        tokens: u64,
+    },
+    /// Any node → manager: liveness heartbeat.
+    Heartbeat,
+    /// Control-plane command.
+    Control(Control),
+}
+
+impl Payload {
+    /// Approximate wire size in bytes (for the network-traffic metrics).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Push { rows, .. } | Payload::PullResp { rows, .. } => {
+                rows.iter().map(|(_, r)| 4 + 4 * r.len() as u64).sum::<u64>() + 16
+            }
+            Payload::PullReq { words, .. } => 16 + 4 * words.len() as u64,
+            Payload::Progress { .. } => 32,
+            Payload::Heartbeat | Payload::Control(_) => 8,
+        }
+    }
+}
+
+/// A routed message with its simulated delivery time.
+#[derive(Debug)]
+pub struct Envelope {
+    /// Sender node.
+    pub from: NodeId,
+    /// Destination node.
+    pub to: NodeId,
+    /// Simulated arrival time (the transport delays delivery until then).
+    pub deliver_at: Instant,
+    /// Monotonic sequence for deterministic tie-breaking.
+    pub seq: u64,
+    /// The payload.
+    pub payload: Payload,
+}
+
+impl PartialEq for Envelope {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Envelope {}
+impl PartialOrd for Envelope {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Envelope {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Earliest delivery first (BinaryHeap is a max-heap → reverse).
+        other
+            .deliver_at
+            .cmp(&self.deliver_at)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn envelope_orders_by_delivery_time() {
+        let now = Instant::now();
+        let mk = |dt_ms: u64, seq: u64| Envelope {
+            from: 0,
+            to: 1,
+            deliver_at: now + Duration::from_millis(dt_ms),
+            seq,
+            payload: Payload::Heartbeat,
+        };
+        let mut heap = std::collections::BinaryHeap::new();
+        heap.push(mk(30, 1));
+        heap.push(mk(10, 2));
+        heap.push(mk(20, 3));
+        assert_eq!(heap.pop().unwrap().seq, 2);
+        assert_eq!(heap.pop().unwrap().seq, 3);
+        assert_eq!(heap.pop().unwrap().seq, 1);
+    }
+
+    #[test]
+    fn wire_bytes_accounts_rows() {
+        let p = Payload::Push {
+            matrix: 0,
+            rows: vec![(1, vec![0i32; 10].into()), (2, vec![0i32; 10].into())],
+        };
+        assert_eq!(p.wire_bytes(), 16 + 2 * (4 + 40));
+    }
+}

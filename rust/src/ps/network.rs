@@ -1,0 +1,357 @@
+//! The simulated cluster transport.
+//!
+//! Substitution for the paper's shared production datacenter network: each
+//! node owns an inbox (a delivery-time-ordered heap + condvar); `send`
+//! stamps a deterministic latency (base + jitter), may drop the message,
+//! and respects node kills. All the distributed phenomena the paper's
+//! machinery answers — staleness, reordering, loss, failover — arise from
+//! these three knobs.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::msg::{Envelope, NodeId, Payload};
+use crate::util::rng::Rng;
+
+/// Transport knobs.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Base one-way latency.
+    pub base_latency: Duration,
+    /// Uniform jitter added on top.
+    pub jitter: Duration,
+    /// Probability a message is silently dropped.
+    pub drop_prob: f64,
+    /// RNG seed for latency/drop decisions.
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            base_latency: Duration::from_micros(200),
+            jitter: Duration::from_micros(300),
+            drop_prob: 0.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Aggregate transport statistics.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Messages accepted for delivery.
+    pub sent: AtomicU64,
+    /// Messages dropped by loss injection.
+    pub dropped: AtomicU64,
+    /// Messages refused because the destination is dead.
+    pub dead_letters: AtomicU64,
+    /// Total payload bytes accepted.
+    pub bytes: AtomicU64,
+}
+
+struct Inbox {
+    q: Mutex<BinaryHeap<Envelope>>,
+    cv: Condvar,
+}
+
+impl Inbox {
+    fn new() -> Self {
+        Inbox {
+            q: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+struct Inner {
+    inboxes: RwLock<Vec<Arc<Inbox>>>,
+    dead: RwLock<Vec<Arc<AtomicBool>>>,
+    cfg: NetConfig,
+    rng: Mutex<Rng>,
+    seq: AtomicU64,
+    stats: NetStats,
+}
+
+/// Handle to the simulated network (cheaply cloneable).
+#[derive(Clone)]
+pub struct SimNet {
+    inner: Arc<Inner>,
+}
+
+impl SimNet {
+    /// Create a network with `n_nodes` pre-registered nodes.
+    pub fn new(n_nodes: usize, cfg: NetConfig) -> Self {
+        let seed = cfg.seed;
+        SimNet {
+            inner: Arc::new(Inner {
+                inboxes: RwLock::new((0..n_nodes).map(|_| Arc::new(Inbox::new())).collect()),
+                dead: RwLock::new((0..n_nodes).map(|_| Arc::new(AtomicBool::new(false))).collect()),
+                cfg,
+                rng: Mutex::new(Rng::new(seed)),
+                seq: AtomicU64::new(0),
+                stats: NetStats::default(),
+            }),
+        }
+    }
+
+    /// Register a new node (failover replacements). Returns its id.
+    pub fn add_node(&self) -> NodeId {
+        let mut inboxes = self.inner.inboxes.write().unwrap();
+        let mut dead = self.inner.dead.write().unwrap();
+        inboxes.push(Arc::new(Inbox::new()));
+        dead.push(Arc::new(AtomicBool::new(false)));
+        (inboxes.len() - 1) as NodeId
+    }
+
+    /// Number of registered nodes (alive or dead).
+    pub fn len(&self) -> usize {
+        self.inner.inboxes.read().unwrap().len()
+    }
+
+    /// True iff no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Transport statistics.
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        let s = &self.inner.stats;
+        (
+            s.sent.load(Ordering::Relaxed),
+            s.dropped.load(Ordering::Relaxed),
+            s.dead_letters.load(Ordering::Relaxed),
+            s.bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Mark a node dead: its inbox stops accepting and is flushed.
+    pub fn kill(&self, node: NodeId) {
+        let dead = self.inner.dead.read().unwrap();
+        if let Some(d) = dead.get(node as usize) {
+            d.store(true, Ordering::SeqCst);
+        }
+        let inboxes = self.inner.inboxes.read().unwrap();
+        if let Some(ib) = inboxes.get(node as usize) {
+            ib.q.lock().unwrap().clear();
+            ib.cv.notify_all();
+        }
+    }
+
+    /// Is the node dead?
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.inner
+            .dead
+            .read()
+            .unwrap()
+            .get(node as usize)
+            .map(|d| d.load(Ordering::SeqCst))
+            .unwrap_or(true)
+    }
+
+    /// Send `payload` from `from` to `to`. Returns `false` if the message
+    /// was dropped (loss injection) or refused (dead destination).
+    pub fn send(&self, from: NodeId, to: NodeId, payload: Payload) -> bool {
+        if self.is_dead(to) || self.is_dead(from) {
+            self.inner.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let (latency, dropped) = {
+            let mut rng = self.inner.rng.lock().unwrap();
+            let jit = self.inner.cfg.jitter.as_nanos() as f64 * rng.f64();
+            (
+                self.inner.cfg.base_latency + Duration::from_nanos(jit as u64),
+                rng.coin(self.inner.cfg.drop_prob),
+            )
+        };
+        if dropped {
+            self.inner.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.inner
+            .stats
+            .bytes
+            .fetch_add(payload.wire_bytes(), Ordering::Relaxed);
+        self.inner.stats.sent.fetch_add(1, Ordering::Relaxed);
+        let env = Envelope {
+            from,
+            to,
+            deliver_at: Instant::now() + latency,
+            seq: self.inner.seq.fetch_add(1, Ordering::Relaxed),
+            payload,
+        };
+        let inbox = {
+            let inboxes = self.inner.inboxes.read().unwrap();
+            inboxes[to as usize].clone()
+        };
+        inbox.q.lock().unwrap().push(env);
+        inbox.cv.notify_one();
+        true
+    }
+
+    /// Receive the next deliverable message for `node`, waiting up to
+    /// `timeout`. Respects simulated delivery times.
+    pub fn recv_timeout(&self, node: NodeId, timeout: Duration) -> Option<Envelope> {
+        if self.is_dead(node) {
+            return None;
+        }
+        let inbox = {
+            let inboxes = self.inner.inboxes.read().unwrap();
+            inboxes.get(node as usize)?.clone()
+        };
+        let deadline = Instant::now() + timeout;
+        let mut q = inbox.q.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if let Some(head) = q.peek() {
+                if head.deliver_at <= now {
+                    return q.pop();
+                }
+                let wait = head.deliver_at.min(deadline).saturating_duration_since(now);
+                if now >= deadline {
+                    return None;
+                }
+                let (guard, _) = inbox.cv.wait_timeout(q, wait).unwrap();
+                q = guard;
+            } else {
+                if now >= deadline {
+                    return None;
+                }
+                let (guard, res) = inbox
+                    .cv
+                    .wait_timeout(q, deadline.saturating_duration_since(now))
+                    .unwrap();
+                q = guard;
+                if res.timed_out() && q.is_empty() {
+                    return None;
+                }
+            }
+            if self.is_dead(node) {
+                return None;
+            }
+        }
+    }
+
+    /// Drain everything currently deliverable without waiting.
+    pub fn drain_ready(&self, node: NodeId) -> Vec<Envelope> {
+        let mut out = Vec::new();
+        while let Some(e) = self.recv_timeout(node, Duration::ZERO) {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_in_latency_order() {
+        let net = SimNet::new(
+            2,
+            NetConfig {
+                base_latency: Duration::from_millis(1),
+                jitter: Duration::ZERO,
+                drop_prob: 0.0,
+                seed: 1,
+            },
+        );
+        assert!(net.send(0, 1, Payload::Heartbeat));
+        let got = net.recv_timeout(1, Duration::from_millis(100));
+        assert!(got.is_some());
+        assert_eq!(got.unwrap().from, 0);
+    }
+
+    #[test]
+    fn latency_actually_delays() {
+        let net = SimNet::new(
+            2,
+            NetConfig {
+                base_latency: Duration::from_millis(20),
+                jitter: Duration::ZERO,
+                drop_prob: 0.0,
+                seed: 2,
+            },
+        );
+        net.send(0, 1, Payload::Heartbeat);
+        // Immediately: not deliverable yet.
+        assert!(net.recv_timeout(1, Duration::ZERO).is_none());
+        // After the latency: deliverable.
+        assert!(net.recv_timeout(1, Duration::from_millis(200)).is_some());
+    }
+
+    #[test]
+    fn drop_injection_loses_messages() {
+        let net = SimNet::new(
+            2,
+            NetConfig {
+                base_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+                drop_prob: 0.5,
+                seed: 3,
+            },
+        );
+        let mut delivered = 0;
+        for _ in 0..1000 {
+            if net.send(0, 1, Payload::Heartbeat) {
+                delivered += 1;
+            }
+        }
+        assert!((300..700).contains(&delivered), "delivered {delivered}");
+        let (sent, dropped, _, _) = net.stats();
+        assert_eq!(sent + dropped, 1000);
+    }
+
+    #[test]
+    fn dead_nodes_refuse_traffic() {
+        let net = SimNet::new(3, NetConfig::default());
+        net.kill(1);
+        assert!(!net.send(0, 1, Payload::Heartbeat));
+        assert!(net.is_dead(1));
+        assert!(net.recv_timeout(1, Duration::from_millis(5)).is_none());
+        let (_, _, dead_letters, _) = net.stats();
+        assert_eq!(dead_letters, 1);
+    }
+
+    #[test]
+    fn add_node_extends_topology() {
+        let net = SimNet::new(1, NetConfig::default());
+        let n = net.add_node();
+        assert_eq!(n, 1);
+        assert_eq!(net.len(), 2);
+        net.send(0, n, Payload::Heartbeat);
+        assert!(net.recv_timeout(n, Duration::from_millis(100)).is_some());
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let net = SimNet::new(
+            2,
+            NetConfig {
+                base_latency: Duration::from_micros(100),
+                jitter: Duration::from_micros(100),
+                drop_prob: 0.0,
+                seed: 4,
+            },
+        );
+        let net2 = net.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = 0;
+            while got < 100 {
+                if net2.recv_timeout(1, Duration::from_millis(500)).is_some() {
+                    got += 1;
+                } else {
+                    break;
+                }
+            }
+            got
+        });
+        for _ in 0..100 {
+            net.send(0, 1, Payload::Heartbeat);
+        }
+        assert_eq!(h.join().unwrap(), 100);
+    }
+}

@@ -1,0 +1,108 @@
+//! Chord-style consistent hashing (§4: "(key,value) pairs are partitioned
+//! into server nodes by consistent hashing in the form of a Chord-style
+//! layout [18]").
+//!
+//! Keys are `(matrix, word)` pairs; each of the `S` logical server slots
+//! owns the arc between its virtual points. Consistent hashing keeps the
+//! key→slot map stable when slots are *re-bound* to replacement physical
+//! nodes (failover rebinds a slot; it does not move keys).
+
+use crate::util::rng::splitmix64;
+
+/// Consistent-hash ring over logical server slots.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// Sorted `(point, slot)` pairs.
+    points: Vec<(u64, u32)>,
+    slots: usize,
+}
+
+impl Ring {
+    /// Build a ring of `slots` logical servers with `vnodes` virtual
+    /// points each (more vnodes → better balance).
+    pub fn new(slots: usize, vnodes: usize) -> Self {
+        assert!(slots > 0);
+        let mut points = Vec::with_capacity(slots * vnodes);
+        for s in 0..slots as u32 {
+            let mut h = 0x5EED ^ (s as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            for _ in 0..vnodes {
+                points.push((splitmix64(&mut h), s));
+            }
+        }
+        points.sort_unstable();
+        points.dedup_by_key(|p| p.0);
+        Ring { points, slots }
+    }
+
+    /// Number of logical slots.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Hash a `(matrix, word)` key.
+    #[inline]
+    pub fn key_hash(matrix: u8, word: u32) -> u64 {
+        let mut h = ((matrix as u64) << 32) | word as u64;
+        splitmix64(&mut h)
+    }
+
+    /// Route a key to its owning slot.
+    #[inline]
+    pub fn route(&self, matrix: u8, word: u32) -> u32 {
+        let h = Self::key_hash(matrix, word);
+        // First point clockwise from h (binary search).
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let idx = if idx == self.points.len() { 0 } else { idx };
+        self.points[idx].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_stable_and_in_range() {
+        let r = Ring::new(8, 64);
+        for w in 0..10_000u32 {
+            let s1 = r.route(0, w);
+            let s2 = r.route(0, w);
+            assert_eq!(s1, s2);
+            assert!((s1 as usize) < 8);
+        }
+    }
+
+    #[test]
+    fn load_is_balanced() {
+        let r = Ring::new(8, 128);
+        let mut counts = vec![0usize; 8];
+        for w in 0..80_000u32 {
+            counts[r.route(0, w) as usize] += 1;
+        }
+        let mean = 10_000.0;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > 0.5 * mean && (c as f64) < 1.6 * mean,
+                "slot {s} owns {c} keys"
+            );
+        }
+    }
+
+    #[test]
+    fn matrices_hash_independently() {
+        let r = Ring::new(4, 64);
+        let same = (0..1000u32)
+            .filter(|&w| r.route(0, w) == r.route(1, w))
+            .count();
+        // ≈ 1/4 collide by chance; far fewer than all.
+        assert!(same < 500, "matrix id ignored in routing? ({same})");
+    }
+
+    #[test]
+    fn single_slot_routes_everything() {
+        let r = Ring::new(1, 4);
+        for w in 0..100u32 {
+            assert_eq!(r.route(3, w), 0);
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! The client-group scheduler (§4, §5.4, §6).
+//!
+//! Tracks per-shard progress reports, detects stragglers ("each worker
+//! sends a progress report ... the scheduler analyzes the average
+//! progress, and decides whether to terminate stragglers and re-assign
+//! their tasks"), and implements the termination rule of §6: "we
+//! terminate a job when 90% of the workers reach the required number of
+//! iterations" — the *curse-of-the-last-reducer* mitigation that produces
+//! the shrinking data-point counts in every figure.
+
+use super::msg::NodeId;
+
+/// Per-shard assignment state.
+#[derive(Clone, Debug)]
+pub struct ShardProgress {
+    /// Client currently working the shard.
+    pub client: NodeId,
+    /// Completed iterations.
+    pub iteration: u64,
+    /// Tokens sampled under the current assignment.
+    pub tokens: u64,
+    /// Reassignment count (failovers + straggler kills).
+    pub reassignments: u32,
+}
+
+/// Scheduler policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Fraction of workers that must reach the target for termination.
+    pub completion_quorum: f64,
+    /// Iterations behind the *median* before a worker is a straggler.
+    pub straggler_lag: u64,
+    /// Minimum median progress before straggler kills are considered
+    /// (prevents killing everyone at startup).
+    pub straggler_warmup: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            completion_quorum: 0.9,
+            straggler_lag: 3,
+            straggler_warmup: 2,
+        }
+    }
+}
+
+/// The scheduler state machine (driven by the trainer's event loop).
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    target_iterations: u64,
+    shards: Vec<ShardProgress>,
+}
+
+impl Scheduler {
+    /// New scheduler over `assignments[shard] = client`.
+    pub fn new(cfg: SchedulerConfig, target_iterations: u64, assignments: Vec<NodeId>) -> Self {
+        Scheduler {
+            cfg,
+            target_iterations,
+            shards: assignments
+                .into_iter()
+                .map(|client| ShardProgress {
+                    client,
+                    iteration: 0,
+                    tokens: 0,
+                    reassignments: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Record a progress report.
+    pub fn record(&mut self, shard: usize, client: NodeId, iteration: u64, tokens: u64) {
+        if let Some(s) = self.shards.get_mut(shard) {
+            // Ignore ghosts: reports from a client that was reassigned away.
+            if s.client == client {
+                s.iteration = s.iteration.max(iteration);
+                if tokens > 0 {
+                    s.tokens = tokens;
+                }
+            }
+        }
+    }
+
+    /// Re-assign a shard to a new client (failover / straggler kill).
+    pub fn reassign(&mut self, shard: usize, new_client: NodeId) {
+        if let Some(s) = self.shards.get_mut(shard) {
+            s.client = new_client;
+            s.reassignments += 1;
+        }
+    }
+
+    /// Median completed iteration across shards.
+    pub fn median_progress(&self) -> u64 {
+        if self.shards.is_empty() {
+            return 0;
+        }
+        let mut iters: Vec<u64> = self.shards.iter().map(|s| s.iteration).collect();
+        iters.sort_unstable();
+        iters[iters.len() / 2]
+    }
+
+    /// Shards lagging more than `straggler_lag` behind the median.
+    pub fn stragglers(&self) -> Vec<usize> {
+        let median = self.median_progress();
+        if median < self.cfg.straggler_warmup {
+            return Vec::new();
+        }
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.iteration + self.cfg.straggler_lag < median
+                    && s.iteration < self.target_iterations
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The 90% rule: fraction of shards at target ≥ quorum?
+    pub fn quorum_reached(&self) -> bool {
+        if self.shards.is_empty() {
+            return true;
+        }
+        let done = self
+            .shards
+            .iter()
+            .filter(|s| s.iteration >= self.target_iterations)
+            .count();
+        (done as f64) >= self.cfg.completion_quorum * self.shards.len() as f64
+    }
+
+    /// Number of shards that have completed at least `iteration` — the
+    /// "number of data points" panel of the paper's figures.
+    pub fn datapoints_at(&self, iteration: u64) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.iteration >= iteration)
+            .count()
+    }
+
+    /// Current assignments view.
+    pub fn shards(&self) -> &[ShardProgress] {
+        &self.shards
+    }
+
+    /// Target iteration count.
+    pub fn target(&self) -> u64 {
+        self.target_iterations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(n: usize, target: u64) -> Scheduler {
+        Scheduler::new(
+            SchedulerConfig::default(),
+            target,
+            (0..n as u32).collect(),
+        )
+    }
+
+    #[test]
+    fn quorum_rule_is_90_percent() {
+        let mut s = sched(10, 5);
+        for shard in 0..9 {
+            s.record(shard, shard as u32, 5, 100);
+        }
+        assert!(s.quorum_reached(), "9/10 at target = 90% quorum");
+        let mut s = sched(10, 5);
+        for shard in 0..8 {
+            s.record(shard, shard as u32, 5, 100);
+        }
+        assert!(!s.quorum_reached(), "8/10 < 90%");
+    }
+
+    #[test]
+    fn straggler_detection_uses_median_lag() {
+        let mut s = sched(5, 100);
+        for shard in 0..4 {
+            s.record(shard, shard as u32, 10, 0);
+        }
+        s.record(4, 4, 2, 0); // 8 behind the median of 10
+        assert_eq!(s.stragglers(), vec![4]);
+        // A shard only mildly behind is not a straggler.
+        let mut s = sched(5, 100);
+        for shard in 0..4 {
+            s.record(shard, shard as u32, 10, 0);
+        }
+        s.record(4, 4, 8, 0);
+        assert!(s.stragglers().is_empty());
+    }
+
+    #[test]
+    fn no_straggler_kills_during_warmup() {
+        let mut s = sched(3, 100);
+        s.record(0, 0, 1, 0);
+        s.record(1, 1, 1, 0);
+        // median 1 < warmup 2 → no kills even though shard 2 is at 0.
+        assert!(s.stragglers().is_empty());
+    }
+
+    #[test]
+    fn reassignment_ignores_ghost_reports() {
+        let mut s = sched(2, 10);
+        s.record(0, 0, 3, 50);
+        s.reassign(0, 99);
+        s.record(0, 0, 7, 70); // ghost: old client
+        assert_eq!(s.shards()[0].iteration, 3);
+        s.record(0, 99, 4, 10); // new client
+        assert_eq!(s.shards()[0].iteration, 4);
+        assert_eq!(s.shards()[0].reassignments, 1);
+    }
+
+    #[test]
+    fn datapoints_shrink_with_iteration() {
+        let mut s = sched(4, 10);
+        s.record(0, 0, 10, 0);
+        s.record(1, 1, 7, 0);
+        s.record(2, 2, 7, 0);
+        s.record(3, 3, 2, 0);
+        assert_eq!(s.datapoints_at(1), 4);
+        assert_eq!(s.datapoints_at(7), 3);
+        assert_eq!(s.datapoints_at(10), 1);
+    }
+
+    #[test]
+    fn completed_shards_are_never_stragglers() {
+        let mut s = sched(3, 5);
+        s.record(0, 0, 20, 0);
+        s.record(1, 1, 20, 0);
+        s.record(2, 2, 5, 0); // at target, far behind "median" 20
+        assert!(s.stragglers().is_empty());
+    }
+}

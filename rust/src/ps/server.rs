@@ -1,0 +1,517 @@
+//! Server group: the nodes that own the globally-shared statistics.
+//!
+//! Each logical server *slot* owns a ring partition of `(matrix, word)`
+//! keys. A slot is bound to a physical node (thread); on failure the
+//! manager freezes the system (§5.4 "we freeze the whole system until the
+//! server manager reschedules a new node"), binds the slot to a fresh node
+//! that restores the most recent snapshot, and thaws. Only the failed
+//! slot rolls back — the paper's relaxed failover.
+//!
+//! Servers apply pushed row deltas, answer pulls, run the optional
+//! **on-demand projection** (Algorithm 3) against every touched row, emit
+//! heartbeats and write barrier-free snapshots.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use super::msg::{Control, NodeId, Payload};
+use super::network::SimNet;
+use super::ring::Ring;
+use super::snapshot::{self, Store};
+use crate::projection::ondemand::OnDemandProjection;
+
+/// Server-group configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// Logical server slots.
+    pub n_servers: usize,
+    /// Virtual ring points per slot.
+    pub vnodes: usize,
+    /// Row width `K` (all shared matrices are K-wide).
+    pub row_width: usize,
+    /// Barrier-free snapshot cadence (None disables).
+    pub snapshot_every: Option<Duration>,
+    /// Snapshot directory.
+    pub snapshot_dir: Option<PathBuf>,
+    /// Algorithm-3 on-demand projection hook.
+    pub projection: Option<Arc<OnDemandProjection>>,
+    /// Heartbeat cadence to the manager.
+    pub heartbeat_every: Duration,
+    /// How long a slot may go silent before the manager declares it lost.
+    /// Keep generous on oversubscribed hosts — explicit kills are always
+    /// detected immediately regardless of this value.
+    pub liveness_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_servers: 2,
+            vnodes: 64,
+            row_width: 0,
+            snapshot_every: None,
+            snapshot_dir: None,
+            projection: None,
+            heartbeat_every: Duration::from_millis(25),
+            liveness_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Shared statistics of one server thread, surfaced for tests/metrics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Push messages applied.
+    pub pushes: AtomicU64,
+    /// Rows folded in.
+    pub rows_applied: AtomicU64,
+    /// Pull requests answered.
+    pub pulls: AtomicU64,
+    /// Projection corrections performed (Algorithm 3).
+    pub corrections: AtomicU64,
+    /// Snapshots written.
+    pub snapshots: AtomicU64,
+}
+
+struct ServerNode {
+    net: SimNet,
+    id: NodeId,
+    slot: usize,
+    manager: NodeId,
+    cfg: ServerConfig,
+    store: Store,
+    stats: Arc<ServerStats>,
+    /// Group-wide shutdown flag — a replacement node spawned *during*
+    /// shutdown would otherwise never receive its Terminate.
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerNode {
+    fn snapshot_path(cfg: &ServerConfig, slot: usize) -> Option<PathBuf> {
+        cfg.snapshot_dir
+            .as_ref()
+            .map(|d| d.join(format!("server_slot{slot}.snap")))
+    }
+
+    fn run(mut self) {
+        let mut last_heartbeat = Instant::now();
+        let mut last_snapshot = Instant::now();
+        loop {
+            if self.net.is_dead(self.id) {
+                return;
+            }
+            if self.shutdown.load(Ordering::Relaxed) {
+                self.write_snapshot();
+                return;
+            }
+            if last_heartbeat.elapsed() >= self.cfg.heartbeat_every {
+                self.net.send(self.id, self.manager, Payload::Heartbeat);
+                last_heartbeat = Instant::now();
+            }
+            if let Some(every) = self.cfg.snapshot_every {
+                if last_snapshot.elapsed() >= every {
+                    self.write_snapshot();
+                    last_snapshot = Instant::now();
+                }
+            }
+            let env = match self.net.recv_timeout(self.id, Duration::from_millis(5)) {
+                Some(e) => e,
+                None => continue,
+            };
+            match env.payload {
+                Payload::Push { matrix, rows } => {
+                    self.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                    for (word, delta) in rows {
+                        let row = self
+                            .store
+                            .entry((matrix, word))
+                            .or_insert_with(|| vec![0i32; self.cfg.row_width.max(delta.len())]);
+                        if row.len() < delta.len() {
+                            row.resize(delta.len(), 0);
+                        }
+                        for (c, d) in row.iter_mut().zip(delta.iter()) {
+                            *c = c.saturating_add(*d);
+                        }
+                        self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
+                        if let Some(p) = &self.cfg.projection {
+                            let n = p.correct(&mut self.store, matrix, word);
+                            self.stats.corrections.fetch_add(n, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Payload::PullReq {
+                    matrix,
+                    words,
+                    req_id,
+                } => {
+                    self.stats.pulls.fetch_add(1, Ordering::Relaxed);
+                    let rows: Vec<(u32, Box<[i32]>)> = words
+                        .into_iter()
+                        .map(|w| {
+                            let row = self
+                                .store
+                                .get(&(matrix, w))
+                                .cloned()
+                                .unwrap_or_else(|| vec![0i32; self.cfg.row_width]);
+                            (w, row.into_boxed_slice())
+                        })
+                        .collect();
+                    self.net.send(
+                        self.id,
+                        env.from,
+                        Payload::PullResp {
+                            matrix,
+                            rows,
+                            req_id,
+                        },
+                    );
+                }
+                Payload::Control(Control::Kill) => return,
+                Payload::Control(Control::Terminate) => {
+                    self.write_snapshot();
+                    return;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn write_snapshot(&mut self) {
+        if let Some(path) = Self::snapshot_path(&self.cfg, self.slot) {
+            let bytes = snapshot::encode_store(&self.store);
+            if snapshot::write_atomic(&path, &bytes).is_ok() {
+                self.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Handle to the running server group: the ring, the slot→node binding,
+/// the freeze flag, and the manager thread.
+pub struct ServerGroup {
+    /// The consistent-hash ring over slots.
+    pub ring: Ring,
+    /// Current slot → physical node binding (failover rebinds entries).
+    pub slots: Arc<RwLock<Vec<NodeId>>>,
+    /// System-wide freeze flag (server failover in progress).
+    pub frozen: Arc<AtomicBool>,
+    /// Per-slot stats handles (index = slot; follows the *current* node).
+    pub stats: Arc<RwLock<Vec<Arc<ServerStats>>>>,
+    /// Manager node id.
+    pub manager_id: NodeId,
+    cfg: ServerConfig,
+    net: SimNet,
+    shutdown: Arc<AtomicBool>,
+    manager_handle: Option<std::thread::JoinHandle<()>>,
+    server_handles: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ServerGroup {
+    /// Spawn `cfg.n_servers` server nodes plus the server manager.
+    /// `net` must already contain a node id for the manager and each
+    /// server; they are allocated here via [`SimNet::add_node`].
+    pub fn spawn(net: &SimNet, cfg: ServerConfig) -> ServerGroup {
+        let manager_id = net.add_node();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut slot_ids = Vec::with_capacity(cfg.n_servers);
+        let mut stats = Vec::with_capacity(cfg.n_servers);
+        let handles = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for slot in 0..cfg.n_servers {
+            let id = net.add_node();
+            let st = Arc::new(ServerStats::default());
+            let node = ServerNode {
+                net: net.clone(),
+                id,
+                slot,
+                manager: manager_id,
+                cfg: cfg.clone(),
+                store: Store::new(),
+                stats: st.clone(),
+                shutdown: shutdown.clone(),
+            };
+            handles
+                .lock()
+                .unwrap()
+                .push(std::thread::spawn(move || node.run()));
+            slot_ids.push(id);
+            stats.push(st);
+        }
+        let slots = Arc::new(RwLock::new(slot_ids));
+        let stats = Arc::new(RwLock::new(stats));
+        let frozen = Arc::new(AtomicBool::new(false));
+
+        // The server manager: liveness tracking + slot failover (§5.4).
+        let manager_handle = {
+            let net = net.clone();
+            let slots = slots.clone();
+            let stats = stats.clone();
+            let frozen = frozen.clone();
+            let shutdown = shutdown.clone();
+            let cfg = cfg.clone();
+            let handles = handles.clone();
+            std::thread::spawn(move || {
+                let mut last_seen: Vec<Instant> =
+                    vec![Instant::now(); slots.read().unwrap().len()];
+                loop {
+                    if shutdown.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // Drain heartbeats.
+                    while let Some(env) = net.recv_timeout(manager_id, Duration::from_millis(2)) {
+                        if let Payload::Heartbeat = env.payload {
+                            let slot_of = {
+                                let s = slots.read().unwrap();
+                                s.iter().position(|&id| id == env.from)
+                            };
+                            if let Some(slot) = slot_of {
+                                last_seen[slot] = Instant::now();
+                            }
+                        }
+                    }
+                    // Failover: a slot whose node is dead (or silent far
+                    // beyond the heartbeat cadence) gets a fresh node.
+                    for slot in 0..last_seen.len() {
+                        let node = slots.read().unwrap()[slot];
+                        let lost = net.is_dead(node)
+                            || last_seen[slot].elapsed() > cfg.liveness_timeout;
+                        if !lost {
+                            continue;
+                        }
+                        // Make sure the old binding can't keep serving
+                        // (a merely-slow node would split the slot).
+                        net.kill(node);
+                        // Freeze the whole system (paper §5.4).
+                        frozen.store(true, Ordering::SeqCst);
+                        let new_id = net.add_node();
+                        let store = ServerNode::snapshot_path(&cfg, slot)
+                            .and_then(|p| snapshot::read_snapshot(&p))
+                            .and_then(|b| snapshot::decode_store(&b))
+                            .unwrap_or_default();
+                        let st = Arc::new(ServerStats::default());
+                        let node = ServerNode {
+                            net: net.clone(),
+                            id: new_id,
+                            slot,
+                            manager: manager_id,
+                            cfg: cfg.clone(),
+                            store,
+                            stats: st.clone(),
+                            shutdown: shutdown.clone(),
+                        };
+                        handles
+                            .lock()
+                            .unwrap()
+                            .push(std::thread::spawn(move || node.run()));
+                        slots.write().unwrap()[slot] = new_id;
+                        stats.write().unwrap()[slot] = st;
+                        last_seen[slot] = Instant::now();
+                        frozen.store(false, Ordering::SeqCst);
+                    }
+                }
+            })
+        };
+
+        ServerGroup {
+            ring: Ring::new(cfg.n_servers, cfg.vnodes),
+            slots,
+            frozen,
+            stats,
+            manager_id,
+            cfg,
+            net: net.clone(),
+            shutdown,
+            manager_handle: Some(manager_handle),
+            server_handles: handles,
+        }
+    }
+
+    /// Resolve the physical node currently bound to a slot.
+    pub fn node_for_slot(&self, slot: u32) -> NodeId {
+        self.slots.read().unwrap()[slot as usize]
+    }
+
+    /// Kill the physical node behind `slot` (failure injection). The
+    /// manager will detect and fail over.
+    pub fn kill_slot(&self, slot: usize) {
+        let node = self.slots.read().unwrap()[slot];
+        self.net.kill(node);
+    }
+
+    /// Sum of a stat across current slots.
+    pub fn total_corrections(&self) -> u64 {
+        self.stats
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| s.corrections.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Stop all servers and the manager.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for &node in self.slots.read().unwrap().iter() {
+            self.net
+                .send(self.manager_id, node, Payload::Control(Control::Terminate));
+        }
+        if let Some(h) = self.manager_handle.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.server_handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = &self.cfg;
+    }
+}
+
+impl Drop for ServerGroup {
+    fn drop(&mut self) {
+        if self.manager_handle.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::network::NetConfig;
+
+    fn fast_net() -> SimNet {
+        SimNet::new(
+            0,
+            NetConfig {
+                base_latency: Duration::from_micros(50),
+                jitter: Duration::from_micros(50),
+                drop_prob: 0.0,
+                seed: 1,
+            },
+        )
+    }
+
+    fn pull(
+        net: &SimNet,
+        me: NodeId,
+        server: NodeId,
+        matrix: u8,
+        words: Vec<u32>,
+    ) -> Vec<(u32, Box<[i32]>)> {
+        net.send(me, server, Payload::PullReq { matrix, words, req_id: 1 });
+        loop {
+            let env = net
+                .recv_timeout(me, Duration::from_secs(2))
+                .expect("pull timed out");
+            if let Payload::PullResp { rows, .. } = env.payload {
+                return rows;
+            }
+        }
+    }
+
+    #[test]
+    fn push_then_pull_roundtrip() {
+        let net = fast_net();
+        let me = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 2,
+                row_width: 4,
+                ..Default::default()
+            },
+        );
+        let slot = group.ring.route(0, 7);
+        let server = group.node_for_slot(slot);
+        net.send(
+            me,
+            server,
+            Payload::Push {
+                matrix: 0,
+                rows: vec![(7, vec![1, 2, 3, 4].into())],
+            },
+        );
+        net.send(
+            me,
+            server,
+            Payload::Push {
+                matrix: 0,
+                rows: vec![(7, vec![1, 0, 0, -1].into())],
+            },
+        );
+        // Eventual: give the server a moment, then pull.
+        std::thread::sleep(Duration::from_millis(30));
+        let rows = pull(&net, me, server, 0, vec![7, 8]);
+        assert_eq!(&*rows[0].1, &[2, 2, 3, 3]);
+        assert_eq!(&*rows[1].1, &[0, 0, 0, 0], "unknown rows pull as zeros");
+        group.shutdown();
+    }
+
+    #[test]
+    fn deltas_from_multiple_clients_aggregate() {
+        let net = fast_net();
+        let a = net.add_node();
+        let b = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 1,
+                row_width: 2,
+                ..Default::default()
+            },
+        );
+        let server = group.node_for_slot(0);
+        for _ in 0..10 {
+            net.send(a, server, Payload::Push { matrix: 0, rows: vec![(1, vec![1, 0].into())] });
+            net.send(b, server, Payload::Push { matrix: 0, rows: vec![(1, vec![0, 1].into())] });
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let rows = pull(&net, a, server, 0, vec![1]);
+        assert_eq!(&*rows[0].1, &[10, 10]);
+        group.shutdown();
+    }
+
+    #[test]
+    fn server_failover_restores_from_snapshot() {
+        let dir = std::env::temp_dir().join(format!("hplvm_failover_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let net = fast_net();
+        let me = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 1,
+                row_width: 2,
+                snapshot_every: Some(Duration::from_millis(20)),
+                snapshot_dir: Some(dir.clone()),
+                heartbeat_every: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        let old_node = group.node_for_slot(0);
+        net.send(me, old_node, Payload::Push { matrix: 0, rows: vec![(3, vec![5, 7].into())] });
+        // Wait for at least one snapshot.
+        std::thread::sleep(Duration::from_millis(120));
+        group.kill_slot(0);
+        // Manager must detect, spawn a replacement, rebind the slot.
+        let mut new_node = old_node;
+        for _ in 0..100 {
+            std::thread::sleep(Duration::from_millis(20));
+            new_node = group.node_for_slot(0);
+            if new_node != old_node {
+                break;
+            }
+        }
+        assert_ne!(new_node, old_node, "failover never happened");
+        assert!(!group.frozen.load(Ordering::SeqCst), "must thaw after failover");
+        let rows = pull(&net, me, new_node, 0, vec![3]);
+        assert_eq!(&*rows[0].1, &[5, 7], "snapshot state lost in failover");
+        group.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,238 @@
+//! Barrier-free snapshots (§5.4).
+//!
+//! "Clients and servers independently take a snapshot of their memory to
+//! disk every N minutes without global barrier." Snapshots are plain
+//! binary files written atomically (temp + rename); a replacement node
+//! loads the most recent one and continues — rolling only *itself* back,
+//! which is the paper's deliberately relaxed failover semantics.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A server's store: `(matrix, word) → row`.
+pub type Store = HashMap<(u8, u32), Vec<i32>>;
+
+const MAGIC: &[u8; 8] = b"HPLVMSNP";
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+impl<'a> Reader<'a> {
+    fn u32(&mut self) -> Option<u32> {
+        let v = u32::from_le_bytes(self.b.get(self.pos..self.pos + 4)?.try_into().ok()?);
+        self.pos += 4;
+        Some(v)
+    }
+    fn u64(&mut self) -> Option<u64> {
+        let v = u64::from_le_bytes(self.b.get(self.pos..self.pos + 8)?.try_into().ok()?);
+        self.pos += 8;
+        Some(v)
+    }
+    fn u8(&mut self) -> Option<u8> {
+        let v = *self.b.get(self.pos)?;
+        self.pos += 1;
+        Some(v)
+    }
+}
+
+/// Serialize a server store.
+pub fn encode_store(store: &Store) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + store.len() * 32);
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, store.len() as u32);
+    // Deterministic order for reproducible files.
+    let mut keys: Vec<&(u8, u32)> = store.keys().collect();
+    keys.sort();
+    for key in keys {
+        let row = &store[key];
+        buf.push(key.0);
+        put_u32(&mut buf, key.1);
+        put_u32(&mut buf, row.len() as u32);
+        for &v in row {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    buf
+}
+
+/// Deserialize a server store.
+pub fn decode_store(bytes: &[u8]) -> Option<Store> {
+    if bytes.len() < 12 || &bytes[..8] != MAGIC {
+        return None;
+    }
+    let mut r = Reader { b: bytes, pos: 8 };
+    let n = r.u32()?;
+    let mut store = Store::with_capacity(n as usize);
+    for _ in 0..n {
+        let matrix = r.u8()?;
+        let word = r.u32()?;
+        let len = r.u32()? as usize;
+        let mut row = Vec::with_capacity(len);
+        for _ in 0..len {
+            let v = r.u32()? as i32;
+            row.push(v);
+        }
+        store.insert((matrix, word), row);
+    }
+    Some(store)
+}
+
+/// Write bytes atomically (temp file + rename).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Read a snapshot file if present and well-formed.
+pub fn read_snapshot(path: &Path) -> Option<Vec<u8>> {
+    let mut f = std::fs::File::open(path).ok()?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).ok()?;
+    Some(buf)
+}
+
+/// A client's resumable state: its shard, completed iterations, and all
+/// topic assignments (`z`, plus the PDP/HDP table indicators).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientSnapshot {
+    /// Shard this client was working.
+    pub shard: usize,
+    /// Completed iterations.
+    pub iteration: u64,
+    /// Flattened topic assignments, per document.
+    pub z: Vec<Vec<u32>>,
+    /// Flattened table indicators, per document (empty for LDA).
+    pub r: Vec<Vec<bool>>,
+}
+
+/// Serialize a client snapshot.
+pub fn encode_client(s: &ClientSnapshot) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u64(&mut buf, s.shard as u64);
+    put_u64(&mut buf, s.iteration);
+    put_u32(&mut buf, s.z.len() as u32);
+    let empty: Vec<bool> = Vec::new();
+    for (i, zd) in s.z.iter().enumerate() {
+        let rd = s.r.get(i).unwrap_or(&empty);
+        put_u32(&mut buf, zd.len() as u32);
+        for &z in zd {
+            put_u32(&mut buf, z);
+        }
+        put_u32(&mut buf, rd.len() as u32);
+        let mut bits = vec![0u8; rd.len().div_ceil(8)];
+        for (i, &b) in rd.iter().enumerate() {
+            if b {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        buf.extend_from_slice(&bits);
+    }
+    buf
+}
+
+/// Deserialize a client snapshot.
+pub fn decode_client(bytes: &[u8]) -> Option<ClientSnapshot> {
+    if bytes.len() < 8 || &bytes[..8] != MAGIC {
+        return None;
+    }
+    let mut r = Reader { b: bytes, pos: 8 };
+    let shard = r.u64()? as usize;
+    let iteration = r.u64()?;
+    let ndocs = r.u32()? as usize;
+    let mut z = Vec::with_capacity(ndocs);
+    let mut rr = Vec::with_capacity(ndocs);
+    for _ in 0..ndocs {
+        let len = r.u32()? as usize;
+        let mut zd = Vec::with_capacity(len);
+        for _ in 0..len {
+            zd.push(r.u32()?);
+        }
+        let rlen = r.u32()? as usize;
+        let nbytes = rlen.div_ceil(8);
+        let mut rd = Vec::with_capacity(rlen);
+        let start = r.pos;
+        if start + nbytes > r.b.len() {
+            return None;
+        }
+        for i in 0..rlen {
+            rd.push(r.b[start + i / 8] & (1 << (i % 8)) != 0);
+        }
+        r.pos += nbytes;
+        z.push(zd);
+        rr.push(rd);
+    }
+    Some(ClientSnapshot {
+        shard,
+        iteration,
+        z,
+        r: rr,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip() {
+        let mut store = Store::new();
+        store.insert((0, 5), vec![1, -2, 3]);
+        store.insert((1, 0), vec![0; 8]);
+        store.insert((0, 1000), vec![i32::MAX, i32::MIN]);
+        let bytes = encode_store(&store);
+        let back = decode_store(&bytes).unwrap();
+        assert_eq!(store, back);
+    }
+
+    #[test]
+    fn store_rejects_garbage() {
+        assert!(decode_store(b"nonsense").is_none());
+        assert!(decode_store(&[]).is_none());
+        let mut bytes = encode_store(&Store::new());
+        bytes[0] ^= 0xFF;
+        assert!(decode_store(&bytes).is_none());
+    }
+
+    #[test]
+    fn client_roundtrip() {
+        let snap = ClientSnapshot {
+            shard: 3,
+            iteration: 17,
+            z: vec![vec![1, 2, 3], vec![], vec![9; 20]],
+            r: vec![vec![true, false, true], vec![], vec![false; 20]],
+        };
+        let bytes = encode_client(&snap);
+        let back = decode_client(&bytes).unwrap();
+        assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn atomic_write_and_read() {
+        let dir = std::env::temp_dir().join(format!("hplvm_snap_test_{}", std::process::id()));
+        let path = dir.join("s.snap");
+        let mut store = Store::new();
+        store.insert((0, 1), vec![42]);
+        write_atomic(&path, &encode_store(&store)).unwrap();
+        let bytes = read_snapshot(&path).unwrap();
+        assert_eq!(decode_store(&bytes).unwrap(), store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,110 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, describing each lowered HLO module and the
+//! static shapes it was specialized to.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Static batch dimension.
+    pub batch: usize,
+    /// Static topic (K) dimension.
+    pub k: usize,
+    /// Kernel flavor recorded by the compiler (`pallas` or `jnp`).
+    pub flavor: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// name → metadata.
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Parse `dir/manifest.json`. Missing manifest → `None` (the system
+    /// falls back to pure-rust evaluation).
+    pub fn load(dir: &Path) -> Option<ArtifactManifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(dir: &Path, text: &str) -> Option<ArtifactManifest> {
+        let j = Json::parse(text).ok()?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => return None,
+        };
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let file = meta.get("file")?.as_str()?.to_string();
+            let batch = meta.get("batch")?.as_usize()?;
+            let k = meta.get("k")?.as_usize()?;
+            let flavor = meta
+                .get("flavor")
+                .and_then(Json::as_str)
+                .unwrap_or("jnp")
+                .to_string();
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file,
+                    batch,
+                    k,
+                    flavor,
+                },
+            );
+        }
+        Some(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, name: &str) -> Option<PathBuf> {
+        self.entries.get(name).map(|m| self.dir.join(&m.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "log_dot": {"file": "log_dot.hlo.txt", "batch": 256, "k": 512, "flavor": "pallas"},
+        "phi_dense": {"file": "phi_dense.hlo.txt", "batch": 128, "k": 512, "flavor": "pallas"}
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let ld = &m.entries["log_dot"];
+        assert_eq!(ld.batch, 256);
+        assert_eq!(ld.k, 512);
+        assert_eq!(ld.flavor, "pallas");
+        assert_eq!(
+            m.path_of("log_dot").unwrap(),
+            PathBuf::from("/tmp/a/log_dot.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse(Path::new("/x"), "[]").is_none());
+        assert!(ArtifactManifest::parse(Path::new("/x"), "{bad").is_none());
+        // Missing required key.
+        assert!(
+            ArtifactManifest::parse(Path::new("/x"), r#"{"a":{"file":"f"}}"#).is_none()
+        );
+    }
+}

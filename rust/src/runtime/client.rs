@@ -1,0 +1,172 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `compile` → cached loaded executables.
+//! One compiled executable per artifact; inputs are padded to the static
+//! shapes the artifact was lowered with.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifacts::ArtifactManifest;
+use crate::Result;
+
+/// A loaded PJRT engine holding compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions performed (diagnostics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load from an artifacts directory (with `manifest.json`). Returns
+    /// `Err` when PJRT is unavailable, `Ok(None)` when no artifacts exist.
+    pub fn load(dir: &Path) -> Result<Option<Engine>> {
+        let manifest = match ArtifactManifest::load(dir) {
+            Some(m) => m,
+            None => return Ok(None),
+        };
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Some(Engine {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        }))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest loaded at startup.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    fn executable(&self, name: &str) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self
+            .manifest
+            .path_of(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Can the `log_dot` artifact serve models with `k` topics?
+    pub fn supports_log_dot(&self, k: usize) -> bool {
+        self.manifest
+            .entries
+            .get("log_dot")
+            .map(|m| k <= m.k)
+            .unwrap_or(false)
+    }
+
+    /// `out[b] = log(Σ_t θ[b,t]·φ[b,t])` — the perplexity scoring kernel.
+    ///
+    /// `rows ≤` the artifact batch; `k ≤` the artifact K. Inputs are
+    /// zero-padded to the static shapes (zero padding is exact for a
+    /// sum-reduce). Returns `rows` values.
+    pub fn log_dot(&self, theta: &[f32], phi: &[f32], rows: usize, k: usize) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .entries
+            .get("log_dot")
+            .ok_or_else(|| anyhow::anyhow!("no log_dot artifact"))?
+            .clone();
+        anyhow::ensure!(rows <= meta.batch, "batch {} > artifact {}", rows, meta.batch);
+        anyhow::ensure!(k <= meta.k, "k {} > artifact {}", k, meta.k);
+        anyhow::ensure!(theta.len() == rows * k && phi.len() == rows * k, "shape mismatch");
+        self.executable("log_dot")?;
+
+        // Pad [rows, k] → [meta.batch, meta.k]. Padded rows get θ·φ = 1 at
+        // slot 0 so log() stays finite (they're sliced away below).
+        let mut tpad = vec![0f32; meta.batch * meta.k];
+        let mut ppad = vec![0f32; meta.batch * meta.k];
+        for r in 0..meta.batch {
+            if r < rows {
+                tpad[r * meta.k..r * meta.k + k].copy_from_slice(&theta[r * k..(r + 1) * k]);
+                ppad[r * meta.k..r * meta.k + k].copy_from_slice(&phi[r * k..(r + 1) * k]);
+            } else {
+                tpad[r * meta.k] = 1.0;
+                ppad[r * meta.k] = 1.0;
+            }
+        }
+        let tl = xla::Literal::vec1(&tpad).reshape(&[meta.batch as i64, meta.k as i64])?;
+        let pl = xla::Literal::vec1(&ppad).reshape(&[meta.batch as i64, meta.k as i64])?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get("log_dot").unwrap();
+        let result = exe.execute::<xla::Literal>(&[tl, pl])?[0][0].to_literal_sync()?;
+        drop(exes);
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        anyhow::ensure!(values.len() == meta.batch, "bad output length");
+        Ok(values[..rows].to_vec())
+    }
+
+    /// `phi[b,t] = (n[b,t] + β) / (n_t[t] + β̄)` — the dense-proposal /
+    /// φ-normalization kernel over a row batch.
+    pub fn phi_dense(
+        &self,
+        counts: &[f32],
+        totals: &[f32],
+        beta: f32,
+        rows: usize,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .entries
+            .get("phi_dense")
+            .ok_or_else(|| anyhow::anyhow!("no phi_dense artifact"))?
+            .clone();
+        anyhow::ensure!(rows <= meta.batch && k <= meta.k, "shape exceeds artifact");
+        anyhow::ensure!(counts.len() == rows * k && totals.len() == k, "shape mismatch");
+        self.executable("phi_dense")?;
+
+        let mut cpad = vec![0f32; meta.batch * meta.k];
+        for r in 0..rows {
+            cpad[r * meta.k..r * meta.k + k].copy_from_slice(&counts[r * k..(r + 1) * k]);
+        }
+        // Padded topic slots get total = 1 to avoid 0/0.
+        let mut tpad = vec![1f32; meta.k];
+        tpad[..k].copy_from_slice(totals);
+        let cl = xla::Literal::vec1(&cpad).reshape(&[meta.batch as i64, meta.k as i64])?;
+        let tl = xla::Literal::vec1(&tpad).reshape(&[meta.k as i64])?;
+        let bl = xla::Literal::from(beta);
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get("phi_dense").unwrap();
+        let result = exe.execute::<xla::Literal>(&[cl, tl, bl])?[0][0].to_literal_sync()?;
+        drop(exes);
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        let mut trimmed = Vec::with_capacity(rows * k);
+        for r in 0..rows {
+            trimmed.extend_from_slice(&values[r * meta.k..r * meta.k + k]);
+        }
+        Ok(trimmed)
+    }
+}
+
+// PJRT-dependent tests live in rust/tests/runtime_pjrt.rs (they need the
+// artifacts built by `make artifacts`); manifest-only logic is tested in
+// `artifacts.rs`.

@@ -1,0 +1,15 @@
+//! PJRT runtime bridge: load the AOT artifacts `python/compile/aot.py`
+//! produced (HLO **text** — see DESIGN.md §Offline-environment
+//! deviations), compile them once on the CPU PJRT client, and serve the
+//! evaluation hot path with **no python anywhere at runtime**.
+
+pub mod artifacts;
+pub mod client;
+pub mod service;
+
+pub use artifacts::{ArtifactManifest, ArtifactMeta};
+pub use client::Engine;
+pub use service::{DenseEval, EvalService};
+
+/// Fixed batch size the `log_dot` (perplexity) artifact was lowered with.
+pub const LOG_DOT_BATCH: usize = 256;

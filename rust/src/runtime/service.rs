@@ -1,0 +1,139 @@
+//! The evaluation service: a dedicated thread owning the PJRT [`Engine`]
+//! (the `xla` crate's client is not `Send`/`Sync` — it holds `Rc`s over
+//! FFI handles), exposed to worker threads through a cloneable,
+//! thread-safe request/reply handle.
+//!
+//! This also matches the deployment shape: one compiled executable set on
+//! the leader process, many sampling threads asking it to score batches.
+
+use std::path::Path;
+use std::sync::mpsc;
+
+use super::client::Engine;
+use crate::Result;
+
+/// A dense-evaluation backend (the PJRT engine or its service proxy).
+pub trait DenseEval: Send + Sync {
+    /// Can `log_dot` serve `k`-topic models?
+    fn supports_log_dot(&self, k: usize) -> bool;
+    /// `out[b] = log Σ_t θ[b,t]·φ[b,t]`.
+    fn log_dot(&self, theta: &[f32], phi: &[f32], rows: usize, k: usize) -> Result<Vec<f32>>;
+}
+
+enum Req {
+    LogDot {
+        theta: Vec<f32>,
+        phi: Vec<f32>,
+        rows: usize,
+        k: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Supports {
+        k: usize,
+        reply: mpsc::Sender<bool>,
+    },
+}
+
+/// Thread-safe handle to the engine thread.
+pub struct EvalService {
+    tx: std::sync::Mutex<mpsc::Sender<Req>>,
+    // The service thread exits when the last sender drops.
+    _handle: std::thread::JoinHandle<()>,
+}
+
+impl EvalService {
+    /// Spawn the service, loading artifacts from `dir` on the service
+    /// thread. `Ok(None)` when no artifacts exist.
+    pub fn spawn(dir: &Path) -> Result<Option<EvalService>> {
+        let dir = dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (load_tx, load_rx) = mpsc::channel::<std::result::Result<bool, String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-eval".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(Some(e)) => {
+                        let _ = load_tx.send(Ok(true));
+                        e
+                    }
+                    Ok(None) => {
+                        let _ = load_tx.send(Ok(false));
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = load_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::LogDot {
+                            theta,
+                            phi,
+                            rows,
+                            k,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.log_dot(&theta, &phi, rows, k));
+                        }
+                        Req::Supports { k, reply } => {
+                            let _ = reply.send(engine.supports_log_dot(k));
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt-eval");
+        match load_rx.recv() {
+            Ok(Ok(true)) => Ok(Some(EvalService {
+                tx: std::sync::Mutex::new(tx),
+                _handle: handle,
+            })),
+            Ok(Ok(false)) => Ok(None),
+            Ok(Err(e)) => Err(anyhow::anyhow!("PJRT load failed: {e}")),
+            Err(_) => Err(anyhow::anyhow!("PJRT service thread died during load")),
+        }
+    }
+
+    fn send(&self, req: Req) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("pjrt-eval thread gone");
+    }
+}
+
+impl DenseEval for EvalService {
+    fn supports_log_dot(&self, k: usize) -> bool {
+        let (reply, rx) = mpsc::channel();
+        self.send(Req::Supports { k, reply });
+        rx.recv().unwrap_or(false)
+    }
+
+    fn log_dot(&self, theta: &[f32], phi: &[f32], rows: usize, k: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Req::LogDot {
+            theta: theta.to_vec(),
+            phi: phi.to_vec(),
+            rows,
+            k,
+            reply,
+        });
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("pjrt-eval thread died"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_without_artifacts_is_none() {
+        let dir = std::env::temp_dir().join(format!("hplvm_noart_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = EvalService::spawn(&dir).unwrap();
+        assert!(svc.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! Walker's alias method (Vose's `O(l)` construction) — §3.1 of the paper.
+//!
+//! Preprocess an arbitrary discrete distribution over `l` outcomes into a
+//! table of `(threshold, alias)` pairs; afterwards each draw costs two
+//! uniforms and one comparison — `O(1)`. If the distribution is sampled at
+//! least `l` times before it changes, the build cost amortizes away, which
+//! is exactly the regime the stale-proposal Metropolis-Hastings scheme
+//! (§3.3) engineers.
+
+use crate::util::rng::Rng;
+
+/// An immutable alias table over `0..len` outcomes.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    /// Acceptance threshold per slot, already scaled to [0,1].
+    prob: Vec<f64>,
+    /// Alias outcome per slot.
+    alias: Vec<u32>,
+    /// Total (unnormalized) weight the table was built from.
+    total: f64,
+}
+
+impl AliasTable {
+    /// Build from (possibly unnormalized) non-negative weights. `O(l)`.
+    ///
+    /// Zero-weight outcomes are representable and will never be drawn
+    /// (unless *all* weights are zero, in which case the table degenerates
+    /// to uniform — a deliberate choice so samplers never panic on an
+    /// all-zero transient state caused by relaxed consistency).
+    pub fn build(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty support");
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return AliasTable {
+                prob: vec![1.0; n],
+                alias: (0..n as u32).collect(),
+                total: 0.0,
+            };
+        }
+        let scale = n as f64 / total;
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        // Vose's two-stack partition.
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        let mut prob = vec![1.0f64; n];
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers: both stacks drain to threshold 1.
+        AliasTable { prob, alias, total }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True iff the support is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Total weight at build time (0 for the degenerate all-zero table).
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Draw an outcome in `O(1)`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chi2_ok(weights: &[f64], draws: usize, seed: u64) -> bool {
+        let t = AliasTable::build(weights);
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0u64; weights.len()];
+        for _ in 0..draws {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        let mut chi2 = 0.0;
+        let mut dof = 0usize;
+        for (i, &w) in weights.iter().enumerate() {
+            let e = w / total * draws as f64;
+            if e < 5.0 {
+                continue;
+            }
+            chi2 += (counts[i] as f64 - e).powi(2) / e;
+            dof += 1;
+        }
+        // Very loose bound: χ² < dof + 6·sqrt(2·dof) (far beyond p=0.001).
+        chi2 < dof as f64 + 6.0 * (2.0 * dof as f64).sqrt()
+    }
+
+    #[test]
+    fn matches_distribution_uniform() {
+        assert!(chi2_ok(&[1.0; 64], 200_000, 1));
+    }
+
+    #[test]
+    fn matches_distribution_skewed() {
+        let w: Vec<f64> = (0..100).map(|i| 1.0 / (i + 1) as f64).collect();
+        assert!(chi2_ok(&w, 300_000, 2));
+    }
+
+    #[test]
+    fn zero_weight_outcomes_never_drawn() {
+        let w = [0.0, 5.0, 0.0, 1.0, 0.0];
+        let t = AliasTable::build(&w);
+        let mut rng = Rng::new(3);
+        for _ in 0..50_000 {
+            let s = t.sample(&mut rng);
+            assert!(s == 1 || s == 3, "drew zero-weight outcome {s}");
+        }
+    }
+
+    #[test]
+    fn degenerate_all_zero_is_uniform_not_panic() {
+        let t = AliasTable::build(&[0.0, 0.0, 0.0]);
+        assert_eq!(t.total(), 0.0);
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 3];
+        for _ in 0..1000 {
+            seen[t.sample(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::build(&[3.5]);
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn build_is_linear_probe() {
+        // Structural sanity: thresholds in [0,1], aliases in range.
+        let w: Vec<f64> = (0..1000).map(|i| ((i * 37) % 97) as f64 + 0.1).collect();
+        let t = AliasTable::build(&w);
+        assert!(t.prob.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
+        assert!(t.alias.iter().all(|&a| (a as usize) < t.len()));
+    }
+}

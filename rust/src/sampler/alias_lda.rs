@@ -1,0 +1,443 @@
+//! AliasLDA: the Metropolis-Hastings-Walker sampler of §2.1/§3.
+//!
+//! Eq. (4) splits the LDA conditional into
+//!
+//! ```text
+//! p(z=t|rest) ∝ n_td·(n_tw+β)/(n_t+β̄)     — sparse, k_d terms, kept EXACT
+//!            + α·(n_tw+β)/(n_t+β̄)         — dense, approximated by a
+//!                                            STALE alias table per word
+//! ```
+//!
+//! Each draw: a biased coin picks the sparse component (`O(k_d)` exact
+//! categorical) or the stale dense component (`O(1)` alias draw); a
+//! Metropolis-Hastings accept/reject against the *true* conditional
+//! corrects the staleness (eq. 7). The per-word alias table is rebuilt
+//! after `K` draws — amortizing its `O(K)` build to `O(1)` per token — or
+//! immediately after a parameter-server sync rewrites the word's row
+//! (§3.3: "whenever we receive a global parameter update ... recompute the
+//! proposal distribution").
+
+use super::alias::AliasTable;
+use super::counts::CountMatrix;
+use super::doc_state::DocState;
+use super::mh::mh_chain;
+use super::DocSampler;
+use crate::corpus::doc::Document;
+use crate::util::rng::Rng;
+
+/// Stale per-word dense proposal: alias table + the weights it was built
+/// from (needed to evaluate `q(i)` in the MH ratio) + a rebuild budget.
+struct WordProposal {
+    table: AliasTable,
+    /// Stale dense weights q_w(t) = α·(n_tw+β)/(n_t+β̄).
+    qw: Box<[f64]>,
+    /// Σ_t qw(t).
+    qsum: f64,
+    /// Draws remaining before a rebuild.
+    budget: u32,
+}
+
+/// The AliasLDA sampler.
+pub struct AliasLda {
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    beta_bar: f64,
+    /// MH chain length per token (1–2 suffice; see §3.3).
+    pub mh_steps: usize,
+    /// Shard documents.
+    pub docs: Vec<Document>,
+    /// Latent state.
+    pub state: DocState,
+    /// Shared word-topic counts (replica synced via the parameter server).
+    pub nwt: CountMatrix,
+    proposals: Vec<Option<WordProposal>>,
+    /// Diagnostics: MH proposals / acceptances since construction.
+    pub mh_proposed: u64,
+    /// Diagnostics: accepted MH moves.
+    pub mh_accepted: u64,
+    /// Scratch buffers (avoid per-token allocation on the hot path).
+    scratch_topics: Vec<u32>,
+    scratch_weights: Vec<f64>,
+}
+
+impl AliasLda {
+    /// Create with random topic initialization.
+    pub fn new(
+        docs: Vec<Document>,
+        vocab: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::new_with_init(docs, vocab, k, alpha, beta, None, rng)
+    }
+
+    /// Create, taking topic assignments from `init` where provided
+    /// (client failover restores from a snapshot this way, §5.4).
+    pub fn new_with_init(
+        docs: Vec<Document>,
+        vocab: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        init: Option<&[Vec<u32>]>,
+        rng: &mut Rng,
+    ) -> Self {
+        let mut s = AliasLda {
+            k,
+            alpha,
+            beta,
+            beta_bar: beta * vocab as f64,
+            mh_steps: 2,
+            state: DocState::new(docs.len()),
+            nwt: CountMatrix::new(vocab, k),
+            proposals: (0..vocab).map(|_| None).collect(),
+            mh_proposed: 0,
+            mh_accepted: 0,
+            scratch_topics: Vec::with_capacity(64),
+            scratch_weights: Vec::with_capacity(64),
+            docs,
+        };
+        for d in 0..s.docs.len() {
+            let tokens = s.docs[d].tokens.clone();
+            s.state.z[d] = tokens
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| {
+                    let t = init
+                        .and_then(|z| z.get(d).and_then(|zd| zd.get(i)).copied())
+                        .filter(|&t| (t as usize) < k)
+                        .unwrap_or_else(|| rng.below(k) as u32);
+                    s.state.n_dt[d].inc(t);
+                    s.nwt.inc(w, t as usize, 1);
+                    t
+                })
+                .collect();
+        }
+        s
+    }
+
+    #[inline]
+    fn denom(&self, t: usize) -> f64 {
+        (self.nwt.total(t) as f64).max(0.0) + self.beta_bar
+    }
+
+    /// Build (or rebuild) the stale dense proposal for word `w` from the
+    /// *current* replica. `O(K)`.
+    fn rebuild_proposal(&mut self, w: u32) {
+        let mut qw = Vec::with_capacity(self.k);
+        let row = self.nwt.row(w);
+        for t in 0..self.k {
+            let nwt = row.map_or(0, |r| r[t]).max(0) as f64;
+            qw.push(self.alpha * (nwt + self.beta) / self.denom(t));
+        }
+        let qsum: f64 = qw.iter().sum();
+        let table = AliasTable::build(&qw);
+        self.proposals[w as usize] = Some(WordProposal {
+            table,
+            qw: qw.into_boxed_slice(),
+            qsum,
+            // Amortize the O(K) build over K draws → O(1) per draw.
+            budget: self.k as u32,
+        });
+    }
+
+    /// Drop the stale proposal for `w` — called by the sync layer after a
+    /// pull rewrites the row (§3.3).
+    pub fn invalidate_word(&mut self, w: u32) {
+        self.proposals[w as usize] = None;
+    }
+
+    /// Drop all stale proposals (bulk sync).
+    pub fn invalidate_all(&mut self) {
+        for p in self.proposals.iter_mut() {
+            *p = None;
+        }
+    }
+
+    /// Observed MH acceptance rate (diagnostics; ≈1 when proposals fresh).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.mh_proposed == 0 {
+            1.0
+        } else {
+            self.mh_accepted as f64 / self.mh_proposed as f64
+        }
+    }
+
+    fn sample_token(&mut self, d: usize, i: usize, rng: &mut Rng) -> (u32, usize) {
+        let w = self.docs[d].tokens[i];
+        let old = self.state.z[d][i];
+
+        // Remove the token.
+        self.state.n_dt[d].dec(old);
+        self.nwt.inc(w, old as usize, -1);
+
+        // Ensure a live proposal table, consuming budget.
+        let need_rebuild = match &self.proposals[w as usize] {
+            Some(p) => p.budget == 0,
+            None => true,
+        };
+        if need_rebuild {
+            self.rebuild_proposal(w);
+        }
+
+        // Sparse component: exact, recomputed fresh each token. The word
+        // row is borrowed ONCE per token — `get` per topic would re-deref
+        // the row Option every call (§Perf: +25% at K=1600).
+        self.scratch_topics.clear();
+        self.scratch_weights.clear();
+        let mut sparse_sum = 0.0;
+        let wrow = self.nwt.row(w);
+        for (t, c) in self.state.n_dt[d].iter() {
+            let nwt = wrow.map_or(0, |r| r[t as usize]).max(0) as f64;
+            let wgt = c as f64 * (nwt + self.beta) / self.denom(t as usize);
+            self.scratch_topics.push(t);
+            self.scratch_weights.push(wgt);
+            sparse_sum += wgt;
+        }
+        let qsum = self.proposals[w as usize].as_ref().unwrap().qsum;
+        let total = sparse_sum + qsum;
+
+        // Mixture proposal: q(t) = [sparse_exact(t) + stale_dense(t)] / total.
+        let sparse_topics = &self.scratch_topics;
+        let sparse_weights = &self.scratch_weights;
+        let proposals = &self.proposals;
+        let state = &self.state;
+        let nwt_m = &self.nwt;
+        let alpha = self.alpha;
+        let beta = self.beta;
+        let beta_bar = self.beta_bar;
+        let denom = |t: usize| (nwt_m.total(t) as f64).max(0.0) + beta_bar;
+        let q_of = |t: usize| {
+            let ndt = state.n_dt[d].get(t as u32) as f64;
+            let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
+            let sparse = ndt * (nwt + beta) / denom(t);
+            sparse + proposals[w as usize].as_ref().map_or(0.0, |p| p.qw[t])
+        };
+        let p_of = |t: usize| {
+            let ndt = state.n_dt[d].get(t as u32) as f64;
+            let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
+            (ndt + alpha) * (nwt + beta) / denom(t)
+        };
+
+        let mut draws = 0u32;
+        let propose = |r: &mut Rng| {
+            // Biased coin between sparse-exact and stale-dense (§2.1).
+            if total > 0.0 && r.f64() * total < sparse_sum {
+                // O(k_d) categorical over the sparse component.
+                let mut u = r.f64() * sparse_sum;
+                let mut idx = sparse_topics.len().saturating_sub(1);
+                for (j, &wgt) in sparse_weights.iter().enumerate() {
+                    u -= wgt;
+                    if u <= 0.0 {
+                        idx = j;
+                        break;
+                    }
+                }
+                let t = sparse_topics.get(idx).copied().unwrap_or(0) as usize;
+                (t, q_of(t))
+            } else {
+                // O(1) alias draw from the stale dense component.
+                let p = proposals[w as usize].as_ref().unwrap();
+                let t = p.table.sample(r);
+                draws += 1;
+                (t, q_of(t))
+            }
+        };
+
+        let (new_t, accepted) = mh_chain(Some(old as usize), self.mh_steps, propose, q_of, p_of, rng);
+        self.mh_proposed += self.mh_steps as u64;
+        self.mh_accepted += accepted as u64;
+
+        // Consume alias budget for the draws actually taken from the table.
+        if draws > 0 {
+            if let Some(p) = self.proposals[w as usize].as_mut() {
+                p.budget = p.budget.saturating_sub(draws);
+            }
+        }
+
+        // Re-add the token.
+        let new_t32 = new_t as u32;
+        self.state.z[d][i] = new_t32;
+        self.state.n_dt[d].inc(new_t32);
+        self.nwt.inc(w, new_t, 1);
+        (new_t32, accepted)
+    }
+}
+
+impl crate::eval::perplexity::TopicModelView for AliasLda {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        (self.nwt.get(w, t).max(0) as f64 + self.beta) / self.denom(t)
+    }
+    fn doc_prior(&self, _t: usize) -> f64 {
+        self.alpha
+    }
+}
+
+impl DocSampler for AliasLda {
+    fn sample_doc(&mut self, d: usize, rng: &mut Rng) -> usize {
+        let n = self.docs[d].tokens.len();
+        let mut accepted = 0usize;
+        for i in 0..n {
+            accepted += self.sample_token(d, i, rng).1;
+        }
+        accepted
+    }
+
+    fn num_topics(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "AliasLDA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::CorpusConfig;
+
+    fn make(n_docs: usize, k: usize, seed: u64) -> (AliasLda, Rng) {
+        let (c, _) = CorpusConfig {
+            n_docs,
+            vocab_size: 300,
+            n_topics: k,
+            doc_len_mean: 25.0,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let s = AliasLda::new(c.docs, 300, k, 0.1, 0.01, &mut rng);
+        (s, rng)
+    }
+
+    fn check_invariants(s: &AliasLda) {
+        let mut recount = CountMatrix::new(s.nwt.vocab(), s.k);
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                recount.inc_local(w, s.state.z[d][i] as usize, 1);
+            }
+            assert_eq!(s.state.n_dt[d].total() as usize, doc.tokens.len());
+        }
+        for w in 0..s.nwt.vocab() as u32 {
+            for t in 0..s.k {
+                assert_eq!(s.nwt.get(w, t), recount.get(w, t), "nwt[{w},{t}]");
+            }
+        }
+        assert_eq!(s.nwt.totals(), recount.totals());
+    }
+
+    #[test]
+    fn counts_consistent_after_sweeps() {
+        let (mut s, mut rng) = make(40, 8, 1);
+        for _ in 0..3 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        check_invariants(&s);
+    }
+
+    #[test]
+    fn acceptance_rate_is_high() {
+        let (mut s, mut rng) = make(80, 10, 2);
+        for _ in 0..3 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let rate = s.acceptance_rate();
+        assert!(rate > 0.8, "MH acceptance rate {rate} suspiciously low");
+    }
+
+    #[test]
+    fn training_improves_likelihood() {
+        let (mut s, mut rng) = make(150, 10, 3);
+        let ll0 = joint_ll(&s);
+        for _ in 0..15 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let ll1 = joint_ll(&s);
+        assert!(ll1 > ll0 + 100.0, "ll {ll0} -> {ll1}");
+    }
+
+    #[test]
+    fn invalidation_is_safe_mid_training() {
+        let (mut s, mut rng) = make(40, 8, 4);
+        for sweep in 0..4 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+            if sweep % 2 == 0 {
+                s.invalidate_all();
+            }
+        }
+        check_invariants(&s);
+    }
+
+    /// AliasLDA and SparseLDA sample the *same* posterior: after enough
+    /// sweeps on the same corpus their joint likelihoods should land in the
+    /// same range.
+    #[test]
+    fn agrees_with_sparse_lda_posterior() {
+        let (corpus, _) = CorpusConfig {
+            n_docs: 120,
+            vocab_size: 250,
+            n_topics: 8,
+            doc_len_mean: 30.0,
+            seed: 9,
+            ..Default::default()
+        }
+        .generate();
+        let mut rng1 = Rng::new(100);
+        let mut rng2 = Rng::new(200);
+        let mut a = AliasLda::new(corpus.docs.clone(), 250, 8, 0.1, 0.01, &mut rng1);
+        let mut y =
+            crate::sampler::sparse_lda::SparseLda::new(corpus.docs, 250, 8, 0.1, 0.01, &mut rng2);
+        for _ in 0..25 {
+            for d in 0..a.docs.len() {
+                a.sample_doc(d, &mut rng1);
+                y.sample_doc(d, &mut rng2);
+            }
+        }
+        let lla = joint_ll(&a);
+        let lly = joint_ll_sparse(&y);
+        let rel = (lla - lly).abs() / lly.abs();
+        assert!(rel < 0.05, "posterior mismatch: alias {lla} vs sparse {lly}");
+    }
+
+    fn joint_ll(s: &AliasLda) -> f64 {
+        let mut ll = 0.0;
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                let t = s.state.z[d][i] as usize;
+                let phi = (s.nwt.get(w, t) as f64 + s.beta)
+                    / (s.nwt.total(t) as f64 + s.beta_bar);
+                ll += phi.max(1e-300).ln();
+            }
+        }
+        ll
+    }
+
+    fn joint_ll_sparse(s: &crate::sampler::sparse_lda::SparseLda) -> f64 {
+        let mut ll = 0.0;
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                let t = s.state.z[d][i] as usize;
+                let phi = (s.nwt.get(w, t) as f64 + 0.01)
+                    / (s.nwt.total(t) as f64 + 0.01 * 250.0);
+                ll += phi.max(1e-300).ln();
+            }
+        }
+        ll
+    }
+}

@@ -1,0 +1,271 @@
+//! Shared sufficient-statistics matrices.
+//!
+//! A [`CountMatrix`] is a client's local replica of one shared statistic
+//! (LDA: `n_tw`; PDP: `m_tw` and `s_tw`; HDP adds table counts). Rows are
+//! word-indexed, `K`-wide, lazily allocated (a shard only touches its own
+//! vocabulary slice), and every mutation is mirrored into a **delta log**
+//! that the parameter-server client drains into batched row pushes (§5.3
+//! "batched communication").
+//!
+//! The replica-merge rule is the paper's: the server aggregates deltas from
+//! all clients; a pull overwrites the local row with the server value
+//! *plus* any still-unflushed local deltas, so local Gibbs moves are never
+//! lost (eventual consistency, §5.3).
+
+use std::collections::HashMap;
+
+/// Client replica of a `V × K` count matrix with per-topic aggregates and
+/// a delta log.
+#[derive(Clone, Debug)]
+pub struct CountMatrix {
+    k: usize,
+    rows: Vec<Option<Box<[i32]>>>,
+    /// Per-topic aggregate (`n_t` in LDA, `m_t`/`s_t` in PDP).
+    totals: Vec<i64>,
+    /// Unflushed local updates per touched row.
+    deltas: HashMap<u32, Box<[i32]>>,
+}
+
+impl CountMatrix {
+    /// Empty matrix over `vocab` words × `k` topics.
+    pub fn new(vocab: usize, k: usize) -> Self {
+        CountMatrix {
+            k,
+            rows: vec![None; vocab],
+            totals: vec![0; k],
+            deltas: HashMap::new(),
+        }
+    }
+
+    /// Topic count `K`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Read one cell.
+    #[inline]
+    pub fn get(&self, word: u32, topic: usize) -> i32 {
+        match &self.rows[word as usize] {
+            Some(r) => r[topic],
+            None => 0,
+        }
+    }
+
+    /// Borrow a row (`None` if the word was never touched).
+    #[inline]
+    pub fn row(&self, word: u32) -> Option<&[i32]> {
+        self.rows[word as usize].as_deref()
+    }
+
+    /// Per-topic aggregates (`n_t`).
+    #[inline]
+    pub fn totals(&self) -> &[i64] {
+        &self.totals
+    }
+
+    /// Aggregate for one topic.
+    #[inline]
+    pub fn total(&self, topic: usize) -> i64 {
+        self.totals[topic]
+    }
+
+    /// Grand total over all topics.
+    pub fn grand_total(&self) -> i64 {
+        self.totals.iter().sum()
+    }
+
+    fn ensure_row(&mut self, word: u32) -> &mut [i32] {
+        let slot = &mut self.rows[word as usize];
+        if slot.is_none() {
+            *slot = Some(vec![0i32; self.k].into_boxed_slice());
+        }
+        slot.as_deref_mut().unwrap()
+    }
+
+    /// Apply a local Gibbs move: `cell += delta`, mirrored into the delta
+    /// log and the per-topic aggregate.
+    #[inline]
+    pub fn inc(&mut self, word: u32, topic: usize, delta: i32) {
+        let k = self.k;
+        let row = self.ensure_row(word);
+        row[topic] += delta;
+        self.totals[topic] += delta as i64;
+        let d = self
+            .deltas
+            .entry(word)
+            .or_insert_with(|| vec![0i32; k].into_boxed_slice());
+        d[topic] += delta;
+    }
+
+    /// Apply a local move *without* recording a delta (used for local-only
+    /// statistics and for replaying a snapshot).
+    #[inline]
+    pub fn inc_local(&mut self, word: u32, topic: usize, delta: i32) {
+        let row = self.ensure_row(word);
+        row[topic] += delta;
+        self.totals[topic] += delta as i64;
+    }
+
+    /// Drain the delta log into `(word, row-delta)` batches for pushing.
+    /// Zero rows are dropped.
+    pub fn drain_deltas(&mut self) -> Vec<(u32, Box<[i32]>)> {
+        let mut out: Vec<(u32, Box<[i32]>)> = self
+            .deltas
+            .drain()
+            .filter(|(_, d)| d.iter().any(|&x| x != 0))
+            .collect();
+        out.sort_unstable_by_key(|(w, _)| *w);
+        out
+    }
+
+    /// Number of rows currently carrying unflushed deltas.
+    pub fn pending_rows(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// Re-queue a delta row the communication filter chose to retain
+    /// (folds into any newer pending deltas; does not touch counts).
+    pub fn requeue_delta(&mut self, word: u32, row: Box<[i32]>) {
+        let k = self.k;
+        let d = self
+            .deltas
+            .entry(word)
+            .or_insert_with(|| vec![0i32; k].into_boxed_slice());
+        for (acc, v) in d.iter_mut().zip(row.iter()) {
+            *acc += v;
+        }
+    }
+
+    /// Absorb a pulled server row: replica := server + unflushed local
+    /// deltas (so local moves aren't erased), aggregates fixed up.
+    pub fn apply_pull(&mut self, word: u32, server_row: &[i32]) {
+        assert_eq!(server_row.len(), self.k);
+        let pending: Option<Box<[i32]>> = self.deltas.get(&word).cloned();
+        self.ensure_row(word);
+        let row = self.rows[word as usize].as_deref_mut().unwrap();
+        for (t, cell) in row.iter_mut().enumerate() {
+            let newv = server_row[t] + pending.as_ref().map_or(0, |p| p[t]);
+            let old = *cell;
+            *cell = newv;
+            self.totals[t] += (newv - old) as i64;
+        }
+    }
+
+    /// Iterate allocated rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = (u32, &[i32])> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(w, r)| r.as_deref().map(|r| (w as u32, r)))
+    }
+
+    /// Recompute per-topic aggregates from scratch (consistency repair /
+    /// after bulk row replacement).
+    pub fn rebuild_totals(&mut self) {
+        let mut totals = vec![0i64; self.k];
+        for row in self.rows.iter().flatten() {
+            for (t, &c) in row.iter().enumerate() {
+                totals[t] += c as i64;
+            }
+        }
+        self.totals = totals;
+    }
+
+    /// Average number of non-zero topics per allocated word row — the
+    /// "average topics per word" panel of the paper's figures.
+    pub fn avg_topics_per_word(&self) -> f64 {
+        let mut words = 0u64;
+        let mut nonzero = 0u64;
+        for row in self.rows.iter().flatten() {
+            words += 1;
+            nonzero += row.iter().filter(|&&c| c > 0).count() as u64;
+        }
+        if words == 0 {
+            0.0
+        } else {
+            nonzero as f64 / words as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_and_totals() {
+        let mut m = CountMatrix::new(10, 4);
+        m.inc(3, 1, 2);
+        m.inc(3, 2, 1);
+        m.inc(7, 1, 1);
+        assert_eq!(m.get(3, 1), 2);
+        assert_eq!(m.get(3, 0), 0);
+        assert_eq!(m.total(1), 3);
+        assert_eq!(m.grand_total(), 4);
+        assert_eq!(m.row(0), None);
+    }
+
+    #[test]
+    fn drain_deltas_batches_rows() {
+        let mut m = CountMatrix::new(10, 3);
+        m.inc(5, 0, 1);
+        m.inc(5, 2, -1);
+        m.inc(2, 1, 4);
+        m.inc(9, 1, 1);
+        m.inc(9, 1, -1); // cancels to zero → dropped
+        let d = m.drain_deltas();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].0, 2);
+        assert_eq!(&*d[0].1, &[0, 4, 0]);
+        assert_eq!(d[1].0, 5);
+        assert_eq!(&*d[1].1, &[1, 0, -1]);
+        assert!(m.drain_deltas().is_empty());
+        // Matrix content unaffected by draining.
+        assert_eq!(m.get(5, 0), 1);
+    }
+
+    #[test]
+    fn apply_pull_preserves_unflushed_local_moves() {
+        let mut m = CountMatrix::new(4, 2);
+        m.inc(1, 0, 3); // unflushed local delta
+        m.apply_pull(1, &[10, 5]); // server view
+        assert_eq!(m.get(1, 0), 13); // server + pending local
+        assert_eq!(m.get(1, 1), 5);
+        assert_eq!(m.total(0), 13);
+        assert_eq!(m.total(1), 5);
+
+        // After flushing, a pull overwrites exactly.
+        let _ = m.drain_deltas();
+        m.apply_pull(1, &[20, 6]);
+        assert_eq!(m.get(1, 0), 20);
+        assert_eq!(m.total(0), 20);
+    }
+
+    #[test]
+    fn rebuild_totals_matches_incremental() {
+        let mut m = CountMatrix::new(20, 5);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..500 {
+            let w = rng.below(20) as u32;
+            let t = rng.below(5);
+            m.inc(w, t, 1);
+        }
+        let inc_totals = m.totals().to_vec();
+        m.rebuild_totals();
+        assert_eq!(m.totals(), &inc_totals[..]);
+    }
+
+    #[test]
+    fn topics_per_word_counts_nonzero() {
+        let mut m = CountMatrix::new(5, 4);
+        m.inc(0, 0, 1);
+        m.inc(0, 1, 1);
+        m.inc(1, 2, 5);
+        assert!((m.avg_topics_per_word() - 1.5).abs() < 1e-12);
+    }
+}

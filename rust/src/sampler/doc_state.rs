@@ -1,0 +1,188 @@
+//! Per-document latent state: topic assignments and `k_d`-sparse counts.
+//!
+//! `n_td` — the number of tokens of document `d` in topic `t` — "remains
+//! sparse, regardless of corpus size" (§2.1). The sparse term of eq. (4)
+//! iterates exactly the non-zero entries, so this container optimizes for
+//! iteration over a handful of `(topic, count)` pairs with `O(1)` inc/dec.
+
+/// Sparse non-negative counts over topics, stored as unsorted
+/// `(topic, count)` pairs (k_d is small, so linear probes beat hashing).
+#[derive(Clone, Debug, Default)]
+pub struct SparseCounts {
+    entries: Vec<(u32, u32)>,
+}
+
+impl SparseCounts {
+    /// Empty.
+    pub fn new() -> Self {
+        SparseCounts {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Number of non-zero topics (`k_d`).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Count for a topic (0 when absent).
+    #[inline]
+    pub fn get(&self, topic: u32) -> u32 {
+        self.entries
+            .iter()
+            .find(|&&(t, _)| t == topic)
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    /// Increment a topic's count.
+    #[inline]
+    pub fn inc(&mut self, topic: u32) {
+        for e in self.entries.iter_mut() {
+            if e.0 == topic {
+                e.1 += 1;
+                return;
+            }
+        }
+        self.entries.push((topic, 1));
+    }
+
+    /// Decrement a topic's count; removes the entry when it reaches zero.
+    /// Panics (debug) on decrementing an absent topic — that's a sampler
+    /// bookkeeping bug, not a consistency artifact.
+    #[inline]
+    pub fn dec(&mut self, topic: u32) {
+        for i in 0..self.entries.len() {
+            if self.entries[i].0 == topic {
+                self.entries[i].1 -= 1;
+                if self.entries[i].1 == 0 {
+                    self.entries.swap_remove(i);
+                }
+                return;
+            }
+        }
+        debug_assert!(false, "dec of absent topic {topic}");
+    }
+
+    /// Iterate non-zero `(topic, count)` pairs (unsorted).
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    /// Total count (document length while fully assigned).
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|&(_, c)| c as u64).sum()
+    }
+
+    /// Set a raw `(topic, count)` entry (mirror rebuilds). `count == 0`
+    /// removes the entry.
+    pub fn set_raw(&mut self, topic: u32, count: u32) {
+        for i in 0..self.entries.len() {
+            if self.entries[i].0 == topic {
+                if count == 0 {
+                    self.entries.swap_remove(i);
+                } else {
+                    self.entries[i].1 = count;
+                }
+                return;
+            }
+        }
+        if count > 0 {
+            self.entries.push((topic, count));
+        }
+    }
+
+    /// Decrement that tolerates an absent entry (replica rows can lag a
+    /// mirror under relaxed consistency).
+    pub fn dec_clamped(&mut self, topic: u32) {
+        if self.get(topic) > 0 {
+            self.dec(topic);
+        }
+    }
+}
+
+/// Full latent state of one shard's documents.
+#[derive(Clone, Debug)]
+pub struct DocState {
+    /// `z[d][i]` — topic of token `i` in document `d`.
+    pub z: Vec<Vec<u32>>,
+    /// `n_td` sparse counts per document.
+    pub n_dt: Vec<SparseCounts>,
+    /// PDP/HDP only: `r[d][i]` — "token opened a new table" indicator.
+    pub r: Vec<Vec<bool>>,
+}
+
+impl DocState {
+    /// Unassigned state for `n_docs` documents (topics are assigned by the
+    /// sampler's init pass).
+    pub fn new(n_docs: usize) -> Self {
+        DocState {
+            z: vec![Vec::new(); n_docs],
+            n_dt: vec![SparseCounts::new(); n_docs],
+            r: vec![Vec::new(); n_docs],
+        }
+    }
+
+    /// Number of documents.
+    pub fn len(&self) -> usize {
+        self.z.len()
+    }
+
+    /// True iff no documents.
+    pub fn is_empty(&self) -> bool {
+        self.z.is_empty()
+    }
+
+    /// Mean `k_d` over documents — diagnostics for the sparsity claim.
+    pub fn mean_kd(&self) -> f64 {
+        if self.n_dt.is_empty() {
+            return 0.0;
+        }
+        self.n_dt.iter().map(|s| s.nnz() as f64).sum::<f64>() / self.n_dt.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_dec_roundtrip() {
+        let mut s = SparseCounts::new();
+        s.inc(5);
+        s.inc(5);
+        s.inc(2);
+        assert_eq!(s.get(5), 2);
+        assert_eq!(s.get(2), 1);
+        assert_eq!(s.get(7), 0);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.total(), 3);
+        s.dec(5);
+        assert_eq!(s.get(5), 1);
+        s.dec(5);
+        assert_eq!(s.get(5), 0);
+        assert_eq!(s.nnz(), 1, "zero entries must be removed");
+    }
+
+    #[test]
+    fn iter_covers_all_nonzero() {
+        let mut s = SparseCounts::new();
+        for t in [1u32, 3, 9, 3, 9, 9] {
+            s.inc(t);
+        }
+        let mut got: Vec<(u32, u32)> = s.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(1, 1), (3, 2), (9, 3)]);
+    }
+
+    #[test]
+    fn mean_kd() {
+        let mut d = DocState::new(2);
+        d.n_dt[0].inc(1);
+        d.n_dt[0].inc(2);
+        d.n_dt[1].inc(1);
+        assert!((d.mean_kd() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,571 @@
+//! AliasHDP: HDP-LDA (§2.3) — the extra level of hierarchy sits on the
+//! *document* side: θ_d ~ DP(b₁, θ₀), θ₀ ~ DP(b₀, H), ψ_t ~ Dir(β).
+//!
+//! We use the Chinese-restaurant-franchise formulation with per-token
+//! "new-table" indicators (the paper's `r_di`): each document is a
+//! restaurant whose dishes are topics; a token either sits at an existing
+//! table serving topic `t` or opens a new one, in which case the table
+//! also registers at the root restaurant (root table counts `t_k` are the
+//! shared statistic that estimates θ₀: θ₀_t ∝ t_k, new-topic mass ∝ b₀).
+//!
+//! A DP is a PDP with discount 0, so the document-side conditionals are
+//! eqs. (5)/(6) with `a = 0`, roles word↔topic swapped, multiplied by the
+//! Dirichlet-multinomial word factor φ_tw = (n_tw+β)/(n_t+β̄):
+//!
+//! ```text
+//! p(z=t, r=0|rest) ∝ φ_tw · (n_dt+1−tb_dt)/(n_dt+1) · S^{n_dt+1}_{tb_dt}/S^{n_dt}_{tb_dt}
+//! p(z=t, r=1|rest) ∝ φ_tw · b₁ · (tb_dt+1)/(n_dt+1) · θ₀(t) · S^{n_dt+1}_{tb_dt+1}/S^{n_dt}_{tb_dt}
+//! θ₀(t) = t_k/(b₀+T)  for represented topics,   θ₀(new) = b₀/(b₀+T)
+//! ```
+//!
+//! The `r=0` branch is non-zero only for topics already in the document —
+//! the `k_d`-sparse exact component. The `r=1` branch over all topics is
+//! the dense component approximated by a stale per-word alias table.
+//!
+//! Shared statistics: `n_tw` (+ totals `n_t`) and the root table counts
+//! `t_k` — with the cross-statistic constraints (`0 ≤ t_k`, `t_k ≤ n_k`,
+//! `n_k>0 ⇒ t_k>0`) that projection (§5.5) maintains under relaxed
+//! consistency.
+
+use super::alias::AliasTable;
+use super::counts::CountMatrix;
+use super::doc_state::{DocState, SparseCounts};
+use super::mh::mh_chain;
+use super::stirling::StirlingTable;
+use super::DocSampler;
+use crate::corpus::doc::Document;
+use crate::util::rng::Rng;
+
+struct WordProposal {
+    table: AliasTable,
+    /// Stale dense weights, indexed `t` for (t, r=1), plus slot `K` for
+    /// "open a brand-new topic".
+    qw: Box<[f64]>,
+    qsum: f64,
+    budget: u32,
+}
+
+/// The AliasHDP sampler. `k` is the truncation `K_max`; topics activate
+/// on demand.
+pub struct AliasHdp {
+    k: usize,
+    /// Root DP concentration b₀.
+    pub b0: f64,
+    /// Document DP concentration b₁.
+    pub b1: f64,
+    /// Topic-word Dirichlet β.
+    pub beta: f64,
+    beta_bar: f64,
+    /// MH chain length per token.
+    pub mh_steps: usize,
+    /// Shard documents.
+    pub docs: Vec<Document>,
+    /// Latent state (`z`, `n_dt`, `r`).
+    pub state: DocState,
+    /// Shared word-topic counts.
+    pub nwt: CountMatrix,
+    /// Shared root table counts `t_k`, stored as row 0 of a 1×K matrix so
+    /// the parameter-server path treats it like any other row.
+    pub tables: CountMatrix,
+    /// Per-document table counts `tb_dt` (local only).
+    pub tb_dt: Vec<SparseCounts>,
+    stirling: StirlingTable,
+    proposals: Vec<Option<WordProposal>>,
+    /// Diagnostics.
+    pub mh_proposed: u64,
+    /// Diagnostics.
+    pub mh_accepted: u64,
+    scratch_idx: Vec<u32>,
+    scratch_w: Vec<f64>,
+}
+
+impl AliasHdp {
+    /// Create with sequential CRF initialization (tokens pick topics from
+    /// the predictive rule so the table bookkeeping starts consistent).
+    pub fn new(
+        docs: Vec<Document>,
+        vocab: usize,
+        k_max: usize,
+        b0: f64,
+        b1: f64,
+        beta: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::new_with_init(docs, vocab, k_max, b0, b1, beta, None, rng)
+    }
+
+    /// Create, taking topic assignments from `init` where provided (table
+    /// indicators are re-derived by the CRP rule).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_init(
+        docs: Vec<Document>,
+        vocab: usize,
+        k_max: usize,
+        b0: f64,
+        b1: f64,
+        beta: f64,
+        init: Option<&[Vec<u32>]>,
+        rng: &mut Rng,
+    ) -> Self {
+        let max_doc_len = docs.iter().map(|d| d.len()).max().unwrap_or(0);
+        let mut s = AliasHdp {
+            k: k_max,
+            b0,
+            b1,
+            beta,
+            beta_bar: beta * vocab as f64,
+            mh_steps: 2,
+            state: DocState::new(docs.len()),
+            nwt: CountMatrix::new(vocab, k_max),
+            tables: CountMatrix::new(1, k_max),
+            tb_dt: vec![SparseCounts::new(); docs.len()],
+            stirling: StirlingTable::new(0.0, (max_doc_len + 2).min(4096)),
+            proposals: (0..vocab).map(|_| None).collect(),
+            mh_proposed: 0,
+            mh_accepted: 0,
+            scratch_idx: Vec::with_capacity(64),
+            scratch_w: Vec::with_capacity(64),
+            docs,
+        };
+        // Init: seed a handful of active topics, then assign by the
+        // document-side CRP so tables start exactly consistent.
+        let seed_topics = (k_max / 4).clamp(1, 16);
+        for d in 0..s.docs.len() {
+            let tokens = s.docs[d].tokens.clone();
+            let mut zs = Vec::with_capacity(tokens.len());
+            let mut rs = Vec::with_capacity(tokens.len());
+            for (i, &w) in tokens.iter().enumerate() {
+                let t = init
+                    .and_then(|z| z.get(d).and_then(|zd| zd.get(i)).copied())
+                    .filter(|&t| (t as usize) < k_max)
+                    .unwrap_or_else(|| rng.below(seed_topics) as u32);
+                let ndt = s.state.n_dt[d].get(t);
+                let theta0 = s.theta0(t as usize);
+                let p_new = s.b1 * theta0 / (ndt as f64 + s.b1 * theta0 + 1e-12);
+                let r = ndt == 0 || rng.coin(p_new.clamp(0.0, 1.0));
+                s.add_token(d, w, t, r);
+                zs.push(t);
+                rs.push(r);
+            }
+            s.state.z[d] = zs;
+            s.state.r[d] = rs;
+        }
+        s
+    }
+
+    /// Root stick weight θ₀(t) (zero for unrepresented topics; the
+    /// new-topic mass is `theta0_new`).
+    #[inline]
+    fn theta0(&self, t: usize) -> f64 {
+        let tk = self.tables.get(0, t).max(0) as f64;
+        let total = (self.tables.grand_total().max(0)) as f64;
+        if tk == 0.0 && total == 0.0 {
+            // Empty root: uniform over the truncation (bootstrap).
+            return 1.0 / self.k as f64;
+        }
+        tk / (self.b0 + total)
+    }
+
+    #[inline]
+    fn theta0_new(&self) -> f64 {
+        let total = (self.tables.grand_total().max(0)) as f64;
+        self.b0 / (self.b0 + total)
+    }
+
+    /// Number of currently represented topics (diagnostics + figures).
+    pub fn active_topics(&self) -> usize {
+        (0..self.k)
+            .filter(|&t| self.tables.get(0, t) > 0 || self.nwt.total(t) > 0)
+            .count()
+    }
+
+    #[inline]
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        let nwt = self.nwt.get(w, t).max(0) as f64;
+        (nwt + self.beta) / ((self.nwt.total(t) as f64).max(0.0) + self.beta_bar)
+    }
+
+    fn add_token(&mut self, d: usize, w: u32, t: u32, r: bool) {
+        self.state.n_dt[d].inc(t);
+        self.nwt.inc(w, t as usize, 1);
+        if r {
+            self.tb_dt[d].inc(t);
+            self.tables.inc(0, t as usize, 1);
+        }
+    }
+
+    fn remove_token(&mut self, d: usize, w: u32, t: u32, r: bool) {
+        self.state.n_dt[d].dec(t);
+        self.nwt.inc(w, t as usize, -1);
+        let ndt_after = self.state.n_dt[d].get(t);
+        let tb = self.tb_dt[d].get(t);
+        if r && tb > 0 {
+            self.tb_dt[d].dec(t);
+            self.tables.inc(0, t as usize, -1);
+        } else if tb > ndt_after {
+            // Local polytope repair: tables can't outnumber customers.
+            self.tb_dt[d].dec_clamped(t);
+            self.tables.inc(0, t as usize, -1);
+        }
+    }
+
+    /// Document-side factor `g_r(d, t)` — eqs. (5)/(6) at a=0 — without φ.
+    fn g(&self, d: usize, t: usize, r: bool) -> f64 {
+        let ndt = self.state.n_dt[d].get(t as u32).max(0) as usize;
+        let tb = self.tb_dt[d].get(t as u32).min(ndt as u32) as usize;
+        if !r {
+            if ndt == 0 || tb == 0 {
+                return 0.0;
+            }
+            let frac = (ndt as f64 + 1.0 - tb as f64) / (ndt as f64 + 1.0);
+            let sratio = (self.stir(ndt + 1, tb) - self.stir(ndt, tb)).exp();
+            frac * sratio
+        } else {
+            let sratio = if ndt == 0 {
+                1.0
+            } else {
+                (self.stir(ndt + 1, tb + 1) - self.stir(ndt, tb)).exp()
+            };
+            let frac = (tb as f64 + 1.0) / (ndt as f64 + 1.0);
+            self.b1 * self.theta0(t) * frac * sratio
+        }
+    }
+
+    #[inline]
+    fn stir(&self, n: usize, m: usize) -> f64 {
+        let n = n.min(self.stirling.max_n());
+        let m = m.min(n);
+        self.stirling.log_ro(n, m)
+    }
+
+    /// Grow Stirling coverage to the longest document (init does this; a
+    /// reassigned shard may need it again).
+    pub fn ensure_stirling_capacity(&mut self) {
+        let maxn = self.docs.iter().map(|d| d.len()).max().unwrap_or(0);
+        self.stirling.grow_to(maxn + 2);
+    }
+
+    /// Dense stale proposal for word `w`: slots `0..K` are (t, r=1); slot
+    /// `K` is "open a new topic".
+    fn rebuild_proposal(&mut self, w: u32) {
+        let mut qw = Vec::with_capacity(self.k + 1);
+        for t in 0..self.k {
+            // Doc-independent upper envelope of the r=1 branch: the
+            // doc-side fraction and Stirling ratio are ≤ 1 off-document.
+            qw.push(self.b1 * self.theta0(t) * self.phi(w, t));
+        }
+        qw.push(self.b1 * self.theta0_new() / self.nwt.vocab() as f64);
+        let qsum: f64 = qw.iter().sum();
+        let table = AliasTable::build(&qw);
+        self.proposals[w as usize] = Some(WordProposal {
+            table,
+            qw: qw.into_boxed_slice(),
+            qsum,
+            budget: (self.k + 1) as u32,
+        });
+    }
+
+    /// Drop the stale proposal for one word (after a row sync).
+    pub fn invalidate_word(&mut self, w: u32) {
+        self.proposals[w as usize] = None;
+    }
+
+    /// Drop all stale proposals (bulk sync).
+    pub fn invalidate_all(&mut self) {
+        for p in self.proposals.iter_mut() {
+            *p = None;
+        }
+    }
+
+    /// Observed MH acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.mh_proposed == 0 {
+            1.0
+        } else {
+            self.mh_accepted as f64 / self.mh_proposed as f64
+        }
+    }
+
+    /// Find a free slot for a brand-new topic (truncation permitting).
+    fn free_topic(&self) -> Option<usize> {
+        (0..self.k).find(|&t| self.tables.get(0, t) <= 0 && self.nwt.total(t) <= 0)
+    }
+
+    fn sample_token(&mut self, d: usize, i: usize, rng: &mut Rng) -> usize {
+        let w = self.docs[d].tokens[i];
+        let old_t = self.state.z[d][i];
+        let old_r = self.state.r[d][i];
+        self.remove_token(d, w, old_t, old_r);
+
+        let need_rebuild = match &self.proposals[w as usize] {
+            Some(p) => p.budget == 0,
+            None => true,
+        };
+        if need_rebuild {
+            self.rebuild_proposal(w);
+        }
+
+        // Outcome index space: 2t+r for existing topics, 2K for new topic.
+        self.scratch_idx.clear();
+        self.scratch_w.clear();
+        let mut sparse_sum = 0.0;
+        for (t, _c) in self.state.n_dt[d].iter() {
+            for r in [false, true] {
+                let wgt = self.phi(w, t as usize) * self.g(d, t as usize, r);
+                if wgt > 0.0 {
+                    self.scratch_idx.push(2 * t + r as u32);
+                    self.scratch_w.push(wgt);
+                    sparse_sum += wgt;
+                }
+            }
+        }
+        let qsum = self.proposals[w as usize].as_ref().unwrap().qsum;
+        let total = sparse_sum + qsum;
+
+        let this = &*self;
+        let new_topic_idx = 2 * this.k;
+        let sparse_idx = &this.scratch_idx;
+        let sparse_w = &this.scratch_w;
+        let proposals = &this.proposals;
+        let p_of = |idx: usize| {
+            if idx == new_topic_idx {
+                this.b1 * this.theta0_new() / this.nwt.vocab() as f64
+            } else {
+                let (t, r) = (idx / 2, idx % 2 == 1);
+                this.phi(w, t) * this.g(d, t, r)
+            }
+        };
+        let q_of = |idx: usize| {
+            let stale = proposals[w as usize].as_ref().map_or(0.0, |p| {
+                if idx == new_topic_idx {
+                    p.qw[this.k]
+                } else if idx % 2 == 1 {
+                    p.qw[idx / 2]
+                } else {
+                    0.0
+                }
+            });
+            let sparse = if idx == new_topic_idx {
+                0.0
+            } else {
+                let (t, r) = (idx / 2, idx % 2 == 1);
+                if this.state.n_dt[d].get(t as u32) > 0 {
+                    this.phi(w, t) * this.g(d, t, r)
+                } else {
+                    0.0
+                }
+            };
+            sparse + stale
+        };
+        let mut draws = 0u32;
+        let propose = |r: &mut Rng| {
+            if total > 0.0 && r.f64() * total < sparse_sum {
+                let mut u = r.f64() * sparse_sum;
+                let mut j = sparse_idx.len().saturating_sub(1);
+                for (jj, &wgt) in sparse_w.iter().enumerate() {
+                    u -= wgt;
+                    if u <= 0.0 {
+                        j = jj;
+                        break;
+                    }
+                }
+                let idx = sparse_idx.get(j).copied().unwrap_or(1) as usize;
+                (idx, q_of(idx))
+            } else {
+                let p = proposals[w as usize].as_ref().unwrap();
+                let slot = p.table.sample(r);
+                draws += 1;
+                let idx = if slot == this.k { new_topic_idx } else { 2 * slot + 1 };
+                (idx, q_of(idx))
+            }
+        };
+
+        let init = Some(2 * old_t as usize + old_r as usize);
+        let (new_idx, accepted) = mh_chain(init, self.mh_steps, propose, q_of, p_of, rng);
+        self.mh_proposed += self.mh_steps as u64;
+        self.mh_accepted += accepted as u64;
+
+        if draws > 0 {
+            if let Some(p) = self.proposals[w as usize].as_mut() {
+                p.budget = p.budget.saturating_sub(draws);
+            }
+        }
+
+        // Decode the outcome.
+        let (mut new_t, mut new_r);
+        if new_idx == new_topic_idx {
+            match self.free_topic() {
+                Some(t) => {
+                    new_t = t as u32;
+                    new_r = true;
+                }
+                None => {
+                    // Truncation full: stay at the old topic.
+                    new_t = old_t;
+                    new_r = self.state.n_dt[d].get(old_t) == 0;
+                }
+            }
+        } else {
+            new_t = (new_idx / 2) as u32;
+            new_r = new_idx % 2 == 1;
+        }
+        // First token of a topic in a doc must open a table.
+        if !new_r && self.tb_dt[d].get(new_t) == 0 {
+            new_r = true;
+        }
+        let _ = &mut new_t;
+        self.state.z[d][i] = new_t;
+        self.state.r[d][i] = new_r;
+        self.add_token(d, w, new_t, new_r);
+        accepted
+    }
+}
+
+impl crate::eval::perplexity::TopicModelView for AliasHdp {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        AliasHdp::phi(self, w, t)
+    }
+    /// Fold-in prior: `b₁·θ₀(t)` — topics the root has never seen get
+    /// (almost) no prior mass, matching the HDP document model.
+    fn doc_prior(&self, t: usize) -> f64 {
+        self.b1 * self.theta0(t) + 1e-9
+    }
+}
+
+impl DocSampler for AliasHdp {
+    fn sample_doc(&mut self, d: usize, rng: &mut Rng) -> usize {
+        let n = self.docs[d].tokens.len();
+        let mut acc = 0usize;
+        for i in 0..n {
+            acc += self.sample_token(d, i, rng);
+        }
+        acc
+    }
+
+    fn num_topics(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "AliasHDP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::CorpusConfig;
+
+    fn make(n_docs: usize, k_max: usize, seed: u64) -> (AliasHdp, Rng) {
+        let (c, _) = CorpusConfig {
+            n_docs,
+            vocab_size: 200,
+            n_topics: 6,
+            doc_len_mean: 20.0,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let mut rng = Rng::new(seed ^ 0xFACE);
+        let s = AliasHdp::new(c.docs, 200, k_max, 1.0, 1.0, 0.01, &mut rng);
+        (s, rng)
+    }
+
+    fn check_invariants(s: &AliasHdp) {
+        // Word-topic counts match a recount; doc tables ≤ doc customers;
+        // root tables = Σ_d doc tables.
+        let mut recount = CountMatrix::new(s.nwt.vocab(), s.k);
+        let mut root = vec![0i64; s.k];
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                recount.inc_local(w, s.state.z[d][i] as usize, 1);
+            }
+            for t in 0..s.k as u32 {
+                let tb = s.tb_dt[d].get(t);
+                let ndt = s.state.n_dt[d].get(t);
+                assert!(tb <= ndt, "doc {d} topic {t}: tables {tb} > customers {ndt}");
+                assert!(!(ndt > 0 && tb == 0), "doc {d} topic {t}: customers without table");
+                root[t as usize] += tb as i64;
+            }
+        }
+        for w in 0..s.nwt.vocab() as u32 {
+            for t in 0..s.k {
+                assert_eq!(s.nwt.get(w, t), recount.get(w, t), "nwt[{w},{t}]");
+            }
+        }
+        for t in 0..s.k {
+            assert_eq!(s.tables.get(0, t) as i64, root[t], "root tables for {t}");
+        }
+    }
+
+    #[test]
+    fn init_consistent() {
+        let (s, _) = make(30, 24, 1);
+        check_invariants(&s);
+    }
+
+    #[test]
+    fn sweeps_preserve_invariants() {
+        let (mut s, mut rng) = make(30, 24, 2);
+        for _ in 0..4 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        check_invariants(&s);
+    }
+
+    #[test]
+    fn topics_grow_beyond_seed() {
+        // HDP must discover topics: active count should exceed the seeded
+        // handful after training on a 6-topic corpus.
+        let (mut s, mut rng) = make(150, 32, 3);
+        for _ in 0..10 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let active = s.active_topics();
+        assert!(active >= 4, "only {active} active topics");
+        assert!(active <= 32);
+    }
+
+    #[test]
+    fn training_improves_likelihood() {
+        let (mut s, mut rng) = make(120, 24, 4);
+        let ll0 = joint_ll(&s);
+        for _ in 0..12 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let ll1 = joint_ll(&s);
+        assert!(ll1 > ll0, "ll {ll0} -> {ll1}");
+    }
+
+    fn joint_ll(s: &AliasHdp) -> f64 {
+        let mut ll = 0.0;
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                let t = s.state.z[d][i] as usize;
+                ll += s.phi(w, t).max(1e-300).ln();
+            }
+        }
+        ll
+    }
+
+    #[test]
+    fn acceptance_rate_reasonable() {
+        let (mut s, mut rng) = make(60, 24, 5);
+        for _ in 0..3 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let rate = s.acceptance_rate();
+        assert!(rate > 0.4, "HDP MH acceptance {rate}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Metropolis-Hastings correction for stale proposal distributions
+//! (§3.2–§3.3).
+//!
+//! The alias table is built from a *stale* snapshot `q` of the true
+//! conditional `p`; a draw `j ~ q` is accepted over the current state `i`
+//! with probability `min(1, q(i)·p(j) / (q(j)·p(i)))` (eq. 7, stationary
+//! proposal). With no valid current state the draw is accepted outright
+//! ("stateless sampler" property).
+//!
+//! The chain length `n` trades bias for speed; the paper (and [10]) find
+//! 1–2 steps sufficient because `q` tracks `p` closely between rebuilds.
+
+use crate::util::rng::Rng;
+
+/// One stationary-proposal MH decision. Returns the new state.
+///
+/// * `current` — current state (`None` ⇒ accept unconditionally).
+/// * `proposal` — the drawn candidate `j` and its proposal mass `q(j)`.
+/// * `q_of` / `p_of` — unnormalized proposal / target masses. Only the
+///   *ratios* matter, so neither needs normalization (their normalizers
+///   cancel in eq. 7).
+#[inline]
+pub fn mh_step(
+    current: Option<usize>,
+    proposal: (usize, f64),
+    q_of: impl Fn(usize) -> f64,
+    p_of: impl Fn(usize) -> f64,
+    rng: &mut Rng,
+) -> (usize, bool) {
+    let (j, qj) = proposal;
+    let i = match current {
+        None => return (j, true),
+        Some(i) => i,
+    };
+    if i == j {
+        return (j, true);
+    }
+    let pi = p_of(i);
+    let pj = p_of(j);
+    let qi = q_of(i);
+    // Degenerate guards: relaxed consistency can transiently zero things.
+    if pi <= 0.0 || qj <= 0.0 {
+        return (j, true);
+    }
+    let ratio = (qi * pj) / (qj * pi);
+    if ratio >= 1.0 || rng.f64() < ratio {
+        (j, true)
+    } else {
+        (i, false)
+    }
+}
+
+/// A short MH chain: draw `steps` proposals from `propose`, walking the
+/// state through [`mh_step`]. Returns `(final_state, acceptances)`.
+pub fn mh_chain(
+    init: Option<usize>,
+    steps: usize,
+    mut propose: impl FnMut(&mut Rng) -> (usize, f64),
+    q_of: impl Fn(usize) -> f64,
+    p_of: impl Fn(usize) -> f64,
+    rng: &mut Rng,
+) -> (usize, usize) {
+    let mut state = init;
+    let mut accepted = 0usize;
+    for _ in 0..steps.max(1) {
+        let prop = propose(rng);
+        let (next, acc) = mh_step(state, prop, &q_of, &p_of, rng);
+        if acc {
+            accepted += 1;
+        }
+        state = Some(next);
+    }
+    (state.unwrap(), accepted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::alias::AliasTable;
+
+    /// With proposal == target the acceptance rate must be 1 and the
+    /// empirical distribution must match the target.
+    #[test]
+    fn exact_proposal_always_accepts() {
+        let p = [0.5, 0.2, 0.3];
+        let table = AliasTable::build(&p);
+        let mut rng = Rng::new(1);
+        let mut counts = [0u64; 3];
+        let mut acc = 0usize;
+        let mut state = None;
+        for _ in 0..60_000 {
+            let (s, a) = mh_chain(
+                state,
+                1,
+                |r| {
+                    let j = table.sample(r);
+                    (j, p[j])
+                },
+                |i| p[i],
+                |i| p[i],
+                &mut rng,
+            );
+            state = Some(s);
+            counts[s] += 1;
+            acc += a;
+        }
+        assert_eq!(acc, 60_000, "identical p,q must always accept");
+        for (i, &c) in counts.iter().enumerate() {
+            let e = p[i] * 60_000.0;
+            assert!((c as f64 - e).abs() < 6.0 * e.sqrt(), "bin {i}: {c} vs {e}");
+        }
+    }
+
+    /// A *stale* proposal must still converge to the true target thanks to
+    /// the MH correction — the core claim of §3.3.
+    #[test]
+    fn stale_proposal_corrected_to_target() {
+        // Target strongly favors outcome 0; stale proposal is uniform.
+        let p = [0.7, 0.1, 0.1, 0.1];
+        let q = [0.25, 0.25, 0.25, 0.25];
+        let table = AliasTable::build(&q);
+        let mut rng = Rng::new(2);
+        let mut counts = [0u64; 4];
+        let mut state = None;
+        let n = 200_000;
+        for _ in 0..n {
+            // 4 MH steps per emitted sample to burn in the stale chain.
+            let (s, _) = mh_chain(
+                state,
+                4,
+                |r| {
+                    let j = table.sample(r);
+                    (j, q[j])
+                },
+                |i| q[i],
+                |i| p[i],
+                &mut rng,
+            );
+            state = Some(s);
+            counts[s] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let e = p[i] * n as f64;
+            assert!(
+                (c as f64 - e).abs() < 0.05 * n as f64,
+                "bin {i}: got {c}, want ≈{e}"
+            );
+        }
+    }
+
+    #[test]
+    fn stateless_first_draw_accepts() {
+        let mut rng = Rng::new(3);
+        let (s, acc) = mh_step(None, (2, 0.1), |_| 0.0, |_| 0.0, &mut rng);
+        assert_eq!(s, 2);
+        assert!(acc);
+    }
+
+    #[test]
+    fn zero_target_current_state_escapes() {
+        // If relaxed consistency zeroed p(current), any proposal is taken.
+        let mut rng = Rng::new(4);
+        let (s, acc) = mh_step(Some(0), (1, 0.5), |_| 0.5, |i| if i == 0 { 0.0 } else { 1.0 }, &mut rng);
+        assert_eq!(s, 1);
+        assert!(acc);
+    }
+}

@@ -1,0 +1,55 @@
+//! Inference engines: the Metropolis-Hastings-Walker (alias) machinery and
+//! the four samplers the paper evaluates.
+//!
+//! * [`alias`] — Walker/Vose alias tables: `O(l)` build, `O(1)` draw (§3.1).
+//! * [`mh`] — Metropolis-Hastings correction for sampling from a *stale*
+//!   proposal (§3.2–3.3).
+//! * [`stirling`] — log-space generalized Stirling numbers for the PDP/HDP
+//!   table arithmetic (§2.2).
+//! * [`counts`] — the sufficient-statistics matrices clients replicate and
+//!   the parameter server shards.
+//! * [`doc_state`] — `k_d`-sparse per-document topic counts.
+//! * [`sparse_lda`] — the YahooLDA baseline: Yao et al. s/r/q sparse
+//!   sampler, re-implemented on the same parameter server (paper §6).
+//! * [`alias_lda`] — AliasLDA: eq. (4) sparse-exact + stale-dense-alias
+//!   + MH accept.
+//! * [`pdp`] — AliasPDP: eqs. (5)/(6) over the doubled `(topic, new-table)`
+//!   state space.
+//! * [`hdp`] — AliasHDP: two-level DP on the document side.
+//! * [`stash`] — the multi-thread producer/consumer alias pool (§5.1).
+
+pub mod alias;
+pub mod alias_lda;
+pub mod counts;
+pub mod doc_state;
+pub mod hdp;
+pub mod mh;
+pub mod pdp;
+pub mod sparse_lda;
+pub mod stash;
+pub mod stirling;
+
+pub use alias::AliasTable;
+pub use counts::CountMatrix;
+pub use doc_state::DocState;
+
+use crate::util::rng::Rng;
+
+/// A model sampler that can resample one document in place against the
+/// client's current replica of the shared statistics.
+///
+/// Implementations mutate (a) the document's topic assignments, (b) the
+/// local doc-topic counts, and (c) the shared count matrices *through their
+/// delta logs* so the parameter-server client can push the updates.
+pub trait DocSampler {
+    /// Resample every token of document `d`. Returns the number of
+    /// Metropolis-Hastings proposals that were *accepted* (== tokens for
+    /// exact samplers), for diagnostics.
+    fn sample_doc(&mut self, d: usize, rng: &mut Rng) -> usize;
+
+    /// Number of topics `K`.
+    fn num_topics(&self) -> usize;
+
+    /// Model name for logs/metrics.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,579 @@
+//! AliasPDP: the Pitman-Yor topic model of §2.2 (PYTM + PDP language
+//! model), sampled with the same sparse-exact + stale-dense-alias + MH
+//! strategy, "albeit now using a twice as large space of state variables":
+//! each outcome is a pair `(topic t, r ∈ {0,1})` where `r` says whether the
+//! token opens a new table in restaurant `t`.
+//!
+//! Conditionals (token removed), from eqs. (5)/(6):
+//!
+//! ```text
+//! p(z=t, r=0 | rest) ∝ (α + n_dt) · 1/(b+m_t) · (m_tw+1−s_tw)/(m_tw+1)
+//!                      · S^{m_tw+1}_{s_tw,a} / S^{m_tw}_{s_tw,a}
+//! p(z=t, r=1 | rest) ∝ (α + n_dt) · (b+a·s_t)/(b+m_t) · (s_tw+1)/(m_tw+1)
+//!                      · (γ+s_tw)/(γ̄+s_t) · S^{m_tw+1}_{s_tw+1,a} / S^{m_tw}_{s_tw,a}
+//! ```
+//!
+//! Splitting `(α + n_dt)` gives the `k_d`-sparse exact component (`n_dt`)
+//! and the dense stale component (`α`) approximated per word by an alias
+//! table over the `2K` pairs.
+//!
+//! Shared statistics: `m_tw` (customers), `s_tw` (tables) — the pair whose
+//! polytope constraints (`0 ≤ s_tw ≤ m_tw`, `m_tw>0 ⇒ s_tw>0`) the
+//! projection subsystem (§5.5) must maintain under relaxed consistency.
+
+use super::alias::AliasTable;
+use super::counts::CountMatrix;
+use super::doc_state::DocState;
+use super::mh::mh_chain;
+use super::stirling::StirlingTable;
+use super::DocSampler;
+use crate::corpus::doc::Document;
+use crate::util::rng::Rng;
+
+struct WordProposal {
+    table: AliasTable,
+    /// Stale dense weights over pairs, indexed `2t + r`.
+    qw: Box<[f64]>,
+    qsum: f64,
+    budget: u32,
+}
+
+/// The AliasPDP sampler.
+pub struct AliasPdp {
+    k: usize,
+    alpha: f64,
+    /// PDP discount `a`.
+    pub discount: f64,
+    /// PDP concentration `b`.
+    pub concentration: f64,
+    /// Root Dirichlet smoothing γ (per word).
+    pub gamma: f64,
+    gamma_bar: f64,
+    /// MH chain length per token.
+    pub mh_steps: usize,
+    /// Raw mode: disable the local defensive repairs and clamps — this is
+    /// what "without projection" means in the paper (Fig 8): statistics
+    /// that violate the polytope feed the sampler directly and "may
+    /// easily produce NaN, infinite, or other unstable probabilities".
+    /// Enabled by the trainer when `ProjectionMode::Off` is selected.
+    pub raw_mode: bool,
+    /// Shard documents.
+    pub docs: Vec<Document>,
+    /// Latent state (`z`, sparse `n_dt`, and the `r` indicators).
+    pub state: DocState,
+    /// Shared customer counts `m_tw` (synced via the parameter server).
+    pub m: CountMatrix,
+    /// Shared table counts `s_tw` (synced via the parameter server).
+    pub s: CountMatrix,
+    stirling: StirlingTable,
+    proposals: Vec<Option<WordProposal>>,
+    /// Diagnostics.
+    pub mh_proposed: u64,
+    /// Diagnostics.
+    pub mh_accepted: u64,
+    scratch_idx: Vec<u32>,
+    scratch_w: Vec<f64>,
+}
+
+impl AliasPdp {
+    /// Create with random topic initialization (every initial token opens
+    /// a table with the CRP-correct probability).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        docs: Vec<Document>,
+        vocab: usize,
+        k: usize,
+        alpha: f64,
+        discount: f64,
+        concentration: f64,
+        gamma: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        Self::new_with_init(
+            docs,
+            vocab,
+            k,
+            alpha,
+            discount,
+            concentration,
+            gamma,
+            None,
+            rng,
+        )
+    }
+
+    /// Create, taking topic assignments from `init` where provided (table
+    /// indicators are re-derived by the CRP rule — the shared table counts
+    /// re-converge through projection, §5.5).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_init(
+        docs: Vec<Document>,
+        vocab: usize,
+        k: usize,
+        alpha: f64,
+        discount: f64,
+        concentration: f64,
+        gamma: f64,
+        init: Option<&[Vec<u32>]>,
+        rng: &mut Rng,
+    ) -> Self {
+        let max_freq = {
+            let mut f = vec![0u32; vocab];
+            for d in &docs {
+                for &w in &d.tokens {
+                    f[w as usize] += 1;
+                }
+            }
+            f.into_iter().max().unwrap_or(0) as usize
+        };
+        let mut s = AliasPdp {
+            k,
+            alpha,
+            discount,
+            concentration,
+            gamma,
+            gamma_bar: gamma * vocab as f64,
+            mh_steps: 2,
+            raw_mode: false,
+            state: DocState::new(docs.len()),
+            m: CountMatrix::new(vocab, k),
+            s: CountMatrix::new(vocab, k),
+            stirling: StirlingTable::new(discount, (max_freq + 2).min(4096)),
+            proposals: (0..vocab).map(|_| None).collect(),
+            mh_proposed: 0,
+            mh_accepted: 0,
+            scratch_idx: Vec::with_capacity(64),
+            scratch_w: Vec::with_capacity(64),
+            docs,
+        };
+        for d in 0..s.docs.len() {
+            let tokens = s.docs[d].tokens.clone();
+            let mut zs = Vec::with_capacity(tokens.len());
+            let mut rs = Vec::with_capacity(tokens.len());
+            for (i, &w) in tokens.iter().enumerate() {
+                let t = init
+                    .and_then(|z| z.get(d).and_then(|zd| zd.get(i)).copied())
+                    .filter(|&t| (t as usize) < k)
+                    .unwrap_or_else(|| rng.below(k) as u32);
+                // CRP: new table with prob (b + a·s_t)/(b + m_t).
+                let mt = s.m.total(t as usize) as f64;
+                let st = s.s.total(t as usize) as f64;
+                let p_new = (s.concentration + s.discount * st) / (s.concentration + mt);
+                let mtw = s.m.get(w, t as usize);
+                let r = mtw == 0 || rng.coin(p_new);
+                s.add_token(d, w, t, r);
+                zs.push(t);
+                rs.push(r);
+            }
+            s.state.z[d] = zs;
+            s.state.r[d] = rs;
+        }
+        s
+    }
+
+    fn add_token(&mut self, d: usize, w: u32, t: u32, r: bool) {
+        self.state.n_dt[d].inc(t);
+        self.m.inc(w, t as usize, 1);
+        if r {
+            self.s.inc(w, t as usize, 1);
+        }
+    }
+
+    /// Remove a token, locally repairing the `s ≤ m` polytope when the
+    /// stored indicator disagrees with the (possibly synced) counts.
+    /// Returns whether a table was actually closed.
+    fn remove_token(&mut self, d: usize, w: u32, t: u32, r: bool) -> bool {
+        self.state.n_dt[d].dec(t);
+        self.m.inc(w, t as usize, -1);
+        let m_after = self.m.get(w, t as usize).max(0);
+        let s_now = self.s.get(w, t as usize).max(0);
+        // Close the token's table if it opened one — but never the *last*
+        // table while customers remain (the indicator scheme loses seating
+        // detail; this is the standard repair), and always re-enter the
+        // polytope 0 ≤ s ≤ m, (m>0 ⇒ s>0) that a sync may have broken.
+        let mut s_new = s_now;
+        if r && s_new > 0 {
+            s_new -= 1;
+        }
+        if !self.raw_mode {
+            s_new = s_new.min(m_after);
+            if m_after > 0 && s_new == 0 {
+                s_new = 1;
+            }
+        }
+        if s_new != s_now {
+            self.s.inc(w, t as usize, s_new - s_now);
+        }
+        s_new < s_now
+    }
+
+    /// Grow the Stirling table to cover current counts (call after syncs).
+    pub fn ensure_stirling_capacity(&mut self) {
+        let mut maxm = 0usize;
+        for (_, row) in self.m.iter_rows() {
+            for &c in row {
+                maxm = maxm.max(c.max(0) as usize);
+            }
+        }
+        self.stirling.grow_to(maxm + 2);
+    }
+
+    /// Log-space Stirling lookup clamped to the grown range (the clamp can
+    /// only trigger transiently after a sync; `ensure_stirling_capacity`
+    /// restores exactness).
+    #[inline]
+    fn stir(&self, n: usize, m: usize) -> f64 {
+        let n = n.min(self.stirling.max_n());
+        let m = m.min(n);
+        self.stirling.log_ro(n, m)
+    }
+
+    /// Unnormalized `f_r(t)` — everything in eqs. (5)/(6) except `(α+n_dt)`.
+    fn f(&self, w: u32, t: usize, r: bool) -> f64 {
+        let (mtw, stw);
+        if self.raw_mode {
+            // No clamps: violating statistics hit the Stirling ratios and
+            // fractions raw (negative counts wrap to 0 only to avoid UB in
+            // the table index; the *ratios* still go wrong — Fig 8).
+            mtw = self.m.get(w, t).max(0) as usize;
+            stw = self.s.get(w, t).max(0) as usize;
+            if stw > mtw + 1 {
+                // Impossible configuration: S ratios are 0/0 → poison.
+                return if r { f64::NAN } else { 0.0 };
+            }
+        } else {
+            mtw = self.m.get(w, t).max(0) as usize;
+            stw = self.s.get(w, t).clamp(0, mtw as i32) as usize;
+        }
+        let mt = (self.m.total(t) as f64).max(0.0);
+        let st = (self.s.total(t) as f64).max(0.0);
+        let b = self.concentration;
+        let a = self.discount;
+        if !r {
+            if mtw == 0 || stw == 0 {
+                return 0.0; // no table to sit at
+            }
+            let frac = (mtw as f64 + 1.0 - stw as f64) / (mtw as f64 + 1.0);
+            let sratio = (self.stir(mtw + 1, stw) - self.stir(mtw, stw)).exp();
+            frac * sratio / (b + mt)
+        } else {
+            let sratio = if mtw == 0 {
+                1.0 // S^1_1 / S^0_0 = 1
+            } else {
+                (self.stir(mtw + 1, stw + 1) - self.stir(mtw, stw)).exp()
+            };
+            let frac = (stw as f64 + 1.0) / (mtw as f64 + 1.0);
+            let root = (self.gamma + stw as f64) / (self.gamma_bar + st);
+            (b + a * st) / (b + mt) * frac * root * sratio
+        }
+    }
+
+    fn rebuild_proposal(&mut self, w: u32) {
+        let mut qw = Vec::with_capacity(2 * self.k);
+        for t in 0..self.k {
+            qw.push(self.alpha * self.f(w, t, false));
+            qw.push(self.alpha * self.f(w, t, true));
+        }
+        let qsum: f64 = qw.iter().sum();
+        let table = AliasTable::build(&qw);
+        self.proposals[w as usize] = Some(WordProposal {
+            table,
+            qw: qw.into_boxed_slice(),
+            qsum,
+            budget: 2 * self.k as u32,
+        });
+    }
+
+    /// Drop the stale proposal for one word (after a row sync).
+    pub fn invalidate_word(&mut self, w: u32) {
+        self.proposals[w as usize] = None;
+    }
+
+    /// Drop all stale proposals (bulk sync).
+    pub fn invalidate_all(&mut self) {
+        for p in self.proposals.iter_mut() {
+            *p = None;
+        }
+    }
+
+    /// Observed MH acceptance rate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.mh_proposed == 0 {
+            1.0
+        } else {
+            self.mh_accepted as f64 / self.mh_proposed as f64
+        }
+    }
+
+    fn sample_token(&mut self, d: usize, i: usize, rng: &mut Rng) -> usize {
+        let w = self.docs[d].tokens[i];
+        let old_t = self.state.z[d][i];
+        let old_r = self.state.r[d][i];
+        self.remove_token(d, w, old_t, old_r);
+
+        // Keep Stirling coverage ahead of the biggest count for this word.
+        let row_max = self
+            .m
+            .row(w)
+            .map(|r| r.iter().copied().max().unwrap_or(0))
+            .unwrap_or(0)
+            .max(0) as usize;
+        if row_max + 1 > self.stirling.max_n() {
+            self.stirling.grow_to(row_max + 2);
+        }
+
+        let need_rebuild = match &self.proposals[w as usize] {
+            Some(p) => p.budget == 0,
+            None => true,
+        };
+        if need_rebuild {
+            self.rebuild_proposal(w);
+        }
+
+        // Sparse exact component over pairs with n_dt > 0.
+        self.scratch_idx.clear();
+        self.scratch_w.clear();
+        let mut sparse_sum = 0.0;
+        for (t, c) in self.state.n_dt[d].iter() {
+            for r in [false, true] {
+                let wgt = c as f64 * self.f(w, t as usize, r);
+                if wgt > 0.0 {
+                    self.scratch_idx.push(2 * t + r as u32);
+                    self.scratch_w.push(wgt);
+                    sparse_sum += wgt;
+                }
+            }
+        }
+        let qsum = self.proposals[w as usize].as_ref().unwrap().qsum;
+        let total = sparse_sum + qsum;
+
+        let this = &*self;
+        let sparse_idx = &this.scratch_idx;
+        let sparse_w = &this.scratch_w;
+        let proposals = &this.proposals;
+        let q_of = |idx: usize| {
+            let (t, r) = (idx / 2, idx % 2 == 1);
+            let ndt = this.state.n_dt[d].get(t as u32) as f64;
+            ndt * this.f(w, t, r) + proposals[w as usize].as_ref().map_or(0.0, |p| p.qw[idx])
+        };
+        let p_of = |idx: usize| {
+            let (t, r) = (idx / 2, idx % 2 == 1);
+            let ndt = this.state.n_dt[d].get(t as u32) as f64;
+            (ndt + this.alpha) * this.f(w, t, r)
+        };
+        let mut draws = 0u32;
+        let propose = |r: &mut Rng| {
+            if total > 0.0 && r.f64() * total < sparse_sum {
+                let mut u = r.f64() * sparse_sum;
+                let mut idx = sparse_idx.len().saturating_sub(1);
+                for (j, &wgt) in sparse_w.iter().enumerate() {
+                    u -= wgt;
+                    if u <= 0.0 {
+                        idx = j;
+                        break;
+                    }
+                }
+                let pair = sparse_idx.get(idx).copied().unwrap_or(1) as usize;
+                (pair, q_of(pair))
+            } else {
+                let p = proposals[w as usize].as_ref().unwrap();
+                let pair = p.table.sample(r);
+                draws += 1;
+                (pair, q_of(pair))
+            }
+        };
+
+        // Old state as a pair index; if the removal flipped its table
+        // status the old index may now have zero mass — mh handles that.
+        let init = Some(2 * old_t as usize + old_r as usize);
+        let (new_idx, accepted) = mh_chain(init, self.mh_steps, propose, q_of, p_of, rng);
+        self.mh_proposed += self.mh_steps as u64;
+        self.mh_accepted += accepted as u64;
+
+        if draws > 0 {
+            if let Some(p) = self.proposals[w as usize].as_mut() {
+                p.budget = p.budget.saturating_sub(draws);
+            }
+        }
+
+        let new_t = (new_idx / 2) as u32;
+        let mut new_r = new_idx % 2 == 1;
+        // A token must open a table if the dish has none.
+        if !new_r && self.m.get(w, new_t as usize) <= 0 {
+            new_r = true;
+        }
+        self.state.z[d][i] = new_t;
+        self.state.r[d][i] = new_r;
+        self.add_token(d, w, new_t, new_r);
+        accepted
+    }
+}
+
+impl crate::eval::perplexity::TopicModelView for AliasPdp {
+    fn k(&self) -> usize {
+        self.k
+    }
+    /// PYP predictive word probability:
+    /// `((m_tw − a·s_tw)⁺ + (b + a·s_t)·base_w) / (b + m_t)` with the
+    /// root-smoothed base `base_w = (γ + s_tw)/(γ̄ + s_t)`.
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        let mtw = self.m.get(w, t).max(0) as f64;
+        let stw = self.s.get(w, t).max(0) as f64;
+        let mt = (self.m.total(t) as f64).max(0.0);
+        let st = (self.s.total(t) as f64).max(0.0);
+        let base = (self.gamma + stw) / (self.gamma_bar + st);
+        ((mtw - self.discount * stw).max(0.0)
+            + (self.concentration + self.discount * st) * base)
+            / (self.concentration + mt)
+    }
+    fn doc_prior(&self, _t: usize) -> f64 {
+        self.alpha
+    }
+}
+
+impl DocSampler for AliasPdp {
+    fn sample_doc(&mut self, d: usize, rng: &mut Rng) -> usize {
+        let n = self.docs[d].tokens.len();
+        let mut acc = 0usize;
+        for i in 0..n {
+            acc += self.sample_token(d, i, rng);
+        }
+        acc
+    }
+
+    fn num_topics(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "AliasPDP"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generator::{CorpusConfig, GenerativeModel};
+
+    fn make(n_docs: usize, k: usize, seed: u64) -> (AliasPdp, Rng) {
+        let (c, _) = CorpusConfig {
+            n_docs,
+            vocab_size: 200,
+            n_topics: k,
+            doc_len_mean: 20.0,
+            model: GenerativeModel::Pyp,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let s = AliasPdp::new(c.docs, 200, k, 0.1, 0.1, 10.0, 0.5, &mut rng);
+        (s, rng)
+    }
+
+    /// The PDP polytope invariants that projection exists to protect must
+    /// hold *exactly* in single-machine operation.
+    fn check_polytope(s: &AliasPdp) {
+        for w in 0..s.m.vocab() as u32 {
+            for t in 0..s.k {
+                let m = s.m.get(w, t);
+                let st = s.s.get(w, t);
+                assert!(m >= 0, "m[{w},{t}] = {m} < 0");
+                assert!(st >= 0, "s[{w},{t}] = {st} < 0");
+                assert!(st <= m, "s[{w},{t}] = {st} > m = {m}");
+                assert!(!(m > 0 && st == 0), "m[{w},{t}] = {m} but no tables");
+            }
+        }
+    }
+
+    fn check_counts(s: &AliasPdp) {
+        let mut recount = CountMatrix::new(s.m.vocab(), s.k);
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                recount.inc_local(w, s.state.z[d][i] as usize, 1);
+            }
+            assert_eq!(s.state.n_dt[d].total() as usize, doc.tokens.len());
+        }
+        for w in 0..s.m.vocab() as u32 {
+            for t in 0..s.k {
+                assert_eq!(s.m.get(w, t), recount.get(w, t), "m[{w},{t}]");
+            }
+        }
+    }
+
+    #[test]
+    fn init_satisfies_polytope() {
+        let (s, _) = make(30, 6, 1);
+        check_polytope(&s);
+        check_counts(&s);
+    }
+
+    #[test]
+    fn sweeps_preserve_invariants() {
+        let (mut s, mut rng) = make(30, 6, 2);
+        for _ in 0..4 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        check_polytope(&s);
+        check_counts(&s);
+    }
+
+    #[test]
+    fn acceptance_rate_reasonable() {
+        let (mut s, mut rng) = make(60, 8, 3);
+        for _ in 0..3 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let rate = s.acceptance_rate();
+        assert!(rate > 0.5, "PDP MH acceptance {rate}");
+    }
+
+    #[test]
+    fn training_improves_likelihood() {
+        let (mut s, mut rng) = make(120, 8, 4);
+        let ll0 = joint_ll(&s);
+        for _ in 0..12 {
+            for d in 0..s.docs.len() {
+                s.sample_doc(d, &mut rng);
+            }
+        }
+        let ll1 = joint_ll(&s);
+        assert!(ll1 > ll0, "ll {ll0} -> {ll1}");
+    }
+
+    /// Predictive word probability under the PDP language model.
+    fn joint_ll(s: &AliasPdp) -> f64 {
+        let mut ll = 0.0;
+        for (d, doc) in s.docs.iter().enumerate() {
+            for (i, &w) in doc.tokens.iter().enumerate() {
+                let t = s.state.z[d][i] as usize;
+                let mtw = s.m.get(w, t).max(0) as f64;
+                let stw = s.s.get(w, t).max(0) as f64;
+                let mt = s.m.total(t).max(0) as f64;
+                let st = s.s.total(t).max(0) as f64;
+                let a = s.discount;
+                let b = s.concentration;
+                let base = (s.gamma + stw) / (s.gamma_bar + st);
+                let p = ((mtw - a * stw).max(0.0) + (b + a * st) * base) / (b + mt);
+                ll += p.max(1e-300).ln();
+            }
+        }
+        ll
+    }
+
+    #[test]
+    fn stirling_capacity_tracks_counts() {
+        let (mut s, mut rng) = make(30, 6, 5);
+        s.ensure_stirling_capacity();
+        let cap = s.stirling.max_n();
+        for d in 0..s.docs.len() {
+            s.sample_doc(d, &mut rng);
+        }
+        // Sampling must auto-grow whenever counts outrun the table.
+        assert!(s.stirling.max_n() >= cap);
+    }
+}

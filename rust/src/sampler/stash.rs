@@ -1,0 +1,312 @@
+//! The multi-thread alias sampler of §5.1: two thread pools in a
+//! producer/consumer arrangement with deliberately *relaxed* consistency.
+//!
+//! * **Alias threads** (producers, 1 or few) build alias tables and
+//!   pre-draw a *stash* of samples per token-type, weighing token-types by
+//!   demand and refreshing the stashes whose supply runs low.
+//! * **Sampling threads** (consumers, ≈ #cores) pop pre-drawn samples
+//!   lock-free; when a stash runs dry they notify the producers and
+//!   *recycle old samples* rather than block — the paper's lock-free
+//!   relaxation ("substantially improves the performance ... without
+//!   compromising the quality of the results in practice").
+//!
+//! The stash is a fixed ring of `u32` outcomes plus an atomic cursor;
+//! `pop` is one `fetch_add` and one relaxed load. When the cursor passes
+//! the stash length, consumers wrap (recycling), and the demand counter
+//! tells producers which words to refresh first.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::alias::AliasTable;
+use crate::util::rng::Rng;
+
+/// One word's stash of pre-drawn topic samples.
+pub struct Stash {
+    samples: Box<[AtomicU32]>,
+    cursor: AtomicUsize,
+    /// Incremented on every refill — lets consumers detect freshness.
+    generation: AtomicU64,
+    /// Total pops (demand accounting for the producer's priority queue).
+    demand: AtomicU64,
+    /// Pops that wrapped past fresh supply (recycled samples).
+    recycled: AtomicU64,
+}
+
+impl Stash {
+    /// Create with capacity `cap` (rounded up to at least 8), filled from
+    /// `table`.
+    pub fn new(cap: usize, table: &AliasTable, rng: &mut Rng) -> Self {
+        let cap = cap.max(8);
+        let samples: Box<[AtomicU32]> = (0..cap)
+            .map(|_| AtomicU32::new(table.sample(rng) as u32))
+            .collect();
+        Stash {
+            samples,
+            cursor: AtomicUsize::new(0),
+            generation: AtomicU64::new(1),
+            demand: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// Capacity of the ring.
+    pub fn capacity(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Pop a sample (lock-free; recycles when supply is exhausted).
+    /// Returns `(sample, was_recycled)`.
+    #[inline]
+    pub fn pop(&self) -> (u32, bool) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.demand.fetch_add(1, Ordering::Relaxed);
+        let recycled = i >= self.samples.len();
+        if recycled {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+        let v = self.samples[i % self.samples.len()].load(Ordering::Relaxed);
+        (v, recycled)
+    }
+
+    /// Supply remaining before consumers start recycling.
+    pub fn remaining(&self) -> usize {
+        self.samples
+            .len()
+            .saturating_sub(self.cursor.load(Ordering::Relaxed))
+    }
+
+    /// Refill from a (rebuilt) alias table and reset the cursor.
+    pub fn refill(&self, table: &AliasTable, rng: &mut Rng) {
+        for slot in self.samples.iter() {
+            slot.store(table.sample(rng) as u32, Ordering::Relaxed);
+        }
+        self.cursor.store(0, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cumulative demand (pops).
+    pub fn total_demand(&self) -> u64 {
+        self.demand.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative recycled pops.
+    pub fn total_recycled(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Refill generation counter.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+}
+
+/// Message from consumers to the alias pool: "word w needs a refill".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RefillRequest {
+    /// Word whose stash ran low.
+    pub word: u32,
+}
+
+/// The producer/consumer pool: per-word stashes, an alias thread, and the
+/// lock-free demand/refill protocol.
+///
+/// Weight providers are supplied as a closure computing the *current*
+/// dense weights for a word — the alias thread calls it on refill, so the
+/// stash tracks the slowly-changing distribution exactly the way §3.3's
+/// proposal-rebuild schedule prescribes.
+pub struct AliasPool {
+    stashes: Vec<Arc<Stash>>,
+    refill_tx: mpsc::Sender<RefillRequest>,
+    shutdown: Arc<AtomicBool>,
+    producer: Option<std::thread::JoinHandle<u64>>,
+}
+
+impl AliasPool {
+    /// Spawn a pool over `vocab` words. `stash_cap` samples per word.
+    /// `weights(word)` must return the dense proposal weights.
+    pub fn spawn(
+        vocab: usize,
+        stash_cap: usize,
+        weights: impl Fn(u32) -> Vec<f64> + Send + 'static,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let stashes: Vec<Arc<Stash>> = (0..vocab)
+            .map(|w| {
+                let table = AliasTable::build(&weights(w as u32));
+                Arc::new(Stash::new(stash_cap, &table, &mut rng))
+            })
+            .collect();
+        let (tx, rx) = mpsc::channel::<RefillRequest>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let producer = {
+            let stashes = stashes.clone();
+            let shutdown = shutdown.clone();
+            let mut rng = Rng::new(seed ^ 0x9E3779B9);
+            std::thread::spawn(move || {
+                let mut refills = 0u64;
+                // Drain refill requests, most-recent-demand first. A
+                // simple dedup set bounds redundant rebuilds.
+                while !shutdown.load(Ordering::Relaxed) {
+                    match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                        Ok(req) => {
+                            let table = AliasTable::build(&weights(req.word));
+                            stashes[req.word as usize].refill(&table, &mut rng);
+                            refills += 1;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                refills
+            })
+        };
+        AliasPool {
+            stashes,
+            refill_tx: tx,
+            shutdown,
+            producer: Some(producer),
+        }
+    }
+
+    /// Pop a pre-drawn sample for `word`, requesting a refill when the
+    /// fresh supply is low (≤ ¼ capacity) and recycling when dry.
+    #[inline]
+    pub fn pop(&self, word: u32) -> (u32, bool) {
+        let stash = &self.stashes[word as usize];
+        let out = stash.pop();
+        if stash.remaining() * 4 <= stash.capacity() {
+            // Best-effort: losing the race to a full channel is fine.
+            let _ = self.refill_tx.send(RefillRequest { word });
+        }
+        out
+    }
+
+    /// Stash accessor (diagnostics).
+    pub fn stash(&self, word: u32) -> &Stash {
+        &self.stashes[word as usize]
+    }
+
+    /// Stop the producer and return how many refills it performed.
+    pub fn shutdown(mut self) -> u64 {
+        self.shutdown.store(true, Ordering::Relaxed);
+        match self.producer.take() {
+            Some(h) => h.join().unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+impl Drop for AliasPool {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.producer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stash_pop_and_recycle() {
+        let mut rng = Rng::new(1);
+        let table = AliasTable::build(&[1.0, 2.0, 3.0]);
+        let stash = Stash::new(16, &table, &mut rng);
+        for _ in 0..16 {
+            let (_, recycled) = stash.pop();
+            assert!(!recycled);
+        }
+        let (_, recycled) = stash.pop();
+        assert!(recycled, "17th pop of a 16-stash must recycle");
+        assert_eq!(stash.total_demand(), 17);
+        assert_eq!(stash.total_recycled(), 1);
+    }
+
+    #[test]
+    fn refill_resets_supply() {
+        let mut rng = Rng::new(2);
+        let table = AliasTable::build(&[1.0, 1.0]);
+        let stash = Stash::new(8, &table, &mut rng);
+        for _ in 0..8 {
+            stash.pop();
+        }
+        assert_eq!(stash.remaining(), 0);
+        stash.refill(&table, &mut rng);
+        assert_eq!(stash.remaining(), 8);
+        assert_eq!(stash.generation(), 2);
+    }
+
+    #[test]
+    fn pool_produces_correct_marginals() {
+        // Word 0 weights = [1, 3]: outcome 1 must appear ≈ 3× outcome 0.
+        let pool = AliasPool::spawn(
+            2,
+            512,
+            |w| {
+                if w == 0 {
+                    vec![1.0, 3.0]
+                } else {
+                    vec![1.0, 1.0]
+                }
+            },
+            7,
+        );
+        let mut counts = [0u64; 2];
+        for i in 0..50_000 {
+            let (s, _) = pool.pop(0);
+            counts[s as usize] += 1;
+            if i % 500 == 0 {
+                // Give the producer air so samples are mostly fresh (the
+                // recycled tail adds variance, not bias).
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        let ratio = counts[1] as f64 / counts[0].max(1) as f64;
+        assert!((ratio - 3.0).abs() < 0.8, "ratio {ratio}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_is_threadsafe_under_contention() {
+        let pool = Arc::new(AliasPool::spawn(4, 32, |_| vec![1.0; 8], 9));
+        let mut handles = Vec::new();
+        for th in 0..4 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut acc = 0u64;
+                for i in 0..50_000u64 {
+                    let w = ((i + th) % 4) as u32;
+                    let (s, _) = pool.pop(w);
+                    assert!(s < 8);
+                    acc += s as u64;
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Demand accounting must see every pop.
+        let total: u64 = (0..4).map(|w| pool.stash(w).total_demand()).sum();
+        assert_eq!(total, 200_000);
+    }
+
+    #[test]
+    fn producer_refills_under_load() {
+        let pool = AliasPool::spawn(1, 16, |_| vec![1.0; 4], 11);
+        for _ in 0..400 {
+            pool.pop(0);
+            std::thread::yield_now();
+        }
+        // Give the producer a beat to drain.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let gen = pool.stash(0).generation();
+        let refills = pool.shutdown();
+        assert!(gen > 1, "no refill ever happened");
+        assert!(refills > 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Generalized Stirling numbers for Pitman-Yor table arithmetic (§2.2).
+//!
+//! The PDP conditionals (eqs. 5–6) need ratios of generalized Stirling
+//! numbers `S^N_{M,a}` obeying
+//!
+//! ```text
+//! S^{N+1}_{M,a} = S^N_{M-1,a} + (N − M·a)·S^N_{M,a},   S^N_{M,a}=0 for M>N,
+//! S^0_{0,a}=1 (δ_{N,0} for M=0)
+//! ```
+//!
+//! The values overflow `f64` around `N≈170`, so the table stores
+//! `log S^N_{M,a}` and the samplers consume **ratios** (differences of
+//! logs), which is all eqs. (5)/(6) require. The table grows on demand and
+//! is memoized per discount `a`.
+
+/// Log-space triangular table of generalized Stirling numbers for one
+/// fixed discount `a`.
+#[derive(Clone, Debug)]
+pub struct StirlingTable {
+    a: f64,
+    /// `log_s[n][m]` = log S^n_{m,a}, for 0 ≤ m ≤ n; −∞ encodes zero.
+    log_s: Vec<Vec<f64>>,
+}
+
+impl StirlingTable {
+    /// New table for discount `a ∈ [0, 1)`, pre-grown to `n_init`.
+    pub fn new(a: f64, n_init: usize) -> Self {
+        assert!((0.0..1.0).contains(&a), "discount must be in [0,1)");
+        let mut t = StirlingTable {
+            a,
+            log_s: vec![vec![0.0]], // S^0_0 = 1 → log 1 = 0
+        };
+        t.grow_to(n_init);
+        t
+    }
+
+    /// Discount parameter.
+    pub fn discount(&self) -> f64 {
+        self.a
+    }
+
+    /// Largest `N` currently tabulated.
+    pub fn max_n(&self) -> usize {
+        self.log_s.len() - 1
+    }
+
+    /// Extend the table so `log_s(n, ·)` is available.
+    pub fn grow_to(&mut self, n: usize) {
+        while self.log_s.len() <= n {
+            let prev_n = self.log_s.len() - 1;
+            let prev = &self.log_s[prev_n];
+            let mut row = vec![f64::NEG_INFINITY; prev_n + 2];
+            // m ranges 0..=prev_n+1 for S^{prev_n+1}_m.
+            // m = 0: S^{N}_0 = δ_{N,0} → zero for N ≥ 1.
+            for m in 1..=prev_n + 1 {
+                let from_m_minus_1 = if m - 1 < prev.len() {
+                    prev[m - 1]
+                } else {
+                    f64::NEG_INFINITY
+                };
+                let coeff = prev_n as f64 - m as f64 * self.a;
+                let from_m = if m < prev.len() && coeff > 0.0 {
+                    prev[m] + coeff.ln()
+                } else {
+                    f64::NEG_INFINITY
+                };
+                row[m] = log_add(from_m_minus_1, from_m);
+            }
+            self.log_s.push(row);
+        }
+    }
+
+    /// `log S^n_{m,a}` (−∞ for impossible configurations).
+    pub fn log(&mut self, n: usize, m: usize) -> f64 {
+        if m > n {
+            return f64::NEG_INFINITY;
+        }
+        self.grow_to(n);
+        self.log_s[n][m]
+    }
+
+    /// Read-only `log S^n_{m,a}`. `n` must be within the grown range
+    /// (callers clamp; see `AliasPdp::stir`).
+    #[inline]
+    pub fn log_ro(&self, n: usize, m: usize) -> f64 {
+        if m > n {
+            return f64::NEG_INFINITY;
+        }
+        self.log_s[n][m]
+    }
+
+    /// The ratio `S^{n+1}_{m,a} / S^n_{m,a}` used by eq. (5)
+    /// (same table count, one more customer).
+    pub fn ratio_same_tables(&mut self, n: usize, m: usize) -> f64 {
+        let num = self.log(n + 1, m);
+        let den = self.log(n, m);
+        if den == f64::NEG_INFINITY {
+            return 0.0;
+        }
+        (num - den).exp()
+    }
+
+    /// The ratio `S^{n+1}_{m+1,a} / S^n_{m,a}` used by eq. (6)
+    /// (one more customer opening one more table).
+    pub fn ratio_new_table(&mut self, n: usize, m: usize) -> f64 {
+        let num = self.log(n + 1, m + 1);
+        let den = self.log(n, m);
+        if den == f64::NEG_INFINITY {
+            return if n == 0 && m == 0 { 1.0 } else { 0.0 };
+        }
+        (num - den).exp()
+    }
+}
+
+#[inline]
+fn log_add(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force S^n_m at a=0: unsigned Stirling numbers of the first
+    /// kind satisfy s(n+1,m) = s(n,m-1) + n·s(n,m).
+    fn stirling1(n: usize, m: usize) -> f64 {
+        let mut table = vec![vec![0.0f64; n + 2]; n + 2];
+        table[0][0] = 1.0;
+        for nn in 0..n {
+            for mm in 0..=nn {
+                let v = table[nn][mm];
+                if v == 0.0 {
+                    continue;
+                }
+                table[nn + 1][mm + 1] += v;
+                table[nn + 1][mm] += v * nn as f64;
+            }
+        }
+        table[n][m]
+    }
+
+    #[test]
+    fn zero_discount_matches_stirling_first_kind() {
+        let mut t = StirlingTable::new(0.0, 12);
+        for n in 0..=12usize {
+            for m in 0..=n {
+                let exact = stirling1(n, m);
+                let got = t.log(n, m);
+                if exact == 0.0 {
+                    assert_eq!(got, f64::NEG_INFINITY, "S^{n}_{m}");
+                } else {
+                    assert!(
+                        (got - exact.ln()).abs() < 1e-9,
+                        "S^{n}_{m}: got {got}, want {}",
+                        exact.ln()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recurrence_holds_for_positive_discount() {
+        let a = 0.3;
+        let mut t = StirlingTable::new(a, 30);
+        for n in 2..30usize {
+            for m in 1..n {
+                let lhs = t.log(n + 1, m);
+                let rhs = log_add(
+                    t.log(n, m - 1),
+                    t.log(n, m) + ((n as f64 - m as f64 * a).max(0.0)).ln(),
+                );
+                if lhs.is_finite() || rhs.is_finite() {
+                    assert!((lhs - rhs).abs() < 1e-9, "n={n} m={m}: {lhs} vs {rhs}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_cases() {
+        let mut t = StirlingTable::new(0.5, 5);
+        assert_eq!(t.log(0, 0), 0.0); // S^0_0 = 1
+        assert_eq!(t.log(3, 5), f64::NEG_INFINITY); // M > N
+        assert_eq!(t.log(4, 0), f64::NEG_INFINITY); // S^N_0 = 0 for N>0
+        // S^n_n = prod of nothing through the m-1 branch = 1.
+        for n in 1..=8 {
+            assert!((t.log(n, n) - 0.0).abs() < 1e-12, "S^{n}_{n} must be 1");
+        }
+    }
+
+    #[test]
+    fn ratios_are_finite_and_positive() {
+        let mut t = StirlingTable::new(0.1, 50);
+        for n in 1..50usize {
+            for m in 1..=n {
+                let r1 = t.ratio_same_tables(n, m);
+                let r2 = t.ratio_new_table(n, m);
+                assert!(r1.is_finite() && r1 >= 0.0, "r1({n},{m})={r1}");
+                assert!(r2.is_finite() && r2 > 0.0, "r2({n},{m})={r2}");
+            }
+        }
+    }
+
+    #[test]
+    fn grows_past_f64_overflow_regime() {
+        // Raw S^400_m overflows f64; log-space must stay finite.
+        let mut t = StirlingTable::new(0.25, 0);
+        let v = t.log(400, 50);
+        assert!(v.is_finite() && v > 0.0);
+        let r = t.ratio_same_tables(400, 50);
+        assert!(r.is_finite() && r > 0.0);
+    }
+
+    #[test]
+    fn first_customer_opens_first_table_ratio() {
+        let mut t = StirlingTable::new(0.2, 2);
+        // From (n=0,m=0), opening a table: S^1_1/S^0_0 = 1.
+        assert!((t.ratio_new_table(0, 0) - 1.0).abs() < 1e-12);
+        // Staying at m=0 is impossible: S^1_0 = 0.
+        assert_eq!(t.ratio_same_tables(0, 0), 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! A tiny leveled logger with monotonic timestamps.
+//!
+//! Every simulated node logs through this; verbosity is set once by the CLI
+//! (`-v`/`-q`). Output goes to stderr so benchmark tables on stdout stay
+//! machine-parsable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Set the global log threshold.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global log threshold.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Would a record at `l` be emitted?
+pub fn enabled(l: Level) -> bool {
+    l >= level()
+}
+
+/// Emit a log record (used via the macros below).
+pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = *START.get_or_init(Instant::now);
+    let elapsed = t0.elapsed();
+    let tag = match l {
+        Level::Trace => "TRACE",
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!(
+        "[{:>9.3}s {} {}] {}",
+        elapsed.as_secs_f64(),
+        tag,
+        target,
+        msg
+    );
+}
+
+/// `info!(target, "fmt {}", args...)`
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// `warn!(target, "fmt {}", args...)`
+#[macro_export]
+macro_rules! warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// `debug!(target, "fmt {}", args...)`
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+/// `error!(target, "fmt {}", args...)`
+#[macro_export]
+macro_rules! error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_filters() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

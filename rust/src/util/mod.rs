@@ -1,0 +1,15 @@
+//! Small self-contained substrates: deterministic RNG, running statistics,
+//! a minimal JSON emitter/parser, a leveled logger and wall-clock timers.
+//!
+//! These exist because the build environment is fully offline: only the
+//! `xla` crate's dependency closure is vendored, so `rand`, `serde`, `log`
+//! facades are re-implemented here at the small scale this crate needs.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::RunningStats;

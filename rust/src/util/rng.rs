@@ -1,0 +1,393 @@
+//! Deterministic pseudo-random number generation and the distributions the
+//! samplers and the synthetic-corpus generator need.
+//!
+//! The whole system is seeded: every node derives its stream from
+//! `(global_seed, node_id)` via SplitMix64, so cluster runs are bit-for-bit
+//! reproducible regardless of thread interleaving in the simulated network.
+
+/// SplitMix64 — used for seeding and stream derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality 64-bit generator.
+///
+/// Period 2^256−1; passes BigCrush. Chosen over PCG for its trivially
+/// branch-free hot path (the samplers draw tens of millions of variates
+/// per second per thread).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a seed. Two different seeds give
+    /// statistically independent streams (seeded through SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        // xoshiro must not start at the all-zero state.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a sub-component (e.g. a node or a
+    /// sampling thread) without correlating with the parent stream.
+    pub fn derive(&self, stream: u64) -> Rng {
+        let mut sm = self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = splitmix64(&mut sm);
+        }
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `(0, 1)` — never exactly zero (safe for `ln`).
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape, 1.0) via Marsaglia–Tsang; boosted for shape < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64_open();
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric/asymmetric Dirichlet draw; `alpha` per-component
+    /// concentrations. Returns a probability vector.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut g: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // Degenerate (all-tiny shapes underflowed): fall back to uniform.
+            let u = 1.0 / g.len() as f64;
+            g.iter_mut().for_each(|x| *x = u);
+        } else {
+            g.iter_mut().for_each(|x| *x /= sum);
+        }
+        g
+    }
+
+    /// Draw from an unnormalized discrete distribution by linear scan.
+    /// `O(len)` — the thing the alias method beats.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Poisson draw (Knuth for small mean, normal approximation for large).
+    pub fn poisson(&mut self, mean: f64) -> usize {
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0usize;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = mean + mean.sqrt() * self.normal();
+            x.max(0.0).round() as usize
+        }
+    }
+}
+
+/// A Zipf(s) distribution over ranks `0..n` sampled in O(1) through a
+/// precomputed alias table (dog-fooding [`crate::sampler::alias`] would be a
+/// circular dependency, so a tiny standalone table lives here).
+pub struct Zipf {
+    /// P(rank = i) — exposed for corpus diagnostics.
+    pub probs: Vec<f64>,
+    alias: Vec<(f64, u32)>,
+}
+
+impl Zipf {
+    /// Build a Zipf law with exponent `s` over `n` ranks.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut probs: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+        let z: f64 = probs.iter().sum();
+        probs.iter_mut().for_each(|p| *p /= z);
+        let alias = build_alias(&probs);
+        Zipf { probs, alias }
+    }
+
+    /// Draw a rank in `[0, n)`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.alias.len());
+        let (thresh, alt) = self.alias[i];
+        if rng.f64() < thresh {
+            i
+        } else {
+            alt as usize
+        }
+    }
+}
+
+/// Vose alias-table construction over a normalized probability vector.
+/// (The production alias table with its extra bookkeeping lives in
+/// `sampler::alias`; this minimal one keeps `util` dependency-free.)
+pub(crate) fn build_alias(probs: &[f64]) -> Vec<(f64, u32)> {
+    let n = probs.len();
+    let mut scaled: Vec<f64> = probs.iter().map(|p| p * n as f64).collect();
+    let mut small: Vec<u32> = Vec::new();
+    let mut large: Vec<u32> = Vec::new();
+    for (i, &p) in scaled.iter().enumerate() {
+        if p < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+    }
+    let mut table = vec![(1.0f64, 0u32); n];
+    while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+        table[s as usize] = (scaled[s as usize], l);
+        scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+        if scaled[l as usize] < 1.0 {
+            small.push(l);
+        } else {
+            large.push(l);
+        }
+    }
+    for l in large {
+        table[l as usize] = (1.0, l);
+    }
+    for s in small {
+        table[s as usize] = (1.0, s);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derived_streams_differ() {
+        let root = Rng::new(7);
+        let mut a = root.derive(1);
+        let mut b = root.derive(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "derived streams must be independent");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.f64_open();
+            assert!(y > 0.0 && y < 1.0);
+        }
+    }
+
+    #[test]
+    fn below_is_uniform_enough() {
+        let mut r = Rng::new(11);
+        let n = 10;
+        let mut counts = vec![0usize; n];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[r.below(n)] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(5);
+        for &shape in &[0.3, 1.0, 4.5, 20.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "gamma({shape}) mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(13);
+        let alpha = vec![0.1; 50];
+        let p = r.dirichlet(&alpha);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(17);
+        let w = [1.0, 0.0, 3.0];
+        let mut c = [0usize; 3];
+        for _ in 0..40_000 {
+            c[r.categorical(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        let ratio = c[2] as f64 / c[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn zipf_is_power_law() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::new(23);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Head rank must dominate the tail rank by roughly the power law.
+        assert!(counts[0] > counts[99] * 5);
+        // All mass accounted.
+        assert_eq!(counts.iter().sum::<usize>(), 200_000);
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Rng::new(29);
+        for &m in &[3.0, 50.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.poisson(m) as f64).sum::<f64>() / n as f64;
+            assert!((mean - m).abs() < 0.1 * m, "poisson({m}) mean {mean}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(31);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,90 @@
+//! Wall-clock timing helpers for the metrics pipeline and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch that accumulates across start/stop cycles — used to separate
+/// "sampling time" from "synchronization time" inside a worker iteration.
+#[derive(Debug)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// New, stopped, zeroed stopwatch.
+    pub fn new() -> Self {
+        Stopwatch {
+            acc: Duration::ZERO,
+            started: None,
+        }
+    }
+
+    /// Start (no-op if running).
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop (no-op if stopped) and fold the lap into the accumulator.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.acc += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including a running lap).
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.acc + t0.elapsed(),
+            None => self.acc,
+        }
+    }
+
+    /// Reset to zero and stop.
+    pub fn reset(&mut self) {
+        self.acc = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_laps() {
+        let mut s = Stopwatch::new();
+        s.start();
+        std::thread::sleep(Duration::from_millis(5));
+        s.stop();
+        let first = s.elapsed();
+        assert!(first >= Duration::from_millis(4));
+        s.start();
+        std::thread::sleep(Duration::from_millis(5));
+        s.stop();
+        assert!(s.elapsed() > first);
+        s.reset();
+        assert_eq!(s.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

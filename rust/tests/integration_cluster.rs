@@ -1,0 +1,149 @@
+//! Integration tests across the parameter-server + sampler + projection
+//! stack: distributed training equivalence, lossy transport, projection
+//! placements, and the end-to-end consistency story.
+
+use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
+use hplvm::coordinator::trainer::Trainer;
+use std::time::Duration;
+
+fn base_cfg(model: ModelKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model;
+    cfg.params.topics = 10;
+    cfg.corpus.n_docs = 240;
+    cfg.corpus.vocab_size = 500;
+    cfg.corpus.n_topics = 10;
+    cfg.corpus.doc_len_mean = 20.0;
+    cfg.cluster.clients = 3;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(100);
+    cfg.iterations = 8;
+    cfg.eval_every = 4;
+    cfg.test_docs = 40;
+    cfg
+}
+
+/// Distributed AliasLDA must converge to roughly the same perplexity as a
+/// single-client run — eventual consistency costs iterations, not
+/// correctness.
+#[test]
+fn distributed_matches_single_client_quality() {
+    let mut single = base_cfg(ModelKind::AliasLda);
+    single.cluster.clients = 1;
+    single.iterations = 10;
+    let rep1 = Trainer::new(single).run().unwrap();
+
+    let mut multi = base_cfg(ModelKind::AliasLda);
+    multi.cluster.clients = 4;
+    multi.iterations = 10;
+    let rep4 = Trainer::new(multi).run().unwrap();
+
+    let p1 = rep1.final_perplexity();
+    let p4 = rep4.final_perplexity();
+    assert!(p1.is_finite() && p4.is_finite());
+    let rel = (p4 - p1).abs() / p1;
+    assert!(rel < 0.30, "single {p1:.1} vs distributed {p4:.1}");
+}
+
+/// A lossy, high-latency transport slows mixing but must not break
+/// training (the eventual-consistency claim).
+#[test]
+fn survives_lossy_network() {
+    let mut cfg = base_cfg(ModelKind::AliasLda);
+    cfg.cluster.net.drop_prob = 0.15;
+    cfg.cluster.net.base_latency = Duration::from_millis(1);
+    cfg.cluster.net.jitter = Duration::from_millis(2);
+    let rep = Trainer::new(cfg).run().unwrap();
+    assert!(rep.final_perplexity().is_finite());
+    let (_, dropped, _, _) = rep.net;
+    assert!(dropped > 0, "drop injection never fired");
+    // Quality is degraded but sane: better than chance (vocab 500).
+    assert!(rep.final_perplexity() < 450.0);
+}
+
+/// All three projection algorithm placements keep PDP training stable.
+#[test]
+fn projection_placements_all_converge_pdp() {
+    let mut finals = Vec::new();
+    for mode in [
+        ProjectionMode::SingleMachine,
+        ProjectionMode::Distributed,
+        ProjectionMode::OnDemandServer,
+    ] {
+        let mut cfg = base_cfg(ModelKind::AliasPdp);
+        cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+        cfg.projection = mode;
+        cfg.cluster.net.drop_prob = 0.05;
+        let rep = Trainer::new(cfg).run().unwrap();
+        let p = rep.final_perplexity();
+        assert!(p.is_finite(), "{mode:?} produced non-finite perplexity");
+        finals.push((mode, p));
+    }
+    // All placements land in the same quality regime.
+    let max = finals.iter().map(|&(_, p)| p).fold(0.0f64, f64::max);
+    let min = finals.iter().map(|&(_, p)| p).fold(f64::MAX, f64::min);
+    assert!(
+        max / min < 1.6,
+        "projection placements disagree wildly: {finals:?}"
+    );
+}
+
+/// Algorithm 3 (server-side) actually performs corrections when the
+/// transport is hostile.
+#[test]
+fn ondemand_server_projection_corrects() {
+    let mut cfg = base_cfg(ModelKind::AliasPdp);
+    cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+    cfg.projection = ProjectionMode::OnDemandServer;
+    cfg.cluster.net.drop_prob = 0.20;
+    cfg.cluster.clients = 4;
+    let rep = Trainer::new(cfg).run().unwrap();
+    assert!(
+        rep.corrections > 0,
+        "server-side projection never corrected anything under 20% loss"
+    );
+}
+
+/// The data-points column must never exceed the client count and the
+/// iteration times must be recorded for every row.
+#[test]
+fn report_shape_is_sane() {
+    let cfg = base_cfg(ModelKind::AliasLda);
+    let clients = cfg.cluster.clients as u64;
+    let rep = Trainer::new(cfg).run().unwrap();
+    assert!(!rep.per_iteration.is_empty());
+    for row in &rep.per_iteration {
+        assert!(row.datapoints <= clients);
+        if row.datapoints > 0 {
+            assert!(row.time.mean() > 0.0);
+            assert!(row.topics_per_word.mean() > 0.0);
+        }
+    }
+    assert!(rep.tokens_per_sec > 0.0);
+    assert!(rep.net.0 > 0, "no network traffic recorded");
+}
+
+/// HDP under the full distributed stack stays within its truncation and
+/// produces finite estimates with projection enabled.
+#[test]
+fn hdp_distributed_with_drops() {
+    let mut cfg = base_cfg(ModelKind::AliasHdp);
+    cfg.params.topics = 24;
+    cfg.cluster.net.drop_prob = 0.10;
+    cfg.projection = ProjectionMode::Distributed;
+    let rep = Trainer::new(cfg).run().unwrap();
+    assert!(rep.final_perplexity().is_finite());
+    assert!(rep.final_log_lik().is_finite());
+}
+
+/// Determinism: two runs with identical config and seed produce identical
+/// corpora and the same *number* of records (thread scheduling may differ,
+/// so values can differ — but the workload structure must be stable).
+#[test]
+fn run_structure_is_reproducible() {
+    let cfg = base_cfg(ModelKind::AliasLda);
+    let a = Trainer::new(cfg.clone()).run().unwrap();
+    let b = Trainer::new(cfg).run().unwrap();
+    assert_eq!(a.per_iteration.len(), b.per_iteration.len());
+    assert_eq!(a.total_tokens, b.total_tokens);
+}

@@ -1,0 +1,372 @@
+//! Randomized property tests over the core invariants (no proptest crate
+//! offline — the generators are seeded loops over the crate's own RNG,
+//! which keeps every failure reproducible from the printed seed).
+
+use hplvm::projection::{project_pair, PairRule};
+use hplvm::ps::snapshot;
+use hplvm::sampler::alias::AliasTable;
+use hplvm::sampler::counts::CountMatrix;
+use hplvm::sampler::doc_state::SparseCounts;
+use hplvm::sampler::stirling::StirlingTable;
+use hplvm::util::json::Json;
+use hplvm::util::rng::Rng;
+use hplvm::util::stats::RunningStats;
+use std::collections::HashMap;
+
+/// Alias tables must reproduce arbitrary weight vectors' distributions.
+#[test]
+fn prop_alias_table_matches_weights() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(200);
+        let mut weights: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+        // Sprinkle zeros.
+        for _ in 0..n / 4 {
+            let i = rng.below(n);
+            weights[i] = 0.0;
+        }
+        let total: f64 = weights.iter().sum();
+        if total == 0.0 {
+            continue;
+        }
+        let table = AliasTable::build(&weights);
+        let draws = 60_000;
+        let mut counts = vec![0u64; n];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        for i in 0..n {
+            let expect = weights[i] / total * draws as f64;
+            if weights[i] == 0.0 {
+                assert_eq!(counts[i], 0, "seed {seed}: zero weight drawn");
+            } else if expect >= 20.0 {
+                let dev = (counts[i] as f64 - expect).abs();
+                assert!(
+                    dev < 6.0 * expect.sqrt() + 1.0,
+                    "seed {seed}: outcome {i} count {} expect {expect}",
+                    counts[i]
+                );
+            }
+        }
+    }
+}
+
+/// Projection: idempotent, feasible, and never moves a feasible point —
+/// over a random i32 grid far beyond the unit-test range.
+#[test]
+fn prop_projection_feasible_idempotent() {
+    let mut rng = Rng::new(99);
+    for _ in 0..10_000 {
+        let a = rng.below(2001) as i32 - 1000;
+        let b = rng.below(2001) as i32 - 1000;
+        for rule in [PairRule::TablePolytope, PairRule::NonNegative] {
+            let (a1, b1) = project_pair(rule, a, b);
+            assert!(rule.holds(a1, b1), "({a},{b}) → ({a1},{b1}) infeasible");
+            assert_eq!(project_pair(rule, a1, b1), (a1, b1), "not idempotent");
+            if rule.holds(a, b) {
+                assert_eq!((a1, b1), (a, b), "moved a feasible point");
+            }
+        }
+    }
+}
+
+/// Stirling recurrence S^{N+1}_M = S^N_{M−1} + (N−Ma)S^N_M at random
+/// discounts, checked in linear space via ratios.
+#[test]
+fn prop_stirling_recurrence_random_discounts() {
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let a = rng.f64() * 0.9;
+        let mut t = StirlingTable::new(a, 60);
+        for _ in 0..200 {
+            let n = 1 + rng.below(58);
+            let m = 1 + rng.below(n);
+            let lhs = t.log(n + 1, m);
+            let r1 = t.log(n, m - 1);
+            let coeff = n as f64 - m as f64 * a;
+            let r2 = if coeff > 0.0 {
+                t.log(n, m) + coeff.ln()
+            } else {
+                f64::NEG_INFINITY
+            };
+            let rhs = if r1 == f64::NEG_INFINITY {
+                r2
+            } else if r2 == f64::NEG_INFINITY {
+                r1
+            } else {
+                let hi = r1.max(r2);
+                hi + ((r1 - hi).exp() + (r2 - hi).exp()).ln()
+            };
+            if lhs.is_finite() || rhs.is_finite() {
+                assert!(
+                    (lhs - rhs).abs() < 1e-8,
+                    "a={a} n={n} m={m}: {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+}
+
+/// SparseCounts behaves exactly like a HashMap reference model under
+/// random inc/dec/set sequences.
+#[test]
+fn prop_sparse_counts_vs_hashmap_model() {
+    let mut rng = Rng::new(31);
+    for _ in 0..50 {
+        let mut sc = SparseCounts::new();
+        let mut model: HashMap<u32, u32> = HashMap::new();
+        for _ in 0..500 {
+            let t = rng.below(20) as u32;
+            match rng.below(3) {
+                0 => {
+                    sc.inc(t);
+                    *model.entry(t).or_insert(0) += 1;
+                }
+                1 => {
+                    if model.get(&t).copied().unwrap_or(0) > 0 {
+                        sc.dec(t);
+                        let e = model.get_mut(&t).unwrap();
+                        *e -= 1;
+                        if *e == 0 {
+                            model.remove(&t);
+                        }
+                    }
+                }
+                _ => {
+                    let c = rng.below(5) as u32;
+                    sc.set_raw(t, c);
+                    if c == 0 {
+                        model.remove(&t);
+                    } else {
+                        model.insert(t, c);
+                    }
+                }
+            }
+            // Full-state comparison.
+            assert_eq!(sc.nnz(), model.len());
+            for (&t, &c) in &model {
+                assert_eq!(sc.get(t), c);
+            }
+            assert_eq!(sc.total(), model.values().map(|&c| c as u64).sum::<u64>());
+        }
+    }
+}
+
+/// The replica merge rule: replica == server + unflushed local deltas,
+/// under arbitrary interleavings of inc / drain / pull.
+#[test]
+fn prop_replica_merge_algebra() {
+    let mut rng = Rng::new(17);
+    for _ in 0..30 {
+        let k = 4;
+        let vocab = 10;
+        let mut replica = CountMatrix::new(vocab, k);
+        // The "server": authoritative rows + what we've pushed.
+        let mut server = vec![vec![0i32; k]; vocab];
+        // Shadow of the unflushed local deltas.
+        let mut pending = vec![vec![0i32; k]; vocab];
+        for _ in 0..400 {
+            match rng.below(4) {
+                // Local Gibbs move.
+                0 | 1 => {
+                    let w = rng.below(vocab) as u32;
+                    let t = rng.below(k);
+                    let d = if rng.coin(0.5) { 1 } else { -1 };
+                    replica.inc(w, t, d);
+                    pending[w as usize][t] += d;
+                }
+                // Push: drain deltas into the server.
+                2 => {
+                    for (w, row) in replica.drain_deltas() {
+                        for t in 0..k {
+                            server[w as usize][t] += row[t];
+                            pending[w as usize][t] = 0;
+                        }
+                    }
+                    // NB: drain returns only non-zero rows; zero rows'
+                    // pending is already zero.
+                    for p in pending.iter_mut() {
+                        p.iter_mut().for_each(|x| *x = 0);
+                    }
+                }
+                // Pull a random word: replica := server + pending.
+                _ => {
+                    let w = rng.below(vocab) as u32;
+                    let srow: Vec<i32> = server[w as usize].clone();
+                    replica.apply_pull(w, &srow);
+                    for t in 0..k {
+                        assert_eq!(
+                            replica.get(w, t),
+                            server[w as usize][t] + pending[w as usize][t],
+                            "merge rule violated at ({w},{t})"
+                        );
+                    }
+                }
+            }
+        }
+        // Final: flush everything, pull everything → exact agreement.
+        for (w, row) in replica.drain_deltas() {
+            for t in 0..k {
+                server[w as usize][t] += row[t];
+            }
+        }
+        for w in 0..vocab as u32 {
+            let srow = server[w as usize].clone();
+            replica.apply_pull(w, &srow);
+        }
+        for w in 0..vocab {
+            for t in 0..k {
+                assert_eq!(replica.get(w as u32, t), server[w][t]);
+            }
+        }
+        // Totals must be consistent after all that.
+        let mut totals = vec![0i64; k];
+        for w in 0..vocab {
+            for t in 0..k {
+                totals[t] += server[w][t] as i64;
+            }
+        }
+        assert_eq!(replica.totals(), &totals[..]);
+    }
+}
+
+/// JSON parse∘emit is the identity on randomly generated documents.
+#[test]
+fn prop_json_roundtrip_random() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.coin(0.5)),
+            2 => Json::Num((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(23);
+    for _ in 0..300 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{e} in {text}"));
+        assert_eq!(v, back, "roundtrip broke for {text}");
+    }
+}
+
+/// RunningStats merge is associative and order-independent (up to fp
+/// noise) for random partitions of random data.
+#[test]
+fn prop_stats_merge_partition_invariance() {
+    let mut rng = Rng::new(41);
+    for _ in 0..50 {
+        let n = 2 + rng.below(300);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 100.0).collect();
+        let mut whole = RunningStats::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        // Random 3-way partition, merged in random order.
+        let mut parts = [RunningStats::new(), RunningStats::new(), RunningStats::new()];
+        for &x in &xs {
+            parts[rng.below(3)].push(x);
+        }
+        let mut merged = RunningStats::new();
+        let mut order = [0usize, 1, 2];
+        rng.shuffle(&mut order);
+        for &i in &order {
+            merged.merge(&parts[i]);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-9 * (1.0 + whole.mean().abs()));
+        assert!(
+            (merged.variance() - whole.variance()).abs()
+                < 1e-8 * (1.0 + whole.variance().abs())
+        );
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+    }
+}
+
+/// Snapshot encode/decode is the identity on random stores and client
+/// states.
+#[test]
+fn prop_snapshot_roundtrip_random() {
+    let mut rng = Rng::new(53);
+    for _ in 0..30 {
+        let mut store = snapshot::Store::new();
+        for _ in 0..rng.below(60) {
+            let key = (rng.below(3) as u8, rng.below(1000) as u32);
+            let row: Vec<i32> = (0..rng.below(16))
+                .map(|_| rng.below(100_000) as i32 - 50_000)
+                .collect();
+            store.insert(key, row);
+        }
+        let bytes = snapshot::encode_store(&store);
+        assert_eq!(snapshot::decode_store(&bytes).unwrap(), store);
+
+        let n_docs = rng.below(10);
+        let snap = snapshot::ClientSnapshot {
+            shard: rng.below(100),
+            iteration: rng.next_u64() % 10_000,
+            z: (0..n_docs)
+                .map(|_| (0..rng.below(30)).map(|_| rng.below(500) as u32).collect())
+                .collect(),
+            r: (0..n_docs)
+                .map(|_| (0..rng.below(30)).map(|_| rng.coin(0.5)).collect())
+                .collect(),
+        };
+        // r rows must match z rows in length for the roundtrip contract.
+        let snap = snapshot::ClientSnapshot {
+            r: snap
+                .z
+                .iter()
+                .zip(snap.r.iter())
+                .map(|(z, r)| {
+                    let mut r = r.clone();
+                    r.resize(z.len(), false);
+                    r
+                })
+                .collect(),
+            ..snap
+        };
+        let bytes = snapshot::encode_client(&snap);
+        assert_eq!(snapshot::decode_client(&bytes).unwrap(), snap);
+    }
+}
+
+/// Ring routing is deterministic, total, and balanced for random vocab
+/// samples at random slot counts.
+#[test]
+fn prop_ring_total_and_balanced() {
+    let mut rng = Rng::new(61);
+    for _ in 0..10 {
+        let slots = 1 + rng.below(12);
+        let ring = hplvm::ps::ring::Ring::new(slots, 64);
+        let mut counts = vec![0usize; slots];
+        for _ in 0..6_000 {
+            let w = rng.below(1_000_000) as u32;
+            let m = rng.below(3) as u8;
+            let s = ring.route(m, w);
+            assert_eq!(s, ring.route(m, w));
+            counts[s as usize] += 1;
+        }
+        let expect = 6_000.0 / slots as f64;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > 0.3 * expect && (c as f64) < 2.2 * expect,
+                "slot {s}/{slots}: {c} keys (expect ≈{expect})"
+            );
+        }
+    }
+}

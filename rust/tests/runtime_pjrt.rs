@@ -1,0 +1,162 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! check bit-level agreement with the pure-rust evaluation path.
+//!
+//! Requires `make artifacts` (the tests skip, loudly, when the artifacts
+//! are absent — `make test` always builds them first).
+
+use hplvm::runtime::{DenseEval, Engine, EvalService};
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn engine() -> Option<Engine> {
+    match Engine::load(artifacts_dir()) {
+        Ok(Some(e)) => Some(e),
+        _ => {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn log_dot_matches_rust_math() {
+    let Some(engine) = engine() else { return };
+    let k = 64;
+    let rows = 5;
+    let mut rng = hplvm::util::rng::Rng::new(42);
+    let theta: Vec<f32> = (0..rows * k).map(|_| rng.f64() as f32).collect();
+    let phi: Vec<f32> = (0..rows * k).map(|_| rng.f64() as f32).collect();
+    let got = engine.log_dot(&theta, &phi, rows, k).unwrap();
+    assert_eq!(got.len(), rows);
+    for r in 0..rows {
+        let dot: f64 = (0..k)
+            .map(|t| theta[r * k + t] as f64 * phi[r * k + t] as f64)
+            .sum();
+        assert!(
+            (got[r] as f64 - dot.ln()).abs() < 1e-4,
+            "row {r}: pjrt {} vs rust {}",
+            got[r],
+            dot.ln()
+        );
+    }
+}
+
+#[test]
+fn log_dot_full_batch_and_padding() {
+    let Some(engine) = engine() else { return };
+    let meta_batch = engine.manifest().entries["log_dot"].batch;
+    let k = 8;
+    // Exactly the artifact batch.
+    let theta = vec![0.125f32; meta_batch * k];
+    let phi = vec![0.5f32; meta_batch * k];
+    let got = engine.log_dot(&theta, &phi, meta_batch, k).unwrap();
+    assert_eq!(got.len(), meta_batch);
+    for &v in &got {
+        assert!((v - 0.5f32.ln()).abs() < 1e-5);
+    }
+    // Over-batch must error cleanly.
+    let too_big = vec![0.1f32; (meta_batch + 1) * k];
+    assert!(engine
+        .log_dot(&too_big, &too_big, meta_batch + 1, k)
+        .is_err());
+}
+
+#[test]
+fn log_dot_zero_rows_are_clamped_finite() {
+    let Some(engine) = engine() else { return };
+    let k = 16;
+    let theta = vec![0.0f32; k];
+    let phi = vec![0.0f32; k];
+    let got = engine.log_dot(&theta, &phi, 1, k).unwrap();
+    assert!(got[0].is_finite(), "zero row must clamp, got {}", got[0]);
+}
+
+#[test]
+fn phi_dense_matches_rust_math() {
+    let Some(engine) = engine() else { return };
+    let k = 32;
+    let rows = 4;
+    let counts: Vec<f32> = (0..rows * k).map(|i| (i % 13) as f32 - 2.0).collect();
+    let denom: Vec<f32> = (0..k).map(|t| 10.0 + t as f32).collect();
+    let beta = 0.05f32;
+    let got = engine.phi_dense(&counts, &denom, beta, rows, k).unwrap();
+    assert_eq!(got.len(), rows * k);
+    for r in 0..rows {
+        for t in 0..k {
+            let c = counts[r * k + t].max(0.0);
+            let want = (c + beta) / denom[t];
+            let g = got[r * k + t];
+            assert!((g - want).abs() < 1e-5, "cell ({r},{t}): {g} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn eval_service_roundtrip_from_other_threads() {
+    let svc = match EvalService::spawn(artifacts_dir()) {
+        Ok(Some(s)) => std::sync::Arc::new(s),
+        _ => {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+    };
+    assert!(svc.supports_log_dot(8));
+    let mut handles = Vec::new();
+    for th in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let k = 8;
+            let theta = vec![1.0f32 / k as f32; k];
+            let phi = vec![(th as f32 + 1.0) * 0.1; k];
+            let out = svc.log_dot(&theta, &phi, 1, k).unwrap();
+            let want = ((th as f32 + 1.0) * 0.1).ln();
+            assert!((out[0] - want).abs() < 1e-5, "{} vs {}", out[0], want);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// End-to-end: the perplexity evaluator must produce (nearly) identical
+/// numbers through PJRT and through pure rust.
+#[test]
+fn perplexity_pjrt_equals_pure_rust() {
+    let svc = match EvalService::spawn(artifacts_dir()) {
+        Ok(Some(s)) => s,
+        _ => {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+    };
+    let (corpus, _) = hplvm::corpus::generator::CorpusConfig {
+        n_docs: 120,
+        vocab_size: 400,
+        n_topics: 8,
+        doc_len_mean: 25.0,
+        ..Default::default()
+    }
+    .generate();
+    let (train, test) = corpus.split_test(30);
+    let mut rng = hplvm::util::rng::Rng::new(5);
+    let mut sampler =
+        hplvm::sampler::alias_lda::AliasLda::new(train.docs, 400, 8, 0.1, 0.01, &mut rng);
+    for _ in 0..5 {
+        for d in 0..sampler.docs.len() {
+            hplvm::sampler::DocSampler::sample_doc(&mut sampler, d, &mut rng);
+        }
+    }
+    let pure = hplvm::eval::perplexity::perplexity(&sampler, &test, 3, None);
+    let pjrt = hplvm::eval::perplexity::perplexity(&sampler, &test, 3, Some(&svc));
+    assert_eq!(pure.tokens, pjrt.tokens);
+    let rel = (pure.perplexity - pjrt.perplexity).abs() / pure.perplexity;
+    assert!(
+        rel < 1e-3,
+        "pure {} vs pjrt {} (rel {rel})",
+        pure.perplexity,
+        pjrt.perplexity
+    );
+}
