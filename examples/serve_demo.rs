@@ -1,0 +1,83 @@
+//! Train → snapshot → serve, end to end: train a small LDA model on the
+//! simulated cluster, persist the server snapshots, load them into the
+//! inference service, and answer topic-mixture queries for held-out
+//! documents.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use hplvm::config::TrainConfig;
+use hplvm::coordinator::trainer::Trainer;
+use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
+use std::sync::Arc;
+
+fn main() {
+    let snapdir = std::env::temp_dir().join(format!("hplvm_serve_demo_{}", std::process::id()));
+
+    // 1. Train with snapshots persisted (the serve handoff).
+    let mut cfg = TrainConfig::small_lda();
+    cfg.iterations = 20;
+    cfg.cluster.snapshot_dir = Some(snapdir.clone());
+    println!(
+        "training {} | {} docs, vocab {}, K={} → snapshots in {}",
+        cfg.model.name(),
+        cfg.corpus.n_docs,
+        cfg.corpus.vocab_size,
+        cfg.params.topics,
+        snapdir.display()
+    );
+    let report = Trainer::new(cfg.clone()).run().expect("training failed");
+    println!(
+        "trained: final perplexity {:.1} ({} tokens)",
+        report.final_perplexity(),
+        report.total_tokens
+    );
+
+    // 2. Load the frozen model — no training config needed: the v2
+    // snapshot header carries model, K, α, β and the ring geometry.
+    let model = Arc::new(ServingModel::load_dir(&snapdir).expect("snapshot load failed"));
+    println!(
+        "serving model: {} | K={} vocab={} | {} frozen tokens",
+        model.meta().model,
+        model.k(),
+        model.vocab(),
+        model.total_tokens()
+    );
+
+    // 3. Serve held-out documents (regenerate the corpus; the tail docs
+    // were never trained on).
+    let (corpus, _) = cfg.corpus.generate();
+    let (_, test) = corpus.split_test(cfg.test_docs);
+    let svc = InferenceService::spawn(model.clone(), ServeConfig::default());
+    let t0 = std::time::Instant::now();
+    for (i, doc) in test.docs.iter().take(5).enumerate() {
+        let res = svc.infer(doc.tokens.clone()).expect("service closed");
+        let top: Vec<String> = res
+            .top_topics(3)
+            .into_iter()
+            .map(|(t, w)| format!("{t}:{w:.3}"))
+            .collect();
+        println!(
+            "doc {i:>2} ({:>3} tokens): top topics {}",
+            doc.tokens.len(),
+            top.join("  ")
+        );
+    }
+    let n = test.docs.len();
+    for doc in &test.docs {
+        svc.infer(doc.tokens.clone()).expect("service closed");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    println!(
+        "served {} queries in {:.2}s ({:.0} q/s, {} micro-batches); cache: {:?}",
+        stats.served,
+        secs,
+        (n + 5) as f64 / secs,
+        stats.batches,
+        model.cache_stats()
+    );
+    svc.shutdown();
+    std::fs::remove_dir_all(&snapdir).ok();
+}

@@ -118,6 +118,19 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) {
     }
 }
 
+/// Nearest-rank percentile over raw samples (`pct` in `[0, 100]`);
+/// sorts a copy. NaN for an empty sample set. Used by the serving
+/// latency reports (p50/p99).
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// The published-system survey behind Fig 1 (parameters vs cores), as
 /// reported in the paper's related-work comparison; this repo's own runs
 /// append a live row.
@@ -157,6 +170,17 @@ mod tests {
         });
         let tp = r.throughput();
         assert!(tp > 0.0 && tp < 1_500_000.0, "tp {tp}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 
     #[test]

@@ -75,6 +75,19 @@ impl Trainer {
                 // silent-slot failover is a last resort. Explicit kills
                 // (failure injection) are detected immediately either way.
                 liveness_timeout: Duration::from_secs(10),
+                // Stamped into every server snapshot so a snapshot
+                // directory is self-describing for the serving layer.
+                meta: snapshot::SnapshotMeta {
+                    model: cfg.model.name().to_string(),
+                    k: cfg.params.topics as u32,
+                    alpha: cfg.params.alpha,
+                    beta: cfg.params.beta,
+                    vocab_size: cfg.corpus.vocab_size as u32,
+                    slot: 0,
+                    n_servers: cfg.cluster.n_servers() as u32,
+                    vnodes: cfg.cluster.vnodes as u32,
+                    iterations: cfg.iterations,
+                },
             },
         );
 

@@ -10,4 +10,4 @@ pub mod loglik;
 pub mod perplexity;
 pub mod topics;
 
-pub use perplexity::{perplexity, PerplexityReport, TopicModelView};
+pub use perplexity::{perplexity, score_with_theta, PerplexityReport, TopicModelView};

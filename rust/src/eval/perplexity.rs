@@ -152,6 +152,43 @@ pub fn perplexity(
     }
 }
 
+/// Score documents with *externally supplied* topic mixtures (e.g. the
+/// serving layer's fold-in estimates) instead of the internal EM fold-in:
+/// `log p(w_d) = Σ_i log Σ_t θ_d[t]·φ(w_i,t)`. Documents beyond
+/// `thetas.len()` and empty documents are skipped.
+pub fn score_with_theta(
+    view: &dyn TopicModelView,
+    docs: &[crate::corpus::doc::Document],
+    thetas: &[Vec<f64>],
+) -> PerplexityReport {
+    let k = view.k();
+    let mut total_ll = 0.0f64;
+    let mut tokens = 0u64;
+    for (doc, theta) in docs.iter().zip(thetas.iter()) {
+        if doc.tokens.is_empty() {
+            continue;
+        }
+        for &w in &doc.tokens {
+            tokens += 1;
+            let mut p = 0.0;
+            for t in 0..k.min(theta.len()) {
+                p += theta[t] * view.phi(w, t);
+            }
+            total_ll += p.max(1e-300).ln();
+        }
+    }
+    let avg = if tokens == 0 {
+        0.0
+    } else {
+        total_ll / tokens as f64
+    };
+    PerplexityReport {
+        avg_log_lik: avg,
+        perplexity: (-avg).exp(),
+        tokens,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,5 +261,28 @@ mod tests {
         let rep = perplexity(&Toy, &corpus(vec![]), 3, None);
         assert_eq!(rep.tokens, 0);
         assert_eq!(rep.avg_log_lik, 0.0);
+    }
+
+    #[test]
+    fn score_with_theta_matches_fold_in_at_same_theta() {
+        // With an (almost) pure-topic doc both estimators converge to the
+        // same θ, so the scores must agree closely.
+        let c = corpus(vec![vec![0; 40]]);
+        let em = perplexity(&Toy, &c, 10, None);
+        let ext = score_with_theta(&Toy, &c.docs, &[vec![1.0, 0.0]]);
+        assert_eq!(em.tokens, ext.tokens);
+        assert!(
+            (em.perplexity - ext.perplexity).abs() / em.perplexity < 0.05,
+            "em {} vs external {}",
+            em.perplexity,
+            ext.perplexity
+        );
+    }
+
+    #[test]
+    fn score_with_theta_handles_short_theta_list() {
+        let c = corpus(vec![vec![0, 1], vec![1, 1]]);
+        let rep = score_with_theta(&Toy, &c.docs, &[vec![0.5, 0.5]]);
+        assert_eq!(rep.tokens, 2, "second doc has no θ and is skipped");
     }
 }

@@ -11,6 +11,11 @@
 //!
 //! ## Layering
 //!
+//! * **Layer 4 ([`serve`])** — the snapshot-backed inference service:
+//!   loads the server snapshots a training run wrote, freezes the
+//!   word–topic statistics, builds per-word alias tables lazily under an
+//!   LRU byte budget, and answers fold-in queries
+//!   (`doc → topic mixture`) through a micro-batching worker pool.
 //! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
 //!   simulated cluster transport, server group / client groups / scheduler /
 //!   server manager, samplers, projection, metrics, CLI.
@@ -22,6 +27,10 @@
 //! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through
 //!   the PJRT C API (`xla` crate) so the evaluation path runs the compiled
 //!   kernels with **no python at training time**.
+//!
+//! Training hands off to serving through [`ps::snapshot`]: v2 server
+//! snapshots carry the hyperparameters (model, K, α, β) and ring
+//! geometry, so a snapshot directory is all the inference server needs.
 //!
 //! ## Quickstart
 //!
@@ -44,6 +53,7 @@ pub mod projection;
 pub mod ps;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

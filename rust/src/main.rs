@@ -3,20 +3,26 @@
 //! ```text
 //! hplvm train [--model aliaslda|yahoolda|pdp|hdp] [--clients N] [--topics K]
 //!             [--iterations N] [--docs N] [--vocab V] [--projection MODE]
-//!             [--config file.json] [--out report.json] [--pjrt] [-v|-q]
+//!             [--snapshot-dir DIR] [--config file.json] [--out report.json]
+//!             [--pjrt] [-v|-q]
+//! hplvm serve --snapshot DIR [--queries N] [--workers W] [--batch B]
+//!             [--cache-mb M] [--seed S]      # load-test the inference server
+//! hplvm infer --snapshot DIR --tokens "3 17 42" [--top N]
 //! hplvm eval-engine          # check PJRT artifacts load and execute
 //! hplvm info                 # print the resolved configuration
 //! ```
 
 use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
 use hplvm::coordinator::trainer::Trainer;
+use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
 use hplvm::util::json::Json;
 use hplvm::util::logging::{self, Level};
+use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hplvm <train|eval-engine|info> [options]\n\
-         options:\n\
+        "usage: hplvm <train|serve|infer|eval-engine|info> [options]\n\
+         train options:\n\
            --model NAME          yahoolda | aliaslda | pdp | hdp\n\
            --clients N           client (worker) count\n\
            --topics K            topic count / HDP truncation\n\
@@ -25,11 +31,24 @@ fn usage() -> ! {
            --vocab V             vocabulary size\n\
            --doc-len L           mean document length\n\
            --projection MODE     off | single | distributed | ondemand\n\
+           --snapshot-dir DIR    persist server snapshots here (serve input)\n\
            --seed S              global seed\n\
            --config FILE         JSON config overlay\n\
            --out FILE            write the report JSON here\n\
            --pjrt                evaluate through the PJRT artifacts\n\
-           -v / -q               verbose / quiet"
+           -v / -q               verbose / quiet\n\
+         serve options:\n\
+           --snapshot DIR        snapshot directory written by train\n\
+           --queries N           synthetic queries to run (default 2000)\n\
+           --workers W           worker threads (default 2)\n\
+           --batch B             max micro-batch size (default 32)\n\
+           --cache-mb M          alias-cache budget in MiB (default 64)\n\
+           --doc-len L           mean query length (default 32)\n\
+           --seed S              query + service seed\n\
+         infer options:\n\
+           --snapshot DIR        snapshot directory written by train\n\
+           --tokens \"W W ...\"    word ids of the document\n\
+           --top N               topics to print (default 8)"
     );
     std::process::exit(2)
 }
@@ -94,6 +113,10 @@ fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
                 cfg.seed = it.value("--seed").parse().unwrap_or_else(|_| usage());
                 cfg.corpus.seed = cfg.seed;
             }
+            "--snapshot-dir" => {
+                cfg.cluster.snapshot_dir =
+                    Some(std::path::PathBuf::from(it.value("--snapshot-dir")));
+            }
             "--config" => {
                 let path = it.value("--config");
                 let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
@@ -120,6 +143,158 @@ fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
         }
     }
     (cfg, out)
+}
+
+struct ServeArgs {
+    snapshot: std::path::PathBuf,
+    queries: usize,
+    workers: usize,
+    batch: usize,
+    cache_mb: usize,
+    doc_len: f64,
+    seed: u64,
+    tokens: Vec<u32>,
+    top: usize,
+}
+
+fn parse_serve_args(args: &[String]) -> ServeArgs {
+    let mut out = ServeArgs {
+        snapshot: std::path::PathBuf::new(),
+        queries: 2_000,
+        workers: 2,
+        batch: 32,
+        cache_mb: 64,
+        doc_len: 32.0,
+        seed: 42,
+        tokens: Vec::new(),
+        top: 8,
+    };
+    let mut it = ArgIter { args, i: 0 };
+    while let Some(arg) = it.next() {
+        match arg {
+            "--snapshot" => out.snapshot = std::path::PathBuf::from(it.value("--snapshot")),
+            "--queries" => {
+                out.queries = it.value("--queries").parse().unwrap_or_else(|_| usage())
+            }
+            "--workers" => {
+                out.workers = it.value("--workers").parse().unwrap_or_else(|_| usage())
+            }
+            "--batch" => out.batch = it.value("--batch").parse().unwrap_or_else(|_| usage()),
+            "--cache-mb" => {
+                out.cache_mb = it.value("--cache-mb").parse().unwrap_or_else(|_| usage())
+            }
+            "--doc-len" => {
+                out.doc_len = it.value("--doc-len").parse().unwrap_or_else(|_| usage())
+            }
+            "--seed" => out.seed = it.value("--seed").parse().unwrap_or_else(|_| usage()),
+            "--top" => out.top = it.value("--top").parse().unwrap_or_else(|_| usage()),
+            "--tokens" => {
+                out.tokens = it
+                    .value("--tokens")
+                    .split([' ', ','])
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse().unwrap_or_else(|_| usage()))
+                    .collect();
+            }
+            "-v" => logging::set_level(Level::Debug),
+            "-q" => logging::set_level(Level::Warn),
+            _ => {
+                eprintln!("unknown option {arg}");
+                usage()
+            }
+        }
+    }
+    if out.snapshot.as_os_str().is_empty() {
+        eprintln!("--snapshot DIR is required");
+        usage()
+    }
+    out
+}
+
+fn load_model(a: &ServeArgs) -> ServingModel {
+    match ServingModel::load_dir_with_budget(&a.snapshot, a.cache_mb << 20) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot load snapshot: {e:#}");
+            std::process::exit(1)
+        }
+    }
+}
+
+fn cmd_serve(a: ServeArgs) {
+    let model = Arc::new(load_model(&a));
+    println!(
+        "serving {} | K={} vocab={} | {} tokens in frozen statistics | {} workers, batch {}, cache {} MiB",
+        model.meta().model,
+        model.k(),
+        model.vocab(),
+        model.total_tokens(),
+        a.workers.max(1),
+        a.batch,
+        a.cache_mb,
+    );
+    let svc = InferenceService::spawn(
+        model.clone(),
+        ServeConfig {
+            workers: a.workers,
+            max_batch: a.batch,
+            seed: a.seed,
+            ..Default::default()
+        },
+    );
+    // Synthetic Zipf query stream over the model's vocabulary.
+    let queries = hplvm::serve::synth_queries(model.vocab(), a.queries, a.doc_len, a.seed ^ 0x5E17E);
+    let t0 = std::time::Instant::now();
+    let latencies = hplvm::serve::run_queries(&svc, &queries, 512);
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    let cache = model.cache_stats();
+    println!(
+        "{} queries in {:.2}s  →  {:.0} queries/s",
+        latencies.len(),
+        wall,
+        latencies.len() as f64 / wall.max(1e-9),
+    );
+    println!(
+        "latency p50 {:.3} ms | p99 {:.3} ms | batches {} (avg size {:.1}) | peak queue {}",
+        hplvm::bench::percentile(&latencies, 50.0) * 1e3,
+        hplvm::bench::percentile(&latencies, 99.0) * 1e3,
+        stats.batches,
+        stats.served as f64 / stats.batches.max(1) as f64,
+        stats.peak_queue,
+    );
+    println!(
+        "alias cache: {} resident ({:.1} MiB), {} hits / {} misses / {} evictions",
+        cache.resident,
+        cache.resident_bytes as f64 / (1 << 20) as f64,
+        cache.hits,
+        cache.misses,
+        cache.evictions,
+    );
+    svc.shutdown();
+}
+
+fn cmd_infer(a: ServeArgs) {
+    if a.tokens.is_empty() {
+        eprintln!("--tokens \"W W ...\" is required");
+        usage()
+    }
+    let model = load_model(&a);
+    let mut rng = hplvm::util::rng::Rng::new(a.seed);
+    let res = hplvm::serve::infer_doc(
+        &model,
+        &a.tokens,
+        &hplvm::serve::InferConfig::default(),
+        &mut rng,
+    );
+    println!(
+        "{} tokens | MH acceptance {:.3}",
+        res.tokens,
+        res.accepted as f64 / res.proposed.max(1) as f64
+    );
+    for (t, weight) in res.top_topics(a.top) {
+        println!("topic {t:>4}  θ = {weight:.4}");
+    }
 }
 
 fn main() {
@@ -152,6 +327,8 @@ fn main() {
                 }
             }
         }
+        "serve" => cmd_serve(parse_serve_args(&args[1..])),
+        "infer" => cmd_infer(parse_serve_args(&args[1..])),
         "eval-engine" => match hplvm::runtime::Engine::load(std::path::Path::new("artifacts")) {
             Ok(Some(engine)) => {
                 println!("PJRT platform: {}", engine.platform());

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use super::msg::{Control, NodeId, Payload};
 use super::network::SimNet;
 use super::ring::Ring;
-use super::snapshot::{self, Store};
+use super::snapshot::{self, SnapshotMeta, Store};
 use crate::projection::ondemand::OnDemandProjection;
 
 /// Server-group configuration.
@@ -43,6 +43,9 @@ pub struct ServerConfig {
     /// Keep generous on oversubscribed hosts — explicit kills are always
     /// detected immediately regardless of this value.
     pub liveness_timeout: Duration,
+    /// Hyperparameter + ring metadata stamped into every snapshot (the
+    /// `slot` field is overwritten per server node at write time).
+    pub meta: SnapshotMeta,
 }
 
 impl Default for ServerConfig {
@@ -56,6 +59,7 @@ impl Default for ServerConfig {
             projection: None,
             heartbeat_every: Duration::from_millis(25),
             liveness_timeout: Duration::from_secs(5),
+            meta: SnapshotMeta::default(),
         }
     }
 }
@@ -180,7 +184,9 @@ impl ServerNode {
 
     fn write_snapshot(&mut self) {
         if let Some(path) = Self::snapshot_path(&self.cfg, self.slot) {
-            let bytes = snapshot::encode_store(&self.store);
+            let mut meta = self.cfg.meta.clone();
+            meta.slot = self.slot as u32;
+            let bytes = snapshot::encode_store_meta(&self.store, &meta);
             if snapshot::write_atomic(&path, &bytes).is_ok() {
                 self.stats.snapshots.fetch_add(1, Ordering::Relaxed);
             }

@@ -5,6 +5,12 @@
 //! binary files written atomically (temp + rename); a replacement node
 //! loads the most recent one and continues — rolling only *itself* back,
 //! which is the paper's deliberately relaxed failover semantics.
+//!
+//! Server snapshots carry a [`SnapshotMeta`] header (format v2) recording
+//! the hyperparameters (model, K, α, β) and the ring assignment the store
+//! was sharded under — everything the serving layer ([`crate::serve`])
+//! needs to rebuild proposal distributions without the training config.
+//! v1 files (no header) still decode, with `meta = None`.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -14,6 +20,55 @@ use std::path::Path;
 pub type Store = HashMap<(u8, u32), Vec<i32>>;
 
 const MAGIC: &[u8; 8] = b"HPLVMSNP";
+const MAGIC_V2: &[u8; 8] = b"HPLVMSN2";
+
+/// Hyperparameters + ring assignment a server store was produced under.
+///
+/// Written with every v2 store snapshot so a snapshot directory is
+/// self-describing: the inference server rebuilds its proposal
+/// distributions from `(k, alpha, beta)` and can sanity-check that the
+/// slot files it merged really partition the key space (`n_servers`,
+/// `vnodes`, `slot`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotMeta {
+    /// Model display name (e.g. `"AliasLDA"`).
+    pub model: String,
+    /// Topic count / row width `K`.
+    pub k: u32,
+    /// Document-topic prior α.
+    pub alpha: f64,
+    /// Topic-word prior β.
+    pub beta: f64,
+    /// Vocabulary size the corpus was generated over.
+    pub vocab_size: u32,
+    /// Ring slot this store belongs to.
+    pub slot: u32,
+    /// Total logical server slots in the ring.
+    pub n_servers: u32,
+    /// Virtual ring points per slot.
+    pub vnodes: u32,
+    /// Training iterations the producing run was *configured* for —
+    /// provenance only. The barrier-free design means servers never
+    /// observe client progress, so this is not a completed-iteration
+    /// count (a mid-run snapshot carries the same value).
+    pub iterations: u64,
+}
+
+impl Default for SnapshotMeta {
+    fn default() -> Self {
+        SnapshotMeta {
+            model: String::new(),
+            k: 0,
+            alpha: 0.0,
+            beta: 0.0,
+            vocab_size: 0,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 1,
+            iterations: 0,
+        }
+    }
+}
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -42,34 +97,43 @@ impl<'a> Reader<'a> {
         self.pos += 1;
         Some(v)
     }
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Option<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.b.get(self.pos..self.pos + len)?;
+        self.pos += len;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
 }
 
-/// Serialize a server store.
-pub fn encode_store(store: &Store) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(64 + store.len() * 32);
-    buf.extend_from_slice(MAGIC);
-    put_u32(&mut buf, store.len() as u32);
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn encode_store_body(buf: &mut Vec<u8>, store: &Store) {
+    put_u32(buf, store.len() as u32);
     // Deterministic order for reproducible files.
     let mut keys: Vec<&(u8, u32)> = store.keys().collect();
     keys.sort();
     for key in keys {
         let row = &store[key];
         buf.push(key.0);
-        put_u32(&mut buf, key.1);
-        put_u32(&mut buf, row.len() as u32);
+        put_u32(buf, key.1);
+        put_u32(buf, row.len() as u32);
         for &v in row {
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
-    buf
 }
 
-/// Deserialize a server store.
-pub fn decode_store(bytes: &[u8]) -> Option<Store> {
-    if bytes.len() < 12 || &bytes[..8] != MAGIC {
-        return None;
-    }
-    let mut r = Reader { b: bytes, pos: 8 };
+fn decode_store_body(r: &mut Reader<'_>) -> Option<Store> {
     let n = r.u32()?;
     let mut store = Store::with_capacity(n as usize);
     for _ in 0..n {
@@ -84,6 +148,63 @@ pub fn decode_store(bytes: &[u8]) -> Option<Store> {
         store.insert((matrix, word), row);
     }
     Some(store)
+}
+
+/// Serialize a server store without metadata (legacy v1 format — kept for
+/// bit-stable failover tests; new snapshots use [`encode_store_meta`]).
+pub fn encode_store(store: &Store) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + store.len() * 32);
+    buf.extend_from_slice(MAGIC);
+    encode_store_body(&mut buf, store);
+    buf
+}
+
+/// Serialize a server store with its [`SnapshotMeta`] header (format v2).
+pub fn encode_store_meta(store: &Store, meta: &SnapshotMeta) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(128 + store.len() * 32);
+    buf.extend_from_slice(MAGIC_V2);
+    put_str(&mut buf, &meta.model);
+    put_u32(&mut buf, meta.k);
+    put_f64(&mut buf, meta.alpha);
+    put_f64(&mut buf, meta.beta);
+    put_u32(&mut buf, meta.vocab_size);
+    put_u32(&mut buf, meta.slot);
+    put_u32(&mut buf, meta.n_servers);
+    put_u32(&mut buf, meta.vnodes);
+    put_u64(&mut buf, meta.iterations);
+    encode_store_body(&mut buf, store);
+    buf
+}
+
+/// Deserialize a server store plus its metadata (`None` for v1 files).
+pub fn decode_store_meta(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Store)> {
+    if bytes.len() < 12 {
+        return None;
+    }
+    let mut r = Reader { b: bytes, pos: 8 };
+    if &bytes[..8] == MAGIC {
+        return Some((None, decode_store_body(&mut r)?));
+    }
+    if &bytes[..8] != MAGIC_V2 {
+        return None;
+    }
+    let meta = SnapshotMeta {
+        model: r.str()?,
+        k: r.u32()?,
+        alpha: r.f64()?,
+        beta: r.f64()?,
+        vocab_size: r.u32()?,
+        slot: r.u32()?,
+        n_servers: r.u32()?,
+        vnodes: r.u32()?,
+        iterations: r.u64()?,
+    };
+    Some((Some(meta), decode_store_body(&mut r)?))
+}
+
+/// Deserialize a server store (either format), dropping any metadata.
+pub fn decode_store(bytes: &[u8]) -> Option<Store> {
+    decode_store_meta(bytes).map(|(_, store)| store)
 }
 
 /// Write bytes atomically (temp file + rename).
@@ -209,6 +330,64 @@ mod tests {
         let mut bytes = encode_store(&Store::new());
         bytes[0] ^= 0xFF;
         assert!(decode_store(&bytes).is_none());
+    }
+
+    fn sample_meta() -> SnapshotMeta {
+        SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 20,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 2_000,
+            slot: 1,
+            n_servers: 2,
+            vnodes: 64,
+            iterations: 17,
+        }
+    }
+
+    /// Satellite: save → load reproduces counts, hyperparameters, and the
+    /// ring assignment bit-for-bit (covers the new v2 metadata fields).
+    #[test]
+    fn store_meta_roundtrip_bit_for_bit() {
+        let mut store = Store::new();
+        store.insert((0, 3), vec![7, 0, -1, 4]);
+        store.insert((1, 0), vec![2; 4]);
+        let meta = sample_meta();
+        let bytes = encode_store_meta(&store, &meta);
+        let (meta2, store2) = decode_store_meta(&bytes).unwrap();
+        let meta2 = meta2.expect("v2 snapshot must carry metadata");
+        assert_eq!(meta2, meta);
+        assert_eq!(store2, store);
+        // Hyperparameters survive exactly (f64 bit patterns, not text).
+        assert_eq!(meta2.alpha.to_bits(), 0.1f64.to_bits());
+        assert_eq!(meta2.beta.to_bits(), 0.01f64.to_bits());
+        // Encoding is deterministic: same input, same bytes.
+        assert_eq!(bytes, encode_store_meta(&store, &meta));
+    }
+
+    #[test]
+    fn v1_files_decode_with_no_meta() {
+        let mut store = Store::new();
+        store.insert((0, 9), vec![1, 2]);
+        let bytes = encode_store(&store);
+        let (meta, back) = decode_store_meta(&bytes).unwrap();
+        assert!(meta.is_none());
+        assert_eq!(back, store);
+        // And the plain decoder reads both formats.
+        let v2 = encode_store_meta(&store, &sample_meta());
+        assert_eq!(decode_store(&v2).unwrap(), store);
+    }
+
+    #[test]
+    fn truncated_v2_rejected() {
+        let bytes = encode_store_meta(&Store::new(), &sample_meta());
+        for cut in [9, 15, bytes.len() - 1] {
+            assert!(
+                decode_store_meta(&bytes[..cut]).is_none(),
+                "truncation at {cut} accepted"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Budgeted LRU cache of per-word Walker alias tables.
+//!
+//! At serving time the word–topic statistics are frozen, so a word's
+//! dense proposal `q_w(t) ∝ φ(w,t)` never goes stale — each table is
+//! built **once** (O(K)) and then amortizes over every query that touches
+//! the word, exactly the regime §3.1 engineers for training. A full table
+//! set costs `O(V·K)` memory though (the reason the paper shards the
+//! model in the first place), so tables are built lazily on first use and
+//! evicted least-recently-used under a byte budget: the hot head of the
+//! Zipf-distributed query vocabulary stays resident, the long tail is
+//! rebuilt on demand.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sampler::alias::AliasTable;
+
+/// A word's frozen dense proposal: the alias table plus the weights it
+/// was built from (`q_w(t) = φ(w,t)`), needed to evaluate proposal masses
+/// in the Metropolis-Hastings ratio.
+pub struct WordProposal {
+    /// O(1)-draw alias table over topics.
+    pub table: AliasTable,
+    /// The weights the table encodes: `qw[t] = φ(w,t)`.
+    pub qw: Box<[f64]>,
+    /// `Σ_t qw[t]`.
+    pub qsum: f64,
+}
+
+struct Entry {
+    proposal: Arc<WordProposal>,
+    last_used: u64,
+}
+
+struct Shard {
+    entries: HashMap<u32, Entry>,
+    /// Monotonic per-shard access clock (drives LRU ordering).
+    tick: u64,
+}
+
+/// Cache statistics snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups served from a resident table.
+    pub hits: u64,
+    /// Lookups that had to build a table.
+    pub misses: u64,
+    /// Tables evicted under the byte budget.
+    pub evictions: u64,
+    /// Tables currently resident.
+    pub resident: usize,
+    /// Approximate resident bytes.
+    pub resident_bytes: usize,
+}
+
+/// Sharded, budgeted LRU over [`WordProposal`]s.
+pub struct AliasCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Byte budget per shard (total budget split evenly).
+    budget_per_shard: usize,
+    /// Approximate bytes one cached table occupies.
+    entry_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl AliasCache {
+    /// A cache for `K`-topic tables under `budget_bytes` total, split
+    /// over `n_shards` independently-locked shards (words hash to shards,
+    /// so concurrent workers rarely contend).
+    pub fn new(k: usize, budget_bytes: usize, n_shards: usize) -> AliasCache {
+        let n_shards = n_shards.max(1);
+        // prob (f64) + alias (u32) inside the table, qw (f64), plus
+        // allocator/housekeeping slack.
+        let entry_bytes = 96 + k * (8 + 4 + 8);
+        // Every shard must be able to hold at least one table, whatever
+        // the budget says — a zero-capacity cache would livelock builds.
+        let budget_per_shard = (budget_bytes / n_shards).max(entry_bytes);
+        AliasCache {
+            shards: (0..n_shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        entries: HashMap::new(),
+                        tick: 0,
+                    })
+                })
+                .collect(),
+            budget_per_shard,
+            entry_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the proposal for `word`, building it with `build` on a miss.
+    /// The O(K) build runs *outside* the shard lock so a miss on one word
+    /// never stalls lookups of the other words in its shard; two threads
+    /// racing on the same cold word may build twice, and the loser's
+    /// table is discarded (the winner's is returned to both).
+    pub fn get_or_build(
+        &self,
+        word: u32,
+        build: impl FnOnce() -> WordProposal,
+    ) -> Arc<WordProposal> {
+        let shard = &self.shards[word as usize % self.shards.len()];
+        {
+            let mut s = shard.lock().unwrap();
+            s.tick += 1;
+            let tick = s.tick;
+            if let Some(e) = s.entries.get_mut(&word) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return e.proposal.clone();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let proposal = Arc::new(build());
+        let mut s = shard.lock().unwrap();
+        s.tick += 1;
+        let tick = s.tick;
+        let resident = s
+            .entries
+            .entry(word)
+            .or_insert_with(|| Entry {
+                proposal: proposal.clone(),
+                last_used: tick,
+            });
+        resident.last_used = tick;
+        let result = resident.proposal.clone();
+        // Enforce the budget: evict least-recently-used tables (never the
+        // one just touched). Outstanding `Arc`s keep evicted tables alive
+        // for in-flight queries; the cache just forgets them.
+        let max_entries = (self.budget_per_shard / self.entry_bytes).max(1);
+        if s.entries.len() > max_entries {
+            let mut order: Vec<(u64, u32)> = s
+                .entries
+                .iter()
+                .filter(|&(&w, _)| w != word)
+                .map(|(&w, e)| (e.last_used, w))
+                .collect();
+            order.sort_unstable();
+            let excess = s.entries.len() - max_entries;
+            for &(_, w) in order.iter().take(excess) {
+                s.entries.remove(&w);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        result
+    }
+
+    /// Current statistics.
+    pub fn stats(&self) -> CacheStats {
+        let mut resident = 0usize;
+        for shard in &self.shards {
+            resident += shard.lock().unwrap().entries.len();
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident,
+            resident_bytes: resident * self.entry_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proposal(k: usize, seed: f64) -> WordProposal {
+        let qw: Vec<f64> = (0..k).map(|t| seed + t as f64).collect();
+        let qsum = qw.iter().sum();
+        WordProposal {
+            table: AliasTable::build(&qw),
+            qw: qw.into_boxed_slice(),
+            qsum,
+        }
+    }
+
+    #[test]
+    fn hit_after_build() {
+        let c = AliasCache::new(8, 1 << 20, 4);
+        let p1 = c.get_or_build(3, || proposal(8, 1.0));
+        let p2 = c.get_or_build(3, || panic!("must not rebuild a resident word"));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+    }
+
+    #[test]
+    fn budget_evicts_lru_not_hot() {
+        // Budget for ~2 tables in a single shard.
+        let k = 8;
+        let entry = 96 + k * 20;
+        let c = AliasCache::new(k, entry * 2, 1);
+        c.get_or_build(0, || proposal(k, 0.0));
+        c.get_or_build(1, || proposal(k, 1.0));
+        // Touch word 0 so word 1 is the LRU victim.
+        c.get_or_build(0, || panic!("0 must be resident"));
+        c.get_or_build(2, || proposal(k, 2.0));
+        let st = c.stats();
+        assert!(st.evictions >= 1, "budget never enforced");
+        assert!(st.resident <= 2);
+        // Word 0 survived; word 1 was evicted and rebuilds.
+        c.get_or_build(0, || panic!("hot word evicted"));
+        let misses_before = c.stats().misses;
+        c.get_or_build(1, || proposal(k, 1.0));
+        assert_eq!(c.stats().misses, misses_before + 1);
+    }
+
+    #[test]
+    fn evicted_tables_survive_via_arc() {
+        let k = 4;
+        let entry = 96 + k * 20;
+        let c = AliasCache::new(k, entry, 1); // room for exactly one
+        let held = c.get_or_build(7, || proposal(k, 7.0));
+        c.get_or_build(8, || proposal(k, 8.0)); // evicts 7
+        assert_eq!(held.qw[0], 7.0, "in-flight Arc invalidated by eviction");
+    }
+
+    #[test]
+    fn tiny_budget_still_serves() {
+        let c = AliasCache::new(64, 0, 4); // degenerate budget
+        for w in 0..100u32 {
+            let p = c.get_or_build(w, || proposal(64, w as f64));
+            assert_eq!(p.qw.len(), 64);
+        }
+        assert!(c.stats().resident >= 1);
+    }
+}

@@ -1,0 +1,274 @@
+//! Fold-in inference: estimate a held-out document's topic mixture
+//! against the frozen serving model.
+//!
+//! The document-side collapsed conditional under frozen φ is
+//!
+//! ```text
+//! p(z=t | rest) ∝ n_td·φ(w,t)   — sparse, k_d terms, exact
+//!              + α·φ(w,t)       — dense, served by the word's alias table
+//! ```
+//!
+//! which is exactly eq. (4) with the word–topic side constant — the
+//! regime where the Metropolis-Hastings-Walker machinery amortizes
+//! perfectly: the alias table is built once per word (never stale), the
+//! sparse term costs `O(k_d)`, and the MH correction's acceptance ratio
+//! is identically 1. A short chain per token over a handful of sweeps
+//! yields a Rao-Blackwellized mixture estimate
+//! `θ̂_t = (n̄_td + α) / (N_d + αK)`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::cache::WordProposal;
+use super::model::ServingModel;
+use crate::sampler::doc_state::SparseCounts;
+use crate::sampler::mh::mh_chain;
+use crate::util::rng::Rng;
+
+/// Fold-in chain configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct InferConfig {
+    /// Sweeps discarded before mixture accumulation.
+    pub burnin: usize,
+    /// Sweeps averaged into the mixture estimate.
+    pub samples: usize,
+    /// MH steps per token (parity with training; acceptance is ≈1 here).
+    pub mh_steps: usize,
+}
+
+impl Default for InferConfig {
+    fn default() -> Self {
+        InferConfig {
+            burnin: 4,
+            samples: 2,
+            mh_steps: 2,
+        }
+    }
+}
+
+/// One query's outcome.
+#[derive(Clone, Debug)]
+pub struct InferResult {
+    /// Topic mixture θ̂ (sums to 1).
+    pub theta: Vec<f64>,
+    /// Tokens folded in.
+    pub tokens: usize,
+    /// MH proposals made (diagnostics).
+    pub proposed: u64,
+    /// MH proposals accepted (≈ proposed: the frozen proposal is exact).
+    pub accepted: u64,
+    /// Queue + service latency; filled by the serving layer
+    /// ([`super::service`]), zero for direct calls.
+    pub latency: Duration,
+}
+
+impl InferResult {
+    /// Topics sorted by descending mixture weight.
+    pub fn top_topics(&self, n: usize) -> Vec<(usize, f64)> {
+        let mut order: Vec<(usize, f64)> = self.theta.iter().copied().enumerate().collect();
+        order.sort_by(|a, b| b.1.total_cmp(&a.1));
+        order.truncate(n);
+        order
+    }
+}
+
+/// Fold one document into the frozen model. Deterministic given `rng`.
+pub fn infer_doc(
+    model: &ServingModel,
+    tokens: &[u32],
+    cfg: &InferConfig,
+    rng: &mut Rng,
+) -> InferResult {
+    let k = model.k();
+    let alpha = model.alpha();
+    if tokens.is_empty() || k == 0 {
+        return InferResult {
+            theta: vec![1.0 / k.max(1) as f64; k],
+            tokens: 0,
+            proposed: 0,
+            accepted: 0,
+            latency: Duration::ZERO,
+        };
+    }
+
+    // Resolve every token's proposal once per query. The `Arc`s pin the
+    // tables for the query's whole lifetime, so this costs one cache
+    // round-trip per token instead of one per token per sweep — and a
+    // mid-query eviction can never force a rebuild inside the sweeps.
+    let proposals: Vec<Arc<WordProposal>> =
+        tokens.iter().map(|&w| model.proposal(w)).collect();
+
+    // Init: draw each token from its word's frozen dense proposal — a far
+    // better starting point than uniform for peaked φ.
+    let mut n_dt = SparseCounts::new();
+    let mut z: Vec<u32> = Vec::with_capacity(tokens.len());
+    for prop in &proposals {
+        let t = prop.table.sample(rng) as u32;
+        n_dt.inc(t);
+        z.push(t);
+    }
+
+    let samples = cfg.samples.max(1);
+    let sweeps = cfg.burnin + samples;
+    let mut acc = vec![0u64; k];
+    let mut proposed = 0u64;
+    let mut accepted = 0u64;
+    let mut sparse_topics: Vec<u32> = Vec::with_capacity(16);
+    let mut sparse_weights: Vec<f64> = Vec::with_capacity(16);
+
+    for sweep in 0..sweeps {
+        for i in 0..tokens.len() {
+            let old = z[i];
+            n_dt.dec(old);
+            let prop = &proposals[i];
+
+            // Sparse document component: n_td·φ(w,t) over the non-zero
+            // topics of this document.
+            sparse_topics.clear();
+            sparse_weights.clear();
+            let mut sparse_sum = 0.0;
+            for (t, c) in n_dt.iter() {
+                let wgt = c as f64 * prop.qw[t as usize];
+                sparse_topics.push(t);
+                sparse_weights.push(wgt);
+                sparse_sum += wgt;
+            }
+            let dense_sum = alpha * prop.qsum;
+            let total = sparse_sum + dense_sum;
+
+            // One mass function serves as both proposal and target —
+            // q(t) = p(t) ∝ (n_td+α)·φ(w,t) — which is what makes the MH
+            // acceptance identically 1 under frozen φ. Passing the same
+            // (Copy) closure twice keeps that invariant structural.
+            let counts = &n_dt;
+            let qw = &prop.qw;
+            let pq_of = |t: usize| (counts.get(t as u32) as f64 + alpha) * qw[t];
+            let topics = &sparse_topics;
+            let weights = &sparse_weights;
+            let table = &prop.table;
+            let propose = |r: &mut Rng| {
+                if total > 0.0 && r.f64() * total < sparse_sum {
+                    // O(k_d) exact categorical over the sparse component.
+                    let mut u = r.f64() * sparse_sum;
+                    let mut idx = topics.len().saturating_sub(1);
+                    for (j, &wgt) in weights.iter().enumerate() {
+                        u -= wgt;
+                        if u <= 0.0 {
+                            idx = j;
+                            break;
+                        }
+                    }
+                    let t = topics.get(idx).copied().unwrap_or(0) as usize;
+                    (t, pq_of(t))
+                } else {
+                    // O(1) alias draw from the frozen dense component.
+                    let t = table.sample(r);
+                    (t, pq_of(t))
+                }
+            };
+
+            let (new_t, acc_n) =
+                mh_chain(Some(old as usize), cfg.mh_steps, propose, pq_of, pq_of, rng);
+            proposed += cfg.mh_steps.max(1) as u64;
+            accepted += acc_n as u64;
+
+            let new_t = new_t as u32;
+            z[i] = new_t;
+            n_dt.inc(new_t);
+        }
+        if sweep >= cfg.burnin {
+            for (t, c) in n_dt.iter() {
+                acc[t as usize] += c as u64;
+            }
+        }
+    }
+
+    // Rao-Blackwellized mixture: smoothed average document-topic counts.
+    let n_d = tokens.len() as f64;
+    let denom = n_d + alpha * k as f64;
+    let theta: Vec<f64> = acc
+        .iter()
+        .map(|&a| (a as f64 / samples as f64 + alpha) / denom)
+        .collect();
+    InferResult {
+        theta,
+        tokens: tokens.len(),
+        proposed,
+        accepted,
+        latency: Duration::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::snapshot::{SnapshotMeta, Store};
+
+    /// Two sharply-separated topics: words 0..5 → topic 0, 5..10 → topic 1.
+    fn toy_model() -> ServingModel {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let row = if w < 5 { vec![100, 0] } else { vec![0, 100] };
+            store.insert((0, w), row);
+        }
+        let meta = SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+        };
+        ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap()
+    }
+
+    #[test]
+    fn pure_doc_concentrates_on_its_topic() {
+        let m = toy_model();
+        let mut rng = Rng::new(1);
+        let res = infer_doc(&m, &[0, 1, 2, 3, 4, 0, 1, 2], &InferConfig::default(), &mut rng);
+        assert_eq!(res.tokens, 8);
+        assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(res.theta[0] > 0.9, "θ = {:?}", res.theta);
+        assert_eq!(res.top_topics(1)[0].0, 0);
+    }
+
+    #[test]
+    fn mixed_doc_splits_mass() {
+        let m = toy_model();
+        let mut rng = Rng::new(2);
+        let res = infer_doc(&m, &[0, 1, 7, 8, 2, 9, 3, 6], &InferConfig::default(), &mut rng);
+        assert!(res.theta[0] > 0.25 && res.theta[0] < 0.75, "θ = {:?}", res.theta);
+    }
+
+    #[test]
+    fn acceptance_is_near_one_for_frozen_proposals() {
+        let m = toy_model();
+        let mut rng = Rng::new(3);
+        let doc: Vec<u32> = (0..200).map(|i| (i % 10) as u32).collect();
+        let res = infer_doc(&m, &doc, &InferConfig::default(), &mut rng);
+        let rate = res.accepted as f64 / res.proposed as f64;
+        assert!(rate > 0.999, "exact proposal must always accept ({rate})");
+    }
+
+    #[test]
+    fn empty_doc_returns_uniform() {
+        let m = toy_model();
+        let mut rng = Rng::new(4);
+        let res = infer_doc(&m, &[], &InferConfig::default(), &mut rng);
+        assert_eq!(res.tokens, 0);
+        assert_eq!(res.theta, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = toy_model();
+        let doc = [0u32, 6, 1, 7, 2, 8];
+        let a = infer_doc(&m, &doc, &InferConfig::default(), &mut Rng::new(9));
+        let b = infer_doc(&m, &doc, &InferConfig::default(), &mut Rng::new(9));
+        assert_eq!(a.theta, b.theta);
+    }
+}

@@ -1,0 +1,39 @@
+//! Snapshot-backed topic-inference serving.
+//!
+//! Training answers "what are the topics?"; this layer answers "what
+//! topics is *this document* about?" at query time, against statistics a
+//! training run snapshotted to disk:
+//!
+//! * [`model`] — [`ServingModel`]: merge the `server_slot*.snap` ring
+//!   partitions into one frozen `n_tw` matrix, self-described by the v2
+//!   snapshot hyperparameter header.
+//! * [`cache`] — [`AliasCache`]: per-word Walker alias tables built
+//!   lazily and evicted LRU under a byte budget (hot Zipf head resident,
+//!   long tail rebuilt on demand).
+//! * [`infer`] — [`infer_doc`]: fold-in Gibbs over only the
+//!   document-side state with the MH-Walker mixture proposal; with φ
+//!   frozen the proposal is exact, so the chain mixes in a handful of
+//!   sweeps.
+//! * [`service`] — [`InferenceService`]: a bounded queue + worker pool
+//!   draining queries in micro-batches, with per-request deterministic
+//!   RNG streams and back-pressure on overload.
+//!
+//! ```no_run
+//! use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
+//! use std::sync::Arc;
+//!
+//! let model = ServingModel::load_dir(std::path::Path::new("snapshots")).unwrap();
+//! let svc = InferenceService::spawn(Arc::new(model), ServeConfig::default());
+//! let mixture = svc.infer(vec![3, 17, 42]).unwrap();
+//! println!("top topic: {:?}", mixture.top_topics(1));
+//! ```
+
+pub mod cache;
+pub mod infer;
+pub mod model;
+pub mod service;
+
+pub use cache::{AliasCache, CacheStats, WordProposal};
+pub use infer::{infer_doc, InferConfig, InferResult};
+pub use model::ServingModel;
+pub use service::{run_queries, synth_queries, InferenceService, ServeConfig, ServeStats};

@@ -1,0 +1,349 @@
+//! The frozen serving model: global word–topic statistics merged from a
+//! training snapshot directory.
+//!
+//! Training servers each snapshot their ring partition of the shared
+//! `n_tw` matrix ([`crate::ps::snapshot`]); the slots' key sets are
+//! disjoint by consistent hashing, so the global statistics are the
+//! row-wise sum of every `server_slot*.snap` in the directory. The v2
+//! snapshot header carries the hyperparameters (model, K, α, β) and the
+//! ring geometry, making the directory fully self-describing — the
+//! inference server needs no training config.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::cache::{AliasCache, CacheStats, WordProposal};
+use crate::eval::perplexity::TopicModelView;
+use crate::ps::ring::Ring;
+use crate::ps::snapshot::{self, SnapshotMeta, Store};
+use crate::sampler::alias::AliasTable;
+use crate::Result;
+
+/// Default alias-cache budget (64 MiB ≈ 3k resident tables at K=1024).
+pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
+
+/// Immutable global statistics + lazily-built per-word alias tables.
+pub struct ServingModel {
+    meta: SnapshotMeta,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    beta_bar: f64,
+    vocab: usize,
+    /// Merged `n_tw` rows (dense, `None` for words never observed).
+    rows: Vec<Option<Box<[i32]>>>,
+    /// Per-topic totals `n_t`.
+    totals: Vec<i64>,
+    cache: AliasCache,
+}
+
+impl ServingModel {
+    /// Load and merge every `server_slot*.snap` under `dir` with the
+    /// default cache budget.
+    pub fn load_dir(dir: &Path) -> Result<ServingModel> {
+        Self::load_dir_with_budget(dir, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Load with an explicit alias-cache byte budget.
+    pub fn load_dir_with_budget(dir: &Path, cache_bytes: usize) -> Result<ServingModel> {
+        let mut slots: Vec<(Option<SnapshotMeta>, Store)> = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("cannot read snapshot dir {}: {e}", dir.display()))?;
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !(name.starts_with("server_slot") && name.ends_with(".snap")) {
+                continue;
+            }
+            let bytes = snapshot::read_snapshot(&entry.path())
+                .ok_or_else(|| anyhow::anyhow!("unreadable snapshot {name}"))?;
+            let decoded = snapshot::decode_store_meta(&bytes)
+                .ok_or_else(|| anyhow::anyhow!("corrupt snapshot {name}"))?;
+            slots.push(decoded);
+        }
+        anyhow::ensure!(
+            !slots.is_empty(),
+            "no server_slot*.snap files in {} — train with --snapshot-dir first",
+            dir.display()
+        );
+        let meta = slots
+            .iter()
+            .find_map(|(m, _)| m.clone())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "snapshots in {} predate the v2 format and carry no \
+                     hyperparameters; re-train to serve them",
+                    dir.display()
+                )
+            })?;
+        // A v1 file next to v2 files is a stale slot from an earlier run:
+        // it would dodge every consistency check below (no header to
+        // compare), so refuse outright rather than merge mixed runs.
+        anyhow::ensure!(
+            slots.iter().all(|(m, _)| m.is_some()),
+            "snapshot dir {} mixes v2 and pre-v2 slot files — stale \
+             snapshots from an earlier run; re-train to regenerate",
+            dir.display()
+        );
+        for (m, _) in slots.iter() {
+            if let Some(m) = m {
+                anyhow::ensure!(
+                    m.k == meta.k && m.n_servers == meta.n_servers && m.vnodes == meta.vnodes,
+                    "snapshot slots disagree on ring/model geometry \
+                     (K {} vs {}, servers {} vs {})",
+                    m.k,
+                    meta.k,
+                    m.n_servers,
+                    meta.n_servers
+                );
+                // Same-geometry slots from *different runs* would merge
+                // silently otherwise — the ring check can't catch them.
+                anyhow::ensure!(
+                    m.model == meta.model
+                        && m.alpha.to_bits() == meta.alpha.to_bits()
+                        && m.beta.to_bits() == meta.beta.to_bits()
+                        && m.vocab_size == meta.vocab_size,
+                    "snapshot slots disagree on hyperparameters \
+                     ({} α={} β={} V={} vs {} α={} β={} V={}) — mixed runs?",
+                    m.model,
+                    m.alpha,
+                    m.beta,
+                    m.vocab_size,
+                    meta.model,
+                    meta.alpha,
+                    meta.beta,
+                    meta.vocab_size
+                );
+            }
+        }
+        anyhow::ensure!(
+            slots.len() == meta.n_servers as usize,
+            "expected {} slot snapshots, found {} — partial snapshot dir",
+            meta.n_servers,
+            slots.len()
+        );
+        // Ring-assignment sanity: every key must live in the slot that
+        // owns its arc. A mismatch means mixed snapshot generations.
+        let ring = Ring::new(meta.n_servers as usize, meta.vnodes as usize);
+        let mut misrouted = 0u64;
+        for (m, store) in slots.iter() {
+            if let Some(m) = m {
+                for &(matrix, word) in store.keys() {
+                    if ring.route(matrix, word) != m.slot {
+                        misrouted += 1;
+                    }
+                }
+            }
+        }
+        if misrouted > 0 {
+            crate::warn!(
+                "serve",
+                "{misrouted} snapshot keys routed outside their slot — \
+                 snapshot dir may mix runs"
+            );
+        }
+        Self::from_stores(meta, slots.into_iter().map(|(_, s)| s).collect(), cache_bytes)
+    }
+
+    /// Build from already-decoded stores (exposed for tests and tools).
+    pub fn from_stores(
+        meta: SnapshotMeta,
+        stores: Vec<Store>,
+        cache_bytes: usize,
+    ) -> Result<ServingModel> {
+        anyhow::ensure!(meta.k > 0, "snapshot metadata has K = 0");
+        anyhow::ensure!(
+            meta.model.contains("LDA"),
+            "serving supports LDA-family snapshots (n_tw statistics); \
+             got a {} snapshot — PDP/HDP serving is an open roadmap item",
+            meta.model
+        );
+        let k = meta.k as usize;
+        let max_word = stores
+            .iter()
+            .flat_map(|s| s.keys())
+            .filter(|(m, _)| *m == 0)
+            .map(|&(_, w)| w as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let vocab = (meta.vocab_size as usize).max(max_word);
+        anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
+        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
+        let mut totals = vec![0i64; k];
+        for store in &stores {
+            // Matrix 0 is `n_tw` for both LDA samplers (coordinator
+            // layout); other matrices belong to PDP/HDP table stats.
+            for (&(matrix, word), row) in store.iter() {
+                if matrix != 0 {
+                    continue;
+                }
+                let dst = rows[word as usize].get_or_insert_with(|| {
+                    vec![0i32; k].into_boxed_slice()
+                });
+                for (t, &v) in row.iter().take(k).enumerate() {
+                    dst[t] = dst[t].saturating_add(v);
+                }
+            }
+        }
+        for row in rows.iter().flatten() {
+            for (t, &v) in row.iter().enumerate() {
+                // Eventual consistency can leave transient negatives in a
+                // snapshot; clamp at the aggregate like the samplers do.
+                totals[t] += v.max(0) as i64;
+            }
+        }
+        Ok(ServingModel {
+            k,
+            alpha: meta.alpha,
+            beta: meta.beta,
+            beta_bar: meta.beta * vocab as f64,
+            vocab,
+            rows,
+            totals,
+            cache: AliasCache::new(k, cache_bytes, 16),
+            meta,
+        })
+    }
+
+    /// Topic count.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Document-topic prior α.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Topic-word prior β.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Vocabulary size the model serves.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The snapshot metadata this model was loaded from.
+    pub fn meta(&self) -> &SnapshotMeta {
+        &self.meta
+    }
+
+    /// Total (clamped) token mass in the frozen statistics.
+    pub fn total_tokens(&self) -> i64 {
+        self.totals.iter().sum()
+    }
+
+    /// Alias-cache statistics.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    #[inline]
+    fn count(&self, w: u32, t: usize) -> i32 {
+        match self.rows.get(w as usize).and_then(|r| r.as_deref()) {
+            Some(row) => row[t].max(0),
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn denom(&self, t: usize) -> f64 {
+        self.totals[t].max(0) as f64 + self.beta_bar
+    }
+
+    /// The word's frozen dense proposal, from the cache (built on miss).
+    pub fn proposal(&self, w: u32) -> Arc<WordProposal> {
+        self.cache.get_or_build(w, || {
+            let mut qw = Vec::with_capacity(self.k);
+            for t in 0..self.k {
+                qw.push((self.count(w, t) as f64 + self.beta) / self.denom(t));
+            }
+            let qsum: f64 = qw.iter().sum();
+            WordProposal {
+                table: AliasTable::build(&qw),
+                qw: qw.into_boxed_slice(),
+                qsum,
+            }
+        })
+    }
+}
+
+impl TopicModelView for ServingModel {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        (self.count(w, t) as f64 + self.beta) / self.denom(t)
+    }
+
+    fn doc_prior(&self, _t: usize) -> f64 {
+        self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(k: u32, n_servers: u32) -> SnapshotMeta {
+        SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers,
+            vnodes: 8,
+            iterations: 1,
+        }
+    }
+
+    #[test]
+    fn merges_slot_stores() {
+        let mut a = Store::new();
+        a.insert((0, 1), vec![3, 0, 1]);
+        let mut b = Store::new();
+        b.insert((0, 2), vec![0, 5, 0]);
+        b.insert((0, 1), vec![1, 0, 0]); // overlap adds
+        b.insert((1, 2), vec![9, 9, 9]); // non-primary matrix ignored
+        let m = ServingModel::from_stores(meta(3, 2), vec![a, b], 1 << 20).unwrap();
+        assert_eq!(m.k(), 3);
+        assert_eq!(m.vocab(), 10);
+        assert_eq!(m.count(1, 0), 4);
+        assert_eq!(m.count(2, 1), 5);
+        assert_eq!(m.total_tokens(), 4 + 1 + 5);
+        // φ normalizes against clamped totals.
+        let phi_sum: f64 = (0..10).map(|w| m.phi(w, 1)).sum();
+        assert!((phi_sum - 1.0).abs() < 1e-9, "φ(·|t) sums to {phi_sum}");
+    }
+
+    #[test]
+    fn rejects_non_lda_and_empty() {
+        let mut pdp = meta(4, 1);
+        pdp.model = "AliasPDP".to_string();
+        assert!(ServingModel::from_stores(pdp, vec![Store::new()], 1024).is_err());
+        let mut zero_k = meta(0, 1);
+        zero_k.vocab_size = 10;
+        assert!(ServingModel::from_stores(zero_k, vec![Store::new()], 1024).is_err());
+    }
+
+    #[test]
+    fn proposal_matches_phi_and_caches() {
+        let mut s = Store::new();
+        s.insert((0, 4), vec![10, 0]);
+        let m = ServingModel::from_stores(meta(2, 1), vec![s], 1 << 20).unwrap();
+        let p = m.proposal(4);
+        for t in 0..2 {
+            assert!((p.qw[t] - m.phi(4, t)).abs() < 1e-15);
+        }
+        assert!((p.qsum - (p.qw[0] + p.qw[1])).abs() < 1e-15);
+        let p2 = m.proposal(4);
+        assert!(Arc::ptr_eq(&p, &p2), "second lookup must hit the cache");
+        // Unseen words get the smoothed-zero proposal, not a panic.
+        let p0 = m.proposal(9);
+        assert!(p0.qsum > 0.0);
+    }
+}

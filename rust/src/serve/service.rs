@@ -1,0 +1,386 @@
+//! The inference service: a bounded request queue drained by a pool of
+//! worker threads in micro-batches.
+//!
+//! Deployment shape for the "heavy traffic from millions of users" side
+//! of the roadmap: callers [`submit`](InferenceService::submit) documents
+//! and get a reply channel; N workers pull up to `max_batch` queued jobs
+//! at a time (one lock acquisition amortized over the batch) and fold
+//! each document in against the shared frozen [`ServingModel`]. The
+//! queue is bounded — a full queue applies back-pressure by blocking
+//! submitters instead of growing without limit.
+//!
+//! Results are deterministic per request: each job's RNG stream is
+//! derived from `(service seed, request sequence number)`, so the answer
+//! does not depend on which worker ran it or how batches formed.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::infer::{infer_doc, InferConfig, InferResult};
+use super::model::ServingModel;
+use crate::util::rng::{Rng, Zipf};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads.
+    pub workers: usize,
+    /// Bounded queue capacity (back-pressure beyond this).
+    pub queue_capacity: usize,
+    /// Jobs a worker claims per queue access.
+    pub max_batch: usize,
+    /// Seed for the per-request RNG streams.
+    pub seed: u64,
+    /// Fold-in chain settings.
+    pub infer: InferConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            max_batch: 32,
+            seed: 42,
+            infer: InferConfig::default(),
+        }
+    }
+}
+
+struct Job {
+    tokens: Vec<u32>,
+    seq: u64,
+    enqueued: Instant,
+    reply: mpsc::Sender<InferResult>,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    open: bool,
+}
+
+struct Shared {
+    model: Arc<ServingModel>,
+    cfg: ServeConfig,
+    queue: Mutex<Queue>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    served: AtomicU64,
+    batches: AtomicU64,
+    peak_queue: AtomicU64,
+}
+
+/// Service counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Queries answered.
+    pub served: u64,
+    /// Micro-batches drained (served / batches = realized batch size).
+    pub batches: u64,
+    /// Deepest queue observed.
+    pub peak_queue: u64,
+}
+
+/// Handle to the worker pool. Dropping it shuts the pool down.
+pub struct InferenceService {
+    shared: Arc<Shared>,
+    seq: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// Spawn the pool over a loaded model.
+    pub fn spawn(model: Arc<ServingModel>, cfg: ServeConfig) -> InferenceService {
+        let shared = Arc::new(Shared {
+            model,
+            cfg: cfg.clone(),
+            queue: Mutex::new(Queue {
+                jobs: VecDeque::new(),
+                open: true,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            peak_queue: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        InferenceService {
+            shared,
+            seq: AtomicU64::new(0),
+            workers,
+        }
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &Arc<ServingModel> {
+        &self.shared.model
+    }
+
+    /// Enqueue a query; blocks while the queue is at capacity
+    /// (back-pressure). The receiver yields the result, or disconnects if
+    /// the service shut down before the job ran.
+    pub fn submit(&self, tokens: Vec<u32>) -> mpsc::Receiver<InferResult> {
+        let (reply, rx) = mpsc::channel();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.open && q.jobs.len() >= self.shared.cfg.queue_capacity.max(1) {
+            q = self.shared.not_full.wait(q).unwrap();
+        }
+        if q.open {
+            q.jobs.push_back(Job {
+                tokens,
+                seq,
+                enqueued: Instant::now(),
+                reply,
+            });
+            self.shared
+                .peak_queue
+                .fetch_max(q.jobs.len() as u64, Ordering::Relaxed);
+            self.shared.not_empty.notify_one();
+        }
+        // A closed queue drops `reply` here, surfacing as a recv error.
+        rx
+    }
+
+    /// Blocking query: submit + wait. `None` if the service shut down.
+    pub fn infer(&self, tokens: Vec<u32>) -> Option<InferResult> {
+        self.submit(tokens).recv().ok()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            served: self.shared.served.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            peak_queue: self.shared.peak_queue.load(Ordering::Relaxed),
+        }
+    }
+
+    fn close(shared: &Shared) {
+        shared.queue.lock().unwrap().open = false;
+        shared.not_empty.notify_all();
+        shared.not_full.notify_all();
+    }
+
+    /// Drain outstanding work and stop the workers.
+    pub fn shutdown(mut self) {
+        Self::close(&self.shared);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            Self::close(&self.shared);
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Synthesize a query stream: Zipf(1.07)-distributed words over `vocab`
+/// with Poisson(`mean_len`) document lengths — the load generator shared
+/// by `hplvm serve` and the serving benches.
+pub fn synth_queries(vocab: usize, n: usize, mean_len: f64, seed: u64) -> Vec<Vec<u32>> {
+    let zipf = Zipf::new(vocab.max(1), 1.07);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.poisson(mean_len).max(1);
+            (0..len).map(|_| zipf.sample(&mut rng) as u32).collect()
+        })
+        .collect()
+}
+
+/// Drive `queries` through the service keeping at most `window` requests
+/// in flight from the caller's side; returns each answered query's
+/// latency in seconds (queue wait + service time).
+pub fn run_queries(
+    svc: &InferenceService,
+    queries: &[Vec<u32>],
+    window: usize,
+) -> Vec<f64> {
+    let mut pending = VecDeque::new();
+    let mut latencies = Vec::with_capacity(queries.len());
+    let mut drain_one = |pending: &mut VecDeque<mpsc::Receiver<InferResult>>,
+                         latencies: &mut Vec<f64>| {
+        if let Some(rx) = pending.pop_front() {
+            if let Ok(res) = rx.recv() {
+                latencies.push(res.latency.as_secs_f64());
+            }
+        }
+    };
+    for doc in queries {
+        pending.push_back(svc.submit(doc.clone()));
+        while pending.len() > window.max(1) {
+            drain_one(&mut pending, &mut latencies);
+        }
+    }
+    while !pending.is_empty() {
+        drain_one(&mut pending, &mut latencies);
+    }
+    latencies
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let batch: Vec<Job> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if !q.open {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap();
+            }
+            let n = q.jobs.len().min(shared.cfg.max_batch.max(1));
+            let batch = q.jobs.drain(..n).collect();
+            shared.not_full.notify_all();
+            batch
+        };
+        for job in batch {
+            let mut rng = Rng::new(shared.cfg.seed).derive(job.seq);
+            let mut res = infer_doc(&shared.model, &job.tokens, &shared.cfg.infer, &mut rng);
+            res.latency = job.enqueued.elapsed();
+            shared.served.fetch_add(1, Ordering::Relaxed);
+            // The submitter may have stopped listening; that's fine.
+            let _ = job.reply.send(res);
+        }
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::snapshot::{SnapshotMeta, Store};
+
+    fn toy_model() -> Arc<ServingModel> {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let row = if w < 5 { vec![80, 0] } else { vec![0, 80] };
+            store.insert((0, w), row);
+        }
+        let meta = SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+        };
+        Arc::new(ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap())
+    }
+
+    #[test]
+    fn serves_queries_from_many_threads() {
+        let svc = Arc::new(InferenceService::spawn(toy_model(), ServeConfig::default()));
+        let mut handles = Vec::new();
+        for th in 0..4u32 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    let doc = if th % 2 == 0 {
+                        vec![0u32, 1, 2, 3]
+                    } else {
+                        vec![6u32, 7, 8, 9]
+                    };
+                    let res = svc.infer(doc).expect("service dropped a query");
+                    let want = if th % 2 == 0 { 0 } else { 1 };
+                    assert_eq!(res.top_topics(1)[0].0, want);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.served, 100);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn results_do_not_depend_on_pool_shape() {
+        // Same seed, different worker/batch shapes → identical answers,
+        // because each request's RNG stream derives from its sequence
+        // number alone.
+        let docs: Vec<Vec<u32>> = (0..12)
+            .map(|i| (0..6).map(|j| ((i + j) % 10) as u32).collect())
+            .collect();
+        let run = |workers: usize, max_batch: usize| -> Vec<Vec<f64>> {
+            let svc = InferenceService::spawn(
+                toy_model(),
+                ServeConfig {
+                    workers,
+                    max_batch,
+                    ..Default::default()
+                },
+            );
+            let rxs: Vec<_> = docs.iter().map(|d| svc.submit(d.clone())).collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().theta).collect();
+            svc.shutdown();
+            out
+        };
+        assert_eq!(run(1, 1), run(4, 8));
+    }
+
+    #[test]
+    fn micro_batching_actually_batches() {
+        // One slow-start worker + a burst of queries → fewer batches than
+        // queries.
+        let svc = InferenceService::spawn(
+            toy_model(),
+            ServeConfig {
+                workers: 1,
+                max_batch: 64,
+                ..Default::default()
+            },
+        );
+        // Pin the single worker on a long document so the burst of small
+        // queries accumulates in the queue behind it.
+        let long_doc: Vec<u32> = (0..20_000).map(|i| (i % 10) as u32).collect();
+        let pin = svc.submit(long_doc);
+        let rxs: Vec<_> = (0..64).map(|_| svc.submit(vec![0u32, 1, 2])).collect();
+        pin.recv().unwrap();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.served, 65);
+        assert!(
+            stats.batches < 64,
+            "64 queries took {} batches — batching never engaged",
+            stats.batches
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_disconnects_pending_cleanly() {
+        let svc = InferenceService::spawn(toy_model(), ServeConfig::default());
+        let rx = svc.submit(vec![0u32]);
+        // Whether the job ran before shutdown or not, recv must not hang.
+        svc.shutdown();
+        let _ = rx.try_recv();
+    }
+}

@@ -3,6 +3,7 @@
 //! which keeps every failure reproducible from the printed seed).
 
 use hplvm::projection::{project_pair, PairRule};
+use hplvm::ps::filter::Filter;
 use hplvm::ps::snapshot;
 use hplvm::sampler::alias::AliasTable;
 use hplvm::sampler::counts::CountMatrix;
@@ -48,6 +49,90 @@ fn prop_alias_table_matches_weights() {
                 );
             }
         }
+    }
+}
+
+/// A rigorous chi-square goodness-of-fit for the alias sampler: 100k
+/// draws from one fixed weight vector. With 19 effective degrees of
+/// freedom, χ² < 43.8 is the p = 0.001 critical value — a principled
+/// bound, unlike eyeballed per-bin deviations.
+#[test]
+fn prop_alias_chi_square_100k_draws() {
+    // Fixed, deliberately lumpy weights over 20 outcomes.
+    let weights: Vec<f64> = (0..20)
+        .map(|i| match i % 4 {
+            0 => 10.0,
+            1 => 3.5,
+            2 => 0.8,
+            _ => 1.0 + i as f64 * 0.25,
+        })
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let table = AliasTable::build(&weights);
+    let draws = 100_000usize;
+    let mut rng = Rng::new(0xA11A5);
+    let mut counts = vec![0u64; weights.len()];
+    for _ in 0..draws {
+        counts[table.sample(&mut rng)] += 1;
+    }
+    let mut chi2 = 0.0;
+    for (i, &w) in weights.iter().enumerate() {
+        let expected = w / total * draws as f64;
+        assert!(expected >= 5.0, "bin {i} too small for the chi-square test");
+        chi2 += (counts[i] as f64 - expected).powi(2) / expected;
+    }
+    // dof = 20 − 1 = 19; χ²_{0.999,19} = 43.82.
+    assert!(
+        chi2 < 43.82,
+        "alias sampler failed chi-square: χ² = {chi2:.2} over 19 dof (p < 0.001)"
+    );
+    // And the test must have power: all mass accounted for.
+    assert_eq!(counts.iter().sum::<u64>() as usize, draws);
+}
+
+/// The communication filter never loses or duplicates a row: for random
+/// inputs, `send ∪ retain` is a permutation of the input, and
+/// `magnitude_fraction = 1.0` retains nothing.
+#[test]
+fn prop_filter_select_is_a_partition() {
+    let mut rng = Rng::new(0xF117);
+    for trial in 0..200u64 {
+        let n = rng.below(40);
+        let k = 1 + rng.below(6);
+        let rows: Vec<(u32, Box<[i32]>)> = (0..n)
+            .map(|w| {
+                let row: Vec<i32> = (0..k)
+                    .map(|_| rng.below(2001) as i32 - 1000)
+                    .collect();
+                (w as u32, row.into_boxed_slice())
+            })
+            .collect();
+        let filter = Filter {
+            magnitude_fraction: rng.f64(),
+            uniform_prob: rng.f64() * 0.5,
+        };
+        let mut expected: Vec<(u32, Box<[i32]>)> = rows.clone();
+        let (send, retain) = filter.select(rows, &mut rng);
+        // Permutation check on the full (word, row) multiset — no row
+        // lost, duplicated, or rewritten.
+        let mut got: Vec<(u32, Box<[i32]>)> =
+            send.iter().chain(retain.iter()).cloned().collect();
+        got.sort();
+        expected.sort();
+        assert_eq!(
+            got, expected,
+            "trial {trial}: send ∪ retain is not a permutation of the input"
+        );
+
+        // fraction = 1.0 disables the filter entirely.
+        let passthrough = Filter {
+            magnitude_fraction: 1.0,
+            uniform_prob: 0.0,
+        };
+        let rows2: Vec<(u32, Box<[i32]>)> = expected.clone();
+        let (send2, retain2) = passthrough.select(rows2, &mut rng);
+        assert!(retain2.is_empty(), "fraction 1.0 must retain nothing");
+        assert_eq!(send2.len(), expected.len());
     }
 }
 
@@ -314,6 +399,23 @@ fn prop_snapshot_roundtrip_random() {
         }
         let bytes = snapshot::encode_store(&store);
         assert_eq!(snapshot::decode_store(&bytes).unwrap(), store);
+
+        // v2: random hyperparameter headers round-trip bit-for-bit too.
+        let meta = snapshot::SnapshotMeta {
+            model: format!("AliasLDA{}", rng.below(10)),
+            k: rng.below(2000) as u32,
+            alpha: rng.f64() * 2.0,
+            beta: rng.f64() * 0.5,
+            vocab_size: rng.below(100_000) as u32,
+            slot: rng.below(16) as u32,
+            n_servers: 1 + rng.below(16) as u32,
+            vnodes: 1 + rng.below(256) as u32,
+            iterations: rng.next_u64() % 1_000,
+        };
+        let bytes = snapshot::encode_store_meta(&store, &meta);
+        let (meta2, store2) = snapshot::decode_store_meta(&bytes).unwrap();
+        assert_eq!(meta2.as_ref(), Some(&meta));
+        assert_eq!(store2, store);
 
         let n_docs = rng.below(10);
         let snap = snapshot::ClientSnapshot {

@@ -1,0 +1,192 @@
+//! Integration of the training → snapshot → serving pipeline: a trained
+//! snapshot loads into the serving layer, fold-in queries return sane
+//! topic mixtures, and scoring held-out documents with the *served*
+//! mixtures lands within 10% of the evaluation stack's own perplexity on
+//! the same frozen statistics.
+
+use hplvm::config::TrainConfig;
+use hplvm::coordinator::trainer::Trainer;
+use hplvm::eval::perplexity::{perplexity, score_with_theta};
+use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
+use std::sync::Arc;
+
+/// One trained snapshot shared by the assertions below (training on the
+/// simulated cluster dominates the test's cost, so do it once).
+fn trained_snapshot(tag: &str, cfg: &TrainConfig) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hplvm_serve_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = cfg.clone();
+    cfg.cluster.snapshot_dir = Some(dir.clone());
+    let report = Trainer::new(cfg).run().expect("training failed");
+    assert!(report.final_perplexity().is_finite());
+    dir
+}
+
+fn serving_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::small_lda();
+    // Keep the cluster small and fully seeded: this test is about the
+    // serving handoff, not training scale.
+    cfg.corpus.n_docs = 400;
+    cfg.iterations = 12;
+    cfg.eval_every = 6;
+    cfg.test_docs = 60;
+    cfg.cluster.clients = 2;
+    cfg.seed = 4242;
+    cfg.corpus.seed = 4242;
+    cfg.cluster.net.seed = 4242;
+    cfg.cluster.net.base_latency = std::time::Duration::from_micros(50);
+    cfg.cluster.net.jitter = std::time::Duration::from_micros(50);
+    cfg
+}
+
+#[test]
+fn served_mixtures_match_eval_perplexity_within_10_percent() {
+    let cfg = serving_cfg();
+    let dir = trained_snapshot("perp", &cfg);
+
+    let model = Arc::new(ServingModel::load_dir(&dir).expect("snapshot load"));
+    // The v2 header reproduces the training hyperparameters.
+    assert_eq!(model.k(), cfg.params.topics);
+    assert_eq!(model.meta().model, cfg.model.name());
+    assert_eq!(model.meta().alpha.to_bits(), cfg.params.alpha.to_bits());
+    assert_eq!(model.meta().beta.to_bits(), cfg.params.beta.to_bits());
+    assert_eq!(model.vocab(), cfg.corpus.vocab_size);
+
+    // The held-out documents: the split is deterministic in the corpus
+    // seed, so regenerating reproduces exactly what training held out.
+    let (corpus, _) = cfg.corpus.generate();
+    let (_, test) = corpus.split_test(cfg.test_docs);
+
+    // Baseline: the evaluation stack's EM fold-in on the same frozen φ.
+    let baseline = perplexity(&*model, &test, 3, None);
+    assert!(baseline.perplexity.is_finite() && baseline.perplexity > 1.0);
+
+    // Served: every mixture comes out of the micro-batching service. A
+    // few extra sweeps of averaging narrows the estimator gap between
+    // the Gibbs fold-in and the baseline's EM fold-in.
+    let svc = InferenceService::spawn(
+        model.clone(),
+        ServeConfig {
+            infer: hplvm::serve::InferConfig {
+                burnin: 5,
+                samples: 5,
+                mh_steps: 2,
+            },
+            ..Default::default()
+        },
+    );
+    let thetas: Vec<Vec<f64>> = test
+        .docs
+        .iter()
+        .map(|d| svc.infer(d.tokens.clone()).expect("service closed").theta)
+        .collect();
+    let served = score_with_theta(&*model, &test.docs, &thetas);
+    svc.shutdown();
+
+    assert_eq!(served.tokens, baseline.tokens);
+    let rel = (served.perplexity - baseline.perplexity).abs() / baseline.perplexity;
+    assert!(
+        rel < 0.10,
+        "served perplexity {:.2} vs eval {:.2} (rel {:.3})",
+        served.perplexity,
+        baseline.perplexity,
+        rel
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn snapshot_dir_round_trips_through_serving_layer() {
+    let mut cfg = serving_cfg();
+    cfg.corpus.n_docs = 200;
+    cfg.iterations = 6;
+    cfg.eval_every = 3;
+    cfg.test_docs = 30;
+    let dir = trained_snapshot("load", &cfg);
+
+    // One snapshot per server slot, all self-describing.
+    let slots: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.starts_with("server_slot") && n.ends_with(".snap")
+        })
+        .collect();
+    assert_eq!(slots.len(), cfg.cluster.n_servers());
+
+    let model = ServingModel::load_dir(&dir).expect("snapshot load");
+    assert!(model.total_tokens() > 0, "frozen statistics are empty");
+    assert_eq!(model.meta().n_servers as usize, cfg.cluster.n_servers());
+
+    // Fold-in against the loaded model produces a proper distribution
+    // that beats the uniform mixture on its own document.
+    let (corpus, _) = cfg.corpus.generate();
+    let (_, test) = corpus.split_test(cfg.test_docs);
+    let doc = test
+        .docs
+        .iter()
+        .find(|d| d.tokens.len() >= 10)
+        .expect("no usable held-out doc");
+    let mut rng = hplvm::util::rng::Rng::new(7);
+    let res = hplvm::serve::infer_doc(
+        &model,
+        &doc.tokens,
+        &hplvm::serve::InferConfig::default(),
+        &mut rng,
+    );
+    assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    let uniform = vec![vec![1.0 / model.k() as f64; model.k()]];
+    let docs = vec![doc.clone()];
+    let with_inferred = score_with_theta(&model, &docs, &[res.theta.clone()]);
+    let with_uniform = score_with_theta(&model, &docs, &uniform);
+    assert!(
+        with_inferred.avg_log_lik >= with_uniform.avg_log_lik,
+        "inferred mixture ({:.4}) scored below uniform ({:.4})",
+        with_inferred.avg_log_lik,
+        with_uniform.avg_log_lik
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn service_is_deterministic_and_batch_shape_invariant() {
+    let mut cfg = serving_cfg();
+    cfg.corpus.n_docs = 200;
+    cfg.iterations = 5;
+    cfg.eval_every = 5;
+    cfg.test_docs = 20;
+    let dir = trained_snapshot("det", &cfg);
+    let model = Arc::new(ServingModel::load_dir(&dir).expect("snapshot load"));
+
+    let (corpus, _) = cfg.corpus.generate();
+    let (_, test) = corpus.split_test(cfg.test_docs);
+    let run = |workers: usize, batch: usize| -> Vec<Vec<f64>> {
+        let svc = InferenceService::spawn(
+            model.clone(),
+            ServeConfig {
+                workers,
+                max_batch: batch,
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = test
+            .docs
+            .iter()
+            .map(|d| svc.submit(d.tokens.clone()))
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("service closed").theta)
+            .collect();
+        svc.shutdown();
+        out
+    };
+    assert_eq!(
+        run(1, 1),
+        run(4, 16),
+        "served mixtures depend on pool shape — RNG streams leak across requests"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

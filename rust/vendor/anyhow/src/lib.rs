@@ -1,0 +1,137 @@
+//! Minimal offline drop-in for the subset of the `anyhow` API this
+//! workspace uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The build environment has no crates.io access, so
+//! this ~100-line vendored crate stands in for the real one; swap it out
+//! with a `[patch]` entry when building online.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional source it was converted
+/// from. Deliberately does **not** implement `std::error::Error`, exactly
+/// like the real `anyhow::Error`, so the blanket `From` below is coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// The root cause's message, if this error wraps one.
+    pub fn source_message(&self) -> Option<String> {
+        self.source.as_ref().map(|s| s.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the chain, like the real anyhow.
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            if let Some(s) = &self.source {
+                let cause = s.to_string();
+                if cause != self.msg {
+                    write!(f, ": {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(s) = &self.source {
+            let cause = s.to_string();
+            if cause != self.msg {
+                write!(f, "\n\nCaused by:\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+/// `anyhow::Result<T>` — like `std::result::Result` with [`Error`] as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/3720")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("thing {} broke", 7);
+        assert_eq!(e.to_string(), "thing 7 broke");
+        fn guarded(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(guarded(1).is_ok());
+        assert_eq!(
+            guarded(-2).unwrap_err().to_string(),
+            "x must be positive, got -2"
+        );
+    }
+
+    #[test]
+    fn alternate_display_appends_cause() {
+        let e = io_fail().unwrap_err();
+        // Wrapped errors echo their cause; message == cause here, so the
+        // alternate form must not duplicate it.
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+    }
+}
