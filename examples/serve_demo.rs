@@ -1,57 +1,69 @@
-//! Train → snapshot → serve, end to end: train a small LDA model on the
-//! simulated cluster, persist the server snapshots, load them into the
-//! inference service, and answer topic-mixture queries for held-out
-//! documents.
+//! Train → snapshot → serve → train more → **hot-reload**, end to end:
+//! train a small LDA model on the simulated cluster, serve topic-mixture
+//! queries through the generation-numbered [`ServingHandle`], then train
+//! further and swap the newer snapshots in live — with queries in flight
+//! and nothing dropped.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
 //! ```
+//!
+//! [`ServingHandle`]: hplvm::serve::ServingHandle
 
 use hplvm::config::TrainConfig;
 use hplvm::coordinator::trainer::Trainer;
-use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
-use std::sync::Arc;
+use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
 
-fn main() {
-    let snapdir = std::env::temp_dir().join(format!("hplvm_serve_demo_{}", std::process::id()));
-
-    // 1. Train with snapshots persisted (the serve handoff).
-    let mut cfg = TrainConfig::small_lda();
-    cfg.iterations = 20;
-    cfg.cluster.snapshot_dir = Some(snapdir.clone());
+fn train_into(cfg: &TrainConfig, label: &str) {
     println!(
-        "training {} | {} docs, vocab {}, K={} → snapshots in {}",
+        "[{label}] training {} | {} docs, vocab {}, K={}, {} iterations",
         cfg.model.name(),
         cfg.corpus.n_docs,
         cfg.corpus.vocab_size,
         cfg.params.topics,
-        snapdir.display()
+        cfg.iterations,
     );
     let report = Trainer::new(cfg.clone()).run().expect("training failed");
     println!(
-        "trained: final perplexity {:.1} ({} tokens)",
+        "[{label}] final perplexity {:.1} ({} tokens)",
         report.final_perplexity(),
         report.total_tokens
     );
+}
 
-    // 2. Load the frozen model — no training config needed: the v2
-    // snapshot header carries model, K, α, β and the ring geometry.
-    let model = Arc::new(ServingModel::load_dir(&snapdir).expect("snapshot load failed"));
-    println!(
-        "serving model: {} | K={} vocab={} | {} frozen tokens",
-        model.meta().model,
-        model.k(),
-        model.vocab(),
-        model.total_tokens()
-    );
+fn main() {
+    let snapdir = std::env::temp_dir().join(format!("hplvm_serve_demo_{}", std::process::id()));
+    std::fs::remove_dir_all(&snapdir).ok();
+
+    // 1. Train with snapshots persisted (the serve handoff).
+    let mut cfg = TrainConfig::small_lda();
+    cfg.iterations = 12;
+    cfg.cluster.snapshot_dir = Some(snapdir.clone());
+    train_into(&cfg, "gen 1");
+
+    // 2. Load generation 1 — no training config needed: the v3 snapshot
+    // header carries the family, K, α, β, ring geometry, and (for
+    // PDP/HDP) the table-side hyperparameters.
+    let handle = ServingHandle::load_dir(&snapdir).expect("snapshot load failed");
+    {
+        let model = handle.model();
+        println!(
+            "serving {} (family {}) | K={} vocab={} | {} frozen tokens | generation {}",
+            model.meta().model,
+            model.kind().family_name(),
+            model.k(),
+            model.vocab(),
+            model.total_tokens(),
+            handle.generation(),
+        );
+    }
 
     // 3. Serve held-out documents (regenerate the corpus; the tail docs
     // were never trained on).
     let (corpus, _) = cfg.corpus.generate();
     let (_, test) = corpus.split_test(cfg.test_docs);
-    let svc = InferenceService::spawn(model.clone(), ServeConfig::default());
-    let t0 = std::time::Instant::now();
-    for (i, doc) in test.docs.iter().take(5).enumerate() {
+    let svc = InferenceService::spawn(handle.clone(), ServeConfig::default());
+    for (i, doc) in test.docs.iter().take(3).enumerate() {
         let res = svc.infer(doc.tokens.clone()).expect("service closed");
         let top: Vec<String> = res
             .top_topics(3)
@@ -59,24 +71,54 @@ fn main() {
             .map(|(t, w)| format!("{t}:{w:.3}"))
             .collect();
         println!(
-            "doc {i:>2} ({:>3} tokens): top topics {}",
+            "gen {} | doc {i:>2} ({:>3} tokens): top topics {}",
+            res.generation,
             doc.tokens.len(),
             top.join("  ")
         );
     }
-    let n = test.docs.len();
-    for doc in &test.docs {
-        svc.infer(doc.tokens.clone()).expect("service closed");
+
+    // 4. Train further into the same directory: newer snapshots appear on
+    // disk while the service keeps answering against generation 1.
+    let mut more = cfg.clone();
+    more.iterations = 24;
+    train_into(&more, "gen 2");
+
+    // 5. Live reload: queue a burst of queries, swap the generation while
+    // they drain, and account for every single one.
+    let in_flight: Vec<_> = test
+        .docs
+        .iter()
+        .take(40)
+        .map(|d| svc.submit(d.tokens.clone()))
+        .collect();
+    let swapped = handle.reload(&snapdir).expect("reload failed");
+    println!("hot-reloaded → generation {swapped} (queue untouched)");
+    let mut by_gen = std::collections::BTreeMap::<u64, usize>::new();
+    for rx in in_flight {
+        let res = rx.recv().expect("request dropped across reload");
+        *by_gen.entry(res.generation).or_default() += 1;
     }
-    let secs = t0.elapsed().as_secs_f64();
+    for (generation, n) in &by_gen {
+        println!("  {n:>3} in-flight queries answered by generation {generation}");
+    }
+
+    // 6. Every query from here on is served by the new generation.
+    let res = svc
+        .infer(test.docs[0].tokens.clone())
+        .expect("service closed");
+    assert_eq!(res.generation, swapped, "post-swap query on old generation");
+    println!(
+        "post-swap query: generation {} | top topic {:?}",
+        res.generation,
+        res.top_topics(1)
+    );
     let stats = svc.stats();
     println!(
-        "served {} queries in {:.2}s ({:.0} q/s, {} micro-batches); cache: {:?}",
+        "served {} queries in {} micro-batches; final generation {}",
         stats.served,
-        secs,
-        (n + 5) as f64 / secs,
         stats.batches,
-        model.cache_stats()
+        handle.generation()
     );
     svc.shutdown();
     std::fs::remove_dir_all(&snapdir).ok();

@@ -1,27 +1,33 @@
 //! Serving throughput: queries/second and latency percentiles of the
-//! snapshot-backed inference service, against a snapshot produced by a
-//! 20-iteration `small_lda` training run.
+//! snapshot-backed inference service.
 //!
-//! Sweeps the worker-pool and micro-batch shape, and contrasts a warm
-//! alias cache with a budget-starved one (every query rebuilds tables) —
-//! the serving-side analogue of the paper's amortization argument (§3.1).
+//! Three panels:
+//! * pool-shape sweep on an LDA snapshot (workers × micro-batch),
+//! * warm vs budget-starved alias cache (the §3.1 amortization argument
+//!   on the serving path),
+//! * **family sweep** — the same service loop against LDA, PDP, and HDP
+//!   snapshots, now that the [`ServingFamily`] abstraction serves all
+//!   three: PDP pays the Pitman-Yor predictive (two matrices) per table
+//!   build, HDP pays the root-stick prior weighting.
+//!
+//! [`ServingFamily`]: hplvm::serve::ServingFamily
 
 use hplvm::bench;
 use hplvm::config::TrainConfig;
 use hplvm::coordinator::trainer::Trainer;
-use hplvm::serve::{run_queries, synth_queries, InferenceService, ServeConfig, ServingModel};
+use hplvm::serve::{run_queries, synth_queries, InferenceService, ServeConfig, ServingHandle};
 use std::sync::Arc;
 
 /// Run `queries` through a fresh service; returns (qps, p50 ms, p99 ms,
 /// realized batch size).
 fn drive(
-    model: &Arc<ServingModel>,
+    handle: &Arc<ServingHandle>,
     queries: &[Vec<u32>],
     workers: usize,
     max_batch: usize,
 ) -> (f64, f64, f64, f64) {
     let svc = InferenceService::spawn(
-        model.clone(),
+        handle.clone(),
         ServeConfig {
             workers,
             max_batch,
@@ -41,41 +47,54 @@ fn drive(
     )
 }
 
+/// Train `cfg` into a fresh snapshot dir and load it behind a handle.
+fn trained_handle(cfg: &TrainConfig, tag: &str) -> (Arc<ServingHandle>, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "hplvm_serve_bench_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = cfg.clone();
+    cfg.cluster.snapshot_dir = Some(dir.clone());
+    let t0 = std::time::Instant::now();
+    let report = Trainer::new(cfg.clone()).run().expect("training failed");
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load failed");
+    println!(
+        "trained {} in {:.1}s (final perplexity {:.1}); loaded generation {}",
+        cfg.model.name(),
+        t0.elapsed().as_secs_f64(),
+        report.final_perplexity(),
+        handle.generation(),
+    );
+    (handle, dir)
+}
+
 fn main() {
     println!("# Serving throughput — snapshot-backed topic inference");
 
     bench::section("snapshot production (20-iteration small_lda)");
-    let snapdir = std::env::temp_dir().join(format!("hplvm_serve_bench_{}", std::process::id()));
-    let mut cfg = TrainConfig::small_lda();
-    cfg.iterations = 20;
-    cfg.cluster.snapshot_dir = Some(snapdir.clone());
-    let t0 = std::time::Instant::now();
-    let report = Trainer::new(cfg.clone()).run().expect("training failed");
-    println!(
-        "trained {} in {:.1}s (final perplexity {:.1}); snapshots in {}",
-        cfg.model.name(),
-        t0.elapsed().as_secs_f64(),
-        report.final_perplexity(),
-        snapdir.display()
-    );
-    let model =
-        Arc::new(ServingModel::load_dir(&snapdir).expect("snapshot load failed"));
-    println!(
-        "loaded: K={} vocab={} frozen tokens={}",
-        model.k(),
-        model.vocab(),
-        model.total_tokens()
-    );
+    let mut lda_cfg = TrainConfig::small_lda();
+    lda_cfg.iterations = 20;
+    let (lda, lda_dir) = trained_handle(&lda_cfg, "lda");
+    {
+        let model = lda.model();
+        println!(
+            "loaded: K={} vocab={} frozen tokens={}",
+            model.k(),
+            model.vocab(),
+            model.total_tokens()
+        );
+    }
 
-    let queries = synth_queries(model.vocab(), 4_000, 32.0, 7);
+    let queries = synth_queries(lda.model().vocab(), 4_000, 32.0, 7);
 
     bench::section("pool shape sweep (queries/s, latency in ms)");
     let mut rows = Vec::new();
     // Prime the alias cache so the shapes compete on pool mechanics, not
     // first-touch table builds.
-    drive(&model, &queries[..500.min(queries.len())], 2, 32);
+    drive(&lda, &queries[..500.min(queries.len())], 2, 32);
     for &(workers, batch) in &[(1usize, 1usize), (1, 32), (2, 32), (4, 32), (4, 128)] {
-        let (qps, p50, p99, realized) = drive(&model, &queries, workers, batch);
+        let (qps, p50, p99, realized) = drive(&lda, &queries, workers, batch);
         rows.push(vec![
             workers.to_string(),
             batch.to_string(),
@@ -89,19 +108,17 @@ fn main() {
         &["workers", "max batch", "queries/s", "p50 ms", "p99 ms", "avg batch"],
         &rows,
     );
-    let cache = model.cache_stats();
+    let cache = lda.model().cache_stats();
     println!(
         "alias cache after sweep: {} resident, {} hits / {} misses / {} evictions",
         cache.resident, cache.hits, cache.misses, cache.evictions
     );
 
     bench::section("alias-cache amortization (64 MiB budget vs starved)");
-    let starved = Arc::new(
-        ServingModel::load_dir_with_budget(&snapdir, 1).expect("snapshot load failed"),
-    );
+    let starved = ServingHandle::load_dir_with_budget(&lda_dir, 1).expect("snapshot load failed");
     let mut rows = Vec::new();
-    for (name, m) in [("warm 64 MiB", &model), ("starved (~1 table/shard)", &starved)] {
-        let (qps, p50, p99, _) = drive(m, &queries[..1_000.min(queries.len())], 2, 32);
+    for (name, h) in [("warm 64 MiB", &lda), ("starved (~1 table/shard)", &starved)] {
+        let (qps, p50, p99, _) = drive(h, &queries[..1_000.min(queries.len())], 2, 32);
         rows.push(vec![
             name.to_string(),
             format!("{qps:.0}"),
@@ -110,11 +127,46 @@ fn main() {
         ]);
     }
     bench::table(&["cache", "queries/s", "p50 ms", "p99 ms"], &rows);
+    std::fs::remove_dir_all(&lda_dir).ok();
+
+    bench::section("family sweep (same service loop, per-family φ)");
+    // Smaller runs: the panel compares serving cost, not training quality.
+    let mut pdp_cfg = TrainConfig::small_pdp();
+    pdp_cfg.corpus.n_docs = 400;
+    pdp_cfg.iterations = 10;
+    let mut hdp_cfg = TrainConfig::small_hdp();
+    hdp_cfg.corpus.n_docs = 400;
+    hdp_cfg.iterations = 10;
+    let mut lda_small = TrainConfig::small_lda();
+    lda_small.corpus.n_docs = 400;
+    lda_small.iterations = 10;
+    let mut rows = Vec::new();
+    for (tag, cfg) in [
+        ("lda_fam", lda_small),
+        ("pdp_fam", pdp_cfg),
+        ("hdp_fam", hdp_cfg),
+    ] {
+        let (handle, dir) = trained_handle(&cfg, tag);
+        let queries = synth_queries(handle.model().vocab(), 2_000, 32.0, 7);
+        // Warm pass primes each family's alias cache, then measure.
+        drive(&handle, &queries[..400.min(queries.len())], 2, 32);
+        let (qps, p50, p99, _) = drive(&handle, &queries, 2, 32);
+        rows.push(vec![
+            handle.model().meta().model.clone(),
+            format!("{}", handle.model().k()),
+            format!("{qps:.0}"),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+        ]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    bench::table(&["family", "K", "queries/s", "p50 ms", "p99 ms"], &rows);
 
     println!(
         "\nExpected shape: batching lifts queries/s at equal worker count; the\n\
          starved cache pays an O(K) table rebuild per (word, query) and falls\n\
-         behind — the §3.1 amortization argument, now on the serving path."
+         behind; PDP/HDP serve within the same order of magnitude as LDA —\n\
+         the family only changes how a cached table is *built*, not how it\n\
+         is consumed."
     );
-    std::fs::remove_dir_all(&snapdir).ok();
 }

@@ -21,6 +21,14 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Every model kind, in declaration order (exhaustive sweeps).
+    pub const ALL: [ModelKind; 4] = [
+        ModelKind::YahooLda,
+        ModelKind::AliasLda,
+        ModelKind::AliasPdp,
+        ModelKind::AliasHdp,
+    ];
+
     /// Parse from a CLI/JSON string.
     pub fn parse(s: &str) -> Option<ModelKind> {
         match s.to_ascii_lowercase().as_str() {
@@ -39,6 +47,25 @@ impl ModelKind {
             ModelKind::AliasLda => "AliasLDA",
             ModelKind::AliasPdp => "AliasPDP",
             ModelKind::AliasHdp => "AliasHDP",
+        }
+    }
+
+    /// Canonical string form — guaranteed to round-trip through
+    /// [`ModelKind::parse`] (the contract snapshots rely on to record
+    /// their family).
+    pub fn as_str(&self) -> &'static str {
+        self.name()
+    }
+
+    /// The serving family this kind's frozen statistics belong to:
+    /// `"lda"` (both LDA samplers share one statistic), `"pdp"`, or
+    /// `"hdp"`. The `serve --model` contradiction check compares at this
+    /// granularity.
+    pub fn family_name(&self) -> &'static str {
+        match self {
+            ModelKind::YahooLda | ModelKind::AliasLda => "lda",
+            ModelKind::AliasPdp => "pdp",
+            ModelKind::AliasHdp => "hdp",
         }
     }
 
@@ -334,6 +361,34 @@ mod tests {
         assert_eq!(ModelKind::parse("PDP"), Some(ModelKind::AliasPdp));
         assert_eq!(ModelKind::parse("hdp"), Some(ModelKind::AliasHdp));
         assert_eq!(ModelKind::parse("gpt"), None);
+    }
+
+    /// Satellite: `as_str` → `parse` is the identity for every kind (and
+    /// case-insensitively so) — the contract that lets snapshots record
+    /// their family as a string.
+    #[test]
+    fn model_kind_as_str_parse_roundtrip() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.as_str()), Some(kind), "{kind:?}");
+            assert_eq!(
+                ModelKind::parse(&kind.as_str().to_ascii_uppercase()),
+                Some(kind)
+            );
+            assert_eq!(
+                ModelKind::parse(&kind.as_str().to_ascii_lowercase()),
+                Some(kind)
+            );
+            assert!(!kind.family_name().is_empty());
+        }
+        // Family granularity: both LDA samplers serve the same statistic.
+        assert_eq!(
+            ModelKind::YahooLda.family_name(),
+            ModelKind::AliasLda.family_name()
+        );
+        assert_ne!(
+            ModelKind::AliasPdp.family_name(),
+            ModelKind::AliasHdp.family_name()
+        );
     }
 
     #[test]

@@ -76,7 +76,9 @@ impl Trainer {
                 // (failure injection) are detected immediately either way.
                 liveness_timeout: Duration::from_secs(10),
                 // Stamped into every server snapshot so a snapshot
-                // directory is self-describing for the serving layer.
+                // directory is self-describing for the serving layer. The
+                // v3 table section carries the hyperparameters that give
+                // the matrix-1 table counts meaning (PDP/HDP serving).
                 meta: snapshot::SnapshotMeta {
                     model: cfg.model.name().to_string(),
                     k: cfg.params.topics as u32,
@@ -87,6 +89,29 @@ impl Trainer {
                     n_servers: cfg.cluster.n_servers() as u32,
                     vnodes: cfg.cluster.vnodes as u32,
                     iterations: cfg.iterations,
+                    // Fresh nonce per run: slot files from different runs
+                    // must never merge at serving time, even when every
+                    // configured hyperparameter matches.
+                    run_id: {
+                        let nanos = std::time::SystemTime::now()
+                            .duration_since(std::time::UNIX_EPOCH)
+                            .map(|d| d.as_nanos() as u64)
+                            .unwrap_or(0);
+                        nanos ^ ((std::process::id() as u64) << 32)
+                    },
+                    tables: match cfg.model {
+                        crate::config::ModelKind::AliasPdp => Some(snapshot::TableHyper {
+                            discount: cfg.params.pdp_discount,
+                            concentration: cfg.params.pdp_concentration,
+                            root: cfg.params.pdp_gamma,
+                        }),
+                        crate::config::ModelKind::AliasHdp => Some(snapshot::TableHyper {
+                            discount: 0.0,
+                            concentration: cfg.params.hdp_b1,
+                            root: cfg.params.hdp_b0,
+                        }),
+                        _ => None,
+                    },
                 },
             },
         );

@@ -11,11 +11,16 @@
 //!
 //! ## Layering
 //!
-//! * **Layer 4 ([`serve`])** — the snapshot-backed inference service:
-//!   loads the server snapshots a training run wrote, freezes the
-//!   word–topic statistics, builds per-word alias tables lazily under an
-//!   LRU byte budget, and answers fold-in queries
-//!   (`doc → topic mixture`) through a micro-batching worker pool.
+//! * **Layer 4 ([`serve`])** — the family-generic, hot-reloadable
+//!   inference service: the [`serve::ServingFamily`] trait abstracts
+//!   "frozen sufficient statistics + fold-in posterior" per model family
+//!   (LDA `n_tw`, PDP customer+table counts with the PYP predictive, HDP
+//!   `n_tw` + root sticks), all built from the self-describing v3 server
+//!   snapshots. Per-word alias tables are cached lazily under an LRU
+//!   byte budget; a generation-numbered [`serve::ServingHandle`] swaps
+//!   newer snapshots in atomically without dropping the in-flight
+//!   micro-batch queue, and every answer reports the generation that
+//!   served it.
 //! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
 //!   simulated cluster transport, server group / client groups / scheduler /
 //!   server manager, samplers, projection, metrics, CLI.
@@ -28,9 +33,12 @@
 //!   the PJRT C API (`xla` crate) so the evaluation path runs the compiled
 //!   kernels with **no python at training time**.
 //!
-//! Training hands off to serving through [`ps::snapshot`]: v2 server
-//! snapshots carry the hyperparameters (model, K, α, β) and ring
-//! geometry, so a snapshot directory is all the inference server needs.
+//! Training hands off to serving through [`ps::snapshot`]: v3 server
+//! snapshots carry the hyperparameters (model, K, α, β), the ring
+//! geometry, and — for the table-constrained families — the
+//! [`ps::snapshot::TableHyper`] section (PDP `a`/`b`/`γ`, HDP `b₀`/`b₁`),
+//! so a snapshot directory is all the inference server needs for any
+//! family; v1/v2 files still decode.
 //!
 //! ## Quickstart
 //!

@@ -5,18 +5,20 @@
 //!             [--iterations N] [--docs N] [--vocab V] [--projection MODE]
 //!             [--snapshot-dir DIR] [--config file.json] [--out report.json]
 //!             [--pjrt] [-v|-q]
-//! hplvm serve --snapshot DIR [--queries N] [--workers W] [--batch B]
-//!             [--cache-mb M] [--seed S]      # load-test the inference server
-//! hplvm infer --snapshot DIR --tokens "3 17 42" [--top N]
+//! hplvm serve --snapshot DIR [--model NAME] [--watch] [--queries N]
+//!             [--workers W] [--batch B] [--cache-mb M] [--seed S]
+//!                            # load-test the inference server (any family)
+//! hplvm infer --snapshot DIR --tokens "3 17 42" [--model NAME] [--top N]
 //! hplvm eval-engine          # check PJRT artifacts load and execute
 //! hplvm info                 # print the resolved configuration
 //! ```
 
 use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
 use hplvm::coordinator::trainer::Trainer;
-use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
+use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
 use hplvm::util::json::Json;
 use hplvm::util::logging::{self, Level};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn usage() -> ! {
@@ -39,6 +41,10 @@ fn usage() -> ! {
            -v / -q               verbose / quiet\n\
          serve options:\n\
            --snapshot DIR        snapshot directory written by train\n\
+           --model NAME          expected family; errors if the snapshot\n\
+                                 records a different one\n\
+           --watch               poll DIR and hot-reload newer snapshots\n\
+                                 (generation swaps, queue preserved)\n\
            --queries N           synthetic queries to run (default 2000)\n\
            --workers W           worker threads (default 2)\n\
            --batch B             max micro-batch size (default 32)\n\
@@ -48,6 +54,7 @@ fn usage() -> ! {
          infer options:\n\
            --snapshot DIR        snapshot directory written by train\n\
            --tokens \"W W ...\"    word ids of the document\n\
+           --model NAME          expected family (optional cross-check)\n\
            --top N               topics to print (default 8)"
     );
     std::process::exit(2)
@@ -147,6 +154,8 @@ fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
 
 struct ServeArgs {
     snapshot: std::path::PathBuf,
+    model: Option<ModelKind>,
+    watch: bool,
     queries: usize,
     workers: usize,
     batch: usize,
@@ -160,6 +169,8 @@ struct ServeArgs {
 fn parse_serve_args(args: &[String]) -> ServeArgs {
     let mut out = ServeArgs {
         snapshot: std::path::PathBuf::new(),
+        model: None,
+        watch: false,
         queries: 2_000,
         workers: 2,
         batch: 32,
@@ -173,6 +184,11 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
     while let Some(arg) = it.next() {
         match arg {
             "--snapshot" => out.snapshot = std::path::PathBuf::from(it.value("--snapshot")),
+            "--model" => {
+                let v = it.value("--model");
+                out.model = Some(ModelKind::parse(v).unwrap_or_else(|| usage()));
+            }
+            "--watch" => out.watch = true,
             "--queries" => {
                 out.queries = it.value("--queries").parse().unwrap_or_else(|_| usage())
             }
@@ -211,30 +227,80 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
     out
 }
 
-fn load_model(a: &ServeArgs) -> ServingModel {
-    match ServingModel::load_dir_with_budget(&a.snapshot, a.cache_mb << 20) {
-        Ok(m) => m,
+fn load_handle(a: &ServeArgs) -> Arc<ServingHandle> {
+    let handle = match ServingHandle::load_dir_with_budget(&a.snapshot, a.cache_mb << 20) {
+        Ok(h) => h,
         Err(e) => {
             eprintln!("cannot load snapshot: {e:#}");
             std::process::exit(1)
         }
+    };
+    // Satellite check: an explicit --model that contradicts the family
+    // the snapshot records is an operator error — refuse loudly instead
+    // of silently serving the wrong posterior.
+    if let Some(kind) = a.model {
+        if let Err(e) = handle.model().ensure_family(kind) {
+            eprintln!("{e:#}");
+            std::process::exit(1)
+        }
     }
+    handle
+}
+
+/// Fingerprint the slot snapshots in a directory (name, size, mtime,
+/// run id): the `--watch` poller reloads when this changes. The run id
+/// comes from a header-only read ([`hplvm::ps::snapshot::read_slot_meta`])
+/// and catches a same-config *retrain* whose files match the old ones in
+/// size and mtime tick. (A same-run periodic rewrite that keeps the byte
+/// length and lands within one coarse mtime tick can still slip a poll;
+/// it self-heals at the next snapshot cadence tick.)
+fn snapshot_fingerprint(
+    dir: &std::path::Path,
+) -> Vec<(String, u64, std::time::SystemTime, u64)> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !hplvm::ps::snapshot::is_slot_snapshot_name(&name) {
+                continue;
+            }
+            if let Ok(md) = entry.metadata() {
+                let mtime = md.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                let run_id = hplvm::ps::snapshot::read_slot_meta(&entry.path())
+                    .map(|m| m.run_id)
+                    .unwrap_or(0);
+                out.push((name, md.len(), mtime, run_id));
+            }
+        }
+    }
+    out.sort();
+    out
 }
 
 fn cmd_serve(a: ServeArgs) {
-    let model = Arc::new(load_model(&a));
-    println!(
-        "serving {} | K={} vocab={} | {} tokens in frozen statistics | {} workers, batch {}, cache {} MiB",
-        model.meta().model,
-        model.k(),
-        model.vocab(),
-        model.total_tokens(),
-        a.workers.max(1),
-        a.batch,
-        a.cache_mb,
-    );
+    // Baseline the directory BEFORE loading (only when watching): a
+    // snapshot landing between the load and the watcher's first poll
+    // must still trigger a reload.
+    let baseline = a.watch.then(|| snapshot_fingerprint(&a.snapshot));
+    let handle = load_handle(&a);
+    {
+        let model = handle.model();
+        println!(
+            "serving {} (family {}) | K={} vocab={} | {} tokens in frozen statistics | generation {} | {} workers, batch {}, cache {} MiB{}",
+            model.meta().model,
+            model.kind().family_name(),
+            model.k(),
+            model.vocab(),
+            model.total_tokens(),
+            handle.generation(),
+            a.workers.max(1),
+            a.batch,
+            a.cache_mb,
+            if a.watch { " | watching for new snapshots" } else { "" },
+        );
+    }
     let svc = InferenceService::spawn(
-        model.clone(),
+        handle.clone(),
         ServeConfig {
             workers: a.workers,
             max_batch: a.batch,
@@ -242,18 +308,60 @@ fn cmd_serve(a: ServeArgs) {
             ..Default::default()
         },
     );
+    // --watch: poll the snapshot directory in the background and swap in
+    // newer generations without disturbing the queue.
+    let stop_watch = Arc::new(AtomicBool::new(false));
+    let watcher = baseline.map(|baseline| {
+        let handle = handle.clone();
+        let dir = a.snapshot.clone();
+        let stop = stop_watch.clone();
+        std::thread::spawn(move || {
+            let mut loaded = baseline;
+            let mut pending: Option<Vec<_>> = None;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                let now = snapshot_fingerprint(&dir);
+                if now == loaded || now.is_empty() {
+                    pending = None;
+                    continue;
+                }
+                // Debounce: the trainer writes slot files sequentially, so
+                // only reload once the directory has been stable for a
+                // full tick (load_dir additionally rejects half-written
+                // mixed-run directories).
+                if pending.as_ref() != Some(&now) {
+                    pending = Some(now);
+                    continue;
+                }
+                pending = None;
+                match handle.reload(&dir) {
+                    Ok(g) => println!("hot-reloaded snapshots → generation {g}"),
+                    // Mark the failed fingerprint as seen either way: a
+                    // permanently bad directory is reported once, then
+                    // retried only when the directory changes again.
+                    Err(e) => eprintln!(
+                        "hot-reload failed (still serving; will retry on \
+                         the next directory change): {e:#}"
+                    ),
+                }
+                loaded = now;
+            }
+        })
+    });
     // Synthetic Zipf query stream over the model's vocabulary.
-    let queries = hplvm::serve::synth_queries(model.vocab(), a.queries, a.doc_len, a.seed ^ 0x5E17E);
+    let vocab = handle.model().vocab();
+    let queries = hplvm::serve::synth_queries(vocab, a.queries, a.doc_len, a.seed ^ 0x5E17E);
     let t0 = std::time::Instant::now();
     let latencies = hplvm::serve::run_queries(&svc, &queries, 512);
     let wall = t0.elapsed().as_secs_f64();
     let stats = svc.stats();
-    let cache = model.cache_stats();
+    let cache = handle.model().cache_stats();
     println!(
-        "{} queries in {:.2}s  →  {:.0} queries/s",
+        "{} queries in {:.2}s  →  {:.0} queries/s (final generation {})",
         latencies.len(),
         wall,
         latencies.len() as f64 / wall.max(1e-9),
+        handle.generation(),
     );
     println!(
         "latency p50 {:.3} ms | p99 {:.3} ms | batches {} (avg size {:.1}) | peak queue {}",
@@ -271,6 +379,10 @@ fn cmd_serve(a: ServeArgs) {
         cache.misses,
         cache.evictions,
     );
+    stop_watch.store(true, Ordering::Relaxed);
+    if let Some(w) = watcher {
+        let _ = w.join();
+    }
     svc.shutdown();
 }
 
@@ -279,7 +391,8 @@ fn cmd_infer(a: ServeArgs) {
         eprintln!("--tokens \"W W ...\" is required");
         usage()
     }
-    let model = load_model(&a);
+    let handle = load_handle(&a);
+    let model = handle.model();
     let mut rng = hplvm::util::rng::Rng::new(a.seed);
     let res = hplvm::serve::infer_doc(
         &model,
@@ -288,7 +401,10 @@ fn cmd_infer(a: ServeArgs) {
         &mut rng,
     );
     println!(
-        "{} tokens | MH acceptance {:.3}",
+        "{} ({}) generation {} | {} tokens | MH acceptance {:.3}",
+        model.meta().model,
+        model.kind().family_name(),
+        handle.generation(),
         res.tokens,
         res.accepted as f64 / res.proposed.max(1) as f64
     );

@@ -44,7 +44,9 @@ pub struct ServerConfig {
     /// detected immediately regardless of this value.
     pub liveness_timeout: Duration,
     /// Hyperparameter + ring metadata stamped into every snapshot (the
-    /// `slot` field is overwritten per server node at write time).
+    /// `slot` field is overwritten per server node at write time). With
+    /// `meta.tables` set, snapshots carry the v3 table-statistics section
+    /// the PDP/HDP serving families require.
     pub meta: SnapshotMeta,
 }
 
@@ -96,7 +98,7 @@ impl ServerNode {
     fn snapshot_path(cfg: &ServerConfig, slot: usize) -> Option<PathBuf> {
         cfg.snapshot_dir
             .as_ref()
-            .map(|d| d.join(format!("server_slot{slot}.snap")))
+            .map(|d| d.join(snapshot::slot_snapshot_name(slot)))
     }
 
     fn run(mut self) {

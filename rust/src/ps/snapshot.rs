@@ -6,11 +6,34 @@
 //! loads the most recent one and continues — rolling only *itself* back,
 //! which is the paper's deliberately relaxed failover semantics.
 //!
-//! Server snapshots carry a [`SnapshotMeta`] header (format v2) recording
-//! the hyperparameters (model, K, α, β) and the ring assignment the store
-//! was sharded under — everything the serving layer ([`crate::serve`])
-//! needs to rebuild proposal distributions without the training config.
-//! v1 files (no header) still decode, with `meta = None`.
+//! Server snapshots carry a [`SnapshotMeta`] header recording the
+//! hyperparameters (model, K, α, β) and the ring assignment the store was
+//! sharded under — everything the serving layer ([`crate::serve`]) needs
+//! to rebuild proposal distributions without the training config.
+//!
+//! ## Format history
+//!
+//! * **v1** (`HPLVMSNP`) — bare store, no header. Still decodes, with
+//!   `meta = None`.
+//! * **v2** (`HPLVMSN2`) — adds the [`SnapshotMeta`] header: model name,
+//!   `K`, α, β, vocabulary size, and the ring geometry
+//!   (`slot`/`n_servers`/`vnodes`). Still decodes, with
+//!   `meta.tables = None`.
+//! * **v3** (`HPLVMSN3`, current) — appends, after the v2 fields: a
+//!   `run_id` nonce identifying the producing training run (slot files
+//!   from different runs must never merge, even when every configured
+//!   hyperparameter matches), then an *optional table-statistics
+//!   section*: one `has_tables` byte, followed (when set) by the
+//!   [`TableHyper`] triple `(discount, concentration, root)`.
+//!   The per-word table **counts** themselves already travel in the store
+//!   body as matrix 1 (`s_tw` for PDP; the root `t_k` row for HDP — see
+//!   [`crate::coordinator::model::MATRIX_TABLES`]); v3 adds the
+//!   hyperparameters that give those counts meaning, which is what the
+//!   PDP/HDP serving families need to rebuild the frozen predictive
+//!   distributions. LDA snapshots write `has_tables = 0` and are
+//!   byte-identical to v2 apart from the magic and that one byte.
+//!
+//! Encoders always write the current format; decoders accept all three.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -21,6 +44,27 @@ pub type Store = HashMap<(u8, u32), Vec<i32>>;
 
 const MAGIC: &[u8; 8] = b"HPLVMSNP";
 const MAGIC_V2: &[u8; 8] = b"HPLVMSN2";
+const MAGIC_V3: &[u8; 8] = b"HPLVMSN3";
+
+/// Table-side hyperparameters (v3 section) — present for model families
+/// whose sufficient statistics include table counts (PDP/HDP).
+///
+/// The three slots are family-overloaded (a DP is a PDP with discount 0):
+///
+/// | field           | PDP                  | HDP                       |
+/// |-----------------|----------------------|---------------------------|
+/// | `discount`      | discount `a`         | `0.0`                     |
+/// | `concentration` | concentration `b`    | document-level `b₁`       |
+/// | `root`          | word smoothing `γ`   | root concentration `b₀`   |
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TableHyper {
+    /// Pitman-Yor discount `a` (0 for the HDP's plain DP).
+    pub discount: f64,
+    /// Strength of the process the tables belong to (PDP `b`, HDP `b₁`).
+    pub concentration: f64,
+    /// Root-measure parameter (PDP `γ`, HDP `b₀`).
+    pub root: f64,
+}
 
 /// Hyperparameters + ring assignment a server store was produced under.
 ///
@@ -52,6 +96,15 @@ pub struct SnapshotMeta {
     /// observe client progress, so this is not a completed-iteration
     /// count (a mid-run snapshot carries the same value).
     pub iterations: u64,
+    /// Per-run nonce (v3): every slot snapshot of one training run
+    /// carries the same value, and two runs — even with identical
+    /// configuration — carry different ones, so the serving loader can
+    /// refuse to merge a directory that mixes runs. 0 for v1/v2 files.
+    pub run_id: u64,
+    /// v3 table-statistics section: the hyperparameters of the table
+    /// counts stored under matrix 1. `None` for LDA snapshots and for
+    /// v1/v2 files.
+    pub tables: Option<TableHyper>,
 }
 
 impl Default for SnapshotMeta {
@@ -66,6 +119,8 @@ impl Default for SnapshotMeta {
             n_servers: 1,
             vnodes: 1,
             iterations: 0,
+            run_id: 0,
+            tables: None,
         }
     }
 }
@@ -159,36 +214,65 @@ pub fn encode_store(store: &Store) -> Vec<u8> {
     buf
 }
 
-/// Serialize a server store with its [`SnapshotMeta`] header (format v2).
+fn put_meta_v2_fields(buf: &mut Vec<u8>, meta: &SnapshotMeta) {
+    put_str(buf, &meta.model);
+    put_u32(buf, meta.k);
+    put_f64(buf, meta.alpha);
+    put_f64(buf, meta.beta);
+    put_u32(buf, meta.vocab_size);
+    put_u32(buf, meta.slot);
+    put_u32(buf, meta.n_servers);
+    put_u32(buf, meta.vnodes);
+    put_u64(buf, meta.iterations);
+}
+
+/// Serialize a server store with its [`SnapshotMeta`] header (current
+/// format, v3).
 pub fn encode_store_meta(store: &Store, meta: &SnapshotMeta) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(128 + store.len() * 32);
-    buf.extend_from_slice(MAGIC_V2);
-    put_str(&mut buf, &meta.model);
-    put_u32(&mut buf, meta.k);
-    put_f64(&mut buf, meta.alpha);
-    put_f64(&mut buf, meta.beta);
-    put_u32(&mut buf, meta.vocab_size);
-    put_u32(&mut buf, meta.slot);
-    put_u32(&mut buf, meta.n_servers);
-    put_u32(&mut buf, meta.vnodes);
-    put_u64(&mut buf, meta.iterations);
+    let mut buf = Vec::with_capacity(160 + store.len() * 32);
+    buf.extend_from_slice(MAGIC_V3);
+    put_meta_v2_fields(&mut buf, meta);
+    put_u64(&mut buf, meta.run_id);
+    match &meta.tables {
+        None => buf.push(0),
+        Some(t) => {
+            buf.push(1);
+            put_f64(&mut buf, t.discount);
+            put_f64(&mut buf, t.concentration);
+            put_f64(&mut buf, t.root);
+        }
+    }
     encode_store_body(&mut buf, store);
     buf
 }
 
-/// Deserialize a server store plus its metadata (`None` for v1 files).
-pub fn decode_store_meta(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Store)> {
+/// Serialize in the legacy v2 layout (no table section). Kept so the
+/// backward-compatibility tests can produce genuine v2 bytes; production
+/// writers use [`encode_store_meta`]. `meta.tables` is ignored — v2 had
+/// nowhere to put it.
+pub fn encode_store_meta_v2(store: &Store, meta: &SnapshotMeta) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(128 + store.len() * 32);
+    buf.extend_from_slice(MAGIC_V2);
+    put_meta_v2_fields(&mut buf, meta);
+    encode_store_body(&mut buf, store);
+    buf
+}
+
+/// Parse the magic + metadata header, returning the reader positioned at
+/// the store body. Needs only the header bytes — the body may be absent.
+fn decode_header(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Reader<'_>)> {
     if bytes.len() < 12 {
         return None;
     }
     let mut r = Reader { b: bytes, pos: 8 };
     if &bytes[..8] == MAGIC {
-        return Some((None, decode_store_body(&mut r)?));
+        return Some((None, r));
     }
-    if &bytes[..8] != MAGIC_V2 {
+    let v3 = &bytes[..8] == MAGIC_V3;
+    if !v3 && &bytes[..8] != MAGIC_V2 {
         return None;
     }
-    let meta = SnapshotMeta {
+    let mut meta = SnapshotMeta {
         model: r.str()?,
         k: r.u32()?,
         alpha: r.f64()?,
@@ -198,13 +282,78 @@ pub fn decode_store_meta(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Store)> 
         n_servers: r.u32()?,
         vnodes: r.u32()?,
         iterations: r.u64()?,
+        run_id: 0,
+        tables: None,
     };
-    Some((Some(meta), decode_store_body(&mut r)?))
+    if v3 {
+        meta.run_id = r.u64()?;
+        meta.tables = match r.u8()? {
+            0 => None,
+            1 => Some(TableHyper {
+                discount: r.f64()?,
+                concentration: r.f64()?,
+                root: r.f64()?,
+            }),
+            _ => return None,
+        };
+    }
+    Some((Some(meta), r))
+}
+
+/// Deserialize a server store plus its metadata (`None` for v1 files;
+/// `meta.tables = None` for v2 files).
+pub fn decode_store_meta(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Store)> {
+    let (meta, mut r) = decode_header(bytes)?;
+    Some((meta, decode_store_body(&mut r)?))
+}
+
+/// Decode only the metadata header from a byte *prefix* of a snapshot —
+/// the store body may be truncated or absent. `Some(None)` = valid v1
+/// prefix (no header); `None` = not a snapshot prefix.
+pub fn decode_meta_prefix(bytes: &[u8]) -> Option<Option<SnapshotMeta>> {
+    decode_header(bytes).map(|(meta, _)| meta)
+}
+
+/// Read just the [`SnapshotMeta`] of a slot file, without loading the
+/// store (the header fits comfortably in the first 4 KiB). `None` for
+/// missing/corrupt files and headerless v1 files. Cheap enough to poll:
+/// the `serve --watch` fingerprint uses the `run_id` this returns to
+/// detect same-size same-mtime rewrites.
+pub fn read_slot_meta(path: &Path) -> Option<SnapshotMeta> {
+    let mut f = std::fs::File::open(path).ok()?;
+    let mut buf = [0u8; 4096];
+    let mut n = 0;
+    loop {
+        match f.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(k) => {
+                n += k;
+                if n == buf.len() {
+                    break;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+    decode_meta_prefix(&buf[..n])?
 }
 
 /// Deserialize a server store (either format), dropping any metadata.
 pub fn decode_store(bytes: &[u8]) -> Option<Store> {
     decode_store_meta(bytes).map(|(_, store)| store)
+}
+
+/// Canonical server-slot snapshot filename for `slot` — the single
+/// source of truth shared by the writer ([`crate::ps::server`]), the
+/// loader ([`crate::serve::ServingModel::load_dir`]), and the
+/// `serve --watch` poller.
+pub fn slot_snapshot_name(slot: usize) -> String {
+    format!("server_slot{slot}.snap")
+}
+
+/// Does `name` name a server-slot snapshot file?
+pub fn is_slot_snapshot_name(name: &str) -> bool {
+    name.starts_with("server_slot") && name.ends_with(".snap")
 }
 
 /// Write bytes atomically (temp file + rename).
@@ -343,27 +492,42 @@ mod tests {
             n_servers: 2,
             vnodes: 64,
             iterations: 17,
+            run_id: 0xDEAD_BEEF,
+            tables: None,
         }
     }
 
+    fn sample_meta_tables() -> SnapshotMeta {
+        let mut meta = sample_meta();
+        meta.model = "AliasPDP".to_string();
+        meta.tables = Some(TableHyper {
+            discount: 0.1,
+            concentration: 10.0,
+            root: 0.5,
+        });
+        meta
+    }
+
     /// Satellite: save → load reproduces counts, hyperparameters, and the
-    /// ring assignment bit-for-bit (covers the new v2 metadata fields).
+    /// ring assignment bit-for-bit — with and without the v3 table
+    /// section.
     #[test]
     fn store_meta_roundtrip_bit_for_bit() {
         let mut store = Store::new();
         store.insert((0, 3), vec![7, 0, -1, 4]);
         store.insert((1, 0), vec![2; 4]);
-        let meta = sample_meta();
-        let bytes = encode_store_meta(&store, &meta);
-        let (meta2, store2) = decode_store_meta(&bytes).unwrap();
-        let meta2 = meta2.expect("v2 snapshot must carry metadata");
-        assert_eq!(meta2, meta);
-        assert_eq!(store2, store);
-        // Hyperparameters survive exactly (f64 bit patterns, not text).
-        assert_eq!(meta2.alpha.to_bits(), 0.1f64.to_bits());
-        assert_eq!(meta2.beta.to_bits(), 0.01f64.to_bits());
-        // Encoding is deterministic: same input, same bytes.
-        assert_eq!(bytes, encode_store_meta(&store, &meta));
+        for meta in [sample_meta(), sample_meta_tables()] {
+            let bytes = encode_store_meta(&store, &meta);
+            let (meta2, store2) = decode_store_meta(&bytes).unwrap();
+            let meta2 = meta2.expect("v3 snapshot must carry metadata");
+            assert_eq!(meta2, meta);
+            assert_eq!(store2, store);
+            // Hyperparameters survive exactly (f64 bit patterns, not text).
+            assert_eq!(meta2.alpha.to_bits(), 0.1f64.to_bits());
+            assert_eq!(meta2.beta.to_bits(), 0.01f64.to_bits());
+            // Encoding is deterministic: same input, same bytes.
+            assert_eq!(bytes, encode_store_meta(&store, &meta));
+        }
     }
 
     #[test]
@@ -374,20 +538,81 @@ mod tests {
         let (meta, back) = decode_store_meta(&bytes).unwrap();
         assert!(meta.is_none());
         assert_eq!(back, store);
-        // And the plain decoder reads both formats.
-        let v2 = encode_store_meta(&store, &sample_meta());
-        assert_eq!(decode_store(&v2).unwrap(), store);
+        // And the plain decoder reads every format.
+        let v3 = encode_store_meta(&store, &sample_meta_tables());
+        assert_eq!(decode_store(&v3).unwrap(), store);
     }
 
     #[test]
-    fn truncated_v2_rejected() {
-        let bytes = encode_store_meta(&Store::new(), &sample_meta());
-        for cut in [9, 15, bytes.len() - 1] {
-            assert!(
-                decode_store_meta(&bytes[..cut]).is_none(),
-                "truncation at {cut} accepted"
-            );
+    fn v2_files_decode_with_no_table_section() {
+        let mut store = Store::new();
+        store.insert((0, 9), vec![1, 2]);
+        store.insert((1, 9), vec![0, 1]);
+        // Encode with the legacy writer: genuine v2 bytes.
+        let bytes = encode_store_meta_v2(&store, &sample_meta_tables());
+        let (meta, back) = decode_store_meta(&bytes).unwrap();
+        let meta = meta.expect("v2 carries a header");
+        assert_eq!(meta.model, "AliasPDP");
+        assert_eq!(meta.k, 20);
+        assert!(meta.tables.is_none(), "v2 has no table section");
+        assert_eq!(meta.run_id, 0, "v2 has no run id");
+        assert_eq!(back, store);
+    }
+
+    #[test]
+    fn truncated_v2_and_v3_rejected() {
+        for meta in [sample_meta(), sample_meta_tables()] {
+            let bytes = encode_store_meta(&Store::new(), &meta);
+            for cut in [9, 15, bytes.len() - 1] {
+                assert!(
+                    decode_store_meta(&bytes[..cut]).is_none(),
+                    "truncation at {cut} accepted"
+                );
+            }
         }
+        let v2 = encode_store_meta_v2(&Store::new(), &sample_meta());
+        assert!(decode_store_meta(&v2[..v2.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn meta_prefix_and_slot_meta_read_header_only() {
+        let mut store = Store::new();
+        for w in 0..50u32 {
+            store.insert((0, w), vec![1; 32]);
+        }
+        let meta = sample_meta_tables();
+        let bytes = encode_store_meta(&store, &meta);
+        // A header-sized prefix is enough — the body can be cut off.
+        let prefix = &bytes[..256.min(bytes.len())];
+        let got = decode_meta_prefix(prefix).unwrap().unwrap();
+        assert_eq!(got, meta);
+        assert_eq!(got.run_id, 0xDEAD_BEEF);
+        // v1 prefixes carry no header; garbage is rejected.
+        assert_eq!(decode_meta_prefix(&encode_store(&store)[..16]), Some(None));
+        assert!(decode_meta_prefix(b"nonsense----").is_none());
+
+        // File-backed variant (the --watch poller's probe).
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_snap_meta_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join("server_slot0.snap");
+        write_atomic(&path, &bytes).unwrap();
+        assert_eq!(read_slot_meta(&path).unwrap(), meta);
+        assert!(read_slot_meta(&dir.join("missing.snap")).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_garbage_table_flag_rejected() {
+        let meta = sample_meta();
+        let mut bytes = encode_store_meta(&Store::new(), &meta);
+        // The has_tables byte sits after the fixed v2 fields + run_id.
+        let flag_pos = 8 + 4 + meta.model.len() + 4 + 8 + 8 + 4 + 4 + 4 + 4 + 8 + 8;
+        assert_eq!(bytes[flag_pos], 0);
+        bytes[flag_pos] = 7;
+        assert!(decode_store_meta(&bytes).is_none());
     }
 
     #[test]

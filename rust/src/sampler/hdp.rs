@@ -45,6 +45,27 @@ struct WordProposal {
     budget: u32,
 }
 
+/// Root stick weight `θ₀(t) = t_k / (b₀ + T)` given (clamped) root table
+/// counts, with the uniform-over-truncation bootstrap for an empty root.
+/// Shared by the training sampler and the frozen serving family
+/// ([`crate::serve::family::HdpFamily`]).
+#[inline]
+pub fn root_stick(tk: f64, total: f64, b0: f64, k: usize) -> f64 {
+    if tk == 0.0 && total == 0.0 {
+        // Empty root: uniform over the truncation (bootstrap).
+        return 1.0 / k.max(1) as f64;
+    }
+    tk / (b0 + total)
+}
+
+/// Dirichlet-multinomial predictive word probability
+/// `(n_tw + β) / (n_t + β̄)` — the word factor of HDP-LDA and exactly the
+/// LDA φ. Shared with the serving families.
+#[inline]
+pub fn dirichlet_predictive(nwt: f64, nt: f64, beta: f64, beta_bar: f64) -> f64 {
+    (nwt + beta) / (nt + beta_bar)
+}
+
 /// The AliasHDP sampler. `k` is the truncation `K_max`; topics activate
 /// on demand.
 pub struct AliasHdp {
@@ -159,11 +180,7 @@ impl AliasHdp {
     fn theta0(&self, t: usize) -> f64 {
         let tk = self.tables.get(0, t).max(0) as f64;
         let total = (self.tables.grand_total().max(0)) as f64;
-        if tk == 0.0 && total == 0.0 {
-            // Empty root: uniform over the truncation (bootstrap).
-            return 1.0 / self.k as f64;
-        }
-        tk / (self.b0 + total)
+        root_stick(tk, total, self.b0, self.k)
     }
 
     #[inline]
@@ -181,8 +198,12 @@ impl AliasHdp {
 
     #[inline]
     fn phi(&self, w: u32, t: usize) -> f64 {
-        let nwt = self.nwt.get(w, t).max(0) as f64;
-        (nwt + self.beta) / ((self.nwt.total(t) as f64).max(0.0) + self.beta_bar)
+        dirichlet_predictive(
+            self.nwt.get(w, t).max(0) as f64,
+            (self.nwt.total(t) as f64).max(0.0),
+            self.beta,
+            self.beta_bar,
+        )
     }
 
     fn add_token(&mut self, d: usize, w: u32, t: u32, r: bool) {

@@ -38,6 +38,34 @@ struct WordProposal {
     budget: u32,
 }
 
+/// Pitman-Yor predictive word probability under fixed statistics:
+///
+/// ```text
+/// p(w|t) = ((m_tw − a·s_tw)⁺ + (b + a·s_t)·base_w) / (b + m_t)
+/// base_w = (γ + s_tw) / (γ̄ + s_t)
+/// ```
+///
+/// The posterior term shared by the training-side
+/// [`TopicModelView`](crate::eval::perplexity::TopicModelView) and the
+/// frozen serving family ([`crate::serve::family::PdpFamily`]): callers
+/// pass already-clamped counts.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn pyp_predictive(
+    mtw: f64,
+    stw: f64,
+    mt: f64,
+    st: f64,
+    discount: f64,
+    concentration: f64,
+    gamma: f64,
+    gamma_bar: f64,
+) -> f64 {
+    let base = (gamma + stw) / (gamma_bar + st);
+    ((mtw - discount * stw).max(0.0) + (concentration + discount * st) * base)
+        / (concentration + mt)
+}
+
 /// The AliasPDP sampler.
 pub struct AliasPdp {
     k: usize,
@@ -417,14 +445,16 @@ impl crate::eval::perplexity::TopicModelView for AliasPdp {
     /// `((m_tw − a·s_tw)⁺ + (b + a·s_t)·base_w) / (b + m_t)` with the
     /// root-smoothed base `base_w = (γ + s_tw)/(γ̄ + s_t)`.
     fn phi(&self, w: u32, t: usize) -> f64 {
-        let mtw = self.m.get(w, t).max(0) as f64;
-        let stw = self.s.get(w, t).max(0) as f64;
-        let mt = (self.m.total(t) as f64).max(0.0);
-        let st = (self.s.total(t) as f64).max(0.0);
-        let base = (self.gamma + stw) / (self.gamma_bar + st);
-        ((mtw - self.discount * stw).max(0.0)
-            + (self.concentration + self.discount * st) * base)
-            / (self.concentration + mt)
+        pyp_predictive(
+            self.m.get(w, t).max(0) as f64,
+            self.s.get(w, t).max(0) as f64,
+            (self.m.total(t) as f64).max(0.0),
+            (self.s.total(t) as f64).max(0.0),
+            self.discount,
+            self.concentration,
+            self.gamma,
+            self.gamma_bar,
+        )
     }
     fn doc_prior(&self, _t: usize) -> f64 {
         self.alpha

@@ -16,15 +16,18 @@ use std::sync::{Arc, Mutex};
 
 use crate::sampler::alias::AliasTable;
 
-/// A word's frozen dense proposal: the alias table plus the weights it
-/// was built from (`q_w(t) = φ(w,t)`), needed to evaluate proposal masses
-/// in the Metropolis-Hastings ratio.
+/// A word's frozen dense proposal: the alias table over the
+/// prior-weighted weights `q_w(t) = prior_t·φ(w,t)`, plus the raw φ row
+/// the sparse document-side component and the Metropolis-Hastings ratio
+/// evaluate. (For LDA the prior is the constant α, so the table encodes
+/// plain φ up to normalization; for HDP the root-stick prior reweights
+/// it.)
 pub struct WordProposal {
-    /// O(1)-draw alias table over topics.
+    /// O(1)-draw alias table over topics, built from `prior_t·φ(w,t)`.
     pub table: AliasTable,
-    /// The weights the table encodes: `qw[t] = φ(w,t)`.
-    pub qw: Box<[f64]>,
-    /// `Σ_t qw[t]`.
+    /// The frozen predictive row: `phi[t] = φ(w,t)`.
+    pub phi: Box<[f64]>,
+    /// `Σ_t prior_t·φ(w,t)` — the dense component's total mass.
     pub qsum: f64,
 }
 
@@ -72,7 +75,7 @@ impl AliasCache {
     /// so concurrent workers rarely contend).
     pub fn new(k: usize, budget_bytes: usize, n_shards: usize) -> AliasCache {
         let n_shards = n_shards.max(1);
-        // prob (f64) + alias (u32) inside the table, qw (f64), plus
+        // prob (f64) + alias (u32) inside the table, phi (f64), plus
         // allocator/housekeeping slack.
         let entry_bytes = 96 + k * (8 + 4 + 8);
         // Every shard must be able to hold at least one table, whatever
@@ -172,11 +175,11 @@ mod tests {
     use super::*;
 
     fn proposal(k: usize, seed: f64) -> WordProposal {
-        let qw: Vec<f64> = (0..k).map(|t| seed + t as f64).collect();
-        let qsum = qw.iter().sum();
+        let phi: Vec<f64> = (0..k).map(|t| seed + t as f64).collect();
+        let qsum = phi.iter().sum();
         WordProposal {
-            table: AliasTable::build(&qw),
-            qw: qw.into_boxed_slice(),
+            table: AliasTable::build(&phi),
+            phi: phi.into_boxed_slice(),
             qsum,
         }
     }
@@ -219,7 +222,7 @@ mod tests {
         let c = AliasCache::new(k, entry, 1); // room for exactly one
         let held = c.get_or_build(7, || proposal(k, 7.0));
         c.get_or_build(8, || proposal(k, 8.0)); // evicts 7
-        assert_eq!(held.qw[0], 7.0, "in-flight Arc invalidated by eviction");
+        assert_eq!(held.phi[0], 7.0, "in-flight Arc invalidated by eviction");
     }
 
     #[test]
@@ -227,7 +230,7 @@ mod tests {
         let c = AliasCache::new(64, 0, 4); // degenerate budget
         for w in 0..100u32 {
             let p = c.get_or_build(w, || proposal(64, w as f64));
-            assert_eq!(p.qw.len(), 64);
+            assert_eq!(p.phi.len(), 64);
         }
         assert!(c.stats().resident >= 1);
     }

@@ -1,0 +1,489 @@
+//! The family-generic serving abstraction.
+//!
+//! The paper's claim is that *one* parameter-server system spans LDA,
+//! Pitman-Yor (PDP), and HDP (§2, §4): the families differ only in which
+//! sufficient statistics they freeze and how those statistics turn into a
+//! predictive word distribution. A [`ServingFamily`] captures exactly
+//! that contract — "frozen sufficient statistics → `φ(w,t)` + a
+//! document-side prior" — so the fold-in machinery
+//! ([`super::infer::infer_doc`]), the alias cache, the micro-batching
+//! service, and the hot-reload handle are written once and shared by all
+//! three families.
+//!
+//! Under frozen statistics the fold-in conditional for every family
+//! collapses to the same two-term shape as eq. (4):
+//!
+//! ```text
+//! p(z=t | rest) ∝ (n_td + prior_t) · φ(w,t)
+//! ```
+//!
+//! with family-specific ingredients:
+//!
+//! | family | `φ(w,t)`                                   | `prior_t`      |
+//! |--------|--------------------------------------------|----------------|
+//! | LDA    | `(n_tw+β)/(n_t+β̄)`                         | `α`            |
+//! | PDP    | PYP predictive from `(m_tw, s_tw)` (eq. 5) | `α`            |
+//! | HDP    | `(n_tw+β)/(n_t+β̄)`                         | `b₁·θ₀(t)`     |
+//!
+//! The φ implementations delegate to the training-side posterior terms
+//! ([`crate::sampler::pdp::pyp_predictive`],
+//! [`crate::sampler::hdp::root_stick`],
+//! [`crate::sampler::hdp::dirichlet_predictive`]) so serving can never
+//! drift from the math the samplers and the evaluation stack use.
+//!
+//! Families are built from a decoded snapshot directory by
+//! [`family_from_stores`]: matrix 0 is always the primary word–topic
+//! statistic; matrix 1 carries the table-side statistics (PDP `s_tw`
+//! rows, the HDP root `t_k` row), and the v3 snapshot header's
+//! [`TableHyper`] section supplies the hyperparameters that give those
+//! counts meaning.
+
+use crate::config::ModelKind;
+use crate::ps::snapshot::{SnapshotMeta, Store, TableHyper};
+use crate::sampler::hdp::{dirichlet_predictive, root_stick};
+use crate::sampler::pdp::pyp_predictive;
+use crate::Result;
+
+/// Frozen per-family sufficient statistics + posterior terms.
+///
+/// Implementations are immutable after construction and shared across the
+/// worker pool (`Send + Sync`). Everything the generic fold-in needs:
+/// the predictive word distribution `φ(w,t)` and the document-side prior
+/// mass `prior_t` (the dense-component weights of the MH-Walker mixture
+/// proposal).
+pub trait ServingFamily: Send + Sync {
+    /// The model kind recorded by the producing training run.
+    fn kind(&self) -> ModelKind;
+
+    /// Topic count (HDP: the truncation `K_max`).
+    fn k(&self) -> usize;
+
+    /// Vocabulary size served.
+    fn vocab(&self) -> usize;
+
+    /// Frozen predictive word probability `p(w | z=t)`.
+    fn phi(&self, w: u32, t: usize) -> f64;
+
+    /// Document-side prior mass for topic `t` (`α`, or `b₁·θ₀(t)` for
+    /// HDP — matching [`crate::eval::perplexity::TopicModelView`] so the
+    /// served mixtures and the evaluation stack agree).
+    fn doc_prior(&self, t: usize) -> f64;
+
+    /// Total (clamped) token mass in the frozen primary statistic.
+    fn total_tokens(&self) -> i64;
+}
+
+/// One shared matrix merged across the slot stores: the slots' key sets
+/// are disjoint by consistent hashing, so the global statistic is the
+/// row-wise (saturating) sum.
+struct Merged {
+    rows: Vec<Option<Box<[i32]>>>,
+    /// Per-topic totals over clamped entries (eventual consistency can
+    /// leave transient negatives in a snapshot; clamp at the aggregate
+    /// like the samplers do).
+    totals: Vec<i64>,
+}
+
+impl Merged {
+    fn build(stores: &[Store], matrix: u8, vocab: usize, k: usize) -> Merged {
+        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
+        for store in stores {
+            for (&(m, word), row) in store.iter() {
+                if m != matrix || (word as usize) >= vocab {
+                    continue;
+                }
+                let dst = rows[word as usize]
+                    .get_or_insert_with(|| vec![0i32; k].into_boxed_slice());
+                for (t, &v) in row.iter().take(k).enumerate() {
+                    dst[t] = dst[t].saturating_add(v);
+                }
+            }
+        }
+        let mut totals = vec![0i64; k];
+        for row in rows.iter().flatten() {
+            for (t, &v) in row.iter().enumerate() {
+                totals[t] += v.max(0) as i64;
+            }
+        }
+        Merged { rows, totals }
+    }
+
+    /// Clamped cell read (0 for never-observed words).
+    #[inline]
+    fn count(&self, w: u32, t: usize) -> i32 {
+        match self.rows.get(w as usize).and_then(|r| r.as_deref()) {
+            Some(row) => row[t].max(0),
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn total(&self, t: usize) -> f64 {
+        self.totals[t] as f64
+    }
+
+    fn grand_total(&self) -> i64 {
+        self.totals.iter().sum()
+    }
+}
+
+/// Largest word id + 1 observed in the given matrices.
+fn max_word(stores: &[Store], matrices: &[u8]) -> usize {
+    stores
+        .iter()
+        .flat_map(|s| s.keys())
+        .filter(|(m, _)| matrices.contains(m))
+        .map(|&(_, w)| w as usize + 1)
+        .max()
+        .unwrap_or(0)
+}
+
+/// LDA serving: frozen `n_tw` + symmetric Dirichlet priors. Serves both
+/// LDA samplers (YahooLDA and AliasLDA share the statistic).
+pub struct LdaFamily {
+    kind: ModelKind,
+    k: usize,
+    vocab: usize,
+    alpha: f64,
+    beta: f64,
+    beta_bar: f64,
+    n: Merged,
+}
+
+impl ServingFamily for LdaFamily {
+    fn kind(&self) -> ModelKind {
+        self.kind
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        dirichlet_predictive(
+            self.n.count(w, t) as f64,
+            self.n.total(t).max(0.0),
+            self.beta,
+            self.beta_bar,
+        )
+    }
+    fn doc_prior(&self, _t: usize) -> f64 {
+        self.alpha
+    }
+    fn total_tokens(&self) -> i64 {
+        self.n.grand_total()
+    }
+}
+
+/// PDP serving: frozen customer counts `m_tw` (matrix 0) *and* table
+/// counts `s_tw` (matrix 1), combined by the PYP predictive rule with the
+/// v3 snapshot's `(a, b, γ)` hyperparameters.
+pub struct PdpFamily {
+    k: usize,
+    vocab: usize,
+    alpha: f64,
+    discount: f64,
+    concentration: f64,
+    gamma: f64,
+    gamma_bar: f64,
+    m: Merged,
+    s: Merged,
+}
+
+impl ServingFamily for PdpFamily {
+    fn kind(&self) -> ModelKind {
+        ModelKind::AliasPdp
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        pyp_predictive(
+            self.m.count(w, t) as f64,
+            self.s.count(w, t) as f64,
+            self.m.total(t).max(0.0),
+            self.s.total(t).max(0.0),
+            self.discount,
+            self.concentration,
+            self.gamma,
+            self.gamma_bar,
+        )
+    }
+    fn doc_prior(&self, _t: usize) -> f64 {
+        self.alpha
+    }
+    fn total_tokens(&self) -> i64 {
+        self.m.grand_total()
+    }
+}
+
+/// HDP serving: frozen `n_tw` (matrix 0) plus the root table counts `t_k`
+/// (matrix 1, row 0) that weight the document-side prior `b₁·θ₀(t)` —
+/// topics the root restaurant never registered get (almost) no fold-in
+/// mass, matching the HDP document model and the evaluation stack.
+pub struct HdpFamily {
+    k: usize,
+    vocab: usize,
+    b0: f64,
+    b1: f64,
+    beta: f64,
+    beta_bar: f64,
+    n: Merged,
+    /// Clamped root table counts `t_k`.
+    root: Vec<i64>,
+    root_total: f64,
+}
+
+impl ServingFamily for HdpFamily {
+    fn kind(&self) -> ModelKind {
+        ModelKind::AliasHdp
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+    fn phi(&self, w: u32, t: usize) -> f64 {
+        dirichlet_predictive(
+            self.n.count(w, t) as f64,
+            self.n.total(t).max(0.0),
+            self.beta,
+            self.beta_bar,
+        )
+    }
+    fn doc_prior(&self, t: usize) -> f64 {
+        // The ε keeps unrepresented topics sample-able under transient
+        // inconsistency, mirroring AliasHdp's TopicModelView.
+        self.b1 * root_stick(self.root[t] as f64, self.root_total, self.b0, self.k) + 1e-9
+    }
+    fn total_tokens(&self) -> i64 {
+        self.n.grand_total()
+    }
+}
+
+/// Build the family a snapshot directory's statistics belong to.
+///
+/// Dispatches on the family the v2+ header records ([`ModelKind::parse`]
+/// of `meta.model`); PDP/HDP additionally require the v3 [`TableHyper`]
+/// section — a v2-era PDP/HDP snapshot has table *counts* but not the
+/// hyperparameters to interpret them, so it is refused with a re-train
+/// hint rather than served wrong.
+pub fn family_from_stores(
+    meta: &SnapshotMeta,
+    stores: &[Store],
+) -> Result<Box<dyn ServingFamily>> {
+    anyhow::ensure!(meta.k > 0, "snapshot metadata has K = 0");
+    let kind = ModelKind::parse(&meta.model).ok_or_else(|| {
+        anyhow::anyhow!(
+            "snapshot records unknown model family {:?} — this build serves \
+             LDA, PDP, and HDP",
+            meta.model
+        )
+    })?;
+    let k = meta.k as usize;
+    let need_tables = || {
+        meta.tables.ok_or_else(|| {
+            anyhow::anyhow!(
+                "{} snapshot predates format v3 and carries no table-side \
+                 hyperparameters; re-train to serve it",
+                meta.model
+            )
+        })
+    };
+    match kind {
+        ModelKind::YahooLda | ModelKind::AliasLda => {
+            let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0]));
+            anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
+            Ok(Box::new(LdaFamily {
+                kind,
+                k,
+                vocab,
+                alpha: meta.alpha,
+                beta: meta.beta,
+                beta_bar: meta.beta * vocab as f64,
+                n: Merged::build(stores, 0, vocab, k),
+            }))
+        }
+        ModelKind::AliasPdp => {
+            let hyper: TableHyper = need_tables()?;
+            let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0, 1]));
+            anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
+            Ok(Box::new(PdpFamily {
+                k,
+                vocab,
+                alpha: meta.alpha,
+                discount: hyper.discount,
+                concentration: hyper.concentration,
+                gamma: hyper.root,
+                gamma_bar: hyper.root * vocab as f64,
+                m: Merged::build(stores, 0, vocab, k),
+                s: Merged::build(stores, 1, vocab, k),
+            }))
+        }
+        ModelKind::AliasHdp => {
+            let hyper: TableHyper = need_tables()?;
+            // Matrix 1 row 0 is the root table row, not a word.
+            let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0]));
+            anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
+            let tables = Merged::build(stores, 1, 1, k);
+            let root: Vec<i64> = (0..k).map(|t| tables.count(0, t) as i64).collect();
+            let root_total = root.iter().sum::<i64>() as f64;
+            Ok(Box::new(HdpFamily {
+                k,
+                vocab,
+                b0: hyper.root,
+                b1: hyper.concentration,
+                beta: meta.beta,
+                beta_bar: meta.beta * vocab as f64,
+                n: Merged::build(stores, 0, vocab, k),
+                root,
+                root_total,
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(model: &str, k: u32, tables: Option<TableHyper>) -> SnapshotMeta {
+        SnapshotMeta {
+            model: model.to_string(),
+            k,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables,
+        }
+    }
+
+    fn pdp_hyper() -> TableHyper {
+        TableHyper {
+            discount: 0.1,
+            concentration: 10.0,
+            root: 0.5,
+        }
+    }
+
+    fn hdp_hyper() -> TableHyper {
+        TableHyper {
+            discount: 0.0,
+            concentration: 1.0,
+            root: 1.0,
+        }
+    }
+
+    /// Consistent PDP stores: every word has customers in one topic with
+    /// table counts below the customer counts.
+    fn pdp_stores() -> Vec<Store> {
+        let mut s = Store::new();
+        for w in 0..10u32 {
+            let (m_row, s_row) = if w < 5 {
+                (vec![40, 0], vec![4, 0])
+            } else {
+                (vec![0, 40], vec![0, 4])
+            };
+            s.insert((0, w), m_row);
+            s.insert((1, w), s_row);
+        }
+        vec![s]
+    }
+
+    #[test]
+    fn lda_family_phi_normalizes() {
+        let mut s = Store::new();
+        for w in 0..10u32 {
+            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] });
+        }
+        let fam = family_from_stores(&meta("AliasLDA", 2, None), &[s]).unwrap();
+        assert_eq!(fam.kind(), ModelKind::AliasLda);
+        assert_eq!(fam.total_tokens(), 70);
+        for t in 0..2 {
+            let sum: f64 = (0..10).map(|w| fam.phi(w, t)).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "LDA φ(·|{t}) sums to {sum}");
+            assert!((fam.doc_prior(t) - 0.1).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn pdp_family_phi_normalizes() {
+        let fam =
+            family_from_stores(&meta("AliasPDP", 2, Some(pdp_hyper())), &pdp_stores())
+                .unwrap();
+        assert_eq!(fam.kind(), ModelKind::AliasPdp);
+        // PYP predictive sums to 1 over the vocabulary when the table
+        // polytope holds (Σ_w (m−a·s)⁺ = m_t − a·s_t and the root base
+        // measure normalizes with γ̄ = γV).
+        for t in 0..2 {
+            let sum: f64 = (0..10).map(|w| fam.phi(w, t)).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "PDP φ(·|{t}) sums to {sum}");
+        }
+        // Tables sharpen: a word with customers dominates a smoothed zero.
+        assert!(fam.phi(0, 0) > 10.0 * fam.phi(0, 1));
+    }
+
+    #[test]
+    fn hdp_family_prior_follows_root_tables() {
+        let mut s = Store::new();
+        for w in 0..10u32 {
+            s.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+        }
+        s.insert((1, 0), vec![6, 2, 0]); // root: topic 0 has 3× topic 1
+        let fam =
+            family_from_stores(&meta("AliasHDP", 3, Some(hdp_hyper())), &[s]).unwrap();
+        assert_eq!(fam.kind(), ModelKind::AliasHdp);
+        for t in 0..3 {
+            let sum: f64 = (0..10).map(|w| fam.phi(w, t)).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "HDP φ(·|{t}) sums to {sum}");
+        }
+        let p0 = fam.doc_prior(0);
+        let p1 = fam.doc_prior(1);
+        let p2 = fam.doc_prior(2);
+        assert!((p0 / p1 - 3.0).abs() < 1e-6, "prior ratio {}", p0 / p1);
+        assert!(p2 < 1e-8, "unrepresented topic must get ≈0 prior ({p2})");
+    }
+
+    #[test]
+    fn pdp_without_v3_tables_is_refused() {
+        let msg = match family_from_stores(&meta("AliasPDP", 2, None), &pdp_stores()) {
+            Ok(_) => panic!("v2-era PDP snapshot must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("re-train"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn unknown_family_is_refused() {
+        let msg = match family_from_stores(&meta("GPT", 2, None), &[Store::new()]) {
+            Ok(_) => panic!("unknown family must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("GPT"));
+    }
+
+    #[test]
+    fn merge_adds_across_slots_and_clamps_negatives() {
+        let mut a = Store::new();
+        a.insert((0, 1), vec![3, -5]);
+        let mut b = Store::new();
+        b.insert((0, 1), vec![1, 2]);
+        b.insert((0, 2), vec![0, 4]);
+        let m = Merged::build(&[a, b], 0, 10, 2);
+        assert_eq!(m.count(1, 0), 4);
+        assert_eq!(m.count(1, 1), 0, "negative cells clamp to 0 on read");
+        assert_eq!(m.count(2, 1), 4);
+        // Totals clamp per-entry: the −3 in (1,1) does not cancel (2,1).
+        assert_eq!(m.totals[1], 4);
+    }
+}

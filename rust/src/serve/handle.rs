@@ -1,0 +1,323 @@
+//! Hot-reloadable model handle: a generation-numbered, atomically-swapped
+//! pointer to the current [`ServingModel`].
+//!
+//! Training keeps writing barrier-free snapshots while the inference
+//! server runs; [`ServingHandle::reload`] picks a newer snapshot
+//! generation up **without restarting the service and without dropping
+//! the in-flight micro-batch queue**:
+//!
+//! * Readers ([`super::service`] workers) resolve
+//!   [`ServingHandle::current`] once per micro-batch — an `arc_swap`-style
+//!   read: clone an `Arc` under a briefly-held read lock, then serve the
+//!   whole batch against that pinned generation lock-free.
+//! * [`reload`](ServingHandle::reload) does the expensive part (reading
+//!   and merging the slot snapshots, `O(V·K)`) *outside* any lock, then
+//!   swaps the pointer under the write lock. Queued queries are never
+//!   touched: jobs enqueued before the swap may be answered by either
+//!   generation (whichever the draining worker pinned), jobs enqueued
+//!   after the swap are answered by the new one, and nothing is dropped
+//!   or errored either way.
+//! * Every [`InferResult`](super::infer::InferResult) reports the
+//!   `generation` that served it, so callers can observe a rollout.
+//!
+//! Generations are assigned monotonically by the handle (the first loaded
+//! model is generation 1); a racing stale install can never roll the
+//! visible generation backwards. A reload that would switch model
+//! *families* (LDA → PDP, say) is refused — mixtures from different
+//! families are not comparable, so that calls for a new server, not a
+//! swap.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::model::{ServingModel, DEFAULT_CACHE_BYTES};
+use crate::Result;
+
+/// One loaded model plus the generation number the handle assigned it.
+pub struct ModelGeneration {
+    /// Monotonic generation (1 = the initially loaded model).
+    pub generation: u64,
+    /// The frozen model of this generation.
+    pub model: Arc<ServingModel>,
+}
+
+/// Shared, swappable access to the currently-served model.
+pub struct ServingHandle {
+    current: RwLock<Arc<ModelGeneration>>,
+    /// Next generation number to hand out.
+    next_gen: AtomicU64,
+    /// Alias-cache budget applied to reloaded models.
+    cache_bytes: usize,
+    /// The directory backing this handle (None for in-memory models).
+    dir: Mutex<Option<PathBuf>>,
+}
+
+impl ServingHandle {
+    /// Load generation 1 from a snapshot directory with the default
+    /// cache budget.
+    pub fn load_dir(dir: &Path) -> Result<Arc<ServingHandle>> {
+        Self::load_dir_with_budget(dir, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Load generation 1 with an explicit alias-cache byte budget.
+    pub fn load_dir_with_budget(dir: &Path, cache_bytes: usize) -> Result<Arc<ServingHandle>> {
+        let model = ServingModel::load_dir_with_budget(dir, cache_bytes)?;
+        Ok(Arc::new(Self::new(model, cache_bytes, Some(dir.to_path_buf()))))
+    }
+
+    /// Wrap an already-built model (tests, tools, synthetic stores).
+    pub fn from_model(model: ServingModel) -> Arc<ServingHandle> {
+        Arc::new(Self::new(model, DEFAULT_CACHE_BYTES, None))
+    }
+
+    fn new(model: ServingModel, cache_bytes: usize, dir: Option<PathBuf>) -> ServingHandle {
+        ServingHandle {
+            current: RwLock::new(Arc::new(ModelGeneration {
+                generation: 1,
+                model: Arc::new(model),
+            })),
+            next_gen: AtomicU64::new(2),
+            cache_bytes,
+            dir: Mutex::new(dir),
+        }
+    }
+
+    /// The current generation pointer. Cheap (one `Arc` clone under a
+    /// briefly-held read lock); hold the result for the duration of a
+    /// batch so a concurrent swap can't change the model mid-batch.
+    pub fn current(&self) -> Arc<ModelGeneration> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The currently-served model.
+    pub fn model(&self) -> Arc<ServingModel> {
+        self.current().model.clone()
+    }
+
+    /// The currently-visible generation number.
+    pub fn generation(&self) -> u64 {
+        self.current.read().unwrap().generation
+    }
+
+    /// The snapshot directory backing this handle, if any.
+    pub fn dir(&self) -> Option<PathBuf> {
+        self.dir.lock().unwrap().clone()
+    }
+
+    /// Assign the next generation number to `model` and swap it in if it
+    /// is still the newest. Returns `(generation, true)` on a committed
+    /// swap; `(live_generation, false)` when a racing install already
+    /// went newer (the loser's model is dropped, nothing rolls back).
+    /// The family check and the `dir` update happen under the same write
+    /// lock as the swap, so neither [`install`](Self::install) nor a
+    /// racing [`reload`](Self::reload) can ever put a different family —
+    /// or a directory that never went live — behind a serving handle.
+    fn commit(&self, model: ServingModel, dir: Option<&Path>) -> Result<(u64, bool)> {
+        let generation = self.next_gen.fetch_add(1, Ordering::SeqCst);
+        let fresh = Arc::new(ModelGeneration {
+            generation,
+            model: Arc::new(model),
+        });
+        let mut cur = self.current.write().unwrap();
+        anyhow::ensure!(
+            fresh.model.kind().family_name() == cur.model.kind().family_name(),
+            "cannot swap the serving family from {} to {} — start a new \
+             server for a different family instead",
+            cur.model.meta().model,
+            fresh.model.meta().model
+        );
+        // Same guard for the model shape: clients size per-topic buffers
+        // from responses, so θ must keep its length across generations.
+        anyhow::ensure!(
+            fresh.model.k() == cur.model.k(),
+            "cannot swap in a snapshot with a different topic count \
+             (K {} → {}) — restart the server to change model shape",
+            cur.model.k(),
+            fresh.model.k()
+        );
+        // Monotonic: two racing installs commit in generation order, so a
+        // slower loader that drew the smaller number can never clobber a
+        // newer generation that already went live.
+        if fresh.generation > cur.generation {
+            *cur = fresh;
+            if let Some(d) = dir {
+                *self.dir.lock().unwrap() = Some(d.to_path_buf());
+            }
+            Ok((generation, true))
+        } else {
+            Ok((cur.generation, false))
+        }
+    }
+
+    /// Install an already-built model as the next generation and return
+    /// the generation now live (the new one, or — if a racing install
+    /// already went newer — that newer one). Errors if `model` belongs
+    /// to a different serving family than the one being served. Used by
+    /// [`reload`](Self::reload) and by tests that synthesize models
+    /// without a snapshot directory.
+    pub fn install(&self, model: ServingModel) -> Result<u64> {
+        Ok(self.commit(model, None)?.0)
+    }
+
+    /// Load a (presumably newer) snapshot generation from `dir` and swap
+    /// it in. The load runs on the caller's thread with no lock held —
+    /// call from a background thread to keep serving undisturbed; the
+    /// swap itself is O(1). Returns the new generation number; on error
+    /// (a different family, or losing a race against a concurrent newer
+    /// install) the handle keeps serving its current generation
+    /// untouched and its backing directory is not repointed.
+    pub fn reload(&self, dir: &Path) -> Result<u64> {
+        let model = ServingModel::load_dir_with_budget(dir, self.cache_bytes)?;
+        let (generation, won) = self.commit(model, Some(dir))?;
+        anyhow::ensure!(
+            won,
+            "reload superseded: generation {generation} was installed \
+             concurrently and is newer; this load was discarded"
+        );
+        Ok(generation)
+    }
+
+    /// [`reload`](Self::reload) from the directory this handle was last
+    /// loaded from (the `serve --watch` path).
+    pub fn reload_latest(&self) -> Result<u64> {
+        let dir = self
+            .dir()
+            .ok_or_else(|| anyhow::anyhow!("handle has no backing snapshot directory"))?;
+        self.reload(&dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::snapshot::{self, SnapshotMeta, Store};
+
+    fn toy_meta(model: &str) -> SnapshotMeta {
+        SnapshotMeta {
+            model: model.to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables: None,
+        }
+    }
+
+    fn toy_model(weight: i32) -> ServingModel {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let row = if w < 5 { vec![weight, 0] } else { vec![0, weight] };
+            store.insert((0, w), row);
+        }
+        ServingModel::from_stores(toy_meta("AliasLDA"), vec![store], 1 << 20).unwrap()
+    }
+
+    #[test]
+    fn generations_start_at_one_and_increase() {
+        let h = ServingHandle::from_model(toy_model(10));
+        assert_eq!(h.generation(), 1);
+        assert_eq!(h.current().model.total_tokens(), 100);
+        let g2 = h.install(toy_model(20)).unwrap();
+        assert_eq!(g2, 2);
+        assert_eq!(h.generation(), 2);
+        assert_eq!(h.current().model.total_tokens(), 200);
+        // Old generations stay alive for whoever still pins them.
+        let pinned = h.current();
+        let g3 = h.install(toy_model(30)).unwrap();
+        assert_eq!(g3, 3);
+        assert_eq!(pinned.generation, 2);
+        assert_eq!(pinned.model.total_tokens(), 200);
+    }
+
+    #[test]
+    fn reload_from_dir_swaps_and_errors_keep_serving() {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_handle_reload_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = Store::new();
+        store.insert((0, 1), vec![5, 0]);
+        let bytes = snapshot::encode_store_meta(&store, &toy_meta("AliasLDA"));
+        snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+
+        let h = ServingHandle::load_dir(&dir).unwrap();
+        assert_eq!(h.generation(), 1);
+        assert_eq!(h.dir().as_deref(), Some(dir.as_path()));
+
+        // New snapshot content → reload_latest picks it up as gen 2.
+        store.insert((0, 2), vec![0, 7]);
+        let bytes = snapshot::encode_store_meta(&store, &toy_meta("AliasLDA"));
+        snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+        let g = h.reload_latest().unwrap();
+        assert_eq!(g, 2);
+        assert_eq!(h.model().total_tokens(), 12);
+
+        // A broken directory fails the reload but keeps generation 2 live.
+        let empty = dir.join("nope");
+        assert!(h.reload(&empty).is_err());
+        assert_eq!(h.generation(), 2);
+        assert_eq!(h.model().total_tokens(), 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reload_refuses_family_switch() {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_handle_family_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = Store::new();
+        store.insert((0, 1), vec![5, 3]);
+        store.insert((1, 1), vec![1, 1]);
+        let mut meta = toy_meta("AliasPDP");
+        meta.tables = Some(snapshot::TableHyper {
+            discount: 0.1,
+            concentration: 10.0,
+            root: 0.5,
+        });
+        let bytes = snapshot::encode_store_meta(&store, &meta);
+        snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+
+        let h = ServingHandle::from_model(toy_model(10)); // LDA gen 1
+        let msg = match h.reload(&dir) {
+            Ok(_) => panic!("LDA → PDP swap must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("family"), "{msg}");
+        assert_eq!(h.generation(), 1, "failed reload must not swap");
+        // install() hits the same gate at the commit chokepoint — no
+        // bypass for pre-built models.
+        let pdp_model = ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap();
+        assert!(h.install(pdp_model).is_err());
+        assert_eq!(h.generation(), 1, "failed install must not swap");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn install_refuses_topic_count_change() {
+        // θ length is part of the response contract: same family but a
+        // different K must not swap mid-stream.
+        let h = ServingHandle::from_model(toy_model(10)); // K = 2
+        let mut meta3 = toy_meta("AliasLDA");
+        meta3.k = 3;
+        let mut store = Store::new();
+        store.insert((0, 1), vec![1, 2, 3]);
+        let wide = ServingModel::from_stores(meta3, vec![store], 1 << 20).unwrap();
+        let msg = match h.install(wide) {
+            Ok(_) => panic!("K=2 → K=3 swap must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("topic count"), "{msg}");
+        assert_eq!(h.generation(), 1, "refused install must not swap");
+    }
+}

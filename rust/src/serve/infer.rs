@@ -1,20 +1,26 @@
 //! Fold-in inference: estimate a held-out document's topic mixture
-//! against the frozen serving model.
+//! against the frozen serving model — for *any* serving family.
 //!
-//! The document-side collapsed conditional under frozen φ is
+//! Under frozen statistics every family's document-side collapsed
+//! conditional takes the same two-term shape (eq. (4) with the word–topic
+//! side constant):
 //!
 //! ```text
-//! p(z=t | rest) ∝ n_td·φ(w,t)   — sparse, k_d terms, exact
-//!              + α·φ(w,t)       — dense, served by the word's alias table
+//! p(z=t | rest) ∝ n_td·φ(w,t)       — sparse, k_d terms, exact
+//!              + prior_t·φ(w,t)     — dense, served by the word's alias table
 //! ```
 //!
-//! which is exactly eq. (4) with the word–topic side constant — the
-//! regime where the Metropolis-Hastings-Walker machinery amortizes
-//! perfectly: the alias table is built once per word (never stale), the
-//! sparse term costs `O(k_d)`, and the MH correction's acceptance ratio
-//! is identically 1. A short chain per token over a handful of sweeps
-//! yields a Rao-Blackwellized mixture estimate
-//! `θ̂_t = (n̄_td + α) / (N_d + αK)`.
+//! where `φ` and `prior_t` come from the snapshot's
+//! [`ServingFamily`](super::family::ServingFamily): Dirichlet φ with flat
+//! α for LDA, the Pitman-Yor predictive for PDP, and the root-stick
+//! weighted prior `b₁·θ₀(t)` for HDP. The alias table is built over the
+//! prior-weighted weights, so the two-branch mixture proposal *is* the
+//! target — the regime where the Metropolis-Hastings-Walker machinery
+//! amortizes perfectly: tables are built once per word (never stale), the
+//! sparse term costs `O(k_d)`, and the MH acceptance ratio is identically
+//! 1 for every family. A short chain per token over a handful of sweeps
+//! yields the Rao-Blackwellized mixture estimate
+//! `θ̂_t = (n̄_td + prior_t) / (N_d + Σ_t prior_t)`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -57,6 +63,11 @@ pub struct InferResult {
     pub proposed: u64,
     /// MH proposals accepted (≈ proposed: the frozen proposal is exact).
     pub accepted: u64,
+    /// Snapshot generation that answered the query — filled by the
+    /// serving layer ([`super::service`]) from the
+    /// [`ServingHandle`](super::handle::ServingHandle); 0 for direct
+    /// calls outside a handle.
+    pub generation: u64,
     /// Queue + service latency; filled by the serving layer
     /// ([`super::service`]), zero for direct calls.
     pub latency: Duration,
@@ -80,13 +91,21 @@ pub fn infer_doc(
     rng: &mut Rng,
 ) -> InferResult {
     let k = model.k();
-    let alpha = model.alpha();
+    let priors = model.priors();
+    let prior_total = model.prior_total();
     if tokens.is_empty() || k == 0 {
+        // No evidence: the mixture is the normalized family prior.
+        let theta = if prior_total > 0.0 {
+            priors.iter().map(|&p| p / prior_total).collect()
+        } else {
+            vec![1.0 / k.max(1) as f64; k]
+        };
         return InferResult {
-            theta: vec![1.0 / k.max(1) as f64; k],
+            theta,
             tokens: 0,
             proposed: 0,
             accepted: 0,
+            generation: 0,
             latency: Duration::ZERO,
         };
     }
@@ -98,8 +117,8 @@ pub fn infer_doc(
     let proposals: Vec<Arc<WordProposal>> =
         tokens.iter().map(|&w| model.proposal(w)).collect();
 
-    // Init: draw each token from its word's frozen dense proposal — a far
-    // better starting point than uniform for peaked φ.
+    // Init: draw each token from its word's prior-weighted frozen
+    // proposal — a far better starting point than uniform for peaked φ.
     let mut n_dt = SparseCounts::new();
     let mut z: Vec<u32> = Vec::with_capacity(tokens.len());
     for prop in &proposals {
@@ -128,21 +147,23 @@ pub fn infer_doc(
             sparse_weights.clear();
             let mut sparse_sum = 0.0;
             for (t, c) in n_dt.iter() {
-                let wgt = c as f64 * prop.qw[t as usize];
+                let wgt = c as f64 * prop.phi[t as usize];
                 sparse_topics.push(t);
                 sparse_weights.push(wgt);
                 sparse_sum += wgt;
             }
-            let dense_sum = alpha * prop.qsum;
+            let dense_sum = prop.qsum;
             let total = sparse_sum + dense_sum;
 
             // One mass function serves as both proposal and target —
-            // q(t) = p(t) ∝ (n_td+α)·φ(w,t) — which is what makes the MH
-            // acceptance identically 1 under frozen φ. Passing the same
-            // (Copy) closure twice keeps that invariant structural.
+            // q(t) = p(t) ∝ (n_td + prior_t)·φ(w,t) — which is what makes
+            // the MH acceptance identically 1 under frozen φ, for every
+            // family. Passing the same (Copy) closure twice keeps that
+            // invariant structural.
             let counts = &n_dt;
-            let qw = &prop.qw;
-            let pq_of = |t: usize| (counts.get(t as u32) as f64 + alpha) * qw[t];
+            let phi = &prop.phi;
+            let pq_of =
+                |t: usize| (counts.get(t as u32) as f64 + priors[t]) * phi[t];
             let topics = &sparse_topics;
             let weights = &sparse_weights;
             let table = &prop.table;
@@ -161,7 +182,8 @@ pub fn infer_doc(
                     let t = topics.get(idx).copied().unwrap_or(0) as usize;
                     (t, pq_of(t))
                 } else {
-                    // O(1) alias draw from the frozen dense component.
+                    // O(1) alias draw from the prior-weighted dense
+                    // component.
                     let t = table.sample(r);
                     (t, pq_of(t))
                 }
@@ -183,18 +205,20 @@ pub fn infer_doc(
         }
     }
 
-    // Rao-Blackwellized mixture: smoothed average document-topic counts.
+    // Rao-Blackwellized mixture: prior-smoothed average counts.
     let n_d = tokens.len() as f64;
-    let denom = n_d + alpha * k as f64;
+    let denom = n_d + prior_total;
     let theta: Vec<f64> = acc
         .iter()
-        .map(|&a| (a as f64 / samples as f64 + alpha) / denom)
+        .zip(priors.iter())
+        .map(|(&a, &p)| (a as f64 / samples as f64 + p) / denom)
         .collect();
     InferResult {
         theta,
         tokens: tokens.len(),
         proposed,
         accepted,
+        generation: 0,
         latency: Duration::ZERO,
     }
 }
@@ -202,7 +226,23 @@ pub fn infer_doc(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ps::snapshot::{SnapshotMeta, Store};
+    use crate::ps::snapshot::{SnapshotMeta, Store, TableHyper};
+
+    fn meta(model: &str, k: u32, tables: Option<TableHyper>) -> SnapshotMeta {
+        SnapshotMeta {
+            model: model.to_string(),
+            k,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables,
+        }
+    }
 
     /// Two sharply-separated topics: words 0..5 → topic 0, 5..10 → topic 1.
     fn toy_model() -> ServingModel {
@@ -211,17 +251,54 @@ mod tests {
             let row = if w < 5 { vec![100, 0] } else { vec![0, 100] };
             store.insert((0, w), row);
         }
-        let meta = SnapshotMeta {
-            model: "AliasLDA".to_string(),
-            k: 2,
-            alpha: 0.1,
-            beta: 0.01,
-            vocab_size: 10,
-            slot: 0,
-            n_servers: 1,
-            vnodes: 8,
-            iterations: 1,
-        };
+        ServingModel::from_stores(meta("AliasLDA", 2, None), vec![store], 1 << 20).unwrap()
+    }
+
+    /// Same separation expressed as PDP statistics (customers + tables).
+    fn toy_pdp_model() -> ServingModel {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let (m, s) = if w < 5 {
+                (vec![100, 0], vec![8, 0])
+            } else {
+                (vec![0, 100], vec![0, 8])
+            };
+            store.insert((0, w), m);
+            store.insert((1, w), s);
+        }
+        let meta = meta(
+            "AliasPDP",
+            2,
+            Some(TableHyper {
+                discount: 0.1,
+                concentration: 10.0,
+                root: 0.5,
+            }),
+        );
+        ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap()
+    }
+
+    /// HDP statistics: three truncation slots, the third unrepresented.
+    fn toy_hdp_model() -> ServingModel {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let row = if w < 5 {
+                vec![100, 0, 0]
+            } else {
+                vec![0, 100, 0]
+            };
+            store.insert((0, w), row);
+        }
+        store.insert((1, 0), vec![10, 10, 0]);
+        let meta = meta(
+            "AliasHDP",
+            3,
+            Some(TableHyper {
+                discount: 0.0,
+                concentration: 1.0,
+                root: 1.0,
+            }),
+        );
         ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap()
     }
 
@@ -245,22 +322,55 @@ mod tests {
     }
 
     #[test]
-    fn acceptance_is_near_one_for_frozen_proposals() {
-        let m = toy_model();
-        let mut rng = Rng::new(3);
-        let doc: Vec<u32> = (0..200).map(|i| (i % 10) as u32).collect();
-        let res = infer_doc(&m, &doc, &InferConfig::default(), &mut rng);
-        let rate = res.accepted as f64 / res.proposed as f64;
-        assert!(rate > 0.999, "exact proposal must always accept ({rate})");
+    fn pdp_doc_concentrates_on_its_topic() {
+        let m = toy_pdp_model();
+        let mut rng = Rng::new(11);
+        let res = infer_doc(&m, &[5, 6, 7, 8, 9, 5, 6, 7], &InferConfig::default(), &mut rng);
+        assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(res.theta[1] > 0.9, "PDP θ = {:?}", res.theta);
     }
 
     #[test]
-    fn empty_doc_returns_uniform() {
+    fn hdp_doc_concentrates_and_skips_unrepresented_topics() {
+        let m = toy_hdp_model();
+        let mut rng = Rng::new(12);
+        let res = infer_doc(&m, &[0, 1, 2, 3, 4, 0, 1], &InferConfig::default(), &mut rng);
+        assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(res.theta[0] > 0.85, "HDP θ = {:?}", res.theta);
+        // The unrepresented truncation slot gets (essentially) nothing.
+        assert!(res.theta[2] < 0.01, "HDP θ = {:?}", res.theta);
+    }
+
+    #[test]
+    fn acceptance_is_near_one_for_frozen_proposals() {
+        // The exact-proposal property must hold for every family.
+        for (m, seed) in [
+            (toy_model(), 3u64),
+            (toy_pdp_model(), 13),
+            (toy_hdp_model(), 14),
+        ] {
+            let mut rng = Rng::new(seed);
+            let doc: Vec<u32> = (0..200).map(|i| (i % 10) as u32).collect();
+            let res = infer_doc(&m, &doc, &InferConfig::default(), &mut rng);
+            let rate = res.accepted as f64 / res.proposed as f64;
+            assert!(rate > 0.999, "exact proposal must always accept ({rate})");
+        }
+    }
+
+    #[test]
+    fn empty_doc_returns_normalized_prior() {
         let m = toy_model();
         let mut rng = Rng::new(4);
         let res = infer_doc(&m, &[], &InferConfig::default(), &mut rng);
         assert_eq!(res.tokens, 0);
+        // Flat LDA prior → uniform.
         assert_eq!(res.theta, vec![0.5, 0.5]);
+        // HDP prior follows the root sticks instead.
+        let h = toy_hdp_model();
+        let res = infer_doc(&h, &[], &InferConfig::default(), &mut rng);
+        assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(res.theta[0] > 0.45 && res.theta[1] > 0.45);
+        assert!(res.theta[2] < 1e-6);
     }
 
     #[test]

@@ -1,39 +1,55 @@
-//! Snapshot-backed topic-inference serving.
+//! Snapshot-backed topic-inference serving — family-generic and
+//! hot-reloadable.
 //!
 //! Training answers "what are the topics?"; this layer answers "what
 //! topics is *this document* about?" at query time, against statistics a
-//! training run snapshotted to disk:
+//! training run snapshotted to disk — for **every** model family the
+//! paper spans (LDA, PDP, HDP):
 //!
+//! * [`family`] — [`ServingFamily`]: the per-family contract "frozen
+//!   sufficient statistics → predictive `φ(w,t)` + document-side prior",
+//!   with [`LdaFamily`], [`PdpFamily`] (customer + table counts, PYP
+//!   predictive), and [`HdpFamily`] (root-stick prior) built from the v3
+//!   snapshot header's table section.
 //! * [`model`] — [`ServingModel`]: merge the `server_slot*.snap` ring
-//!   partitions into one frozen `n_tw` matrix, self-described by the v2
-//!   snapshot hyperparameter header.
+//!   partitions, dispatch to the family the header records, own the
+//!   alias cache.
 //! * [`cache`] — [`AliasCache`]: per-word Walker alias tables built
 //!   lazily and evicted LRU under a byte budget (hot Zipf head resident,
 //!   long tail rebuilt on demand).
 //! * [`infer`] — [`infer_doc`]: fold-in Gibbs over only the
 //!   document-side state with the MH-Walker mixture proposal; with φ
-//!   frozen the proposal is exact, so the chain mixes in a handful of
-//!   sweeps.
+//!   frozen the proposal is exact for every family, so the chain mixes
+//!   in a handful of sweeps.
+//! * [`handle`] — [`ServingHandle`]: a generation-numbered, atomically
+//!   swapped pointer to the current model. [`ServingHandle::reload`]
+//!   picks up newer snapshots without dropping the in-flight queue;
+//!   responses report the generation that served them.
 //! * [`service`] — [`InferenceService`]: a bounded queue + worker pool
-//!   draining queries in micro-batches, with per-request deterministic
-//!   RNG streams and back-pressure on overload.
+//!   draining queries in micro-batches (each batch pins one generation),
+//!   with per-request deterministic RNG streams and back-pressure on
+//!   overload.
 //!
 //! ```no_run
-//! use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
-//! use std::sync::Arc;
+//! use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
 //!
-//! let model = ServingModel::load_dir(std::path::Path::new("snapshots")).unwrap();
-//! let svc = InferenceService::spawn(Arc::new(model), ServeConfig::default());
+//! let handle = ServingHandle::load_dir(std::path::Path::new("snapshots")).unwrap();
+//! let svc = InferenceService::spawn(handle.clone(), ServeConfig::default());
 //! let mixture = svc.infer(vec![3, 17, 42]).unwrap();
-//! println!("top topic: {:?}", mixture.top_topics(1));
+//! println!("gen {} top topic: {:?}", mixture.generation, mixture.top_topics(1));
+//! handle.reload_latest().unwrap(); // swap in newer snapshots, queue intact
 //! ```
 
 pub mod cache;
+pub mod family;
+pub mod handle;
 pub mod infer;
 pub mod model;
 pub mod service;
 
 pub use cache::{AliasCache, CacheStats, WordProposal};
+pub use family::{HdpFamily, LdaFamily, PdpFamily, ServingFamily};
+pub use handle::{ModelGeneration, ServingHandle};
 pub use infer::{infer_doc, InferConfig, InferResult};
 pub use model::ServingModel;
 pub use service::{run_queries, synth_queries, InferenceService, ServeConfig, ServeStats};

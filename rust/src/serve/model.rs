@@ -1,18 +1,28 @@
-//! The frozen serving model: global word–topic statistics merged from a
-//! training snapshot directory.
+//! The frozen serving model: a snapshot directory's merged statistics
+//! behind the family-generic [`ServingFamily`] abstraction.
 //!
 //! Training servers each snapshot their ring partition of the shared
-//! `n_tw` matrix ([`crate::ps::snapshot`]); the slots' key sets are
-//! disjoint by consistent hashing, so the global statistics are the
-//! row-wise sum of every `server_slot*.snap` in the directory. The v2
-//! snapshot header carries the hyperparameters (model, K, α, β) and the
-//! ring geometry, making the directory fully self-describing — the
-//! inference server needs no training config.
+//! matrices ([`crate::ps::snapshot`]); the slots' key sets are disjoint
+//! by consistent hashing, so the global statistics are the row-wise sum
+//! of every `server_slot*.snap` in the directory. The v2+ snapshot header
+//! carries the hyperparameters and the ring geometry — and, since v3, the
+//! table-side hyperparameters — making the directory fully
+//! self-describing: [`ServingModel::load_dir`] dispatches to the right
+//! family (LDA, PDP, or HDP) with no training config in sight.
+//!
+//! The model owns the [`AliasCache`] of per-word proposals. A cached
+//! [`WordProposal`] holds the word's frozen φ row plus an alias table
+//! over the *prior-weighted* weights `prior_t·φ(w,t)`, which is exactly
+//! the dense component of the fold-in conditional
+//! `p(z=t) ∝ (n_td + prior_t)·φ(w,t)` — so the MH-Walker proposal is
+//! exact for every family and the acceptance ratio is identically 1.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use super::cache::{AliasCache, CacheStats, WordProposal};
+use super::family::{family_from_stores, ServingFamily};
+use crate::config::ModelKind;
 use crate::eval::perplexity::TopicModelView;
 use crate::ps::ring::Ring;
 use crate::ps::snapshot::{self, SnapshotMeta, Store};
@@ -22,19 +32,36 @@ use crate::Result;
 /// Default alias-cache budget (64 MiB ≈ 3k resident tables at K=1024).
 pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
 
-/// Immutable global statistics + lazily-built per-word alias tables.
+/// Immutable family statistics + lazily-built per-word alias tables.
 pub struct ServingModel {
     meta: SnapshotMeta,
+    family: Box<dyn ServingFamily>,
     k: usize,
-    alpha: f64,
-    beta: f64,
-    beta_bar: f64,
     vocab: usize,
-    /// Merged `n_tw` rows (dense, `None` for words never observed).
-    rows: Vec<Option<Box<[i32]>>>,
-    /// Per-topic totals `n_t`.
-    totals: Vec<i64>,
+    /// Cached document-side prior masses `prior_t = doc_prior(t)`.
+    priors: Box<[f64]>,
+    /// `Σ_t prior_t` — the fold-in smoothing total.
+    prior_total: f64,
     cache: AliasCache,
+}
+
+fn f64_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn tables_eq(
+    a: &Option<snapshot::TableHyper>,
+    b: &Option<snapshot::TableHyper>,
+) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(a), Some(b)) => {
+            f64_eq(a.discount, b.discount)
+                && f64_eq(a.concentration, b.concentration)
+                && f64_eq(a.root, b.root)
+        }
+        _ => false,
+    }
 }
 
 impl ServingModel {
@@ -51,7 +78,7 @@ impl ServingModel {
             .map_err(|e| anyhow::anyhow!("cannot read snapshot dir {}: {e}", dir.display()))?;
         for entry in entries.flatten() {
             let name = entry.file_name().to_string_lossy().into_owned();
-            if !(name.starts_with("server_slot") && name.ends_with(".snap")) {
+            if !snapshot::is_slot_snapshot_name(&name) {
                 continue;
             }
             let bytes = snapshot::read_snapshot(&entry.path())
@@ -75,12 +102,12 @@ impl ServingModel {
                     dir.display()
                 )
             })?;
-        // A v1 file next to v2 files is a stale slot from an earlier run:
+        // A v1 file next to v2+ files is a stale slot from an earlier run:
         // it would dodge every consistency check below (no header to
         // compare), so refuse outright rather than merge mixed runs.
         anyhow::ensure!(
             slots.iter().all(|(m, _)| m.is_some()),
-            "snapshot dir {} mixes v2 and pre-v2 slot files — stale \
+            "snapshot dir {} mixes v2+ and pre-v2 slot files — stale \
              snapshots from an earlier run; re-train to regenerate",
             dir.display()
         );
@@ -97,21 +124,36 @@ impl ServingModel {
                 );
                 // Same-geometry slots from *different runs* would merge
                 // silently otherwise — the ring check can't catch them.
+                // The v3 `run_id` nonce is the decisive test: it differs
+                // between runs even when every configured hyperparameter
+                // matches (e.g. a watch-triggered reload racing a
+                // same-config retrain's slot writes).
                 anyhow::ensure!(
                     m.model == meta.model
-                        && m.alpha.to_bits() == meta.alpha.to_bits()
-                        && m.beta.to_bits() == meta.beta.to_bits()
-                        && m.vocab_size == meta.vocab_size,
-                    "snapshot slots disagree on hyperparameters \
-                     ({} α={} β={} V={} vs {} α={} β={} V={}) — mixed runs?",
+                        && f64_eq(m.alpha, meta.alpha)
+                        && f64_eq(m.beta, meta.beta)
+                        && m.vocab_size == meta.vocab_size
+                        && m.iterations == meta.iterations
+                        && m.run_id == meta.run_id
+                        && tables_eq(&m.tables, &meta.tables),
+                    "snapshot slots disagree on run/hyperparameters \
+                     ({} α={} β={} V={} iters={} run={:#x} tables {:?} vs \
+                     {} α={} β={} V={} iters={} run={:#x} tables {:?}) — \
+                     mixed runs?",
                     m.model,
                     m.alpha,
                     m.beta,
                     m.vocab_size,
+                    m.iterations,
+                    m.run_id,
+                    m.tables,
                     meta.model,
                     meta.alpha,
                     meta.beta,
-                    meta.vocab_size
+                    meta.vocab_size,
+                    meta.iterations,
+                    meta.run_id,
+                    meta.tables
                 );
             }
         }
@@ -150,56 +192,24 @@ impl ServingModel {
         stores: Vec<Store>,
         cache_bytes: usize,
     ) -> Result<ServingModel> {
-        anyhow::ensure!(meta.k > 0, "snapshot metadata has K = 0");
+        let family = family_from_stores(&meta, &stores)?;
+        let k = family.k();
+        let vocab = family.vocab();
+        let priors: Box<[f64]> = (0..k).map(|t| family.doc_prior(t).max(0.0)).collect();
+        let prior_total: f64 = priors.iter().sum();
         anyhow::ensure!(
-            meta.model.contains("LDA"),
-            "serving supports LDA-family snapshots (n_tw statistics); \
-             got a {} snapshot — PDP/HDP serving is an open roadmap item",
+            prior_total > 0.0,
+            "{} snapshot yields a zero document-side prior — corrupt table \
+             statistics?",
             meta.model
         );
-        let k = meta.k as usize;
-        let max_word = stores
-            .iter()
-            .flat_map(|s| s.keys())
-            .filter(|(m, _)| *m == 0)
-            .map(|&(_, w)| w as usize + 1)
-            .max()
-            .unwrap_or(0);
-        let vocab = (meta.vocab_size as usize).max(max_word);
-        anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
-        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
-        let mut totals = vec![0i64; k];
-        for store in &stores {
-            // Matrix 0 is `n_tw` for both LDA samplers (coordinator
-            // layout); other matrices belong to PDP/HDP table stats.
-            for (&(matrix, word), row) in store.iter() {
-                if matrix != 0 {
-                    continue;
-                }
-                let dst = rows[word as usize].get_or_insert_with(|| {
-                    vec![0i32; k].into_boxed_slice()
-                });
-                for (t, &v) in row.iter().take(k).enumerate() {
-                    dst[t] = dst[t].saturating_add(v);
-                }
-            }
-        }
-        for row in rows.iter().flatten() {
-            for (t, &v) in row.iter().enumerate() {
-                // Eventual consistency can leave transient negatives in a
-                // snapshot; clamp at the aggregate like the samplers do.
-                totals[t] += v.max(0) as i64;
-            }
-        }
         Ok(ServingModel {
             k,
-            alpha: meta.alpha,
-            beta: meta.beta,
-            beta_bar: meta.beta * vocab as f64,
             vocab,
-            rows,
-            totals,
+            priors,
+            prior_total,
             cache: AliasCache::new(k, cache_bytes, 16),
+            family,
             meta,
         })
     }
@@ -209,19 +219,31 @@ impl ServingModel {
         self.k
     }
 
-    /// Document-topic prior α.
-    pub fn alpha(&self) -> f64 {
-        self.alpha
-    }
-
-    /// Topic-word prior β.
-    pub fn beta(&self) -> f64 {
-        self.beta
-    }
-
     /// Vocabulary size the model serves.
     pub fn vocab(&self) -> usize {
         self.vocab
+    }
+
+    /// The model family these statistics belong to.
+    pub fn kind(&self) -> ModelKind {
+        self.family.kind()
+    }
+
+    /// Error unless `requested` belongs to the same serving family as the
+    /// snapshot's recorded model — the `serve --model` contradiction
+    /// check (a PDP query against LDA statistics would silently produce
+    /// garbage mixtures otherwise).
+    pub fn ensure_family(&self, requested: ModelKind) -> Result<()> {
+        anyhow::ensure!(
+            requested.family_name() == self.kind().family_name(),
+            "--model {} contradicts the snapshot's recorded family: the \
+             directory was trained as {} (family {:?}, requested {:?})",
+            requested.as_str(),
+            self.meta.model,
+            self.kind().family_name(),
+            requested.family_name()
+        );
+        Ok(())
     }
 
     /// The snapshot metadata this model was loaded from.
@@ -229,9 +251,19 @@ impl ServingModel {
         &self.meta
     }
 
-    /// Total (clamped) token mass in the frozen statistics.
+    /// Total (clamped) token mass in the frozen primary statistic.
     pub fn total_tokens(&self) -> i64 {
-        self.totals.iter().sum()
+        self.family.total_tokens()
+    }
+
+    /// Document-side prior masses per topic.
+    pub fn priors(&self) -> &[f64] {
+        &self.priors
+    }
+
+    /// `Σ_t prior_t`.
+    pub fn prior_total(&self) -> f64 {
+        self.prior_total
     }
 
     /// Alias-cache statistics.
@@ -239,30 +271,22 @@ impl ServingModel {
         self.cache.stats()
     }
 
-    #[inline]
-    fn count(&self, w: u32, t: usize) -> i32 {
-        match self.rows.get(w as usize).and_then(|r| r.as_deref()) {
-            Some(row) => row[t].max(0),
-            None => 0,
-        }
-    }
-
-    #[inline]
-    fn denom(&self, t: usize) -> f64 {
-        self.totals[t].max(0) as f64 + self.beta_bar
-    }
-
     /// The word's frozen dense proposal, from the cache (built on miss).
     pub fn proposal(&self, w: u32) -> Arc<WordProposal> {
         self.cache.get_or_build(w, || {
-            let mut qw = Vec::with_capacity(self.k);
+            let mut phi = Vec::with_capacity(self.k);
+            let mut q = Vec::with_capacity(self.k);
+            let mut qsum = 0.0;
             for t in 0..self.k {
-                qw.push((self.count(w, t) as f64 + self.beta) / self.denom(t));
+                let p = self.family.phi(w, t);
+                let weighted = self.priors[t] * p;
+                phi.push(p);
+                q.push(weighted);
+                qsum += weighted;
             }
-            let qsum: f64 = qw.iter().sum();
             WordProposal {
-                table: AliasTable::build(&qw),
-                qw: qw.into_boxed_slice(),
+                table: AliasTable::build(&q),
+                phi: phi.into_boxed_slice(),
                 qsum,
             }
         })
@@ -275,17 +299,18 @@ impl TopicModelView for ServingModel {
     }
 
     fn phi(&self, w: u32, t: usize) -> f64 {
-        (self.count(w, t) as f64 + self.beta) / self.denom(t)
+        self.family.phi(w, t)
     }
 
-    fn doc_prior(&self, _t: usize) -> f64 {
-        self.alpha
+    fn doc_prior(&self, t: usize) -> f64 {
+        self.family.doc_prior(t)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ps::snapshot::TableHyper;
 
     fn meta(k: u32, n_servers: u32) -> SnapshotMeta {
         SnapshotMeta {
@@ -298,6 +323,8 @@ mod tests {
             n_servers,
             vnodes: 8,
             iterations: 1,
+            run_id: 0,
+            tables: None,
         }
     }
 
@@ -308,26 +335,81 @@ mod tests {
         let mut b = Store::new();
         b.insert((0, 2), vec![0, 5, 0]);
         b.insert((0, 1), vec![1, 0, 0]); // overlap adds
-        b.insert((1, 2), vec![9, 9, 9]); // non-primary matrix ignored
+        b.insert((1, 2), vec![9, 9, 9]); // table matrix, not primary mass
         let m = ServingModel::from_stores(meta(3, 2), vec![a, b], 1 << 20).unwrap();
         assert_eq!(m.k(), 3);
         assert_eq!(m.vocab(), 10);
-        assert_eq!(m.count(1, 0), 4);
-        assert_eq!(m.count(2, 1), 5);
+        assert_eq!(m.kind(), ModelKind::AliasLda);
         assert_eq!(m.total_tokens(), 4 + 1 + 5);
         // φ normalizes against clamped totals.
         let phi_sum: f64 = (0..10).map(|w| m.phi(w, 1)).sum();
         assert!((phi_sum - 1.0).abs() < 1e-9, "φ(·|t) sums to {phi_sum}");
+        // LDA priors are the flat α row.
+        assert_eq!(m.priors(), &[0.1, 0.1, 0.1]);
+        assert!((m.prior_total() - 0.3).abs() < 1e-12);
     }
 
     #[test]
-    fn rejects_non_lda_and_empty() {
+    fn rejects_v2_pdp_and_zero_k() {
         let mut pdp = meta(4, 1);
-        pdp.model = "AliasPDP".to_string();
+        pdp.model = "AliasPDP".to_string(); // no tables hyper → v2-era
         assert!(ServingModel::from_stores(pdp, vec![Store::new()], 1024).is_err());
         let mut zero_k = meta(0, 1);
         zero_k.vocab_size = 10;
         assert!(ServingModel::from_stores(zero_k, vec![Store::new()], 1024).is_err());
+    }
+
+    #[test]
+    fn serves_pdp_snapshots_with_v3_tables() {
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let (mr, sr) = if w < 5 {
+                (vec![40, 0], vec![4, 0])
+            } else {
+                (vec![0, 40], vec![0, 4])
+            };
+            store.insert((0, w), mr);
+            store.insert((1, w), sr);
+        }
+        let mut pdp = meta(2, 1);
+        pdp.model = "AliasPDP".to_string();
+        pdp.tables = Some(TableHyper {
+            discount: 0.1,
+            concentration: 10.0,
+            root: 0.5,
+        });
+        let m = ServingModel::from_stores(pdp, vec![store], 1 << 20).unwrap();
+        assert_eq!(m.kind(), ModelKind::AliasPdp);
+        let phi_sum: f64 = (0..10).map(|w| m.phi(w, 0)).sum();
+        assert!((phi_sum - 1.0).abs() < 1e-9, "PDP φ sums to {phi_sum}");
+        // Proposal rows carry φ and the prior-weighted mass.
+        let p = m.proposal(0);
+        assert!((p.phi[0] - m.phi(0, 0)).abs() < 1e-15);
+        let expect_qsum: f64 = (0..2).map(|t| m.priors()[t] * m.phi(0, t)).sum();
+        assert!((p.qsum - expect_qsum).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ensure_family_checks_at_family_granularity() {
+        let m = ServingModel::from_stores(
+            meta(2, 1),
+            vec![{
+                let mut s = Store::new();
+                s.insert((0, 1), vec![3, 1]);
+                s
+            }],
+            1 << 20,
+        )
+        .unwrap();
+        // Both LDA samplers share the statistic → both accepted.
+        assert!(m.ensure_family(ModelKind::AliasLda).is_ok());
+        assert!(m.ensure_family(ModelKind::YahooLda).is_ok());
+        // Cross-family contradiction → clear error naming both sides.
+        let msg = match m.ensure_family(ModelKind::AliasPdp) {
+            Ok(()) => panic!("PDP against LDA statistics must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("AliasPDP") && msg.contains("AliasLDA"), "{msg}");
     }
 
     #[test]
@@ -337,9 +419,10 @@ mod tests {
         let m = ServingModel::from_stores(meta(2, 1), vec![s], 1 << 20).unwrap();
         let p = m.proposal(4);
         for t in 0..2 {
-            assert!((p.qw[t] - m.phi(4, t)).abs() < 1e-15);
+            assert!((p.phi[t] - m.phi(4, t)).abs() < 1e-15);
         }
-        assert!((p.qsum - (p.qw[0] + p.qw[1])).abs() < 1e-15);
+        let qsum: f64 = (0..2).map(|t| m.priors()[t] * p.phi[t]).sum();
+        assert!((p.qsum - qsum).abs() < 1e-15);
         let p2 = m.proposal(4);
         assert!(Arc::ptr_eq(&p, &p2), "second lookup must hit the cache");
         // Unseen words get the smoothed-zero proposal, not a panic.

@@ -5,21 +5,29 @@
 //! of the roadmap: callers [`submit`](InferenceService::submit) documents
 //! and get a reply channel; N workers pull up to `max_batch` queued jobs
 //! at a time (one lock acquisition amortized over the batch) and fold
-//! each document in against the shared frozen [`ServingModel`]. The
-//! queue is bounded — a full queue applies back-pressure by blocking
-//! submitters instead of growing without limit.
+//! each document in against the generation the worker pinned from the
+//! shared [`ServingHandle`] at the top of the batch. The queue is
+//! bounded — a full queue applies back-pressure by blocking submitters
+//! instead of growing without limit.
 //!
-//! Results are deterministic per request: each job's RNG stream is
-//! derived from `(service seed, request sequence number)`, so the answer
-//! does not depend on which worker ran it or how batches formed.
+//! The handle indirection is what makes hot reload safe: a
+//! [`ServingHandle::reload`] swap never touches the queue, so requests
+//! in flight across a swap are all answered (by whichever generation
+//! their batch pinned) and each [`InferResult`] reports the generation
+//! that served it.
+//!
+//! Results are deterministic per request for a fixed generation: each
+//! job's RNG stream is derived from `(service seed, request sequence
+//! number)`, so the answer does not depend on which worker ran it or how
+//! batches formed.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use super::handle::ServingHandle;
 use super::infer::{infer_doc, InferConfig, InferResult};
-use super::model::ServingModel;
 use crate::util::rng::{Rng, Zipf};
 
 /// Service configuration.
@@ -62,7 +70,7 @@ struct Queue {
 }
 
 struct Shared {
-    model: Arc<ServingModel>,
+    handle: Arc<ServingHandle>,
     cfg: ServeConfig,
     queue: Mutex<Queue>,
     not_empty: Condvar,
@@ -91,10 +99,10 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Spawn the pool over a loaded model.
-    pub fn spawn(model: Arc<ServingModel>, cfg: ServeConfig) -> InferenceService {
+    /// Spawn the pool over a hot-reloadable model handle.
+    pub fn spawn(handle: Arc<ServingHandle>, cfg: ServeConfig) -> InferenceService {
         let shared = Arc::new(Shared {
-            model,
+            handle,
             cfg: cfg.clone(),
             queue: Mutex::new(Queue {
                 jobs: VecDeque::new(),
@@ -122,9 +130,9 @@ impl InferenceService {
         }
     }
 
-    /// The model being served.
-    pub fn model(&self) -> &Arc<ServingModel> {
-        &self.shared.model
+    /// The handle whose current generation is being served.
+    pub fn handle(&self) -> &Arc<ServingHandle> {
+        &self.shared.handle
     }
 
     /// Enqueue a query; blocks while the queue is at capacity
@@ -255,9 +263,13 @@ fn worker_loop(shared: &Shared) {
             shared.not_full.notify_all();
             batch
         };
+        // Pin one generation for the whole batch: a concurrent reload
+        // swaps the handle, never this batch's model.
+        let gen = shared.handle.current();
         for job in batch {
             let mut rng = Rng::new(shared.cfg.seed).derive(job.seq);
-            let mut res = infer_doc(&shared.model, &job.tokens, &shared.cfg.infer, &mut rng);
+            let mut res = infer_doc(&gen.model, &job.tokens, &shared.cfg.infer, &mut rng);
+            res.generation = gen.generation;
             res.latency = job.enqueued.elapsed();
             shared.served.fetch_add(1, Ordering::Relaxed);
             // The submitter may have stopped listening; that's fine.
@@ -271,11 +283,12 @@ fn worker_loop(shared: &Shared) {
 mod tests {
     use super::*;
     use crate::ps::snapshot::{SnapshotMeta, Store};
+    use crate::serve::model::ServingModel;
 
-    fn toy_model() -> Arc<ServingModel> {
+    fn toy_serving_model(weight: i32) -> ServingModel {
         let mut store = Store::new();
         for w in 0..10u32 {
-            let row = if w < 5 { vec![80, 0] } else { vec![0, 80] };
+            let row = if w < 5 { vec![weight, 0] } else { vec![0, weight] };
             store.insert((0, w), row);
         }
         let meta = SnapshotMeta {
@@ -288,8 +301,14 @@ mod tests {
             n_servers: 1,
             vnodes: 8,
             iterations: 1,
+            run_id: 0,
+            tables: None,
         };
-        Arc::new(ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap())
+        ServingModel::from_stores(meta, vec![store], 1 << 20).unwrap()
+    }
+
+    fn toy_model() -> Arc<ServingHandle> {
+        ServingHandle::from_model(toy_serving_model(80))
     }
 
     #[test]
@@ -372,6 +391,45 @@ mod tests {
             "64 queries took {} batches — batching never engaged",
             stats.batches
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reload_mid_stream_answers_every_queued_request() {
+        // One worker pinned on a long document, a pile of queries queued
+        // behind it, a generation swap in the middle: nothing drops, and
+        // a request submitted after the swap reports the new generation.
+        let handle = toy_model();
+        let svc = InferenceService::spawn(
+            handle.clone(),
+            ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                ..Default::default()
+            },
+        );
+        let long_doc: Vec<u32> = (0..20_000).map(|i| (i % 10) as u32).collect();
+        let pin = svc.submit(long_doc);
+        let queued: Vec<_> = (0..32).map(|_| svc.submit(vec![0u32, 1, 2])).collect();
+        let new_gen = handle.install(toy_serving_model(120)).expect("same family");
+        assert_eq!(new_gen, 2);
+        // Submitted strictly after the swap → must be served by gen 2.
+        let after = svc.submit(vec![6u32, 7, 8]);
+        let pinned = pin.recv().expect("pinned request dropped");
+        // Whichever generation the first batch pinned, it answered.
+        assert!(pinned.generation == 1 || pinned.generation == 2);
+        for rx in queued {
+            let res = rx.recv().expect("queued request dropped across reload");
+            assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(
+                res.generation == 1 || res.generation == 2,
+                "unknown generation {}",
+                res.generation
+            );
+        }
+        let res = after.recv().expect("post-swap request dropped");
+        assert_eq!(res.generation, 2);
+        assert_eq!(svc.stats().served, 34);
         svc.shutdown();
     }
 

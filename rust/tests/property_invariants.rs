@@ -400,7 +400,8 @@ fn prop_snapshot_roundtrip_random() {
         let bytes = snapshot::encode_store(&store);
         assert_eq!(snapshot::decode_store(&bytes).unwrap(), store);
 
-        // v2: random hyperparameter headers round-trip bit-for-bit too.
+        // v3: random hyperparameter headers round-trip bit-for-bit too,
+        // with and without the optional table section.
         let meta = snapshot::SnapshotMeta {
             model: format!("AliasLDA{}", rng.below(10)),
             k: rng.below(2000) as u32,
@@ -411,6 +412,16 @@ fn prop_snapshot_roundtrip_random() {
             n_servers: 1 + rng.below(16) as u32,
             vnodes: 1 + rng.below(256) as u32,
             iterations: rng.next_u64() % 1_000,
+            run_id: rng.next_u64(),
+            tables: if rng.coin(0.5) {
+                Some(snapshot::TableHyper {
+                    discount: rng.f64(),
+                    concentration: rng.f64() * 20.0,
+                    root: rng.f64() * 2.0,
+                })
+            } else {
+                None
+            },
         };
         let bytes = snapshot::encode_store_meta(&store, &meta);
         let (meta2, store2) = snapshot::decode_store_meta(&bytes).unwrap();

@@ -1,13 +1,15 @@
-//! Integration of the training → snapshot → serving pipeline: a trained
-//! snapshot loads into the serving layer, fold-in queries return sane
-//! topic mixtures, and scoring held-out documents with the *served*
-//! mixtures lands within 10% of the evaluation stack's own perplexity on
-//! the same frozen statistics.
+//! Integration of the training → snapshot → serving pipeline, for every
+//! model family: a trained snapshot loads into the serving layer behind a
+//! [`ServingHandle`], fold-in queries return sane topic mixtures, scoring
+//! held-out documents with the *served* mixtures lands within 10% of the
+//! evaluation stack's own perplexity on the same frozen statistics (LDA,
+//! PDP, and HDP alike), and a hot reload swaps generations under
+//! concurrent load without dropping a single request.
 
-use hplvm::config::TrainConfig;
+use hplvm::config::{ModelKind, TrainConfig};
 use hplvm::coordinator::trainer::Trainer;
 use hplvm::eval::perplexity::{perplexity, score_with_theta};
-use hplvm::serve::{InferenceService, ServeConfig, ServingModel};
+use hplvm::serve::{InferenceService, ServeConfig, ServingHandle, ServingModel};
 use std::sync::Arc;
 
 /// One trained snapshot shared by the assertions below (training on the
@@ -39,18 +41,50 @@ fn serving_cfg() -> TrainConfig {
     cfg
 }
 
-#[test]
-fn served_mixtures_match_eval_perplexity_within_10_percent() {
-    let cfg = serving_cfg();
-    let dir = trained_snapshot("perp", &cfg);
+fn pdp_serving_cfg() -> TrainConfig {
+    let mut cfg = serving_cfg();
+    cfg.model = ModelKind::AliasPdp;
+    cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+    cfg.corpus.n_docs = 300;
+    cfg.iterations = 10;
+    cfg.eval_every = 5;
+    cfg.test_docs = 50;
+    cfg
+}
 
-    let model = Arc::new(ServingModel::load_dir(&dir).expect("snapshot load"));
-    // The v2 header reproduces the training hyperparameters.
+fn hdp_serving_cfg() -> TrainConfig {
+    let mut cfg = serving_cfg();
+    cfg.model = ModelKind::AliasHdp;
+    cfg.params.topics = 16; // truncation
+    cfg.corpus.n_topics = 8;
+    cfg.corpus.n_docs = 300;
+    cfg.iterations = 10;
+    cfg.eval_every = 5;
+    cfg.test_docs = 50;
+    cfg
+}
+
+/// The family-parity core: train, load through the handle, answer every
+/// held-out document through the micro-batching service, and require the
+/// served mixtures to score within `tol` of the evaluation stack's EM
+/// fold-in on the same frozen statistics.
+fn assert_served_matches_eval(tag: &str, cfg: &TrainConfig, tol: f64) {
+    let dir = trained_snapshot(tag, cfg);
+
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let model = handle.model();
+    // The snapshot header reproduces the training hyperparameters and
+    // records the family.
     assert_eq!(model.k(), cfg.params.topics);
     assert_eq!(model.meta().model, cfg.model.name());
+    assert_eq!(model.kind().family_name(), cfg.model.family_name());
     assert_eq!(model.meta().alpha.to_bits(), cfg.params.alpha.to_bits());
     assert_eq!(model.meta().beta.to_bits(), cfg.params.beta.to_bits());
-    assert_eq!(model.vocab(), cfg.corpus.vocab_size);
+    assert_eq!(
+        model.meta().tables.is_some(),
+        cfg.model.has_table_constraints(),
+        "table-constrained families must snapshot their hyperparameters"
+    );
 
     // The held-out documents: the split is deterministic in the corpus
     // seed, so regenerating reproduces exactly what training held out.
@@ -65,7 +99,7 @@ fn served_mixtures_match_eval_perplexity_within_10_percent() {
     // few extra sweeps of averaging narrows the estimator gap between
     // the Gibbs fold-in and the baseline's EM fold-in.
     let svc = InferenceService::spawn(
-        model.clone(),
+        handle.clone(),
         ServeConfig {
             infer: hplvm::serve::InferConfig {
                 burnin: 5,
@@ -75,24 +109,50 @@ fn served_mixtures_match_eval_perplexity_within_10_percent() {
             ..Default::default()
         },
     );
+    let mut generations = Vec::new();
     let thetas: Vec<Vec<f64>> = test
         .docs
         .iter()
-        .map(|d| svc.infer(d.tokens.clone()).expect("service closed").theta)
+        .map(|d| {
+            let res = svc.infer(d.tokens.clone()).expect("service closed");
+            generations.push(res.generation);
+            res.theta
+        })
         .collect();
     let served = score_with_theta(&*model, &test.docs, &thetas);
     svc.shutdown();
+    assert!(
+        generations.iter().all(|&g| g == 1),
+        "no reload happened — every response must carry generation 1"
+    );
 
     assert_eq!(served.tokens, baseline.tokens);
     let rel = (served.perplexity - baseline.perplexity).abs() / baseline.perplexity;
     assert!(
-        rel < 0.10,
-        "served perplexity {:.2} vs eval {:.2} (rel {:.3})",
+        rel < tol,
+        "[{tag}] served perplexity {:.2} vs eval {:.2} (rel {:.3})",
         served.perplexity,
         baseline.perplexity,
         rel
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn served_mixtures_match_eval_perplexity_within_10_percent() {
+    assert_served_matches_eval("perp", &serving_cfg(), 0.10);
+}
+
+/// Satellite: PDP serving parity — same statistical tolerance as LDA.
+#[test]
+fn pdp_served_mixtures_match_eval_perplexity() {
+    assert_served_matches_eval("pdp", &pdp_serving_cfg(), 0.10);
+}
+
+/// Satellite: HDP serving parity — same statistical tolerance as LDA.
+#[test]
+fn hdp_served_mixtures_match_eval_perplexity() {
+    assert_served_matches_eval("hdp", &hdp_serving_cfg(), 0.10);
 }
 
 #[test]
@@ -109,8 +169,7 @@ fn snapshot_dir_round_trips_through_serving_layer() {
         .unwrap()
         .flatten()
         .filter(|e| {
-            let n = e.file_name().to_string_lossy().into_owned();
-            n.starts_with("server_slot") && n.ends_with(".snap")
+            hplvm::ps::snapshot::is_slot_snapshot_name(&e.file_name().to_string_lossy())
         })
         .collect();
     assert_eq!(slots.len(), cfg.cluster.n_servers());
@@ -118,6 +177,16 @@ fn snapshot_dir_round_trips_through_serving_layer() {
     let model = ServingModel::load_dir(&dir).expect("snapshot load");
     assert!(model.total_tokens() > 0, "frozen statistics are empty");
     assert_eq!(model.meta().n_servers as usize, cfg.cluster.n_servers());
+
+    // The --model contradiction check: same family passes, cross-family
+    // errors out with a message naming both sides.
+    assert!(model.ensure_family(ModelKind::AliasLda).is_ok());
+    assert!(model.ensure_family(ModelKind::YahooLda).is_ok());
+    let msg = match model.ensure_family(ModelKind::AliasHdp) {
+        Ok(()) => panic!("HDP against an LDA snapshot must be refused"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("AliasHDP") && msg.contains("AliasLDA"), "{msg}");
 
     // Fold-in against the loaded model produces a proper distribution
     // that beats the uniform mixture on its own document.
@@ -150,6 +219,121 @@ fn snapshot_dir_round_trips_through_serving_layer() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Legacy-format compatibility: hand-written v2 slot files (no table
+/// section) still load and serve LDA, exactly as before the v3 format.
+#[test]
+fn v2_lda_snapshots_still_serve() {
+    use hplvm::ps::snapshot::{self, SnapshotMeta, Store};
+    let dir = std::env::temp_dir().join(format!("hplvm_serve_v2_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut store = Store::new();
+    for w in 0..10u32 {
+        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] });
+    }
+    let meta = SnapshotMeta {
+        model: "AliasLDA".to_string(),
+        k: 2,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: 10,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0,
+        tables: None,
+    };
+    let bytes = snapshot::encode_store_meta_v2(&store, &meta);
+    snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+
+    let handle = ServingHandle::load_dir(&dir).expect("v2 snapshot must load");
+    let model = handle.model();
+    assert_eq!(model.kind(), ModelKind::AliasLda);
+    assert!(model.meta().tables.is_none());
+    let mut rng = hplvm::util::rng::Rng::new(3);
+    let res = hplvm::serve::infer_doc(
+        &model,
+        &[0, 1, 2, 3],
+        &hplvm::serve::InferConfig::default(),
+        &mut rng,
+    );
+    assert_eq!(res.top_topics(1)[0].0, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: hot reload under concurrent load — zero dropped/errored
+/// requests across a mid-stream `reload()`, and post-swap responses
+/// carry the new generation.
+#[test]
+fn hot_reload_under_load_drops_nothing_and_bumps_generation() {
+    let mut cfg = serving_cfg();
+    cfg.corpus.n_docs = 200;
+    cfg.iterations = 6;
+    cfg.eval_every = 3;
+    cfg.test_docs = 30;
+    let dir = trained_snapshot("reload", &cfg);
+
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    assert_eq!(handle.generation(), 1);
+    let svc = Arc::new(InferenceService::spawn(
+        handle.clone(),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            ..Default::default()
+        },
+    ));
+
+    let vocab = handle.model().vocab();
+    let n_threads = 4usize;
+    let per_thread = 30usize;
+    let mut joins = Vec::new();
+    for th in 0..n_threads {
+        let svc = svc.clone();
+        let queries = hplvm::serve::synth_queries(vocab, per_thread, 16.0, 90 + th as u64);
+        joins.push(std::thread::spawn(move || {
+            let mut gens = Vec::with_capacity(per_thread);
+            for doc in queries {
+                let res = svc
+                    .infer(doc)
+                    .expect("request dropped/errored across reload");
+                assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                gens.push(res.generation);
+            }
+            gens
+        }));
+    }
+
+    // Mid-stream: swap in the next generation from the same directory
+    // (contents are identical — the point is the swap mechanics).
+    let swapped = handle.reload(&dir).expect("reload failed");
+    assert_eq!(swapped, 2);
+
+    let mut all_gens = Vec::new();
+    for j in joins {
+        all_gens.extend(j.join().expect("query thread panicked"));
+    }
+    assert_eq!(all_gens.len(), n_threads * per_thread, "every request answered");
+    assert!(
+        all_gens.iter().all(|&g| g == 1 || g == 2),
+        "responses must come from generation 1 or 2: {all_gens:?}"
+    );
+
+    // Post-swap: a request submitted after reload() returned must be
+    // served by the new generation.
+    let res = svc
+        .infer(hplvm::serve::synth_queries(vocab, 1, 16.0, 7).remove(0))
+        .expect("service closed");
+    assert_eq!(res.generation, 2, "post-swap response on the old generation");
+    assert_eq!(
+        svc.stats().served,
+        (n_threads * per_thread + 1) as u64,
+        "served-counter mismatch — something was dropped"
+    );
+    drop(svc); // Drop closes the queue and joins the pool.
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn service_is_deterministic_and_batch_shape_invariant() {
     let mut cfg = serving_cfg();
@@ -158,13 +342,13 @@ fn service_is_deterministic_and_batch_shape_invariant() {
     cfg.eval_every = 5;
     cfg.test_docs = 20;
     let dir = trained_snapshot("det", &cfg);
-    let model = Arc::new(ServingModel::load_dir(&dir).expect("snapshot load"));
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
 
     let (corpus, _) = cfg.corpus.generate();
     let (_, test) = corpus.split_test(cfg.test_docs);
     let run = |workers: usize, batch: usize| -> Vec<Vec<f64>> {
         let svc = InferenceService::spawn(
-            model.clone(),
+            handle.clone(),
             ServeConfig {
                 workers,
                 max_batch: batch,
