@@ -1,0 +1,172 @@
+//! Deterministic sampler-throughput + wire-cost bench. Prints the usual
+//! table AND writes `BENCH_sampler.json` at the repository root so the
+//! repo carries a machine-readable perf trajectory across PRs:
+//!
+//! * tokens/sec for each of the four samplers (small fixed config,
+//!   seeded corpus, warm sweeps — same recipe every run), and
+//! * wire bytes per end-of-iteration sync at K=256 as `SimNet` accounts
+//!   them, next to the dense-era cost of the identical sync.
+//!
+//! Regenerate with `cargo bench --bench sampler_json`.
+
+use hplvm::bench;
+use hplvm::corpus::generator::{CorpusConfig, GenerativeModel};
+use hplvm::ps::msg::Payload;
+use hplvm::ps::network::{NetConfig, SimNet};
+use hplvm::sampler::alias_lda::AliasLda;
+use hplvm::sampler::hdp::AliasHdp;
+use hplvm::sampler::pdp::AliasPdp;
+use hplvm::sampler::sparse_lda::SparseLda;
+use hplvm::sampler::DocSampler;
+use hplvm::util::json::Json;
+use hplvm::util::rng::Rng;
+
+const N_DOCS: usize = 300;
+const VOCAB: usize = 800;
+const K: usize = 64;
+const DOC_LEN: f64 = 40.0;
+
+fn sweep<S: DocSampler>(s: &mut S, n_docs: usize, rng: &mut Rng) {
+    for d in 0..n_docs {
+        s.sample_doc(d, rng);
+    }
+}
+
+fn bench_model<S: DocSampler>(
+    name: &str,
+    s: &mut S,
+    n_docs: usize,
+    tokens: u64,
+    rng: &mut Rng,
+) -> bench::BenchResult {
+    bench::time_units(name, 2, 3, tokens as f64, || {
+        // The borrow dance: time_units takes FnMut, rng lives outside.
+        sweep(s, n_docs, rng);
+    })
+}
+
+fn main() {
+    println!("# Sampler throughput + sparse-wire cost (BENCH_sampler.json)");
+
+    let (lda_corpus, _) = CorpusConfig {
+        n_docs: N_DOCS,
+        vocab_size: VOCAB,
+        n_topics: 16,
+        doc_len_mean: DOC_LEN,
+        seed: 7,
+        ..Default::default()
+    }
+    .generate();
+    let (pyp_corpus, _) = CorpusConfig {
+        n_docs: N_DOCS,
+        vocab_size: VOCAB,
+        n_topics: 16,
+        doc_len_mean: DOC_LEN,
+        model: GenerativeModel::Pyp,
+        seed: 7,
+        ..Default::default()
+    }
+    .generate();
+    let lda_tokens: u64 = lda_corpus.docs.iter().map(|d| d.tokens.len() as u64).sum();
+    let pyp_tokens: u64 = pyp_corpus.docs.iter().map(|d| d.tokens.len() as u64).sum();
+
+    bench::section(&format!(
+        "tokens/sec — {N_DOCS} docs, V={VOCAB}, K={K}, warm sweeps"
+    ));
+    let mut rng = Rng::new(1);
+    let mut alias = AliasLda::new(lda_corpus.docs.clone(), VOCAB, K, 0.1, 0.01, &mut rng);
+    let r_alias = bench_model("AliasLDA", &mut alias, N_DOCS, lda_tokens, &mut rng);
+    println!("{}", r_alias.row());
+
+    let mut rng = Rng::new(2);
+    let mut yahoo = SparseLda::new(lda_corpus.docs.clone(), VOCAB, K, 0.1, 0.01, &mut rng);
+    let r_yahoo = bench_model("SparseLDA", &mut yahoo, N_DOCS, lda_tokens, &mut rng);
+    println!("{}", r_yahoo.row());
+
+    let mut rng = Rng::new(3);
+    let mut pdp = AliasPdp::new(pyp_corpus.docs, VOCAB, K, 0.1, 0.1, 10.0, 0.5, &mut rng);
+    let r_pdp = bench_model("AliasPDP", &mut pdp, N_DOCS, pyp_tokens, &mut rng);
+    println!("{}", r_pdp.row());
+
+    let mut rng = Rng::new(4);
+    let mut hdp = AliasHdp::new(lda_corpus.docs, VOCAB, K * 2, 1.0, 1.0, 0.01, &mut rng);
+    let r_hdp = bench_model("AliasHDP", &mut hdp, N_DOCS, lda_tokens, &mut rng);
+    println!("{}", r_hdp.row());
+
+    // Wire bytes per end-of-iteration sync at K=256 (the acceptance tier):
+    // one warm sweep's drained deltas through SimNet's byte accounting,
+    // vs the dense-era encoding of the very same rows.
+    bench::section("wire bytes per end-of-iteration sync (K=256)");
+    let wire_k = 256usize;
+    let (c, _) = CorpusConfig {
+        n_docs: 120,
+        vocab_size: 500,
+        n_topics: 16,
+        doc_len_mean: 30.0,
+        seed: 11,
+        ..Default::default()
+    }
+    .generate();
+    let mut rng = Rng::new(42);
+    let mut s = AliasLda::new(c.docs, 500, wire_k, 0.1, 0.01, &mut rng);
+    let _ = s.nwt.drain_deltas(); // discard the init burst
+    sweep(&mut s, 120, &mut rng);
+    let rows = s.nwt.drain_deltas();
+    let n_rows = rows.len() as u64;
+    let dense_bytes = 16 + n_rows * (4 + 5 + 4 * wire_k as u64);
+    let net = SimNet::new(2, NetConfig::default());
+    net.send(0, 1, Payload::Push { matrix: 0, rows });
+    let (_, _, _, sparse_bytes) = net.stats();
+    let reduction = dense_bytes as f64 / sparse_bytes.max(1) as f64;
+    bench::table(
+        &["rows", "sparse bytes", "dense-era bytes", "reduction"],
+        &[vec![
+            n_rows.to_string(),
+            sparse_bytes.to_string(),
+            dense_bytes.to_string(),
+            format!("{reduction:.1}x"),
+        ]],
+    );
+
+    // Machine-readable trajectory at the repository root.
+    let json = Json::obj(vec![
+        ("bench", Json::Str("sampler_json".into())),
+        (
+            "regenerate",
+            Json::Str("cargo bench --bench sampler_json".into()),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_docs", Json::Num(N_DOCS as f64)),
+                ("vocab", Json::Num(VOCAB as f64)),
+                ("k", Json::Num(K as f64)),
+                ("doc_len_mean", Json::Num(DOC_LEN)),
+            ]),
+        ),
+        (
+            "tokens_per_sec",
+            Json::obj(vec![
+                ("AliasLDA", Json::Num(r_alias.throughput())),
+                ("SparseLDA", Json::Num(r_yahoo.throughput())),
+                ("AliasPDP", Json::Num(r_pdp.throughput())),
+                ("AliasHDP", Json::Num(r_hdp.throughput())),
+            ]),
+        ),
+        (
+            "wire_sync",
+            Json::obj(vec![
+                ("k", Json::Num(wire_k as f64)),
+                ("rows", Json::Num(n_rows as f64)),
+                ("sparse_bytes", Json::Num(sparse_bytes as f64)),
+                ("dense_era_bytes", Json::Num(dense_bytes as f64)),
+                ("reduction", Json::Num(reduction)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampler.json");
+    match std::fs::write(path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

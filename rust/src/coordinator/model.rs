@@ -136,26 +136,27 @@ impl ModelSampler {
         }
     }
 
-    /// Fold pulled rows into a replica + invalidate stale caches (§3.3).
-    pub fn apply_rows(&mut self, matrix: u8, rows: &[(u32, Box<[i32]>)]) {
+    /// Fold pulled rows (sparse or dense wire form) into a replica +
+    /// invalidate stale caches (§3.3).
+    pub fn apply_rows(&mut self, matrix: u8, rows: &[(u32, crate::ps::msg::RowData)]) {
         match self {
             ModelSampler::Yahoo(s) => {
                 for (w, row) in rows {
-                    s.nwt.apply_pull(*w, row);
+                    s.nwt.apply_pull_row(*w, row);
                     s.refresh_word(*w);
                 }
             }
             ModelSampler::Alias(s) => {
                 for (w, row) in rows {
-                    s.nwt.apply_pull(*w, row);
+                    s.nwt.apply_pull_row(*w, row);
                     s.invalidate_word(*w);
                 }
             }
             ModelSampler::Pdp(s) => {
                 for (w, row) in rows {
                     match matrix {
-                        MATRIX_PRIMARY => s.m.apply_pull(*w, row),
-                        _ => s.s.apply_pull(*w, row),
+                        MATRIX_PRIMARY => s.m.apply_pull_row(*w, row),
+                        _ => s.s.apply_pull_row(*w, row),
                     }
                     s.invalidate_word(*w);
                 }
@@ -164,11 +165,11 @@ impl ModelSampler {
                 for (w, row) in rows {
                     match matrix {
                         MATRIX_PRIMARY => {
-                            s.nwt.apply_pull(*w, row);
+                            s.nwt.apply_pull_row(*w, row);
                             s.invalidate_word(*w);
                         }
                         _ => {
-                            s.tables.apply_pull(*w, row);
+                            s.tables.apply_pull_row(*w, row);
                             // θ₀ changed for every word's dense proposal.
                             s.invalidate_all();
                         }

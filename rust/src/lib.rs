@@ -23,7 +23,15 @@
 //!   served it.
 //! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
 //!   simulated cluster transport, server group / client groups / scheduler /
-//!   server manager, samplers, projection, metrics, CLI.
+//!   server manager, samplers, projection, metrics, CLI. The train-side
+//!   hot path is sparse end-to-end: [`sampler::counts::CountMatrix`]
+//!   keeps an `O(k_w)` delta log and an incremental `1/(n_t+β̄)`
+//!   normalizer cache, rows travel as
+//!   [`sampler::counts::RowData`] (sparse below the density break-even,
+//!   dense above; [`ps::msg`] charges real encoded sizes), and the
+//!   per-word alias proposals rebuild in place over pooled buffers
+//!   ([`sampler::alias::AliasBuilder`]) — so a warm sampling sweep costs
+//!   `O(topics actually touched)` per token and allocates nothing.
 //! * **Layer 2 (python/compile, build-time)** — JAX dense-math graphs
 //!   (φ normalization, dense alias proposals, the test-perplexity
 //!   estimator), AOT-lowered to HLO text in `artifacts/`.

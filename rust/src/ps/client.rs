@@ -239,7 +239,7 @@ mod tests {
         assert_eq!(got.len(), 50, "missing pull responses");
         for w in 0..50u32 {
             let row = &got[&w];
-            assert_eq!(row[(w % 4) as usize], (w + 1) as i32, "row {w}");
+            assert_eq!(row.get((w % 4) as usize), (w + 1) as i32, "row {w}");
         }
         group.shutdown();
     }

@@ -8,6 +8,7 @@
 //! other row is sent with probability `uniform_prob`, and unsent rows are
 //! *retained* (their deltas re-queued) for a later push.
 
+use super::msg::RowData;
 use crate::util::rng::Rng;
 
 /// Filter configuration.
@@ -39,19 +40,18 @@ impl Filter {
     }
 
     /// Partition candidate `(word, delta-row)` batches into
-    /// `(send_now, retain)`.
+    /// `(send_now, retain)`. Rows arrive in either wire form; the L1
+    /// priority key reads whichever encoding is present.
     pub fn select(
         &self,
-        mut rows: Vec<(u32, Box<[i32]>)>,
+        mut rows: Vec<(u32, RowData)>,
         rng: &mut Rng,
-    ) -> (Vec<(u32, Box<[i32]>)>, Vec<(u32, Box<[i32]>)>) {
+    ) -> (Vec<(u32, RowData)>, Vec<(u32, RowData)>) {
         if self.magnitude_fraction >= 1.0 || rows.len() <= 1 {
             return (rows, Vec::new());
         }
         // Sort by descending L1 magnitude.
-        rows.sort_by_cached_key(|(_, r)| {
-            std::cmp::Reverse(r.iter().map(|&x| x.unsigned_abs() as u64).sum::<u64>())
-        });
+        rows.sort_by_cached_key(|(_, r)| std::cmp::Reverse(r.l1()));
         let cut = ((rows.len() as f64) * self.magnitude_fraction).ceil() as usize;
         let cut = cut.clamp(1, rows.len());
         let mut send = Vec::with_capacity(cut);
@@ -71,10 +71,10 @@ impl Filter {
 mod tests {
     use super::*;
 
-    fn rows(mags: &[i32]) -> Vec<(u32, Box<[i32]>)> {
+    fn rows(mags: &[i32]) -> Vec<(u32, RowData)> {
         mags.iter()
             .enumerate()
-            .map(|(w, &m)| (w as u32, vec![m, 0, 0].into_boxed_slice()))
+            .map(|(w, &m)| (w as u32, RowData::Dense(vec![m, 0, 0].into_boxed_slice())))
             .collect()
     }
 

@@ -1,17 +1,33 @@
 //! Wire messages of the parameter server.
 //!
 //! Rows are batched (§5.3 "batched communication"): a push/pull carries
-//! whole `K`-wide rows keyed by word id, never individual `(key, value)`
-//! pairs. `matrix` distinguishes the statistics a model shares (LDA: one
-//! matrix `n_tw`; PDP: `m_tw` and `s_tw`; HDP: `n_tw` and root tables).
+//! rows keyed by word id, never individual `(key, value)` pairs. `matrix`
+//! distinguishes the statistics a model shares (LDA: one matrix `n_tw`;
+//! PDP: `m_tw` and `s_tw`; HDP: `n_tw` and root tables).
+//!
+//! ## Sparse wire rows
+//!
+//! Each row travels as a [`RowData`]: `Sparse(Vec<(topic, value)>)` when
+//! few cells are non-zero (the common case — a sync window moves a word's
+//! tokens between `O(k_w)` topics), `Dense(Box<[i32]>)` past the density
+//! break-even (`8·nnz ≥ 4·K`). Push rows carry **deltas**, pull responses
+//! carry **absolute** counts; elided cells are 0 in both readings. The
+//! producer picks the encoding ([`RowData::from_dense_auto`] /
+//! [`crate::sampler::counts::CountMatrix::drain_deltas`]); consumers
+//! accept either, so the formats are interchangeable on the wire and
+//! [`Payload::wire_bytes`] charges each row its real encoded size —
+//! which is what makes the `SimNet` byte metrics reflect the §5.3 claim
+//! that batched communication only pays for what changed.
 
 use std::time::Instant;
+
+pub use crate::sampler::counts::RowData;
 
 /// Node identifier (index into the simulated network's inbox table).
 pub type NodeId = u32;
 
-/// A batched row set: `(word id, K-wide row)`.
-pub type RowBatch = Vec<(u32, Box<[i32]>)>;
+/// A batched row set: `(word id, sparse-or-dense row)`.
+pub type RowBatch = Vec<(u32, RowData)>;
 
 /// Control-plane commands.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -70,11 +86,13 @@ pub enum Payload {
 }
 
 impl Payload {
-    /// Approximate wire size in bytes (for the network-traffic metrics).
+    /// Approximate wire size in bytes (for the network-traffic metrics):
+    /// 16 per message + 4 per word key + each row's encoded size
+    /// ([`RowData::wire_bytes`] — 4 bytes/cell dense, 8 bytes/pair sparse).
     pub fn wire_bytes(&self) -> u64 {
         match self {
             Payload::Push { rows, .. } | Payload::PullResp { rows, .. } => {
-                rows.iter().map(|(_, r)| 4 + 4 * r.len() as u64).sum::<u64>() + 16
+                rows.iter().map(|(_, r)| 4 + r.wire_bytes()).sum::<u64>() + 16
             }
             Payload::PullReq { words, .. } => 16 + 4 * words.len() as u64,
             Payload::Progress { .. } => 32,
@@ -147,8 +165,27 @@ mod tests {
     fn wire_bytes_accounts_rows() {
         let p = Payload::Push {
             matrix: 0,
-            rows: vec![(1, vec![0i32; 10].into()), (2, vec![0i32; 10].into())],
+            rows: vec![
+                (1, RowData::Dense(vec![0i32; 10].into())),
+                (2, RowData::Dense(vec![0i32; 10].into())),
+            ],
         };
-        assert_eq!(p.wire_bytes(), 16 + 2 * (4 + 40));
+        assert_eq!(p.wire_bytes(), 16 + 2 * (4 + 5 + 40));
+    }
+
+    #[test]
+    fn wire_bytes_sparse_rows_are_cheaper() {
+        let k = 256;
+        let dense = Payload::Push {
+            matrix: 0,
+            rows: vec![(1, RowData::Dense(vec![1i32; k].into()))],
+        };
+        let sparse = Payload::Push {
+            matrix: 0,
+            rows: vec![(1, RowData::Sparse(vec![(3, 1), (200, -1)]))],
+        };
+        assert_eq!(dense.wire_bytes(), 16 + 4 + 5 + 4 * k as u64);
+        assert_eq!(sparse.wire_bytes(), 16 + 4 + 5 + 8 * 2);
+        assert!(sparse.wire_bytes() * 2 < dense.wire_bytes());
     }
 }

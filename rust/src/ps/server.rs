@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use super::msg::{Control, NodeId, Payload};
+use super::msg::{Control, NodeId, Payload, RowData};
 use super::network::SimNet;
 use super::ring::Ring;
 use super::snapshot::{self, SnapshotMeta, Store};
@@ -130,16 +130,18 @@ impl ServerNode {
                 Payload::Push { matrix, rows } => {
                     self.stats.pushes.fetch_add(1, Ordering::Relaxed);
                     for (word, delta) in rows {
+                        // Sparse and dense delta rows fold in identically;
+                        // the store row grows to whichever width the
+                        // incoming encoding implies.
+                        let width = self.cfg.row_width.max(delta.min_width());
                         let row = self
                             .store
                             .entry((matrix, word))
-                            .or_insert_with(|| vec![0i32; self.cfg.row_width.max(delta.len())]);
-                        if row.len() < delta.len() {
-                            row.resize(delta.len(), 0);
+                            .or_insert_with(|| vec![0i32; width]);
+                        if row.len() < width {
+                            row.resize(width, 0);
                         }
-                        for (c, d) in row.iter_mut().zip(delta.iter()) {
-                            *c = c.saturating_add(*d);
-                        }
+                        delta.fold_saturating_into(row);
                         self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
                         if let Some(p) = &self.cfg.projection {
                             let n = p.correct(&mut self.store, matrix, word);
@@ -153,15 +155,17 @@ impl ServerNode {
                     req_id,
                 } => {
                     self.stats.pulls.fetch_add(1, Ordering::Relaxed);
-                    let rows: Vec<(u32, Box<[i32]>)> = words
+                    let rows: Vec<(u32, RowData)> = words
                         .into_iter()
                         .map(|w| {
-                            let row = self
-                                .store
-                                .get(&(matrix, w))
-                                .cloned()
-                                .unwrap_or_else(|| vec![0i32; self.cfg.row_width]);
-                            (w, row.into_boxed_slice())
+                            // Absolute rows ship in the cheaper encoding
+                            // too; a never-touched row is an empty sparse
+                            // row (all zeros, ~9 bytes on the wire).
+                            let row = match self.store.get(&(matrix, w)) {
+                                Some(row) => RowData::from_dense_auto(row),
+                                None => RowData::Sparse(Vec::new()),
+                            };
+                            (w, row)
                         })
                         .collect();
                     self.net.send(
@@ -410,7 +414,7 @@ mod tests {
         server: NodeId,
         matrix: u8,
         words: Vec<u32>,
-    ) -> Vec<(u32, Box<[i32]>)> {
+    ) -> Vec<(u32, RowData)> {
         net.send(me, server, Payload::PullReq { matrix, words, req_id: 1 });
         loop {
             let env = net
@@ -441,22 +445,23 @@ mod tests {
             server,
             Payload::Push {
                 matrix: 0,
-                rows: vec![(7, vec![1, 2, 3, 4].into())],
+                rows: vec![(7, RowData::Dense(vec![1, 2, 3, 4].into()))],
             },
         );
+        // Mixed encodings must aggregate identically.
         net.send(
             me,
             server,
             Payload::Push {
                 matrix: 0,
-                rows: vec![(7, vec![1, 0, 0, -1].into())],
+                rows: vec![(7, RowData::Sparse(vec![(0, 1), (3, -1)]))],
             },
         );
         // Eventual: give the server a moment, then pull.
         std::thread::sleep(Duration::from_millis(30));
         let rows = pull(&net, me, server, 0, vec![7, 8]);
-        assert_eq!(&*rows[0].1, &[2, 2, 3, 3]);
-        assert_eq!(&*rows[1].1, &[0, 0, 0, 0], "unknown rows pull as zeros");
+        assert_eq!(&*rows[0].1.to_dense(4), &[2, 2, 3, 3]);
+        assert_eq!(&*rows[1].1.to_dense(4), &[0, 0, 0, 0], "unknown rows pull as zeros");
         group.shutdown();
     }
 
@@ -475,12 +480,12 @@ mod tests {
         );
         let server = group.node_for_slot(0);
         for _ in 0..10 {
-            net.send(a, server, Payload::Push { matrix: 0, rows: vec![(1, vec![1, 0].into())] });
-            net.send(b, server, Payload::Push { matrix: 0, rows: vec![(1, vec![0, 1].into())] });
+            net.send(a, server, Payload::Push { matrix: 0, rows: vec![(1, RowData::Sparse(vec![(0, 1)]))] });
+            net.send(b, server, Payload::Push { matrix: 0, rows: vec![(1, RowData::Sparse(vec![(1, 1)]))] });
         }
         std::thread::sleep(Duration::from_millis(50));
         let rows = pull(&net, a, server, 0, vec![1]);
-        assert_eq!(&*rows[0].1, &[10, 10]);
+        assert_eq!(&*rows[0].1.to_dense(2), &[10, 10]);
         group.shutdown();
     }
 
@@ -502,7 +507,7 @@ mod tests {
             },
         );
         let old_node = group.node_for_slot(0);
-        net.send(me, old_node, Payload::Push { matrix: 0, rows: vec![(3, vec![5, 7].into())] });
+        net.send(me, old_node, Payload::Push { matrix: 0, rows: vec![(3, RowData::Dense(vec![5, 7].into()))] });
         // Wait for at least one snapshot.
         std::thread::sleep(Duration::from_millis(120));
         group.kill_slot(0);
@@ -518,7 +523,7 @@ mod tests {
         assert_ne!(new_node, old_node, "failover never happened");
         assert!(!group.frozen.load(Ordering::SeqCst), "must thaw after failover");
         let rows = pull(&net, me, new_node, 0, vec![3]);
-        assert_eq!(&*rows[0].1, &[5, 7], "snapshot state lost in failover");
+        assert_eq!(&*rows[0].1.to_dense(2), &[5, 7], "snapshot state lost in failover");
         group.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -20,50 +20,92 @@ pub struct AliasTable {
     total: f64,
 }
 
-impl AliasTable {
-    /// Build from (possibly unnormalized) non-negative weights. `O(l)`.
+/// Reusable scratch for allocation-free [`AliasTable`] rebuilds: the
+/// scaled-weight buffer and Vose's two work stacks. One builder serves
+/// any number of tables (the samplers keep one per shard and rebuild
+/// each word's proposal in place — §3.3's steady-state rebuilds then
+/// allocate nothing).
+#[derive(Clone, Debug, Default)]
+pub struct AliasBuilder {
+    scaled: Vec<f64>,
+    small: Vec<u32>,
+    large: Vec<u32>,
+}
+
+impl AliasBuilder {
+    /// Empty builder (buffers grow to the first build's support size).
+    pub fn new() -> AliasBuilder {
+        AliasBuilder::default()
+    }
+
+    /// Rebuild `table` in place from (possibly unnormalized) non-negative
+    /// weights. `O(l)`, reusing `table`'s and the builder's buffers.
     ///
     /// Zero-weight outcomes are representable and will never be drawn
     /// (unless *all* weights are zero, in which case the table degenerates
     /// to uniform — a deliberate choice so samplers never panic on an
     /// all-zero transient state caused by relaxed consistency).
-    pub fn build(weights: &[f64]) -> AliasTable {
+    pub fn build_into(&mut self, table: &mut AliasTable, weights: &[f64]) {
         let n = weights.len();
         assert!(n > 0, "alias table over empty support");
+        table.prob.clear();
+        table.alias.clear();
         let total: f64 = weights.iter().sum();
         if total <= 0.0 || !total.is_finite() {
-            return AliasTable {
-                prob: vec![1.0; n],
-                alias: (0..n as u32).collect(),
-                total: 0.0,
-            };
+            table.prob.resize(n, 1.0);
+            table.alias.extend(0..n as u32);
+            table.total = 0.0;
+            return;
         }
         let scale = n as f64 / total;
-        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        self.scaled.clear();
+        self.scaled.extend(weights.iter().map(|&w| w * scale));
         // Vose's two-stack partition.
-        let mut small: Vec<u32> = Vec::with_capacity(n);
-        let mut large: Vec<u32> = Vec::with_capacity(n);
-        for (i, &p) in scaled.iter().enumerate() {
+        self.small.clear();
+        self.large.clear();
+        for (i, &p) in self.scaled.iter().enumerate() {
             if p < 1.0 {
-                small.push(i as u32);
+                self.small.push(i as u32);
             } else {
-                large.push(i as u32);
+                self.large.push(i as u32);
             }
         }
-        let mut prob = vec![1.0f64; n];
-        let mut alias: Vec<u32> = (0..n as u32).collect();
-        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+        table.prob.resize(n, 1.0);
+        table.alias.extend(0..n as u32);
+        let (prob, alias, scaled) = (&mut table.prob, &mut table.alias, &mut self.scaled);
+        while let (Some(s), Some(l)) = (self.small.pop(), self.large.pop()) {
             prob[s as usize] = scaled[s as usize];
             alias[s as usize] = l;
             scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
             if scaled[l as usize] < 1.0 {
-                small.push(l);
+                self.small.push(l);
             } else {
-                large.push(l);
+                self.large.push(l);
             }
         }
         // Numerical leftovers: both stacks drain to threshold 1.
-        AliasTable { prob, alias, total }
+        table.total = total;
+    }
+}
+
+impl AliasTable {
+    /// An empty table awaiting its first [`AliasBuilder::build_into`]
+    /// (sampling it panics; build before use).
+    pub fn empty() -> AliasTable {
+        AliasTable {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            total: 0.0,
+        }
+    }
+
+    /// Build from (possibly unnormalized) non-negative weights. `O(l)`.
+    /// One-shot convenience over [`AliasBuilder::build_into`]; hot paths
+    /// should hold a builder and rebuild in place instead.
+    pub fn build(weights: &[f64]) -> AliasTable {
+        let mut t = AliasTable::empty();
+        AliasBuilder::new().build_into(&mut t, weights);
+        t
     }
 
     /// Number of outcomes.
@@ -160,6 +202,28 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(t.sample(&mut rng), 0);
         }
+    }
+
+    #[test]
+    fn build_into_reuse_matches_fresh_build() {
+        let mut builder = AliasBuilder::new();
+        let mut table = AliasTable::empty();
+        // Rebuild the same table across different supports and sizes; each
+        // rebuild must behave exactly like a fresh build.
+        for (seed, n) in [(1u64, 16usize), (2, 64), (3, 8), (4, 64)] {
+            let mut rng = Rng::new(seed);
+            let w: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();
+            builder.build_into(&mut table, &w);
+            let fresh = AliasTable::build(&w);
+            assert_eq!(table.len(), n);
+            assert_eq!(table.prob, fresh.prob);
+            assert_eq!(table.alias, fresh.alias);
+            assert_eq!(table.total(), fresh.total());
+        }
+        // Degenerate all-zero rebuild resets cleanly too.
+        builder.build_into(&mut table, &[0.0; 5]);
+        assert_eq!(table.total(), 0.0);
+        assert_eq!(table.len(), 5);
     }
 
     #[test]

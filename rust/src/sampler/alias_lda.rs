@@ -17,7 +17,7 @@
 //! (§3.3: "whenever we receive a global parameter update ... recompute the
 //! proposal distribution").
 
-use super::alias::AliasTable;
+use super::alias::{AliasBuilder, AliasTable};
 use super::counts::CountMatrix;
 use super::doc_state::DocState;
 use super::mh::mh_chain;
@@ -27,14 +27,28 @@ use crate::util::rng::Rng;
 
 /// Stale per-word dense proposal: alias table + the weights it was built
 /// from (needed to evaluate `q(i)` in the MH ratio) + a rebuild budget.
+/// Allocated once per word, then rebuilt **in place** (table, `qw`, and
+/// the shared [`AliasBuilder`] scratch are all reused), so steady-state
+/// rebuilds are allocation-free.
 struct WordProposal {
     table: AliasTable,
     /// Stale dense weights q_w(t) = α·(n_tw+β)/(n_t+β̄).
     qw: Box<[f64]>,
     /// Σ_t qw(t).
     qsum: f64,
-    /// Draws remaining before a rebuild.
+    /// Draws remaining before a rebuild (0 ⇒ stale, rebuild before use).
     budget: u32,
+}
+
+impl WordProposal {
+    fn empty(len: usize) -> WordProposal {
+        WordProposal {
+            table: AliasTable::empty(),
+            qw: vec![0.0; len].into_boxed_slice(),
+            qsum: 0.0,
+            budget: 0,
+        }
+    }
 }
 
 /// The AliasLDA sampler.
@@ -52,6 +66,7 @@ pub struct AliasLda {
     /// Shared word-topic counts (replica synced via the parameter server).
     pub nwt: CountMatrix,
     proposals: Vec<Option<WordProposal>>,
+    alias_builder: AliasBuilder,
     /// Diagnostics: MH proposals / acceptances since construction.
     pub mh_proposed: u64,
     /// Diagnostics: accepted MH moves.
@@ -94,15 +109,20 @@ impl AliasLda {
             state: DocState::new(docs.len()),
             nwt: CountMatrix::new(vocab, k),
             proposals: (0..vocab).map(|_| None).collect(),
+            alias_builder: AliasBuilder::new(),
             mh_proposed: 0,
             mh_accepted: 0,
             scratch_topics: Vec::with_capacity(64),
             scratch_weights: Vec::with_capacity(64),
             docs,
         };
-        for d in 0..s.docs.len() {
-            let tokens = s.docs[d].tokens.clone();
-            s.state.z[d] = tokens
+        s.nwt.set_smoothing(s.beta_bar);
+        // Iterate the documents out-of-body so the init pass can mutate
+        // the statistics without cloning every token vector.
+        let docs = std::mem::take(&mut s.docs);
+        for (d, doc) in docs.iter().enumerate() {
+            s.state.z[d] = doc
+                .tokens
                 .iter()
                 .enumerate()
                 .map(|(i, &w)| {
@@ -116,6 +136,7 @@ impl AliasLda {
                 })
                 .collect();
         }
+        s.docs = docs;
         s
     }
 
@@ -125,35 +146,40 @@ impl AliasLda {
     }
 
     /// Build (or rebuild) the stale dense proposal for word `w` from the
-    /// *current* replica. `O(K)`.
+    /// *current* replica. `O(K)`, allocation-free after the word's first
+    /// build (buffers are pooled and rebuilt in place).
     fn rebuild_proposal(&mut self, w: u32) {
-        let mut qw = Vec::with_capacity(self.k);
+        let mut p = self.proposals[w as usize]
+            .take()
+            .unwrap_or_else(|| WordProposal::empty(self.k));
         let row = self.nwt.row(w);
+        let mut qsum = 0.0;
         for t in 0..self.k {
             let nwt = row.map_or(0, |r| r[t]).max(0) as f64;
-            qw.push(self.alpha * (nwt + self.beta) / self.denom(t));
+            let v = self.alpha * (nwt + self.beta) * self.nwt.inv_denom(t);
+            p.qw[t] = v;
+            qsum += v;
         }
-        let qsum: f64 = qw.iter().sum();
-        let table = AliasTable::build(&qw);
-        self.proposals[w as usize] = Some(WordProposal {
-            table,
-            qw: qw.into_boxed_slice(),
-            qsum,
-            // Amortize the O(K) build over K draws → O(1) per draw.
-            budget: self.k as u32,
-        });
+        p.qsum = qsum;
+        self.alias_builder.build_into(&mut p.table, &p.qw);
+        // Amortize the O(K) build over K draws → O(1) per draw.
+        p.budget = self.k as u32;
+        self.proposals[w as usize] = Some(p);
     }
 
-    /// Drop the stale proposal for `w` — called by the sync layer after a
-    /// pull rewrites the row (§3.3).
+    /// Mark the stale proposal for `w` for rebuild — called by the sync
+    /// layer after a pull rewrites the row (§3.3). Buffers are kept for
+    /// the rebuild.
     pub fn invalidate_word(&mut self, w: u32) {
-        self.proposals[w as usize] = None;
+        if let Some(p) = self.proposals[w as usize].as_mut() {
+            p.budget = 0;
+        }
     }
 
-    /// Drop all stale proposals (bulk sync).
+    /// Mark all stale proposals for rebuild (bulk sync).
     pub fn invalidate_all(&mut self) {
-        for p in self.proposals.iter_mut() {
-            *p = None;
+        for p in self.proposals.iter_mut().flatten() {
+            p.budget = 0;
         }
     }
 
@@ -185,14 +211,16 @@ impl AliasLda {
 
         // Sparse component: exact, recomputed fresh each token. The word
         // row is borrowed ONCE per token — `get` per topic would re-deref
-        // the row Option every call (§Perf: +25% at K=1600).
+        // the row Option every call (§Perf: +25% at K=1600) — and the
+        // denominator comes from the incremental 1/(n_t+β̄) cache, so the
+        // inner loop multiplies instead of divides.
         self.scratch_topics.clear();
         self.scratch_weights.clear();
         let mut sparse_sum = 0.0;
         let wrow = self.nwt.row(w);
         for (t, c) in self.state.n_dt[d].iter() {
             let nwt = wrow.map_or(0, |r| r[t as usize]).max(0) as f64;
-            let wgt = c as f64 * (nwt + self.beta) / self.denom(t as usize);
+            let wgt = c as f64 * (nwt + self.beta) * self.nwt.inv_denom(t as usize);
             self.scratch_topics.push(t);
             self.scratch_weights.push(wgt);
             sparse_sum += wgt;
@@ -208,18 +236,16 @@ impl AliasLda {
         let nwt_m = &self.nwt;
         let alpha = self.alpha;
         let beta = self.beta;
-        let beta_bar = self.beta_bar;
-        let denom = |t: usize| (nwt_m.total(t) as f64).max(0.0) + beta_bar;
         let q_of = |t: usize| {
             let ndt = state.n_dt[d].get(t as u32) as f64;
             let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
-            let sparse = ndt * (nwt + beta) / denom(t);
+            let sparse = ndt * (nwt + beta) * nwt_m.inv_denom(t);
             sparse + proposals[w as usize].as_ref().map_or(0.0, |p| p.qw[t])
         };
         let p_of = |t: usize| {
             let ndt = state.n_dt[d].get(t as u32) as f64;
             let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
-            (ndt + alpha) * (nwt + beta) / denom(t)
+            (ndt + alpha) * (nwt + beta) * nwt_m.inv_denom(t)
         };
 
         let mut draws = 0u32;

@@ -1,4 +1,4 @@
-//! Shared sufficient-statistics matrices.
+//! Shared sufficient-statistics matrices — the **sparse hot path**.
 //!
 //! A [`CountMatrix`] is a client's local replica of one shared statistic
 //! (LDA: `n_tw`; PDP: `m_tw` and `s_tw`; HDP adds table counts). Rows are
@@ -7,23 +7,230 @@
 //! that the parameter-server client drains into batched row pushes (§5.3
 //! "batched communication").
 //!
+//! Three sparsity mechanisms make every per-token operation cost
+//! `O(topics actually touched)` instead of `O(K)`:
+//!
+//! * **Sparse delta log.** A token move touches 2 cells, so the per-word
+//!   delta record is a short unsorted `(topic, ±delta)` list (`DeltaRow`)
+//!   that spills to a dense `K`-wide row only past a density threshold
+//!   (`K/4` distinct topics). `inc` is `O(k_w)` with no `K`-wide
+//!   allocation; a word's record is allocated once and reused across
+//!   drain cycles, so the steady-state token loop allocates nothing.
+//! * **Sparse wire rows.** [`CountMatrix::drain_deltas`] emits [`RowData`]
+//!   — `Sparse(Vec<(topic, value)>)` when `8·nnz < 4·K`, `Dense` otherwise
+//!   — and the same enum carries pull responses, so both push and pull
+//!   traffic pay for the cells that exist, not for `K`
+//!   (see [`crate::ps::msg`] for the wire-size accounting).
+//! * **Incremental normalizers.** Every sampler denominator has the shape
+//!   `n_t + smoothing` (`β̄`, PDP `b`, `γ̄`). The matrix caches
+//!   `inv_denom[t] = 1/(max(n_t,0) + smoothing)` and refreshes it on each
+//!   total change (one division per `inc` instead of one per topic per
+//!   token in the samplers' inner loops). Enable with
+//!   [`CountMatrix::set_smoothing`]; read with [`CountMatrix::inv_denom`].
+//!
 //! The replica-merge rule is the paper's: the server aggregates deltas from
 //! all clients; a pull overwrites the local row with the server value
 //! *plus* any still-unflushed local deltas, so local Gibbs moves are never
-//! lost (eventual consistency, §5.3).
+//! lost (eventual consistency, §5.3). [`CountMatrix::apply_pull`] borrows
+//! the pending delta record in place — no per-pull clone.
 
 use std::collections::HashMap;
 
-/// Client replica of a `V × K` count matrix with per-topic aggregates and
-/// a delta log.
+/// One batched row on the wire: either a full `K`-wide row (dense) or the
+/// non-zero `(topic, value)` cells (sparse, sorted by topic).
+///
+/// For a `Push` the values are **deltas** (unlisted topics moved by 0);
+/// for a `PullResp` they are **absolute** counts (unlisted topics are 0).
+/// Both follow from the same invariant: a sparse row *is* the dense row
+/// with its zero cells elided, so `to_dense` ∘ encode is the identity.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RowData {
+    /// Full-width row (`len == K`).
+    Dense(Box<[i32]>),
+    /// Non-zero cells only, sorted by topic.
+    Sparse(Vec<(u32, i32)>),
+}
+
+impl RowData {
+    /// Encode a dense slice, choosing the smaller wire form: sparse costs
+    /// 8 bytes per non-zero cell, dense 4 per topic.
+    pub fn from_dense_auto(row: &[i32]) -> RowData {
+        let nnz = row.iter().filter(|&&v| v != 0).count();
+        if 8 * nnz < 4 * row.len() {
+            RowData::Sparse(
+                row.iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v != 0)
+                    .map(|(t, &v)| (t as u32, v))
+                    .collect(),
+            )
+        } else {
+            RowData::Dense(row.to_vec().into_boxed_slice())
+        }
+    }
+
+    /// Number of non-zero cells.
+    pub fn nnz(&self) -> usize {
+        match self {
+            RowData::Dense(r) => r.iter().filter(|&&v| v != 0).count(),
+            RowData::Sparse(es) => es.len(),
+        }
+    }
+
+    /// Minimum dense width able to hold this row.
+    pub fn min_width(&self) -> usize {
+        match self {
+            RowData::Dense(r) => r.len(),
+            RowData::Sparse(es) => es.iter().map(|&(t, _)| t as usize + 1).max().unwrap_or(0),
+        }
+    }
+
+    /// Value at `topic` (0 when elided).
+    #[inline]
+    pub fn get(&self, topic: usize) -> i32 {
+        match self {
+            RowData::Dense(r) => r.get(topic).copied().unwrap_or(0),
+            RowData::Sparse(es) => es
+                .iter()
+                .find(|&&(t, _)| t as usize == topic)
+                .map(|&(_, v)| v)
+                .unwrap_or(0),
+        }
+    }
+
+    /// L1 magnitude (the communication filter's priority key).
+    pub fn l1(&self) -> u64 {
+        match self {
+            RowData::Dense(r) => r.iter().map(|&v| v.unsigned_abs() as u64).sum(),
+            RowData::Sparse(es) => es.iter().map(|&(_, v)| v.unsigned_abs() as u64).sum(),
+        }
+    }
+
+    /// Materialize as a `width`-wide dense row. A sparse entry beyond
+    /// `width` is a logic error and panics; a dense row wider than
+    /// `width` is clamped to the first `width` cells.
+    pub fn to_dense(&self, width: usize) -> Box<[i32]> {
+        let mut out = vec![0i32; width];
+        match self {
+            RowData::Dense(r) => out[..r.len().min(width)].copy_from_slice(&r[..r.len().min(width)]),
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    out[t as usize] = v;
+                }
+            }
+        }
+        out.into_boxed_slice()
+    }
+
+    /// Fold this row as **deltas** into `row` with saturating adds (the
+    /// server's push-apply). `row` must already be at least
+    /// [`RowData::min_width`] wide.
+    pub fn fold_saturating_into(&self, row: &mut [i32]) {
+        match self {
+            RowData::Dense(r) => {
+                for (c, d) in row.iter_mut().zip(r.iter()) {
+                    *c = c.saturating_add(*d);
+                }
+            }
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    let c = &mut row[t as usize];
+                    *c = c.saturating_add(v);
+                }
+            }
+        }
+    }
+
+    /// Approximate wire footprint in bytes: 1 tag + 4 length + payload
+    /// (4 bytes per dense cell, 8 per sparse `(topic, value)` pair).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            RowData::Dense(r) => 5 + 4 * r.len() as u64,
+            RowData::Sparse(es) => 5 + 8 * es.len() as u64,
+        }
+    }
+}
+
+/// A word's unflushed deltas: short list first, dense past the spill
+/// threshold. Entries are unsorted; zero deltas are removed eagerly so
+/// the linear probe stays `O(k_w)`.
+#[derive(Clone, Debug)]
+enum DeltaRow {
+    Sparse(Vec<(u32, i32)>),
+    Dense(Box<[i32]>),
+}
+
+impl DeltaRow {
+    fn new(spill: usize) -> DeltaRow {
+        // Pre-size to the spill threshold: the list converts to dense
+        // before it would ever reallocate.
+        DeltaRow::Sparse(Vec::with_capacity(spill))
+    }
+
+    #[inline]
+    fn add(&mut self, topic: usize, delta: i32, k: usize, spill: usize) {
+        match self {
+            DeltaRow::Sparse(v) => {
+                for i in 0..v.len() {
+                    if v[i].0 as usize == topic {
+                        v[i].1 += delta;
+                        if v[i].1 == 0 {
+                            v.swap_remove(i);
+                        }
+                        return;
+                    }
+                }
+                if v.len() >= spill {
+                    // Density threshold crossed: spill to a dense row.
+                    let mut dense = vec![0i32; k].into_boxed_slice();
+                    for &(t, d) in v.iter() {
+                        dense[t as usize] = d;
+                    }
+                    dense[topic] += delta;
+                    *self = DeltaRow::Dense(dense);
+                } else {
+                    v.push((topic as u32, delta));
+                }
+            }
+            DeltaRow::Dense(r) => r[topic] += delta,
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        match self {
+            DeltaRow::Sparse(v) => v.len(),
+            DeltaRow::Dense(r) => r.iter().filter(|&&v| v != 0).count(),
+        }
+    }
+}
+
+#[inline]
+fn inv_of(total: i64, smoothing: f64) -> f64 {
+    1.0 / ((total as f64).max(0.0) + smoothing)
+}
+
+/// Client replica of a `V × K` count matrix with per-topic aggregates, a
+/// sparse delta log, and an incremental normalizer cache.
 #[derive(Clone, Debug)]
 pub struct CountMatrix {
     k: usize,
     rows: Vec<Option<Box<[i32]>>>,
     /// Per-topic aggregate (`n_t` in LDA, `m_t`/`s_t` in PDP).
     totals: Vec<i64>,
-    /// Unflushed local updates per touched row.
-    deltas: HashMap<u32, Box<[i32]>>,
+    /// Normalizer smoothing mass (`β̄`, PDP `b`, `γ̄` — whatever the
+    /// model adds to `n_t` in its denominators). 0 until
+    /// [`CountMatrix::set_smoothing`].
+    smoothing: f64,
+    /// Cached `1/(max(n_t,0) + smoothing)`, refreshed on every total
+    /// change. Meaningless (±inf) until a positive smoothing is set.
+    inv_denom: Vec<f64>,
+    /// Unflushed local updates per touched row. Entries persist (cleared,
+    /// not removed) across drains so the token loop never reallocates.
+    deltas: HashMap<u32, DeltaRow>,
+    /// Sparse→dense spill threshold for delta records.
+    spill: usize,
+    /// Reusable decode buffer for sparse pulls.
+    pull_scratch: Vec<i32>,
 }
 
 impl CountMatrix {
@@ -33,7 +240,11 @@ impl CountMatrix {
             k,
             rows: vec![None; vocab],
             totals: vec![0; k],
+            smoothing: 0.0,
+            inv_denom: vec![f64::INFINITY; k],
             deltas: HashMap::new(),
+            spill: (k / 4).max(4),
+            pull_scratch: Vec::new(),
         }
     }
 
@@ -79,6 +290,31 @@ impl CountMatrix {
         self.totals.iter().sum()
     }
 
+    /// Enable the incremental normalizer cache: `smoothing` is the mass
+    /// the model adds to `n_t` in its denominators (`β̄` for LDA/HDP word
+    /// factors, `b` for the PDP customer denominator, `γ̄` for the PDP
+    /// root). Rebuilds the cache for the current totals.
+    pub fn set_smoothing(&mut self, smoothing: f64) {
+        self.smoothing = smoothing;
+        for t in 0..self.k {
+            self.inv_denom[t] = inv_of(self.totals[t], smoothing);
+        }
+    }
+
+    /// Cached `1/(max(n_t,0) + smoothing)` — the samplers' per-topic
+    /// denominator, maintained incrementally so inner loops multiply
+    /// instead of divide. Requires [`CountMatrix::set_smoothing`] first.
+    #[inline]
+    pub fn inv_denom(&self, topic: usize) -> f64 {
+        self.inv_denom[topic]
+    }
+
+    /// `max(n_t,0) + smoothing` (the uninverted normalizer; cold paths).
+    #[inline]
+    pub fn denom(&self, topic: usize) -> f64 {
+        (self.totals[topic] as f64).max(0.0) + self.smoothing
+    }
+
     fn ensure_row(&mut self, word: u32) -> &mut [i32] {
         let slot = &mut self.rows[word as usize];
         if slot.is_none() {
@@ -87,19 +323,25 @@ impl CountMatrix {
         slot.as_deref_mut().unwrap()
     }
 
-    /// Apply a local Gibbs move: `cell += delta`, mirrored into the delta
-    /// log and the per-topic aggregate.
+    #[inline]
+    fn bump_total(&mut self, topic: usize, delta: i64) {
+        self.totals[topic] += delta;
+        self.inv_denom[topic] = inv_of(self.totals[topic], self.smoothing);
+    }
+
+    /// Apply a local Gibbs move: `cell += delta`, mirrored into the sparse
+    /// delta log and the per-topic aggregate (+ normalizer cache). `O(k_w)`
+    /// and allocation-free once the word's delta record exists.
     #[inline]
     pub fn inc(&mut self, word: u32, topic: usize, delta: i32) {
-        let k = self.k;
         let row = self.ensure_row(word);
         row[topic] += delta;
-        self.totals[topic] += delta as i64;
-        let d = self
-            .deltas
+        self.bump_total(topic, delta as i64);
+        let (k, spill) = (self.k, self.spill);
+        self.deltas
             .entry(word)
-            .or_insert_with(|| vec![0i32; k].into_boxed_slice());
-        d[topic] += delta;
+            .or_insert_with(|| DeltaRow::new(spill))
+            .add(topic, delta, k, spill);
     }
 
     /// Apply a local move *without* recording a delta (used for local-only
@@ -108,51 +350,144 @@ impl CountMatrix {
     pub fn inc_local(&mut self, word: u32, topic: usize, delta: i32) {
         let row = self.ensure_row(word);
         row[topic] += delta;
-        self.totals[topic] += delta as i64;
+        self.bump_total(topic, delta as i64);
     }
 
-    /// Drain the delta log into `(word, row-delta)` batches for pushing.
-    /// Zero rows are dropped.
-    pub fn drain_deltas(&mut self) -> Vec<(u32, Box<[i32]>)> {
-        let mut out: Vec<(u32, Box<[i32]>)> = self
-            .deltas
-            .drain()
-            .filter(|(_, d)| d.iter().any(|&x| x != 0))
-            .collect();
-        out.sort_unstable_by_key(|(w, _)| *w);
+    /// Drain the delta log into `(word, row)` batches for pushing, each
+    /// row in the cheaper wire form (sparse below `8·nnz < 4·K`). Zero
+    /// rows are skipped; records stay allocated for reuse.
+    pub fn drain_deltas(&mut self) -> Vec<(u32, RowData)> {
+        let k = self.k;
+        let mut out: Vec<(u32, RowData)> = Vec::new();
+        for (&w, rec) in self.deltas.iter_mut() {
+            match rec {
+                DeltaRow::Sparse(v) => {
+                    if v.is_empty() {
+                        continue;
+                    }
+                    // Same break-even as `from_dense_auto`: at tiny K a
+                    // sparse record can still be cheaper to ship dense.
+                    if 8 * v.len() < 4 * k {
+                        let mut entries = v.clone();
+                        v.clear();
+                        entries.sort_unstable_by_key(|&(t, _)| t);
+                        out.push((w, RowData::Sparse(entries)));
+                    } else {
+                        let mut dense = vec![0i32; k];
+                        for &(t, d) in v.iter() {
+                            dense[t as usize] = d;
+                        }
+                        v.clear();
+                        out.push((w, RowData::Dense(dense.into_boxed_slice())));
+                    }
+                }
+                DeltaRow::Dense(r) => {
+                    let nnz = r.iter().filter(|&&x| x != 0).count();
+                    if nnz == 0 {
+                        continue;
+                    }
+                    out.push((w, RowData::from_dense_auto(r)));
+                    r.iter_mut().for_each(|x| *x = 0);
+                }
+            }
+        }
+        out.sort_unstable_by_key(|&(w, _)| w);
         out
     }
 
     /// Number of rows currently carrying unflushed deltas.
     pub fn pending_rows(&self) -> usize {
-        self.deltas.len()
+        self.deltas.values().filter(|d| d.nnz() > 0).count()
     }
 
     /// Re-queue a delta row the communication filter chose to retain
     /// (folds into any newer pending deltas; does not touch counts).
-    pub fn requeue_delta(&mut self, word: u32, row: Box<[i32]>) {
-        let k = self.k;
-        let d = self
+    pub fn requeue_delta(&mut self, word: u32, row: RowData) {
+        let (k, spill) = (self.k, self.spill);
+        let rec = self
             .deltas
             .entry(word)
-            .or_insert_with(|| vec![0i32; k].into_boxed_slice());
-        for (acc, v) in d.iter_mut().zip(row.iter()) {
-            *acc += v;
+            .or_insert_with(|| DeltaRow::new(spill));
+        match row {
+            RowData::Sparse(es) => {
+                for (t, v) in es {
+                    rec.add(t as usize, v, k, spill);
+                }
+            }
+            RowData::Dense(r) => {
+                for (t, &v) in r.iter().enumerate() {
+                    if v != 0 {
+                        rec.add(t, v, k, spill);
+                    }
+                }
+            }
         }
     }
 
     /// Absorb a pulled server row: replica := server + unflushed local
-    /// deltas (so local moves aren't erased), aggregates fixed up.
+    /// deltas (so local moves aren't erased), aggregates and normalizers
+    /// fixed up. The pending record is borrowed, never cloned.
     pub fn apply_pull(&mut self, word: u32, server_row: &[i32]) {
         assert_eq!(server_row.len(), self.k);
-        let pending: Option<Box<[i32]>> = self.deltas.get(&word).cloned();
         self.ensure_row(word);
         let row = self.rows[word as usize].as_deref_mut().unwrap();
+        // Overwrite with the server view…
         for (t, cell) in row.iter_mut().enumerate() {
-            let newv = server_row[t] + pending.as_ref().map_or(0, |p| p[t]);
-            let old = *cell;
-            *cell = newv;
-            self.totals[t] += (newv - old) as i64;
+            let d = (server_row[t] - *cell) as i64;
+            if d != 0 {
+                self.totals[t] += d;
+                self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
+            }
+            *cell = server_row[t];
+        }
+        // …then fold the still-unflushed local deltas back in.
+        match self.deltas.get(&word) {
+            Some(DeltaRow::Sparse(es)) => {
+                for &(t, dv) in es {
+                    let t = t as usize;
+                    row[t] += dv;
+                    self.totals[t] += dv as i64;
+                    self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
+                }
+            }
+            Some(DeltaRow::Dense(r)) => {
+                for (t, &dv) in r.iter().enumerate() {
+                    if dv != 0 {
+                        row[t] += dv;
+                        self.totals[t] += dv as i64;
+                        self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
+                    }
+                }
+            }
+            None => {}
+        }
+    }
+
+    /// [`CountMatrix::apply_pull`] for a wire row in either form. Sparse
+    /// (and short dense — a server row born from narrow sparse pushes)
+    /// rows decode through a reusable scratch buffer, padding elided
+    /// cells with 0; no per-pull allocation in steady state.
+    pub fn apply_pull_row(&mut self, word: u32, server_row: &RowData) {
+        match server_row {
+            RowData::Dense(r) if r.len() == self.k => self.apply_pull(word, r),
+            other => {
+                let mut scratch = std::mem::take(&mut self.pull_scratch);
+                scratch.clear();
+                scratch.resize(self.k, 0);
+                match other {
+                    RowData::Dense(r) => {
+                        let n = r.len().min(self.k);
+                        scratch[..n].copy_from_slice(&r[..n]);
+                    }
+                    RowData::Sparse(es) => {
+                        for &(t, v) in es {
+                            scratch[t as usize] = v;
+                        }
+                    }
+                }
+                self.apply_pull(word, &scratch);
+                self.pull_scratch = scratch;
+            }
         }
     }
 
@@ -174,6 +509,9 @@ impl CountMatrix {
             }
         }
         self.totals = totals;
+        for t in 0..self.k {
+            self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
+        }
     }
 
     /// Average number of non-zero topics per allocated word row — the
@@ -221,12 +559,37 @@ mod tests {
         let d = m.drain_deltas();
         assert_eq!(d.len(), 2);
         assert_eq!(d[0].0, 2);
-        assert_eq!(&*d[0].1, &[0, 4, 0]);
+        assert_eq!(&*d[0].1.to_dense(3), &[0, 4, 0]);
         assert_eq!(d[1].0, 5);
-        assert_eq!(&*d[1].1, &[1, 0, -1]);
+        assert_eq!(&*d[1].1.to_dense(3), &[1, 0, -1]);
         assert!(m.drain_deltas().is_empty());
         // Matrix content unaffected by draining.
         assert_eq!(m.get(5, 0), 1);
+    }
+
+    #[test]
+    fn delta_log_spills_to_dense_and_back_to_sparse_wire() {
+        let k = 64;
+        let mut m = CountMatrix::new(4, k);
+        // Touch more than k/4 = 16 distinct topics → record spills dense.
+        for t in 0..20 {
+            m.inc(1, t, 1);
+        }
+        let d = m.drain_deltas();
+        assert_eq!(d.len(), 1);
+        // 20 nnz at k=64: sparse wire (8·20 < 4·64).
+        assert!(matches!(d[0].1, RowData::Sparse(_)));
+        assert_eq!(d[0].1.nnz(), 20);
+        let dense = d[0].1.to_dense(k);
+        for t in 0..k {
+            assert_eq!(dense[t], i32::from(t < 20));
+        }
+        // Nearly-full rows go dense on the wire.
+        for t in 0..k {
+            m.inc(2, t, 1);
+        }
+        let d = m.drain_deltas();
+        assert!(matches!(d[0].1, RowData::Dense(_)));
     }
 
     #[test]
@@ -244,6 +607,57 @@ mod tests {
         m.apply_pull(1, &[20, 6]);
         assert_eq!(m.get(1, 0), 20);
         assert_eq!(m.total(0), 20);
+    }
+
+    #[test]
+    fn apply_pull_row_sparse_equals_dense() {
+        let k = 8;
+        let mut a = CountMatrix::new(4, k);
+        let mut b = CountMatrix::new(4, k);
+        for m in [&mut a, &mut b] {
+            m.inc(2, 1, 2);
+            m.inc(2, 5, -1);
+        }
+        let server = [0, 7, 0, 0, 0, 3, 0, 0];
+        a.apply_pull(2, &server);
+        b.apply_pull_row(2, &RowData::from_dense_auto(&server));
+        for t in 0..k {
+            assert_eq!(a.get(2, t), b.get(2, t), "cell {t}");
+        }
+        assert_eq!(a.totals(), b.totals());
+    }
+
+    #[test]
+    fn inv_denom_tracks_totals() {
+        let mut m = CountMatrix::new(10, 3);
+        m.set_smoothing(0.5);
+        assert!((m.inv_denom(0) - 1.0 / 0.5).abs() < 1e-12);
+        m.inc(1, 0, 4);
+        assert!((m.inv_denom(0) - 1.0 / 4.5).abs() < 1e-12);
+        m.inc(1, 0, -1);
+        assert!((m.inv_denom(0) - 1.0 / 3.5).abs() < 1e-12);
+        m.apply_pull(1, &[10, 0, 0]); // pending +3 → row = 13
+        let _ = m.drain_deltas();
+        m.apply_pull(1, &[10, 0, 0]); // flushed → row := 10
+        assert!((m.inv_denom(0) - 1.0 / 10.5).abs() < 1e-12);
+        // Negative transients clamp to the smoothing floor, like denom().
+        m.inc_local(2, 1, -7);
+        assert!((m.inv_denom(1) - 1.0 / 0.5).abs() < 1e-12);
+        assert!((m.denom(1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn requeue_folds_into_newer_deltas() {
+        let mut m = CountMatrix::new(6, 4);
+        m.inc(3, 1, 2);
+        let drained = m.drain_deltas();
+        assert_eq!(m.pending_rows(), 0);
+        m.inc(3, 2, 5); // newer delta arrives before the requeue
+        let (w, row) = drained.into_iter().next().unwrap();
+        m.requeue_delta(w, row);
+        assert_eq!(m.pending_rows(), 1);
+        let d = m.drain_deltas();
+        assert_eq!(&*d[0].1.to_dense(4), &[0, 2, 5, 0]);
     }
 
     #[test]
@@ -267,5 +681,36 @@ mod tests {
         m.inc(0, 1, 1);
         m.inc(1, 2, 5);
         assert!((m.avg_topics_per_word() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rowdata_encode_roundtrip() {
+        let rows: [&[i32]; 4] = [
+            &[0, 0, 0, 0],
+            &[1, 0, -2, 0],
+            &[5, 5, 5, 5],
+            &[0, 0, 0, 9],
+        ];
+        for r in rows {
+            let enc = RowData::from_dense_auto(r);
+            assert_eq!(&*enc.to_dense(r.len()), r);
+            assert_eq!(enc.nnz(), r.iter().filter(|&&v| v != 0).count());
+            assert_eq!(
+                enc.l1(),
+                r.iter().map(|&v| v.unsigned_abs() as u64).sum::<u64>()
+            );
+            for (t, &v) in r.iter().enumerate() {
+                assert_eq!(enc.get(t), v);
+            }
+        }
+    }
+
+    #[test]
+    fn rowdata_fold_saturating() {
+        let mut row = vec![1i32, i32::MAX, 0];
+        RowData::Sparse(vec![(0, 2), (1, 5)]).fold_saturating_into(&mut row);
+        assert_eq!(row, vec![3, i32::MAX, 0]);
+        RowData::Dense(vec![1, -1, 7].into_boxed_slice()).fold_saturating_into(&mut row);
+        assert_eq!(row, vec![4, i32::MAX - 1, 7]);
     }
 }

@@ -27,7 +27,7 @@
 //! `n_k>0 ⇒ t_k>0`) that projection (§5.5) maintains under relaxed
 //! consistency.
 
-use super::alias::AliasTable;
+use super::alias::{AliasBuilder, AliasTable};
 use super::counts::CountMatrix;
 use super::doc_state::{DocState, SparseCounts};
 use super::mh::mh_chain;
@@ -36,6 +36,8 @@ use super::DocSampler;
 use crate::corpus::doc::Document;
 use crate::util::rng::Rng;
 
+/// Stale per-word proposal; pooled and rebuilt in place (no steady-state
+/// allocation).
 struct WordProposal {
     table: AliasTable,
     /// Stale dense weights, indexed `t` for (t, r=1), plus slot `K` for
@@ -43,6 +45,17 @@ struct WordProposal {
     qw: Box<[f64]>,
     qsum: f64,
     budget: u32,
+}
+
+impl WordProposal {
+    fn empty(len: usize) -> WordProposal {
+        WordProposal {
+            table: AliasTable::empty(),
+            qw: vec![0.0; len].into_boxed_slice(),
+            qsum: 0.0,
+            budget: 0,
+        }
+    }
 }
 
 /// Root stick weight `θ₀(t) = t_k / (b₀ + T)` given (clamped) root table
@@ -92,6 +105,7 @@ pub struct AliasHdp {
     pub tb_dt: Vec<SparseCounts>,
     stirling: StirlingTable,
     proposals: Vec<Option<WordProposal>>,
+    alias_builder: AliasBuilder,
     /// Diagnostics.
     pub mh_proposed: u64,
     /// Diagnostics.
@@ -142,17 +156,22 @@ impl AliasHdp {
             tb_dt: vec![SparseCounts::new(); docs.len()],
             stirling: StirlingTable::new(0.0, (max_doc_len + 2).min(4096)),
             proposals: (0..vocab).map(|_| None).collect(),
+            alias_builder: AliasBuilder::new(),
             mh_proposed: 0,
             mh_accepted: 0,
             scratch_idx: Vec::with_capacity(64),
             scratch_w: Vec::with_capacity(64),
             docs,
         };
+        s.nwt.set_smoothing(s.beta_bar);
         // Init: seed a handful of active topics, then assign by the
-        // document-side CRP so tables start exactly consistent.
+        // document-side CRP so tables start exactly consistent. The
+        // documents are iterated out-of-body so the pass can mutate the
+        // statistics without cloning every token vector.
         let seed_topics = (k_max / 4).clamp(1, 16);
-        for d in 0..s.docs.len() {
-            let tokens = s.docs[d].tokens.clone();
+        let docs_v = std::mem::take(&mut s.docs);
+        for (d, doc) in docs_v.iter().enumerate() {
+            let tokens = &doc.tokens;
             let mut zs = Vec::with_capacity(tokens.len());
             let mut rs = Vec::with_capacity(tokens.len());
             for (i, &w) in tokens.iter().enumerate() {
@@ -171,6 +190,7 @@ impl AliasHdp {
             s.state.z[d] = zs;
             s.state.r[d] = rs;
         }
+        s.docs = docs_v;
         s
     }
 
@@ -198,12 +218,9 @@ impl AliasHdp {
 
     #[inline]
     fn phi(&self, w: u32, t: usize) -> f64 {
-        dirichlet_predictive(
-            self.nwt.get(w, t).max(0) as f64,
-            (self.nwt.total(t) as f64).max(0.0),
-            self.beta,
-            self.beta_bar,
-        )
+        // Same value as `dirichlet_predictive`, via the incremental
+        // 1/(n_t+β̄) cache — no division on the per-token path.
+        (self.nwt.get(w, t).max(0) as f64 + self.beta) * self.nwt.inv_denom(t)
     }
 
     fn add_token(&mut self, d: usize, w: u32, t: u32, r: bool) {
@@ -267,34 +284,40 @@ impl AliasHdp {
     }
 
     /// Dense stale proposal for word `w`: slots `0..K` are (t, r=1); slot
-    /// `K` is "open a new topic".
+    /// `K` is "open a new topic". Rebuilt in place over pooled buffers.
     fn rebuild_proposal(&mut self, w: u32) {
-        let mut qw = Vec::with_capacity(self.k + 1);
+        let mut p = self.proposals[w as usize]
+            .take()
+            .unwrap_or_else(|| WordProposal::empty(self.k + 1));
+        let mut qsum = 0.0;
         for t in 0..self.k {
             // Doc-independent upper envelope of the r=1 branch: the
             // doc-side fraction and Stirling ratio are ≤ 1 off-document.
-            qw.push(self.b1 * self.theta0(t) * self.phi(w, t));
+            let v = self.b1 * self.theta0(t) * self.phi(w, t);
+            p.qw[t] = v;
+            qsum += v;
         }
-        qw.push(self.b1 * self.theta0_new() / self.nwt.vocab() as f64);
-        let qsum: f64 = qw.iter().sum();
-        let table = AliasTable::build(&qw);
-        self.proposals[w as usize] = Some(WordProposal {
-            table,
-            qw: qw.into_boxed_slice(),
-            qsum,
-            budget: (self.k + 1) as u32,
-        });
+        let v_new = self.b1 * self.theta0_new() / self.nwt.vocab() as f64;
+        p.qw[self.k] = v_new;
+        qsum += v_new;
+        p.qsum = qsum;
+        self.alias_builder.build_into(&mut p.table, &p.qw);
+        p.budget = (self.k + 1) as u32;
+        self.proposals[w as usize] = Some(p);
     }
 
-    /// Drop the stale proposal for one word (after a row sync).
+    /// Mark the stale proposal for one word for rebuild (after a row
+    /// sync); buffers are kept.
     pub fn invalidate_word(&mut self, w: u32) {
-        self.proposals[w as usize] = None;
+        if let Some(p) = self.proposals[w as usize].as_mut() {
+            p.budget = 0;
+        }
     }
 
-    /// Drop all stale proposals (bulk sync).
+    /// Mark all stale proposals for rebuild (bulk sync).
     pub fn invalidate_all(&mut self) {
-        for p in self.proposals.iter_mut() {
-            *p = None;
+        for p in self.proposals.iter_mut().flatten() {
+            p.budget = 0;
         }
     }
 

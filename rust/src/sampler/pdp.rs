@@ -21,7 +21,7 @@
 //! polytope constraints (`0 ≤ s_tw ≤ m_tw`, `m_tw>0 ⇒ s_tw>0`) the
 //! projection subsystem (§5.5) must maintain under relaxed consistency.
 
-use super::alias::AliasTable;
+use super::alias::{AliasBuilder, AliasTable};
 use super::counts::CountMatrix;
 use super::doc_state::DocState;
 use super::mh::mh_chain;
@@ -30,12 +30,25 @@ use super::DocSampler;
 use crate::corpus::doc::Document;
 use crate::util::rng::Rng;
 
+/// Stale per-word proposal over the `2K` pairs; pooled and rebuilt in
+/// place like the LDA one (no steady-state allocation).
 struct WordProposal {
     table: AliasTable,
     /// Stale dense weights over pairs, indexed `2t + r`.
     qw: Box<[f64]>,
     qsum: f64,
     budget: u32,
+}
+
+impl WordProposal {
+    fn empty(len: usize) -> WordProposal {
+        WordProposal {
+            table: AliasTable::empty(),
+            qw: vec![0.0; len].into_boxed_slice(),
+            qsum: 0.0,
+            budget: 0,
+        }
+    }
 }
 
 /// Pitman-Yor predictive word probability under fixed statistics:
@@ -95,6 +108,7 @@ pub struct AliasPdp {
     pub s: CountMatrix,
     stirling: StirlingTable,
     proposals: Vec<Option<WordProposal>>,
+    alias_builder: AliasBuilder,
     /// Diagnostics.
     pub mh_proposed: u64,
     /// Diagnostics.
@@ -168,14 +182,21 @@ impl AliasPdp {
             s: CountMatrix::new(vocab, k),
             stirling: StirlingTable::new(discount, (max_freq + 2).min(4096)),
             proposals: (0..vocab).map(|_| None).collect(),
+            alias_builder: AliasBuilder::new(),
             mh_proposed: 0,
             mh_accepted: 0,
             scratch_idx: Vec::with_capacity(64),
             scratch_w: Vec::with_capacity(64),
             docs,
         };
-        for d in 0..s.docs.len() {
-            let tokens = s.docs[d].tokens.clone();
+        // Normalizer caches: customers divide by b+m_t, tables by γ̄+s_t.
+        s.m.set_smoothing(s.concentration);
+        s.s.set_smoothing(s.gamma_bar);
+        // Iterate the documents out-of-body so the init pass can mutate
+        // the statistics without cloning every token vector.
+        let docs_v = std::mem::take(&mut s.docs);
+        for (d, doc) in docs_v.iter().enumerate() {
+            let tokens = &doc.tokens;
             let mut zs = Vec::with_capacity(tokens.len());
             let mut rs = Vec::with_capacity(tokens.len());
             for (i, &w) in tokens.iter().enumerate() {
@@ -196,6 +217,7 @@ impl AliasPdp {
             s.state.z[d] = zs;
             s.state.r[d] = rs;
         }
+        s.docs = docs_v;
         s
     }
 
@@ -273,8 +295,10 @@ impl AliasPdp {
             mtw = self.m.get(w, t).max(0) as usize;
             stw = self.s.get(w, t).clamp(0, mtw as i32) as usize;
         }
-        let mt = (self.m.total(t) as f64).max(0.0);
+        // Both denominators come from the incremental normalizer caches:
+        // `inv_bm = 1/(b + max(m_t,0))`, `s.inv_denom = 1/(γ̄ + max(s_t,0))`.
         let st = (self.s.total(t) as f64).max(0.0);
+        let inv_bm = self.m.inv_denom(t);
         let b = self.concentration;
         let a = self.discount;
         if !r {
@@ -283,7 +307,7 @@ impl AliasPdp {
             }
             let frac = (mtw as f64 + 1.0 - stw as f64) / (mtw as f64 + 1.0);
             let sratio = (self.stir(mtw + 1, stw) - self.stir(mtw, stw)).exp();
-            frac * sratio / (b + mt)
+            frac * sratio * inv_bm
         } else {
             let sratio = if mtw == 0 {
                 1.0 // S^1_1 / S^0_0 = 1
@@ -291,36 +315,43 @@ impl AliasPdp {
                 (self.stir(mtw + 1, stw + 1) - self.stir(mtw, stw)).exp()
             };
             let frac = (stw as f64 + 1.0) / (mtw as f64 + 1.0);
-            let root = (self.gamma + stw as f64) / (self.gamma_bar + st);
-            (b + a * st) / (b + mt) * frac * root * sratio
+            let root = (self.gamma + stw as f64) * self.s.inv_denom(t);
+            (b + a * st) * inv_bm * frac * root * sratio
         }
     }
 
+    /// Rebuild the stale proposal in place (pooled buffers; no
+    /// steady-state allocation).
     fn rebuild_proposal(&mut self, w: u32) {
-        let mut qw = Vec::with_capacity(2 * self.k);
+        let mut p = self.proposals[w as usize]
+            .take()
+            .unwrap_or_else(|| WordProposal::empty(2 * self.k));
+        let mut qsum = 0.0;
         for t in 0..self.k {
-            qw.push(self.alpha * self.f(w, t, false));
-            qw.push(self.alpha * self.f(w, t, true));
+            let v0 = self.alpha * self.f(w, t, false);
+            let v1 = self.alpha * self.f(w, t, true);
+            p.qw[2 * t] = v0;
+            p.qw[2 * t + 1] = v1;
+            qsum += v0 + v1;
         }
-        let qsum: f64 = qw.iter().sum();
-        let table = AliasTable::build(&qw);
-        self.proposals[w as usize] = Some(WordProposal {
-            table,
-            qw: qw.into_boxed_slice(),
-            qsum,
-            budget: 2 * self.k as u32,
-        });
+        p.qsum = qsum;
+        self.alias_builder.build_into(&mut p.table, &p.qw);
+        p.budget = 2 * self.k as u32;
+        self.proposals[w as usize] = Some(p);
     }
 
-    /// Drop the stale proposal for one word (after a row sync).
+    /// Mark the stale proposal for one word for rebuild (after a row
+    /// sync); buffers are kept.
     pub fn invalidate_word(&mut self, w: u32) {
-        self.proposals[w as usize] = None;
+        if let Some(p) = self.proposals[w as usize].as_mut() {
+            p.budget = 0;
+        }
     }
 
-    /// Drop all stale proposals (bulk sync).
+    /// Mark all stale proposals for rebuild (bulk sync).
     pub fn invalidate_all(&mut self) {
-        for p in self.proposals.iter_mut() {
-            *p = None;
+        for p in self.proposals.iter_mut().flatten() {
+            p.budget = 0;
         }
     }
 

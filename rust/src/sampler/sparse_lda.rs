@@ -36,7 +36,9 @@ pub struct SparseLda {
     /// Sparse mirror of the non-zero topics per word (what makes the word
     /// bucket `k_w`-sparse instead of `O(K)` over the dense replica rows).
     word_topics: Vec<SparseCounts>,
-    /// Cached smoothing bucket Σ_t αβ/(n_t+β̄), refreshed when stale.
+    /// Cached smoothing bucket Σ_t αβ/(n_t+β̄), adjusted incrementally on
+    /// every token move via the replica's 1/(n_t+β̄) cache; a full O(K)
+    /// recompute only happens after a sync rewrites rows.
     s_cache: f64,
     s_dirty: bool,
 }
@@ -77,9 +79,13 @@ impl SparseLda {
             s_dirty: true,
             docs,
         };
-        for d in 0..s.docs.len() {
-            let tokens = s.docs[d].tokens.clone();
-            s.state.z[d] = tokens
+        s.nwt.set_smoothing(s.beta_bar);
+        // Iterate the documents out-of-body so the init pass can mutate
+        // the statistics without cloning every token vector.
+        let docs = std::mem::take(&mut s.docs);
+        for (d, doc) in docs.iter().enumerate() {
+            s.state.z[d] = doc
+                .tokens
                 .iter()
                 .enumerate()
                 .map(|(i, &w)| {
@@ -94,6 +100,7 @@ impl SparseLda {
                 })
                 .collect();
         }
+        s.docs = docs;
         s
     }
 
@@ -126,7 +133,7 @@ impl SparseLda {
     fn smoothing_bucket(&mut self) -> f64 {
         if self.s_dirty {
             self.s_cache = (0..self.k)
-                .map(|t| self.alpha * self.beta / self.denom(t))
+                .map(|t| self.alpha * self.beta * self.nwt.inv_denom(t))
                 .sum();
             self.s_dirty = false;
         }
@@ -138,22 +145,29 @@ impl SparseLda {
         let w = self.docs[d].tokens[i];
         let old = self.state.z[d][i];
 
-        // Remove the token from all statistics.
+        // Remove the token from all statistics. The smoothing bucket only
+        // depends on the one denominator that changed, so it is adjusted
+        // incrementally (O(1)) instead of being marked stale (O(K)).
         self.state.n_dt[d].dec(old);
+        let inv_before = self.nwt.inv_denom(old as usize);
         self.nwt.inc(w, old as usize, -1);
+        if !self.s_dirty {
+            self.s_cache +=
+                self.alpha * self.beta * (self.nwt.inv_denom(old as usize) - inv_before);
+        }
         self.word_topics[w as usize].dec_clamped(old);
-        self.s_dirty = true;
 
-        // r bucket: Σ over non-zero n_dt.
+        // r bucket: Σ over non-zero n_dt (multiplying by the cached
+        // 1/(n_t+β̄) — no division in the per-token loops).
         let mut r_sum = 0.0;
         for (t, c) in self.state.n_dt[d].iter() {
-            r_sum += c as f64 * self.beta / self.denom(t as usize);
+            r_sum += c as f64 * self.beta * self.nwt.inv_denom(t as usize);
         }
         // q bucket: Σ over non-zero n_tw.
         let mut q_sum = 0.0;
         for (t, c) in self.word_topics[w as usize].iter() {
             let ndt = self.state.n_dt[d].get(t) as f64;
-            q_sum += (self.alpha + ndt) * c as f64 / self.denom(t as usize);
+            q_sum += (self.alpha + ndt) * c as f64 * self.nwt.inv_denom(t as usize);
         }
         let s_sum = self.smoothing_bucket();
 
@@ -166,7 +180,7 @@ impl SparseLda {
             let mut chosen = None;
             for (t, c) in self.word_topics[w as usize].iter() {
                 let ndt = self.state.n_dt[d].get(t) as f64;
-                acc += (self.alpha + ndt) * c as f64 / self.denom(t as usize);
+                acc += (self.alpha + ndt) * c as f64 * self.nwt.inv_denom(t as usize);
                 if acc >= u {
                     chosen = Some(t);
                     break;
@@ -186,7 +200,7 @@ impl SparseLda {
                 let mut acc = 0.0;
                 let mut chosen = None;
                 for (t, c) in self.state.n_dt[d].iter() {
-                    acc += c as f64 * self.beta / self.denom(t as usize);
+                    acc += c as f64 * self.beta * self.nwt.inv_denom(t as usize);
                     if acc >= u {
                         chosen = Some(t);
                         break;
@@ -200,7 +214,7 @@ impl SparseLda {
                 let mut acc = 0.0;
                 let mut chosen = self.k - 1;
                 for t in 0..self.k {
-                    acc += self.alpha * self.beta / self.denom(t);
+                    acc += self.alpha * self.beta * self.nwt.inv_denom(t);
                     if acc >= u {
                         chosen = t;
                         break;
@@ -210,10 +224,16 @@ impl SparseLda {
             }
         }
 
-        // Add the token back under the new topic.
+        // Add the token back under the new topic (same incremental
+        // smoothing-bucket adjustment as the removal).
         self.state.z[d][i] = new_t;
         self.state.n_dt[d].inc(new_t);
+        let inv_before = self.nwt.inv_denom(new_t as usize);
         self.nwt.inc(w, new_t as usize, 1);
+        if !self.s_dirty {
+            self.s_cache +=
+                self.alpha * self.beta * (self.nwt.inv_denom(new_t as usize) - inv_before);
+        }
         self.word_topics[w as usize].inc(new_t);
         new_t
     }

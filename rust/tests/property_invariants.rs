@@ -6,7 +6,7 @@ use hplvm::projection::{project_pair, PairRule};
 use hplvm::ps::filter::Filter;
 use hplvm::ps::snapshot;
 use hplvm::sampler::alias::AliasTable;
-use hplvm::sampler::counts::CountMatrix;
+use hplvm::sampler::counts::{CountMatrix, RowData};
 use hplvm::sampler::doc_state::SparseCounts;
 use hplvm::sampler::stirling::StirlingTable;
 use hplvm::util::json::Json;
@@ -99,23 +99,29 @@ fn prop_filter_select_is_a_partition() {
     for trial in 0..200u64 {
         let n = rng.below(40);
         let k = 1 + rng.below(6);
-        let rows: Vec<(u32, Box<[i32]>)> = (0..n)
+        let rows: Vec<(u32, RowData)> = (0..n)
             .map(|w| {
                 let row: Vec<i32> = (0..k)
                     .map(|_| rng.below(2001) as i32 - 1000)
                     .collect();
-                (w as u32, row.into_boxed_slice())
+                // Exercise both wire encodings through the filter.
+                let row = if w % 2 == 0 {
+                    RowData::Dense(row.into_boxed_slice())
+                } else {
+                    RowData::from_dense_auto(&row)
+                };
+                (w as u32, row)
             })
             .collect();
         let filter = Filter {
             magnitude_fraction: rng.f64(),
             uniform_prob: rng.f64() * 0.5,
         };
-        let mut expected: Vec<(u32, Box<[i32]>)> = rows.clone();
+        let mut expected: Vec<(u32, RowData)> = rows.clone();
         let (send, retain) = filter.select(rows, &mut rng);
         // Permutation check on the full (word, row) multiset — no row
         // lost, duplicated, or rewritten.
-        let mut got: Vec<(u32, Box<[i32]>)> =
+        let mut got: Vec<(u32, RowData)> =
             send.iter().chain(retain.iter()).cloned().collect();
         got.sort();
         expected.sort();
@@ -129,7 +135,7 @@ fn prop_filter_select_is_a_partition() {
             magnitude_fraction: 1.0,
             uniform_prob: 0.0,
         };
-        let rows2: Vec<(u32, Box<[i32]>)> = expected.clone();
+        let rows2: Vec<(u32, RowData)> = expected.clone();
         let (send2, retain2) = passthrough.select(rows2, &mut rng);
         assert!(retain2.is_empty(), "fraction 1.0 must retain nothing");
         assert_eq!(send2.len(), expected.len());
@@ -260,11 +266,14 @@ fn prop_replica_merge_algebra() {
                     replica.inc(w, t, d);
                     pending[w as usize][t] += d;
                 }
-                // Push: drain deltas into the server.
+                // Push: drain deltas into the server (rows arrive in
+                // whichever wire encoding the density picked; both must
+                // mean the same dense deltas).
                 2 => {
                     for (w, row) in replica.drain_deltas() {
+                        let dense = row.to_dense(k);
                         for t in 0..k {
-                            server[w as usize][t] += row[t];
+                            server[w as usize][t] += dense[t];
                             pending[w as usize][t] = 0;
                         }
                     }
@@ -291,8 +300,9 @@ fn prop_replica_merge_algebra() {
         }
         // Final: flush everything, pull everything → exact agreement.
         for (w, row) in replica.drain_deltas() {
+            let dense = row.to_dense(k);
             for t in 0..k {
-                server[w as usize][t] += row[t];
+                server[w as usize][t] += dense[t];
             }
         }
         for w in 0..vocab as u32 {
@@ -312,6 +322,108 @@ fn prop_replica_merge_algebra() {
             }
         }
         assert_eq!(replica.totals(), &totals[..]);
+    }
+}
+
+/// Sparse/dense wire rows are interchangeable: for random rows, encoding
+/// round-trips to the same dense values, the server-side fold and the
+/// client-side pull-apply agree with plain dense arithmetic, and the
+/// encoder really picks the smaller wire form.
+#[test]
+fn prop_rowdata_sparse_dense_equivalence() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..300 {
+        let k = 1 + rng.below(64);
+        let mut dense = vec![0i32; k];
+        // Random density from nearly-empty to full.
+        let nnz_target = rng.below(k + 1);
+        for _ in 0..nnz_target {
+            dense[rng.below(k)] = rng.below(41) as i32 - 20;
+        }
+        let enc = RowData::from_dense_auto(&dense);
+        // Encode → decode is the identity.
+        assert_eq!(&*enc.to_dense(k), &dense[..]);
+        // The encoder picks the cheaper form.
+        let nnz = dense.iter().filter(|&&v| v != 0).count();
+        match &enc {
+            RowData::Sparse(es) => {
+                assert_eq!(es.len(), nnz);
+                assert!(8 * nnz < 4 * k, "sparse chosen past break-even");
+            }
+            RowData::Dense(r) => {
+                assert_eq!(r.len(), k);
+                assert!(8 * nnz >= 4 * k, "dense chosen below break-even");
+            }
+        }
+        // Server fold: either encoding == dense saturating add.
+        let base: Vec<i32> = (0..k).map(|_| rng.below(1001) as i32 - 500).collect();
+        let mut via_enc = base.clone();
+        enc.fold_saturating_into(&mut via_enc);
+        let expect: Vec<i32> = base
+            .iter()
+            .zip(dense.iter())
+            .map(|(&b, &d)| b.saturating_add(d))
+            .collect();
+        assert_eq!(via_enc, expect);
+        // Client pull-apply: either encoding lands the same replica state
+        // (including unflushed-local-delta preservation and totals).
+        let mut a = CountMatrix::new(2, k);
+        let mut b = CountMatrix::new(2, k);
+        for _ in 0..rng.below(10) {
+            let t = rng.below(k);
+            let d = if rng.coin(0.5) { 1 } else { -1 };
+            a.inc(0, t, d);
+            b.inc(0, t, d);
+        }
+        a.apply_pull(0, &dense);
+        b.apply_pull_row(0, &enc);
+        for t in 0..k {
+            assert_eq!(a.get(0, t), b.get(0, t), "pull mismatch at {t}");
+        }
+        assert_eq!(a.totals(), b.totals());
+    }
+}
+
+/// drain → (filter) → requeue → drain is lossless: rows a push cycle
+/// retains fold back into the delta log so the next drain carries exactly
+/// the aggregate deltas, regardless of sparse/dense storage spills.
+#[test]
+fn prop_drain_requeue_drain_is_lossless() {
+    let mut rng = Rng::new(0xD7A1);
+    for trial in 0..60u64 {
+        let k = 2 + rng.below(40);
+        let vocab = 8;
+        let mut m = CountMatrix::new(vocab, k);
+        // Shadow of all deltas ever logged (never drained to a server).
+        let mut shadow = vec![vec![0i64; k]; vocab];
+        for _ in 0..300 {
+            let w = rng.below(vocab) as u32;
+            let t = rng.below(k);
+            let d = if rng.coin(0.5) { 1 } else { -1 };
+            m.inc(w, t, d);
+            shadow[w as usize][t] += d as i64;
+        }
+        // Drain, requeue everything (filter retained 100%), inc some
+        // more, drain again: the union must equal the shadow.
+        let first = m.drain_deltas();
+        for (w, row) in first {
+            m.requeue_delta(w, row);
+        }
+        for _ in 0..100 {
+            let w = rng.below(vocab) as u32;
+            let t = rng.below(k);
+            m.inc(w, t, 1);
+            shadow[w as usize][t] += 1;
+        }
+        let mut got = vec![vec![0i64; k]; vocab];
+        for (w, row) in m.drain_deltas() {
+            let dense = row.to_dense(k);
+            for t in 0..k {
+                got[w as usize][t] += dense[t] as i64;
+            }
+        }
+        assert_eq!(got, shadow, "trial {trial}: requeue lost deltas");
+        assert_eq!(m.pending_rows(), 0);
     }
 }
 

@@ -1,0 +1,179 @@
+//! End-to-end assertions for the sparse hot path: the end-of-iteration
+//! sync ships ≥2× fewer bytes than the dense-era wire format, and AliasLDA
+//! trained *through* the sparse wire (push → server aggregate → sparse
+//! pull → replica merge, every sweep) lands in the same posterior regime
+//! as a purely local run.
+
+use std::time::Duration;
+
+use hplvm::corpus::generator::CorpusConfig;
+use hplvm::ps::client::{ClientEvent, PsClient};
+use hplvm::ps::filter::Filter;
+use hplvm::ps::msg::Payload;
+use hplvm::ps::network::{NetConfig, SimNet};
+use hplvm::ps::server::{ServerConfig, ServerGroup};
+use hplvm::sampler::alias_lda::AliasLda;
+use hplvm::sampler::DocSampler;
+use hplvm::util::rng::Rng;
+
+fn fast_net(seed: u64) -> SimNet {
+    SimNet::new(
+        0,
+        NetConfig {
+            base_latency: Duration::from_micros(50),
+            jitter: Duration::ZERO,
+            drop_prob: 0.0,
+            seed,
+        },
+    )
+}
+
+fn joint_ll(s: &AliasLda, beta: f64, beta_bar: f64) -> f64 {
+    let mut ll = 0.0;
+    for (d, doc) in s.docs.iter().enumerate() {
+        for (i, &w) in doc.tokens.iter().enumerate() {
+            let t = s.state.z[d][i] as usize;
+            let phi = (s.nwt.get(w, t).max(0) as f64 + beta)
+                / ((s.nwt.total(t) as f64).max(0.0) + beta_bar);
+            ll += phi.max(1e-300).ln();
+        }
+    }
+    ll
+}
+
+/// Acceptance gate: at K=256 (the small_lda family's serving tier), a
+/// steady-state end-of-iteration sync measured through `SimNet`'s byte
+/// accounting costs at most half of what the dense-era encoding
+/// (4 bytes × K per row, every row) would have shipped.
+#[test]
+fn end_of_iteration_sync_bytes_drop_2x_vs_dense() {
+    let k = 256usize;
+    let vocab = 500usize;
+    let (c, _) = CorpusConfig {
+        n_docs: 120,
+        vocab_size: vocab,
+        n_topics: 16,
+        doc_len_mean: 30.0,
+        seed: 11,
+        ..Default::default()
+    }
+    .generate();
+    let mut rng = Rng::new(42);
+    let mut s = AliasLda::new(c.docs, vocab, k, 0.1, 0.01, &mut rng);
+    // Discard the init burst; measure a real steady-state sweep's sync.
+    let _ = s.nwt.drain_deltas();
+    for d in 0..s.docs.len() {
+        s.sample_doc(d, &mut rng);
+    }
+    let rows = s.nwt.drain_deltas();
+    assert!(!rows.is_empty(), "a sweep must leave deltas to sync");
+
+    // Dense-era cost of the same sync: every row 4 (key) + 5 + 4·K bytes
+    // (see Payload::wire_bytes), same 16-byte message framing.
+    let dense_bytes: u64 = 16 + rows.len() as u64 * (4 + 5 + 4 * k as u64);
+
+    // Actual cost through the transport's byte metric.
+    let net = SimNet::new(2, NetConfig::default());
+    let payload = Payload::Push { matrix: 0, rows };
+    let payload_bytes = payload.wire_bytes();
+    assert!(net.send(0, 1, payload));
+    let (_, _, _, sim_bytes) = net.stats();
+    assert_eq!(
+        sim_bytes, payload_bytes,
+        "SimNet accounting must match the payload encoding"
+    );
+    assert!(
+        sim_bytes * 2 <= dense_bytes,
+        "sync shipped {sim_bytes} bytes; dense era would ship {dense_bytes} — \
+         expected ≥2× reduction"
+    );
+}
+
+/// AliasLDA trained over the sparse wire (a full push/aggregate/pull round
+/// trip per sweep, rows in whichever encoding the density picks) must
+/// match a purely local run's posterior at the dense-era tolerance (5%
+/// relative joint log-likelihood, the same bar the alias-vs-sparse
+/// sampler parity test uses).
+#[test]
+fn alias_lda_over_sparse_wire_matches_local_posterior() {
+    let (vocab, k, beta) = (250usize, 16usize, 0.01);
+    let beta_bar = beta * vocab as f64;
+    let (c, _) = CorpusConfig {
+        n_docs: 120,
+        vocab_size: vocab,
+        n_topics: 8,
+        doc_len_mean: 30.0,
+        seed: 9,
+        ..Default::default()
+    }
+    .generate();
+
+    // Local reference: no parameter server in the loop.
+    let mut rng_a = Rng::new(100);
+    let mut local = AliasLda::new(c.docs.clone(), vocab, k, 0.1, beta, &mut rng_a);
+
+    // Wired run: one client, two server slots (exercises ring routing of
+    // sparse rows), sync every sweep.
+    let net = fast_net(5);
+    let me = net.add_node();
+    let group = ServerGroup::spawn(
+        &net,
+        ServerConfig {
+            n_servers: 2,
+            row_width: k,
+            ..Default::default()
+        },
+    );
+    let mut client = PsClient::new(
+        net.clone(),
+        me,
+        group.ring.clone(),
+        group.slots.clone(),
+        group.frozen.clone(),
+        Filter::default(),
+        7,
+    );
+    let mut rng_b = Rng::new(200);
+    let mut wired = AliasLda::new(c.docs, vocab, k, 0.1, beta, &mut rng_b);
+    let words: Vec<u32> = (0..vocab as u32).collect();
+
+    let ll0 = joint_ll(&wired, beta, beta_bar);
+    for _ in 0..20 {
+        for d in 0..local.docs.len() {
+            local.sample_doc(d, &mut rng_a);
+            wired.sample_doc(d, &mut rng_b);
+        }
+        let _ = local.nwt.drain_deltas();
+        // End-of-iteration sync for the wired run: push, then pull every
+        // word and merge whatever arrives (replica := server + pending).
+        client.push_matrix(0, &mut wired.nwt);
+        std::thread::sleep(Duration::from_millis(5));
+        client.request_rows(0, &words);
+        let mut got = 0usize;
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while got < vocab && std::time::Instant::now() < deadline {
+            for ev in client.drain_responses(Duration::from_millis(20)) {
+                if let ClientEvent::Rows(0, rows) = ev {
+                    for (w, row) in rows {
+                        wired.nwt.apply_pull_row(w, &row);
+                        wired.invalidate_word(w);
+                        got += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(got, vocab, "pull responses missing");
+    }
+    let lla = joint_ll(&local, beta, beta_bar);
+    let llb = joint_ll(&wired, beta, beta_bar);
+    assert!(
+        llb > ll0 + 100.0,
+        "wired training failed to improve: {ll0} -> {llb}"
+    );
+    let rel = (lla - llb).abs() / lla.abs();
+    assert!(
+        rel < 0.05,
+        "posterior regime mismatch: local {lla} vs sparse-wire {llb} ({rel:.3} rel)"
+    );
+    group.shutdown();
+}
