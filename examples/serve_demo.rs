@@ -1,18 +1,23 @@
-//! Train → snapshot → serve → train more → **hot-reload**, end to end:
-//! train a small LDA model on the simulated cluster, serve topic-mixture
-//! queries through the generation-numbered [`ServingHandle`], then train
-//! further and swap the newer snapshots in live — with queries in flight
-//! and nothing dropped.
+//! Train → snapshot → serve → train more → **hot-reload** → **scale
+//! out**, end to end: train a small LDA model on the simulated cluster,
+//! serve topic-mixture queries through the generation-numbered
+//! [`ServingHandle`], train further and swap the newer snapshots in live
+//! (queries in flight, nothing dropped), then serve the same snapshots
+//! through a 2-replica [`ReplicaSet`] — the `serve --replicas 2`
+//! topology: the vocabulary consistent-hashed over two model slices,
+//! each with its own alias cache, answers bit-identical to the single
+//! model.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
 //! ```
 //!
 //! [`ServingHandle`]: hplvm::serve::ServingHandle
+//! [`ReplicaSet`]: hplvm::serve::ReplicaSet
 
 use hplvm::config::TrainConfig;
 use hplvm::coordinator::trainer::Trainer;
-use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
+use hplvm::serve::{InferConfig, InferenceService, ReplicaSet, ServeConfig, ServingHandle};
 
 fn train_into(cfg: &TrainConfig, label: &str) {
     println!(
@@ -121,5 +126,45 @@ fn main() {
         handle.generation()
     );
     svc.shutdown();
+
+    // 7. Scale out: the same snapshots behind a 2-replica set
+    // (`hplvm serve --replicas 2`). The vocabulary is consistent-hashed
+    // over the replicas — each holds only its words' rows plus the
+    // global normalizers — and routed answers are bit-identical to the
+    // single model's at the same seed.
+    let set = ReplicaSet::load_dir(&snapdir, 2).expect("replica-set load failed");
+    {
+        let vocab = set.current().models()[0].vocab();
+        for (r, owned) in set.router().spread(vocab).iter().enumerate() {
+            println!("replica {r}: owns {owned} of {vocab} words");
+        }
+    }
+    let doc = &test.docs[0].tokens;
+    let cfg = InferConfig::default();
+    let single = hplvm::serve::infer_doc(
+        &handle.model(),
+        doc,
+        &cfg,
+        &mut hplvm::util::rng::Rng::new(1234),
+    );
+    let routed = set.infer(doc, &cfg, &mut hplvm::util::rng::Rng::new(1234));
+    assert!(
+        single
+            .theta
+            .iter()
+            .zip(routed.theta.iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "routed posterior must be bit-identical to the single-replica posterior"
+    );
+    println!(
+        "routed query served by replicas {:?} — θ bit-identical to 1-replica ✓",
+        routed.served_by
+    );
+    // Set-wide reload: the generation bumps only once *every* replica
+    // has installed the new slice (and pre-warmed its alias cache from
+    // the outgoing resident set).
+    let g = set.reload(&snapdir).expect("set reload failed");
+    println!("set-wide hot reload → generation {g} (all replicas committed)");
+
     std::fs::remove_dir_all(&snapdir).ok();
 }

@@ -11,16 +11,25 @@
 //!
 //! ## Layering
 //!
-//! * **Layer 4 ([`serve`])** — the family-generic, hot-reloadable
-//!   inference service: the [`serve::ServingFamily`] trait abstracts
-//!   "frozen sufficient statistics + fold-in posterior" per model family
-//!   (LDA `n_tw`, PDP customer+table counts with the PYP predictive, HDP
-//!   `n_tw` + root sticks), all built from the self-describing v3 server
-//!   snapshots. Per-word alias tables are cached lazily under an LRU
-//!   byte budget; a generation-numbered [`serve::ServingHandle`] swaps
-//!   newer snapshots in atomically without dropping the in-flight
-//!   micro-batch queue, and every answer reports the generation that
-//!   served it.
+//! * **Layer 4 ([`serve`])** — the family-generic, hot-reloadable,
+//!   **model-parallel** inference service: the [`serve::ServingFamily`]
+//!   trait abstracts "frozen sufficient statistics + fold-in posterior"
+//!   per model family (LDA `n_tw`, PDP customer+table counts with the
+//!   PYP predictive, HDP `n_tw` + root sticks), all built from the
+//!   self-describing v3 server snapshots. Per-word alias tables are
+//!   cached lazily under an LRU byte budget; a generation-numbered
+//!   [`serve::ServingHandle`] swaps newer snapshots in atomically
+//!   without dropping the in-flight micro-batch queue (pre-warming the
+//!   incoming alias cache from the outgoing resident set), and every
+//!   answer reports the generation that served it. At scale, a
+//!   [`serve::ReplicaSet`] partitions the vocabulary over N replicas
+//!   with the same consistent-hash ring training shards by
+//!   ([`ps::ring`]): each replica holds only its words' rows plus the
+//!   global normalizers and its own lock-free-to-neighbours alias
+//!   cache, the [`serve::QueryRouter`] scatters a document's words to
+//!   their owners and gathers the `prior_t·φ(w,t)` proposals, and the
+//!   routed posterior is bit-identical to the single-replica posterior
+//!   at a fixed seed. Reloads prepare per replica but commit set-wide.
 //! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
 //!   simulated cluster transport, server group / client groups / scheduler /
 //!   server manager, samplers, projection, metrics, CLI. The train-side

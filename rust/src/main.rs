@@ -6,16 +6,19 @@
 //!             [--snapshot-dir DIR] [--config file.json] [--out report.json]
 //!             [--pjrt] [-v|-q]
 //! hplvm serve --snapshot DIR [--model NAME] [--watch] [--queries N]
-//!             [--workers W] [--batch B] [--cache-mb M] [--seed S]
-//!                            # load-test the inference server (any family)
+//!             [--replicas R] [--workers W] [--batch B] [--cache-mb M]
+//!             [--seed S]     # load-test the inference server (any family)
 //! hplvm infer --snapshot DIR --tokens "3 17 42" [--model NAME] [--top N]
+//!             [--replicas R] # routed answers report the serving replicas
 //! hplvm eval-engine          # check PJRT artifacts load and execute
 //! hplvm info                 # print the resolved configuration
 //! ```
 
 use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
 use hplvm::coordinator::trainer::Trainer;
-use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
+use hplvm::serve::{
+    InferenceService, QueryBackend, ReplicaSet, ServeConfig, ServingHandle, ServingModel,
+};
 use hplvm::util::json::Json;
 use hplvm::util::logging::{self, Level};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -45,16 +48,22 @@ fn usage() -> ! {
                                  records a different one\n\
            --watch               poll DIR and hot-reload newer snapshots\n\
                                  (generation swaps, queue preserved)\n\
+           --replicas R          partition the vocabulary over R model\n\
+                                 slices by consistent hashing (default 1);\n\
+                                 reloads commit set-wide\n\
            --queries N           synthetic queries to run (default 2000)\n\
            --workers W           worker threads (default 2)\n\
            --batch B             max micro-batch size (default 32)\n\
-           --cache-mb M          alias-cache budget in MiB (default 64)\n\
+           --cache-mb M          alias-cache budget in MiB, per replica\n\
+                                 (default 64)\n\
            --doc-len L           mean query length (default 32)\n\
            --seed S              query + service seed\n\
          infer options:\n\
            --snapshot DIR        snapshot directory written by train\n\
            --tokens \"W W ...\"    word ids of the document\n\
            --model NAME          expected family (optional cross-check)\n\
+           --replicas R          route through R replicas and report which\n\
+                                 ones served (θ is bit-identical to R=1)\n\
            --top N               topics to print (default 8)"
     );
     std::process::exit(2)
@@ -156,6 +165,7 @@ struct ServeArgs {
     snapshot: std::path::PathBuf,
     model: Option<ModelKind>,
     watch: bool,
+    replicas: usize,
     queries: usize,
     workers: usize,
     batch: usize,
@@ -171,6 +181,7 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
         snapshot: std::path::PathBuf::new(),
         model: None,
         watch: false,
+        replicas: 1,
         queries: 2_000,
         workers: 2,
         batch: 32,
@@ -189,6 +200,13 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
                 out.model = Some(ModelKind::parse(v).unwrap_or_else(|| usage()));
             }
             "--watch" => out.watch = true,
+            "--replicas" => {
+                out.replicas = it.value("--replicas").parse().unwrap_or_else(|_| usage());
+                if out.replicas == 0 {
+                    eprintln!("--replicas must be at least 1");
+                    usage()
+                }
+            }
             "--queries" => {
                 out.queries = it.value("--queries").parse().unwrap_or_else(|_| usage())
             }
@@ -227,24 +245,93 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
     out
 }
 
-fn load_handle(a: &ServeArgs) -> Arc<ServingHandle> {
-    let handle = match ServingHandle::load_dir_with_budget(&a.snapshot, a.cache_mb << 20) {
-        Ok(h) => h,
-        Err(e) => {
-            eprintln!("cannot load snapshot: {e:#}");
-            std::process::exit(1)
+/// The loaded serving topology: one in-process model, or a
+/// consistent-hash-routed replica set (`--replicas N`).
+#[derive(Clone)]
+enum Backend {
+    Single(Arc<ServingHandle>),
+    Set(Arc<ReplicaSet>),
+}
+
+impl Backend {
+    fn load(a: &ServeArgs) -> Backend {
+        let budget = a.cache_mb << 20;
+        let loaded = if a.replicas > 1 {
+            ReplicaSet::load_dir_with_budget(&a.snapshot, a.replicas, budget).map(Backend::Set)
+        } else {
+            ServingHandle::load_dir_with_budget(&a.snapshot, budget).map(Backend::Single)
+        };
+        let backend = match loaded {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("cannot load snapshot: {e:#}");
+                std::process::exit(1)
+            }
+        };
+        // An explicit --model that contradicts the family the snapshot
+        // records is an operator error — refuse loudly instead of
+        // silently serving the wrong posterior.
+        if let Some(kind) = a.model {
+            if let Err(e) = backend.primary_model().ensure_family(kind) {
+                eprintln!("{e:#}");
+                std::process::exit(1)
+            }
         }
-    };
-    // Satellite check: an explicit --model that contradicts the family
-    // the snapshot records is an operator error — refuse loudly instead
-    // of silently serving the wrong posterior.
-    if let Some(kind) = a.model {
-        if let Err(e) = handle.model().ensure_family(kind) {
-            eprintln!("{e:#}");
-            std::process::exit(1)
+        backend
+    }
+
+    /// A representative model for header prints (replica 0's slice and
+    /// the single model agree on all global metadata).
+    fn primary_model(&self) -> Arc<ServingModel> {
+        match self {
+            Backend::Single(h) => h.model(),
+            Backend::Set(s) => s.current().models()[0].clone(),
         }
     }
-    handle
+
+    fn generation(&self) -> u64 {
+        match self {
+            Backend::Single(h) => h.generation(),
+            Backend::Set(s) => s.generation(),
+        }
+    }
+
+    fn reload(&self, dir: &std::path::Path) -> hplvm::Result<u64> {
+        match self {
+            Backend::Single(h) => h.reload(dir),
+            Backend::Set(s) => s.reload(dir),
+        }
+    }
+
+    fn query_backend(&self) -> Arc<dyn QueryBackend> {
+        match self {
+            Backend::Single(h) => h.clone(),
+            Backend::Set(s) => s.clone(),
+        }
+    }
+
+    fn print_cache_stats(&self) {
+        fn print_one(prefix: &str, c: &hplvm::serve::CacheStats) {
+            println!(
+                "{prefix}alias cache: {} resident ({:.1} MiB), {} hits / {} misses / {} \
+                 evictions / {} pre-warmed",
+                c.resident,
+                c.resident_bytes as f64 / (1 << 20) as f64,
+                c.hits,
+                c.misses,
+                c.evictions,
+                c.prewarmed,
+            );
+        }
+        match self {
+            Backend::Single(h) => print_one("", &h.model().cache_stats()),
+            Backend::Set(s) => {
+                for (r, m) in s.current().models().iter().enumerate() {
+                    print_one(&format!("replica {r} "), &m.cache_stats());
+                }
+            }
+        }
+    }
 }
 
 /// Fingerprint the slot snapshots in a directory (name, size, mtime,
@@ -282,25 +369,36 @@ fn cmd_serve(a: ServeArgs) {
     // snapshot landing between the load and the watcher's first poll
     // must still trigger a reload.
     let baseline = a.watch.then(|| snapshot_fingerprint(&a.snapshot));
-    let handle = load_handle(&a);
+    let backend = Backend::load(&a);
     {
-        let model = handle.model();
+        let model = backend.primary_model();
         println!(
-            "serving {} (family {}) | K={} vocab={} | {} tokens in frozen statistics | generation {} | {} workers, batch {}, cache {} MiB{}",
+            "serving {} (family {}) | K={} vocab={} | {} tokens in frozen statistics | generation {} | {} workers, batch {}, cache {} MiB{}{}",
             model.meta().model,
             model.kind().family_name(),
             model.k(),
             model.vocab(),
             model.total_tokens(),
-            handle.generation(),
+            backend.generation(),
             a.workers.max(1),
             a.batch,
             a.cache_mb,
+            if a.replicas > 1 { " per replica" } else { "" },
             if a.watch { " | watching for new snapshots" } else { "" },
         );
+        if let Backend::Set(set) = &backend {
+            // Replica topology: the router's vocabulary partition.
+            for (r, owned) in set.router().spread(model.vocab()).iter().enumerate() {
+                println!(
+                    "  replica {r}: owns {owned} of {} words ({:.1}%)",
+                    model.vocab(),
+                    100.0 * *owned as f64 / model.vocab().max(1) as f64,
+                );
+            }
+        }
     }
     let svc = InferenceService::spawn(
-        handle.clone(),
+        backend.query_backend(),
         ServeConfig {
             workers: a.workers,
             max_batch: a.batch,
@@ -309,10 +407,12 @@ fn cmd_serve(a: ServeArgs) {
         },
     );
     // --watch: poll the snapshot directory in the background and swap in
-    // newer generations without disturbing the queue.
+    // newer generations without disturbing the queue. Replica sets
+    // commit the swap set-wide: the bumped generation is visible only
+    // once every replica has installed its slice.
     let stop_watch = Arc::new(AtomicBool::new(false));
     let watcher = baseline.map(|baseline| {
-        let handle = handle.clone();
+        let backend = backend.clone();
         let dir = a.snapshot.clone();
         let stop = stop_watch.clone();
         std::thread::spawn(move || {
@@ -334,7 +434,7 @@ fn cmd_serve(a: ServeArgs) {
                     continue;
                 }
                 pending = None;
-                match handle.reload(&dir) {
+                match backend.reload(&dir) {
                     Ok(g) => println!("hot-reloaded snapshots → generation {g}"),
                     // Mark the failed fingerprint as seen either way: a
                     // permanently bad directory is reported once, then
@@ -349,19 +449,18 @@ fn cmd_serve(a: ServeArgs) {
         })
     });
     // Synthetic Zipf query stream over the model's vocabulary.
-    let vocab = handle.model().vocab();
+    let vocab = backend.primary_model().vocab();
     let queries = hplvm::serve::synth_queries(vocab, a.queries, a.doc_len, a.seed ^ 0x5E17E);
     let t0 = std::time::Instant::now();
     let latencies = hplvm::serve::run_queries(&svc, &queries, 512);
     let wall = t0.elapsed().as_secs_f64();
     let stats = svc.stats();
-    let cache = handle.model().cache_stats();
     println!(
         "{} queries in {:.2}s  →  {:.0} queries/s (final generation {})",
         latencies.len(),
         wall,
         latencies.len() as f64 / wall.max(1e-9),
-        handle.generation(),
+        backend.generation(),
     );
     println!(
         "latency p50 {:.3} ms | p99 {:.3} ms | batches {} (avg size {:.1}) | peak queue {}",
@@ -371,14 +470,7 @@ fn cmd_serve(a: ServeArgs) {
         stats.served as f64 / stats.batches.max(1) as f64,
         stats.peak_queue,
     );
-    println!(
-        "alias cache: {} resident ({:.1} MiB), {} hits / {} misses / {} evictions",
-        cache.resident,
-        cache.resident_bytes as f64 / (1 << 20) as f64,
-        cache.hits,
-        cache.misses,
-        cache.evictions,
-    );
+    backend.print_cache_stats();
     stop_watch.store(true, Ordering::Relaxed);
     if let Some(w) = watcher {
         let _ = w.join();
@@ -391,23 +483,31 @@ fn cmd_infer(a: ServeArgs) {
         eprintln!("--tokens \"W W ...\" is required");
         usage()
     }
-    let handle = load_handle(&a);
-    let model = handle.model();
+    let backend = Backend::load(&a);
+    let model = backend.primary_model();
     let mut rng = hplvm::util::rng::Rng::new(a.seed);
-    let res = hplvm::serve::infer_doc(
-        &model,
-        &a.tokens,
-        &hplvm::serve::InferConfig::default(),
-        &mut rng,
-    );
+    let cfg = hplvm::serve::InferConfig::default();
+    let res = match &backend {
+        Backend::Single(_) => hplvm::serve::infer_doc(&model, &a.tokens, &cfg, &mut rng),
+        // Routed: bit-identical θ to the single path at the same seed;
+        // the result additionally reports which replicas served.
+        Backend::Set(set) => set.infer(&a.tokens, &cfg, &mut rng),
+    };
     println!(
         "{} ({}) generation {} | {} tokens | MH acceptance {:.3}",
         model.meta().model,
         model.kind().family_name(),
-        handle.generation(),
+        backend.generation(),
         res.tokens,
         res.accepted as f64 / res.proposed.max(1) as f64
     );
+    if let Backend::Set(set) = &backend {
+        println!(
+            "served by replicas {:?} of {} (consistent-hash vocabulary partition)",
+            res.served_by,
+            set.replicas(),
+        );
+    }
     for (t, weight) in res.top_topics(a.top) {
         println!("topic {t:>4}  θ = {weight:.4}");
     }

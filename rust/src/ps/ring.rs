@@ -55,6 +55,17 @@ impl Ring {
         let idx = if idx == self.points.len() { 0 } else { idx };
         self.points[idx].1
     }
+
+    /// Per-slot key counts over the words `0..vocab` of `matrix` — the
+    /// load-balance diagnostic behind the serving router's partition
+    /// report (`serve --replicas N`) and the ring property tests.
+    pub fn spread(&self, matrix: u8, vocab: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.slots];
+        for w in 0..vocab as u32 {
+            counts[self.route(matrix, w) as usize] += 1;
+        }
+        counts
+    }
 }
 
 #[cfg(test)]
@@ -75,10 +86,8 @@ mod tests {
     #[test]
     fn load_is_balanced() {
         let r = Ring::new(8, 128);
-        let mut counts = vec![0usize; 8];
-        for w in 0..80_000u32 {
-            counts[r.route(0, w) as usize] += 1;
-        }
+        let counts = r.spread(0, 80_000);
+        assert_eq!(counts.iter().sum::<usize>(), 80_000);
         let mean = 10_000.0;
         for (s, &c) in counts.iter().enumerate() {
             assert!(
@@ -96,6 +105,35 @@ mod tests {
             .count();
         // ≈ 1/4 collide by chance; far fewer than all.
         assert!(same < 500, "matrix id ignored in routing? ({same})");
+    }
+
+    #[test]
+    fn growing_the_ring_only_moves_keys_to_the_new_slot() {
+        // Slot s's virtual points depend only on s, so `Ring::new(n+1,v)`
+        // is `Ring::new(n,v)` plus the new slot's points: a key either
+        // keeps its owner or moves to slot n — never between old slots.
+        // This is the consistent-hashing property the serving router's
+        // resize bound (~1/(n+1) of the vocabulary remapped) rests on.
+        for n in 1..6usize {
+            let old = Ring::new(n, 64);
+            let new = Ring::new(n + 1, 64);
+            let mut moved = 0usize;
+            for w in 0..20_000u32 {
+                let a = old.route(0, w);
+                let b = new.route(0, w);
+                if a != b {
+                    assert_eq!(b, n as u32, "key moved between old slots");
+                    moved += 1;
+                }
+            }
+            let frac = moved as f64 / 20_000.0;
+            let expect = 1.0 / (n + 1) as f64;
+            assert!(
+                frac > 0.35 * expect && frac < 2.5 * expect,
+                "{n}→{} remapped fraction {frac:.4} vs expected ≈{expect:.4}",
+                n + 1
+            );
+        }
     }
 
     #[test]

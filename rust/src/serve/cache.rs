@@ -51,6 +51,9 @@ pub struct CacheStats {
     pub misses: u64,
     /// Tables evicted under the byte budget.
     pub evictions: u64,
+    /// Tables built eagerly by a generation pre-warm (never counted as
+    /// misses — post-swap miss counters isolate genuinely cold words).
+    pub prewarmed: u64,
     /// Tables currently resident.
     pub resident: usize,
     /// Approximate resident bytes.
@@ -67,6 +70,7 @@ pub struct AliasCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    prewarmed: AtomicU64,
 }
 
 impl AliasCache {
@@ -95,6 +99,7 @@ impl AliasCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            prewarmed: AtomicU64::new(0),
         }
     }
 
@@ -120,22 +125,50 @@ impl AliasCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let proposal = Arc::new(build());
+        self.insert(word, Arc::new(build())).0
+    }
+
+    /// Build `word`'s table eagerly if absent — the generation pre-warm
+    /// path ([`super::model::ServingModel::prewarm_from`]). Counts into
+    /// `prewarmed` rather than hits/misses, so post-swap miss counters
+    /// isolate genuinely cold words; if a racing [`Self::get_or_build`]
+    /// lands the table first, that build already counted as the miss and
+    /// this pre-warm counts nothing. Respects the byte budget (an
+    /// over-long pre-warm list evicts its own coldest entries). Returns
+    /// `true` if this call's table became resident, `false` if one
+    /// already was.
+    pub fn prewarm(&self, word: u32, build: impl FnOnce() -> WordProposal) -> bool {
+        let shard = &self.shards[word as usize % self.shards.len()];
+        if shard.lock().unwrap().entries.contains_key(&word) {
+            return false;
+        }
+        let (_, fresh) = self.insert(word, Arc::new(build()));
+        if fresh {
+            self.prewarmed.fetch_add(1, Ordering::Relaxed);
+        }
+        fresh
+    }
+
+    /// Insert a freshly-built proposal (or adopt the resident one if a
+    /// racing build won — the `bool` says which), then enforce the byte
+    /// budget by evicting the least-recently-used tables — never the
+    /// entry just touched. Outstanding `Arc`s keep evicted tables alive
+    /// for in-flight queries; the cache just forgets them.
+    fn insert(&self, word: u32, proposal: Arc<WordProposal>) -> (Arc<WordProposal>, bool) {
+        let shard = &self.shards[word as usize % self.shards.len()];
         let mut s = shard.lock().unwrap();
         s.tick += 1;
         let tick = s.tick;
-        let resident = s
-            .entries
-            .entry(word)
-            .or_insert_with(|| Entry {
-                proposal: proposal.clone(),
+        let mut fresh = false;
+        let resident = s.entries.entry(word).or_insert_with(|| {
+            fresh = true;
+            Entry {
+                proposal,
                 last_used: tick,
-            });
+            }
+        });
         resident.last_used = tick;
         let result = resident.proposal.clone();
-        // Enforce the budget: evict least-recently-used tables (never the
-        // one just touched). Outstanding `Arc`s keep evicted tables alive
-        // for in-flight queries; the cache just forgets them.
         let max_entries = (self.budget_per_shard / self.entry_bytes).max(1);
         if s.entries.len() > max_entries {
             let mut order: Vec<(u64, u32)> = s
@@ -151,7 +184,22 @@ impl AliasCache {
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        result
+        (result, fresh)
+    }
+
+    /// Words with resident tables, coldest-first by per-shard LRU tick
+    /// (cross-shard order is approximate — ticks are per-shard clocks).
+    /// Feeding this list into a pre-warm in order makes the hottest words
+    /// the last inserted, i.e. the survivors if the receiving cache's
+    /// budget is tighter than the resident set.
+    pub fn resident_words(&self) -> Vec<u32> {
+        let mut order: Vec<(u64, u32)> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            order.extend(s.entries.iter().map(|(&w, e)| (e.last_used, w)));
+        }
+        order.sort_unstable();
+        order.into_iter().map(|(_, w)| w).collect()
     }
 
     /// Current statistics.
@@ -164,6 +212,7 @@ impl AliasCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            prewarmed: self.prewarmed.load(Ordering::Relaxed),
             resident,
             resident_bytes: resident * self.entry_bytes,
         }
@@ -223,6 +272,29 @@ mod tests {
         let held = c.get_or_build(7, || proposal(k, 7.0));
         c.get_or_build(8, || proposal(k, 8.0)); // evicts 7
         assert_eq!(held.phi[0], 7.0, "in-flight Arc invalidated by eviction");
+    }
+
+    #[test]
+    fn prewarm_builds_once_and_never_counts_as_miss() {
+        let c = AliasCache::new(8, 1 << 20, 4);
+        assert!(c.prewarm(5, || proposal(8, 5.0)));
+        assert!(!c.prewarm(5, || panic!("resident word must not rebuild")));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.prewarmed), (0, 0, 1));
+        // The first real lookup of a pre-warmed word is a hit, not a build.
+        c.get_or_build(5, || panic!("pre-warmed word must not rebuild"));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses), (1, 0));
+    }
+
+    #[test]
+    fn resident_words_orders_cold_to_hot() {
+        let c = AliasCache::new(4, 1 << 20, 1); // one shard → exact LRU order
+        for w in [3u32, 1, 4] {
+            c.get_or_build(w, || proposal(4, w as f64));
+        }
+        c.get_or_build(3, || panic!("resident")); // 3 becomes hottest
+        assert_eq!(c.resident_words(), vec![1, 4, 3]);
     }
 
     #[test]

@@ -71,6 +71,12 @@ pub trait ServingFamily: Send + Sync {
 
     /// Total (clamped) token mass in the frozen primary statistic.
     fn total_tokens(&self) -> i64;
+
+    /// Whether this family materializes per-word statistics for `w`.
+    /// A vocabulary *slice* (multi-replica serving) answers `false` for
+    /// words it does not own; the full model answers `false` only for
+    /// words never observed in training.
+    fn has_row(&self, w: u32) -> bool;
 }
 
 /// One shared matrix merged across the slot stores: the slots' key sets
@@ -85,27 +91,59 @@ struct Merged {
 }
 
 impl Merged {
-    fn build(stores: &[Store], matrix: u8, vocab: usize, k: usize) -> Merged {
-        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
+    /// Merge one matrix across the slot stores. When `owned` is given
+    /// (replica slices), rows are *materialized* only for accepted words
+    /// while the per-topic totals still accumulate over **every** word's
+    /// cross-store sum, with the same per-cell clamping — so a slice
+    /// allocates `O(owned·K)` yet normalizes bit-identically to the full
+    /// merge (totals are integer sums, hence order-independent).
+    fn build(
+        stores: &[Store],
+        matrix: u8,
+        vocab: usize,
+        k: usize,
+        owned: Option<&dyn Fn(u32) -> bool>,
+    ) -> Merged {
+        // Words of this matrix present in any store.
+        let mut seen = vec![false; vocab];
         for store in stores {
-            for (&(m, word), row) in store.iter() {
-                if m != matrix || (word as usize) >= vocab {
-                    continue;
-                }
-                let dst = rows[word as usize]
-                    .get_or_insert_with(|| vec![0i32; k].into_boxed_slice());
-                for (t, &v) in row.iter().take(k).enumerate() {
-                    dst[t] = dst[t].saturating_add(v);
+            for &(m, word) in store.keys() {
+                if m == matrix && (word as usize) < vocab {
+                    seen[word as usize] = true;
                 }
             }
         }
+        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
         let mut totals = vec![0i64; k];
-        for row in rows.iter().flatten() {
-            for (t, &v) in row.iter().enumerate() {
+        let mut scratch = vec![0i32; k];
+        for w in 0..vocab as u32 {
+            if !seen[w as usize] {
+                continue;
+            }
+            scratch.iter_mut().for_each(|c| *c = 0);
+            for store in stores {
+                if let Some(row) = store.get(&(matrix, w)) {
+                    for (t, &v) in row.iter().take(k).enumerate() {
+                        scratch[t] = scratch[t].saturating_add(v);
+                    }
+                }
+            }
+            for (t, &v) in scratch.iter().enumerate() {
                 totals[t] += v.max(0) as i64;
+            }
+            if owned.map_or(true, |keep| keep(w)) {
+                rows[w as usize] = Some(scratch.clone().into_boxed_slice());
             }
         }
         Merged { rows, totals }
+    }
+
+    /// Whether `w` has a materialized row.
+    #[inline]
+    fn has_row(&self, w: u32) -> bool {
+        self.rows
+            .get(w as usize)
+            .map_or(false, |r| r.is_some())
     }
 
     /// Clamped cell read (0 for never-observed words).
@@ -174,6 +212,9 @@ impl ServingFamily for LdaFamily {
     fn total_tokens(&self) -> i64 {
         self.n.grand_total()
     }
+    fn has_row(&self, w: u32) -> bool {
+        self.n.has_row(w)
+    }
 }
 
 /// PDP serving: frozen customer counts `m_tw` (matrix 0) *and* table
@@ -218,6 +259,9 @@ impl ServingFamily for PdpFamily {
     }
     fn total_tokens(&self) -> i64 {
         self.m.grand_total()
+    }
+    fn has_row(&self, w: u32) -> bool {
+        self.m.has_row(w) || self.s.has_row(w)
     }
 }
 
@@ -264,6 +308,9 @@ impl ServingFamily for HdpFamily {
     fn total_tokens(&self) -> i64 {
         self.n.grand_total()
     }
+    fn has_row(&self, w: u32) -> bool {
+        self.n.has_row(w)
+    }
 }
 
 /// Build the family a snapshot directory's statistics belong to.
@@ -276,6 +323,25 @@ impl ServingFamily for HdpFamily {
 pub fn family_from_stores(
     meta: &SnapshotMeta,
     stores: &[Store],
+) -> Result<Box<dyn ServingFamily>> {
+    family_from_stores_sliced(meta, stores, None)
+}
+
+/// [`family_from_stores`] with an optional vocabulary-slice filter
+/// (multi-replica serving, [`crate::serve::router`]).
+///
+/// When `owned` is given, per-word rows are materialized only for the
+/// words it accepts, while every *normalizer* stays global — per-topic
+/// totals run over all stores' rows, the vocabulary size (hence `β̄`/`γ̄`)
+/// comes from all matrices, and the HDP root table row (matrix 1, row 0
+/// — prior state, not a vocabulary word) is never filtered. That is what
+/// makes a slice's `φ(w,t)` for an owned word bit-identical to the
+/// unsliced model's, which in turn is what makes routed inference
+/// bit-identical to single-replica inference.
+pub fn family_from_stores_sliced(
+    meta: &SnapshotMeta,
+    stores: &[Store],
+    owned: Option<&dyn Fn(u32) -> bool>,
 ) -> Result<Box<dyn ServingFamily>> {
     anyhow::ensure!(meta.k > 0, "snapshot metadata has K = 0");
     let kind = ModelKind::parse(&meta.model).ok_or_else(|| {
@@ -306,7 +372,7 @@ pub fn family_from_stores(
                 alpha: meta.alpha,
                 beta: meta.beta,
                 beta_bar: meta.beta * vocab as f64,
-                n: Merged::build(stores, 0, vocab, k),
+                n: Merged::build(stores, 0, vocab, k, owned),
             }))
         }
         ModelKind::AliasPdp => {
@@ -321,16 +387,20 @@ pub fn family_from_stores(
                 concentration: hyper.concentration,
                 gamma: hyper.root,
                 gamma_bar: hyper.root * vocab as f64,
-                m: Merged::build(stores, 0, vocab, k),
-                s: Merged::build(stores, 1, vocab, k),
+                // Table rows (s_tw) follow their word's slice, so a
+                // word's customers and tables always live together.
+                m: Merged::build(stores, 0, vocab, k, owned),
+                s: Merged::build(stores, 1, vocab, k, owned),
             }))
         }
         ModelKind::AliasHdp => {
             let hyper: TableHyper = need_tables()?;
-            // Matrix 1 row 0 is the root table row, not a word.
+            // Matrix 1 row 0 is the root table row, not a word — it is
+            // K-sized prior state and is replicated into every slice
+            // (never filtered by `owned`).
             let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0]));
             anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
-            let tables = Merged::build(stores, 1, 1, k);
+            let tables = Merged::build(stores, 1, 1, k, None);
             let root: Vec<i64> = (0..k).map(|t| tables.count(0, t) as i64).collect();
             let root_total = root.iter().sum::<i64>() as f64;
             Ok(Box::new(HdpFamily {
@@ -340,7 +410,7 @@ pub fn family_from_stores(
                 b1: hyper.concentration,
                 beta: meta.beta,
                 beta_bar: meta.beta * vocab as f64,
-                n: Merged::build(stores, 0, vocab, k),
+                n: Merged::build(stores, 0, vocab, k, owned),
                 root,
                 root_total,
             }))
@@ -473,17 +543,78 @@ mod tests {
     }
 
     #[test]
+    fn sliced_family_keeps_global_normalizers() {
+        let mut s = Store::new();
+        for w in 0..10u32 {
+            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] });
+        }
+        let meta = meta("AliasLDA", 2, None);
+        let full = family_from_stores(&meta, std::slice::from_ref(&s)).unwrap();
+        let keep = |w: u32| w % 2 == 0;
+        let half =
+            family_from_stores_sliced(&meta, std::slice::from_ref(&s), Some(&keep)).unwrap();
+        for w in 0..10u32 {
+            assert_eq!(half.has_row(w), keep(w), "slice must own exactly its words");
+            for t in 0..2 {
+                if keep(w) {
+                    // Bit-identical: same counts, same (global) totals.
+                    assert_eq!(
+                        half.phi(w, t).to_bits(),
+                        full.phi(w, t).to_bits(),
+                        "sliced φ({w},{t}) drifted"
+                    );
+                } else {
+                    // Non-owned word reads as never-observed (smoothed 0,
+                    // never above the full model's value).
+                    assert!(half.phi(w, t) <= full.phi(w, t));
+                }
+            }
+        }
+        // HDP: the root row survives slicing even when word 0 is not owned.
+        let mut h = Store::new();
+        for w in 0..10u32 {
+            h.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+        }
+        h.insert((1, 0), vec![6, 2, 0]);
+        let hmeta = meta_hdp();
+        let full = family_from_stores(&hmeta, std::slice::from_ref(&h)).unwrap();
+        let none = |_w: u32| false;
+        let empty =
+            family_from_stores_sliced(&hmeta, std::slice::from_ref(&h), Some(&none)).unwrap();
+        for t in 0..3 {
+            assert_eq!(
+                empty.doc_prior(t).to_bits(),
+                full.doc_prior(t).to_bits(),
+                "root-stick prior must be slice-independent"
+            );
+        }
+    }
+
+    fn meta_hdp() -> SnapshotMeta {
+        meta("AliasHDP", 3, Some(hdp_hyper()))
+    }
+
+    #[test]
     fn merge_adds_across_slots_and_clamps_negatives() {
         let mut a = Store::new();
         a.insert((0, 1), vec![3, -5]);
         let mut b = Store::new();
         b.insert((0, 1), vec![1, 2]);
         b.insert((0, 2), vec![0, 4]);
-        let m = Merged::build(&[a, b], 0, 10, 2);
+        let stores = [a, b];
+        let m = Merged::build(&stores, 0, 10, 2, None);
         assert_eq!(m.count(1, 0), 4);
         assert_eq!(m.count(1, 1), 0, "negative cells clamp to 0 on read");
         assert_eq!(m.count(2, 1), 4);
         // Totals clamp per-entry: the −3 in (1,1) does not cancel (2,1).
         assert_eq!(m.totals[1], 4);
+        // A filtered build materializes only owned rows but keeps the
+        // identical (global, clamped) totals.
+        let keep = |w: u32| w == 2;
+        let half = Merged::build(&stores, 0, 10, 2, Some(&keep));
+        assert!(!half.has_row(1) && half.has_row(2));
+        assert_eq!(half.totals, m.totals);
+        assert_eq!(half.count(2, 1), 4);
+        assert_eq!(half.count(1, 0), 0, "unowned row reads as absent");
     }
 }

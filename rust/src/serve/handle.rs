@@ -31,8 +31,38 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use super::infer::{infer_doc, InferConfig, InferResult};
 use super::model::{ServingModel, DEFAULT_CACHE_BYTES};
+use crate::util::rng::Rng;
 use crate::Result;
+
+/// A source of pinned, generation-numbered models that answer fold-in
+/// queries — implemented by the single-process [`ServingHandle`] and by
+/// the multi-replica [`ReplicaSet`](super::router::ReplicaSet). The
+/// [`InferenceService`](super::service::InferenceService) workers are
+/// written against this trait, so one micro-batching pool serves both
+/// topologies unchanged.
+pub trait QueryBackend: Send + Sync {
+    /// Pin the currently-committed generation for a micro-batch. Cheap;
+    /// hold the result for the batch so a concurrent swap can't change
+    /// the serving state mid-batch.
+    fn pin(&self) -> Arc<dyn PinnedGeneration>;
+
+    /// The currently-visible (committed) generation number.
+    fn generation(&self) -> u64;
+}
+
+/// One immutable pinned generation: answers queries until dropped (old
+/// generations stay alive for whoever still pins them).
+pub trait PinnedGeneration: Send + Sync {
+    /// The generation number of this pin.
+    fn generation(&self) -> u64;
+
+    /// Fold `tokens` in against this generation. Deterministic given
+    /// `rng`; fills [`InferResult::generation`] (and, for routed
+    /// backends, [`InferResult::served_by`]).
+    fn infer(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult;
+}
 
 /// One loaded model plus the generation number the handle assigned it.
 pub struct ModelGeneration {
@@ -40,6 +70,18 @@ pub struct ModelGeneration {
     pub generation: u64,
     /// The frozen model of this generation.
     pub model: Arc<ServingModel>,
+}
+
+impl PinnedGeneration for ModelGeneration {
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn infer(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult {
+        let mut res = infer_doc(&self.model, tokens, cfg, rng);
+        res.generation = self.generation;
+        res
+    }
 }
 
 /// Shared, swappable access to the currently-served model.
@@ -169,6 +211,11 @@ impl ServingHandle {
     /// untouched and its backing directory is not repointed.
     pub fn reload(&self, dir: &Path) -> Result<u64> {
         let model = ServingModel::load_dir_with_budget(dir, self.cache_bytes)?;
+        // Pre-warm the incoming generation's alias cache from the
+        // outgoing one's resident word set (still outside any lock):
+        // post-swap queries for previously-hot words hit instead of
+        // paying a cold O(K) rebuild each.
+        model.prewarm_from(&self.model());
         let (generation, won) = self.commit(model, Some(dir))?;
         anyhow::ensure!(
             won,
@@ -185,6 +232,16 @@ impl ServingHandle {
             .dir()
             .ok_or_else(|| anyhow::anyhow!("handle has no backing snapshot directory"))?;
         self.reload(&dir)
+    }
+}
+
+impl QueryBackend for ServingHandle {
+    fn pin(&self) -> Arc<dyn PinnedGeneration> {
+        self.current()
+    }
+
+    fn generation(&self) -> u64 {
+        ServingHandle::generation(self)
     }
 }
 

@@ -68,6 +68,10 @@ pub struct InferResult {
     /// [`ServingHandle`](super::handle::ServingHandle); 0 for direct
     /// calls outside a handle.
     pub generation: u64,
+    /// Replica ids that contributed word proposals, ascending — filled
+    /// by the routed path ([`super::router::SetGeneration::infer_doc`]);
+    /// empty when a single unrouted model served the query.
+    pub served_by: Vec<u32>,
     /// Queue + service latency; filled by the serving layer
     /// ([`super::service`]), zero for direct calls.
     pub latency: Duration,
@@ -90,10 +94,38 @@ pub fn infer_doc(
     cfg: &InferConfig,
     rng: &mut Rng,
 ) -> InferResult {
-    let k = model.k();
-    let priors = model.priors();
-    let prior_total = model.prior_total();
-    if tokens.is_empty() || k == 0 {
+    // Resolve every token's proposal once per query. The `Arc`s pin the
+    // tables for the query's whole lifetime, so this costs one cache
+    // round-trip per token instead of one per token per sweep — and a
+    // mid-query eviction can never force a rebuild inside the sweeps.
+    let proposals: Vec<Arc<WordProposal>> =
+        tokens.iter().map(|&w| model.proposal(w)).collect();
+    infer_with_proposals(
+        model.k(),
+        model.priors(),
+        model.prior_total(),
+        &proposals,
+        cfg,
+        rng,
+    )
+}
+
+/// The fold-in core over already-resolved per-token proposals — shared by
+/// the single-model path ([`infer_doc`]) and the routed multi-replica
+/// path ([`super::router::SetGeneration::infer_doc`]), which gathers each
+/// word's proposal from its owning replica first. Because a replica
+/// slice's proposals are bit-identical to the full model's and this core
+/// consumes `rng` identically in both cases, the routed posterior equals
+/// the single-replica posterior bit-for-bit under a fixed seed.
+pub fn infer_with_proposals(
+    k: usize,
+    priors: &[f64],
+    prior_total: f64,
+    proposals: &[Arc<WordProposal>],
+    cfg: &InferConfig,
+    rng: &mut Rng,
+) -> InferResult {
+    if proposals.is_empty() || k == 0 {
         // No evidence: the mixture is the normalized family prior.
         let theta = if prior_total > 0.0 {
             priors.iter().map(|&p| p / prior_total).collect()
@@ -106,22 +138,16 @@ pub fn infer_doc(
             proposed: 0,
             accepted: 0,
             generation: 0,
+            served_by: Vec::new(),
             latency: Duration::ZERO,
         };
     }
 
-    // Resolve every token's proposal once per query. The `Arc`s pin the
-    // tables for the query's whole lifetime, so this costs one cache
-    // round-trip per token instead of one per token per sweep — and a
-    // mid-query eviction can never force a rebuild inside the sweeps.
-    let proposals: Vec<Arc<WordProposal>> =
-        tokens.iter().map(|&w| model.proposal(w)).collect();
-
     // Init: draw each token from its word's prior-weighted frozen
     // proposal — a far better starting point than uniform for peaked φ.
     let mut n_dt = SparseCounts::new();
-    let mut z: Vec<u32> = Vec::with_capacity(tokens.len());
-    for prop in &proposals {
+    let mut z: Vec<u32> = Vec::with_capacity(proposals.len());
+    for prop in proposals {
         let t = prop.table.sample(rng) as u32;
         n_dt.inc(t);
         z.push(t);
@@ -136,7 +162,7 @@ pub fn infer_doc(
     let mut sparse_weights: Vec<f64> = Vec::with_capacity(16);
 
     for sweep in 0..sweeps {
-        for i in 0..tokens.len() {
+        for i in 0..proposals.len() {
             let old = z[i];
             n_dt.dec(old);
             let prop = &proposals[i];
@@ -206,7 +232,7 @@ pub fn infer_doc(
     }
 
     // Rao-Blackwellized mixture: prior-smoothed average counts.
-    let n_d = tokens.len() as f64;
+    let n_d = proposals.len() as f64;
     let denom = n_d + prior_total;
     let theta: Vec<f64> = acc
         .iter()
@@ -215,10 +241,11 @@ pub fn infer_doc(
         .collect();
     InferResult {
         theta,
-        tokens: tokens.len(),
+        tokens: proposals.len(),
         proposed,
         accepted,
         generation: 0,
+        served_by: Vec::new(),
         latency: Duration::ZERO,
     }
 }

@@ -23,21 +23,39 @@
 //!   in a handful of sweeps.
 //! * [`handle`] — [`ServingHandle`]: a generation-numbered, atomically
 //!   swapped pointer to the current model. [`ServingHandle::reload`]
-//!   picks up newer snapshots without dropping the in-flight queue;
-//!   responses report the generation that served them.
+//!   picks up newer snapshots without dropping the in-flight queue —
+//!   pre-warming the incoming generation's alias cache from the outgoing
+//!   resident word set — and responses report the generation that served
+//!   them. The [`QueryBackend`] / [`PinnedGeneration`] traits abstract
+//!   "pin a generation, answer queries" over both serving topologies.
+//! * [`router`] / [`replica`] — multi-replica serving:
+//!   [`ReplicaSet`] partitions the vocabulary over N [`Replica`]s with
+//!   the same consistent-hash ring training uses ([`crate::ps::ring`]),
+//!   each replica holding a model *slice* (its words' rows, global
+//!   normalizers) and its own budgeted alias LRU. The [`QueryRouter`]
+//!   scatters a document's words to their owners, gathers the
+//!   `prior_t·φ(w,t)` proposals, and the fold-in runs against the merged
+//!   proposal — bit-identical to the single-replica posterior under a
+//!   fixed seed. Reloads prepare per-replica but commit set-wide.
 //! * [`service`] — [`InferenceService`]: a bounded queue + worker pool
-//!   draining queries in micro-batches (each batch pins one generation),
-//!   with per-request deterministic RNG streams and back-pressure on
-//!   overload.
+//!   draining queries in micro-batches (each batch pins one generation
+//!   of either backend), with per-request deterministic RNG streams and
+//!   back-pressure on overload.
 //!
 //! ```no_run
-//! use hplvm::serve::{InferenceService, ServeConfig, ServingHandle};
+//! use hplvm::serve::{InferenceService, ReplicaSet, ServeConfig, ServingHandle};
 //!
 //! let handle = ServingHandle::load_dir(std::path::Path::new("snapshots")).unwrap();
 //! let svc = InferenceService::spawn(handle.clone(), ServeConfig::default());
 //! let mixture = svc.infer(vec![3, 17, 42]).unwrap();
 //! println!("gen {} top topic: {:?}", mixture.generation, mixture.top_topics(1));
 //! handle.reload_latest().unwrap(); // swap in newer snapshots, queue intact
+//!
+//! // Scale out: the same service over four vocabulary-sliced replicas.
+//! let set = ReplicaSet::load_dir(std::path::Path::new("snapshots"), 4).unwrap();
+//! let svc = InferenceService::spawn(set.clone(), ServeConfig::default());
+//! let routed = svc.infer(vec![3, 17, 42]).unwrap();
+//! println!("replicas {:?} answered", routed.served_by);
 //! ```
 
 pub mod cache;
@@ -45,11 +63,15 @@ pub mod family;
 pub mod handle;
 pub mod infer;
 pub mod model;
+pub mod replica;
+pub mod router;
 pub mod service;
 
 pub use cache::{AliasCache, CacheStats, WordProposal};
 pub use family::{HdpFamily, LdaFamily, PdpFamily, ServingFamily};
-pub use handle::{ModelGeneration, ServingHandle};
-pub use infer::{infer_doc, InferConfig, InferResult};
+pub use handle::{ModelGeneration, PinnedGeneration, QueryBackend, ServingHandle};
+pub use infer::{infer_doc, infer_with_proposals, InferConfig, InferResult};
 pub use model::ServingModel;
+pub use replica::Replica;
+pub use router::{QueryRouter, ReplicaSet, SetGeneration, REPLICA_VNODES};
 pub use service::{run_queries, synth_queries, InferenceService, ServeConfig, ServeStats};

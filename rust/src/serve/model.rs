@@ -21,7 +21,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use super::cache::{AliasCache, CacheStats, WordProposal};
-use super::family::{family_from_stores, ServingFamily};
+use super::family::{family_from_stores_sliced, ServingFamily};
 use crate::config::ModelKind;
 use crate::eval::perplexity::TopicModelView;
 use crate::ps::ring::Ring;
@@ -73,7 +73,18 @@ impl ServingModel {
 
     /// Load with an explicit alias-cache byte budget.
     pub fn load_dir_with_budget(dir: &Path, cache_bytes: usize) -> Result<ServingModel> {
-        let mut slots: Vec<(Option<SnapshotMeta>, Store)> = Vec::new();
+        let (meta, stores) = Self::load_dir_stores(dir)?;
+        Self::from_stores(meta, stores, cache_bytes)
+    }
+
+    /// Read, decode, and cross-validate every `server_slot*.snap` under
+    /// `dir`, returning the shared header plus the per-slot stores in
+    /// file-name order (a deterministic merge order). Shared by the
+    /// single-model loader above and the multi-replica
+    /// [`ReplicaSet`](super::router::ReplicaSet) loader, which builds one
+    /// vocabulary slice per replica from one decode of the same stores.
+    pub fn load_dir_stores(dir: &Path) -> Result<(SnapshotMeta, Vec<Store>)> {
+        let mut slots: Vec<(String, Option<SnapshotMeta>, Store)> = Vec::new();
         let entries = std::fs::read_dir(dir)
             .map_err(|e| anyhow::anyhow!("cannot read snapshot dir {}: {e}", dir.display()))?;
         for entry in entries.flatten() {
@@ -83,10 +94,11 @@ impl ServingModel {
             }
             let bytes = snapshot::read_snapshot(&entry.path())
                 .ok_or_else(|| anyhow::anyhow!("unreadable snapshot {name}"))?;
-            let decoded = snapshot::decode_store_meta(&bytes)
+            let (m, store) = snapshot::decode_store_meta(&bytes)
                 .ok_or_else(|| anyhow::anyhow!("corrupt snapshot {name}"))?;
-            slots.push(decoded);
+            slots.push((name, m, store));
         }
+        slots.sort_by(|a, b| a.0.cmp(&b.0));
         anyhow::ensure!(
             !slots.is_empty(),
             "no server_slot*.snap files in {} — train with --snapshot-dir first",
@@ -94,7 +106,7 @@ impl ServingModel {
         );
         let meta = slots
             .iter()
-            .find_map(|(m, _)| m.clone())
+            .find_map(|(_, m, _)| m.clone())
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "snapshots in {} predate the v2 format and carry no \
@@ -106,12 +118,12 @@ impl ServingModel {
         // it would dodge every consistency check below (no header to
         // compare), so refuse outright rather than merge mixed runs.
         anyhow::ensure!(
-            slots.iter().all(|(m, _)| m.is_some()),
+            slots.iter().all(|(_, m, _)| m.is_some()),
             "snapshot dir {} mixes v2+ and pre-v2 slot files — stale \
              snapshots from an earlier run; re-train to regenerate",
             dir.display()
         );
-        for (m, _) in slots.iter() {
+        for (_, m, _) in slots.iter() {
             if let Some(m) = m {
                 anyhow::ensure!(
                     m.k == meta.k && m.n_servers == meta.n_servers && m.vnodes == meta.vnodes,
@@ -167,7 +179,7 @@ impl ServingModel {
         // owns its arc. A mismatch means mixed snapshot generations.
         let ring = Ring::new(meta.n_servers as usize, meta.vnodes as usize);
         let mut misrouted = 0u64;
-        for (m, store) in slots.iter() {
+        for (_, m, store) in slots.iter() {
             if let Some(m) = m {
                 for &(matrix, word) in store.keys() {
                     if ring.route(matrix, word) != m.slot {
@@ -183,7 +195,7 @@ impl ServingModel {
                  snapshot dir may mix runs"
             );
         }
-        Self::from_stores(meta, slots.into_iter().map(|(_, s)| s).collect(), cache_bytes)
+        Ok((meta, slots.into_iter().map(|(_, _, s)| s).collect()))
     }
 
     /// Build from already-decoded stores (exposed for tests and tools).
@@ -192,7 +204,33 @@ impl ServingModel {
         stores: Vec<Store>,
         cache_bytes: usize,
     ) -> Result<ServingModel> {
-        let family = family_from_stores(&meta, &stores)?;
+        Self::build(meta, &stores, cache_bytes, None)
+    }
+
+    /// Build a vocabulary **slice**: per-word rows are materialized only
+    /// for words `owned` accepts, while every normalizer (per-topic
+    /// totals, document-side priors, the HDP root sticks, the vocabulary
+    /// size) is computed over *all* stores — so `φ(w,t)`, the priors, and
+    /// the alias proposal of an owned word are bit-identical to the
+    /// unsliced model's. The multi-replica router
+    /// ([`ReplicaSet`](super::router::ReplicaSet)) loads one slice per
+    /// replica, each with its own independent alias cache.
+    pub fn from_stores_sliced(
+        meta: SnapshotMeta,
+        stores: &[Store],
+        cache_bytes: usize,
+        owned: &dyn Fn(u32) -> bool,
+    ) -> Result<ServingModel> {
+        Self::build(meta, stores, cache_bytes, Some(owned))
+    }
+
+    fn build(
+        meta: SnapshotMeta,
+        stores: &[Store],
+        cache_bytes: usize,
+        owned: Option<&dyn Fn(u32) -> bool>,
+    ) -> Result<ServingModel> {
+        let family = family_from_stores_sliced(&meta, stores, owned)?;
         let k = family.k();
         let vocab = family.vocab();
         let priors: Box<[f64]> = (0..k).map(|t| family.doc_prior(t).max(0.0)).collect();
@@ -273,23 +311,67 @@ impl ServingModel {
 
     /// The word's frozen dense proposal, from the cache (built on miss).
     pub fn proposal(&self, w: u32) -> Arc<WordProposal> {
-        self.cache.get_or_build(w, || {
-            let mut phi = Vec::with_capacity(self.k);
-            let mut q = Vec::with_capacity(self.k);
-            let mut qsum = 0.0;
-            for t in 0..self.k {
-                let p = self.family.phi(w, t);
-                let weighted = self.priors[t] * p;
-                phi.push(p);
-                q.push(weighted);
-                qsum += weighted;
+        self.cache.get_or_build(w, || self.build_proposal(w))
+    }
+
+    /// The O(K) table build behind [`proposal`](Self::proposal) and the
+    /// pre-warm path.
+    fn build_proposal(&self, w: u32) -> WordProposal {
+        let mut phi = Vec::with_capacity(self.k);
+        let mut q = Vec::with_capacity(self.k);
+        let mut qsum = 0.0;
+        for t in 0..self.k {
+            let p = self.family.phi(w, t);
+            let weighted = self.priors[t] * p;
+            phi.push(p);
+            q.push(weighted);
+            qsum += weighted;
+        }
+        WordProposal {
+            table: AliasTable::build(&q),
+            phi: phi.into_boxed_slice(),
+            qsum,
+        }
+    }
+
+    /// Whether this model materializes per-word statistics for `w` —
+    /// `false` on a vocabulary slice for words it does not own, and on
+    /// any model for words never observed in training.
+    pub fn has_row(&self, w: u32) -> bool {
+        self.family.has_row(w)
+    }
+
+    /// Words with resident alias tables, coldest-first (the pre-warm
+    /// handoff set a reloading generation inherits).
+    pub fn resident_words(&self) -> Vec<u32> {
+        self.cache.resident_words()
+    }
+
+    /// Eagerly build alias tables for `words` (skipping already-resident
+    /// ones and out-of-vocabulary ids); returns how many were built.
+    /// Builds count into [`CacheStats::prewarmed`], never `misses`.
+    pub fn prewarm_words(&self, words: &[u32]) -> usize {
+        let mut built = 0;
+        for &w in words {
+            if (w as usize) < self.vocab && self.cache.prewarm(w, || self.build_proposal(w)) {
+                built += 1;
             }
-            WordProposal {
-                table: AliasTable::build(&q),
-                phi: phi.into_boxed_slice(),
-                qsum,
-            }
-        })
+        }
+        built
+    }
+
+    /// Pre-warm this model's alias cache from the resident word set of
+    /// the `outgoing` generation, coldest-first — so the hottest words
+    /// are inserted last and win this cache's byte budget. Fixes the
+    /// post-swap p99 spike of a cold reloaded cache: the first query for
+    /// a previously-hot word is a hit, not an O(K) rebuild. No-op when
+    /// the models disagree on topic count (the swap will be refused
+    /// anyway).
+    pub fn prewarm_from(&self, outgoing: &ServingModel) -> usize {
+        if outgoing.k != self.k {
+            return 0;
+        }
+        self.prewarm_words(&outgoing.resident_words())
     }
 }
 
@@ -410,6 +492,32 @@ mod tests {
             Err(e) => format!("{e:#}"),
         };
         assert!(msg.contains("AliasPDP") && msg.contains("AliasLDA"), "{msg}");
+    }
+
+    #[test]
+    fn prewarm_from_carries_the_resident_set_across_generations() {
+        let stores = || {
+            let mut s = Store::new();
+            for w in 0..10u32 {
+                s.insert((0, w), if w < 5 { vec![9, 0] } else { vec![0, 9] });
+            }
+            vec![s]
+        };
+        let old = ServingModel::from_stores(meta(2, 1), stores(), 1 << 20).unwrap();
+        for w in [1u32, 3, 7] {
+            old.proposal(w);
+        }
+        let new = ServingModel::from_stores(meta(2, 1), stores(), 1 << 20).unwrap();
+        assert_eq!(new.prewarm_from(&old), 3);
+        let st = new.cache_stats();
+        assert_eq!((st.prewarmed, st.misses), (3, 0));
+        // First post-swap touch of a previously-resident word: a hit,
+        // not an O(K) rebuild — and bit-identical to the old table.
+        let p = new.proposal(3);
+        let st = new.cache_stats();
+        assert_eq!((st.hits, st.misses), (1, 0));
+        let q = old.proposal(3);
+        assert_eq!(p.qsum.to_bits(), q.qsum.to_bits());
     }
 
     #[test]

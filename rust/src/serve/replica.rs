@@ -1,0 +1,173 @@
+//! One serving replica: a vocabulary slice of the model with its own
+//! alias cache and its own staged generation.
+//!
+//! A [`Replica`] owns the slice of the model whose words the set's
+//! consistent-hash ring assigns to it ([`super::router::QueryRouter`]) —
+//! the paper's model-parallel layout carried over to serving: no replica
+//! holds the whole word–topic matrix, and each replica's budgeted alias
+//! LRU is touched only by the words it owns, so there is no shared-lock
+//! contention between replicas on the cache hot path.
+//!
+//! Generations swap **per replica** but commit **set-wide**: a reload
+//! prepares every replica's next slice first
+//! ([`Replica::prepare`] — load, slice, pre-warm, stage), and only when
+//! every replica has staged does the [`ReplicaSet`] make the new
+//! generation visible in one atomic swap. A replica that fails mid-reload
+//! (I/O error, or the [`Replica::fail_next_reload`] chaos hook) aborts
+//! the commit; the set keeps answering from the old generation and no
+//! request is dropped.
+//!
+//! [`ReplicaSet`]: super::router::ReplicaSet
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::cache::CacheStats;
+use super::model::ServingModel;
+use super::router::QueryRouter;
+use crate::ps::snapshot::{SnapshotMeta, Store};
+use crate::Result;
+
+/// One replica of a [`ReplicaSet`](super::router::ReplicaSet): identity,
+/// the most recently staged slice, and a fault-injection hook.
+pub struct Replica {
+    id: u32,
+    /// Most recently prepared slice (the per-replica swap target). Only
+    /// visible to queries once the set-wide commit publishes it.
+    staged: Mutex<Arc<ServingModel>>,
+    /// When set, the next [`prepare`](Self::prepare) fails — the
+    /// fault-injection hook for reload/failover tests and chaos drills.
+    fail_next: AtomicBool,
+}
+
+impl Replica {
+    /// Wrap an initially-loaded slice as replica `id`.
+    pub(super) fn new(id: u32, slice: Arc<ServingModel>) -> Replica {
+        Replica {
+            id,
+            staged: Mutex::new(slice),
+            fail_next: AtomicBool::new(false),
+        }
+    }
+
+    /// This replica's id (its slot on the set's vocabulary ring).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// The most recently staged slice. Equals the committed generation's
+    /// slice except in the window between a prepare and its commit (or
+    /// after an aborted reload — staged slices of an aborted generation
+    /// are never served).
+    pub fn staged_model(&self) -> Arc<ServingModel> {
+        self.staged.lock().unwrap().clone()
+    }
+
+    /// Alias-cache statistics of the staged slice.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.staged_model().cache_stats()
+    }
+
+    /// Fault injection: make the next [`prepare`](Self::prepare) fail as
+    /// if this replica dropped mid-reload. One-shot (cleared when it
+    /// fires), so a subsequent reload attempt succeeds — the re-install
+    /// path the fault tests exercise.
+    pub fn fail_next_reload(&self) {
+        self.fail_next.store(true, Ordering::SeqCst);
+    }
+
+    /// Phase 1 of a set reload: build this replica's next-generation
+    /// slice from the decoded stores, pre-warm its alias cache from the
+    /// outgoing slice's resident word set, and stage it. Returns the
+    /// staged slice for the set-wide commit
+    /// ([`ReplicaSet::install_stores`](super::router::ReplicaSet::install_stores)).
+    /// Errors (a decode problem surfaced at slice build, or an injected
+    /// fault) abort the whole set's reload — the old generation keeps
+    /// serving.
+    pub fn prepare(
+        &self,
+        meta: SnapshotMeta,
+        stores: &[Store],
+        cache_bytes: usize,
+        router: &QueryRouter,
+        outgoing: &ServingModel,
+    ) -> Result<Arc<ServingModel>> {
+        anyhow::ensure!(
+            !self.fail_next.swap(false, Ordering::SeqCst),
+            "replica {} dropped mid-reload (injected fault)",
+            self.id
+        );
+        let id = self.id;
+        let slice =
+            ServingModel::from_stores_sliced(meta, stores, cache_bytes, &|w| {
+                router.owner(w) == id
+            })?;
+        // The ring is fixed for the set's lifetime, so the outgoing
+        // resident set contains only words this replica still owns.
+        slice.prewarm_from(outgoing);
+        let slice = Arc::new(slice);
+        *self.staged.lock().unwrap() = slice.clone();
+        Ok(slice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_meta() -> SnapshotMeta {
+        SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables: None,
+        }
+    }
+
+    fn toy_stores() -> Vec<Store> {
+        let mut s = Store::new();
+        for w in 0..10u32 {
+            s.insert((0, w), if w < 5 { vec![6, 0] } else { vec![0, 6] });
+        }
+        vec![s]
+    }
+
+    #[test]
+    fn prepare_stages_a_prewarmed_slice_and_faults_fire_once() {
+        let router = QueryRouter::new(2);
+        let stores = toy_stores();
+        // Exercise whichever replica owns word 0 — guaranteed non-empty.
+        let id = router.owner(0);
+        let slice0 = Arc::new(
+            ServingModel::from_stores_sliced(toy_meta(), &stores, 1 << 20, &|w| {
+                router.owner(w) == id
+            })
+            .unwrap(),
+        );
+        // Make an owned word's table resident in the outgoing slice.
+        slice0.proposal(0);
+        let r = Replica::new(id, slice0.clone());
+
+        r.fail_next_reload();
+        let msg = match r.prepare(toy_meta(), &stores, 1 << 20, &router, &slice0) {
+            Ok(_) => panic!("injected fault must fail the prepare"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("injected fault"), "{msg}");
+        // One-shot: the retry succeeds and the staged slice is pre-warmed.
+        let staged = r
+            .prepare(toy_meta(), &stores, 1 << 20, &router, &slice0)
+            .unwrap();
+        assert!(Arc::ptr_eq(&staged, &r.staged_model()));
+        let st = staged.cache_stats();
+        assert_eq!(st.prewarmed, 1, "outgoing resident word must pre-warm");
+        assert_eq!(st.misses, 0);
+    }
+}

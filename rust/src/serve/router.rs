@@ -1,0 +1,500 @@
+//! Multi-replica serving: a consistent-hash query router over a set of
+//! vocabulary-sliced replicas.
+//!
+//! The paper's serving-scale story mirrors its training-scale story:
+//! partition the model state over machines with consistent hashing (§4's
+//! Chord-style ring, [`crate::ps::ring`]) so no single node holds the
+//! whole word–topic matrix. This module carries that layout into the
+//! inference tier:
+//!
+//! * [`QueryRouter`] — the vocabulary partition: word `w` is owned by
+//!   exactly one of `N` replicas (`ring.route(0, w)`), the same
+//!   mechanism the training parameter server uses for its keys. Growing
+//!   the set `N → N+1` only moves the ~`1/(N+1)` of words the new
+//!   replica's arcs capture; ownership between existing replicas never
+//!   changes.
+//! * [`ReplicaSet`] — `N` [`Replica`]s, each holding a
+//!   [`ServingModel`] *slice* (only its owned words' rows, all
+//!   normalizers global — see
+//!   [`ServingModel::from_stores_sliced`]) with its own budgeted alias
+//!   LRU, so replicas never contend on a shared cache lock.
+//! * [`SetGeneration`] — one committed, immutable view of the set. A
+//!   query **scatters** its words to the owning replicas, **gathers**
+//!   their `prior_t·φ(w,t)` proposals, and runs the MH-Walker fold-in
+//!   ([`super::infer::infer_with_proposals`]) against the merged
+//!   proposal. Slices are bit-identical to the full model for owned
+//!   words and the fold-in consumes the RNG identically, so the routed
+//!   posterior is **exactly** the single-replica posterior under a fixed
+//!   seed.
+//!
+//! Reloads are two-phase: every replica *prepares* (loads, slices,
+//! pre-warms from its outgoing resident set, stages) and only then does
+//! the set *commit* — one atomic swap that makes the new generation
+//! visible everywhere at once. A replica dropping mid-reload aborts the
+//! commit; the set keeps serving the old generation with zero dropped
+//! requests, and a later successful reload bumps the set-wide
+//! generation.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::handle::{PinnedGeneration, QueryBackend};
+use super::infer::{infer_with_proposals, InferConfig, InferResult};
+use super::model::{ServingModel, DEFAULT_CACHE_BYTES};
+use super::replica::Replica;
+use crate::config::ModelKind;
+use crate::ps::ring::Ring;
+use crate::ps::snapshot::{SnapshotMeta, Store};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Virtual ring points per replica. More than the training default:
+/// serving replicas are few and long-lived, and a finer ring tightens
+/// both the load balance and the `1/(N+1)` resize-remap bound.
+pub const REPLICA_VNODES: usize = 128;
+
+/// Matrix id the vocabulary is routed by — the primary word–topic
+/// statistic. Table-side rows (PDP `s_tw`) follow their word, so a
+/// word's statistics always live together on one replica.
+const ROUTE_MATRIX: u8 = 0;
+
+/// The vocabulary partition: which replica owns which word.
+#[derive(Clone, Debug)]
+pub struct QueryRouter {
+    ring: Ring,
+}
+
+impl QueryRouter {
+    /// A router over `replicas` slots (≥ 1).
+    pub fn new(replicas: usize) -> QueryRouter {
+        QueryRouter {
+            ring: Ring::new(replicas.max(1), REPLICA_VNODES),
+        }
+    }
+
+    /// Number of replicas routed over.
+    pub fn replicas(&self) -> usize {
+        self.ring.slots()
+    }
+
+    /// The replica that owns word `w`.
+    #[inline]
+    pub fn owner(&self, w: u32) -> u32 {
+        self.ring.route(ROUTE_MATRIX, w)
+    }
+
+    /// Partition `0..vocab` into per-replica owned-word lists (ascending
+    /// within each replica). Total and disjoint by construction — the
+    /// property the router test suite checks against [`Self::owner`].
+    pub fn partition(&self, vocab: usize) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.replicas()];
+        for w in 0..vocab as u32 {
+            out[self.owner(w) as usize].push(w);
+        }
+        out
+    }
+
+    /// Per-replica owned-word counts over `0..vocab` — the load-balance
+    /// diagnostic behind `serve --replicas N`'s topology report (a thin
+    /// wrapper over [`Ring::spread`]).
+    pub fn spread(&self, vocab: usize) -> Vec<usize> {
+        self.ring.spread(ROUTE_MATRIX, vocab)
+    }
+
+    /// Scatter a document: token *indices* grouped by owning replica
+    /// (replicas without any of the document's words get an empty list).
+    pub fn scatter(&self, tokens: &[u32]) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.replicas()];
+        for (i, &w) in tokens.iter().enumerate() {
+            out[self.owner(w) as usize].push(i);
+        }
+        out
+    }
+}
+
+/// One committed generation of a [`ReplicaSet`]: the router plus every
+/// replica's slice, immutable until dropped. Old generations stay alive
+/// for micro-batches that pinned them across a swap.
+pub struct SetGeneration {
+    /// Monotonic set-wide generation (1 = the initially loaded set).
+    pub generation: u64,
+    router: Arc<QueryRouter>,
+    models: Vec<Arc<ServingModel>>,
+}
+
+impl SetGeneration {
+    /// Per-replica slices (index = replica id).
+    pub fn models(&self) -> &[Arc<ServingModel>] {
+        &self.models
+    }
+
+    /// The router this generation scatters with.
+    pub fn router(&self) -> &QueryRouter {
+        &self.router
+    }
+
+    /// Scatter `tokens` to their owning replicas, gather each word's
+    /// `prior_t·φ(w,t)` proposal, and fold the document in against the
+    /// merged proposal. Bit-identical to
+    /// [`infer_doc`](super::infer::infer_doc) on the unsliced model
+    /// under the same `rng` seed; [`InferResult::served_by`] lists the
+    /// replicas that contributed (ascending).
+    pub fn infer_doc(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult {
+        let scatter = self.router.scatter(tokens);
+        let mut gathered: Vec<Option<Arc<super::cache::WordProposal>>> =
+            vec![None; tokens.len()];
+        let mut served_by = Vec::new();
+        for (r, indices) in scatter.iter().enumerate() {
+            if indices.is_empty() {
+                continue;
+            }
+            served_by.push(r as u32);
+            let slice = &self.models[r];
+            for &i in indices {
+                gathered[i] = Some(slice.proposal(tokens[i]));
+            }
+        }
+        let proposals: Vec<_> = gathered.into_iter().flatten().collect();
+        debug_assert_eq!(proposals.len(), tokens.len(), "scatter lost a token");
+        // Priors and totals are global state, bit-identical on every
+        // slice — read them from replica 0.
+        let primary = &self.models[0];
+        let mut res = infer_with_proposals(
+            primary.k(),
+            primary.priors(),
+            primary.prior_total(),
+            &proposals,
+            cfg,
+            rng,
+        );
+        res.generation = self.generation;
+        res.served_by = served_by;
+        res
+    }
+}
+
+impl PinnedGeneration for SetGeneration {
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn infer(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult {
+        self.infer_doc(tokens, cfg, rng)
+    }
+}
+
+/// `N` vocabulary-sliced replicas behind one query router, with
+/// generation-numbered set-wide hot reload. The replica partition is
+/// independent of the *training* ring (`meta.n_servers`): the set
+/// re-partitions the merged statistics over its own ring, so any replica
+/// count can serve any snapshot directory.
+pub struct ReplicaSet {
+    router: Arc<QueryRouter>,
+    replicas: Vec<Replica>,
+    current: RwLock<Arc<SetGeneration>>,
+    /// Next set-wide generation number to hand out.
+    next_gen: AtomicU64,
+    /// Alias-cache budget **per replica**.
+    cache_bytes: usize,
+    /// The directory backing this set (None for in-memory sets).
+    dir: Mutex<Option<PathBuf>>,
+}
+
+impl ReplicaSet {
+    /// Load a snapshot directory into `replicas` slices with the default
+    /// per-replica cache budget.
+    pub fn load_dir(dir: &Path, replicas: usize) -> Result<Arc<ReplicaSet>> {
+        Self::load_dir_with_budget(dir, replicas, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Load with an explicit per-replica alias-cache byte budget.
+    pub fn load_dir_with_budget(
+        dir: &Path,
+        replicas: usize,
+        cache_bytes: usize,
+    ) -> Result<Arc<ReplicaSet>> {
+        let (meta, stores) = ServingModel::load_dir_stores(dir)?;
+        let set = Self::build(meta, &stores, replicas, cache_bytes)?;
+        *set.dir.lock().unwrap() = Some(dir.to_path_buf());
+        Ok(set)
+    }
+
+    /// Build from already-decoded stores (tests, tools, synthetic sets).
+    pub fn from_stores(
+        meta: SnapshotMeta,
+        stores: Vec<Store>,
+        replicas: usize,
+        cache_bytes: usize,
+    ) -> Result<Arc<ReplicaSet>> {
+        Self::build(meta, &stores, replicas, cache_bytes)
+    }
+
+    fn build(
+        meta: SnapshotMeta,
+        stores: &[Store],
+        replicas: usize,
+        cache_bytes: usize,
+    ) -> Result<Arc<ReplicaSet>> {
+        anyhow::ensure!(replicas >= 1, "a replica set needs at least one replica");
+        let router = Arc::new(QueryRouter::new(replicas));
+        let mut models = Vec::with_capacity(replicas);
+        for r in 0..replicas as u32 {
+            let slice =
+                ServingModel::from_stores_sliced(meta.clone(), stores, cache_bytes, &|w| {
+                    router.owner(w) == r
+                })?;
+            models.push(Arc::new(slice));
+        }
+        let replicas_vec: Vec<Replica> = models
+            .iter()
+            .enumerate()
+            .map(|(r, m)| Replica::new(r as u32, m.clone()))
+            .collect();
+        Ok(Arc::new(ReplicaSet {
+            current: RwLock::new(Arc::new(SetGeneration {
+                generation: 1,
+                router: router.clone(),
+                models,
+            })),
+            router,
+            replicas: replicas_vec,
+            next_gen: AtomicU64::new(2),
+            cache_bytes,
+            dir: Mutex::new(None),
+        }))
+    }
+
+    /// Number of replicas in the set.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// One replica, for stats and fault injection (panics on a bad id).
+    pub fn replica(&self, id: usize) -> &Replica {
+        &self.replicas[id]
+    }
+
+    /// The vocabulary router (fixed for the set's lifetime).
+    pub fn router(&self) -> &QueryRouter {
+        &self.router
+    }
+
+    /// The committed generation. Hold the result for the duration of a
+    /// batch so a concurrent set-wide swap can't change the topology
+    /// mid-batch.
+    pub fn current(&self) -> Arc<SetGeneration> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The currently-visible set-wide generation number.
+    pub fn generation(&self) -> u64 {
+        self.current.read().unwrap().generation
+    }
+
+    /// The snapshot directory backing this set, if any.
+    pub fn dir(&self) -> Option<PathBuf> {
+        self.dir.lock().unwrap().clone()
+    }
+
+    /// Route one document through the committed generation —
+    /// bit-identical to single-replica [`infer_doc`] on the unsliced
+    /// model under the same seed.
+    ///
+    /// [`infer_doc`]: super::infer::infer_doc
+    pub fn infer(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult {
+        self.current().infer_doc(tokens, cfg, rng)
+    }
+
+    /// Two-phase set reload from already-decoded stores. Phase 1
+    /// prepares every replica in turn (slice + pre-warm + stage,
+    /// [`Replica::prepare`]); any failure — including an injected fault —
+    /// aborts with the old generation untouched. Phase 2 commits the
+    /// staged slices set-wide in one swap. Returns the new set
+    /// generation.
+    pub fn install_stores(&self, meta: SnapshotMeta, stores: &[Store]) -> Result<u64> {
+        let outgoing = self.current();
+        // Refuse family/shape mismatches *before* phase 1: the N slice
+        // builds and pre-warms are pure waste on a directory that can
+        // never commit (e.g. `--watch` pointed at a retrained-as-PDP
+        // dir would otherwise rebuild every replica each poll cycle).
+        // Every committed generation passed this same check, so the
+        // commit below only needs the monotonicity guard.
+        let incoming = ModelKind::parse(&meta.model).ok_or_else(|| {
+            anyhow::anyhow!("snapshot records unknown model family {:?}", meta.model)
+        })?;
+        anyhow::ensure!(
+            incoming.family_name() == outgoing.models[0].kind().family_name(),
+            "cannot swap the serving family from {} to {} — start a new \
+             replica set for a different family instead",
+            outgoing.models[0].meta().model,
+            meta.model
+        );
+        anyhow::ensure!(
+            meta.k as usize == outgoing.models[0].k(),
+            "cannot swap in a snapshot with a different topic count \
+             (K {} → {}) — restart the set to change model shape",
+            outgoing.models[0].k(),
+            meta.k
+        );
+        let mut fresh = Vec::with_capacity(self.replicas.len());
+        for (r, replica) in self.replicas.iter().enumerate() {
+            let slice = replica
+                .prepare(
+                    meta.clone(),
+                    stores,
+                    self.cache_bytes,
+                    &self.router,
+                    &outgoing.models[r],
+                )
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "set reload aborted (still serving generation {}): {e}",
+                        outgoing.generation
+                    )
+                })?;
+            fresh.push(slice);
+        }
+        // Commit set-wide: one atomic swap publishes every staged slice.
+        let generation = self.next_gen.fetch_add(1, Ordering::SeqCst);
+        let next = Arc::new(SetGeneration {
+            generation,
+            router: self.router.clone(),
+            models: fresh,
+        });
+        let mut cur = self.current.write().unwrap();
+        anyhow::ensure!(
+            generation > cur.generation,
+            "set reload superseded: generation {} was committed \
+             concurrently and is newer; this load was discarded",
+            cur.generation
+        );
+        *cur = next;
+        Ok(generation)
+    }
+
+    /// Reload a (presumably newer) snapshot directory into every replica
+    /// and commit set-wide. The expensive part (decode + N slice builds +
+    /// pre-warms) runs on the caller's thread with no lock held; on error
+    /// the set keeps serving its current generation untouched.
+    pub fn reload(&self, dir: &Path) -> Result<u64> {
+        let (meta, stores) = ServingModel::load_dir_stores(dir)?;
+        let generation = self.install_stores(meta, &stores)?;
+        *self.dir.lock().unwrap() = Some(dir.to_path_buf());
+        Ok(generation)
+    }
+
+    /// [`reload`](Self::reload) from the directory this set was last
+    /// loaded from (the `serve --watch --replicas N` path).
+    pub fn reload_latest(&self) -> Result<u64> {
+        let dir = self
+            .dir()
+            .ok_or_else(|| anyhow::anyhow!("replica set has no backing snapshot directory"))?;
+        self.reload(&dir)
+    }
+}
+
+impl QueryBackend for ReplicaSet {
+    fn pin(&self) -> Arc<dyn PinnedGeneration> {
+        self.current()
+    }
+
+    fn generation(&self) -> u64 {
+        ReplicaSet::generation(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::infer::infer_doc;
+
+    fn toy_meta() -> SnapshotMeta {
+        SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 20,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables: None,
+        }
+    }
+
+    fn toy_stores(weight: i32) -> Vec<Store> {
+        let mut s = Store::new();
+        for w in 0..20u32 {
+            s.insert((0, w), if w < 10 { vec![weight, 0] } else { vec![0, weight] });
+        }
+        vec![s]
+    }
+
+    #[test]
+    fn partition_covers_vocab_exactly_once() {
+        let router = QueryRouter::new(3);
+        let parts = router.partition(1000);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 1000);
+        let mut seen = vec![false; 1000];
+        for (r, part) in parts.iter().enumerate() {
+            for &w in part {
+                assert_eq!(router.owner(w), r as u32);
+                assert!(!seen[w as usize], "word {w} owned twice");
+                seen[w as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn routed_matches_single_replica_bitwise() {
+        let single =
+            ServingModel::from_stores(toy_meta(), toy_stores(50), 1 << 20).unwrap();
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 3, 1 << 20).unwrap();
+        let doc: Vec<u32> = (0..30).map(|i| (i % 20) as u32).collect();
+        let cfg = InferConfig::default();
+        let a = infer_doc(&single, &doc, &cfg, &mut Rng::new(77));
+        let b = set.infer(&doc, &cfg, &mut Rng::new(77));
+        assert_eq!(a.theta.len(), b.theta.len());
+        for (x, y) in a.theta.iter().zip(b.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "routed θ diverged");
+        }
+        assert!(!b.served_by.is_empty());
+        assert_eq!(b.generation, 1);
+    }
+
+    #[test]
+    fn install_commits_set_wide_and_fault_aborts() {
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 2, 1 << 20).unwrap();
+        assert_eq!(set.generation(), 1);
+        // Injected fault on replica 1 → whole commit aborts.
+        set.replica(1).fail_next_reload();
+        let msg = match set.install_stores(toy_meta(), &toy_stores(60)) {
+            Ok(_) => panic!("faulted prepare must abort the commit"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("still serving generation 1"), "{msg}");
+        assert_eq!(set.generation(), 1, "aborted reload must not swap");
+        // Fault is one-shot: the retry commits set-wide.
+        let g = set.install_stores(toy_meta(), &toy_stores(60)).unwrap();
+        assert_eq!(g, 2);
+        assert_eq!(set.generation(), 2);
+        for m in set.current().models() {
+            assert_eq!(m.total_tokens(), 20 * 60);
+        }
+    }
+
+    #[test]
+    fn install_refuses_family_and_shape_changes() {
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 2, 1 << 20).unwrap();
+        let mut wide = toy_meta();
+        wide.k = 3;
+        let mut s = Store::new();
+        s.insert((0, 1), vec![1, 2, 3]);
+        assert!(set.install_stores(wide, &[s]).is_err());
+        assert_eq!(set.generation(), 1);
+    }
+}

@@ -6,15 +6,17 @@
 //! and get a reply channel; N workers pull up to `max_batch` queued jobs
 //! at a time (one lock acquisition amortized over the batch) and fold
 //! each document in against the generation the worker pinned from the
-//! shared [`ServingHandle`] at the top of the batch. The queue is
-//! bounded — a full queue applies back-pressure by blocking submitters
-//! instead of growing without limit.
+//! shared [`QueryBackend`] at the top of the batch — a single
+//! [`ServingHandle`](super::handle::ServingHandle) or a multi-replica
+//! [`ReplicaSet`](super::router::ReplicaSet); the pool is agnostic. The
+//! queue is bounded — a full queue applies back-pressure by blocking
+//! submitters instead of growing without limit.
 //!
-//! The handle indirection is what makes hot reload safe: a
-//! [`ServingHandle::reload`] swap never touches the queue, so requests
-//! in flight across a swap are all answered (by whichever generation
-//! their batch pinned) and each [`InferResult`] reports the generation
-//! that served it.
+//! The backend indirection is what makes hot reload safe: a
+//! [`reload`](super::handle::ServingHandle::reload) swap (or a set-wide
+//! replica commit) never touches the queue, so requests in flight across
+//! a swap are all answered (by whichever generation their batch pinned)
+//! and each [`InferResult`] reports the generation that served it.
 //!
 //! Results are deterministic per request for a fixed generation: each
 //! job's RNG stream is derived from `(service seed, request sequence
@@ -26,8 +28,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use super::handle::ServingHandle;
-use super::infer::{infer_doc, InferConfig, InferResult};
+use super::handle::QueryBackend;
+use super::infer::{InferConfig, InferResult};
 use crate::util::rng::{Rng, Zipf};
 
 /// Service configuration.
@@ -70,7 +72,7 @@ struct Queue {
 }
 
 struct Shared {
-    handle: Arc<ServingHandle>,
+    backend: Arc<dyn QueryBackend>,
     cfg: ServeConfig,
     queue: Mutex<Queue>,
     not_empty: Condvar,
@@ -99,10 +101,13 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Spawn the pool over a hot-reloadable model handle.
-    pub fn spawn(handle: Arc<ServingHandle>, cfg: ServeConfig) -> InferenceService {
+    /// Spawn the pool over any hot-reloadable query backend — a single
+    /// [`ServingHandle`](super::handle::ServingHandle) or a multi-replica
+    /// [`ReplicaSet`](super::router::ReplicaSet); `Arc<ServingHandle>` /
+    /// `Arc<ReplicaSet>` coerce at the call site.
+    pub fn spawn(backend: Arc<dyn QueryBackend>, cfg: ServeConfig) -> InferenceService {
         let shared = Arc::new(Shared {
-            handle,
+            backend,
             cfg: cfg.clone(),
             queue: Mutex::new(Queue {
                 jobs: VecDeque::new(),
@@ -130,9 +135,9 @@ impl InferenceService {
         }
     }
 
-    /// The handle whose current generation is being served.
-    pub fn handle(&self) -> &Arc<ServingHandle> {
-        &self.shared.handle
+    /// The backend whose current generation is being served.
+    pub fn backend(&self) -> &Arc<dyn QueryBackend> {
+        &self.shared.backend
     }
 
     /// Enqueue a query; blocks while the queue is at capacity
@@ -264,12 +269,12 @@ fn worker_loop(shared: &Shared) {
             batch
         };
         // Pin one generation for the whole batch: a concurrent reload
-        // swaps the handle, never this batch's model.
-        let gen = shared.handle.current();
+        // (single handle or set-wide replica commit) swaps the backend,
+        // never this batch's pinned state.
+        let pinned = shared.backend.pin();
         for job in batch {
             let mut rng = Rng::new(shared.cfg.seed).derive(job.seq);
-            let mut res = infer_doc(&gen.model, &job.tokens, &shared.cfg.infer, &mut rng);
-            res.generation = gen.generation;
+            let mut res = pinned.infer(&job.tokens, &shared.cfg.infer, &mut rng);
             res.latency = job.enqueued.elapsed();
             shared.served.fetch_add(1, Ordering::Relaxed);
             // The submitter may have stopped listening; that's fine.
@@ -283,7 +288,9 @@ fn worker_loop(shared: &Shared) {
 mod tests {
     use super::*;
     use crate::ps::snapshot::{SnapshotMeta, Store};
+    use crate::serve::handle::ServingHandle;
     use crate::serve::model::ServingModel;
+    use crate::serve::router::ReplicaSet;
 
     fn toy_serving_model(weight: i32) -> ServingModel {
         let mut store = Store::new();
@@ -431,6 +438,43 @@ mod tests {
         assert_eq!(res.generation, 2);
         assert_eq!(svc.stats().served, 34);
         svc.shutdown();
+    }
+
+    #[test]
+    fn replicated_backend_answers_like_the_single_handle() {
+        // The same pool over a 2-replica set: every request's θ is
+        // bit-identical to the single-handle service's (same per-request
+        // RNG stream, bit-identical slice proposals).
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            store.insert((0, w), if w < 5 { vec![80, 0] } else { vec![0, 80] });
+        }
+        let meta = SnapshotMeta {
+            model: "AliasLDA".to_string(),
+            k: 2,
+            alpha: 0.1,
+            beta: 0.01,
+            vocab_size: 10,
+            slot: 0,
+            n_servers: 1,
+            vnodes: 8,
+            iterations: 1,
+            run_id: 0,
+            tables: None,
+        };
+        let set =
+            ReplicaSet::from_stores(meta, vec![store], 2, 1 << 20).expect("replica set");
+        let docs: Vec<Vec<u32>> = (0..8)
+            .map(|i| (0..6).map(|j| ((i + j) % 10) as u32).collect())
+            .collect();
+        let run = |backend: Arc<dyn QueryBackend>| -> Vec<Vec<f64>> {
+            let svc = InferenceService::spawn(backend, ServeConfig::default());
+            let rxs: Vec<_> = docs.iter().map(|d| svc.submit(d.clone())).collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().theta).collect();
+            svc.shutdown();
+            out
+        };
+        assert_eq!(run(toy_model()), run(set));
     }
 
     #[test]

@@ -9,7 +9,11 @@
 use hplvm::config::{ModelKind, TrainConfig};
 use hplvm::coordinator::trainer::Trainer;
 use hplvm::eval::perplexity::{perplexity, score_with_theta};
-use hplvm::serve::{InferenceService, ServeConfig, ServingHandle, ServingModel};
+use hplvm::serve::{
+    infer_doc, InferConfig, InferenceService, ReplicaSet, ServeConfig, ServingHandle,
+    ServingModel,
+};
+use hplvm::util::rng::Rng;
 use std::sync::Arc;
 
 /// One trained snapshot shared by the assertions below (training on the
@@ -216,6 +220,15 @@ fn snapshot_dir_round_trips_through_serving_layer() {
         with_uniform.avg_log_lik
     );
 
+    // Routed parity on a real trained directory: a 2-replica set loaded
+    // from the same snapshots answers bit-identically at a fixed seed
+    // and reports the replicas that served.
+    let set = ReplicaSet::load_dir(&dir, 2).expect("replica-set load");
+    let single = infer_doc(&model, &doc.tokens, &InferConfig::default(), &mut Rng::new(99));
+    let routed = set.infer(&doc.tokens, &InferConfig::default(), &mut Rng::new(99));
+    assert_bit_identical("trained-lda", &single.theta, &routed.theta);
+    assert!(!routed.served_by.is_empty() && routed.served_by.len() <= 2);
+
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -372,5 +385,283 @@ fn service_is_deterministic_and_batch_shape_invariant() {
         run(4, 16),
         "served mixtures depend on pool shape — RNG streams leak across requests"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-replica serving: routed-vs-single parity, set-wide reload under
+// faults, and the alias pre-warm regression.
+// ---------------------------------------------------------------------------
+
+fn assert_bit_identical(tag: &str, a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "[{tag}] θ length mismatch");
+    for (t, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "[{tag}] θ[{t}] diverged: {x} vs {y}"
+        );
+    }
+}
+
+fn synth_meta(model: &str, k: u32, vocab: u32) -> hplvm::ps::snapshot::SnapshotMeta {
+    hplvm::ps::snapshot::SnapshotMeta {
+        model: model.to_string(),
+        k,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: vocab,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0,
+        tables: None,
+    }
+}
+
+/// Synthetic statistics for each family over a 48-word vocabulary —
+/// large enough that 2- and 3-replica rings give every replica a share.
+fn family_fixtures() -> Vec<(
+    &'static str,
+    hplvm::ps::snapshot::SnapshotMeta,
+    Vec<hplvm::ps::snapshot::Store>,
+)> {
+    use hplvm::ps::snapshot::{Store, TableHyper};
+    const V: u32 = 48;
+    let mut out = Vec::new();
+
+    // LDA: four blocky topics.
+    let mut lda = Store::new();
+    for w in 0..V {
+        let mut row = vec![0i32; 4];
+        row[(w / 12) as usize] = 60 + (w % 5) as i32;
+        lda.insert((0, w), row);
+    }
+    out.push(("lda", synth_meta("AliasLDA", 4, V), vec![lda]));
+
+    // PDP: customers (matrix 0) + tables (matrix 1), v3 hyperparameters.
+    let mut pdp = Store::new();
+    for w in 0..V {
+        let t = (w % 3) as usize;
+        let mut m_row = vec![0i32; 3];
+        let mut s_row = vec![0i32; 3];
+        m_row[t] = 40 + (w % 4) as i32;
+        s_row[t] = 4 + (w % 3) as i32;
+        pdp.insert((0, w), m_row);
+        pdp.insert((1, w), s_row);
+    }
+    let mut pdp_meta = synth_meta("AliasPDP", 3, V);
+    pdp_meta.tables = Some(TableHyper {
+        discount: 0.1,
+        concentration: 10.0,
+        root: 0.5,
+    });
+    out.push(("pdp", pdp_meta, vec![pdp]));
+
+    // HDP: three represented truncation slots + one empty, root row.
+    let mut hdp = Store::new();
+    for w in 0..V {
+        let mut row = vec![0i32; 4];
+        row[(w % 3) as usize] = 50 + (w % 6) as i32;
+        hdp.insert((0, w), row);
+    }
+    hdp.insert((1, 0), vec![9, 6, 3, 0]);
+    let mut hdp_meta = synth_meta("AliasHDP", 4, V);
+    hdp_meta.tables = Some(TableHyper {
+        discount: 0.0,
+        concentration: 1.0,
+        root: 1.0,
+    });
+    out.push(("hdp", hdp_meta, vec![hdp]));
+    out
+}
+
+/// Satellite: routed inference through 2- and 3-replica sets is
+/// bit-identical to the single-replica path for LDA, PDP, and HDP under
+/// the same per-request seed — empty, single-word, and mixed documents.
+#[test]
+fn routed_inference_is_bit_identical_for_all_families() {
+    let cfg = InferConfig::default();
+    for (tag, meta, stores) in family_fixtures() {
+        let single =
+            ServingModel::from_stores(meta.clone(), stores.clone(), 1 << 20).unwrap();
+        let docs: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![7],
+            (0..40).map(|i| (i * 5 % 48) as u32).collect(),
+            (0..17).map(|i| (i % 48) as u32).collect(),
+        ];
+        for replicas in [2usize, 3] {
+            let set = ReplicaSet::from_stores(meta.clone(), stores.clone(), replicas, 1 << 20)
+                .unwrap();
+            for (d, doc) in docs.iter().enumerate() {
+                for seed in [1u64, 42, 9999] {
+                    let a = infer_doc(&single, doc, &cfg, &mut Rng::new(seed));
+                    let b = set.infer(doc, &cfg, &mut Rng::new(seed));
+                    assert_bit_identical(
+                        &format!("{tag} doc{d} N={replicas} seed={seed}"),
+                        &a.theta,
+                        &b.theta,
+                    );
+                    assert_eq!(a.tokens, b.tokens);
+                    assert_eq!(a.accepted, b.accepted, "MH chain diverged");
+                    // served_by covers exactly the replicas owning the
+                    // document's words.
+                    let mut expect: Vec<u32> = doc
+                        .iter()
+                        .map(|&w| set.router().owner(w))
+                        .collect();
+                    expect.sort_unstable();
+                    expect.dedup();
+                    assert_eq!(b.served_by, expect, "[{tag}] served_by wrong");
+                }
+            }
+        }
+    }
+}
+
+/// Satellite: drop one replica mid-reload — the set keeps serving the
+/// old generation with zero dropped requests; a re-install then commits
+/// a set-wide generation bump visible to post-swap queries.
+#[test]
+fn replica_fault_mid_reload_keeps_serving_then_commits_set_wide() {
+    let (_, meta, stores) = family_fixtures().remove(0);
+    let set = ReplicaSet::from_stores(meta.clone(), stores.clone(), 3, 1 << 20).unwrap();
+    let svc = Arc::new(InferenceService::spawn(
+        set.clone(),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            ..Default::default()
+        },
+    ));
+
+    // Concurrent load across the faulted reload and the successful one.
+    let n_threads = 4usize;
+    let per_thread = 25usize;
+    let mut joins = Vec::new();
+    for th in 0..n_threads {
+        let svc = svc.clone();
+        let queries = hplvm::serve::synth_queries(48, per_thread, 12.0, 500 + th as u64);
+        joins.push(std::thread::spawn(move || {
+            let mut gens = Vec::with_capacity(per_thread);
+            for doc in queries {
+                let res = svc.infer(doc).expect("request dropped across faulted reload");
+                assert!((res.theta.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                gens.push(res.generation);
+            }
+            gens
+        }));
+    }
+
+    // Mid-stream: replica 1 drops during the reload → set-wide abort.
+    set.replica(1).fail_next_reload();
+    let err = set
+        .install_stores(meta.clone(), &stores)
+        .expect_err("faulted reload must abort");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("injected fault") && msg.contains("still serving generation 1"),
+        "{msg}"
+    );
+    assert_eq!(set.generation(), 1, "aborted reload must not bump the set");
+
+    // Re-install (fault was one-shot): set-wide commit to generation 2.
+    let g = set
+        .install_stores(meta.clone(), &stores)
+        .expect("clean reload must commit");
+    assert_eq!(g, 2);
+    assert_eq!(set.generation(), 2);
+
+    let mut all_gens = Vec::new();
+    for j in joins {
+        all_gens.extend(j.join().expect("query thread panicked"));
+    }
+    assert_eq!(
+        all_gens.len(),
+        n_threads * per_thread,
+        "every request must be answered across the faulted reload"
+    );
+    assert!(
+        all_gens.iter().all(|&g| g == 1 || g == 2),
+        "only committed set generations may serve: {all_gens:?}"
+    );
+
+    // Post-swap: strictly-after queries see the bumped set generation.
+    let res = svc.infer(vec![0, 5, 10]).expect("service closed");
+    assert_eq!(res.generation, 2, "post-commit query on the old generation");
+    assert!(!res.served_by.is_empty());
+    assert_eq!(
+        svc.stats().served,
+        (n_threads * per_thread + 1) as u64,
+        "served-counter mismatch — something was dropped"
+    );
+    drop(svc);
+}
+
+/// Satellite (ROADMAP cold-cache fix): after a hot reload, the first
+/// query for a previously-resident word must not trigger an O(K)
+/// rebuild — the incoming generation's alias cache is pre-warmed from
+/// the outgoing generation's resident word set.
+#[test]
+fn reload_prewarms_alias_cache_so_hot_words_never_rebuild() {
+    use hplvm::ps::snapshot::{self, Store};
+    let dir = std::env::temp_dir().join(format!(
+        "hplvm_serve_prewarm_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut store = Store::new();
+    for w in 0..10u32 {
+        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] });
+    }
+    let meta = synth_meta("AliasLDA", 2, 10);
+    let bytes = snapshot::encode_store_meta(&store, &meta);
+    snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+
+    // Single-handle path.
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let hot_doc = vec![0u32, 1, 2, 3, 4];
+    infer_doc(&handle.model(), &hot_doc, &InferConfig::default(), &mut Rng::new(5));
+    let old_stats = handle.model().cache_stats();
+    assert!(old_stats.misses >= 5, "warm-up must have built tables");
+    assert_eq!(handle.reload(&dir).unwrap(), 2);
+    let new_model = handle.model();
+    let warm = new_model.cache_stats();
+    assert_eq!(warm.misses, 0, "pre-warm must not count as misses");
+    assert!(
+        warm.prewarmed as usize >= hot_doc.len(),
+        "outgoing resident set not pre-warmed ({} tables)",
+        warm.prewarmed
+    );
+    // The regression: first post-swap touch of a hot word is a hit.
+    infer_doc(&new_model, &hot_doc, &InferConfig::default(), &mut Rng::new(6));
+    let after = new_model.cache_stats();
+    assert_eq!(
+        after.misses, 0,
+        "previously-resident words rebuilt after reload (cold-cache p99 spike)"
+    );
+    assert!(after.hits >= hot_doc.len() as u64);
+
+    // Replica-set path: each replica pre-warms from its own outgoing
+    // slice across a set-wide reload.
+    let set = ReplicaSet::load_dir(&dir, 2).expect("replica-set load");
+    let doc: Vec<u32> = (0..10).collect();
+    set.infer(&doc, &InferConfig::default(), &mut Rng::new(7));
+    assert_eq!(set.reload(&dir).unwrap(), 2);
+    let gen = set.current();
+    for (r, m) in gen.models().iter().enumerate() {
+        let st = m.cache_stats();
+        assert_eq!(st.misses, 0, "replica {r} pre-warm counted as misses");
+    }
+    set.infer(&doc, &InferConfig::default(), &mut Rng::new(8));
+    for (r, m) in gen.models().iter().enumerate() {
+        let st = m.cache_stats();
+        assert_eq!(
+            st.misses, 0,
+            "replica {r} rebuilt a previously-resident word after the set reload"
+        );
+    }
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,169 @@
+//! Property tests for the multi-replica query router: the vocabulary
+//! partition is total and disjoint for any replica count, growing the
+//! set `N → N+1` remaps only the expected ~`1/(N+1)` fraction of words
+//! (and never moves a word between existing replicas), and the
+//! per-replica model slices materialize exactly the partition the
+//! router announces.
+
+use hplvm::ps::snapshot::{SnapshotMeta, Store};
+use hplvm::serve::{QueryRouter, ReplicaSet, ServingModel};
+use hplvm::util::rng::Rng;
+
+/// 1000 randomized cases: for any replica count and vocabulary size,
+/// every word is owned by exactly one replica and the per-replica lists
+/// cover the vocabulary.
+#[test]
+fn partition_is_total_and_disjoint_1000_cases() {
+    let mut rng = Rng::new(0x90_07E5);
+    for case in 0..1000 {
+        let replicas = 1 + rng.below(8);
+        let vocab = 1 + rng.below(2048);
+        let router = QueryRouter::new(replicas);
+        assert_eq!(router.replicas(), replicas);
+        let parts = router.partition(vocab);
+        assert_eq!(parts.len(), replicas);
+        assert_eq!(
+            parts.iter().map(Vec::len).sum::<usize>(),
+            vocab,
+            "case {case}: partition not total (N={replicas}, V={vocab})"
+        );
+        let mut owner_of = vec![usize::MAX; vocab];
+        for (r, part) in parts.iter().enumerate() {
+            for &w in part {
+                assert!(
+                    (w as usize) < vocab,
+                    "case {case}: out-of-vocab word {w}"
+                );
+                assert_eq!(
+                    owner_of[w as usize],
+                    usize::MAX,
+                    "case {case}: word {w} owned by two replicas"
+                );
+                owner_of[w as usize] = r;
+                assert_eq!(
+                    router.owner(w) as usize,
+                    r,
+                    "case {case}: partition disagrees with owner()"
+                );
+            }
+        }
+        assert!(
+            owner_of.iter().all(|&o| o != usize::MAX),
+            "case {case}: some word has no owner"
+        );
+        // Scatter agrees with the partition for a random document.
+        let doc: Vec<u32> = (0..rng.below(64)).map(|_| rng.below(vocab) as u32).collect();
+        let scatter = router.scatter(&doc);
+        assert_eq!(scatter.iter().map(Vec::len).sum::<usize>(), doc.len());
+        for (r, indices) in scatter.iter().enumerate() {
+            for &i in indices {
+                assert_eq!(owner_of[doc[i] as usize], r);
+            }
+        }
+    }
+}
+
+/// 1000 randomized resize cases: the consistent-hash monotonicity
+/// invariant — a word's owner either stays put or moves to the *new*
+/// replica, never between existing replicas.
+#[test]
+fn resize_moves_words_only_to_the_new_replica_1000_cases() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..1000 {
+        let n = 1 + rng.below(7);
+        let old = QueryRouter::new(n);
+        let new = QueryRouter::new(n + 1);
+        // A random probe set is enough for the invariant (the fraction
+        // bound gets its own exhaustive test below).
+        for _ in 0..64 {
+            let w = rng.below(1 << 20) as u32;
+            let a = old.owner(w);
+            let b = new.owner(w);
+            assert!(
+                a == b || b == n as u32,
+                "case {case}: word {w} moved between existing replicas \
+                 ({a} → {b}, N={n})"
+            );
+        }
+    }
+}
+
+/// Growing `N → N+1` remaps ≈ `1/(N+1)` of a large vocabulary.
+#[test]
+fn resize_remaps_about_one_over_n_plus_one() {
+    const VOCAB: usize = 50_000;
+    for n in 1..=6usize {
+        let old = QueryRouter::new(n);
+        let new = QueryRouter::new(n + 1);
+        let moved = (0..VOCAB as u32)
+            .filter(|&w| old.owner(w) != new.owner(w))
+            .count();
+        let frac = moved as f64 / VOCAB as f64;
+        let expect = 1.0 / (n + 1) as f64;
+        assert!(
+            frac > 0.4 * expect && frac < 2.2 * expect,
+            "{n}→{} replicas remapped {frac:.4} of the vocab (expected ≈{expect:.4})",
+            n + 1
+        );
+    }
+}
+
+fn toy_meta(vocab: u32) -> SnapshotMeta {
+    SnapshotMeta {
+        model: "AliasLDA".to_string(),
+        k: 4,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: vocab,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0,
+        tables: None,
+    }
+}
+
+/// Statistics with every word observed, spread over 4 topics.
+fn toy_stores(vocab: u32) -> Vec<Store> {
+    let mut s = Store::new();
+    for w in 0..vocab {
+        let mut row = vec![0i32; 4];
+        row[(w % 4) as usize] = 10 + (w % 7) as i32;
+        s.insert((0, w), row);
+    }
+    vec![s]
+}
+
+/// The replica slices materialize exactly the router's partition: each
+/// observed word's row lives on its owner and nowhere else, and the
+/// slices' union is the full model's row set.
+#[test]
+fn slices_materialize_exactly_the_router_partition() {
+    const VOCAB: u32 = 512;
+    let full = ServingModel::from_stores(toy_meta(VOCAB), toy_stores(VOCAB), 1 << 20).unwrap();
+    for replicas in [2usize, 3, 5] {
+        let set =
+            ReplicaSet::from_stores(toy_meta(VOCAB), toy_stores(VOCAB), replicas, 1 << 20)
+                .unwrap();
+        let gen = set.current();
+        for w in 0..VOCAB {
+            let owners: Vec<usize> = gen
+                .models()
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.has_row(w))
+                .map(|(r, _)| r)
+                .collect();
+            if full.has_row(w) {
+                assert_eq!(
+                    owners,
+                    vec![set.router().owner(w) as usize],
+                    "word {w} must live on exactly its owner ({replicas} replicas)"
+                );
+            } else {
+                assert!(owners.is_empty(), "unobserved word {w} grew a row");
+            }
+        }
+    }
+}
