@@ -1,50 +1,52 @@
-//! Train → snapshot → serve → train more → **hot-reload** → **scale
-//! out**, end to end: train a small LDA model on the simulated cluster,
-//! serve topic-mixture queries through the generation-numbered
-//! [`ServingHandle`], train further and swap the newer snapshots in live
-//! (queries in flight, nothing dropped), then serve the same snapshots
-//! through a 2-replica [`ReplicaSet`] — the `serve --replicas 2`
-//! topology: the vocabulary consistent-hashed over two model slices,
-//! each with its own alias cache, answers bit-identical to the single
-//! model.
+//! Train → checkpoint → serve → **train more (same session)** →
+//! **hot-reload** → **scale out**, end to end: one [`TrainSession`]
+//! trains a small LDA model, checkpoints the cluster for the serve
+//! handoff, keeps training while queries flow, checkpoints again, and
+//! the service swaps the newer generation in live (queries in flight,
+//! nothing dropped) — then the same snapshots serve through a 2-replica
+//! [`ReplicaSet`] (`serve --replicas 2`): the vocabulary
+//! consistent-hashed over two model slices, each with its own alias
+//! cache, answers bit-identical to the single model.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
 //! ```
 //!
-//! [`ServingHandle`]: hplvm::serve::ServingHandle
+//! [`TrainSession`]: hplvm::coordinator::TrainSession
 //! [`ReplicaSet`]: hplvm::serve::ReplicaSet
 
 use hplvm::config::TrainConfig;
-use hplvm::coordinator::trainer::Trainer;
+use hplvm::coordinator::TrainSession;
+use hplvm::corpus::SyntheticSource;
 use hplvm::serve::{InferConfig, InferenceService, ReplicaSet, ServeConfig, ServingHandle};
-
-fn train_into(cfg: &TrainConfig, label: &str) {
-    println!(
-        "[{label}] training {} | {} docs, vocab {}, K={}, {} iterations",
-        cfg.model.name(),
-        cfg.corpus.n_docs,
-        cfg.corpus.vocab_size,
-        cfg.params.topics,
-        cfg.iterations,
-    );
-    let report = Trainer::new(cfg.clone()).run().expect("training failed");
-    println!(
-        "[{label}] final perplexity {:.1} ({} tokens)",
-        report.final_perplexity(),
-        report.total_tokens
-    );
-}
 
 fn main() {
     let snapdir = std::env::temp_dir().join(format!("hplvm_serve_demo_{}", std::process::id()));
     std::fs::remove_dir_all(&snapdir).ok();
 
-    // 1. Train with snapshots persisted (the serve handoff).
+    // 1. One long-lived session; generation 1 = a cluster checkpoint
+    // after 12 iterations. The checkpoint is simultaneously a serve
+    // input and a resume target.
     let mut cfg = TrainConfig::small_lda();
-    cfg.iterations = 12;
-    cfg.cluster.snapshot_dir = Some(snapdir.clone());
-    train_into(&cfg, "gen 1");
+    cfg.iterations = 24;
+    println!(
+        "[session] training {} | {} docs, vocab {}, K={}",
+        cfg.model.name(),
+        cfg.corpus.n_docs,
+        cfg.corpus.vocab_size,
+        cfg.params.topics,
+    );
+    let source = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg.clone(), &source).expect("session start");
+    let seg = session.run_to(12).expect("segment 1");
+    println!(
+        "[gen 1] iterations {}..{}: perplexity {:.1} (run {:#018x})",
+        seg.start_iteration,
+        seg.end_iteration,
+        seg.report.final_perplexity(),
+        session.run_id(),
+    );
+    session.checkpoint(&snapdir).expect("checkpoint");
 
     // 2. Load generation 1 — no training config needed: the v3 snapshot
     // header carries the family, K, α, β, ring geometry, and (for
@@ -83,11 +85,19 @@ fn main() {
         );
     }
 
-    // 4. Train further into the same directory: newer snapshots appear on
-    // disk while the service keeps answering against generation 1.
-    let mut more = cfg.clone();
-    more.iterations = 24;
-    train_into(&more, "gen 2");
+    // 4. Train further *in the same session* — no retrain from scratch:
+    // the cluster is still hot, and the next checkpoint carries the same
+    // run id, so the watcher/reloader sees a continuation, not a
+    // stranger. The service keeps answering against generation 1.
+    let seg = session.run_to(24).expect("segment 2");
+    println!(
+        "[gen 2] iterations {}..{}: perplexity {:.1}",
+        seg.start_iteration,
+        seg.end_iteration,
+        seg.report.final_perplexity(),
+    );
+    session.checkpoint(&snapdir).expect("checkpoint 2");
+    let _ = session.finish().expect("finish");
 
     // 5. Live reload: queue a burst of queries, swap the generation while
     // they drain, and account for every single one.

@@ -1,0 +1,145 @@
+//! Deterministic end-to-end *training* bench. Prints a summary table AND
+//! writes `BENCH_train.json` at the repository root so the repo carries a
+//! machine-readable training-perf trajectory across PRs, next to
+//! `BENCH_sampler.json`:
+//!
+//! * whole-cluster tokens/sec, wall seconds, and final perplexity for a
+//!   fixed seeded LDA and PDP config through `Trainer::run`, and
+//! * the session lifecycle costs: checkpoint seconds (acknowledged
+//!   cluster snapshot) and resume seconds (fresh topology from disk).
+//!
+//! Regenerate with `cargo bench --bench train_json`.
+
+use hplvm::bench;
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::session::TrainSession;
+use hplvm::coordinator::trainer::Trainer;
+use hplvm::corpus::source::SyntheticSource;
+use hplvm::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn cfg(model: ModelKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model;
+    cfg.params.topics = 16;
+    cfg.corpus.n_docs = 400;
+    cfg.corpus.vocab_size = 1_000;
+    cfg.corpus.n_topics = 16;
+    cfg.corpus.doc_len_mean = 30.0;
+    cfg.cluster.clients = 3;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(50);
+    cfg.iterations = 10;
+    cfg.eval_every = 5;
+    cfg.test_docs = 50;
+    cfg.seed = 7;
+    cfg.corpus.seed = 7;
+    if model == ModelKind::AliasPdp {
+        cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+    }
+    cfg
+}
+
+fn main() {
+    println!("# End-to-end training trajectory (BENCH_train.json)");
+
+    let mut panels: Vec<(&str, f64, f64, f64)> = Vec::new();
+    for model in [ModelKind::AliasLda, ModelKind::AliasPdp] {
+        let report = Trainer::new(cfg(model)).run().expect("train");
+        panels.push((
+            model.name(),
+            report.tokens_per_sec,
+            report.wall_secs,
+            report.final_perplexity(),
+        ));
+    }
+    bench::section("whole-cluster training (3 clients, 10 iterations)");
+    bench::table(
+        &["model", "tokens/s", "wall s", "perplexity"],
+        &panels
+            .iter()
+            .map(|(m, tps, wall, perp)| {
+                vec![
+                    m.to_string(),
+                    format!("{tps:.0}"),
+                    format!("{wall:.2}"),
+                    format!("{perp:.1}"),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // Session lifecycle: segment → checkpoint → resume → segment.
+    let ckpt = std::env::temp_dir().join(format!("hplvm_bench_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt).ok();
+    let c = cfg(ModelKind::AliasLda);
+    let src = SyntheticSource::new(c.corpus.clone());
+    let mut session = TrainSession::start(c, &src).expect("start");
+    session.run_to(5).expect("segment 1");
+    let t = Instant::now();
+    session.checkpoint(&ckpt).expect("checkpoint");
+    let checkpoint_secs = t.elapsed().as_secs_f64();
+    let _ = session.finish().expect("finish");
+    let t = Instant::now();
+    let mut resumed = TrainSession::resume(&ckpt).expect("resume");
+    let resume_secs = t.elapsed().as_secs_f64();
+    resumed.run_to(10).expect("segment 2");
+    let resumed_perp = resumed.finish().expect("finish").final_perplexity();
+    std::fs::remove_dir_all(&ckpt).ok();
+    bench::section("session lifecycle");
+    bench::table(
+        &["checkpoint s", "resume s", "resumed perplexity"],
+        &[vec![
+            format!("{checkpoint_secs:.3}"),
+            format!("{resume_secs:.3}"),
+            format!("{resumed_perp:.1}"),
+        ]],
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("train_json".into())),
+        (
+            "regenerate",
+            Json::Str("cargo bench --bench train_json".into()),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_docs", Json::Num(400.0)),
+                ("vocab", Json::Num(1_000.0)),
+                ("k", Json::Num(16.0)),
+                ("clients", Json::Num(3.0)),
+                ("iterations", Json::Num(10.0)),
+            ]),
+        ),
+        (
+            "models",
+            Json::Arr(
+                panels
+                    .iter()
+                    .map(|(m, tps, wall, perp)| {
+                        Json::obj(vec![
+                            ("model", Json::Str((*m).into())),
+                            ("tokens_per_sec", Json::Num(*tps)),
+                            ("wall_secs", Json::Num(*wall)),
+                            ("final_perplexity", Json::Num(*perp)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "session",
+            Json::obj(vec![
+                ("checkpoint_secs", Json::Num(checkpoint_secs)),
+                ("resume_secs", Json::Num(resume_secs)),
+                ("resumed_final_perplexity", Json::Num(resumed_perp)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+    match std::fs::write(path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

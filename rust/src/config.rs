@@ -250,6 +250,42 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// Reject configurations that would divide by zero or deadlock deep
+    /// inside the training loop, with errors that name the knob to fix.
+    /// Called by [`TrainSession::start`](crate::coordinator::TrainSession)
+    /// (and therefore by `Trainer::run`) before any topology is built.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eval_every == 0 {
+            return Err(
+                "eval_every must be ≥ 1 (the worker's metrics cadence computes \
+                 `iteration % eval_every`); use a large value to evaluate rarely"
+                    .into(),
+            );
+        }
+        if self.cluster.sync_every_docs == 0 {
+            return Err(
+                "cluster.sync_every_docs must be ≥ 1 (the token loop syncs every \
+                 `sync_every_docs` documents); use a large value to sync rarely"
+                    .into(),
+            );
+        }
+        if self.cluster.clients == 0 {
+            return Err(
+                "cluster.clients must be ≥ 1 — there is no one to train the model \
+                 with zero client workers"
+                    .into(),
+            );
+        }
+        if self.params.topics < 2 {
+            return Err(format!(
+                "params.topics is {} but a topic model needs at least 2 topics \
+                 (HDP: the truncation K_max)",
+                self.params.topics
+            ));
+        }
+        Ok(())
+    }
+
     /// A fast LDA preset for tests/examples.
     pub fn small_lda() -> Self {
         let mut cfg = TrainConfig::default();
@@ -287,14 +323,53 @@ impl TrainConfig {
             ("alpha", Json::Num(self.params.alpha)),
             ("beta", Json::Num(self.params.beta)),
             ("mh_steps", Json::Num(self.params.mh_steps as f64)),
+            ("pdp_discount", Json::Num(self.params.pdp_discount)),
+            (
+                "pdp_concentration",
+                Json::Num(self.params.pdp_concentration),
+            ),
+            ("pdp_gamma", Json::Num(self.params.pdp_gamma)),
+            ("hdp_b0", Json::Num(self.params.hdp_b0)),
+            ("hdp_b1", Json::Num(self.params.hdp_b1)),
             ("n_docs", Json::Num(self.corpus.n_docs as f64)),
             ("vocab_size", Json::Num(self.corpus.vocab_size as f64)),
             ("doc_len_mean", Json::Num(self.corpus.doc_len_mean)),
+            ("true_topics", Json::Num(self.corpus.n_topics as f64)),
+            // Corpus *generator* identity: a resumed session must be able
+            // to regenerate the identical synthetic corpus from this JSON
+            // (the checkpoint's client snapshots index into its documents)
+            // — which takes every generator knob, not just the seed.
+            ("corpus_seed", Json::Num(self.corpus.seed as f64)),
+            ("corpus_alpha", Json::Num(self.corpus.alpha)),
+            ("corpus_beta", Json::Num(self.corpus.beta)),
+            ("zipf_s", Json::Num(self.corpus.zipf_s)),
+            ("corpus_pyp_discount", Json::Num(self.corpus.pyp_discount)),
+            (
+                "corpus_pyp_concentration",
+                Json::Num(self.corpus.pyp_concentration),
+            ),
+            (
+                "corpus_model",
+                Json::Str(
+                    match self.corpus.model {
+                        GenerativeModel::Lda => "lda",
+                        GenerativeModel::Pyp => "pyp",
+                    }
+                    .into(),
+                ),
+            ),
+            (
+                "sync_every_docs",
+                Json::Num(self.cluster.sync_every_docs as f64),
+            ),
             ("clients", Json::Num(self.cluster.clients as f64)),
             (
                 "server_fraction",
                 Json::Num(self.cluster.server_fraction),
             ),
+            // Ring geometry: checkpointed slot stores were sharded under
+            // it, so a resumed session must rebuild the identical ring.
+            ("vnodes", Json::Num(self.cluster.vnodes as f64)),
             ("iterations", Json::Num(self.iterations as f64)),
             ("eval_every", Json::Num(self.eval_every as f64)),
             ("test_docs", Json::Num(self.test_docs as f64)),
@@ -323,6 +398,13 @@ impl TrainConfig {
             self.projection =
                 ProjectionMode::parse(v).ok_or_else(|| format!("bad projection {v:?}"))?;
         }
+        if let Some(v) = j.get("corpus_model").and_then(Json::as_str) {
+            self.corpus.model = match v.to_ascii_lowercase().as_str() {
+                "lda" => GenerativeModel::Lda,
+                "pyp" => GenerativeModel::Pyp,
+                _ => return Err(format!("bad corpus_model {v:?}")),
+            };
+        }
         macro_rules! num {
             ($key:literal, $field:expr, $ty:ty) => {
                 if let Some(v) = j.get($key).and_then(Json::as_f64) {
@@ -334,15 +416,28 @@ impl TrainConfig {
         num!("alpha", self.params.alpha, f64);
         num!("beta", self.params.beta, f64);
         num!("mh_steps", self.params.mh_steps, usize);
+        num!("pdp_discount", self.params.pdp_discount, f64);
+        num!("pdp_concentration", self.params.pdp_concentration, f64);
+        num!("pdp_gamma", self.params.pdp_gamma, f64);
+        num!("hdp_b0", self.params.hdp_b0, f64);
+        num!("hdp_b1", self.params.hdp_b1, f64);
         num!("n_docs", self.corpus.n_docs, usize);
         num!("vocab_size", self.corpus.vocab_size, usize);
         num!("doc_len_mean", self.corpus.doc_len_mean, f64);
         num!("clients", self.cluster.clients, usize);
         num!("server_fraction", self.cluster.server_fraction, f64);
+        num!("vnodes", self.cluster.vnodes, usize);
         num!("iterations", self.iterations, u64);
         num!("eval_every", self.eval_every, u64);
         num!("test_docs", self.test_docs, usize);
         num!("seed", self.seed, u64);
+        num!("corpus_seed", self.corpus.seed, u64);
+        num!("corpus_alpha", self.corpus.alpha, f64);
+        num!("corpus_beta", self.corpus.beta, f64);
+        num!("zipf_s", self.corpus.zipf_s, f64);
+        num!("corpus_pyp_discount", self.corpus.pyp_discount, f64);
+        num!("corpus_pyp_concentration", self.corpus.pyp_concentration, f64);
+        num!("sync_every_docs", self.cluster.sync_every_docs, usize);
         // Keep the corpus ground truth aligned with the model topics by
         // default (explicit "true_topics" overrides).
         num!("true_topics", self.corpus.n_topics, usize);
@@ -406,6 +501,11 @@ mod tests {
         let mut cfg = TrainConfig::small_pdp();
         cfg.iterations = 77;
         cfg.seed = 123;
+        cfg.corpus.seed = 99;
+        cfg.corpus.zipf_s = 2.0;
+        cfg.corpus.alpha = 0.33;
+        cfg.corpus.pyp_discount = 0.25;
+        cfg.cluster.sync_every_docs = 17;
         let j = cfg.to_json();
         let mut back = TrainConfig::default();
         back.apply_json(&j).unwrap();
@@ -413,6 +513,55 @@ mod tests {
         assert_eq!(back.iterations, 77);
         assert_eq!(back.seed, 123);
         assert_eq!(back.params.topics, cfg.params.topics);
+        // Corpus-generator identity survives: the resumed session must be
+        // able to regenerate the exact same synthetic corpus.
+        assert_eq!(back.corpus.model, GenerativeModel::Pyp);
+        assert_eq!(back.corpus.seed, 99);
+        assert_eq!(back.corpus.n_topics, cfg.corpus.n_topics);
+        assert_eq!(back.corpus.zipf_s.to_bits(), 2.0f64.to_bits());
+        assert_eq!(back.corpus.alpha.to_bits(), 0.33f64.to_bits());
+        assert_eq!(back.corpus.pyp_discount.to_bits(), 0.25f64.to_bits());
+        assert_eq!(
+            back.corpus.pyp_concentration.to_bits(),
+            cfg.corpus.pyp_concentration.to_bits()
+        );
+        assert_eq!(back.corpus.beta.to_bits(), cfg.corpus.beta.to_bits());
+        assert_eq!(back.cluster.sync_every_docs, 17);
+        // The regenerated corpora must be identical token-for-token.
+        let (a, _) = cfg.corpus.generate();
+        let (b, _) = back.corpus.generate();
+        assert_eq!(a.docs.len(), b.docs.len());
+        for (da, db) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(da.tokens, db.tokens);
+        }
+    }
+
+    /// Satellite: `validate()` refuses the div-by-zero/deadlock knobs with
+    /// errors that name the offending field.
+    #[test]
+    fn validate_refuses_degenerate_configs() {
+        assert!(TrainConfig::default().validate().is_ok());
+        assert!(TrainConfig::small_lda().validate().is_ok());
+
+        let mut cfg = TrainConfig::default();
+        cfg.eval_every = 0;
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("eval_every"), "{e}");
+
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.sync_every_docs = 0;
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("sync_every_docs"), "{e}");
+
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.clients = 0;
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("clients"), "{e}");
+
+        let mut cfg = TrainConfig::default();
+        cfg.params.topics = 1;
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("topics") && e.contains('1'), "{e}");
     }
 
     #[test]

@@ -82,8 +82,18 @@ impl TrainReport {
         reassignments: u64,
     ) -> TrainReport {
         let max_iter = records.iter().map(|r| r.iteration).max().unwrap_or(0);
-        let mut per_iteration = Vec::with_capacity(max_iter as usize);
-        for it in 1..=max_iter {
+        // Segment reports start mid-run: aggregate from the first recorded
+        // iteration, not from 1, so a segment over iterations 41..=60
+        // yields 20 rows instead of 40 empty ones followed by 20.
+        let min_iter = records
+            .iter()
+            .map(|r| r.iteration)
+            .min()
+            .unwrap_or(1)
+            .max(1);
+        let mut per_iteration =
+            Vec::with_capacity((max_iter.saturating_sub(min_iter) + 1) as usize);
+        for it in min_iter..=max_iter {
             let mut row = IterStats {
                 iteration: it,
                 time: RunningStats::new(),
@@ -290,6 +300,18 @@ mod tests {
         let records = vec![rec(0, 1, 1.0, Some(500.0)), rec(0, 2, 1.0, None)];
         let rep = TrainReport::from_records("t", &records, 1.0, (0, 0, 0, 0), 0, 0);
         assert_eq!(rep.final_perplexity(), 500.0);
+    }
+
+    /// A mid-run segment's records aggregate from their first iteration —
+    /// no leading run of empty rows.
+    #[test]
+    fn segment_records_skip_leading_empty_iterations() {
+        let records = vec![rec(0, 41, 1.0, Some(700.0)), rec(0, 42, 1.0, None)];
+        let rep = TrainReport::from_records("t", &records, 2.0, (0, 0, 0, 0), 0, 0);
+        assert_eq!(rep.per_iteration.len(), 2);
+        assert_eq!(rep.per_iteration[0].iteration, 41);
+        assert_eq!(rep.per_iteration[1].iteration, 42);
+        assert_eq!(rep.final_perplexity(), 700.0);
     }
 
     #[test]

@@ -1,12 +1,19 @@
-//! The training coordinator (Layer 3): wires corpus shards, the parameter
+//! The training coordinator (Layer 5): wires corpus shards, the parameter
 //! server, worker clients, the scheduler, failure injection and metrics
-//! into the paper's full training loop (§5.2, §6).
+//! into the paper's full training loop (§5.2, §6) — exposed as a
+//! long-lived, resumable [`TrainSession`] (segments, cluster checkpoints,
+//! streaming [`TrainObserver`] metrics) with the one-shot
+//! [`Trainer::run`] kept as a single-segment wrapper.
 
 pub mod metrics;
 pub mod model;
+pub mod session;
 pub mod trainer;
 pub mod worker;
 
 pub use metrics::{IterRecord, IterStats, TrainReport};
 pub use model::ModelSampler;
+pub use session::{
+    NullObserver, PrintObserver, SegmentReport, TrainObserver, TrainSession,
+};
 pub use trainer::Trainer;

@@ -350,6 +350,86 @@ mod tests {
         assert_eq!(restored.assignments().0, snap.z.as_slice());
     }
 
+    /// Satellite: resume-state *shape mismatches* inside
+    /// `ModelSampler::build` — a snapshot from a different corpus (fewer
+    /// docs, shorter docs, out-of-range topics) must degrade per-token to
+    /// fresh random init, never panic, and always leave the local
+    /// statistics consistent with the shard.
+    #[test]
+    fn resume_shape_mismatches_fall_back_per_token() {
+        let d = docs();
+        let total_tokens: i64 = d.iter().map(|doc| doc.tokens.len() as i64).sum();
+        let k = 6usize;
+        let mut cfg = TrainConfig::default();
+        cfg.model = ModelKind::AliasLda;
+        cfg.params.topics = k;
+
+        // A deliberately malformed snapshot: one doc missing entirely,
+        // one z-row too short, one too long, and an out-of-range topic.
+        let mut z: Vec<Vec<u32>> = d.iter().map(|doc| vec![1; doc.tokens.len()]).collect();
+        z.pop(); // fewer docs than the shard
+        z[0].pop(); // short row: last token falls back
+        z[1].push(3); // long row: extra entry ignored
+        z[2][0] = 999; // topic ≥ k: falls back
+        let snap = crate::ps::snapshot::ClientSnapshot {
+            shard: 0,
+            iteration: 7,
+            z,
+            r: Vec::new(),
+        };
+        let mut rng = Rng::new(5);
+        let s = ModelSampler::build(&cfg, d.clone(), 120, Some(&snap), &mut rng);
+        let (z_out, _) = s.assignments();
+        assert_eq!(z_out.len(), d.len(), "one z row per shard doc");
+        for (doc, zd) in d.iter().zip(z_out) {
+            assert_eq!(zd.len(), doc.tokens.len(), "z row matches doc length");
+            assert!(zd.iter().all(|&t| (t as usize) < k), "topics within K");
+        }
+        // Restored entries that *were* valid survive verbatim.
+        assert!(z_out[0][..z_out[0].len() - 1].iter().all(|&t| t == 1));
+        assert_ne!(z_out[2][0], 999);
+        // Statistics rebuilt from the final assignments account for every
+        // token exactly once.
+        assert_eq!(s.primary().grand_total(), total_tokens);
+    }
+
+    /// Resume restores PDP and HDP through the same path: assignments are
+    /// taken from the snapshot, table indicators are re-derived by the
+    /// CRP rule, and the rebuilt statistics stay shard-consistent.
+    #[test]
+    fn resume_restores_table_models() {
+        let d = docs();
+        for (kind, k) in [(ModelKind::AliasPdp, 6), (ModelKind::AliasHdp, 8)] {
+            let mut cfg = TrainConfig::default();
+            cfg.model = kind;
+            cfg.params.topics = k;
+            let mut rng = Rng::new(11);
+            let fresh = ModelSampler::build(&cfg, d.clone(), 120, None, &mut rng);
+            let (z, r) = fresh.assignments();
+            let snap = crate::ps::snapshot::ClientSnapshot {
+                shard: 0,
+                iteration: 3,
+                z: z.to_vec(),
+                r: r.to_vec(),
+            };
+            let mut rng2 = Rng::new(77);
+            let restored = ModelSampler::build(&cfg, d.clone(), 120, Some(&snap), &mut rng2);
+            let (z2, r2) = restored.assignments();
+            assert_eq!(z2, snap.z.as_slice(), "{kind:?} z restored verbatim");
+            // Table indicators are re-derived (not copied), but shaped
+            // per token like the originals.
+            assert_eq!(r2.len(), d.len());
+            for (doc, rd) in d.iter().zip(r2) {
+                assert_eq!(rd.len(), doc.tokens.len(), "{kind:?} r row shape");
+            }
+            assert_eq!(
+                restored.primary().grand_total(),
+                fresh.primary().grand_total(),
+                "{kind:?} restored statistics must cover the same tokens"
+            );
+        }
+    }
+
     #[test]
     fn projection_dispatch_counts_corrections() {
         let mut cfg = TrainConfig::small_pdp();

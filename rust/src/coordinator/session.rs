@@ -1,0 +1,1041 @@
+//! The resumable training session: the paper's long-lived production job
+//! as an API.
+//!
+//! The one-shot `Trainer::run(cfg)` entry point builds a whole cluster,
+//! trains to a fixed iteration count, and throws the topology away. Real
+//! runs are different: hundreds of billions of tokens over days, driven
+//! by a persistent pipeline that pauses, inspects, checkpoints, restarts
+//! on fresh machines, and keeps serving snapshots flowing to the
+//! inference tier. A [`TrainSession`] is that shape:
+//!
+//! * [`TrainSession::start`] builds the topology **once** — corpus (via
+//!   any [`CorpusSource`]), shards, [`SimNet`], server group, eval
+//!   engine — and keeps it alive across **segments**.
+//! * [`TrainSession::run_for`] / [`TrainSession::run_to`] drive training
+//!   in segments; each returns a [`SegmentReport`] and leaves the cluster
+//!   hot. Between segments the caller can inspect metrics, retune the
+//!   eval cadence ([`TrainSession::set_eval_every`]), or checkpoint.
+//! * [`TrainSession::checkpoint`] snapshots the *entire cluster* into a
+//!   directory: every server slot store (acknowledged
+//!   [`Payload::SnapshotReq`] round-trips), every shard's client state,
+//!   and a [`SessionMeta`] record (run id, iteration, RNG epoch, config).
+//! * [`TrainSession::resume`] rebuilds a session from such a directory in
+//!   a fresh process and keeps training **under the same `run_id`** — so
+//!   the serving layer's same-run merge check accepts the resumed run's
+//!   snapshots as continuations, not strangers.
+//! * Per-iteration metrics stream through a [`TrainObserver`] as they
+//!   happen (replacing the old shared-`Vec` sink), so a CLI can print
+//!   live progress and embedders can watch convergence without polling.
+//!
+//! `Trainer::run` survives as a one-segment wrapper over this API.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::{IterRecord, TrainReport};
+use super::worker::{spawn_worker, WorkerCtx, WorkerExit};
+use crate::config::{ProjectionMode, TrainConfig};
+use crate::corpus::doc::Corpus;
+use crate::corpus::shard::ShardSet;
+use crate::corpus::source::{CorpusSource, FileSource, SyntheticSource};
+use crate::ps::msg::{Control, NodeId, Payload};
+use crate::ps::network::SimNet;
+use crate::ps::scheduler::{Scheduler, SchedulerConfig};
+use crate::ps::server::{ServerConfig, ServerGroup};
+use crate::ps::snapshot::{self, ClientSnapshot, SessionMeta, Store};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Streaming consumer of training metrics. Implementations must be cheap
+/// and non-blocking — callbacks run on the worker threads' hot path.
+pub trait TrainObserver: Send + Sync {
+    /// One worker completed one iteration.
+    fn on_iteration(&self, rec: &IterRecord) {
+        let _ = rec;
+    }
+
+    /// One segment completed (fires on the thread driving the session).
+    fn on_segment(&self, seg: &SegmentReport) {
+        let _ = seg;
+    }
+}
+
+/// The default observer: ignores everything.
+pub struct NullObserver;
+
+impl TrainObserver for NullObserver {}
+
+/// An observer printing live progress to stdout — eval-iteration
+/// perplexities as they stream in, and a summary line per segment (the
+/// CLI's `train` live view).
+pub struct PrintObserver;
+
+impl TrainObserver for PrintObserver {
+    fn on_iteration(&self, rec: &IterRecord) {
+        if let Some(p) = rec.perplexity {
+            println!(
+                "  iter {:>4} shard {:>2}: perplexity {:>9.1} | {:>6} tokens | {:.3}s",
+                rec.iteration, rec.shard, p, rec.tokens, rec.secs
+            );
+        }
+    }
+
+    fn on_segment(&self, seg: &SegmentReport) {
+        println!(
+            "segment {}..{} done: final perplexity {:.1}, {:.0} tokens/s",
+            seg.start_iteration,
+            seg.end_iteration,
+            seg.report.final_perplexity(),
+            seg.report.tokens_per_sec,
+        );
+    }
+}
+
+/// The session's internal metric sink: records every iteration for the
+/// aggregated reports and forwards each record to the user's observer.
+struct RecordingObserver {
+    records: Mutex<Vec<IterRecord>>,
+    user: Arc<dyn TrainObserver>,
+}
+
+impl RecordingObserver {
+    fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    fn slice_from(&self, start: usize) -> Vec<IterRecord> {
+        self.records.lock().unwrap()[start..].to_vec()
+    }
+
+    fn all(&self) -> Vec<IterRecord> {
+        self.records.lock().unwrap().clone()
+    }
+}
+
+impl TrainObserver for RecordingObserver {
+    fn on_iteration(&self, rec: &IterRecord) {
+        self.records.lock().unwrap().push(rec.clone());
+        self.user.on_iteration(rec);
+    }
+}
+
+/// What one [`TrainSession::run_for`] / [`run_to`](TrainSession::run_to)
+/// call produced.
+#[derive(Clone, Debug)]
+pub struct SegmentReport {
+    /// Completed iterations when the segment started.
+    pub start_iteration: u64,
+    /// Iterations completed when it ended — the target when the 90%
+    /// quorum fired, the honest median progress if the hard-deadline
+    /// watchdog terminated the segment early.
+    pub end_iteration: u64,
+    /// Metrics aggregated over this segment only (net/corrections are
+    /// segment deltas).
+    pub report: TrainReport,
+}
+
+struct LiveWorker {
+    shard: usize,
+    node: NodeId,
+    handle: std::thread::JoinHandle<super::worker::WorkerOutcome>,
+}
+
+/// State restored from a checkpoint directory (the resume path).
+struct Restored {
+    run_id: u64,
+    iteration: u64,
+    epoch: u64,
+    stores: Vec<Store>,
+    states: Vec<Option<ClientSnapshot>>,
+    corpus_file: Option<String>,
+    vocab_file: Option<String>,
+}
+
+/// A long-lived training run: topology built once, driven in segments,
+/// checkpointable and resumable. See the module docs for the lifecycle.
+pub struct TrainSession {
+    cfg: Arc<TrainConfig>,
+    /// Effective vocabulary (the loaded corpus's — may exceed
+    /// `cfg.corpus.vocab_size` for file sources).
+    vocab: usize,
+    corpus_file: Option<String>,
+    vocab_file: Option<String>,
+    net: SimNet,
+    scheduler_node: NodeId,
+    group: Option<ServerGroup>,
+    engine: Option<Arc<crate::runtime::EvalService>>,
+    shards: ShardSet,
+    test: Arc<Corpus>,
+    snapshot_dir: Option<PathBuf>,
+    /// The snapshot dir was auto-created under the temp dir (cleanup
+    /// candidate at [`finish`](Self::finish)).
+    auto_snapshot_dir: bool,
+    /// Directories an explicit checkpoint was written into — never
+    /// deleted by the cleanup, even when one of them *is* the
+    /// auto-created temp dir.
+    checkpoint_dirs: Vec<PathBuf>,
+    run_id: u64,
+    /// Completed (quorum) iterations.
+    iteration: u64,
+    /// Segment counter — salts per-segment worker RNG streams.
+    epoch: u64,
+    eval_every: u64,
+    /// Per-shard sampler state carried across segments.
+    states: Vec<Option<ClientSnapshot>>,
+    sink: Arc<RecordingObserver>,
+    user_observer: Arc<dyn TrainObserver>,
+    pending_client_kills: Vec<(u64, usize)>,
+    pending_server_kills: Vec<(u64, usize)>,
+    reassignments: u64,
+    t0: Instant,
+}
+
+fn fresh_run_id() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    nanos ^ ((std::process::id() as u64) << 32)
+}
+
+impl TrainSession {
+    /// Build the topology and return an idle session at iteration 0.
+    /// Validates `cfg` ([`TrainConfig::validate`]) before anything is
+    /// spawned.
+    pub fn start(cfg: TrainConfig, source: &dyn CorpusSource) -> Result<TrainSession> {
+        Self::start_with_observer(cfg, source, Arc::new(NullObserver))
+    }
+
+    /// [`start`](Self::start) with a streaming [`TrainObserver`].
+    pub fn start_with_observer(
+        cfg: TrainConfig,
+        source: &dyn CorpusSource,
+        observer: Arc<dyn TrainObserver>,
+    ) -> Result<TrainSession> {
+        Self::build(cfg, source, observer, None)
+    }
+
+    /// Rebuild a session from a [`checkpoint`](Self::checkpoint)
+    /// directory — in this or a fresh process — and continue training
+    /// under the **same `run_id`**: snapshots the resumed run writes
+    /// still merge as the same run at serving time. The corpus is
+    /// reacquired from the checkpoint's recorded source (the docword file
+    /// for [`FileSource`] runs, the regenerated synthetic corpus
+    /// otherwise) and must be unchanged — the checkpointed topic
+    /// assignments index into its documents.
+    pub fn resume(dir: &Path) -> Result<TrainSession> {
+        Self::resume_with_observer(dir, Arc::new(NullObserver))
+    }
+
+    /// [`resume`](Self::resume) with a streaming [`TrainObserver`].
+    pub fn resume_with_observer(
+        dir: &Path,
+        observer: Arc<dyn TrainObserver>,
+    ) -> Result<TrainSession> {
+        let meta_path = dir.join(snapshot::SESSION_META_NAME);
+        let bytes = snapshot::read_snapshot(&meta_path).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no session checkpoint at {} — was this directory written by \
+                 TrainSession::checkpoint?",
+                meta_path.display()
+            )
+        })?;
+        let sm = snapshot::decode_session(&bytes)
+            .ok_or_else(|| anyhow::anyhow!("corrupt session meta {}", meta_path.display()))?;
+        let json = Json::parse(&sm.config_json)
+            .map_err(|e| anyhow::anyhow!("corrupt checkpoint config JSON: {e}"))?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&json)
+            .map_err(|e| anyhow::anyhow!("bad checkpoint config: {e}"))?;
+        cfg.seed = sm.seed;
+
+        // Server slot stores: every slot of the checkpointed ring must be
+        // present and carry the session's run id.
+        let n_servers = cfg.cluster.n_servers();
+        let mut stores = Vec::with_capacity(n_servers);
+        for slot in 0..n_servers {
+            let path = dir.join(snapshot::slot_snapshot_name(slot));
+            let bytes = snapshot::read_snapshot(&path).ok_or_else(|| {
+                anyhow::anyhow!("partial checkpoint: missing {}", path.display())
+            })?;
+            let (meta, store) = snapshot::decode_store_meta(&bytes)
+                .ok_or_else(|| anyhow::anyhow!("corrupt slot snapshot {}", path.display()))?;
+            if let Some(meta) = meta {
+                anyhow::ensure!(
+                    meta.run_id == sm.run_id,
+                    "checkpoint mixes runs: slot {slot} carries run {:#x}, session \
+                     meta says {:#x}",
+                    meta.run_id,
+                    sm.run_id
+                );
+            }
+            stores.push(store);
+        }
+
+        // Client states: best-effort — a missing shard file resumes that
+        // shard from scratch (the paper's roll-only-yourself-back).
+        let states = (0..cfg.cluster.clients)
+            .map(|i| {
+                snapshot::read_snapshot(&dir.join(format!("client_shard{i}.snap")))
+                    .and_then(|b| snapshot::decode_client(&b))
+                    .filter(|s| s.shard == i)
+            })
+            .collect();
+
+        let source: Box<dyn CorpusSource> = match &sm.corpus_file {
+            Some(p) => {
+                let mut src = FileSource::new(p);
+                if let Some(v) = &sm.vocab_file {
+                    src = src.with_vocab(v);
+                }
+                Box::new(src)
+            }
+            None => Box::new(SyntheticSource::new(cfg.corpus.clone())),
+        };
+        Self::build(
+            cfg,
+            source.as_ref(),
+            observer,
+            Some(Restored {
+                run_id: sm.run_id,
+                iteration: sm.iteration,
+                epoch: sm.epoch,
+                stores,
+                states,
+                corpus_file: sm.corpus_file,
+                vocab_file: sm.vocab_file,
+            }),
+        )
+    }
+
+    fn build(
+        cfg: TrainConfig,
+        source: &dyn CorpusSource,
+        observer: Arc<dyn TrainObserver>,
+        restored: Option<Restored>,
+    ) -> Result<TrainSession> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+        let (corpus_file, vocab_file) = match &restored {
+            Some(r) => (r.corpus_file.clone(), r.vocab_file.clone()),
+            None => (
+                source.file().map(|p| p.display().to_string()),
+                source.vocab_file().map(|p| p.display().to_string()),
+            ),
+        };
+        let corpus = source.load()?;
+        let vocab = corpus.vocab_size;
+        let (train, test) = corpus.split_test(cfg.test_docs);
+        anyhow::ensure!(
+            !train.docs.is_empty(),
+            "corpus from {} has no training documents left after the \
+             {}-document test split",
+            source.describe(),
+            cfg.test_docs
+        );
+        let shards = ShardSet::partition(&train, cfg.cluster.clients);
+        let test = Arc::new(test);
+        let run_id = restored.as_ref().map(|r| r.run_id).unwrap_or_else(fresh_run_id);
+
+        let net = SimNet::new(0, cfg.cluster.net.clone());
+        let scheduler_node = net.add_node();
+        let projection_hook = if cfg.projection == ProjectionMode::OnDemandServer
+            && cfg.model.has_table_constraints()
+        {
+            Some(Arc::new(crate::projection::OnDemandProjection::pdp()))
+        } else {
+            None
+        };
+        let auto_snapshot_dir =
+            cfg.cluster.snapshot_dir.is_none() && cfg.cluster.snapshot_every.is_some();
+        let snapshot_dir = cfg.cluster.snapshot_dir.clone().or_else(|| {
+            cfg.cluster.snapshot_every.map(|_| {
+                std::env::temp_dir().join(format!(
+                    "hplvm_run_{}_{run_id:016x}",
+                    std::process::id()
+                ))
+            })
+        });
+        let (stores, states, iteration, epoch) = match restored {
+            Some(r) => (r.stores, r.states, r.iteration, r.epoch),
+            None => (Vec::new(), vec![None; shards.len()], 0, 0),
+        };
+        anyhow::ensure!(
+            states.len() == shards.len(),
+            "checkpoint has {} client shards but the config builds {}",
+            states.len(),
+            shards.len()
+        );
+        let group = ServerGroup::spawn_with_stores(
+            &net,
+            ServerConfig {
+                n_servers: cfg.cluster.n_servers(),
+                vnodes: cfg.cluster.vnodes,
+                row_width: cfg.params.topics,
+                snapshot_every: cfg.cluster.snapshot_every,
+                snapshot_dir: snapshot_dir.clone(),
+                projection: projection_hook,
+                heartbeat_every: Duration::from_millis(10),
+                // Oversubscribed hosts starve threads for long stretches;
+                // silent-slot failover is a last resort. Explicit kills
+                // (failure injection) are detected immediately either way.
+                liveness_timeout: Duration::from_secs(10),
+                // Stamped into every server snapshot so a snapshot
+                // directory is self-describing for the serving layer. The
+                // v3 table section carries the table-side hyperparameters
+                // (PDP/HDP serving); the run_id is the session's — stable
+                // across checkpoint/resume, fresh per started session.
+                meta: snapshot::SnapshotMeta {
+                    model: cfg.model.name().to_string(),
+                    k: cfg.params.topics as u32,
+                    alpha: cfg.params.alpha,
+                    beta: cfg.params.beta,
+                    vocab_size: vocab as u32,
+                    slot: 0,
+                    n_servers: cfg.cluster.n_servers() as u32,
+                    vnodes: cfg.cluster.vnodes as u32,
+                    iterations: cfg.iterations,
+                    run_id,
+                    tables: match cfg.model {
+                        crate::config::ModelKind::AliasPdp => Some(snapshot::TableHyper {
+                            discount: cfg.params.pdp_discount,
+                            concentration: cfg.params.pdp_concentration,
+                            root: cfg.params.pdp_gamma,
+                        }),
+                        crate::config::ModelKind::AliasHdp => Some(snapshot::TableHyper {
+                            discount: 0.0,
+                            concentration: cfg.params.hdp_b1,
+                            root: cfg.params.hdp_b0,
+                        }),
+                        _ => None,
+                    },
+                },
+            },
+            stores,
+        );
+
+        // Optional PJRT evaluation service (shared by all workers; the
+        // engine itself lives on its own thread — the xla client is !Send).
+        let engine = if cfg.use_pjrt_eval {
+            match crate::runtime::EvalService::spawn(std::path::Path::new("artifacts")) {
+                Ok(Some(e)) => Some(Arc::new(e)),
+                Ok(None) => {
+                    crate::warn!("session", "no PJRT artifacts; using pure-rust eval");
+                    None
+                }
+                Err(e) => {
+                    crate::warn!("session", "PJRT unavailable ({e:#}); using pure-rust eval");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        let eval_every = cfg.eval_every;
+        let pending_client_kills = cfg.failures.kill_clients.clone();
+        let pending_server_kills = cfg.failures.kill_servers.clone();
+        Ok(TrainSession {
+            sink: Arc::new(RecordingObserver {
+                records: Mutex::new(Vec::new()),
+                user: observer.clone(),
+            }),
+            user_observer: observer,
+            cfg: Arc::new(cfg),
+            vocab,
+            corpus_file,
+            vocab_file,
+            net,
+            scheduler_node,
+            group: Some(group),
+            engine,
+            shards,
+            test,
+            snapshot_dir,
+            auto_snapshot_dir,
+            checkpoint_dirs: Vec::new(),
+            run_id,
+            iteration,
+            epoch,
+            eval_every,
+            states,
+            pending_client_kills,
+            pending_server_kills,
+            reassignments: 0,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Completed (quorum) iterations.
+    pub fn iteration(&self) -> u64 {
+        self.iteration
+    }
+
+    /// The run nonce stamped into every snapshot of this session —
+    /// preserved across [`checkpoint`](Self::checkpoint) /
+    /// [`resume`](Self::resume).
+    pub fn run_id(&self) -> u64 {
+        self.run_id
+    }
+
+    /// Effective vocabulary size (the loaded corpus's).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The directory periodic barrier-free snapshots go to (configured,
+    /// or the auto-created temp directory when only a cadence was set).
+    pub fn snapshot_dir(&self) -> Option<&Path> {
+        self.snapshot_dir.as_deref()
+    }
+
+    /// The session configuration.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Retune the evaluation cadence for subsequent segments.
+    pub fn set_eval_every(&mut self, every: u64) -> Result<()> {
+        anyhow::ensure!(every >= 1, "eval_every must be ≥ 1");
+        self.eval_every = every;
+        Ok(())
+    }
+
+    /// Train `n` more iterations (one segment).
+    pub fn run_for(&mut self, n: u64) -> Result<SegmentReport> {
+        self.run_to(self.iteration.saturating_add(n))
+    }
+
+    /// Train until `target` iterations are completed (90% quorum, like
+    /// the one-shot trainer). A target at or below the current iteration
+    /// is a no-op segment.
+    pub fn run_to(&mut self, target: u64) -> Result<SegmentReport> {
+        anyhow::ensure!(
+            self.group.is_some(),
+            "session already finished — start or resume a new one"
+        );
+        let start_iteration = self.iteration;
+        if target <= start_iteration {
+            let seg = SegmentReport {
+                start_iteration,
+                end_iteration: start_iteration,
+                report: TrainReport::from_records(
+                    self.cfg.model.name(),
+                    &[],
+                    0.0,
+                    (0, 0, 0, 0),
+                    0,
+                    0,
+                ),
+            };
+            // Observers hear about every segment, no-ops included, so
+            // their segment counts match the reports the caller received.
+            self.user_observer.on_segment(&seg);
+            return Ok(seg);
+        }
+        self.epoch += 1;
+        let seg_start = Instant::now();
+        let rec_start = self.sink.len();
+        let net0 = self.net.stats();
+        let corr0 = self.group.as_ref().unwrap().total_corrections();
+        let reassign0 = self.reassignments;
+
+        let cfg = self.cfg.clone();
+        let group = self.group.as_ref().unwrap();
+        let observer: Arc<dyn TrainObserver> = self.sink.clone();
+        let spawn = |shard_idx: usize,
+                     resume: Option<ClientSnapshot>,
+                     slowdown: Duration,
+                     announce_init: bool,
+                     net: &SimNet|
+         -> LiveWorker {
+            let node = net.add_node();
+            let ctx = WorkerCtx {
+                cfg: cfg.clone(),
+                shard: self.shards.shards[shard_idx].clone(),
+                client_idx: shard_idx,
+                n_clients: cfg.cluster.clients,
+                net: net.clone(),
+                node,
+                ring: group.ring.clone(),
+                slots: group.slots.clone(),
+                frozen: group.frozen.clone(),
+                scheduler: self.scheduler_node,
+                test: self.test.clone(),
+                observer: observer.clone(),
+                engine: self.engine.clone(),
+                resume,
+                snapshot_dir: self.snapshot_dir.clone(),
+                slowdown,
+                vocab: self.vocab,
+                target_iter: target,
+                eval_every: self.eval_every,
+                announce_init,
+                rng_salt: self.epoch,
+            };
+            LiveWorker {
+                shard: shard_idx,
+                node,
+                handle: spawn_worker(ctx),
+            }
+        };
+
+        // Fresh runs announce their replica-initialization deltas; a
+        // resumed segment must not — the servers already carry every
+        // shard's counts (double-pushing would double the statistics).
+        let announce = start_iteration == 0;
+        let mut live: Vec<LiveWorker> = Vec::new();
+        for s in 0..self.shards.len() {
+            let mut slowdown = cfg.cluster.worker_slowdown;
+            if cfg.cluster.slow_clients.contains(&s) {
+                slowdown = (slowdown * 10).max(Duration::from_millis(2));
+            }
+            live.push(spawn(s, self.states[s].clone(), slowdown, announce, &self.net));
+        }
+
+        // The segment control loop (progress, stragglers, failure
+        // injection, client failover, the 90% rule).
+        let mut scheduler = Scheduler::new(
+            SchedulerConfig::default(),
+            target,
+            live.iter().map(|w| w.node).collect(),
+        );
+        // Seed real per-shard progress: a resumed segment's median starts
+        // at the checkpoint iteration, so "no report yet" is not mistaken
+        // for "stuck at iteration 0" by the straggler policy.
+        for w in &live {
+            let start = self.states[w.shard]
+                .as_ref()
+                .map(|s| s.iteration)
+                .unwrap_or(start_iteration)
+                .min(target);
+            scheduler.record(w.shard, w.node, start, 0);
+        }
+        // Generous watchdog: covers oversubscribed single-core hosts; a
+        // healthy segment terminates via the 90% quorum long before this.
+        let span = target - start_iteration;
+        let hard_deadline = seg_start
+            + Duration::from_secs(120)
+            + Duration::from_millis(span * self.shards.total_tokens() as u64 / 500);
+        let mut deadline_hit = false;
+
+        loop {
+            // Drain progress reports.
+            while let Some(env) = self
+                .net
+                .recv_timeout(self.scheduler_node, Duration::from_millis(5))
+            {
+                if let Payload::Progress {
+                    shard,
+                    iteration,
+                    tokens,
+                } = env.payload
+                {
+                    scheduler.record(shard, env.from, iteration, tokens);
+                }
+            }
+            // Backstop for lossy transports: a worker thread that exited
+            // normally (node still alive) reached its target even if its
+            // final Progress report was dropped. (Terminated workers only
+            // exist after the quorum branch below breaks the loop.)
+            for w in &live {
+                if w.handle.is_finished() && !self.net.is_dead(w.node) {
+                    scheduler.record(w.shard, w.node, target, 0);
+                }
+            }
+            let median = scheduler.median_progress();
+
+            // Failure injection (absolute iterations, so a plan spanning
+            // segment boundaries still fires exactly once).
+            let net = &self.net;
+            self.pending_client_kills.retain(|&(iter, client)| {
+                if median >= iter {
+                    if let Some(w) = live.iter().find(|w| w.shard == client) {
+                        net.kill(w.node);
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+            let group = self.group.as_ref().unwrap();
+            self.pending_server_kills.retain(|&(iter, slot)| {
+                if median >= iter {
+                    group.kill_slot(slot);
+                    false
+                } else {
+                    true
+                }
+            });
+
+            // Straggler policy: kill + reassign (§5.4). Bounded per shard
+            // so a host-wide slowdown can't put a shard into a respawn
+            // loop that never finishes.
+            for shard_idx in scheduler.stragglers() {
+                if scheduler.shards()[shard_idx].reassignments >= 2 {
+                    continue;
+                }
+                if let Some(pos) = live.iter().position(|w| w.shard == shard_idx) {
+                    let w = &live[pos];
+                    self.net.kill(w.node);
+                    // fallthrough: the failover scan below respawns it.
+                }
+            }
+
+            // Client failover: respawn any dead worker from its snapshot.
+            for i in 0..live.len() {
+                if self.net.is_dead(live[i].node)
+                    && scheduler.shards()[live[i].shard].iteration < target
+                {
+                    let shard_idx = live[i].shard;
+                    let resume = self
+                        .snapshot_dir
+                        .as_ref()
+                        .map(|d| d.join(format!("client_shard{shard_idx}.snap")))
+                        .and_then(|p| snapshot::read_snapshot(&p))
+                        .and_then(|b| snapshot::decode_client(&b))
+                        .filter(|s| s.shard == shard_idx);
+                    let old = std::mem::replace(
+                        &mut live[i],
+                        spawn(shard_idx, resume, Duration::ZERO, true, &self.net),
+                    );
+                    let _ = old.handle.join();
+                    scheduler.reassign(shard_idx, live[i].node);
+                    self.reassignments += 1;
+                }
+            }
+
+            if scheduler.quorum_reached() {
+                // 90% rule (§6): tell everyone to stop at their next sync
+                // point. Workers exit carrying their sampler state — the
+                // segment handoff — so Terminate replaces the old
+                // kill-on-quorum (which destroyed the state).
+                for w in &live {
+                    self.net.send(
+                        self.scheduler_node,
+                        w.node,
+                        Payload::Control(Control::Terminate),
+                    );
+                }
+                break;
+            }
+            if Instant::now() > hard_deadline {
+                crate::warn!("session", "hard deadline hit; terminating segment");
+                for w in &live {
+                    self.net.kill(w.node);
+                }
+                deadline_hit = true;
+                break;
+            }
+        }
+
+        // Grace period for Terminated workers to reach a sync point and
+        // hand their state back; anything still running past it is killed
+        // (its shard keeps the previous segment's state).
+        if !deadline_hit {
+            let grace = Instant::now() + Duration::from_secs(15);
+            while !live.iter().all(|w| w.handle.is_finished()) {
+                if Instant::now() > grace {
+                    for w in &live {
+                        self.net.kill(w.node);
+                    }
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        for w in live {
+            if let Ok(out) = w.handle.join() {
+                if let Some(state) = out.state {
+                    debug_assert_ne!(out.exit, WorkerExit::Killed);
+                    self.states[w.shard] = Some(state);
+                }
+            }
+        }
+        // A watchdog-terminated segment must not pretend it reached the
+        // target: record the honest (median) progress, or a later
+        // checkpoint would durably skip the never-trained iterations.
+        let reached = if deadline_hit {
+            scheduler
+                .median_progress()
+                .clamp(start_iteration, target)
+        } else {
+            target
+        };
+        self.iteration = reached;
+
+        let net1 = self.net.stats();
+        let corr1 = self.group.as_ref().unwrap().total_corrections();
+        let seg = SegmentReport {
+            start_iteration,
+            end_iteration: reached,
+            report: TrainReport::from_records(
+                self.cfg.model.name(),
+                &self.sink.slice_from(rec_start),
+                seg_start.elapsed().as_secs_f64(),
+                (
+                    net1.0.saturating_sub(net0.0),
+                    net1.1.saturating_sub(net0.1),
+                    net1.2.saturating_sub(net0.2),
+                    net1.3.saturating_sub(net0.3),
+                ),
+                corr1.saturating_sub(corr0),
+                self.reassignments - reassign0,
+            ),
+        };
+        self.user_observer.on_segment(&seg);
+        Ok(seg)
+    }
+
+    /// Checkpoint the entire cluster into `dir`: every server slot's
+    /// store (written by the live servers and acknowledged), every
+    /// shard's client state, and the session meta. The directory is a
+    /// complete [`resume`](Self::resume) target *and* a valid serving
+    /// snapshot directory (`hplvm serve --snapshot DIR`).
+    pub fn checkpoint(&mut self, dir: &Path) -> Result<()> {
+        anyhow::ensure!(self.group.is_some(), "session already finished");
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+        // Let in-flight end-of-segment pushes land before the servers
+        // serialize their stores (messages to one node deliver in
+        // latency order, so a request sent after this window serializes
+        // after the flushed deltas).
+        let settle = self.cfg.cluster.net.base_latency * 4
+            + self.cfg.cluster.net.jitter * 4
+            + Duration::from_millis(2);
+        std::thread::sleep(settle);
+
+        // Client states (barrier-free: whatever each shard last reached).
+        for state in self.states.iter().flatten() {
+            let path = dir.join(format!("client_shard{}.snap", state.shard));
+            snapshot::write_atomic(&path, &snapshot::encode_client(state))
+                .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+        }
+
+        // Discard anything still queued at the coordinator (stale progress
+        // reports, duplicate acks from an earlier checkpoint's retries) so
+        // an old ack can never satisfy *this* checkpoint — everything
+        // in flight landed during the settle window above.
+        let _ = self.net.drain_ready(self.scheduler_node);
+
+        // Server slot stores, with acknowledged round-trips (re-requested
+        // on a cadence: the transport may drop either direction).
+        let group = self.group.as_ref().unwrap();
+        let n_slots = self.cfg.cluster.n_servers();
+        let mut acked = vec![false; n_slots];
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut next_send = Instant::now();
+        while acked.iter().any(|a| !a) {
+            anyhow::ensure!(
+                Instant::now() <= deadline,
+                "checkpoint timed out waiting for server slots {:?}",
+                acked
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| !a)
+                    .map(|(s, _)| s)
+                    .collect::<Vec<_>>()
+            );
+            if Instant::now() >= next_send {
+                for (slot, &done) in acked.iter().enumerate() {
+                    if !done {
+                        self.net.send(
+                            self.scheduler_node,
+                            group.node_for_slot(slot as u32),
+                            Payload::SnapshotReq {
+                                dir: dir.to_path_buf(),
+                            },
+                        );
+                    }
+                }
+                next_send = Instant::now() + Duration::from_millis(200);
+            }
+            while let Some(env) = self
+                .net
+                .recv_timeout(self.scheduler_node, Duration::from_millis(5))
+            {
+                if let Payload::SnapshotAck {
+                    slot,
+                    ok,
+                    dir: acked_dir,
+                } = env.payload
+                {
+                    // Only acks for *this* checkpoint's directory count —
+                    // a stale ack from an earlier checkpoint's retry must
+                    // not mark a slot done it never wrote here.
+                    if acked_dir != dir {
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        ok,
+                        "server slot {slot} failed to write its checkpoint snapshot \
+                         into {}",
+                        dir.display()
+                    );
+                    if let Some(a) = acked.get_mut(slot as usize) {
+                        *a = true;
+                    }
+                }
+            }
+        }
+
+        // Session meta last: its presence marks the checkpoint complete.
+        let sm = SessionMeta {
+            run_id: self.run_id,
+            iteration: self.iteration,
+            epoch: self.epoch,
+            seed: self.cfg.seed,
+            config_json: self.cfg.to_json().to_string(),
+            corpus_file: self.corpus_file.clone(),
+            vocab_file: self.vocab_file.clone(),
+        };
+        let meta_path = dir.join(snapshot::SESSION_META_NAME);
+        snapshot::write_atomic(&meta_path, &snapshot::encode_session(&sm))
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", meta_path.display()))?;
+
+        // A directory a checkpoint went into is never cleaned up — even
+        // when it is the auto-created periodic-snapshot temp dir.
+        if !self.checkpoint_dirs.iter().any(|d| d == dir) {
+            self.checkpoint_dirs.push(dir.to_path_buf());
+        }
+        Ok(())
+    }
+
+    /// The cumulative report over every segment so far (the session keeps
+    /// running).
+    pub fn report(&self) -> TrainReport {
+        let (corr, net) = match &self.group {
+            Some(g) => (g.total_corrections(), self.net.stats()),
+            None => (0, self.net.stats()),
+        };
+        TrainReport::from_records(
+            self.cfg.model.name(),
+            &self.sink.all(),
+            self.t0.elapsed().as_secs_f64(),
+            net,
+            corr,
+            self.reassignments,
+        )
+    }
+
+    /// Shut the cluster down and return the cumulative report. Periodic
+    /// server snapshots flush once more on shutdown (into the configured
+    /// snapshot dir); the auto-created temp snapshot dir is removed
+    /// *unless* a [`checkpoint`](Self::checkpoint) was written into it.
+    pub fn finish(mut self) -> Result<TrainReport> {
+        let report = self.report();
+        if let Some(group) = self.group.take() {
+            group.shutdown();
+        }
+        if let (Some(dir), true) = (&self.snapshot_dir, self.auto_snapshot_dir) {
+            if !self.checkpoint_dirs.iter().any(|d| d == dir) {
+                let _ = std::fs::remove_dir_all(dir);
+            }
+        }
+        Ok(report)
+    }
+}
+
+impl Drop for TrainSession {
+    fn drop(&mut self) {
+        // A dropped (not finished) session still stops its server threads;
+        // the auto temp dir is left behind for post-mortems.
+        if let Some(group) = self.group.take() {
+            group.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+
+    fn tiny_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.model = ModelKind::AliasLda;
+        cfg.params.topics = 6;
+        cfg.corpus.n_docs = 80;
+        cfg.corpus.vocab_size = 200;
+        cfg.corpus.n_topics = 6;
+        cfg.corpus.doc_len_mean = 10.0;
+        cfg.cluster.clients = 2;
+        cfg.cluster.net.base_latency = Duration::from_micros(50);
+        cfg.cluster.net.jitter = Duration::from_micros(50);
+        cfg.iterations = 4;
+        cfg.eval_every = 2;
+        cfg.test_docs = 10;
+        cfg
+    }
+
+    #[test]
+    fn start_validates_config_before_building() {
+        let mut cfg = tiny_cfg();
+        cfg.eval_every = 0;
+        let src = SyntheticSource::new(cfg.corpus.clone());
+        let err = match TrainSession::start(cfg, &src) {
+            Ok(_) => panic!("degenerate config must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("eval_every"), "{err}");
+    }
+
+    #[test]
+    fn noop_segment_and_eval_cadence_guard() {
+        let cfg = tiny_cfg();
+        let src = SyntheticSource::new(cfg.corpus.clone());
+        let mut s = TrainSession::start(cfg, &src).unwrap();
+        assert_eq!(s.iteration(), 0);
+        let seg = s.run_to(0).unwrap();
+        assert_eq!(
+            (seg.start_iteration, seg.end_iteration),
+            (0, 0),
+            "target 0 is a no-op segment"
+        );
+        assert!(seg.report.per_iteration.is_empty());
+        assert!(s.set_eval_every(0).is_err());
+        s.set_eval_every(7).unwrap();
+        assert!(s.run_id() != 0);
+        let _ = s.finish().unwrap();
+    }
+
+    /// Two segments through the session equal one longer run structurally,
+    /// metrics stream through the observer, and the segment boundary
+    /// leaves the cluster hot.
+    #[test]
+    fn segments_stream_observer_and_accumulate() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Counting {
+            iters: AtomicUsize,
+            segs: AtomicUsize,
+        }
+        impl TrainObserver for Counting {
+            fn on_iteration(&self, _rec: &IterRecord) {
+                self.iters.fetch_add(1, Ordering::Relaxed);
+            }
+            fn on_segment(&self, seg: &SegmentReport) {
+                self.segs.fetch_add(1, Ordering::Relaxed);
+                assert!(seg.report.final_perplexity().is_finite());
+            }
+        }
+        let obs = Arc::new(Counting {
+            iters: AtomicUsize::new(0),
+            segs: AtomicUsize::new(0),
+        });
+        let cfg = tiny_cfg();
+        let src = SyntheticSource::new(cfg.corpus.clone());
+        let mut s =
+            TrainSession::start_with_observer(cfg, &src, obs.clone()).unwrap();
+        let seg1 = s.run_for(2).unwrap();
+        assert_eq!((seg1.start_iteration, seg1.end_iteration), (0, 2));
+        let seg2 = s.run_for(2).unwrap();
+        assert_eq!((seg2.start_iteration, seg2.end_iteration), (2, 4));
+        // Segment 2 rows start after segment 1 (no leading empties).
+        assert!(seg2.report.per_iteration[0].iteration >= 3);
+        let total = s.finish().unwrap();
+        assert_eq!(obs.segs.load(Ordering::Relaxed), 2);
+        assert!(obs.iters.load(Ordering::Relaxed) >= 4);
+        assert!(total.per_iteration.len() >= seg2.report.per_iteration.len());
+        assert!(total.final_perplexity().is_finite());
+    }
+}

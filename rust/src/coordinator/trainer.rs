@@ -1,30 +1,20 @@
-//! The trainer: builds the whole topology (corpus → shards → server group
-//! → client workers → scheduler), drives the control loop (progress,
-//! stragglers, failure injection, client failover, the 90% rule), and
-//! aggregates the report.
+//! The one-shot trainer: a thin wrapper over [`TrainSession`] that runs a
+//! single segment to `cfg.iterations` and tears the topology down — the
+//! legacy entry point every example, bench, and test drives.
+//!
+//! Everything the trainer used to own (topology build, the control loop,
+//! stragglers, failure injection, client failover, the 90% rule) lives in
+//! [`super::session`] now; `Trainer::run(cfg)` is exactly
+//! `TrainSession::start(cfg, SyntheticSource) → run_to(iterations) →
+//! finish()`.
 
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
-
-use super::metrics::{IterRecord, TrainReport};
-use super::worker::{spawn_worker, WorkerCtx, WorkerExit};
-use crate::config::{ProjectionMode, TrainConfig};
-use crate::corpus::shard::ShardSet;
-use crate::ps::msg::{Control, NodeId, Payload};
-use crate::ps::network::SimNet;
-use crate::ps::scheduler::{Scheduler, SchedulerConfig};
-use crate::ps::server::{ServerConfig, ServerGroup};
-use crate::ps::snapshot::{self, ClientSnapshot};
+use super::metrics::TrainReport;
+use super::session::TrainSession;
+use crate::config::TrainConfig;
+use crate::corpus::source::SyntheticSource;
 use crate::Result;
 
-struct LiveWorker {
-    shard: usize,
-    client_idx: usize,
-    node: NodeId,
-    handle: std::thread::JoinHandle<WorkerExit>,
-}
-
-/// The top-level training driver.
+/// The top-level one-shot training driver.
 pub struct Trainer {
     cfg: TrainConfig,
 }
@@ -37,286 +27,19 @@ impl Trainer {
 
     /// Run training to completion and return the aggregated report.
     pub fn run(self) -> Result<TrainReport> {
-        let cfg = Arc::new(self.cfg);
-        let t0 = Instant::now();
-
-        // 1. Corpus + shards + held-out test set.
-        let (corpus, _vocab) = cfg.corpus.generate();
-        let (train, test) = corpus.split_test(cfg.test_docs);
-        let shards = ShardSet::partition(&train, cfg.cluster.clients);
-        let test = Arc::new(test);
-
-        // 2. Transport + server group (+ Algorithm-3 hook when selected).
-        let net = SimNet::new(0, cfg.cluster.net.clone());
-        let scheduler_node = net.add_node();
-        let projection_hook = if cfg.projection == ProjectionMode::OnDemandServer
-            && cfg.model.has_table_constraints()
-        {
-            Some(Arc::new(crate::projection::OnDemandProjection::pdp()))
-        } else {
-            None
-        };
-        let snapshot_dir = cfg.cluster.snapshot_dir.clone().or_else(|| {
-            cfg.cluster
-                .snapshot_every
-                .map(|_| std::env::temp_dir().join(format!("hplvm_run_{}", std::process::id())))
-        });
-        let group = ServerGroup::spawn(
-            &net,
-            ServerConfig {
-                n_servers: cfg.cluster.n_servers(),
-                vnodes: cfg.cluster.vnodes,
-                row_width: cfg.params.topics,
-                snapshot_every: cfg.cluster.snapshot_every,
-                snapshot_dir: snapshot_dir.clone(),
-                projection: projection_hook,
-                heartbeat_every: Duration::from_millis(10),
-                // Oversubscribed hosts starve threads for long stretches;
-                // silent-slot failover is a last resort. Explicit kills
-                // (failure injection) are detected immediately either way.
-                liveness_timeout: Duration::from_secs(10),
-                // Stamped into every server snapshot so a snapshot
-                // directory is self-describing for the serving layer. The
-                // v3 table section carries the hyperparameters that give
-                // the matrix-1 table counts meaning (PDP/HDP serving).
-                meta: snapshot::SnapshotMeta {
-                    model: cfg.model.name().to_string(),
-                    k: cfg.params.topics as u32,
-                    alpha: cfg.params.alpha,
-                    beta: cfg.params.beta,
-                    vocab_size: cfg.corpus.vocab_size as u32,
-                    slot: 0,
-                    n_servers: cfg.cluster.n_servers() as u32,
-                    vnodes: cfg.cluster.vnodes as u32,
-                    iterations: cfg.iterations,
-                    // Fresh nonce per run: slot files from different runs
-                    // must never merge at serving time, even when every
-                    // configured hyperparameter matches.
-                    run_id: {
-                        let nanos = std::time::SystemTime::now()
-                            .duration_since(std::time::UNIX_EPOCH)
-                            .map(|d| d.as_nanos() as u64)
-                            .unwrap_or(0);
-                        nanos ^ ((std::process::id() as u64) << 32)
-                    },
-                    tables: match cfg.model {
-                        crate::config::ModelKind::AliasPdp => Some(snapshot::TableHyper {
-                            discount: cfg.params.pdp_discount,
-                            concentration: cfg.params.pdp_concentration,
-                            root: cfg.params.pdp_gamma,
-                        }),
-                        crate::config::ModelKind::AliasHdp => Some(snapshot::TableHyper {
-                            discount: 0.0,
-                            concentration: cfg.params.hdp_b1,
-                            root: cfg.params.hdp_b0,
-                        }),
-                        _ => None,
-                    },
-                },
-            },
-        );
-
-        // 3. Optional PJRT evaluation service (shared by all workers; the
-        // engine itself lives on its own thread — the xla client is !Send).
-        let engine = if cfg.use_pjrt_eval {
-            match crate::runtime::EvalService::spawn(std::path::Path::new("artifacts")) {
-                Ok(Some(e)) => Some(Arc::new(e)),
-                Ok(None) => {
-                    crate::warn!("trainer", "no PJRT artifacts; using pure-rust eval");
-                    None
-                }
-                Err(e) => {
-                    crate::warn!("trainer", "PJRT unavailable ({e:#}); using pure-rust eval");
-                    None
-                }
-            }
-        } else {
-            None
-        };
-
-        // 4. Workers.
-        let records: Arc<Mutex<Vec<IterRecord>>> = Arc::new(Mutex::new(Vec::new()));
-        let mut live: Vec<LiveWorker> = Vec::new();
-        let spawn = |shard_idx: usize,
-                     resume: Option<ClientSnapshot>,
-                     slowdown: Duration,
-                     net: &SimNet|
-         -> LiveWorker {
-            let node = net.add_node();
-            let ctx = WorkerCtx {
-                cfg: cfg.clone(),
-                shard: shards.shards[shard_idx].clone(),
-                client_idx: shard_idx,
-                n_clients: cfg.cluster.clients,
-                net: net.clone(),
-                node,
-                ring: group.ring.clone(),
-                slots: group.slots.clone(),
-                frozen: group.frozen.clone(),
-                scheduler: scheduler_node,
-                test: test.clone(),
-                records: records.clone(),
-                engine: engine.clone(),
-                resume,
-                snapshot_dir: snapshot_dir.clone(),
-                slowdown,
-            };
-            LiveWorker {
-                shard: shard_idx,
-                client_idx: shard_idx,
-                node,
-                handle: spawn_worker(ctx),
-            }
-        };
-        for s in 0..shards.len() {
-            let mut slowdown = cfg.cluster.worker_slowdown;
-            if cfg.cluster.slow_clients.contains(&s) {
-                slowdown = (slowdown * 10).max(Duration::from_millis(2));
-            }
-            live.push(spawn(s, None, slowdown, &net));
-        }
-
-        // 5. Control loop: the scheduler node.
-        let mut scheduler = Scheduler::new(
-            SchedulerConfig::default(),
-            cfg.iterations,
-            live.iter().map(|w| w.node).collect(),
-        );
-        let mut pending_client_kills = cfg.failures.kill_clients.clone();
-        let mut pending_server_kills = cfg.failures.kill_servers.clone();
-        let mut reassignments = 0u64;
-        // Generous watchdog: covers oversubscribed single-core hosts; a
-        // healthy run terminates via the 90% quorum long before this.
-        let hard_deadline = t0
-            + Duration::from_secs(120)
-            + Duration::from_millis(cfg.iterations as u64 * shards.total_tokens() as u64 / 500);
-
-        loop {
-            // Drain progress reports.
-            while let Some(env) = net.recv_timeout(scheduler_node, Duration::from_millis(5)) {
-                if let Payload::Progress {
-                    shard,
-                    iteration,
-                    tokens,
-                } = env.payload
-                {
-                    scheduler.record(shard, env.from, iteration, tokens);
-                }
-            }
-            // Backstop for lossy transports: a worker thread that exited
-            // normally (node still alive) reached its target even if its
-            // final Progress report was dropped.
-            for w in &live {
-                if w.handle.is_finished() && !net.is_dead(w.node) {
-                    scheduler.record(w.shard, w.node, cfg.iterations, 0);
-                }
-            }
-            let median = scheduler.median_progress();
-
-            // Failure injection.
-            pending_client_kills.retain(|&(iter, client)| {
-                if median >= iter {
-                    if let Some(w) = live.iter().find(|w| w.client_idx == client) {
-                        net.kill(w.node);
-                    }
-                    false
-                } else {
-                    true
-                }
-            });
-            pending_server_kills.retain(|&(iter, slot)| {
-                if median >= iter {
-                    group.kill_slot(slot);
-                    false
-                } else {
-                    true
-                }
-            });
-
-            // Straggler policy: kill + reassign (§5.4). Bounded per shard
-            // so a host-wide slowdown can't put a shard into a respawn
-            // loop that never finishes.
-            for shard_idx in scheduler.stragglers() {
-                if scheduler.shards()[shard_idx].reassignments >= 2 {
-                    continue;
-                }
-                if let Some(pos) = live.iter().position(|w| w.shard == shard_idx) {
-                    let w = &live[pos];
-                    net.kill(w.node);
-                    // fallthrough: the failover scan below respawns it.
-                }
-            }
-
-            // Client failover: respawn any dead worker from its snapshot.
-            for i in 0..live.len() {
-                if net.is_dead(live[i].node)
-                    && scheduler.shards()[live[i].shard].iteration < cfg.iterations
-                {
-                    let shard_idx = live[i].shard;
-                    let resume = snapshot_dir
-                        .as_ref()
-                        .map(|d| d.join(format!("client_shard{shard_idx}.snap")))
-                        .and_then(|p| snapshot::read_snapshot(&p))
-                        .and_then(|b| snapshot::decode_client(&b))
-                        .filter(|s| s.shard == shard_idx);
-                    let old = std::mem::replace(
-                        &mut live[i],
-                        spawn(shard_idx, resume, Duration::ZERO, &net),
-                    );
-                    let _ = old.handle.join();
-                    scheduler.reassign(shard_idx, live[i].node);
-                    reassignments += 1;
-                }
-            }
-
-            if scheduler.quorum_reached() {
-                // 90% rule: stop everyone (§6).
-                for w in &live {
-                    net.send(
-                        scheduler_node,
-                        w.node,
-                        Payload::Control(Control::Terminate),
-                    );
-                    net.kill(w.node);
-                }
-                break;
-            }
-            if Instant::now() > hard_deadline {
-                crate::warn!("trainer", "hard deadline hit; terminating run");
-                for w in &live {
-                    net.kill(w.node);
-                }
-                break;
-            }
-        }
-
-        for w in live {
-            let _ = w.handle.join();
-        }
-        let server_corrections = group.total_corrections();
-        let net_stats = net.stats();
-        group.shutdown();
-        if let (Some(dir), None) = (&snapshot_dir, &cfg.cluster.snapshot_dir) {
-            // Clean up the auto-created temp dir (keep user-specified ones).
-            let _ = std::fs::remove_dir_all(dir);
-        }
-
-        let records = records.lock().unwrap();
-        Ok(TrainReport::from_records(
-            cfg.model.name(),
-            &records,
-            t0.elapsed().as_secs_f64(),
-            net_stats,
-            server_corrections,
-            reassignments,
-        ))
+        let target = self.cfg.iterations;
+        let source = SyntheticSource::new(self.cfg.corpus.clone());
+        let mut session = TrainSession::start(self.cfg, &source)?;
+        session.run_to(target)?;
+        session.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelKind;
+    use crate::config::{ModelKind, ProjectionMode};
+    use std::time::Duration;
 
     fn tiny_cfg(model: ModelKind) -> TrainConfig {
         let mut cfg = TrainConfig::default();
@@ -396,5 +119,18 @@ mod tests {
             "straggler was never killed/reassigned"
         );
         assert!(rep.final_perplexity().is_finite());
+    }
+
+    /// The wrapper's degenerate-config path surfaces `validate()` errors
+    /// instead of dividing by zero deep in the worker loop.
+    #[test]
+    fn run_refuses_invalid_configs() {
+        let mut cfg = tiny_cfg(ModelKind::AliasLda);
+        cfg.cluster.sync_every_docs = 0;
+        let err = match Trainer::new(cfg).run() {
+            Ok(_) => panic!("invalid config must be refused"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("sync_every_docs"), "{err}");
     }
 }

@@ -4,12 +4,18 @@
 //! (eventual consistency), run client-side projection at the end of each
 //! iteration, evaluate perplexity on the paper's cadence, snapshot, and
 //! obey the scheduler's control messages.
+//!
+//! Workers are *segment-scoped*: a [`TrainSession`](super::TrainSession)
+//! spawns them with a target iteration, and a cleanly exiting worker
+//! hands its final sampler state back ([`WorkerOutcome`]) so the next
+//! segment — or a checkpoint — continues exactly where it stopped.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::IterRecord;
 use super::model::ModelSampler;
+use super::session::TrainObserver;
 use crate::config::TrainConfig;
 use crate::corpus::doc::Corpus;
 use crate::corpus::shard::Shard;
@@ -30,6 +36,17 @@ pub enum WorkerExit {
     Killed,
     /// Told to stop by the scheduler's Terminate broadcast.
     Terminated,
+}
+
+/// What a worker thread hands back when it exits.
+pub struct WorkerOutcome {
+    /// Why it exited.
+    pub exit: WorkerExit,
+    /// Final sampler state for clean exits — the segment handoff the
+    /// session resumes the next segment (or a checkpoint) from. `None`
+    /// when the node was killed: the failover path restores from the
+    /// barrier-free disk snapshot instead.
+    pub state: Option<ClientSnapshot>,
 }
 
 /// Everything a worker thread needs.
@@ -56,35 +73,78 @@ pub struct WorkerCtx {
     pub scheduler: NodeId,
     /// Held-out test corpus.
     pub test: Arc<Corpus>,
-    /// Metric sink.
-    pub records: Arc<Mutex<Vec<IterRecord>>>,
+    /// Per-iteration metric stream (the session's recording observer,
+    /// which forwards to whatever the caller installed).
+    pub observer: Arc<dyn TrainObserver>,
     /// Optional PJRT evaluation service (shared; the engine itself lives
     /// on a dedicated thread).
     pub engine: Option<Arc<crate::runtime::EvalService>>,
-    /// Resume state (client failover).
+    /// Resume state (segment handoff or client failover).
     pub resume: Option<ClientSnapshot>,
-    /// Client snapshot directory.
+    /// Client snapshot directory (barrier-free failover snapshots).
     pub snapshot_dir: Option<std::path::PathBuf>,
     /// Artificial per-document slowdown (straggler injection; 0 = none).
     pub slowdown: Duration,
+    /// Effective vocabulary size (the loaded corpus's, which may differ
+    /// from `cfg.corpus.vocab_size` for file-backed sources).
+    pub vocab: usize,
+    /// Train until this (absolute) iteration count is completed.
+    pub target_iter: u64,
+    /// Evaluate test perplexity every this many iterations (the session
+    /// can retune it between segments).
+    pub eval_every: u64,
+    /// Push the (re)initialization deltas so global counts include this
+    /// replica. True for fresh starts and failover respawns; false for
+    /// segment/checkpoint resumes, where the servers already carry this
+    /// shard's counts and re-pushing would double them.
+    pub announce_init: bool,
+    /// Per-segment RNG salt: a resumed run must not replay segment 1's
+    /// random streams.
+    pub rng_salt: u64,
 }
 
 /// Spawn a worker thread.
-pub fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<WorkerExit> {
+pub fn spawn_worker(ctx: WorkerCtx) -> std::thread::JoinHandle<WorkerOutcome> {
     std::thread::Builder::new()
         .name(format!("worker-{}", ctx.client_idx))
         .spawn(move || run_worker(ctx))
         .expect("spawn worker")
 }
 
-fn run_worker(ctx: WorkerCtx) -> WorkerExit {
+/// Package an exit: clean exits carry the sampler state for the segment
+/// handoff, killed workers carry nothing (disk snapshots cover failover).
+fn outcome(
+    exit: WorkerExit,
+    sampler: &ModelSampler,
+    shard: usize,
+    iteration: u64,
+) -> WorkerOutcome {
+    let state = match exit {
+        WorkerExit::Killed => None,
+        WorkerExit::Finished | WorkerExit::Terminated => {
+            let (z, r) = sampler.assignments();
+            Some(ClientSnapshot {
+                shard,
+                iteration,
+                z: z.to_vec(),
+                r: r.to_vec(),
+            })
+        }
+    };
+    WorkerOutcome { exit, state }
+}
+
+fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
     let cfg = &*ctx.cfg;
-    let mut rng = Rng::new(cfg.seed).derive(1000 + ctx.node as u64);
+    let mut rng = Rng::new(cfg.seed)
+        .derive(1000 + ctx.node as u64)
+        .derive(ctx.rng_salt);
     let start_iteration = ctx.resume.as_ref().map(|s| s.iteration).unwrap_or(0);
+    let target = ctx.target_iter;
     let mut sampler = ModelSampler::build(
         cfg,
         ctx.shard.docs.clone(),
-        cfg.corpus.vocab_size,
+        ctx.vocab,
         ctx.resume.as_ref(),
         &mut rng,
     );
@@ -101,13 +161,13 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
     // The words this shard touches (plus the tables row for HDP) — the
     // pull set.
     let mut shard_words: Vec<u32> = {
-        let mut seen = vec![false; cfg.corpus.vocab_size];
+        let mut seen = vec![false; ctx.vocab];
         for d in &ctx.shard.docs {
             for &w in &d.tokens {
                 seen[w as usize] = true;
             }
         }
-        (0..cfg.corpus.vocab_size as u32)
+        (0..ctx.vocab as u32)
             .filter(|&w| seen[w as usize])
             .collect()
     };
@@ -115,14 +175,23 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
 
     let n_docs = ctx.shard.docs.len();
     let mut iteration = start_iteration;
-    // Push the (re)initialization deltas so global counts include us.
-    for (m, replica) in sampler.matrices() {
-        client.push_matrix(m, replica);
+    if ctx.announce_init {
+        // Push the (re)initialization deltas so global counts include us.
+        for (m, replica) in sampler.matrices() {
+            client.push_matrix(m, replica);
+        }
+    } else {
+        // Segment resume: the servers already carry this shard's counts;
+        // discard the local rebuild's delta log instead of double-pushing
+        // it. Subsequent sampling moves are genuine deltas again.
+        for (_m, replica) in sampler.matrices() {
+            let _ = replica.drain_deltas();
+        }
     }
 
-    while iteration < cfg.iterations {
+    while iteration < target {
         if ctx.net.is_dead(ctx.node) {
-            return WorkerExit::Killed;
+            return outcome(WorkerExit::Killed, &sampler, ctx.shard.id, iteration);
         }
         let iter_watch = Instant::now();
         let mut sample_watch = Stopwatch::new();
@@ -139,7 +208,7 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
             // Eventual-consistency sync point.
             if (d + 1) % cfg.cluster.sync_every_docs == 0 || d + 1 == n_docs {
                 if ctx.net.is_dead(ctx.node) {
-                    return WorkerExit::Killed;
+                    return outcome(WorkerExit::Killed, &sampler, ctx.shard.id, iteration);
                 }
                 for (m, replica) in sampler.matrices() {
                     client.push_matrix(m, replica);
@@ -148,9 +217,21 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
                 for ev in client.drain_responses(Duration::ZERO) {
                     match ev {
                         ClientEvent::Rows(m, rows) => sampler.apply_rows(m, &rows),
-                        ClientEvent::Control(Control::Kill) => return WorkerExit::Killed,
+                        ClientEvent::Control(Control::Kill) => {
+                            return outcome(
+                                WorkerExit::Killed,
+                                &sampler,
+                                ctx.shard.id,
+                                iteration,
+                            )
+                        }
                         ClientEvent::Control(Control::Terminate) => {
-                            return WorkerExit::Terminated
+                            return outcome(
+                                WorkerExit::Terminated,
+                                &sampler,
+                                ctx.shard.id,
+                                iteration,
+                            )
                         }
                         ClientEvent::Control(Control::Reroute) => {}
                     }
@@ -175,8 +256,12 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
         for ev in client.drain_responses(wait) {
             match ev {
                 ClientEvent::Rows(m, rows) => sampler.apply_rows(m, &rows),
-                ClientEvent::Control(Control::Kill) => return WorkerExit::Killed,
-                ClientEvent::Control(Control::Terminate) => return WorkerExit::Terminated,
+                ClientEvent::Control(Control::Kill) => {
+                    return outcome(WorkerExit::Killed, &sampler, ctx.shard.id, iteration)
+                }
+                ClientEvent::Control(Control::Terminate) => {
+                    return outcome(WorkerExit::Terminated, &sampler, ctx.shard.id, iteration)
+                }
                 ClientEvent::Control(Control::Reroute) => {}
             }
         }
@@ -197,7 +282,9 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
         iteration += 1;
 
         // Metrics: perplexity every `eval_every`, log-lik every iteration.
-        let perp = if iteration % cfg.eval_every == 0 || iteration == cfg.iterations {
+        // Segment ends always evaluate, so every SegmentReport carries a
+        // final perplexity.
+        let perp = if iteration % ctx.eval_every == 0 || iteration == target {
             let rep = perplexity(
                 sampler.view(),
                 &ctx.test,
@@ -216,7 +303,7 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
             sampler.docs(),
             z,
         );
-        ctx.records.lock().unwrap().push(IterRecord {
+        ctx.observer.on_iteration(&IterRecord {
             shard: ctx.shard.id,
             client_idx: ctx.client_idx,
             iteration,
@@ -249,5 +336,5 @@ fn run_worker(ctx: WorkerCtx) -> WorkerExit {
     for (m, replica) in sampler.matrices() {
         client.push_matrix(m, replica);
     }
-    WorkerExit::Finished
+    outcome(WorkerExit::Finished, &sampler, ctx.shard.id, iteration)
 }

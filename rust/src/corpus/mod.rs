@@ -12,13 +12,19 @@
 //!    lose and the alias sampler wins),
 //! 3. **power-law vocabulary** (word frequencies Zipf-distributed; the PYP
 //!    generator reproduces the natural-language tail the PDP model targets).
+//!
+//! Corpus *acquisition* is pluggable ([`source::CorpusSource`]): the
+//! synthetic generator is one source among others — a docword file on
+//! disk ([`source::FileSource`]) trains through the identical path.
 
 pub mod doc;
 pub mod generator;
 pub mod shard;
+pub mod source;
 pub mod vocab;
 
 pub use doc::{Corpus, Document};
 pub use generator::{CorpusConfig, GenerativeModel};
 pub use shard::{Shard, ShardSet};
+pub use source::{read_docword, write_docword, CorpusSource, FileSource, SyntheticSource};
 pub use vocab::Vocabulary;

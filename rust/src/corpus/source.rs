@@ -1,0 +1,399 @@
+//! Pluggable corpus acquisition: where a training session's documents
+//! come from.
+//!
+//! The paper trains on a real production collection fed by a persistent
+//! pipeline; our trainer historically synthesized its corpus internally,
+//! which made real corpora a second-class citizen. A [`CorpusSource`]
+//! moves acquisition behind a trait the
+//! [`TrainSession`](crate::coordinator::TrainSession) consumes:
+//!
+//! * [`SyntheticSource`] wraps the existing ground-truth generator
+//!   ([`CorpusConfig::generate`]) unchanged — the default, and what
+//!   `Trainer::run` uses.
+//! * [`FileSource`] loads a simple *docword* text format (the UCI
+//!   bag-of-words layout) plus an optional one-token-per-line vocabulary
+//!   file, so a real corpus on disk is a first-class training scenario.
+//!
+//! The docword format, chosen for hand-editability and `wc`-greppability:
+//!
+//! ```text
+//! D            # number of documents
+//! W            # vocabulary size (word ids are 1..=W in the body)
+//! NNZ          # number of (doc, word) pairs that follow
+//! d w c        # document d contains word w c times (1-based d and w)
+//! ```
+//!
+//! [`write_docword`] emits this layout from any [`Corpus`], giving a
+//! lossless* round trip (*token multiset per document; bag-of-words
+//! models never observe token order).
+
+use std::io::{BufRead, Write};
+use std::path::{Path, PathBuf};
+
+use super::doc::{Corpus, Document};
+use super::generator::CorpusConfig;
+use crate::Result;
+
+/// Where a training session's corpus comes from.
+pub trait CorpusSource {
+    /// Load (or synthesize) the corpus. Called once at session start; a
+    /// resumed session calls it again and must observe the identical
+    /// corpus (the checkpoint's topic assignments index into it).
+    fn load(&self) -> Result<Corpus>;
+
+    /// One-line human description for logs and reports.
+    fn describe(&self) -> String;
+
+    /// The backing docword file, when there is one. Recorded into the
+    /// session checkpoint so [`TrainSession::resume`] can reload the same
+    /// corpus without re-specifying the source.
+    ///
+    /// [`TrainSession::resume`]: crate::coordinator::TrainSession::resume
+    fn file(&self) -> Option<PathBuf> {
+        None
+    }
+
+    /// The companion vocabulary file, when there is one — checkpointed
+    /// next to [`file`](Self::file) so a resumed run keeps the same
+    /// (possibly widened) effective vocabulary.
+    fn vocab_file(&self) -> Option<PathBuf> {
+        None
+    }
+}
+
+/// The ground-truth synthetic generator behind the [`CorpusSource`] trait.
+#[derive(Clone, Debug)]
+pub struct SyntheticSource {
+    /// Generator knobs (deterministic given `cfg.seed`).
+    pub cfg: CorpusConfig,
+}
+
+impl SyntheticSource {
+    /// Wrap a generator configuration.
+    pub fn new(cfg: CorpusConfig) -> SyntheticSource {
+        SyntheticSource { cfg }
+    }
+}
+
+impl CorpusSource for SyntheticSource {
+    fn load(&self) -> Result<Corpus> {
+        let (corpus, _vocab) = self.cfg.generate();
+        Ok(corpus)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "synthetic {:?} corpus ({} docs, V={}, seed {})",
+            self.cfg.model, self.cfg.n_docs, self.cfg.vocab_size, self.cfg.seed
+        )
+    }
+}
+
+/// A docword file on disk (plus an optional vocabulary file).
+#[derive(Clone, Debug)]
+pub struct FileSource {
+    /// Path to the docword file.
+    pub docword: PathBuf,
+    /// Optional vocabulary file (one surface form per line); only its
+    /// line count is consulted, to widen the vocabulary beyond the
+    /// docword header's `W` when the two disagree.
+    pub vocab: Option<PathBuf>,
+}
+
+impl FileSource {
+    /// A source reading `docword` (no vocabulary file).
+    pub fn new(docword: impl Into<PathBuf>) -> FileSource {
+        FileSource {
+            docword: docword.into(),
+            vocab: None,
+        }
+    }
+
+    /// Attach a vocabulary file.
+    pub fn with_vocab(mut self, vocab: impl Into<PathBuf>) -> FileSource {
+        self.vocab = Some(vocab.into());
+        self
+    }
+}
+
+impl CorpusSource for FileSource {
+    fn load(&self) -> Result<Corpus> {
+        let mut corpus = read_docword(&self.docword)?;
+        if let Some(vocab) = &self.vocab {
+            let lines = std::io::BufReader::new(std::fs::File::open(vocab).map_err(|e| {
+                anyhow::anyhow!("cannot read vocab file {}: {e}", vocab.display())
+            })?)
+            .lines()
+            .count();
+            corpus.vocab_size = corpus.vocab_size.max(lines);
+        }
+        Ok(corpus)
+    }
+
+    fn describe(&self) -> String {
+        format!("docword file {}", self.docword.display())
+    }
+
+    fn file(&self) -> Option<PathBuf> {
+        Some(self.docword.clone())
+    }
+
+    fn vocab_file(&self) -> Option<PathBuf> {
+        self.vocab.clone()
+    }
+}
+
+/// Read a docword file into a [`Corpus`]. Word ids are 1-based in the
+/// file and 0-based in the corpus; a word's `c` occurrences expand into
+/// `c` tokens (bag-of-words — the samplers never observe token order).
+pub fn read_docword(path: &Path) -> Result<Corpus> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot read docword file {}: {e}", path.display()))?;
+    let mut lines = std::io::BufReader::new(file).lines().enumerate();
+    let mut header = |name: &str| -> Result<usize> {
+        loop {
+            let (i, line) = lines
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("docword file truncated before {name}"))?;
+            let line = line.map_err(|e| anyhow::anyhow!("read error at line {}: {e}", i + 1))?;
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            return line
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad {name} header {line:?} at line {}", i + 1));
+        }
+    };
+    let n_docs: usize = header("D")?;
+    let vocab: usize = header("W")?;
+    let nnz: usize = header("NNZ")?;
+    anyhow::ensure!(n_docs > 0, "docword file declares zero documents");
+    anyhow::ensure!(vocab > 0, "docword file declares an empty vocabulary");
+
+    let mut docs: Vec<Document> = (0..n_docs).map(|_| Document::default()).collect();
+    let mut seen = 0usize;
+    for (i, line) in lines {
+        let line = line.map_err(|e| anyhow::anyhow!("read error at line {}: {e}", i + 1))?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let bad = || anyhow::anyhow!("bad docword triple {line:?} at line {}", i + 1);
+        let d: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+        let w: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+        let c: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+        anyhow::ensure!(it.next().is_none(), "trailing fields at line {}", i + 1);
+        anyhow::ensure!(
+            (1..=n_docs).contains(&d),
+            "doc id {d} outside 1..={n_docs} at line {}",
+            i + 1
+        );
+        anyhow::ensure!(
+            (1..=vocab).contains(&w),
+            "word id {w} outside 1..={vocab} at line {}",
+            i + 1
+        );
+        let tokens = &mut docs[d - 1].tokens;
+        for _ in 0..c {
+            tokens.push((w - 1) as u32);
+        }
+        seen += 1;
+    }
+    anyhow::ensure!(
+        seen == nnz,
+        "docword file declares {nnz} entries but carries {seen}"
+    );
+    // Empty documents contribute nothing and would break the Gibbs loop's
+    // assumption that every doc has at least one token when evaluating;
+    // drop them (the paper's pipeline filters them upstream too).
+    docs.retain(|d| !d.is_empty());
+    anyhow::ensure!(!docs.is_empty(), "docword file contains no tokens");
+    Ok(Corpus {
+        docs,
+        vocab_size: vocab,
+        true_topics: 0,
+    })
+}
+
+/// Write a [`Corpus`] in the docword format (1-based ids, one
+/// `(doc, word, count)` triple per distinct word per document, words
+/// ascending within a document). Atomic (temp + rename), like snapshots.
+pub fn write_docword(path: &Path, corpus: &Corpus) -> Result<()> {
+    let mut triples = 0usize;
+    let mut body = String::new();
+    let mut counts: Vec<u32> = vec![0; corpus.vocab_size];
+    let mut touched: Vec<u32> = Vec::new();
+    for (d, doc) in corpus.docs.iter().enumerate() {
+        for &w in &doc.tokens {
+            if counts[w as usize] == 0 {
+                touched.push(w);
+            }
+            counts[w as usize] += 1;
+        }
+        touched.sort_unstable();
+        for &w in &touched {
+            body.push_str(&format!("{} {} {}\n", d + 1, w + 1, counts[w as usize]));
+            counts[w as usize] = 0;
+            triples += 1;
+        }
+        touched.clear();
+    }
+    let text = format!(
+        "{}\n{}\n{}\n{}",
+        corpus.docs.len(),
+        corpus.vocab_size,
+        triples,
+        body
+    );
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+        f.write_all(text.as_bytes())
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot rename into {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_source_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Per-document word-count histogram (the bag the models observe).
+    fn bags(c: &Corpus) -> Vec<Vec<(u32, u32)>> {
+        c.docs
+            .iter()
+            .map(|d| {
+                let mut m = std::collections::BTreeMap::new();
+                for &w in &d.tokens {
+                    *m.entry(w).or_insert(0u32) += 1;
+                }
+                m.into_iter().collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn docword_roundtrip_preserves_bags() {
+        let (corpus, _) = CorpusConfig {
+            n_docs: 60,
+            vocab_size: 200,
+            n_topics: 4,
+            doc_len_mean: 12.0,
+            seed: 5,
+            ..Default::default()
+        }
+        .generate();
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("docword.txt");
+        write_docword(&path, &corpus).unwrap();
+        let back = read_docword(&path).unwrap();
+        assert_eq!(back.vocab_size, 200);
+        assert_eq!(back.docs.len(), corpus.docs.len());
+        assert_eq!(back.total_tokens(), corpus.total_tokens());
+        assert_eq!(bags(&back), bags(&corpus), "bag-of-words must round-trip");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_source_loads_and_describes() {
+        let (corpus, _) = CorpusConfig {
+            n_docs: 20,
+            vocab_size: 50,
+            n_topics: 2,
+            doc_len_mean: 8.0,
+            seed: 9,
+            ..Default::default()
+        }
+        .generate();
+        let dir = tmpdir("filesource");
+        let dw = dir.join("docword.txt");
+        write_docword(&dw, &corpus).unwrap();
+        // A vocab file longer than the docword header widens the corpus.
+        let vpath = dir.join("vocab.txt");
+        let words: String = (0..60).map(|w| format!("w{w:06}\n")).collect();
+        std::fs::write(&vpath, words).unwrap();
+        let src = FileSource::new(&dw).with_vocab(&vpath);
+        let loaded = src.load().unwrap();
+        assert_eq!(loaded.vocab_size, 60, "vocab file must widen V");
+        assert_eq!(loaded.total_tokens(), corpus.total_tokens());
+        assert!(src.describe().contains("docword"));
+        assert_eq!(src.file().as_deref(), Some(dw.as_path()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_source_matches_generator() {
+        let cfg = CorpusConfig {
+            n_docs: 15,
+            vocab_size: 40,
+            seed: 3,
+            ..Default::default()
+        };
+        let direct = cfg.generate().0;
+        let src = SyntheticSource::new(cfg);
+        let via_source = src.load().unwrap();
+        assert_eq!(bags(&via_source), bags(&direct));
+        assert!(src.file().is_none());
+        assert!(src.describe().contains("synthetic"));
+    }
+
+    #[test]
+    fn read_docword_rejects_malformed_files() {
+        let dir = tmpdir("malformed");
+        let write = |name: &str, text: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            p
+        };
+        // Truncated header.
+        assert!(read_docword(&write("t1", "3\n10\n")).is_err());
+        // Word id out of range.
+        assert!(read_docword(&write("t2", "1\n5\n1\n1 9 2\n")).is_err());
+        // Doc id out of range.
+        assert!(read_docword(&write("t3", "1\n5\n1\n4 2 2\n")).is_err());
+        // NNZ mismatch.
+        assert!(read_docword(&write("t4", "1\n5\n3\n1 2 2\n")).is_err());
+        // Garbage triple.
+        assert!(read_docword(&write("t5", "1\n5\n1\none two 3\n")).is_err());
+        // Comments and blank lines are tolerated; 0-count rows are tokens=0.
+        let ok = read_docword(&write(
+            "t6",
+            "# tiny corpus\n2\n5\n2\n\n1 2 3  # three of word 2\n2 5 1\n",
+        ))
+        .unwrap();
+        assert_eq!(ok.docs.len(), 2);
+        assert_eq!(ok.total_tokens(), 4);
+        assert_eq!(ok.docs[0].tokens, vec![1, 1, 1]);
+        assert_eq!(ok.docs[1].tokens, vec![4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_docs_are_dropped_on_read() {
+        let dir = tmpdir("emptydocs");
+        let p = dir.join("dw");
+        std::fs::write(&p, "3\n4\n2\n1 1 1\n3 2 2\n").unwrap();
+        let c = read_docword(&p).unwrap();
+        assert_eq!(c.docs.len(), 2, "the empty middle doc must be dropped");
+        assert_eq!(c.total_tokens(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -11,6 +11,26 @@
 //!
 //! ## Layering
 //!
+//! * **Layer 5 ([`coordinator`])** — the training *session*: the paper's
+//!   long-lived production job as an API. A
+//!   [`coordinator::TrainSession`] builds the topology once — corpus via
+//!   a pluggable [`corpus::CorpusSource`] (synthetic generator or a
+//!   docword file on disk), shards, transport, server group, eval engine
+//!   — and drives it in **segments**
+//!   ([`coordinator::TrainSession::run_for`] /
+//!   [`run_to`](coordinator::TrainSession::run_to) →
+//!   [`coordinator::SegmentReport`]) while per-iteration metrics stream
+//!   through a [`coordinator::TrainObserver`].
+//!   [`checkpoint`](coordinator::TrainSession::checkpoint) snapshots the
+//!   *entire cluster* (acknowledged server-slot stores, client states,
+//!   session meta) into a directory that is both a
+//!   [`resume`](coordinator::TrainSession::resume) target — continuing
+//!   in a fresh process under the **same `run_id`**, so the serving
+//!   layer's same-run merge check accepts the continuation's snapshots —
+//!   and a valid `serve --snapshot` input. The segment control loop
+//!   carries the paper's operational story: progress scheduling,
+//!   straggler kills, failure injection, client failover, the 90% rule
+//!   (§5.4, §6). `Trainer::run` remains as a one-segment wrapper.
 //! * **Layer 4 ([`serve`])** — the family-generic, hot-reloadable,
 //!   **model-parallel** inference service: the [`serve::ServingFamily`]
 //!   trait abstracts "frozen sufficient statistics + fold-in posterior"
@@ -29,11 +49,13 @@
 //!   cache, the [`serve::QueryRouter`] scatters a document's words to
 //!   their owners and gathers the `prior_t·φ(w,t)` proposals, and the
 //!   routed posterior is bit-identical to the single-replica posterior
-//!   at a fixed seed. Reloads prepare per replica but commit set-wide.
-//! * **Layer 3 (this crate)** — the distributed coordinator: node topology,
-//!   simulated cluster transport, server group / client groups / scheduler /
-//!   server manager, samplers, projection, metrics, CLI. The train-side
-//!   hot path is sparse end-to-end: [`sampler::counts::CountMatrix`]
+//!   at a fixed seed. Reloads build all N next-generation slices in one
+//!   shared scan of the decoded stores, prepare per replica, and commit
+//!   set-wide.
+//! * **Layer 3 ([`ps`] + [`sampler`])** — the parameter server and the
+//!   sparse train-side hot path: node topology, simulated cluster
+//!   transport, server group / scheduler / server manager, samplers,
+//!   projection. [`sampler::counts::CountMatrix`]
 //!   keeps an `O(k_w)` delta log and an incremental `1/(n_t+β̄)`
 //!   normalizer cache, rows travel as
 //!   [`sampler::counts::RowData`] (sparse below the density break-even,
@@ -59,6 +81,8 @@
 //!
 //! ## Quickstart
 //!
+//! One-shot (the legacy wrapper):
+//!
 //! ```no_run
 //! use hplvm::config::TrainConfig;
 //! use hplvm::coordinator::trainer::Trainer;
@@ -67,6 +91,30 @@
 //! cfg.iterations = 20;
 //! let report = Trainer::new(cfg).run().expect("training failed");
 //! println!("final perplexity: {:.1}", report.final_perplexity());
+//! ```
+//!
+//! Session-based — train, checkpoint, keep training; resume later in a
+//! fresh process under the same run id:
+//!
+//! ```no_run
+//! use hplvm::config::TrainConfig;
+//! use hplvm::coordinator::TrainSession;
+//! use hplvm::corpus::SyntheticSource;
+//! use std::path::Path;
+//!
+//! let cfg = TrainConfig::small_lda();
+//! let source = SyntheticSource::new(cfg.corpus.clone());
+//! let mut session = TrainSession::start(cfg, &source).expect("start");
+//! let seg = session.run_for(10).expect("segment");
+//! println!("perplexity after 10: {:.1}", seg.report.final_perplexity());
+//! session.checkpoint(Path::new("ckpt")).expect("checkpoint");
+//! session.run_for(10).expect("segment 2");
+//! let report = session.finish().expect("finish");
+//! println!("final: {:.1}", report.final_perplexity());
+//!
+//! // …days later, possibly on another machine:
+//! let mut resumed = TrainSession::resume(Path::new("ckpt")).expect("resume");
+//! resumed.run_for(20).expect("more training, same run_id");
 //! ```
 
 pub mod bench;

@@ -4,7 +4,8 @@
 //! hplvm train [--model aliaslda|yahoolda|pdp|hdp] [--clients N] [--topics K]
 //!             [--iterations N] [--docs N] [--vocab V] [--projection MODE]
 //!             [--snapshot-dir DIR] [--config file.json] [--out report.json]
-//!             [--pjrt] [-v|-q]
+//!             [--corpus-file docword.txt] [--checkpoint-to DIR]
+//!             [--resume-from DIR] [--progress] [--pjrt] [-v|-q]
 //! hplvm serve --snapshot DIR [--model NAME] [--watch] [--queries N]
 //!             [--replicas R] [--workers W] [--batch B] [--cache-mb M]
 //!             [--seed S]     # load-test the inference server (any family)
@@ -15,7 +16,11 @@
 //! ```
 
 use hplvm::config::{ModelKind, ProjectionMode, TrainConfig};
-use hplvm::coordinator::trainer::Trainer;
+use hplvm::coordinator::metrics::TrainReport;
+use hplvm::coordinator::session::{
+    NullObserver, PrintObserver, TrainObserver, TrainSession,
+};
+use hplvm::corpus::source::{CorpusSource, FileSource, SyntheticSource};
 use hplvm::serve::{
     InferenceService, QueryBackend, ReplicaSet, ServeConfig, ServingHandle, ServingModel,
 };
@@ -37,9 +42,19 @@ fn usage() -> ! {
            --doc-len L           mean document length\n\
            --projection MODE     off | single | distributed | ondemand\n\
            --snapshot-dir DIR    persist server snapshots here (serve input)\n\
+           --corpus-file FILE    train on a docword file instead of the\n\
+                                 synthetic corpus (UCI bag-of-words layout)\n\
+           --checkpoint-to DIR   checkpoint the whole cluster (server +\n\
+                                 client snapshots + session meta) at the\n\
+                                 end of the run; resumable and servable\n\
+           --resume-from DIR     resume a checkpointed session and train\n\
+                                 --iterations MORE iterations under the\n\
+                                 same run id\n\
+           --progress            print live eval metrics as they stream\n\
            --seed S              global seed\n\
            --config FILE         JSON config overlay\n\
            --out FILE            write the report JSON here\n\
+           --report-out FILE     alias for --out\n\
            --pjrt                evaluate through the PJRT artifacts\n\
            -v / -q               verbose / quiet\n\
          serve options:\n\
@@ -91,11 +106,47 @@ impl<'a> ArgIter<'a> {
     }
 }
 
-fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
+struct TrainArgs {
+    cfg: TrainConfig,
+    out: Option<String>,
+    resume_from: Option<std::path::PathBuf>,
+    corpus_file: Option<std::path::PathBuf>,
+    checkpoint_to: Option<std::path::PathBuf>,
+    progress: bool,
+    /// Config-shaping flags seen on the command line — incompatible with
+    /// `--resume-from` (the checkpoint's recorded config wins there, and
+    /// silently ignoring a contradiction would be an operator trap).
+    cfg_flags: Vec<&'static str>,
+}
+
+fn parse_args(args: &[String]) -> TrainArgs {
     let mut cfg = TrainConfig::default();
     let mut out = None;
+    let mut resume_from = None;
+    let mut corpus_file = None;
+    let mut checkpoint_to = None;
+    let mut progress = false;
+    let mut cfg_flags: Vec<&'static str> = Vec::new();
     let mut it = ArgIter { args, i: 0 };
     while let Some(arg) = it.next() {
+        for flag in [
+            "--model",
+            "--clients",
+            "--topics",
+            "--docs",
+            "--vocab",
+            "--doc-len",
+            "--projection",
+            "--seed",
+            "--snapshot-dir",
+            "--config",
+            "--corpus-file",
+            "--pjrt",
+        ] {
+            if arg == flag {
+                cfg_flags.push(flag);
+            }
+        }
         match arg {
             "--model" => {
                 let v = it.value("--model");
@@ -149,6 +200,17 @@ fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
                 });
             }
             "--out" => out = Some(it.value("--out").to_string()),
+            "--report-out" => out = Some(it.value("--report-out").to_string()),
+            "--resume-from" => {
+                resume_from = Some(std::path::PathBuf::from(it.value("--resume-from")))
+            }
+            "--corpus-file" => {
+                corpus_file = Some(std::path::PathBuf::from(it.value("--corpus-file")))
+            }
+            "--checkpoint-to" => {
+                checkpoint_to = Some(std::path::PathBuf::from(it.value("--checkpoint-to")))
+            }
+            "--progress" => progress = true,
             "--pjrt" => cfg.use_pjrt_eval = true,
             "-v" => logging::set_level(Level::Debug),
             "-q" => logging::set_level(Level::Warn),
@@ -158,7 +220,15 @@ fn parse_args(args: &[String]) -> (TrainConfig, Option<String>) {
             }
         }
     }
-    (cfg, out)
+    TrainArgs {
+        cfg,
+        out,
+        resume_from,
+        corpus_file,
+        checkpoint_to,
+        progress,
+        cfg_flags,
+    }
 }
 
 struct ServeArgs {
@@ -364,6 +434,79 @@ fn snapshot_fingerprint(
     out
 }
 
+/// `hplvm train`: drive a [`TrainSession`] — fresh (synthetic or docword
+/// corpus) or resumed from a checkpoint — then optionally checkpoint the
+/// cluster and dump the report JSON.
+fn cmd_train(a: TrainArgs) -> hplvm::Result<TrainReport> {
+    let observer: Arc<dyn TrainObserver> = if a.progress {
+        Arc::new(PrintObserver)
+    } else {
+        Arc::new(NullObserver)
+    };
+    let iterations = a.cfg.iterations;
+    let mut session = match &a.resume_from {
+        Some(dir) => {
+            // The checkpoint's recorded config drives a resumed run;
+            // silently ignoring contradicting flags would be a trap.
+            anyhow::ensure!(
+                a.cfg_flags.is_empty(),
+                "--resume-from uses the checkpoint's recorded configuration; \
+                 remove {} (only --iterations, --progress, --checkpoint-to and \
+                 --out/--report-out apply to a resumed run)",
+                a.cfg_flags.join(", ")
+            );
+            let session = TrainSession::resume_with_observer(dir, observer)?;
+            println!(
+                "resumed {} run {:#018x} at iteration {} from {} (+{} iterations)",
+                session.config().model.name(),
+                session.run_id(),
+                session.iteration(),
+                dir.display(),
+                iterations,
+            );
+            session
+        }
+        None => {
+            println!(
+                "training {} | K={} clients={} servers={} iterations={} projection={:?}",
+                a.cfg.model.name(),
+                a.cfg.params.topics,
+                a.cfg.cluster.clients,
+                a.cfg.cluster.n_servers(),
+                iterations,
+                a.cfg.projection,
+            );
+            let source: Box<dyn CorpusSource> = match &a.corpus_file {
+                Some(f) => Box::new(FileSource::new(f)),
+                None => Box::new(SyntheticSource::new(a.cfg.corpus.clone())),
+            };
+            if let Some(f) = &a.corpus_file {
+                println!("corpus: docword file {}", f.display());
+            }
+            TrainSession::start_with_observer(a.cfg, source.as_ref(), observer)?
+        }
+    };
+    // A fresh run trains to the configured count; a resumed run trains
+    // that many *more* under the same run id.
+    session.run_for(iterations)?;
+    if let Some(dir) = &a.checkpoint_to {
+        session.checkpoint(dir)?;
+        println!(
+            "checkpoint written to {} (resume with --resume-from, serve with \
+             --snapshot)",
+            dir.display()
+        );
+    }
+    let report = session.finish()?;
+    report.print_table();
+    if let Some(path) = &a.out {
+        std::fs::write(path, report.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        println!("report written to {path}");
+    }
+    Ok(report)
+}
+
 fn cmd_serve(a: ServeArgs) {
     // Baseline the directory BEFORE loading (only when watching): a
     // snapshot landing between the load and the watcher's first poll
@@ -518,25 +661,9 @@ fn main() {
     let cmd = args.first().map(String::as_str).unwrap_or("");
     match cmd {
         "train" => {
-            let (cfg, out) = parse_args(&args[1..]);
-            println!(
-                "training {} | K={} clients={} servers={} iterations={} projection={:?}",
-                cfg.model.name(),
-                cfg.params.topics,
-                cfg.cluster.clients,
-                cfg.cluster.n_servers(),
-                cfg.iterations,
-                cfg.projection,
-            );
-            match Trainer::new(cfg).run() {
-                Ok(report) => {
-                    report.print_table();
-                    if let Some(path) = out {
-                        std::fs::write(&path, report.to_json().to_string())
-                            .unwrap_or_else(|e| eprintln!("cannot write {path}: {e}"));
-                        println!("report written to {path}");
-                    }
-                }
+            let a = parse_args(&args[1..]);
+            match cmd_train(a) {
+                Ok(_) => {}
                 Err(e) => {
                     eprintln!("training failed: {e:#}");
                     std::process::exit(1);
@@ -580,8 +707,8 @@ fn main() {
             }
         },
         "info" => {
-            let (cfg, _) = parse_args(&args[1..]);
-            println!("{}", cfg.to_json());
+            let a = parse_args(&args[1..]);
+            println!("{}", a.cfg.to_json());
         }
         _ => usage(),
     }

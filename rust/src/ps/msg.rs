@@ -81,6 +81,24 @@ pub enum Payload {
     },
     /// Any node → manager: liveness heartbeat.
     Heartbeat,
+    /// Coordinator → server: write a slot snapshot into `dir` *now* (the
+    /// session checkpoint path — distinct from the periodic barrier-free
+    /// cadence, which keeps writing to the configured snapshot dir).
+    SnapshotReq {
+        /// Directory to write `server_slot{slot}.snap` into.
+        dir: std::path::PathBuf,
+    },
+    /// Server → coordinator: checkpoint snapshot written (or failed).
+    SnapshotAck {
+        /// The responding slot.
+        slot: u32,
+        /// Whether the write succeeded.
+        ok: bool,
+        /// The directory the slot wrote into — echoed from the request so
+        /// a stale ack from an earlier checkpoint's retry can never
+        /// satisfy a later checkpoint into a different directory.
+        dir: std::path::PathBuf,
+    },
     /// Control-plane command.
     Control(Control),
 }
@@ -96,6 +114,9 @@ impl Payload {
             }
             Payload::PullReq { words, .. } => 16 + 4 * words.len() as u64,
             Payload::Progress { .. } => 32,
+            Payload::SnapshotReq { dir } | Payload::SnapshotAck { dir, .. } => {
+                16 + dir.as_os_str().len() as u64
+            }
             Payload::Heartbeat | Payload::Control(_) => 8,
         }
     }

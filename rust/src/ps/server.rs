@@ -178,6 +178,23 @@ impl ServerNode {
                         },
                     );
                 }
+                Payload::SnapshotReq { dir } => {
+                    // Session checkpoint: write this slot's store into the
+                    // requested directory and acknowledge (echoing the
+                    // directory — the requester's dedup key). Idempotent:
+                    // a retried request rewrites the same bytes atomically.
+                    let path = dir.join(snapshot::slot_snapshot_name(self.slot));
+                    let ok = self.write_snapshot_to(&path);
+                    self.net.send(
+                        self.id,
+                        env.from,
+                        Payload::SnapshotAck {
+                            slot: self.slot as u32,
+                            ok,
+                            dir,
+                        },
+                    );
+                }
                 Payload::Control(Control::Kill) => return,
                 Payload::Control(Control::Terminate) => {
                     self.write_snapshot();
@@ -190,13 +207,19 @@ impl ServerNode {
 
     fn write_snapshot(&mut self) {
         if let Some(path) = Self::snapshot_path(&self.cfg, self.slot) {
-            let mut meta = self.cfg.meta.clone();
-            meta.slot = self.slot as u32;
-            let bytes = snapshot::encode_store_meta(&self.store, &meta);
-            if snapshot::write_atomic(&path, &bytes).is_ok() {
-                self.stats.snapshots.fetch_add(1, Ordering::Relaxed);
-            }
+            self.write_snapshot_to(&path);
         }
+    }
+
+    fn write_snapshot_to(&mut self, path: &std::path::Path) -> bool {
+        let mut meta = self.cfg.meta.clone();
+        meta.slot = self.slot as u32;
+        let bytes = snapshot::encode_store_meta(&self.store, &meta);
+        let ok = snapshot::write_atomic(path, &bytes).is_ok();
+        if ok {
+            self.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
     }
 }
 
@@ -225,12 +248,24 @@ impl ServerGroup {
     /// `net` must already contain a node id for the manager and each
     /// server; they are allocated here via [`SimNet::add_node`].
     pub fn spawn(net: &SimNet, cfg: ServerConfig) -> ServerGroup {
+        Self::spawn_with_stores(net, cfg, Vec::new())
+    }
+
+    /// [`spawn`](Self::spawn), seeding slot `i` with `initial[i]` — the
+    /// session-resume path: a checkpointed run's slot stores continue
+    /// exactly where they left off. Missing entries start empty.
+    pub fn spawn_with_stores(
+        net: &SimNet,
+        cfg: ServerConfig,
+        mut initial: Vec<Store>,
+    ) -> ServerGroup {
+        initial.resize_with(cfg.n_servers, Store::new);
         let manager_id = net.add_node();
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut slot_ids = Vec::with_capacity(cfg.n_servers);
         let mut stats = Vec::with_capacity(cfg.n_servers);
         let handles = Arc::new(std::sync::Mutex::new(Vec::new()));
-        for slot in 0..cfg.n_servers {
+        for (slot, store) in initial.into_iter().enumerate() {
             let id = net.add_node();
             let st = Arc::new(ServerStats::default());
             let node = ServerNode {
@@ -239,7 +274,7 @@ impl ServerGroup {
                 slot,
                 manager: manager_id,
                 cfg: cfg.clone(),
-                store: Store::new(),
+                store,
                 stats: st.clone(),
                 shutdown: shutdown.clone(),
             };
@@ -487,6 +522,58 @@ mod tests {
         let rows = pull(&net, a, server, 0, vec![1]);
         assert_eq!(&*rows[0].1.to_dense(2), &[10, 10]);
         group.shutdown();
+    }
+
+    /// Session support: slots spawn pre-seeded with a resumed store, and
+    /// a `SnapshotReq` checkpoints the live store into any directory,
+    /// acknowledged to the requester.
+    #[test]
+    fn seeded_stores_and_on_demand_checkpoint() {
+        let net = fast_net();
+        let me = net.add_node();
+        let mut s0 = Store::new();
+        s0.insert((0, 2), vec![9, 1]);
+        let group = ServerGroup::spawn_with_stores(
+            &net,
+            ServerConfig {
+                n_servers: 1,
+                row_width: 2,
+                meta: SnapshotMeta {
+                    model: "AliasLDA".into(),
+                    k: 2,
+                    run_id: 0x5E55,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            vec![s0.clone()],
+        );
+        let server = group.node_for_slot(0);
+        // The seeded state answers pulls with no pushes ever applied.
+        let rows = pull(&net, me, server, 0, vec![2]);
+        assert_eq!(&*rows[0].1.to_dense(2), &[9, 1], "seeded store lost");
+        // On-demand checkpoint into an arbitrary directory.
+        let dir =
+            std::env::temp_dir().join(format!("hplvm_ckpt_req_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        net.send(me, server, Payload::SnapshotReq { dir: dir.clone() });
+        let acked = loop {
+            let env = net
+                .recv_timeout(me, Duration::from_secs(2))
+                .expect("checkpoint ack timed out");
+            if let Payload::SnapshotAck { slot, ok, dir: acked_dir } = env.payload {
+                assert_eq!(acked_dir, dir, "ack must echo the checkpoint dir");
+                break (slot, ok);
+            }
+        };
+        assert_eq!(acked, (0, true));
+        let bytes = snapshot::read_snapshot(&dir.join(snapshot::slot_snapshot_name(0)))
+            .expect("checkpoint file missing");
+        let (meta, store) = snapshot::decode_store_meta(&bytes).unwrap();
+        assert_eq!(store, s0);
+        assert_eq!(meta.unwrap().run_id, 0x5E55, "run id must stamp checkpoints");
+        group.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

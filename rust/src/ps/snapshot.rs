@@ -34,6 +34,12 @@
 //!   byte-identical to v2 apart from the magic and that one byte.
 //!
 //! Encoders always write the current format; decoders accept all three.
+//!
+//! A *session checkpoint* directory additionally carries a
+//! [`SessionMeta`] file ([`SESSION_META_NAME`]) next to the slot and
+//! client snapshots: run id, completed iteration, RNG epoch, and the
+//! config JSON — everything `TrainSession::resume` needs to continue the
+//! run in a fresh process under the same `run_id`.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -378,6 +384,95 @@ pub fn read_snapshot(path: &Path) -> Option<Vec<u8>> {
     Some(buf)
 }
 
+const MAGIC_SESSION: &[u8; 8] = b"HPLVMSES";
+
+/// Canonical session-meta filename inside a checkpoint directory.
+pub const SESSION_META_NAME: &str = "session.meta";
+
+/// The session-level state of a training-cluster checkpoint: everything
+/// [`TrainSession::resume`](crate::coordinator::TrainSession::resume)
+/// needs beyond the server slot snapshots and the per-shard client
+/// snapshots that sit next to it in the checkpoint directory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionMeta {
+    /// The run nonce every slot snapshot of this run carries. A resumed
+    /// session keeps training under the same id, so its later snapshots
+    /// still pass the serving layer's same-run merge check.
+    pub run_id: u64,
+    /// Completed iterations at checkpoint time (the resumed session's
+    /// next segment starts here).
+    pub iteration: u64,
+    /// Segment counter — salts the per-segment worker RNG streams so a
+    /// resumed run does not replay the randomness of segment 1.
+    pub epoch: u64,
+    /// The run's global seed.
+    pub seed: u64,
+    /// The training configuration as [`crate::config::TrainConfig::to_json`]
+    /// text (the preset subset — enough to rebuild the topology and, for
+    /// synthetic corpora, regenerate the identical corpus).
+    pub config_json: String,
+    /// Docword file backing the corpus, when trained from a
+    /// [`FileSource`](crate::corpus::FileSource); `None` = synthetic.
+    pub corpus_file: Option<String>,
+    /// Companion vocabulary file of the [`FileSource`], when one widened
+    /// the effective vocabulary — resume must rebuild the same `V`.
+    ///
+    /// [`FileSource`]: crate::corpus::FileSource
+    pub vocab_file: Option<String>,
+}
+
+/// Serialize a [`SessionMeta`].
+pub fn encode_session(m: &SessionMeta) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + m.config_json.len());
+    buf.extend_from_slice(MAGIC_SESSION);
+    put_u64(&mut buf, m.run_id);
+    put_u64(&mut buf, m.iteration);
+    put_u64(&mut buf, m.epoch);
+    put_u64(&mut buf, m.seed);
+    put_str(&mut buf, &m.config_json);
+    for path in [&m.corpus_file, &m.vocab_file] {
+        match path {
+            None => buf.push(0),
+            Some(p) => {
+                buf.push(1);
+                put_str(&mut buf, p);
+            }
+        }
+    }
+    buf
+}
+
+/// Deserialize a [`SessionMeta`].
+pub fn decode_session(bytes: &[u8]) -> Option<SessionMeta> {
+    if bytes.len() < 8 || &bytes[..8] != MAGIC_SESSION {
+        return None;
+    }
+    let mut r = Reader { b: bytes, pos: 8 };
+    let run_id = r.u64()?;
+    let iteration = r.u64()?;
+    let epoch = r.u64()?;
+    let seed = r.u64()?;
+    let config_json = r.str()?;
+    let mut opt_str = || -> Option<Option<String>> {
+        match r.u8()? {
+            0 => Some(None),
+            1 => Some(Some(r.str()?)),
+            _ => None,
+        }
+    };
+    let corpus_file = opt_str()?;
+    let vocab_file = opt_str()?;
+    Some(SessionMeta {
+        run_id,
+        iteration,
+        epoch,
+        seed,
+        config_json,
+        corpus_file,
+        vocab_file,
+    })
+}
+
 /// A client's resumable state: its shard, completed iterations, and all
 /// topic assignments (`z`, plus the PDP/HDP table indicators).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -626,6 +721,37 @@ mod tests {
         let bytes = encode_client(&snap);
         let back = decode_client(&bytes).unwrap();
         assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn session_meta_roundtrip_and_rejects_garbage() {
+        for (corpus_file, vocab_file) in [
+            (None, None),
+            (Some("data/docword.txt".to_string()), None),
+            (
+                Some("data/docword.txt".to_string()),
+                Some("data/vocab.txt".to_string()),
+            ),
+        ] {
+            let m = SessionMeta {
+                run_id: 0xFEED_F00D,
+                iteration: 40,
+                epoch: 3,
+                seed: 42,
+                config_json: r#"{"model":"AliasLDA","topics":20}"#.to_string(),
+                corpus_file,
+                vocab_file,
+            };
+            let bytes = encode_session(&m);
+            assert_eq!(decode_session(&bytes).unwrap(), m);
+            // Every truncation is rejected, never mis-decoded.
+            for cut in [0, 7, 9, 33, bytes.len() - 1] {
+                assert!(decode_session(&bytes[..cut]).is_none(), "cut {cut}");
+            }
+        }
+        assert!(decode_session(b"nonsense----------------").is_none());
+        // A store snapshot is not a session meta.
+        assert!(decode_session(&encode_store(&Store::new())).is_none());
     }
 
     #[test]

@@ -91,19 +91,23 @@ struct Merged {
 }
 
 impl Merged {
-    /// Merge one matrix across the slot stores. When `owned` is given
-    /// (replica slices), rows are *materialized* only for accepted words
-    /// while the per-topic totals still accumulate over **every** word's
-    /// cross-store sum, with the same per-cell clamping — so a slice
-    /// allocates `O(owned·K)` yet normalizes bit-identically to the full
-    /// merge (totals are integer sums, hence order-independent).
-    fn build(
+    /// One scan of the stores producing `parts` [`Merged`] matrices:
+    /// word `w`'s merged row is materialized only in part `owner(w)`,
+    /// while every part carries the identical **global** per-topic totals
+    /// over every word's cross-store sum, clamped per cell at the
+    /// aggregate (totals are integer sums, hence order-independent, so a
+    /// part normalizes bit-identically to the full merge). This is what
+    /// lets a replica set build all N vocabulary slices from a *single*
+    /// pass over the decoded stores instead of re-scanning once per
+    /// replica; the full merge is just the 1-part partition.
+    fn build_parts(
         stores: &[Store],
         matrix: u8,
         vocab: usize,
         k: usize,
-        owned: Option<&dyn Fn(u32) -> bool>,
-    ) -> Merged {
+        parts: usize,
+        owner: &dyn Fn(u32) -> u32,
+    ) -> Vec<Merged> {
         // Words of this matrix present in any store.
         let mut seen = vec![false; vocab];
         for store in stores {
@@ -113,7 +117,8 @@ impl Merged {
                 }
             }
         }
-        let mut rows: Vec<Option<Box<[i32]>>> = vec![None; vocab];
+        let mut rows: Vec<Vec<Option<Box<[i32]>>>> =
+            (0..parts).map(|_| vec![None; vocab]).collect();
         let mut totals = vec![0i64; k];
         let mut scratch = vec![0i32; k];
         for w in 0..vocab as u32 {
@@ -131,11 +136,15 @@ impl Merged {
             for (t, &v) in scratch.iter().enumerate() {
                 totals[t] += v.max(0) as i64;
             }
-            if owned.map_or(true, |keep| keep(w)) {
-                rows[w as usize] = Some(scratch.clone().into_boxed_slice());
-            }
+            let part = (owner(w) as usize).min(parts - 1);
+            rows[part][w as usize] = Some(scratch.clone().into_boxed_slice());
         }
-        Merged { rows, totals }
+        rows.into_iter()
+            .map(|rows| Merged {
+                rows,
+                totals: totals.clone(),
+            })
+            .collect()
     }
 
     /// Whether `w` has a materialized row.
@@ -343,6 +352,34 @@ pub fn family_from_stores_sliced(
     stores: &[Store],
     owned: Option<&dyn Fn(u32) -> bool>,
 ) -> Result<Box<dyn ServingFamily>> {
+    // One implementation serves both shapes: a single build is the
+    // 1-part partition, and a filtered slice is part 0 of a kept/dropped
+    // 2-part partition (the dropped part is transient — this path only
+    // builds one slice at a time; replica sets go through
+    // [`families_from_stores_partitioned`] directly).
+    let mut parts = match owned {
+        None => families_from_stores_partitioned(meta, stores, 1, &|_| 0)?,
+        Some(keep) => families_from_stores_partitioned(meta, stores, 2, &|w| {
+            u32::from(!keep(w))
+        })?,
+    };
+    Ok(parts.swap_remove(0))
+}
+
+/// Build **all** `parts` vocabulary-sliced families in a single scan of
+/// the stores — the multi-replica load/reload path (N slices for the
+/// cost of one scan instead of one scan per replica), and the engine
+/// behind [`family_from_stores`] / [`family_from_stores_sliced`]. Part
+/// `p` materializes per-word statistics only for words with
+/// `owner(w) == p`; every normalizer stays global, so each part's
+/// `φ(w,t)` for an owned word is bit-identical to the full model's.
+pub fn families_from_stores_partitioned(
+    meta: &SnapshotMeta,
+    stores: &[Store],
+    parts: usize,
+    owner: &dyn Fn(u32) -> u32,
+) -> Result<Vec<Box<dyn ServingFamily>>> {
+    anyhow::ensure!(parts >= 1, "need at least one part");
     anyhow::ensure!(meta.k > 0, "snapshot metadata has K = 0");
     let kind = ModelKind::parse(&meta.model).ok_or_else(|| {
         anyhow::anyhow!(
@@ -365,55 +402,74 @@ pub fn family_from_stores_sliced(
         ModelKind::YahooLda | ModelKind::AliasLda => {
             let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0]));
             anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
-            Ok(Box::new(LdaFamily {
-                kind,
-                k,
-                vocab,
-                alpha: meta.alpha,
-                beta: meta.beta,
-                beta_bar: meta.beta * vocab as f64,
-                n: Merged::build(stores, 0, vocab, k, owned),
-            }))
+            Ok(Merged::build_parts(stores, 0, vocab, k, parts, owner)
+                .into_iter()
+                .map(|n| {
+                    Box::new(LdaFamily {
+                        kind,
+                        k,
+                        vocab,
+                        alpha: meta.alpha,
+                        beta: meta.beta,
+                        beta_bar: meta.beta * vocab as f64,
+                        n,
+                    }) as Box<dyn ServingFamily>
+                })
+                .collect())
         }
         ModelKind::AliasPdp => {
             let hyper: TableHyper = need_tables()?;
             let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0, 1]));
             anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
-            Ok(Box::new(PdpFamily {
-                k,
-                vocab,
-                alpha: meta.alpha,
-                discount: hyper.discount,
-                concentration: hyper.concentration,
-                gamma: hyper.root,
-                gamma_bar: hyper.root * vocab as f64,
-                // Table rows (s_tw) follow their word's slice, so a
-                // word's customers and tables always live together.
-                m: Merged::build(stores, 0, vocab, k, owned),
-                s: Merged::build(stores, 1, vocab, k, owned),
-            }))
+            // Table rows (s_tw) follow their word's slice, so a word's
+            // customers and tables always live together.
+            let ms = Merged::build_parts(stores, 0, vocab, k, parts, owner);
+            let ss = Merged::build_parts(stores, 1, vocab, k, parts, owner);
+            Ok(ms
+                .into_iter()
+                .zip(ss)
+                .map(|(m, s)| {
+                    Box::new(PdpFamily {
+                        k,
+                        vocab,
+                        alpha: meta.alpha,
+                        discount: hyper.discount,
+                        concentration: hyper.concentration,
+                        gamma: hyper.root,
+                        gamma_bar: hyper.root * vocab as f64,
+                        m,
+                        s,
+                    }) as Box<dyn ServingFamily>
+                })
+                .collect())
         }
         ModelKind::AliasHdp => {
             let hyper: TableHyper = need_tables()?;
-            // Matrix 1 row 0 is the root table row, not a word — it is
-            // K-sized prior state and is replicated into every slice
-            // (never filtered by `owned`).
             let vocab = (meta.vocab_size as usize).max(max_word(stores, &[0]));
             anyhow::ensure!(vocab > 0, "snapshot contains no word rows");
-            let tables = Merged::build(stores, 1, 1, k, None);
+            // The root table row is K-sized prior state shared by every
+            // slice (never vocabulary-filtered) — built once, cloned.
+            let tables = Merged::build_parts(stores, 1, 1, k, 1, &|_| 0)
+                .pop()
+                .expect("one part requested");
             let root: Vec<i64> = (0..k).map(|t| tables.count(0, t) as i64).collect();
             let root_total = root.iter().sum::<i64>() as f64;
-            Ok(Box::new(HdpFamily {
-                k,
-                vocab,
-                b0: hyper.root,
-                b1: hyper.concentration,
-                beta: meta.beta,
-                beta_bar: meta.beta * vocab as f64,
-                n: Merged::build(stores, 0, vocab, k, owned),
-                root,
-                root_total,
-            }))
+            Ok(Merged::build_parts(stores, 0, vocab, k, parts, owner)
+                .into_iter()
+                .map(|n| {
+                    Box::new(HdpFamily {
+                        k,
+                        vocab,
+                        b0: hyper.root,
+                        b1: hyper.concentration,
+                        beta: meta.beta,
+                        beta_bar: meta.beta * vocab as f64,
+                        n,
+                        root: root.clone(),
+                        root_total,
+                    }) as Box<dyn ServingFamily>
+                })
+                .collect())
         }
     }
 }
@@ -594,6 +650,61 @@ mod tests {
         meta("AliasHDP", 3, Some(hdp_hyper()))
     }
 
+    /// Satellite: the single-scan partitioned build is bit-identical to
+    /// the per-part filtered builds it replaces — for every family,
+    /// including the PDP's paired matrices and the HDP's shared root row.
+    #[test]
+    fn partitioned_build_matches_per_part_sliced_builds() {
+        let parts = 3usize;
+        let owner = |w: u32| (w * 7 + 1) % parts as u32;
+        let mut lda_store = Store::new();
+        let mut hdp_store = Store::new();
+        for w in 0..10u32 {
+            lda_store.insert((0, w), if w < 5 { vec![7, 0] } else { vec![-2, 7] });
+            hdp_store.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+        }
+        hdp_store.insert((1, 0), vec![6, 2, 0]);
+        let cases: Vec<(SnapshotMeta, Vec<Store>)> = vec![
+            (meta("AliasLDA", 2, None), vec![lda_store]),
+            (meta("AliasPDP", 2, Some(pdp_hyper())), pdp_stores()),
+            (meta("AliasHDP", 3, Some(hdp_hyper())), vec![hdp_store]),
+        ];
+        for (m, stores) in cases {
+            let fams = families_from_stores_partitioned(&m, &stores, parts, &owner).unwrap();
+            assert_eq!(fams.len(), parts);
+            for (p, fam) in fams.iter().enumerate() {
+                let keep = |w: u32| owner(w) == p as u32;
+                let sliced = family_from_stores_sliced(&m, &stores, Some(&keep)).unwrap();
+                assert_eq!(fam.kind(), sliced.kind());
+                assert_eq!(fam.total_tokens(), sliced.total_tokens(), "{} part {p}", m.model);
+                for w in 0..fam.vocab() as u32 {
+                    assert_eq!(
+                        fam.has_row(w),
+                        sliced.has_row(w),
+                        "{} part {p} word {w} ownership",
+                        m.model
+                    );
+                    for t in 0..fam.k() {
+                        assert_eq!(
+                            fam.phi(w, t).to_bits(),
+                            sliced.phi(w, t).to_bits(),
+                            "{} part {p} φ({w},{t})",
+                            m.model
+                        );
+                    }
+                }
+                for t in 0..fam.k() {
+                    assert_eq!(
+                        fam.doc_prior(t).to_bits(),
+                        sliced.doc_prior(t).to_bits(),
+                        "{} part {p} prior({t})",
+                        m.model
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn merge_adds_across_slots_and_clamps_negatives() {
         let mut a = Store::new();
@@ -602,19 +713,23 @@ mod tests {
         b.insert((0, 1), vec![1, 2]);
         b.insert((0, 2), vec![0, 4]);
         let stores = [a, b];
-        let m = Merged::build(&stores, 0, 10, 2, None);
+        let m = Merged::build_parts(&stores, 0, 10, 2, 1, &|_| 0)
+            .pop()
+            .unwrap();
         assert_eq!(m.count(1, 0), 4);
         assert_eq!(m.count(1, 1), 0, "negative cells clamp to 0 on read");
         assert_eq!(m.count(2, 1), 4);
         // Totals clamp per-entry: the −3 in (1,1) does not cancel (2,1).
         assert_eq!(m.totals[1], 4);
-        // A filtered build materializes only owned rows but keeps the
-        // identical (global, clamped) totals.
-        let keep = |w: u32| w == 2;
-        let half = Merged::build(&stores, 0, 10, 2, Some(&keep));
-        assert!(!half.has_row(1) && half.has_row(2));
-        assert_eq!(half.totals, m.totals);
-        assert_eq!(half.count(2, 1), 4);
-        assert_eq!(half.count(1, 0), 0, "unowned row reads as absent");
+        // A partitioned build lands each row on its owner only, and every
+        // part keeps the identical (global, clamped) totals.
+        let parts = Merged::build_parts(&stores, 0, 10, 2, 2, &|w| u32::from(w != 2));
+        let (kept, dropped) = (&parts[0], &parts[1]);
+        assert!(!kept.has_row(1) && kept.has_row(2));
+        assert!(dropped.has_row(1) && !dropped.has_row(2));
+        assert_eq!(kept.totals, m.totals);
+        assert_eq!(dropped.totals, m.totals);
+        assert_eq!(kept.count(2, 1), 4);
+        assert_eq!(kept.count(1, 0), 0, "unowned row reads as absent");
     }
 }

@@ -224,6 +224,27 @@ impl ServingModel {
         Self::build(meta, stores, cache_bytes, Some(owned))
     }
 
+    /// Build **all** `parts` vocabulary slices from one shared scan of
+    /// the decoded stores
+    /// ([`families_from_stores_partitioned`](super::family::families_from_stores_partitioned)),
+    /// each slice with its own alias cache of `cache_bytes`. Bit-identical
+    /// to `parts` separate [`from_stores_sliced`](Self::from_stores_sliced)
+    /// calls at ~1/N of the scan cost — the replica-set load/reload path.
+    pub fn slices_from_stores(
+        meta: SnapshotMeta,
+        stores: &[Store],
+        cache_bytes: usize,
+        parts: usize,
+        owner: &dyn Fn(u32) -> u32,
+    ) -> Result<Vec<ServingModel>> {
+        let families =
+            super::family::families_from_stores_partitioned(&meta, stores, parts, owner)?;
+        families
+            .into_iter()
+            .map(|family| Self::from_family(meta.clone(), family, cache_bytes))
+            .collect()
+    }
+
     fn build(
         meta: SnapshotMeta,
         stores: &[Store],
@@ -231,6 +252,14 @@ impl ServingModel {
         owned: Option<&dyn Fn(u32) -> bool>,
     ) -> Result<ServingModel> {
         let family = family_from_stores_sliced(&meta, stores, owned)?;
+        Self::from_family(meta, family, cache_bytes)
+    }
+
+    fn from_family(
+        meta: SnapshotMeta,
+        family: Box<dyn ServingFamily>,
+        cache_bytes: usize,
+    ) -> Result<ServingModel> {
         let k = family.k();
         let vocab = family.vocab();
         let priors: Box<[f64]> = (0..k).map(|t| family.doc_prior(t).max(0.0)).collect();

@@ -9,8 +9,9 @@
 //! contention between replicas on the cache hot path.
 //!
 //! Generations swap **per replica** but commit **set-wide**: a reload
-//! prepares every replica's next slice first
-//! ([`Replica::prepare`] — load, slice, pre-warm, stage), and only when
+//! builds every replica's next slice in one shared scan of the decoded
+//! stores ([`ServingModel::slices_from_stores`]), prepares each replica
+//! ([`Replica::prepare`] — fault check, pre-warm, stage), and only when
 //! every replica has staged does the [`ReplicaSet`] make the new
 //! generation visible in one atomic swap. A replica that fails mid-reload
 //! (I/O error, or the [`Replica::fail_next_reload`] chaos hook) aborts
@@ -24,8 +25,6 @@ use std::sync::{Arc, Mutex};
 
 use super::cache::CacheStats;
 use super::model::ServingModel;
-use super::router::QueryRouter;
-use crate::ps::snapshot::{SnapshotMeta, Store};
 use crate::Result;
 
 /// One replica of a [`ReplicaSet`](super::router::ReplicaSet): identity,
@@ -76,20 +75,17 @@ impl Replica {
         self.fail_next.store(true, Ordering::SeqCst);
     }
 
-    /// Phase 1 of a set reload: build this replica's next-generation
-    /// slice from the decoded stores, pre-warm its alias cache from the
-    /// outgoing slice's resident word set, and stage it. Returns the
-    /// staged slice for the set-wide commit
+    /// Phase 1 of a set reload: take this replica's next-generation slice
+    /// (built by the set's **single shared scan** of the decoded stores —
+    /// [`ServingModel::slices_from_stores`]), pre-warm its alias cache
+    /// from the outgoing slice's resident word set, and stage it. Returns
+    /// the staged slice for the set-wide commit
     /// ([`ReplicaSet::install_stores`](super::router::ReplicaSet::install_stores)).
-    /// Errors (a decode problem surfaced at slice build, or an injected
-    /// fault) abort the whole set's reload — the old generation keeps
-    /// serving.
+    /// An injected fault aborts the whole set's reload — the old
+    /// generation keeps serving.
     pub fn prepare(
         &self,
-        meta: SnapshotMeta,
-        stores: &[Store],
-        cache_bytes: usize,
-        router: &QueryRouter,
+        slice: Arc<ServingModel>,
         outgoing: &ServingModel,
     ) -> Result<Arc<ServingModel>> {
         anyhow::ensure!(
@@ -97,15 +93,9 @@ impl Replica {
             "replica {} dropped mid-reload (injected fault)",
             self.id
         );
-        let id = self.id;
-        let slice =
-            ServingModel::from_stores_sliced(meta, stores, cache_bytes, &|w| {
-                router.owner(w) == id
-            })?;
         // The ring is fixed for the set's lifetime, so the outgoing
         // resident set contains only words this replica still owns.
         slice.prewarm_from(outgoing);
-        let slice = Arc::new(slice);
         *self.staged.lock().unwrap() = slice.clone();
         Ok(slice)
     }
@@ -114,6 +104,8 @@ impl Replica {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::router::QueryRouter;
+    use crate::ps::snapshot::{SnapshotMeta, Store};
 
     fn toy_meta() -> SnapshotMeta {
         SnapshotMeta {
@@ -145,26 +137,27 @@ mod tests {
         let stores = toy_stores();
         // Exercise whichever replica owns word 0 — guaranteed non-empty.
         let id = router.owner(0);
-        let slice0 = Arc::new(
-            ServingModel::from_stores_sliced(toy_meta(), &stores, 1 << 20, &|w| {
-                router.owner(w) == id
-            })
-            .unwrap(),
-        );
+        let build_slice = || {
+            Arc::new(
+                ServingModel::from_stores_sliced(toy_meta(), &stores, 1 << 20, &|w| {
+                    router.owner(w) == id
+                })
+                .unwrap(),
+            )
+        };
+        let slice0 = build_slice();
         // Make an owned word's table resident in the outgoing slice.
         slice0.proposal(0);
         let r = Replica::new(id, slice0.clone());
 
         r.fail_next_reload();
-        let msg = match r.prepare(toy_meta(), &stores, 1 << 20, &router, &slice0) {
+        let msg = match r.prepare(build_slice(), &slice0) {
             Ok(_) => panic!("injected fault must fail the prepare"),
             Err(e) => format!("{e:#}"),
         };
         assert!(msg.contains("injected fault"), "{msg}");
         // One-shot: the retry succeeds and the staged slice is pre-warmed.
-        let staged = r
-            .prepare(toy_meta(), &stores, 1 << 20, &router, &slice0)
-            .unwrap();
+        let staged = r.prepare(build_slice(), &slice0).unwrap();
         assert!(Arc::ptr_eq(&staged, &r.staged_model()));
         let st = staged.cache_stats();
         assert_eq!(st.prewarmed, 1, "outgoing resident word must pre-warm");

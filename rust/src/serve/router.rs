@@ -238,14 +238,15 @@ impl ReplicaSet {
     ) -> Result<Arc<ReplicaSet>> {
         anyhow::ensure!(replicas >= 1, "a replica set needs at least one replica");
         let router = Arc::new(QueryRouter::new(replicas));
-        let mut models = Vec::with_capacity(replicas);
-        for r in 0..replicas as u32 {
-            let slice =
-                ServingModel::from_stores_sliced(meta.clone(), stores, cache_bytes, &|w| {
-                    router.owner(w) == r
-                })?;
-            models.push(Arc::new(slice));
-        }
+        // All N slices from one scan of the stores (not one scan per
+        // replica): rows land on their owner, normalizers stay global.
+        let models: Vec<Arc<ServingModel>> =
+            ServingModel::slices_from_stores(meta, stores, cache_bytes, replicas, &|w| {
+                router.owner(w)
+            })?
+            .into_iter()
+            .map(Arc::new)
+            .collect();
         let replicas_vec: Vec<Replica> = models
             .iter()
             .enumerate()
@@ -337,16 +338,26 @@ impl ReplicaSet {
             outgoing.models[0].k(),
             meta.k
         );
+        // One shared scan builds every replica's next slice; each replica
+        // then prepares (fault check + pre-warm + stage) individually.
+        let router = &self.router;
+        let slices = ServingModel::slices_from_stores(
+            meta,
+            stores,
+            self.cache_bytes,
+            self.replicas.len(),
+            &|w| router.owner(w),
+        )
+        .map_err(|e| {
+            anyhow::anyhow!(
+                "set reload aborted (still serving generation {}): {e}",
+                outgoing.generation
+            )
+        })?;
         let mut fresh = Vec::with_capacity(self.replicas.len());
-        for (r, replica) in self.replicas.iter().enumerate() {
+        for ((r, replica), slice) in self.replicas.iter().enumerate().zip(slices) {
             let slice = replica
-                .prepare(
-                    meta.clone(),
-                    stores,
-                    self.cache_bytes,
-                    &self.router,
-                    &outgoing.models[r],
-                )
+                .prepare(Arc::new(slice), &outgoing.models[r])
                 .map_err(|e| {
                     anyhow::anyhow!(
                         "set reload aborted (still serving generation {}): {e}",

@@ -1,0 +1,247 @@
+//! Session-lifecycle integration tests: segments, cluster checkpoints,
+//! cross-"process" resume under a preserved run id, file-backed corpora,
+//! and the serving-layer handoff of resumed runs.
+//!
+//! Like `integration_cluster`, quality comparisons are *statistical*
+//! (beat chance decisively, land in the same regime): every RNG is
+//! seeded, but thread interleaving legitimately perturbs trajectories
+//! under eventual consistency.
+
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::session::TrainSession;
+use hplvm::corpus::source::{write_docword, FileSource, SyntheticSource};
+use hplvm::serve::ServingModel;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn base_cfg(model: ModelKind, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = model;
+    cfg.params.topics = 10;
+    cfg.corpus.n_docs = 240;
+    cfg.corpus.vocab_size = 500;
+    cfg.corpus.n_topics = 10;
+    cfg.corpus.doc_len_mean = 20.0;
+    cfg.cluster.clients = 3;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(100);
+    cfg.iterations = 8;
+    cfg.eval_every = 4;
+    cfg.test_docs = 40;
+    cfg.seed = seed;
+    cfg.corpus.seed = seed;
+    cfg.cluster.net.seed = seed ^ 0x7EA7;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hplvm_session_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Chance level: a uniform model over the configured vocabulary.
+fn chance(cfg: &TrainConfig) -> f64 {
+    cfg.corpus.vocab_size as f64
+}
+
+/// Train K iterations straight through vs. K/2 → checkpoint → resume in a
+/// *fresh* session → K/2 more. Statistically equivalent perplexity, and
+/// the resumed run keeps the original `run_id` so its snapshots still
+/// merge as the same run at serving time.
+fn checkpoint_resume_parity(model: ModelKind, seed: u64, regime_ratio: f64) {
+    let mut cfg = base_cfg(model, seed);
+    if model == ModelKind::AliasPdp {
+        cfg.corpus.model = hplvm::corpus::generator::GenerativeModel::Pyp;
+    }
+    let k = cfg.iterations;
+    let chance_level = chance(&cfg);
+
+    // Reference: one session, straight to K.
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut straight = TrainSession::start(cfg.clone(), &src).unwrap();
+    straight.run_to(k).unwrap();
+    let p_straight = straight.finish().unwrap().final_perplexity();
+
+    // Split: K/2, checkpoint, resume fresh, the remaining K/2.
+    let ckpt = tmpdir(&format!("parity_{}", model.name()));
+    let ckpt2 = tmpdir(&format!("parity2_{}", model.name()));
+    let mut first = TrainSession::start(cfg.clone(), &src).unwrap();
+    let run_id = first.run_id();
+    let seg1 = first.run_to(k / 2).unwrap();
+    assert_eq!(seg1.end_iteration, k / 2);
+    assert!(seg1.report.final_perplexity().is_finite());
+    first.checkpoint(&ckpt).unwrap();
+    drop(first); // the "old process" goes away without a clean finish
+
+    let mut resumed = TrainSession::resume(&ckpt).unwrap();
+    assert_eq!(resumed.run_id(), run_id, "resume must keep the run id");
+    assert_eq!(resumed.iteration(), k / 2);
+    let seg2 = resumed.run_to(k).unwrap();
+    assert_eq!((seg2.start_iteration, seg2.end_iteration), (k / 2, k));
+    // Checkpoint the *resumed* run too: its snapshots must carry the
+    // original run id and merge cleanly at serving time.
+    resumed.checkpoint(&ckpt2).unwrap();
+    let p_split = seg2.report.final_perplexity();
+    let _ = resumed.finish().unwrap();
+
+    assert!(p_straight.is_finite() && p_split.is_finite());
+    assert!(
+        p_straight < 0.7 * chance_level,
+        "{model:?} straight run never converged ({p_straight:.1})"
+    );
+    assert!(
+        p_split < 0.7 * chance_level,
+        "{model:?} resumed run never converged ({p_split:.1})"
+    );
+    let ratio = (p_split / p_straight).max(p_straight / p_split);
+    assert!(
+        ratio < regime_ratio,
+        "{model:?} straight {p_straight:.1} vs checkpoint/resume {p_split:.1} \
+         (ratio {ratio:.2})"
+    );
+
+    // Serving accepts the resumed run's snapshots as one run.
+    let served = ServingModel::load_dir(&ckpt2).expect("resumed checkpoint must serve");
+    assert_eq!(served.meta().run_id, run_id, "serving sees the original run id");
+    assert_eq!(served.kind().family_name(), model.family_name());
+    assert!(served.total_tokens() > 0);
+
+    std::fs::remove_dir_all(&ckpt).ok();
+    std::fs::remove_dir_all(&ckpt2).ok();
+}
+
+#[test]
+fn checkpoint_resume_parity_lda() {
+    checkpoint_resume_parity(ModelKind::AliasLda, 41, 1.5);
+}
+
+#[test]
+fn checkpoint_resume_parity_pdp() {
+    // Table statistics re-derive through the CRP on resume and re-converge
+    // via projection — a looser (but still same-regime) bound than LDA.
+    checkpoint_resume_parity(ModelKind::AliasPdp, 43, 2.0);
+}
+
+/// A corpus written to the docword format and loaded back through
+/// [`FileSource`] trains to finite (better-than-chance) perplexity via
+/// the same `TrainSession` path — real corpora are first-class.
+#[test]
+fn file_source_trains_through_session() {
+    let cfg = base_cfg(ModelKind::AliasLda, 47);
+    let dir = tmpdir("docword");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dw = dir.join("docword.txt");
+    let (corpus, _) = cfg.corpus.generate();
+    write_docword(&dw, &corpus).unwrap();
+    // A vocab file wider than the docword header widens the effective V —
+    // and must survive checkpoint/resume.
+    let widened = corpus.vocab_size + 20;
+    let vpath = dir.join("vocab.txt");
+    let words: String = (0..widened).map(|w| format!("w{w:06}\n")).collect();
+    std::fs::write(&vpath, words).unwrap();
+
+    let src = FileSource::new(&dw).with_vocab(&vpath);
+    let mut session = TrainSession::start(cfg.clone(), &src).unwrap();
+    assert_eq!(session.vocab(), widened);
+    let seg = session.run_to(6).unwrap();
+    let p = seg.report.final_perplexity();
+    assert!(p.is_finite(), "file-backed run produced {p}");
+    assert!(
+        p < 0.8 * chance(&cfg),
+        "file-backed run never beat chance ({p:.1})"
+    );
+
+    // Checkpoint + resume records the docword path and reloads it.
+    let ckpt = tmpdir("docword_ckpt");
+    session.checkpoint(&ckpt).unwrap();
+    let _ = session.finish().unwrap();
+    let mut resumed = TrainSession::resume(&ckpt).unwrap();
+    assert_eq!(resumed.iteration(), 6);
+    assert_eq!(
+        resumed.vocab(),
+        widened,
+        "the vocab file's widened V must survive resume"
+    );
+    let seg2 = resumed.run_for(2).unwrap();
+    assert!(seg2.report.final_perplexity().is_finite());
+    let _ = resumed.finish().unwrap();
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ckpt).ok();
+}
+
+/// Satellite regression: the auto-created temp snapshot dir used to be
+/// deleted at the end of the run even when a checkpoint had been written
+/// into it. Any directory a checkpoint went to survives `finish()`.
+#[test]
+fn checkpoint_into_auto_snapshot_dir_survives_finish() {
+    let mut cfg = base_cfg(ModelKind::AliasLda, 53);
+    cfg.iterations = 4;
+    cfg.cluster.snapshot_every = Some(Duration::from_millis(50));
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(4).unwrap();
+    let auto_dir = session
+        .snapshot_dir()
+        .expect("snapshot_every must auto-create a dir")
+        .to_path_buf();
+    session.checkpoint(&auto_dir).unwrap();
+    let _ = session.finish().unwrap();
+    assert!(
+        auto_dir.join(hplvm::ps::snapshot::SESSION_META_NAME).exists(),
+        "checkpointed auto dir was deleted by finish()"
+    );
+    // And it is a valid resume target.
+    let resumed = TrainSession::resume(&auto_dir).unwrap();
+    assert_eq!(resumed.iteration(), 4);
+    drop(resumed);
+    std::fs::remove_dir_all(&auto_dir).ok();
+
+    // Control: without a checkpoint the auto temp dir is still cleaned up.
+    let mut cfg = base_cfg(ModelKind::AliasLda, 59);
+    cfg.iterations = 2;
+    cfg.cluster.snapshot_every = Some(Duration::from_millis(50));
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(2).unwrap();
+    let auto_dir = session.snapshot_dir().unwrap().to_path_buf();
+    let _ = session.finish().unwrap();
+    assert!(
+        !auto_dir.exists(),
+        "un-checkpointed auto temp dir must still be cleaned up"
+    );
+}
+
+/// Resume refuses directories that are not (complete) checkpoints.
+#[test]
+fn resume_rejects_bad_directories() {
+    let dir = tmpdir("not_a_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = match TrainSession::resume(&dir) {
+        Ok(_) => panic!("empty dir must not resume"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("session"), "{err}");
+
+    // A checkpoint whose slot snapshots are gone is partial.
+    let mut cfg = base_cfg(ModelKind::AliasLda, 61);
+    cfg.iterations = 2;
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(2).unwrap();
+    let ckpt = tmpdir("partial_ckpt");
+    session.checkpoint(&ckpt).unwrap();
+    let _ = session.finish().unwrap();
+    std::fs::remove_file(ckpt.join(hplvm::ps::snapshot::slot_snapshot_name(0))).unwrap();
+    let err = match TrainSession::resume(&ckpt) {
+        Ok(_) => panic!("partial checkpoint must not resume"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("missing"), "{err}");
+    std::fs::remove_dir_all(&ckpt).ok();
+}
