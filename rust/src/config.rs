@@ -167,6 +167,13 @@ pub struct ClusterConfig {
     /// Clients (by index) that get an extra 10× slowdown — deterministic
     /// straggler injection.
     pub slow_clients: Vec<usize>,
+    /// How long a worker may go without a sync-point heartbeat before
+    /// the session declares it lost and fails it over. Generous by
+    /// default: a worker is legitimately silent for whole sampling
+    /// stretches between sync points, and oversubscribed hosts stall
+    /// threads for seconds. Explicit kills are detected immediately
+    /// regardless of this value.
+    pub worker_liveness: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -182,6 +189,7 @@ impl Default for ClusterConfig {
             filter: crate::ps::filter::Filter::default(),
             worker_slowdown: Duration::ZERO,
             slow_clients: Vec::new(),
+            worker_liveness: Duration::from_secs(10),
         }
     }
 }

@@ -50,6 +50,70 @@ pub struct IterStats {
     pub datapoints: u64,
 }
 
+impl IterStats {
+    fn empty(iteration: u64) -> IterStats {
+        IterStats {
+            iteration,
+            time: RunningStats::new(),
+            perplexity: RunningStats::new(),
+            log_lik: RunningStats::new(),
+            topics_per_word: RunningStats::new(),
+            datapoints: 0,
+        }
+    }
+}
+
+/// Bounded-memory record accumulator: folds [`IterRecord`]s into the
+/// per-iteration aggregates [`TrainReport`] is built from, retaining
+/// **no** raw records. Memory is O(distinct iterations) — independent
+/// of client count and of how many records stream through — so a
+/// long-running session (or a chaos soak) can observe millions of
+/// records without growing an unbounded `Vec<IterRecord>`.
+#[derive(Clone, Debug, Default)]
+pub struct RecordFold {
+    rows: std::collections::BTreeMap<u64, IterStats>,
+    total_tokens: u64,
+    sample_secs: f64,
+    corrections: u64,
+    records_seen: u64,
+}
+
+impl RecordFold {
+    /// Empty accumulator.
+    pub fn new() -> RecordFold {
+        RecordFold::default()
+    }
+
+    /// Fold one record in; the record itself is not retained.
+    pub fn push(&mut self, r: &IterRecord) {
+        let row = self
+            .rows
+            .entry(r.iteration)
+            .or_insert_with(|| IterStats::empty(r.iteration));
+        row.time.push(r.secs);
+        row.log_lik.push(r.avg_ll);
+        row.topics_per_word.push(r.topics_per_word);
+        if let Some(p) = r.perplexity {
+            row.perplexity.push(p);
+        }
+        row.datapoints += 1;
+        self.total_tokens += r.tokens;
+        self.sample_secs += r.sample_secs;
+        self.corrections += r.corrections;
+        self.records_seen += 1;
+    }
+
+    /// Records folded so far (a counter — none are held).
+    pub fn records_seen(&self) -> u64 {
+        self.records_seen
+    }
+
+    /// Aggregate rows currently held — bounded by distinct iterations.
+    pub fn rows_held(&self) -> usize {
+        self.rows.len()
+    }
+}
+
 /// The full training outcome.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
@@ -72,7 +136,7 @@ pub struct TrainReport {
 }
 
 impl TrainReport {
-    /// Aggregate raw records.
+    /// Aggregate raw records (folds them through a [`RecordFold`]).
     pub fn from_records(
         model: &str,
         records: &[IterRecord],
@@ -81,53 +145,50 @@ impl TrainReport {
         server_corrections: u64,
         reassignments: u64,
     ) -> TrainReport {
-        let max_iter = records.iter().map(|r| r.iteration).max().unwrap_or(0);
-        // Segment reports start mid-run: aggregate from the first recorded
-        // iteration, not from 1, so a segment over iterations 41..=60
-        // yields 20 rows instead of 40 empty ones followed by 20.
-        let min_iter = records
-            .iter()
-            .map(|r| r.iteration)
-            .min()
-            .unwrap_or(1)
-            .max(1);
+        let mut fold = RecordFold::new();
+        for r in records {
+            fold.push(r);
+        }
+        Self::from_fold(model, &fold, wall_secs, net, server_corrections, reassignments)
+    }
+
+    /// Aggregate a pre-folded accumulator — the session sink's bounded
+    /// path. Rows span the fold's first recorded iteration to its last
+    /// (a segment over iterations 41..=60 yields 20 rows, not 40 empty
+    /// ones followed by 20); interior iterations nobody reported still
+    /// get an empty row, matching [`from_records`](Self::from_records).
+    pub fn from_fold(
+        model: &str,
+        fold: &RecordFold,
+        wall_secs: f64,
+        net: (u64, u64, u64, u64),
+        server_corrections: u64,
+        reassignments: u64,
+    ) -> TrainReport {
+        let max_iter = fold.rows.keys().next_back().copied().unwrap_or(0);
+        let min_iter = fold.rows.keys().next().copied().unwrap_or(1).max(1);
         let mut per_iteration =
             Vec::with_capacity((max_iter.saturating_sub(min_iter) + 1) as usize);
         for it in min_iter..=max_iter {
-            let mut row = IterStats {
-                iteration: it,
-                time: RunningStats::new(),
-                perplexity: RunningStats::new(),
-                log_lik: RunningStats::new(),
-                topics_per_word: RunningStats::new(),
-                datapoints: 0,
-            };
-            for r in records.iter().filter(|r| r.iteration == it) {
-                row.time.push(r.secs);
-                row.log_lik.push(r.avg_ll);
-                row.topics_per_word.push(r.topics_per_word);
-                if let Some(p) = r.perplexity {
-                    row.perplexity.push(p);
-                }
-                row.datapoints += 1;
-            }
-            per_iteration.push(row);
+            per_iteration.push(
+                fold.rows
+                    .get(&it)
+                    .cloned()
+                    .unwrap_or_else(|| IterStats::empty(it)),
+            );
         }
-        let total_tokens: u64 = records.iter().map(|r| r.tokens).sum();
-        let sample_secs: f64 = records.iter().map(|r| r.sample_secs).sum();
-        let client_corrections: u64 = records.iter().map(|r| r.corrections).sum();
         TrainReport {
             model: model.to_string(),
             per_iteration,
-            total_tokens,
+            total_tokens: fold.total_tokens,
             wall_secs,
-            tokens_per_sec: if sample_secs > 0.0 {
-                total_tokens as f64 / sample_secs
+            tokens_per_sec: if fold.sample_secs > 0.0 {
+                fold.total_tokens as f64 / fold.sample_secs
             } else {
                 0.0
             },
             net,
-            corrections: client_corrections + server_corrections,
+            corrections: fold.corrections + server_corrections,
             reassignments,
         }
     }
@@ -312,6 +373,36 @@ mod tests {
         assert_eq!(rep.per_iteration[0].iteration, 41);
         assert_eq!(rep.per_iteration[1].iteration, 42);
         assert_eq!(rep.final_perplexity(), 700.0);
+    }
+
+    /// The bounded fold reproduces `from_records` exactly while holding
+    /// aggregate rows only — O(iterations), zero raw records.
+    #[test]
+    fn fold_matches_from_records_and_stays_bounded() {
+        let records = vec![
+            rec(0, 1, 1.0, Some(900.0)),
+            rec(1, 1, 2.0, Some(1100.0)),
+            rec(0, 3, 1.5, None), // gap at 2 → empty interior row
+        ];
+        let mut fold = RecordFold::new();
+        for r in &records {
+            fold.push(r);
+        }
+        assert_eq!(fold.records_seen(), 3);
+        assert_eq!(fold.rows_held(), 2, "rows track distinct iterations");
+        let a = TrainReport::from_records("t", &records, 9.0, (1, 2, 3, 4), 5, 6);
+        let b = TrainReport::from_fold("t", &fold, 9.0, (1, 2, 3, 4), 5, 6);
+        assert_eq!(a.per_iteration.len(), b.per_iteration.len());
+        for (x, y) in a.per_iteration.iter().zip(&b.per_iteration) {
+            assert_eq!(x.iteration, y.iteration);
+            assert_eq!(x.datapoints, y.datapoints);
+            assert_eq!(x.time.mean(), y.time.mean());
+            assert_eq!(x.perplexity.count(), y.perplexity.count());
+        }
+        assert_eq!(a.per_iteration[1].datapoints, 0, "gap row is empty");
+        assert_eq!(a.total_tokens, b.total_tokens);
+        assert_eq!(a.corrections, b.corrections);
+        assert_eq!(a.tokens_per_sec, b.tokens_per_sec);
     }
 
     #[test]

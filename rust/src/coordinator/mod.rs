@@ -11,7 +11,7 @@ pub mod session;
 pub mod trainer;
 pub mod worker;
 
-pub use metrics::{IterRecord, IterStats, TrainReport};
+pub use metrics::{IterRecord, IterStats, RecordFold, TrainReport};
 pub use model::ModelSampler;
 pub use session::{
     NullObserver, PrintObserver, SegmentReport, TrainObserver, TrainSession,

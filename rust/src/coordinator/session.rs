@@ -30,10 +30,11 @@
 //! `Trainer::run` survives as a one-segment wrapper over this API.
 
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use super::metrics::{IterRecord, TrainReport};
+use super::metrics::{IterRecord, RecordFold, TrainReport};
 use super::worker::{spawn_worker, WorkerCtx, WorkerExit};
 use crate::config::{ProjectionMode, TrainConfig};
 use crate::corpus::doc::Corpus;
@@ -42,7 +43,7 @@ use crate::corpus::source::{CorpusSource, FileSource, SyntheticSource};
 use crate::ps::msg::{Control, NodeId, Payload};
 use crate::ps::network::SimNet;
 use crate::ps::scheduler::{Scheduler, SchedulerConfig};
-use crate::ps::server::{ServerConfig, ServerGroup};
+use crate::ps::server::{Elastic, HandoffStats, ServerConfig, ServerGroup};
 use crate::ps::snapshot::{self, ClientSnapshot, SessionMeta, Store};
 use crate::util::json::Json;
 use crate::Result;
@@ -92,30 +93,52 @@ impl TrainObserver for PrintObserver {
     }
 }
 
-/// The session's internal metric sink: records every iteration for the
-/// aggregated reports and forwards each record to the user's observer.
+/// The session's internal metric sink: folds every record into bounded
+/// running aggregates — one cumulative [`RecordFold`], one for the
+/// current segment — and forwards each record to the user's observer.
+/// It retains **no** raw records (the old shared-`Vec` sink grew by
+/// `clients × iterations` records); a long chaos soak stays
+/// O(distinct iterations) in memory no matter how long it runs.
 struct RecordingObserver {
-    records: Mutex<Vec<IterRecord>>,
+    total: Mutex<RecordFold>,
+    segment: Mutex<RecordFold>,
     user: Arc<dyn TrainObserver>,
 }
 
 impl RecordingObserver {
-    fn len(&self) -> usize {
-        self.records.lock().unwrap().len()
+    fn new(user: Arc<dyn TrainObserver>) -> RecordingObserver {
+        RecordingObserver {
+            total: Mutex::new(RecordFold::new()),
+            segment: Mutex::new(RecordFold::new()),
+            user,
+        }
     }
 
-    fn slice_from(&self, start: usize) -> Vec<IterRecord> {
-        self.records.lock().unwrap()[start..].to_vec()
+    /// Reset the per-segment fold (start of every live segment).
+    fn begin_segment(&self) {
+        *self.segment.lock().unwrap() = RecordFold::new();
     }
 
-    fn all(&self) -> Vec<IterRecord> {
-        self.records.lock().unwrap().clone()
+    fn segment_fold(&self) -> RecordFold {
+        self.segment.lock().unwrap().clone()
+    }
+
+    fn total_fold(&self) -> RecordFold {
+        self.total.lock().unwrap().clone()
+    }
+
+    /// Raw records currently buffered — identically zero: records fold
+    /// into aggregates on arrival and are never retained. The probe the
+    /// bounded-memory test pins.
+    fn records_held(&self) -> usize {
+        0
     }
 }
 
 impl TrainObserver for RecordingObserver {
     fn on_iteration(&self, rec: &IterRecord) {
-        self.records.lock().unwrap().push(rec.clone());
+        self.total.lock().unwrap().push(rec);
+        self.segment.lock().unwrap().push(rec);
         self.user.on_iteration(rec);
     }
 }
@@ -188,6 +211,13 @@ pub struct TrainSession {
     pending_client_kills: Vec<(u64, usize)>,
     pending_server_kills: Vec<(u64, usize)>,
     reassignments: u64,
+    /// Live `(shard, node)` pairs, refreshed at spawn and failover —
+    /// the chaos harness's kill-target directory. Empty between
+    /// segments.
+    live_workers: Arc<RwLock<Vec<(usize, NodeId)>>>,
+    /// Median completed-iteration probe, stored by the control loop so
+    /// observers on other threads can pace fault injection.
+    progress: Arc<AtomicU64>,
     t0: Instant,
 }
 
@@ -436,10 +466,7 @@ impl TrainSession {
         let pending_client_kills = cfg.failures.kill_clients.clone();
         let pending_server_kills = cfg.failures.kill_servers.clone();
         Ok(TrainSession {
-            sink: Arc::new(RecordingObserver {
-                records: Mutex::new(Vec::new()),
-                user: observer.clone(),
-            }),
+            sink: Arc::new(RecordingObserver::new(observer.clone())),
             user_observer: observer,
             cfg: Arc::new(cfg),
             vocab,
@@ -462,6 +489,8 @@ impl TrainSession {
             pending_client_kills,
             pending_server_kills,
             reassignments: 0,
+            live_workers: Arc::new(RwLock::new(Vec::new())),
+            progress: Arc::new(AtomicU64::new(iteration)),
             t0: Instant::now(),
         })
     }
@@ -501,6 +530,48 @@ impl TrainSession {
         Ok(())
     }
 
+    /// A clone of the simulated transport — chaos threads kill nodes and
+    /// spike latency/loss ([`SimNet::set_degraded`]) through it while a
+    /// segment runs.
+    pub fn sim_net(&self) -> SimNet {
+        self.net.clone()
+    }
+
+    /// Live worker `(shard, node)` pairs, refreshed as segments spawn
+    /// workers and failovers rebind shards — the chaos harness picks
+    /// worker kill targets here. Empty between segments.
+    pub fn worker_nodes(&self) -> Arc<RwLock<Vec<(usize, NodeId)>>> {
+        self.live_workers.clone()
+    }
+
+    /// Median-progress probe (completed iterations across shards),
+    /// updated live by the segment control loop — chaos schedules pace
+    /// their faults against it instead of wall-clock guesses.
+    pub fn progress_probe(&self) -> Arc<AtomicU64> {
+        self.progress.clone()
+    }
+
+    /// A cloneable elastic-membership handle over the server group:
+    /// grow the ring or kill slots from another thread mid-segment.
+    pub fn elastic(&self) -> Result<Elastic> {
+        match &self.group {
+            Some(g) => Ok(g.elastic()),
+            None => anyhow::bail!("session already finished"),
+        }
+    }
+
+    /// Grow the server ring `N → N+1` with drain-and-handoff (live
+    /// clients re-route on their next push/pull) — see [`Elastic::grow`]
+    /// for the protocol and the returned accounting.
+    pub fn grow_servers(&self) -> Result<HandoffStats> {
+        Ok(self.elastic()?.grow())
+    }
+
+    /// Worker reassignments so far (failovers + straggler kills).
+    pub fn reassignments(&self) -> u64 {
+        self.reassignments
+    }
+
     /// Train `n` more iterations (one segment).
     pub fn run_for(&mut self, n: u64) -> Result<SegmentReport> {
         self.run_to(self.iteration.saturating_add(n))
@@ -535,7 +606,7 @@ impl TrainSession {
         }
         self.epoch += 1;
         let seg_start = Instant::now();
-        let rec_start = self.sink.len();
+        self.sink.begin_segment();
         let net0 = self.net.stats();
         let corr0 = self.group.as_ref().unwrap().total_corrections();
         let reassign0 = self.reassignments;
@@ -592,6 +663,8 @@ impl TrainSession {
             }
             live.push(spawn(s, self.states[s].clone(), slowdown, announce, &self.net));
         }
+        *self.live_workers.write().unwrap() =
+            live.iter().map(|w| (w.shard, w.node)).collect();
 
         // The segment control loop (progress, stragglers, failure
         // injection, client failover, the 90% rule).
@@ -611,6 +684,12 @@ impl TrainSession {
                 .min(target);
             scheduler.record(w.shard, w.node, start, 0);
         }
+        // Worker liveness: every sync point sends a heartbeat (and every
+        // progress report counts as one); a shard silent past the
+        // liveness window is declared lost below even when nothing ever
+        // explicitly killed its node.
+        let worker_liveness = cfg.cluster.worker_liveness;
+        let mut last_beat: Vec<Instant> = vec![Instant::now(); live.len()];
         // Generous watchdog: covers oversubscribed single-core hosts; a
         // healthy segment terminates via the 90% quorum long before this.
         let span = target - start_iteration;
@@ -625,13 +704,23 @@ impl TrainSession {
                 .net
                 .recv_timeout(self.scheduler_node, Duration::from_millis(5))
             {
-                if let Payload::Progress {
-                    shard,
-                    iteration,
-                    tokens,
-                } = env.payload
-                {
-                    scheduler.record(shard, env.from, iteration, tokens);
+                match env.payload {
+                    Payload::Progress {
+                        shard,
+                        iteration,
+                        tokens,
+                    } => {
+                        scheduler.record(shard, env.from, iteration, tokens);
+                        if let Some(b) = last_beat.get_mut(shard) {
+                            *b = Instant::now();
+                        }
+                    }
+                    Payload::Heartbeat => {
+                        if let Some(w) = live.iter().find(|w| w.node == env.from) {
+                            last_beat[w.shard] = Instant::now();
+                        }
+                    }
+                    _ => {}
                 }
             }
             // Backstop for lossy transports: a worker thread that exited
@@ -644,6 +733,7 @@ impl TrainSession {
                 }
             }
             let median = scheduler.median_progress();
+            self.progress.store(median, Ordering::Relaxed);
 
             // Failure injection (absolute iterations, so a plan spanning
             // segment boundaries still fires exactly once).
@@ -682,27 +772,49 @@ impl TrainSession {
                 }
             }
 
-            // Client failover: respawn any dead worker from its snapshot.
+            // Client failover: respawn any *lost* worker from its
+            // snapshot. Lost = its node is dead (explicit kill, straggler
+            // policy, chaos injection) — or it went silent: no sync-point
+            // heartbeat within the liveness window, the wedged-thread /
+            // stalled-host case where nothing ever recorded a kill. A
+            // silent worker's node is killed first so the old incarnation
+            // cannot keep pushing after its replacement starts.
             for i in 0..live.len() {
-                if self.net.is_dead(live[i].node)
-                    && scheduler.shards()[live[i].shard].iteration < target
-                {
-                    let shard_idx = live[i].shard;
-                    let resume = self
-                        .snapshot_dir
-                        .as_ref()
-                        .map(|d| d.join(format!("client_shard{shard_idx}.snap")))
-                        .and_then(|p| snapshot::read_snapshot(&p))
-                        .and_then(|b| snapshot::decode_client(&b))
-                        .filter(|s| s.shard == shard_idx);
-                    let old = std::mem::replace(
-                        &mut live[i],
-                        spawn(shard_idx, resume, Duration::ZERO, true, &self.net),
-                    );
-                    let _ = old.handle.join();
-                    scheduler.reassign(shard_idx, live[i].node);
-                    self.reassignments += 1;
+                let shard_idx = live[i].shard;
+                if scheduler.shards()[shard_idx].iteration >= target {
+                    continue;
                 }
+                let dead = self.net.is_dead(live[i].node);
+                let silent = !dead
+                    && !live[i].handle.is_finished()
+                    && last_beat[shard_idx].elapsed() > worker_liveness;
+                if !dead && !silent {
+                    continue;
+                }
+                if silent {
+                    crate::warn!(
+                        "session",
+                        "shard {shard_idx} missed heartbeats for {worker_liveness:?}; \
+                         declaring it lost and reassigning"
+                    );
+                    self.net.kill(live[i].node);
+                }
+                let resume = self
+                    .snapshot_dir
+                    .as_ref()
+                    .map(|d| d.join(format!("client_shard{shard_idx}.snap")))
+                    .and_then(|p| snapshot::read_snapshot(&p))
+                    .and_then(|b| snapshot::decode_client(&b))
+                    .filter(|s| s.shard == shard_idx);
+                let old = std::mem::replace(
+                    &mut live[i],
+                    spawn(shard_idx, resume, Duration::ZERO, true, &self.net),
+                );
+                let _ = old.handle.join();
+                scheduler.reassign(shard_idx, live[i].node);
+                self.live_workers.write().unwrap()[i] = (shard_idx, live[i].node);
+                last_beat[shard_idx] = Instant::now();
+                self.reassignments += 1;
             }
 
             if scheduler.quorum_reached() {
@@ -763,15 +875,17 @@ impl TrainSession {
             target
         };
         self.iteration = reached;
+        self.progress.store(reached, Ordering::Relaxed);
+        self.live_workers.write().unwrap().clear();
 
         let net1 = self.net.stats();
         let corr1 = self.group.as_ref().unwrap().total_corrections();
         let seg = SegmentReport {
             start_iteration,
             end_iteration: reached,
-            report: TrainReport::from_records(
+            report: TrainReport::from_fold(
                 self.cfg.model.name(),
-                &self.sink.slice_from(rec_start),
+                &self.sink.segment_fold(),
                 seg_start.elapsed().as_secs_f64(),
                 (
                     net1.0.saturating_sub(net0.0),
@@ -908,9 +1022,9 @@ impl TrainSession {
             Some(g) => (g.total_corrections(), self.net.stats()),
             None => (0, self.net.stats()),
         };
-        TrainReport::from_records(
+        TrainReport::from_fold(
             self.cfg.model.name(),
-            &self.sink.all(),
+            &self.sink.total_fold(),
             self.t0.elapsed().as_secs_f64(),
             net,
             corr,
@@ -966,6 +1080,41 @@ mod tests {
         cfg.eval_every = 2;
         cfg.test_docs = 10;
         cfg
+    }
+
+    /// The record sink folds iterations into running aggregates: after
+    /// 10k iterations × 3 shards it buffers **zero** raw records (O(1)
+    /// in records held) and only per-iteration aggregate rows, and the
+    /// folded report still carries the full accounting.
+    #[test]
+    fn sink_stays_bounded_over_10k_iterations() {
+        let sink = RecordingObserver::new(Arc::new(NullObserver));
+        for iter in 1..=10_000u64 {
+            for shard in 0..3usize {
+                sink.on_iteration(&IterRecord {
+                    shard,
+                    client_idx: shard,
+                    iteration: iter,
+                    secs: 0.01,
+                    sample_secs: 0.008,
+                    tokens: 100,
+                    perplexity: if iter % 100 == 0 { Some(800.0) } else { None },
+                    avg_ll: -7.0,
+                    topics_per_word: 3.0,
+                    acceptance: 0.9,
+                    corrections: 0,
+                });
+            }
+        }
+        assert_eq!(sink.records_held(), 0, "records fold on arrival, never buffer");
+        let total = sink.total_fold();
+        assert_eq!(total.records_seen(), 30_000);
+        assert_eq!(total.rows_held(), 10_000, "one aggregate row per iteration");
+        let rep = TrainReport::from_fold("t", &total, 1.0, (0, 0, 0, 0), 0, 0);
+        assert_eq!(rep.per_iteration.len(), 10_000);
+        assert_eq!(rep.per_iteration[0].datapoints, 3);
+        assert_eq!(rep.total_tokens, 3_000_000);
+        assert!((rep.final_perplexity() - 800.0).abs() < 1e-9);
     }
 
     #[test]

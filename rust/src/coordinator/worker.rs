@@ -63,8 +63,8 @@ pub struct WorkerCtx {
     pub net: SimNet,
     /// This worker's node id.
     pub node: NodeId,
-    /// Server ring + slot bindings + freeze flag.
-    pub ring: crate::ps::ring::Ring,
+    /// Server ring (shared — an elastic grow re-routes live workers).
+    pub ring: crate::ps::ring::SharedRing,
     /// Slot → node binding (shared with the manager).
     pub slots: Arc<std::sync::RwLock<Vec<NodeId>>>,
     /// Freeze flag (server failover in progress).
@@ -236,6 +236,12 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
                         ClientEvent::Control(Control::Reroute) => {}
                     }
                 }
+                // Liveness heartbeat: the session's missed-beat detector
+                // declares this worker lost if sync points stop arriving
+                // (heartbeat-driven failure detection, not test-code
+                // bookkeeping).
+                ctx.net
+                    .send(ctx.node, ctx.scheduler, crate::ps::msg::Payload::Heartbeat);
             }
         }
 

@@ -29,8 +29,19 @@
 //!   layer's same-run merge check accepts the continuation's snapshots —
 //!   and a valid `serve --snapshot` input. The segment control loop
 //!   carries the paper's operational story: progress scheduling,
-//!   straggler kills, failure injection, client failover, the 90% rule
-//!   (§5.4, §6). `Trainer::run` remains as a one-segment wrapper.
+//!   straggler kills, failure injection, heartbeat-driven client
+//!   failover, the 90% rule (§5.4, §6). `Trainer::run` remains as a
+//!   one-segment wrapper.
+//! * **Chaos tier ([`chaos`])** — elastic membership + fault drills over
+//!   a *live* cluster: a seeded [`chaos::ChaosPlan`] kills workers,
+//!   kills server slots (freeze → snapshot restore → thaw), grows the
+//!   server ring `N → N+1` with drain-and-handoff
+//!   ([`ps::server::Elastic::grow`]), resizes the serving
+//!   [`serve::ReplicaSet`] between generations, and spikes the
+//!   simulated transport — while a [`chaos::ChaosHarness`] streams
+//!   queries and training continues, reporting a
+//!   [`chaos::ChaosReport`] (faults injected, queries dropped,
+//!   iterations lost, post-chaos perplexity).
 //! * **Layer 4 ([`serve`])** — the family-generic, hot-reloadable,
 //!   **model-parallel** inference service: the [`serve::ServingFamily`]
 //!   trait abstracts "frozen sufficient statistics + fold-in posterior"
@@ -116,8 +127,24 @@
 //! let mut resumed = TrainSession::resume(Path::new("ckpt")).expect("resume");
 //! resumed.run_for(20).expect("more training, same run_id");
 //! ```
+//!
+//! ## Test layout
+//!
+//! Unit tests live beside the code; the scenario tiers live in
+//! `rust/tests/`: `integration_cluster.rs` (end-to-end training),
+//! `property_invariants.rs` (samplers), `serving_inference.rs` /
+//! `serving_router.rs` (serving), `session_resume.rs`
+//! (checkpoint/resume), and `chaos_scenarios.rs` (elastic membership +
+//! fault drills). Every chaos scenario derives
+//! its fault schedule from one seed; set the `CHAOS_SEED` environment
+//! variable to replay a failing CI seed locally with one command:
+//!
+//! ```text
+//! CHAOS_SEED=12345 cargo test --release --test chaos_scenarios
+//! ```
 
 pub mod bench;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod corpus;

@@ -11,6 +11,9 @@
 //!             [--seed S]     # load-test the inference server (any family)
 //! hplvm infer --snapshot DIR --tokens "3 17 42" [--model NAME] [--top N]
 //!             [--replicas R] # routed answers report the serving replicas
+//! hplvm chaos [--seed S] [--replicas R] [--warmup N] [--iterations N]
+//!                            # elastic-membership chaos drill: kill and
+//!                            # resize the live cluster under load
 //! hplvm eval-engine          # check PJRT artifacts load and execute
 //! hplvm info                 # print the resolved configuration
 //! ```
@@ -31,7 +34,7 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hplvm <train|serve|infer|eval-engine|info> [options]\n\
+        "usage: hplvm <train|serve|infer|chaos|eval-engine|info> [options]\n\
          train options:\n\
            --model NAME          yahoolda | aliaslda | pdp | hdp\n\
            --clients N           client (worker) count\n\
@@ -79,7 +82,14 @@ fn usage() -> ! {
            --model NAME          expected family (optional cross-check)\n\
            --replicas R          route through R replicas and report which\n\
                                  ones served (θ is bit-identical to R=1)\n\
-           --top N               topics to print (default 8)"
+           --top N               topics to print (default 8)\n\
+         chaos options:\n\
+           --seed S              fault-schedule seed (default: CHAOS_SEED\n\
+                                 env var, else the built-in seed)\n\
+           --replicas R          initial serving replica count (default 2)\n\
+           --warmup N            pre-chaos iterations (default 4)\n\
+           --iterations N        absolute iteration target of the chaotic\n\
+                                 segment (default 16)"
     );
     std::process::exit(2)
 }
@@ -313,6 +323,82 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
         usage()
     }
     out
+}
+
+struct ChaosArgs {
+    seed: u64,
+    replicas: usize,
+    warmup: u64,
+    target: u64,
+}
+
+fn parse_chaos_args(args: &[String]) -> ChaosArgs {
+    let mut out = ChaosArgs {
+        seed: hplvm::chaos::chaos_seed(),
+        replicas: 2,
+        warmup: 4,
+        target: 16,
+    };
+    let mut it = ArgIter { args, i: 0 };
+    while let Some(arg) = it.next() {
+        match arg {
+            "--seed" => out.seed = it.value("--seed").parse().unwrap_or_else(|_| usage()),
+            "--replicas" => {
+                out.replicas = it.value("--replicas").parse().unwrap_or_else(|_| usage());
+                if out.replicas == 0 {
+                    eprintln!("--replicas must be at least 1");
+                    usage()
+                }
+            }
+            "--warmup" => {
+                out.warmup = it.value("--warmup").parse().unwrap_or_else(|_| usage())
+            }
+            "--iterations" => {
+                out.target = it.value("--iterations").parse().unwrap_or_else(|_| usage())
+            }
+            "-v" => logging::set_level(Level::Debug),
+            "-q" => logging::set_level(Level::Warn),
+            _ => {
+                eprintln!("unknown option {arg}");
+                usage()
+            }
+        }
+    }
+    if out.target <= out.warmup {
+        eprintln!("--iterations must exceed --warmup");
+        usage()
+    }
+    out
+}
+
+/// `hplvm chaos`: run the seeded elastic-membership drill — kill a
+/// worker and a server slot, grow the server ring, resize the serving
+/// set, spike the transport — against a live session with a query
+/// stream, and print the [`hplvm::chaos::ChaosReport`].
+fn cmd_chaos(a: ChaosArgs) -> hplvm::Result<()> {
+    let cfg = hplvm::chaos::chaos_train_config();
+    let plan = hplvm::chaos::ChaosPlan::seeded(
+        a.seed,
+        a.warmup,
+        a.target,
+        cfg.cluster.n_servers(),
+        a.replicas,
+    );
+    println!(
+        "chaos drill: seed {:#x} | {} scheduled fault(s) | warmup {} → target {} | \
+         {} server slot(s), {} serving replica(s)",
+        a.seed,
+        plan.events.len(),
+        a.warmup,
+        a.target,
+        cfg.cluster.n_servers(),
+        a.replicas,
+    );
+    let report =
+        hplvm::chaos::ChaosHarness::new(cfg, plan, a.replicas, a.warmup, a.target).run()?;
+    print!("{}", report.render());
+    println!("reproduce with: CHAOS_SEED={} hplvm chaos", report.seed);
+    Ok(())
 }
 
 /// The loaded serving topology: one in-process model, or a
@@ -672,6 +758,13 @@ fn main() {
         }
         "serve" => cmd_serve(parse_serve_args(&args[1..])),
         "infer" => cmd_infer(parse_serve_args(&args[1..])),
+        "chaos" => {
+            let a = parse_chaos_args(&args[1..]);
+            if let Err(e) = cmd_chaos(a) {
+                eprintln!("chaos drill failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "eval-engine" => match hplvm::runtime::Engine::load(std::path::Path::new("artifacts")) {
             Ok(Some(engine)) => {
                 println!("PJRT platform: {}", engine.platform());

@@ -14,7 +14,7 @@ use std::time::Duration;
 use super::filter::Filter;
 use super::msg::{NodeId, Payload, RowBatch};
 use super::network::SimNet;
-use super::ring::Ring;
+use super::ring::SharedRing;
 use crate::sampler::counts::CountMatrix;
 use crate::util::rng::Rng;
 
@@ -23,7 +23,9 @@ pub struct PsClient {
     /// This client's node id.
     pub id: NodeId,
     net: SimNet,
-    ring: Ring,
+    /// Shared with the server group — an elastic grow re-routes this
+    /// client's next push/pull without a respawn.
+    ring: SharedRing,
     slots: Arc<RwLock<Vec<NodeId>>>,
     frozen: Arc<AtomicBool>,
     /// Communication filter for pushes.
@@ -50,7 +52,7 @@ impl PsClient {
     pub fn new(
         net: SimNet,
         id: NodeId,
-        ring: Ring,
+        ring: SharedRing,
         slots: Arc<RwLock<Vec<NodeId>>>,
         frozen: Arc<AtomicBool>,
         filter: Filter,
@@ -80,7 +82,7 @@ impl PsClient {
     }
 
     fn node_for(&self, matrix: u8, word: u32) -> NodeId {
-        let slot = self.ring.route(matrix, word);
+        let slot = self.ring.read().unwrap().route(matrix, word);
         self.slots.read().unwrap()[slot as usize]
     }
 
@@ -98,11 +100,13 @@ impl PsClient {
         for (w, row) in retain {
             replica.requeue_delta(w, row);
         }
-        // Group by destination server.
-        let n_slots = self.ring.slots();
+        // Group by destination server under one consistent ring view
+        // (a concurrent grow lands on the next push).
+        let ring = self.ring.read().unwrap().clone();
+        let n_slots = ring.slots();
         let mut by_slot: Vec<RowBatch> = (0..n_slots).map(|_| Vec::new()).collect();
         for (w, row) in send {
-            by_slot[self.ring.route(matrix, w) as usize].push((w, row));
+            by_slot[ring.route(matrix, w) as usize].push((w, row));
             self.rows_pushed += 1;
         }
         for (slot, rows) in by_slot.into_iter().enumerate() {
@@ -118,10 +122,11 @@ impl PsClient {
     /// asynchronously; collect with [`PsClient::drain_responses`]).
     pub fn request_rows(&mut self, matrix: u8, words: &[u32]) {
         self.wait_unfrozen();
-        let n_slots = self.ring.slots();
+        let ring = self.ring.read().unwrap().clone();
+        let n_slots = ring.slots();
         let mut by_slot: Vec<Vec<u32>> = (0..n_slots).map(|_| Vec::new()).collect();
         for &w in words {
-            by_slot[self.ring.route(matrix, w) as usize].push(w);
+            by_slot[ring.route(matrix, w) as usize].push(w);
         }
         for (slot, ws) in by_slot.into_iter().enumerate() {
             if ws.is_empty() {

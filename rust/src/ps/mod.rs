@@ -27,6 +27,6 @@ pub mod snapshot;
 pub use client::PsClient;
 pub use msg::{Control, Envelope, NodeId, Payload};
 pub use network::{NetConfig, SimNet};
-pub use ring::Ring;
+pub use ring::{Ring, SharedRing};
 pub use scheduler::Scheduler;
-pub use server::{ServerConfig, ServerGroup};
+pub use server::{Elastic, HandoffStats, ServerConfig, ServerGroup};

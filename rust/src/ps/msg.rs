@@ -99,6 +99,47 @@ pub enum Payload {
         /// satisfy a later checkpoint into a different directory.
         dir: std::path::PathBuf,
     },
+    /// Elasticity controller → server: the ring is growing to
+    /// `new_slots` logical slots — rebuild the ring locally (it is a pure
+    /// function of `(slots, vnodes)`), drain every owned row the new
+    /// geometry routes to `dest_slot`, ship the rows to `dest` via
+    /// [`Payload::Handoff`], and report the accounting with
+    /// [`Payload::HandoffAck`].
+    HandoffReq {
+        /// Slot count of the grown ring.
+        new_slots: u32,
+        /// Virtual points per slot (unchanged by a grow).
+        vnodes: u32,
+        /// Node hosting the new slot (handoff destination).
+        dest: NodeId,
+        /// The new slot id (always `new_slots - 1` for a grow).
+        dest_slot: u32,
+    },
+    /// Server → server: **absolute** rows whose ownership moved to the
+    /// receiver under the grown ring. The receiver installs them verbatim
+    /// (its store holds nothing for these keys yet) and receipts the
+    /// batch to `ack_to`.
+    Handoff {
+        /// Which shared matrix.
+        matrix: u8,
+        /// Batched row values (absolute, like a pull response).
+        rows: RowBatch,
+        /// Controller node to receipt the arrival to.
+        ack_to: NodeId,
+    },
+    /// Server → controller: handoff accounting. Sent once by each
+    /// draining slot (with its `moved`/`total` row counts) and once per
+    /// received batch by the destination slot (receipts, `total = 0`) —
+    /// together they let the controller both assert the ≈1/(N+1)
+    /// movement bound and confirm every shipped row arrived.
+    HandoffAck {
+        /// The reporting slot.
+        slot: u32,
+        /// Rows shipped (drain report) or received (receipt).
+        moved: u64,
+        /// Rows owned before the drain (drain report; 0 in receipts).
+        total: u64,
+    },
     /// Control-plane command.
     Control(Control),
 }
@@ -109,11 +150,14 @@ impl Payload {
     /// ([`RowData::wire_bytes`] — 4 bytes/cell dense, 8 bytes/pair sparse).
     pub fn wire_bytes(&self) -> u64 {
         match self {
-            Payload::Push { rows, .. } | Payload::PullResp { rows, .. } => {
+            Payload::Push { rows, .. }
+            | Payload::PullResp { rows, .. }
+            | Payload::Handoff { rows, .. } => {
                 rows.iter().map(|(_, r)| 4 + r.wire_bytes()).sum::<u64>() + 16
             }
             Payload::PullReq { words, .. } => 16 + 4 * words.len() as u64,
             Payload::Progress { .. } => 32,
+            Payload::HandoffReq { .. } | Payload::HandoffAck { .. } => 24,
             Payload::SnapshotReq { dir } | Payload::SnapshotAck { dir, .. } => {
                 16 + dir.as_os_str().len() as u64
             }

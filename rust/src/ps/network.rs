@@ -73,6 +73,12 @@ struct Inner {
     rng: Mutex<Rng>,
     seq: AtomicU64,
     stats: NetStats,
+    /// Degraded-mode override (chaos spikes): extra one-way latency in
+    /// nanoseconds added to every message while non-zero.
+    extra_latency_ns: AtomicU64,
+    /// Degraded-mode override: extra drop probability in milli-units
+    /// (0..=1000) added to `cfg.drop_prob` while non-zero.
+    extra_drop_milli: AtomicU64,
 }
 
 /// Handle to the simulated network (cheaply cloneable).
@@ -93,6 +99,8 @@ impl SimNet {
                 rng: Mutex::new(Rng::new(seed)),
                 seq: AtomicU64::new(0),
                 stats: NetStats::default(),
+                extra_latency_ns: AtomicU64::new(0),
+                extra_drop_milli: AtomicU64::new(0),
             }),
         }
     }
@@ -158,12 +166,16 @@ impl SimNet {
             self.inner.stats.dead_letters.fetch_add(1, Ordering::Relaxed);
             return false;
         }
+        let extra_ns = self.inner.extra_latency_ns.load(Ordering::Relaxed);
+        let extra_drop = self.inner.extra_drop_milli.load(Ordering::Relaxed) as f64 / 1000.0;
         let (latency, dropped) = {
             let mut rng = self.inner.rng.lock().unwrap();
             let jit = self.inner.cfg.jitter.as_nanos() as f64 * rng.f64();
             (
-                self.inner.cfg.base_latency + Duration::from_nanos(jit as u64),
-                rng.coin(self.inner.cfg.drop_prob),
+                self.inner.cfg.base_latency
+                    + Duration::from_nanos(jit as u64)
+                    + Duration::from_nanos(extra_ns),
+                rng.coin((self.inner.cfg.drop_prob + extra_drop).min(1.0)),
             )
         };
         if dropped {
@@ -232,6 +244,32 @@ impl SimNet {
                 return None;
             }
         }
+    }
+
+    /// Chaos hook: degrade the transport — every subsequent send pays
+    /// `extra_latency` on top of the configured base+jitter and is
+    /// dropped with `cfg.drop_prob + extra_drop` (clamped to 1) — until
+    /// [`SimNet::clear_degraded`]. Messages already in flight keep their
+    /// original delivery times.
+    pub fn set_degraded(&self, extra_latency: Duration, extra_drop: f64) {
+        self.inner
+            .extra_latency_ns
+            .store(extra_latency.as_nanos() as u64, Ordering::SeqCst);
+        self.inner
+            .extra_drop_milli
+            .store((extra_drop.clamp(0.0, 1.0) * 1000.0).round() as u64, Ordering::SeqCst);
+    }
+
+    /// End a degraded-mode spike: back to the configured latency/loss.
+    pub fn clear_degraded(&self) {
+        self.inner.extra_latency_ns.store(0, Ordering::SeqCst);
+        self.inner.extra_drop_milli.store(0, Ordering::SeqCst);
+    }
+
+    /// Is a degraded-mode spike active?
+    pub fn is_degraded(&self) -> bool {
+        self.inner.extra_latency_ns.load(Ordering::Relaxed) != 0
+            || self.inner.extra_drop_milli.load(Ordering::Relaxed) != 0
     }
 
     /// Drain everything currently deliverable without waiting.
@@ -324,6 +362,32 @@ mod tests {
         assert_eq!(net.len(), 2);
         net.send(0, n, Payload::Heartbeat);
         assert!(net.recv_timeout(n, Duration::from_millis(100)).is_some());
+    }
+
+    #[test]
+    fn degraded_mode_spikes_latency_and_loss_until_cleared() {
+        let net = SimNet::new(
+            2,
+            NetConfig {
+                base_latency: Duration::ZERO,
+                jitter: Duration::ZERO,
+                drop_prob: 0.0,
+                seed: 9,
+            },
+        );
+        // Latency spike: a zero-latency net suddenly delays delivery.
+        net.set_degraded(Duration::from_millis(20), 0.0);
+        assert!(net.is_degraded());
+        net.send(0, 1, Payload::Heartbeat);
+        assert!(net.recv_timeout(1, Duration::ZERO).is_none());
+        assert!(net.recv_timeout(1, Duration::from_millis(500)).is_some());
+        // Loss spike: extra drop probability 1.0 loses everything.
+        net.set_degraded(Duration::ZERO, 1.0);
+        assert!(!net.send(0, 1, Payload::Heartbeat));
+        // Cleared: back to the configured lossless transport.
+        net.clear_degraded();
+        assert!(!net.is_degraded());
+        assert!(net.send(0, 1, Payload::Heartbeat));
     }
 
     #[test]

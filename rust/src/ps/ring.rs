@@ -9,6 +9,11 @@
 
 use crate::util::rng::splitmix64;
 
+/// A ring shared across threads and swappable at runtime (elastic
+/// membership): clients take a read guard per send, the grow path swaps
+/// in the grown ring under the write lock while the system is frozen.
+pub type SharedRing = std::sync::Arc<std::sync::RwLock<Ring>>;
+
 /// Consistent-hash ring over logical server slots.
 #[derive(Clone, Debug)]
 pub struct Ring {

@@ -16,9 +16,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use super::msg::{Control, NodeId, Payload, RowData};
+use super::msg::{Control, NodeId, Payload, RowBatch, RowData};
 use super::network::SimNet;
-use super::ring::Ring;
+use super::ring::{Ring, SharedRing};
 use super::snapshot::{self, SnapshotMeta, Store};
 use crate::projection::ondemand::OnDemandProjection;
 
@@ -195,6 +195,86 @@ impl ServerNode {
                         },
                     );
                 }
+                Payload::HandoffReq {
+                    new_slots,
+                    vnodes,
+                    dest,
+                    dest_slot,
+                } => {
+                    // Elastic grow: re-shard this slot's store under the
+                    // grown ring (rebuilt locally — it is a pure function
+                    // of `(slots, vnodes)`), ship every row the new
+                    // geometry routes to `dest_slot`, and report the
+                    // accounting to the controller.
+                    let grown = Ring::new(new_slots as usize, vnodes as usize);
+                    let total = self.store.len() as u64;
+                    let keys: Vec<(u8, u32)> = self
+                        .store
+                        .keys()
+                        .filter(|&&(m, w)| grown.route(m, w) == dest_slot)
+                        .copied()
+                        .collect();
+                    let moved = keys.len() as u64;
+                    let mut by_matrix: std::collections::HashMap<u8, RowBatch> =
+                        std::collections::HashMap::new();
+                    for key in keys {
+                        if let Some(row) = self.store.remove(&key) {
+                            by_matrix
+                                .entry(key.0)
+                                .or_default()
+                                .push((key.1, RowData::from_dense_auto(&row)));
+                        }
+                    }
+                    for (matrix, rows) in by_matrix {
+                        self.net.send(
+                            self.id,
+                            dest,
+                            Payload::Handoff {
+                                matrix,
+                                rows,
+                                ack_to: env.from,
+                            },
+                        );
+                    }
+                    // Snapshots written from here on record the grown
+                    // geometry (the serving merge validates slot routing
+                    // against it).
+                    self.cfg.meta.n_servers = new_slots;
+                    self.net.send(
+                        self.id,
+                        env.from,
+                        Payload::HandoffAck {
+                            slot: self.slot as u32,
+                            moved,
+                            total,
+                        },
+                    );
+                }
+                Payload::Handoff {
+                    matrix,
+                    rows,
+                    ack_to,
+                } => {
+                    // Rows arriving from a draining slot are absolute
+                    // values for keys this node now owns — install them
+                    // verbatim and receipt the batch.
+                    let received = rows.len() as u64;
+                    for (word, data) in rows {
+                        let width = self.cfg.row_width.max(data.min_width());
+                        self.store
+                            .insert((matrix, word), data.to_dense(width).into_vec());
+                        self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.net.send(
+                        self.id,
+                        ack_to,
+                        Payload::HandoffAck {
+                            slot: self.slot as u32,
+                            moved: received,
+                            total: 0,
+                        },
+                    );
+                }
                 Payload::Control(Control::Kill) => return,
                 Payload::Control(Control::Terminate) => {
                     self.write_snapshot();
@@ -226,21 +306,175 @@ impl ServerNode {
 /// Handle to the running server group: the ring, the slot→node binding,
 /// the freeze flag, and the manager thread.
 pub struct ServerGroup {
-    /// The consistent-hash ring over slots.
-    pub ring: Ring,
-    /// Current slot → physical node binding (failover rebinds entries).
+    /// The consistent-hash ring over slots — shared with every client so
+    /// an elastic grow ([`ServerGroup::grow`]) re-routes live traffic.
+    pub ring: SharedRing,
+    /// Current slot → physical node binding (failover rebinds entries,
+    /// a grow appends the new slot's node).
     pub slots: Arc<RwLock<Vec<NodeId>>>,
-    /// System-wide freeze flag (server failover in progress).
+    /// System-wide freeze flag (server failover / membership change in
+    /// progress).
     pub frozen: Arc<AtomicBool>,
     /// Per-slot stats handles (index = slot; follows the *current* node).
     pub stats: Arc<RwLock<Vec<Arc<ServerStats>>>>,
     /// Manager node id.
     pub manager_id: NodeId,
-    cfg: ServerConfig,
+    /// Shared with the manager thread so failover replacements spawned
+    /// after a grow carry the grown geometry in their snapshot meta.
+    cfg: Arc<RwLock<ServerConfig>>,
     net: SimNet,
     shutdown: Arc<AtomicBool>,
     manager_handle: Option<std::thread::JoinHandle<()>>,
     server_handles: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+/// Accounting returned by [`ServerGroup::grow`]: drain reports from every
+/// pre-existing slot plus arrival receipts from the new slot. Consistent
+/// hashing bounds `rows_moved / rows_total` at ≈`1/(N+1)` — the property
+/// the chaos scenarios assert.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HandoffStats {
+    /// Rows the draining slots shipped to the new slot.
+    pub rows_moved: u64,
+    /// Rows the draining slots owned before the drain.
+    pub rows_total: u64,
+    /// Rows the new slot receipted as installed.
+    pub rows_received: u64,
+    /// Every drain reported and every shipped row was receipted.
+    pub complete: bool,
+}
+
+impl HandoffStats {
+    /// Fraction of owned rows that moved (≈`1/(N+1)` for an N→N+1 grow).
+    pub fn moved_fraction(&self) -> f64 {
+        if self.rows_total == 0 {
+            0.0
+        } else {
+            self.rows_moved as f64 / self.rows_total as f64
+        }
+    }
+}
+
+/// A cloneable elastic-membership handle, detached from the owning
+/// [`ServerGroup`]: every field is shared state, so a chaos-injection
+/// thread can grow the ring *while* the training loop holds the group
+/// (and the session) on another thread.
+#[derive(Clone)]
+pub struct Elastic {
+    ring: SharedRing,
+    slots: Arc<RwLock<Vec<NodeId>>>,
+    frozen: Arc<AtomicBool>,
+    stats: Arc<RwLock<Vec<Arc<ServerStats>>>>,
+    manager_id: NodeId,
+    cfg: Arc<RwLock<ServerConfig>>,
+    net: SimNet,
+    shutdown: Arc<AtomicBool>,
+    server_handles: Arc<std::sync::Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Elastic {
+    /// Current number of logical slots.
+    pub fn n_slots(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    /// The physical node currently bound to `slot`.
+    pub fn slot_node(&self, slot: usize) -> NodeId {
+        self.slots.read().unwrap()[slot]
+    }
+
+    /// Kill the node behind `slot` (fault injection); the manager's
+    /// heartbeat tracking detects the loss and fails the slot over.
+    pub fn kill_slot(&self, slot: usize) {
+        let node = self.slots.read().unwrap()[slot];
+        self.net.kill(node);
+    }
+
+    /// Grow the ring `N → N+1` under load (elastic membership): freeze
+    /// client traffic, spawn the new slot's node, have every existing
+    /// slot drain-and-handoff the rows the grown ring assigns to the new
+    /// slot ([`Payload::HandoffReq`] → [`Payload::Handoff`] →
+    /// [`Payload::HandoffAck`]), publish the grown ring to live clients,
+    /// and thaw. Consistent hashing guarantees keys only ever move *to*
+    /// the new slot, so ≈`1/(N+1)` of owned rows travel — the returned
+    /// [`HandoffStats`] carries the exact accounting.
+    pub fn grow(&self) -> HandoffStats {
+        let (old_n, vnodes, new_cfg) = {
+            let mut cfg = self.cfg.write().unwrap();
+            let old_n = cfg.n_servers;
+            cfg.n_servers += 1;
+            cfg.meta.n_servers = cfg.n_servers as u32;
+            (old_n, cfg.vnodes, cfg.clone())
+        };
+        let new_n = old_n + 1;
+        // Freeze pushes/pulls (clients spin in `wait_unfrozen`) while
+        // ownership moves — the same protocol failover uses — and give
+        // in-flight client traffic a moment to land on the servers.
+        self.frozen.store(true, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Spawn the new slot's node with an empty store.
+        let new_id = self.net.add_node();
+        let st = Arc::new(ServerStats::default());
+        let node = ServerNode {
+            net: self.net.clone(),
+            id: new_id,
+            slot: old_n,
+            manager: self.manager_id,
+            cfg: new_cfg,
+            store: Store::new(),
+            stats: st.clone(),
+            shutdown: self.shutdown.clone(),
+        };
+        self.server_handles
+            .lock()
+            .unwrap()
+            .push(std::thread::spawn(move || node.run()));
+        self.slots.write().unwrap().push(new_id);
+        self.stats.write().unwrap().push(st);
+
+        // Drain-and-handoff from every pre-existing slot, accounted at a
+        // throwaway controller endpoint.
+        let ctl = self.net.add_node();
+        let targets: Vec<NodeId> = self.slots.read().unwrap()[..old_n].to_vec();
+        for &node in &targets {
+            self.net.send(
+                ctl,
+                node,
+                Payload::HandoffReq {
+                    new_slots: new_n as u32,
+                    vnodes: vnodes as u32,
+                    dest: new_id,
+                    dest_slot: old_n as u32,
+                },
+            );
+        }
+        let mut out = HandoffStats::default();
+        let mut drains = 0usize;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (drains < old_n || out.rows_received < out.rows_moved)
+            && Instant::now() < deadline
+        {
+            if let Some(env) = self.net.recv_timeout(ctl, Duration::from_millis(20)) {
+                if let Payload::HandoffAck { slot, moved, total } = env.payload {
+                    if slot as usize == old_n {
+                        out.rows_received += moved;
+                    } else {
+                        drains += 1;
+                        out.rows_moved += moved;
+                        out.rows_total += total;
+                    }
+                }
+            }
+        }
+        out.complete = drains == old_n && out.rows_received == out.rows_moved;
+
+        // Publish the grown ring — live clients route with it on their
+        // next send — then thaw.
+        *self.ring.write().unwrap() = Ring::new(new_n, vnodes);
+        self.frozen.store(false, Ordering::SeqCst);
+        out
+    }
 }
 
 impl ServerGroup {
@@ -288,6 +522,8 @@ impl ServerGroup {
         let slots = Arc::new(RwLock::new(slot_ids));
         let stats = Arc::new(RwLock::new(stats));
         let frozen = Arc::new(AtomicBool::new(false));
+        let ring = Arc::new(RwLock::new(Ring::new(cfg.n_servers, cfg.vnodes)));
+        let cfg = Arc::new(RwLock::new(cfg));
 
         // The server manager: liveness tracking + slot failover (§5.4).
         let manager_handle = {
@@ -305,6 +541,11 @@ impl ServerGroup {
                     if shutdown.load(Ordering::Relaxed) {
                         return;
                     }
+                    // An elastic grow appends slots at runtime — start
+                    // tracking their liveness as they appear.
+                    while last_seen.len() < slots.read().unwrap().len() {
+                        last_seen.push(Instant::now());
+                    }
                     // Drain heartbeats.
                     while let Some(env) = net.recv_timeout(manager_id, Duration::from_millis(2)) {
                         if let Payload::Heartbeat = env.payload {
@@ -313,7 +554,9 @@ impl ServerGroup {
                                 s.iter().position(|&id| id == env.from)
                             };
                             if let Some(slot) = slot_of {
-                                last_seen[slot] = Instant::now();
+                                if slot < last_seen.len() {
+                                    last_seen[slot] = Instant::now();
+                                }
                             }
                         }
                     }
@@ -321,11 +564,13 @@ impl ServerGroup {
                     // beyond the heartbeat cadence) gets a fresh node.
                     for slot in 0..last_seen.len() {
                         let node = slots.read().unwrap()[slot];
+                        let liveness = cfg.read().unwrap().liveness_timeout;
                         let lost = net.is_dead(node)
-                            || last_seen[slot].elapsed() > cfg.liveness_timeout;
+                            || last_seen[slot].elapsed() > liveness;
                         if !lost {
                             continue;
                         }
+                        let cfg = cfg.read().unwrap().clone();
                         // Make sure the old binding can't keep serving
                         // (a merely-slow node would split the slot).
                         net.kill(node);
@@ -342,7 +587,7 @@ impl ServerGroup {
                             id: new_id,
                             slot,
                             manager: manager_id,
-                            cfg: cfg.clone(),
+                            cfg,
                             store,
                             stats: st.clone(),
                             shutdown: shutdown.clone(),
@@ -361,7 +606,7 @@ impl ServerGroup {
         };
 
         ServerGroup {
-            ring: Ring::new(cfg.n_servers, cfg.vnodes),
+            ring,
             slots,
             frozen,
             stats,
@@ -372,6 +617,28 @@ impl ServerGroup {
             manager_handle: Some(manager_handle),
             server_handles: handles,
         }
+    }
+
+    /// A detached, cloneable [`Elastic`] membership handle over this
+    /// group's shared state — grow/kill the ring from other threads
+    /// (chaos injection) while the group itself stays owned here.
+    pub fn elastic(&self) -> Elastic {
+        Elastic {
+            ring: self.ring.clone(),
+            slots: self.slots.clone(),
+            frozen: self.frozen.clone(),
+            stats: self.stats.clone(),
+            manager_id: self.manager_id,
+            cfg: self.cfg.clone(),
+            net: self.net.clone(),
+            shutdown: self.shutdown.clone(),
+            server_handles: self.server_handles.clone(),
+        }
+    }
+
+    /// Grow the ring `N → N+1` under load — see [`Elastic::grow`].
+    pub fn grow(&self) -> HandoffStats {
+        self.elastic().grow()
     }
 
     /// Resolve the physical node currently bound to a slot.
@@ -473,7 +740,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let slot = group.ring.route(0, 7);
+        let slot = group.ring.read().unwrap().route(0, 7);
         let server = group.node_for_slot(slot);
         net.send(
             me,
@@ -574,6 +841,64 @@ mod tests {
         assert_eq!(meta.unwrap().run_id, 0x5E55, "run id must stamp checkpoints");
         group.shutdown();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Elastic grow: push rows across 2 slots, grow to 3, and verify the
+    /// handoff accounting (≈1/3 of rows move, all receipted) plus that
+    /// every row is still pullable from its new owner under the grown
+    /// ring.
+    #[test]
+    fn grow_hands_off_exactly_the_new_slots_rows() {
+        let net = fast_net();
+        let me = net.add_node();
+        let group = ServerGroup::spawn(
+            &net,
+            ServerConfig {
+                n_servers: 2,
+                row_width: 2,
+                ..Default::default()
+            },
+        );
+        let vocab = 600u32;
+        for w in 0..vocab {
+            let slot = group.ring.read().unwrap().route(0, w);
+            let server = group.node_for_slot(slot);
+            net.send(
+                me,
+                server,
+                Payload::Push {
+                    matrix: 0,
+                    rows: vec![(w, RowData::Sparse(vec![(0, w as i32 + 1)]))],
+                },
+            );
+        }
+        std::thread::sleep(Duration::from_millis(60));
+
+        let stats = group.grow();
+        assert!(stats.complete, "handoff did not settle: {stats:?}");
+        assert_eq!(stats.rows_total, vocab as u64, "every pushed row counted");
+        assert_eq!(stats.rows_received, stats.rows_moved, "receipts must match");
+        let frac = stats.moved_fraction();
+        let expect = 1.0 / 3.0;
+        assert!(
+            frac > 0.35 * expect && frac < 2.5 * expect,
+            "moved fraction {frac:.3} vs expected ≈{expect:.3}"
+        );
+        assert_eq!(group.ring.read().unwrap().slots(), 3);
+        assert!(!group.frozen.load(Ordering::SeqCst), "must thaw after grow");
+
+        // Every row is served by its (possibly new) owner, value intact.
+        for w in (0..vocab).step_by(7) {
+            let slot = group.ring.read().unwrap().route(0, w);
+            let server = group.node_for_slot(slot);
+            let rows = pull(&net, me, server, 0, vec![w]);
+            assert_eq!(
+                rows[0].1.to_dense(2)[0],
+                w as i32 + 1,
+                "row {w} lost in handoff (slot {slot})"
+            );
+        }
+        group.shutdown();
     }
 
     #[test]

@@ -153,11 +153,13 @@ impl RowData {
 
 /// A word's unflushed deltas: short list first, dense past the spill
 /// threshold. Entries are unsorted; zero deltas are removed eagerly so
-/// the linear probe stays `O(k_w)`.
+/// the linear probe stays `O(k_w)`. The dense form tracks its non-zero
+/// count so [`DeltaRow::nnz`] — and with it the matrix's live
+/// `pending` counter — stays `O(1)` in both forms.
 #[derive(Clone, Debug)]
 enum DeltaRow {
     Sparse(Vec<(u32, i32)>),
-    Dense(Box<[i32]>),
+    Dense { row: Box<[i32]>, nnz: usize },
 }
 
 impl DeltaRow {
@@ -187,19 +189,29 @@ impl DeltaRow {
                         dense[t as usize] = d;
                     }
                     dense[topic] += delta;
-                    *self = DeltaRow::Dense(dense);
+                    let nnz = dense.iter().filter(|&&x| x != 0).count();
+                    *self = DeltaRow::Dense { row: dense, nnz };
                 } else {
                     v.push((topic as u32, delta));
                 }
             }
-            DeltaRow::Dense(r) => r[topic] += delta,
+            DeltaRow::Dense { row, nnz } => {
+                let before = row[topic];
+                row[topic] += delta;
+                if before == 0 && row[topic] != 0 {
+                    *nnz += 1;
+                } else if before != 0 && row[topic] == 0 {
+                    *nnz -= 1;
+                }
+            }
         }
     }
 
+    #[inline]
     fn nnz(&self) -> usize {
         match self {
             DeltaRow::Sparse(v) => v.len(),
-            DeltaRow::Dense(r) => r.iter().filter(|&&v| v != 0).count(),
+            DeltaRow::Dense { nnz, .. } => *nnz,
         }
     }
 }
@@ -227,6 +239,11 @@ pub struct CountMatrix {
     /// Unflushed local updates per touched row. Entries persist (cleared,
     /// not removed) across drains so the token loop never reallocates.
     deltas: HashMap<u32, DeltaRow>,
+    /// Live count of delta records with non-zero content, maintained on
+    /// every empty↔non-empty record transition — [`pending_rows`]
+    /// (Self::pending_rows) reads it in `O(1)` instead of scanning the
+    /// touched vocabulary.
+    pending: usize,
     /// Sparse→dense spill threshold for delta records.
     spill: usize,
     /// Reusable decode buffer for sparse pulls.
@@ -243,6 +260,7 @@ impl CountMatrix {
             smoothing: 0.0,
             inv_denom: vec![f64::INFINITY; k],
             deltas: HashMap::new(),
+            pending: 0,
             spill: (k / 4).max(4),
             pull_scratch: Vec::new(),
         }
@@ -338,10 +356,18 @@ impl CountMatrix {
         row[topic] += delta;
         self.bump_total(topic, delta as i64);
         let (k, spill) = (self.k, self.spill);
-        self.deltas
+        let rec = self
+            .deltas
             .entry(word)
-            .or_insert_with(|| DeltaRow::new(spill))
-            .add(topic, delta, k, spill);
+            .or_insert_with(|| DeltaRow::new(spill));
+        let was_empty = rec.nnz() == 0;
+        rec.add(topic, delta, k, spill);
+        let now_empty = rec.nnz() == 0;
+        if was_empty && !now_empty {
+            self.pending += 1;
+        } else if !was_empty && now_empty {
+            self.pending -= 1;
+        }
     }
 
     /// Apply a local move *without* recording a delta (used for local-only
@@ -381,22 +407,32 @@ impl CountMatrix {
                         out.push((w, RowData::Dense(dense.into_boxed_slice())));
                     }
                 }
-                DeltaRow::Dense(r) => {
-                    let nnz = r.iter().filter(|&&x| x != 0).count();
-                    if nnz == 0 {
+                DeltaRow::Dense { row, nnz } => {
+                    if *nnz == 0 {
                         continue;
                     }
-                    out.push((w, RowData::from_dense_auto(r)));
-                    r.iter_mut().for_each(|x| *x = 0);
+                    out.push((w, RowData::from_dense_auto(row)));
+                    row.iter_mut().for_each(|x| *x = 0);
+                    *nnz = 0;
                 }
             }
         }
+        self.pending = 0;
         out.sort_unstable_by_key(|&(w, _)| w);
         out
     }
 
-    /// Number of rows currently carrying unflushed deltas.
+    /// Number of rows currently carrying unflushed deltas — `O(1)`,
+    /// served from the live counter maintained on every empty↔non-empty
+    /// record transition (it used to scan the touched vocabulary, which
+    /// every filter-retain push paid for).
     pub fn pending_rows(&self) -> usize {
+        self.pending
+    }
+
+    /// The `O(touched-vocab)` scan [`pending_rows`](Self::pending_rows)
+    /// replaced — kept as the oracle for the counter's regression test.
+    pub fn pending_rows_scan(&self) -> usize {
         self.deltas.values().filter(|d| d.nnz() > 0).count()
     }
 
@@ -408,6 +444,7 @@ impl CountMatrix {
             .deltas
             .entry(word)
             .or_insert_with(|| DeltaRow::new(spill));
+        let was_empty = rec.nnz() == 0;
         match row {
             RowData::Sparse(es) => {
                 for (t, v) in es {
@@ -421,6 +458,12 @@ impl CountMatrix {
                     }
                 }
             }
+        }
+        let now_empty = rec.nnz() == 0;
+        if was_empty && !now_empty {
+            self.pending += 1;
+        } else if !was_empty && now_empty {
+            self.pending -= 1;
         }
     }
 
@@ -450,7 +493,7 @@ impl CountMatrix {
                     self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
                 }
             }
-            Some(DeltaRow::Dense(r)) => {
+            Some(DeltaRow::Dense { row: r, .. }) => {
                 for (t, &dv) in r.iter().enumerate() {
                     if dv != 0 {
                         row[t] += dv;
@@ -658,6 +701,44 @@ mod tests {
         assert_eq!(m.pending_rows(), 1);
         let d = m.drain_deltas();
         assert_eq!(&*d[0].1.to_dense(4), &[0, 2, 5, 0]);
+    }
+
+    /// The O(1) pending counter agrees with the scan it replaced across
+    /// every mutation path: inc (including cancel-to-zero), drain,
+    /// requeue, and the sparse→dense spill.
+    #[test]
+    fn pending_counter_matches_scan() {
+        let mut m = CountMatrix::new(40, 16);
+        let mut rng = crate::util::rng::Rng::new(11);
+        for step in 0..2000 {
+            let w = rng.below(40) as u32;
+            let t = rng.below(16);
+            let d = if rng.coin(0.5) { 1 } else { -1 };
+            m.inc(w, t, d);
+            if step % 97 == 0 {
+                let drained = m.drain_deltas();
+                assert_eq!(m.pending_rows(), 0, "drain must zero the counter");
+                // Filter-retain path: requeue a few drained rows.
+                for (w, row) in drained.into_iter().take(3) {
+                    m.requeue_delta(w, row);
+                }
+            }
+            assert_eq!(m.pending_rows(), m.pending_rows_scan(), "step {step}");
+        }
+
+        // Spill to dense, then cancel every cell back to zero: the
+        // counter must follow the record through both transitions.
+        let mut m = CountMatrix::new(4, 64);
+        for t in 0..40 {
+            m.inc(1, t, 1);
+            assert_eq!(m.pending_rows(), m.pending_rows_scan());
+        }
+        assert_eq!(m.pending_rows(), 1);
+        for t in 0..40 {
+            m.inc(1, t, -1);
+            assert_eq!(m.pending_rows(), m.pending_rows_scan());
+        }
+        assert_eq!(m.pending_rows(), 0, "dense record cancelled to empty");
     }
 
     #[test]

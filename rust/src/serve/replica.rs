@@ -93,8 +93,10 @@ impl Replica {
             "replica {} dropped mid-reload (injected fault)",
             self.id
         );
-        // The ring is fixed for the set's lifetime, so the outgoing
-        // resident set contains only words this replica still owns.
+        // Reloads keep the set's ring (only a resize changes it, and a
+        // resize builds fresh replicas rather than preparing these), so
+        // the outgoing resident set contains only words this replica
+        // still owns.
         slice.prewarm_from(outgoing);
         *self.staged.lock().unwrap() = slice.clone();
         Ok(slice)

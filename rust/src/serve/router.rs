@@ -34,6 +34,14 @@
 //! commit; the set keeps serving the old generation with zero dropped
 //! requests, and a later successful reload bumps the set-wide
 //! generation.
+//!
+//! Membership changes ride the same generation machinery
+//! ([`ReplicaSet::resize`]): a grow or shrink re-partitions the
+//! vocabulary over a fresh router, re-slices the stores, and commits the
+//! new topology as a new generation. Because every [`SetGeneration`]
+//! carries its **own** router, a micro-batch that pinned the old
+//! generation keeps scattering over the old membership until it
+//! finishes — resizing drops zero in-flight queries.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -190,8 +198,10 @@ impl PinnedGeneration for SetGeneration {
 /// re-partitions the merged statistics over its own ring, so any replica
 /// count can serve any snapshot directory.
 pub struct ReplicaSet {
-    router: Arc<QueryRouter>,
-    replicas: Vec<Replica>,
+    /// Current membership's router. Swapped (with `replicas`, under the
+    /// same commit) by [`resize`](Self::resize); reloads reuse it.
+    router: RwLock<Arc<QueryRouter>>,
+    replicas: RwLock<Vec<Arc<Replica>>>,
     current: RwLock<Arc<SetGeneration>>,
     /// Next set-wide generation number to hand out.
     next_gen: AtomicU64,
@@ -247,10 +257,10 @@ impl ReplicaSet {
             .into_iter()
             .map(Arc::new)
             .collect();
-        let replicas_vec: Vec<Replica> = models
+        let replicas_vec: Vec<Arc<Replica>> = models
             .iter()
             .enumerate()
-            .map(|(r, m)| Replica::new(r as u32, m.clone()))
+            .map(|(r, m)| Arc::new(Replica::new(r as u32, m.clone())))
             .collect();
         Ok(Arc::new(ReplicaSet {
             current: RwLock::new(Arc::new(SetGeneration {
@@ -258,27 +268,30 @@ impl ReplicaSet {
                 router: router.clone(),
                 models,
             })),
-            router,
-            replicas: replicas_vec,
+            router: RwLock::new(router),
+            replicas: RwLock::new(replicas_vec),
             next_gen: AtomicU64::new(2),
             cache_bytes,
             dir: Mutex::new(None),
         }))
     }
 
-    /// Number of replicas in the set.
+    /// Number of replicas in the current membership.
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.replicas.read().unwrap().len()
     }
 
-    /// One replica, for stats and fault injection (panics on a bad id).
-    pub fn replica(&self, id: usize) -> &Replica {
-        &self.replicas[id]
+    /// One replica of the current membership, for stats and fault
+    /// injection (panics on a bad id).
+    pub fn replica(&self, id: usize) -> Arc<Replica> {
+        self.replicas.read().unwrap()[id].clone()
     }
 
-    /// The vocabulary router (fixed for the set's lifetime).
-    pub fn router(&self) -> &QueryRouter {
-        &self.router
+    /// The current membership's vocabulary router. Reloads keep it;
+    /// [`resize`](Self::resize) replaces it. Generations pin their own
+    /// copy, so holders of a [`SetGeneration`] never observe the swap.
+    pub fn router(&self) -> Arc<QueryRouter> {
+        self.router.read().unwrap().clone()
     }
 
     /// The committed generation. Hold the result for the duration of a
@@ -321,6 +334,60 @@ impl ReplicaSet {
         // dir would otherwise rebuild every replica each poll cycle).
         // Every committed generation passed this same check, so the
         // commit below only needs the monotonicity guard.
+        Self::ensure_compatible(&outgoing, &meta)?;
+        // Snapshot the membership once: a concurrent resize commits a
+        // newer generation and the monotonicity guard below discards
+        // this (now stale-topology) load.
+        let router = self.router();
+        let replicas: Vec<Arc<Replica>> = self.replicas.read().unwrap().clone();
+        // One shared scan builds every replica's next slice; each replica
+        // then prepares (fault check + pre-warm + stage) individually.
+        let slices = ServingModel::slices_from_stores(
+            meta,
+            stores,
+            self.cache_bytes,
+            replicas.len(),
+            &|w| router.owner(w),
+        )
+        .map_err(|e| {
+            anyhow::anyhow!(
+                "set reload aborted (still serving generation {}): {e}",
+                outgoing.generation
+            )
+        })?;
+        let mut fresh = Vec::with_capacity(replicas.len());
+        for ((r, replica), slice) in replicas.iter().enumerate().zip(slices) {
+            let slice = replica
+                .prepare(Arc::new(slice), &outgoing.models[r])
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "set reload aborted (still serving generation {}): {e}",
+                        outgoing.generation
+                    )
+                })?;
+            fresh.push(slice);
+        }
+        // Commit set-wide: one atomic swap publishes every staged slice.
+        let generation = self.next_gen.fetch_add(1, Ordering::SeqCst);
+        let next = Arc::new(SetGeneration {
+            generation,
+            router,
+            models: fresh,
+        });
+        let mut cur = self.current.write().unwrap();
+        anyhow::ensure!(
+            generation > cur.generation,
+            "set reload superseded: generation {} was committed \
+             concurrently and is newer; this load was discarded",
+            cur.generation
+        );
+        *cur = next;
+        Ok(generation)
+    }
+
+    /// Refuse a snapshot whose family or shape cannot replace what the
+    /// set is serving (shared by reloads and resizes).
+    fn ensure_compatible(outgoing: &SetGeneration, meta: &SnapshotMeta) -> Result<()> {
         let incoming = ModelKind::parse(&meta.model).ok_or_else(|| {
             anyhow::anyhow!("snapshot records unknown model family {:?}", meta.model)
         })?;
@@ -338,50 +405,81 @@ impl ReplicaSet {
             outgoing.models[0].k(),
             meta.k
         );
-        // One shared scan builds every replica's next slice; each replica
-        // then prepares (fault check + pre-warm + stage) individually.
-        let router = &self.router;
-        let slices = ServingModel::slices_from_stores(
-            meta,
-            stores,
-            self.cache_bytes,
-            self.replicas.len(),
-            &|w| router.owner(w),
-        )
-        .map_err(|e| {
-            anyhow::anyhow!(
-                "set reload aborted (still serving generation {}): {e}",
-                outgoing.generation
-            )
-        })?;
-        let mut fresh = Vec::with_capacity(self.replicas.len());
-        for ((r, replica), slice) in self.replicas.iter().enumerate().zip(slices) {
-            let slice = replica
-                .prepare(Arc::new(slice), &outgoing.models[r])
-                .map_err(|e| {
-                    anyhow::anyhow!(
-                        "set reload aborted (still serving generation {}): {e}",
-                        outgoing.generation
-                    )
-                })?;
-            fresh.push(slice);
-        }
-        // Commit set-wide: one atomic swap publishes every staged slice.
+        Ok(())
+    }
+
+    /// Change the set's membership to `replicas` replicas (grow or
+    /// shrink) from already-decoded stores, committing the new topology
+    /// as a new generation.
+    ///
+    /// The vocabulary is re-partitioned over a fresh consistent-hash
+    /// router — a grow `N → N+1` re-homes only ≈`1/(N+1)` of the words —
+    /// and fresh [`Replica`]s are built with cold alias caches (ownership
+    /// changed, so caches refill on demand rather than pre-warm).
+    /// Queries in flight keep the [`SetGeneration`] they pinned, which
+    /// scatters over the *old* membership until the micro-batch
+    /// finishes: a resize never drops a query. Returns the new set
+    /// generation.
+    pub fn resize_with_stores(
+        &self,
+        meta: SnapshotMeta,
+        stores: &[Store],
+        replicas: usize,
+    ) -> Result<u64> {
+        anyhow::ensure!(replicas >= 1, "a replica set needs at least one replica");
+        let outgoing = self.current();
+        Self::ensure_compatible(&outgoing, &meta)?;
+        let router = Arc::new(QueryRouter::new(replicas));
+        let models: Vec<Arc<ServingModel>> =
+            ServingModel::slices_from_stores(meta, stores, self.cache_bytes, replicas, &|w| {
+                router.owner(w)
+            })
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "resize aborted (still serving generation {} with {} replicas): {e}",
+                    outgoing.generation,
+                    outgoing.models.len()
+                )
+            })?
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        let fresh: Vec<Arc<Replica>> = models
+            .iter()
+            .enumerate()
+            .map(|(r, m)| Arc::new(Replica::new(r as u32, m.clone())))
+            .collect();
         let generation = self.next_gen.fetch_add(1, Ordering::SeqCst);
         let next = Arc::new(SetGeneration {
             generation,
-            router: self.router.clone(),
-            models: fresh,
+            router: router.clone(),
+            models,
         });
+        // Commit the topology and the generation under the same write
+        // lock so `router()`/`replica()` always describe the committed
+        // generation.
         let mut cur = self.current.write().unwrap();
         anyhow::ensure!(
             generation > cur.generation,
-            "set reload superseded: generation {} was committed \
-             concurrently and is newer; this load was discarded",
+            "resize superseded: generation {} was committed concurrently \
+             and is newer; this resize was discarded",
             cur.generation
         );
         *cur = next;
+        *self.router.write().unwrap() = router;
+        *self.replicas.write().unwrap() = fresh;
         Ok(generation)
+    }
+
+    /// [`resize_with_stores`](Self::resize_with_stores) re-slicing the
+    /// snapshot directory backing this set (the live grow/shrink path
+    /// for dir-loaded sets).
+    pub fn resize(&self, replicas: usize) -> Result<u64> {
+        let dir = self
+            .dir()
+            .ok_or_else(|| anyhow::anyhow!("replica set has no backing snapshot directory"))?;
+        let (meta, stores) = ServingModel::load_dir_stores(&dir)?;
+        self.resize_with_stores(meta, &stores, replicas)
     }
 
     /// Reload a (presumably newer) snapshot directory into every replica
@@ -499,13 +597,60 @@ mod tests {
     }
 
     #[test]
+    fn resize_commits_new_membership_and_keeps_pinned_generations() {
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 2, 1 << 20).unwrap();
+        let doc: Vec<u32> = (0..30).map(|i| (i % 20) as u32).collect();
+        let cfg = InferConfig::default();
+        let single =
+            ServingModel::from_stores(toy_meta(), toy_stores(50), 1 << 20).unwrap();
+        let want = infer_doc(&single, &doc, &cfg, &mut Rng::new(7));
+
+        // Pin the 2-replica generation, as an in-flight micro-batch would.
+        let pinned = set.current();
+
+        let g = set.resize_with_stores(toy_meta(), &toy_stores(50), 3).unwrap();
+        assert_eq!(g, 2);
+        assert_eq!(set.replicas(), 3);
+        assert_eq!(set.router().replicas(), 3);
+
+        // The pinned generation still scatters over the old 2-way
+        // membership — nothing in flight is dropped by the resize.
+        let old = pinned.infer_doc(&doc, &cfg, &mut Rng::new(7));
+        assert_eq!(old.generation, 1);
+        assert!(old.served_by.iter().all(|&r| r < 2), "{:?}", old.served_by);
+        for (x, y) in want.theta.iter().zip(old.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "pinned θ diverged");
+        }
+        // The grown membership answers bit-identically to the unsliced
+        // model — routed correctness is invariant to the replica count.
+        let grown = set.infer(&doc, &cfg, &mut Rng::new(7));
+        assert_eq!(grown.generation, 2);
+        for (x, y) in want.theta.iter().zip(grown.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "resized θ diverged");
+        }
+
+        // Shrink to one replica: everything routes to replica 0.
+        let g = set.resize_with_stores(toy_meta(), &toy_stores(50), 1).unwrap();
+        assert_eq!(g, 3);
+        assert_eq!(set.replicas(), 1);
+        let solo = set.infer(&doc, &cfg, &mut Rng::new(7));
+        assert_eq!(solo.served_by, vec![0]);
+        for (x, y) in want.theta.iter().zip(solo.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "shrunk θ diverged");
+        }
+    }
+
+    #[test]
     fn install_refuses_family_and_shape_changes() {
         let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 2, 1 << 20).unwrap();
         let mut wide = toy_meta();
         wide.k = 3;
         let mut s = Store::new();
         s.insert((0, 1), vec![1, 2, 3]);
-        assert!(set.install_stores(wide, &[s]).is_err());
+        assert!(set.install_stores(wide.clone(), &[s.clone()]).is_err());
+        // Resizes apply the same family/shape guard.
+        assert!(set.resize_with_stores(wide, &[s], 3).is_err());
         assert_eq!(set.generation(), 1);
+        assert_eq!(set.replicas(), 2, "refused resize must not change membership");
     }
 }

@@ -1,0 +1,162 @@
+//! Snapshot format compatibility matrix — one table-driven test.
+//!
+//! Three snapshot formats exist on disk: v1 (`HPLVMSNP`, store body
+//! only, no metadata), v2 (`HPLVMSN2`, hyperparameter header, no table
+//! section), v3 (`HPLVMSN3`, + `run_id` + optional table-side
+//! hyperparameters). Which combinations serve is a contract the
+//! individual PR-era tests asserted piecemeal; this file pins the whole
+//! matrix in one place:
+//!
+//! | format | LDA    | PDP    | HDP    |
+//! |--------|--------|--------|--------|
+//! | v1     | refuse | refuse | refuse | (no hyperparameters at all)
+//! | v2     | serve  | refuse | refuse | (PDP/HDP need the v3 table section)
+//! | v3     | serve  | serve  | serve  |
+//!
+//! A refused load must also say *why* in a way that points at the fix
+//! (re-train), so each refusal asserts its diagnostic substring.
+
+use hplvm::ps::snapshot::{self, SnapshotMeta, Store, TableHyper};
+use hplvm::serve::ServingModel;
+
+fn synth_meta(model: &str, k: u32, vocab: u32) -> SnapshotMeta {
+    SnapshotMeta {
+        model: model.to_string(),
+        k,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: vocab,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0xFEED,
+        tables: None,
+    }
+}
+
+/// One synthetic single-slot statistics set per family (same shapes the
+/// serving tests use: LDA word–topic only; PDP customers + tables; HDP
+/// word–topic + root sticks).
+fn family_fixtures() -> Vec<(&'static str, SnapshotMeta, Store)> {
+    const V: u32 = 48;
+    let mut out = Vec::new();
+
+    let mut lda = Store::new();
+    for w in 0..V {
+        let mut row = vec![0i32; 4];
+        row[(w / 12) as usize] = 60 + (w % 5) as i32;
+        lda.insert((0, w), row);
+    }
+    out.push(("lda", synth_meta("AliasLDA", 4, V), lda));
+
+    let mut pdp = Store::new();
+    for w in 0..V {
+        let t = (w % 3) as usize;
+        let mut m_row = vec![0i32; 3];
+        let mut s_row = vec![0i32; 3];
+        m_row[t] = 40 + (w % 4) as i32;
+        s_row[t] = 4 + (w % 3) as i32;
+        pdp.insert((0, w), m_row);
+        pdp.insert((1, w), s_row);
+    }
+    let mut pdp_meta = synth_meta("AliasPDP", 3, V);
+    pdp_meta.tables = Some(TableHyper {
+        discount: 0.1,
+        concentration: 10.0,
+        root: 0.5,
+    });
+    out.push(("pdp", pdp_meta, pdp));
+
+    let mut hdp = Store::new();
+    for w in 0..V {
+        let mut row = vec![0i32; 4];
+        row[(w % 3) as usize] = 50 + (w % 6) as i32;
+        hdp.insert((0, w), row);
+    }
+    hdp.insert((1, 0), vec![9, 6, 3, 0]);
+    let mut hdp_meta = synth_meta("AliasHDP", 4, V);
+    hdp_meta.tables = Some(TableHyper {
+        discount: 0.0,
+        concentration: 1.0,
+        root: 1.0,
+    });
+    out.push(("hdp", hdp_meta, hdp));
+    out
+}
+
+#[test]
+fn format_family_matrix_accepts_and_refuses_exactly_as_documented() {
+    let base = std::env::temp_dir().join(format!("hplvm_compat_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    for (family, meta, store) in family_fixtures() {
+        for version in ["v1", "v2", "v3"] {
+            let dir = base.join(format!("{family}_{version}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            let bytes = match version {
+                // v1: store body only — no header to interpret.
+                "v1" => snapshot::encode_store(&store),
+                // v2: hyperparameter header, table section impossible
+                // (the encoder ignores meta.tables — v2 had nowhere to
+                // put it), which is exactly what makes PDP/HDP
+                // unservable from v2 files.
+                "v2" => snapshot::encode_store_meta_v2(&store, &meta),
+                _ => snapshot::encode_store_meta(&store, &meta),
+            };
+            snapshot::write_atomic(&dir.join(snapshot::slot_snapshot_name(0)), &bytes)
+                .unwrap();
+
+            // Round-trip sanity: every format still *decodes* — the
+            // refusals below are serving-layer policy, not parse errors.
+            let (decoded_meta, decoded_store) =
+                snapshot::decode_store_meta(&bytes).expect("all formats must decode");
+            assert_eq!(decoded_store, store, "{family} {version} store round-trip");
+            match version {
+                "v1" => assert!(decoded_meta.is_none(), "v1 carries no header"),
+                "v2" => {
+                    let m = decoded_meta.unwrap();
+                    assert_eq!(m.model, meta.model);
+                    assert_eq!(m.run_id, 0, "v2 predates run ids");
+                    assert!(m.tables.is_none(), "v2 has no table section");
+                }
+                _ => {
+                    let m = decoded_meta.unwrap();
+                    assert_eq!(m.run_id, meta.run_id);
+                    assert_eq!(m.tables, meta.tables);
+                }
+            }
+
+            let serves = matches!((version, family), ("v3", _) | ("v2", "lda"));
+            match (serves, ServingModel::load_dir(&dir)) {
+                (true, Ok(model)) => {
+                    assert_eq!(model.kind().family_name(), family);
+                    assert!(model.total_tokens() > 0, "{family} {version}");
+                    assert_eq!(
+                        model.meta().tables.is_some(),
+                        version == "v3" && family != "lda",
+                    );
+                }
+                (true, Err(e)) => {
+                    panic!("{family} {version} must serve, got: {e:#}")
+                }
+                (false, Ok(_)) => panic!("{family} {version} must be refused"),
+                (false, Err(e)) => {
+                    let msg = format!("{e:#}");
+                    let needle = if version == "v1" {
+                        // No hyperparameters at all.
+                        "predate the v2 format"
+                    } else {
+                        // v2 PDP/HDP: counts but no table hyperparameters.
+                        "predates format v3"
+                    };
+                    assert!(
+                        msg.contains(needle) && msg.contains("re-train"),
+                        "{family} {version} refusal must explain itself: {msg}"
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
