@@ -1,0 +1,187 @@
+//! Wire-serving throughput bench. Spins up the framed-protocol reactor
+//! server ([`hplvm::net::WireServer`]) over a synthetic in-memory model
+//! on loopback TCP, drives it with the load generator at 1, 8, and 64
+//! concurrent connections (closed loop), prints a summary table, AND
+//! writes `BENCH_serve_wire.json` at the repository root so the repo
+//! carries a machine-readable wire-serving trajectory across PRs, next
+//! to `BENCH_train.json` and `BENCH_sampler.json`.
+//!
+//! Regenerate with `cargo bench --bench serve_wire_json`.
+
+use hplvm::bench;
+use hplvm::net::{loadgen, ListenAddr, LoadgenConfig, ModelInfo, WireConfig, WireServer};
+use hplvm::ps::snapshot::{SnapshotMeta, Store};
+use hplvm::serve::{ServingHandle, ServingModel};
+use hplvm::util::json::Json;
+
+const VOCAB: u32 = 5_000;
+const K: u32 = 64;
+const REACTORS: usize = 2;
+const DOC_LEN: f64 = 24.0;
+const TOTAL_REQUESTS: usize = 2_048;
+
+/// Synthetic frozen statistics: every word observed, mass concentrated
+/// on a couple of topics per word so the alias tables are non-trivial.
+fn synthetic_model() -> ServingModel {
+    let mut store = Store::new();
+    for w in 0..VOCAB {
+        let mut row = vec![0i32; K as usize];
+        row[(w % K) as usize] = 40 + (w % 13) as i32;
+        row[((w / 7) % K) as usize] += 15;
+        store.insert((0, w), row);
+    }
+    let meta = SnapshotMeta {
+        model: "AliasLDA".to_string(),
+        k: K,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: VOCAB,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0,
+        tables: None,
+    };
+    ServingModel::from_stores(meta, vec![store], 64 << 20).expect("synthetic model")
+}
+
+struct Panel {
+    connections: usize,
+    requests_per_conn: usize,
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    max_ms: f64,
+    server_p50_ms: f64,
+    server_p99_ms: f64,
+    errors: u64,
+}
+
+fn main() {
+    println!("# Wire-serving throughput (BENCH_serve_wire.json)");
+
+    let handle = ServingHandle::from_model(synthetic_model());
+    let info = ModelInfo {
+        family: handle.model().kind().family_name().to_string(),
+        k: K,
+        vocab: VOCAB,
+    };
+    let server = WireServer::start(
+        handle.clone(),
+        info,
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig {
+            reactors: REACTORS,
+            ..WireConfig::default()
+        },
+    )
+    .expect("wire server");
+    let addr = server.local_addr().to_string();
+
+    let mut panels = Vec::new();
+    for connections in [1usize, 8, 64] {
+        let requests = (TOTAL_REQUESTS / connections).max(16);
+        // One warm-up pass populates the alias cache so every panel
+        // measures the steady state, not the first panel's cold builds.
+        let lg = LoadgenConfig {
+            connections,
+            requests,
+            window: 4,
+            vocab: VOCAB as usize,
+            doc_len: DOC_LEN,
+            seed: 42 + connections as u64,
+            ..LoadgenConfig::default()
+        };
+        if connections == 1 {
+            loadgen::run(&addr, &lg).expect("warm-up");
+        }
+        let report = loadgen::run(&addr, &lg).expect("loadgen");
+        assert_eq!(
+            report.answered as usize,
+            connections * requests,
+            "bench run dropped requests ({} errors, {} timed out)",
+            report.errors,
+            report.timed_out,
+        );
+        panels.push(Panel {
+            connections,
+            requests_per_conn: requests,
+            qps: report.qps,
+            p50_ms: report.p50_ms,
+            p99_ms: report.p99_ms,
+            max_ms: report.max_ms,
+            server_p50_ms: report.server_p50_ms,
+            server_p99_ms: report.server_p99_ms,
+            errors: report.errors,
+        });
+    }
+    server.shutdown();
+
+    bench::section(&format!(
+        "wire serving, {REACTORS} reactors, V={VOCAB} K={K}, closed loop (window 4)"
+    ));
+    bench::table(
+        &["conns", "reqs/conn", "qps", "p50 ms", "p99 ms", "max ms"],
+        &panels
+            .iter()
+            .map(|p| {
+                vec![
+                    p.connections.to_string(),
+                    p.requests_per_conn.to_string(),
+                    format!("{:.0}", p.qps),
+                    format!("{:.3}", p.p50_ms),
+                    format!("{:.3}", p.p99_ms),
+                    format!("{:.3}", p.max_ms),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serve_wire_json".into())),
+        (
+            "regenerate",
+            Json::Str("cargo bench --bench serve_wire_json".into()),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("vocab", Json::Num(VOCAB as f64)),
+                ("k", Json::Num(K as f64)),
+                ("reactors", Json::Num(REACTORS as f64)),
+                ("doc_len_mean", Json::Num(DOC_LEN)),
+                ("window", Json::Num(4.0)),
+            ]),
+        ),
+        (
+            "panels",
+            Json::Arr(
+                panels
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("connections", Json::Num(p.connections as f64)),
+                            (
+                                "requests_per_conn",
+                                Json::Num(p.requests_per_conn as f64),
+                            ),
+                            ("qps", Json::Num(p.qps)),
+                            ("p50_ms", Json::Num(p.p50_ms)),
+                            ("p99_ms", Json::Num(p.p99_ms)),
+                            ("max_ms", Json::Num(p.max_ms)),
+                            ("server_p50_ms", Json::Num(p.server_p50_ms)),
+                            ("server_p99_ms", Json::Num(p.server_p99_ms)),
+                            ("errors", Json::Num(p.errors as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_wire.json");
+    match std::fs::write(path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

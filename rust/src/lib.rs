@@ -11,6 +11,17 @@
 //!
 //! ## Layering
 //!
+//! * **Layer 6 ([`net`])** — the wire front-end: a length-prefixed
+//!   framed protocol ([`net::proto`]: HELLO/INFER/STATS/PING, versioned
+//!   header, explicit error frames) served by a **thread-per-core
+//!   reactor** ([`net::WireServer`]): one accept thread round-robins
+//!   nonblocking sockets over N reactors, each owning its connections
+//!   and feeding decoded INFERs into its own
+//!   [`serve::InferenceService`] micro-batch worker over the shared
+//!   hot-reloadable backend. Request seeds travel in-band, so wire
+//!   answers are bit-identical to in-process answers at the same
+//!   service seed; [`net::loadgen`] drives C concurrent connections
+//!   (open- or closed-loop) and reports qps/p50/p99/max.
 //! * **Layer 5 ([`coordinator`])** — the training *session*: the paper's
 //!   long-lived production job as an API. A
 //!   [`coordinator::TrainSession`] builds the topology once — corpus via
@@ -133,7 +144,9 @@
 //! Unit tests live beside the code; the scenario tiers live in
 //! `rust/tests/`: `integration_cluster.rs` (end-to-end training),
 //! `property_invariants.rs` (samplers), `serving_inference.rs` /
-//! `serving_router.rs` (serving), `session_resume.rs`
+//! `serving_router.rs` (serving), `wire_server.rs` (the network
+//! front-end: loadgen vs in-process parity, hot reload under load,
+//! malformed-frame robustness), `session_resume.rs`
 //! (checkpoint/resume), and `chaos_scenarios.rs` (elastic membership +
 //! fault drills). Every chaos scenario derives
 //! its fault schedule from one seed; set the `CHAOS_SEED` environment
@@ -149,6 +162,7 @@ pub mod config;
 pub mod coordinator;
 pub mod corpus;
 pub mod eval;
+pub mod net;
 pub mod projection;
 pub mod ps;
 pub mod runtime;

@@ -9,6 +9,15 @@
 //! hplvm serve --snapshot DIR [--model NAME] [--watch] [--queries N]
 //!             [--replicas R] [--workers W] [--batch B] [--cache-mb M]
 //!             [--seed S]     # load-test the inference server (any family)
+//! hplvm serve --snapshot DIR --listen ADDR [--reactors N] [--watch]
+//!             [--watch-interval-ms MS]
+//!                            # wire front-end: framed protocol on a
+//!                            # thread-per-core reactor (TCP host:port or
+//!                            # unix:/path)
+//! hplvm bench-serve (--snapshot DIR | --addr ADDR) [--connections C]
+//!             [--requests N] [--rate QPS] [--window W] [--doc-len L]
+//!                            # load-test the wire server: C concurrent
+//!                            # connections, open- or closed-loop
 //! hplvm infer --snapshot DIR --tokens "3 17 42" [--model NAME] [--top N]
 //!             [--replicas R] # routed answers report the serving replicas
 //! hplvm chaos [--seed S] [--replicas R] [--warmup N] [--iterations N]
@@ -34,7 +43,7 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hplvm <train|serve|infer|chaos|eval-engine|info> [options]\n\
+        "usage: hplvm <train|serve|bench-serve|infer|chaos|eval-engine|info> [options]\n\
          train options:\n\
            --model NAME          yahoolda | aliaslda | pdp | hdp\n\
            --clients N           client (worker) count\n\
@@ -66,6 +75,12 @@ fn usage() -> ! {
                                  records a different one\n\
            --watch               poll DIR and hot-reload newer snapshots\n\
                                  (generation swaps, queue preserved)\n\
+           --watch-interval-ms MS  snapshot-poll interval (default 200)\n\
+           --listen ADDR         serve over the wire protocol instead of\n\
+                                 running the synthetic query stream: TCP\n\
+                                 host:port (port 0 picks one) or unix:/path\n\
+           --reactors N          reactor threads for --listen (default 2,\n\
+                                 0 = one per core)\n\
            --replicas R          partition the vocabulary over R model\n\
                                  slices by consistent hashing (default 1);\n\
                                  reloads commit set-wide\n\
@@ -83,6 +98,21 @@ fn usage() -> ! {
            --replicas R          route through R replicas and report which\n\
                                  ones served (θ is bit-identical to R=1)\n\
            --top N               topics to print (default 8)\n\
+         bench-serve options:\n\
+           --snapshot DIR        spin up an in-process wire server over\n\
+                                 this snapshot and load-test it\n\
+           --addr ADDR           load-test an already-running wire server\n\
+                                 instead (TCP host:port or unix:/path)\n\
+           --connections C       concurrent connections (default 8)\n\
+           --requests N          requests per connection (default 64)\n\
+           --rate QPS            open-loop total arrival rate; 0 = closed\n\
+                                 loop (default 0)\n\
+           --window W            closed-loop in-flight per connection\n\
+                                 (default 4)\n\
+           --doc-len L           mean query length (default 20)\n\
+           --reactors N          reactor threads for --snapshot (default 2)\n\
+           --replicas R          serving replicas for --snapshot (default 1)\n\
+           --seed S              query-stream + service seed\n\
          chaos options:\n\
            --seed S              fault-schedule seed (default: CHAOS_SEED\n\
                                  env var, else the built-in seed)\n\
@@ -245,6 +275,9 @@ struct ServeArgs {
     snapshot: std::path::PathBuf,
     model: Option<ModelKind>,
     watch: bool,
+    watch_interval_ms: u64,
+    listen: Option<String>,
+    reactors: usize,
     replicas: usize,
     queries: usize,
     workers: usize,
@@ -261,6 +294,9 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
         snapshot: std::path::PathBuf::new(),
         model: None,
         watch: false,
+        watch_interval_ms: ServeConfig::default().watch_interval_ms,
+        listen: None,
+        reactors: 2,
         replicas: 1,
         queries: 2_000,
         workers: 2,
@@ -280,6 +316,20 @@ fn parse_serve_args(args: &[String]) -> ServeArgs {
                 out.model = Some(ModelKind::parse(v).unwrap_or_else(|| usage()));
             }
             "--watch" => out.watch = true,
+            "--watch-interval-ms" => {
+                out.watch_interval_ms = it
+                    .value("--watch-interval-ms")
+                    .parse()
+                    .unwrap_or_else(|_| usage());
+                if out.watch_interval_ms == 0 {
+                    eprintln!("--watch-interval-ms must be at least 1");
+                    usage()
+                }
+            }
+            "--listen" => out.listen = Some(it.value("--listen").to_string()),
+            "--reactors" => {
+                out.reactors = it.value("--reactors").parse().unwrap_or_else(|_| usage())
+            }
             "--replicas" => {
                 out.replicas = it.value("--replicas").parse().unwrap_or_else(|_| usage());
                 if out.replicas == 0 {
@@ -520,6 +570,55 @@ fn snapshot_fingerprint(
     out
 }
 
+/// Spawn the `--watch` poller: fingerprint the snapshot directory every
+/// `interval_ms` (lifted into [`ServeConfig::watch_interval_ms`], set
+/// with `--watch-interval-ms`), debounce one full tick, and hot-reload
+/// through the backend. Reload failures are **logged, never swallowed**
+/// — the server keeps answering on the generation it has and retries
+/// when the directory changes again.
+fn spawn_watcher(
+    backend: Backend,
+    dir: std::path::PathBuf,
+    baseline: Vec<(String, u64, std::time::SystemTime, u64)>,
+    interval_ms: u64,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut loaded = baseline;
+        let mut pending: Option<Vec<_>> = None;
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(1)));
+            let now = snapshot_fingerprint(&dir);
+            if now == loaded || now.is_empty() {
+                pending = None;
+                continue;
+            }
+            // Debounce: the trainer writes slot files sequentially, so
+            // only reload once the directory has been stable for a
+            // full tick (load_dir additionally rejects half-written
+            // mixed-run directories).
+            if pending.as_ref() != Some(&now) {
+                pending = Some(now);
+                continue;
+            }
+            pending = None;
+            match backend.reload(&dir) {
+                Ok(g) => hplvm::info!("serve", "hot-reloaded snapshots → generation {g}"),
+                // Mark the failed fingerprint as seen either way: a
+                // permanently bad directory is reported once, then
+                // retried only when the directory changes again.
+                Err(e) => hplvm::warn!(
+                    "serve",
+                    "hot-reload failed (still serving generation {}; will \
+                     retry on the next directory change): {e:#}",
+                    backend.generation()
+                ),
+            }
+            loaded = now;
+        }
+    })
+}
+
 /// `hplvm train`: drive a [`TrainSession`] — fresh (synthetic or docword
 /// corpus) or resumed from a checkpoint — then optionally checkpoint the
 /// cluster and dump the report JSON.
@@ -594,6 +693,10 @@ fn cmd_train(a: TrainArgs) -> hplvm::Result<TrainReport> {
 }
 
 fn cmd_serve(a: ServeArgs) {
+    if a.listen.is_some() {
+        cmd_serve_listen(a);
+        return;
+    }
     // Baseline the directory BEFORE loading (only when watching): a
     // snapshot landing between the load and the watcher's first poll
     // must still trigger a reload.
@@ -626,56 +729,27 @@ fn cmd_serve(a: ServeArgs) {
             }
         }
     }
-    let svc = InferenceService::spawn(
-        backend.query_backend(),
-        ServeConfig {
-            workers: a.workers,
-            max_batch: a.batch,
-            seed: a.seed,
-            ..Default::default()
-        },
-    );
+    let serve_cfg = ServeConfig {
+        workers: a.workers,
+        max_batch: a.batch,
+        seed: a.seed,
+        watch_interval_ms: a.watch_interval_ms,
+        ..Default::default()
+    };
+    let svc = InferenceService::spawn(backend.query_backend(), serve_cfg.clone());
     // --watch: poll the snapshot directory in the background and swap in
     // newer generations without disturbing the queue. Replica sets
     // commit the swap set-wide: the bumped generation is visible only
     // once every replica has installed its slice.
     let stop_watch = Arc::new(AtomicBool::new(false));
     let watcher = baseline.map(|baseline| {
-        let backend = backend.clone();
-        let dir = a.snapshot.clone();
-        let stop = stop_watch.clone();
-        std::thread::spawn(move || {
-            let mut loaded = baseline;
-            let mut pending: Option<Vec<_>> = None;
-            while !stop.load(Ordering::Relaxed) {
-                std::thread::sleep(std::time::Duration::from_millis(200));
-                let now = snapshot_fingerprint(&dir);
-                if now == loaded || now.is_empty() {
-                    pending = None;
-                    continue;
-                }
-                // Debounce: the trainer writes slot files sequentially, so
-                // only reload once the directory has been stable for a
-                // full tick (load_dir additionally rejects half-written
-                // mixed-run directories).
-                if pending.as_ref() != Some(&now) {
-                    pending = Some(now);
-                    continue;
-                }
-                pending = None;
-                match backend.reload(&dir) {
-                    Ok(g) => println!("hot-reloaded snapshots → generation {g}"),
-                    // Mark the failed fingerprint as seen either way: a
-                    // permanently bad directory is reported once, then
-                    // retried only when the directory changes again.
-                    Err(e) => eprintln!(
-                        "hot-reload failed (still serving; will retry on \
-                         the next directory change): {e:#}"
-                    ),
-                }
-                loaded = now;
-            }
-        })
+        spawn_watcher(
+            backend.clone(),
+            a.snapshot.clone(),
+            baseline,
+            serve_cfg.watch_interval_ms,
+            stop_watch.clone(),
+        )
     });
     // Synthetic Zipf query stream over the model's vocabulary.
     let vocab = backend.primary_model().vocab();
@@ -705,6 +779,270 @@ fn cmd_serve(a: ServeArgs) {
         let _ = w.join();
     }
     svc.shutdown();
+}
+
+/// `hplvm serve --listen`: the wire front-end. Bind the address, start
+/// the accept + reactor threads over the loaded backend, optionally
+/// watch the snapshot directory for hot reloads, and serve until the
+/// process is killed (counters print once a minute).
+fn cmd_serve_listen(a: ServeArgs) {
+    let addr = hplvm::net::ListenAddr::parse(a.listen.as_deref().unwrap_or(""));
+    let baseline = a.watch.then(|| snapshot_fingerprint(&a.snapshot));
+    let backend = Backend::load(&a);
+    let info = {
+        let model = backend.primary_model();
+        println!(
+            "serving {} (family {}) over the wire | K={} vocab={} | generation {} | \
+             {} replica(s) | batch {}{}",
+            model.meta().model,
+            model.kind().family_name(),
+            model.k(),
+            model.vocab(),
+            backend.generation(),
+            a.replicas,
+            a.batch,
+            if a.watch { " | watching for new snapshots" } else { "" },
+        );
+        hplvm::net::ModelInfo {
+            family: model.kind().family_name().to_string(),
+            k: model.k() as u32,
+            vocab: model.vocab() as u32,
+        }
+    };
+    let wire_cfg = hplvm::net::WireConfig {
+        reactors: a.reactors,
+        service: ServeConfig {
+            workers: a.workers.max(1),
+            max_batch: a.batch,
+            seed: a.seed,
+            watch_interval_ms: a.watch_interval_ms,
+            ..Default::default()
+        },
+        ..hplvm::net::WireConfig::default()
+    };
+    let watch_ms = wire_cfg.service.watch_interval_ms;
+    let server =
+        match hplvm::net::WireServer::start(backend.query_backend(), info, &addr, wire_cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot start wire server: {e:#}");
+                std::process::exit(1)
+            }
+        };
+    println!("listening on {}", server.local_addr());
+    let stop_watch = Arc::new(AtomicBool::new(false));
+    let _watcher = baseline.map(|baseline| {
+        spawn_watcher(
+            backend.clone(),
+            a.snapshot.clone(),
+            baseline,
+            watch_ms,
+            stop_watch.clone(),
+        )
+    });
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        let s = server.stats();
+        println!(
+            "wire: {} open / {} accepted | {} frames in | {} served | {} errors \
+             (generation {})",
+            s.connections,
+            s.accepted,
+            s.frames_in,
+            s.served,
+            s.errors,
+            backend.generation(),
+        );
+    }
+}
+
+struct BenchServeArgs {
+    snapshot: Option<std::path::PathBuf>,
+    addr: Option<String>,
+    connections: usize,
+    requests: usize,
+    rate: f64,
+    window: usize,
+    doc_len: f64,
+    seed: u64,
+    reactors: usize,
+    replicas: usize,
+    workers: usize,
+    batch: usize,
+    cache_mb: usize,
+}
+
+fn parse_bench_serve_args(args: &[String]) -> BenchServeArgs {
+    let mut out = BenchServeArgs {
+        snapshot: None,
+        addr: None,
+        connections: 8,
+        requests: 64,
+        rate: 0.0,
+        window: 4,
+        doc_len: 20.0,
+        seed: 42,
+        reactors: 2,
+        replicas: 1,
+        workers: 1,
+        batch: 32,
+        cache_mb: 64,
+    };
+    let mut it = ArgIter { args, i: 0 };
+    while let Some(arg) = it.next() {
+        match arg {
+            "--snapshot" => {
+                out.snapshot = Some(std::path::PathBuf::from(it.value("--snapshot")))
+            }
+            "--addr" => out.addr = Some(it.value("--addr").to_string()),
+            "--connections" => {
+                out.connections =
+                    it.value("--connections").parse().unwrap_or_else(|_| usage())
+            }
+            "--requests" => {
+                out.requests = it.value("--requests").parse().unwrap_or_else(|_| usage())
+            }
+            "--rate" => out.rate = it.value("--rate").parse().unwrap_or_else(|_| usage()),
+            "--window" => {
+                out.window = it.value("--window").parse().unwrap_or_else(|_| usage())
+            }
+            "--doc-len" => {
+                out.doc_len = it.value("--doc-len").parse().unwrap_or_else(|_| usage())
+            }
+            "--seed" => out.seed = it.value("--seed").parse().unwrap_or_else(|_| usage()),
+            "--reactors" => {
+                out.reactors = it.value("--reactors").parse().unwrap_or_else(|_| usage())
+            }
+            "--replicas" => {
+                out.replicas = it.value("--replicas").parse().unwrap_or_else(|_| usage());
+                if out.replicas == 0 {
+                    eprintln!("--replicas must be at least 1");
+                    usage()
+                }
+            }
+            "--workers" => {
+                out.workers = it.value("--workers").parse().unwrap_or_else(|_| usage())
+            }
+            "--batch" => out.batch = it.value("--batch").parse().unwrap_or_else(|_| usage()),
+            "--cache-mb" => {
+                out.cache_mb = it.value("--cache-mb").parse().unwrap_or_else(|_| usage())
+            }
+            "-v" => logging::set_level(Level::Debug),
+            "-q" => logging::set_level(Level::Warn),
+            _ => {
+                eprintln!("unknown option {arg}");
+                usage()
+            }
+        }
+    }
+    if out.snapshot.is_none() && out.addr.is_none() {
+        eprintln!("bench-serve needs --snapshot DIR or --addr ADDR");
+        usage()
+    }
+    out
+}
+
+/// `hplvm bench-serve`: drive the wire load generator — against an
+/// already-running server (`--addr`), or against a wire server spun up
+/// in-process over a snapshot directory (`--snapshot`, loopback TCP on a
+/// free port). The HELLO handshake supplies the vocabulary the synthetic
+/// query streams draw from.
+fn cmd_bench_serve(a: BenchServeArgs) -> hplvm::Result<()> {
+    let timeout = std::time::Duration::from_secs(60);
+    // A locally spun-up server (and the backend keeping it alive) lives
+    // here so it outlives the run and shuts down cleanly afterwards.
+    let mut local: Option<hplvm::net::WireServer> = None;
+    let addr = match (&a.addr, &a.snapshot) {
+        (Some(addr), _) => addr.clone(),
+        (None, Some(dir)) => {
+            let serve_args = ServeArgs {
+                snapshot: dir.clone(),
+                model: None,
+                watch: false,
+                watch_interval_ms: ServeConfig::default().watch_interval_ms,
+                listen: None,
+                reactors: a.reactors,
+                replicas: a.replicas,
+                queries: 0,
+                workers: a.workers,
+                batch: a.batch,
+                cache_mb: a.cache_mb,
+                doc_len: a.doc_len,
+                seed: a.seed,
+                tokens: Vec::new(),
+                top: 8,
+            };
+            let backend = Backend::load(&serve_args);
+            let model = backend.primary_model();
+            let info = hplvm::net::ModelInfo {
+                family: model.kind().family_name().to_string(),
+                k: model.k() as u32,
+                vocab: model.vocab() as u32,
+            };
+            let server = hplvm::net::WireServer::start(
+                backend.query_backend(),
+                info,
+                &hplvm::net::ListenAddr::parse("127.0.0.1:0"),
+                hplvm::net::WireConfig {
+                    reactors: a.reactors,
+                    service: ServeConfig {
+                        workers: a.workers.max(1),
+                        max_batch: a.batch,
+                        seed: a.seed,
+                        ..Default::default()
+                    },
+                    ..hplvm::net::WireConfig::default()
+                },
+            )?;
+            let addr = server.local_addr().to_string();
+            local = Some(server);
+            addr
+        }
+        (None, None) => {
+            eprintln!("bench-serve needs --snapshot DIR or --addr ADDR");
+            usage()
+        }
+    };
+    let hello = hplvm::net::hello(&addr, timeout)?;
+    println!(
+        "bench-serve → {addr} | family {} K={} vocab={} generation {} | \
+         {} connections × {} requests, {}",
+        hello.family,
+        hello.k,
+        hello.vocab,
+        hello.generation,
+        a.connections,
+        a.requests,
+        if a.rate > 0.0 {
+            format!("open loop @ {:.0} req/s", a.rate)
+        } else {
+            format!("closed loop, window {}", a.window)
+        },
+    );
+    let report = hplvm::net::loadgen::run(
+        &addr,
+        &hplvm::net::LoadgenConfig {
+            connections: a.connections,
+            requests: a.requests,
+            rate: a.rate,
+            window: a.window,
+            vocab: hello.vocab as usize,
+            doc_len: a.doc_len,
+            seed: a.seed,
+            timeout,
+            ..hplvm::net::LoadgenConfig::default()
+        },
+    )?;
+    println!("{}", report.render());
+    if let Some(server) = local {
+        let s = server.stats();
+        println!(
+            "server: {} accepted | {} frames in | {} served | {} errors | {} reactor(s)",
+            s.accepted, s.frames_in, s.served, s.errors, s.reactors,
+        );
+        server.shutdown();
+    }
+    Ok(())
 }
 
 fn cmd_infer(a: ServeArgs) {
@@ -757,6 +1095,13 @@ fn main() {
             }
         }
         "serve" => cmd_serve(parse_serve_args(&args[1..])),
+        "bench-serve" => {
+            let a = parse_bench_serve_args(&args[1..]);
+            if let Err(e) = cmd_bench_serve(a) {
+                eprintln!("bench-serve failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "infer" => cmd_infer(parse_serve_args(&args[1..])),
         "chaos" => {
             let a = parse_chaos_args(&args[1..]);

@@ -1,0 +1,239 @@
+//! Length-prefixed frame codec — the lowest layer of the wire protocol.
+//!
+//! Every message on a connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     payload length N (u32, little-endian, ≤ MAX_FRAME_BYTES)
+//! 4       1     protocol version (PROTO_VERSION)
+//! 5       1     opcode (see super::proto::op)
+//! 6       N     payload (opcode-specific, see super::proto)
+//! ```
+//!
+//! The codec is deliberately dumb: [`decode`] only answers "is a complete
+//! frame buffered, and is its declared length sane?". It does **not**
+//! validate the version byte — a version-mismatched frame still parses,
+//! so the server can answer it with an explicit
+//! [`err::BAD_VERSION`](super::proto::err::BAD_VERSION) error frame
+//! instead of hanging or closing silently. What it *does* enforce is the
+//! length cap: a declared payload beyond [`MAX_FRAME_BYTES`] is rejected
+//! as soon as the 4-byte header is readable, before any buffering of the
+//! body — the guard that keeps a hostile or corrupt length prefix from
+//! ballooning a connection's read buffer.
+//!
+//! Truncated input is never an error at this layer: [`decode`] returns
+//! `Ok(None)` ("need more bytes") and the caller keeps accumulating.
+//! Stream desynchronization therefore surfaces either here (absurd
+//! declared length) or in [`super::proto`] (opcode/payload validation),
+//! both of which the server converts into an error frame and a closed
+//! connection.
+
+/// Wire protocol version stamped into (and expected in) every frame.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard cap on a frame's declared payload length. Generous for real
+/// queries (a 1 MiB INFER payload carries ~260k word ids) while bounding
+/// what a bad length prefix can make the server buffer.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Fixed bytes before the payload: length (4) + version (1) + opcode (1).
+pub const HEADER_BYTES: usize = 6;
+
+/// One decoded frame: version and opcode verbatim from the header (the
+/// protocol layer validates them), payload copied out of the stream
+/// buffer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Protocol version byte as received (not yet validated).
+    pub version: u8,
+    /// Opcode byte as received (not yet validated).
+    pub opcode: u8,
+    /// Opcode-specific payload bytes.
+    pub payload: Vec<u8>,
+}
+
+/// Connection-fatal framing error: the stream cannot be re-synchronized
+/// after this, so the peer gets one error frame and the connection is
+/// closed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    Oversize {
+        /// The length the header declared.
+        declared: usize,
+    },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversize { declared } => write!(
+                f,
+                "declared frame payload of {declared} bytes exceeds the \
+                 {MAX_FRAME_BYTES}-byte cap"
+            ),
+        }
+    }
+}
+
+/// Append one encoded frame (with [`PROTO_VERSION`]) to `out`.
+pub fn encode_into(out: &mut Vec<u8>, opcode: u8, payload: &[u8]) {
+    encode_parts_into(out, PROTO_VERSION, opcode, payload);
+}
+
+/// Append one encoded frame with an explicit version byte — the hook the
+/// version-mismatch tests (and any future protocol bump) use.
+pub fn encode_parts_into(out: &mut Vec<u8>, version: u8, opcode: u8, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES, "refusing to encode an oversize frame");
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(version);
+    out.push(opcode);
+    out.extend_from_slice(payload);
+}
+
+/// One encoded frame as a fresh buffer.
+pub fn encode(opcode: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    encode_into(&mut out, opcode, payload);
+    out
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; the caller drains
+///   `consumed` bytes and may call again (frames are back-to-back).
+/// * `Ok(None)` — incomplete; keep reading. Never an error, so a
+///   truncated frame (peer died mid-write) simply never completes.
+/// * `Err(..)` — unrecoverable framing violation; close the connection.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let declared = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    // Reject an absurd length the moment it is readable — *before*
+    // waiting for (and buffering) a body that may never come.
+    if declared > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversize { declared });
+    }
+    let total = HEADER_BYTES + declared;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((
+        Frame {
+            version: buf[4],
+            opcode: buf[5],
+            payload: buf[6..total].to_vec(),
+        },
+        total,
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trips_arbitrary_payloads() {
+        // Property: encode → decode is the identity for arbitrary
+        // (version, opcode, payload) triples, including empty and
+        // max-size payloads.
+        let mut rng = Rng::new(0xF7A3E);
+        for case in 0..200 {
+            let len = match case {
+                0 => 0,
+                1 => MAX_FRAME_BYTES,
+                _ => rng.below(2_000),
+            };
+            let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let version = rng.next_u64() as u8;
+            let opcode = rng.next_u64() as u8;
+            let mut bytes = Vec::new();
+            encode_parts_into(&mut bytes, version, opcode, &payload);
+            let (frame, consumed) = decode(&bytes).unwrap().expect("complete frame");
+            assert_eq!(consumed, bytes.len());
+            assert_eq!(frame.version, version);
+            assert_eq!(frame.opcode, opcode);
+            assert_eq!(frame.payload, payload);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_incomplete_never_a_panic() {
+        // Property: any strict prefix of a valid frame decodes to
+        // "incomplete" — no prefix length panics or fabricates a frame.
+        let mut rng = Rng::new(0xBEEF);
+        let payload: Vec<u8> = (0..257).map(|_| rng.next_u64() as u8).collect();
+        let bytes = encode(0x02, &payload);
+        for cut in 0..bytes.len() {
+            assert_eq!(
+                decode(&bytes[..cut]).unwrap(),
+                None,
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_sequence() {
+        let mut bytes = Vec::new();
+        encode_into(&mut bytes, 1, b"first");
+        encode_into(&mut bytes, 2, b"");
+        encode_into(&mut bytes, 3, b"third");
+        let mut rest: &[u8] = &bytes;
+        let mut seen = Vec::new();
+        while let Some((f, n)) = decode(rest).unwrap() {
+            seen.push((f.opcode, f.payload));
+            rest = &rest[n..];
+        }
+        assert!(rest.is_empty());
+        assert_eq!(
+            seen,
+            vec![
+                (1u8, b"first".to_vec()),
+                (2, Vec::new()),
+                (3, b"third".to_vec())
+            ]
+        );
+    }
+
+    #[test]
+    fn oversize_length_rejected_from_header_alone() {
+        // 4 header bytes declaring MAX+1: rejected immediately, with no
+        // body buffered — and any continuation bytes change nothing.
+        let declared = (MAX_FRAME_BYTES + 1) as u32;
+        let mut bytes = declared.to_le_bytes().to_vec();
+        assert_eq!(
+            decode(&bytes),
+            Err(FrameError::Oversize {
+                declared: MAX_FRAME_BYTES + 1
+            })
+        );
+        bytes.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7]);
+        assert!(decode(&bytes).is_err());
+        // The all-ones length a random/hostile peer is most likely to
+        // produce is also caught.
+        assert!(decode(&u32::MAX.to_le_bytes()).is_err());
+    }
+
+    #[test]
+    fn max_size_frame_is_still_legal() {
+        let payload = vec![0xABu8; MAX_FRAME_BYTES];
+        let bytes = encode(9, &payload);
+        let (frame, n) = decode(&bytes).unwrap().expect("max-size frame decodes");
+        assert_eq!(n, HEADER_BYTES + MAX_FRAME_BYTES);
+        assert_eq!(frame.payload.len(), MAX_FRAME_BYTES);
+    }
+
+    #[test]
+    fn version_byte_passes_through_unvalidated() {
+        // The codec hands mismatched versions up intact so the protocol
+        // layer can answer with an error *frame* instead of dropping the
+        // bytes on the floor.
+        let mut bytes = Vec::new();
+        encode_parts_into(&mut bytes, 99, 0x04, b"x");
+        let (frame, _) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(frame.version, 99);
+    }
+}

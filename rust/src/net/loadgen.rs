@@ -1,0 +1,530 @@
+//! Load-test client for the wire server: C concurrent connections, each
+//! driving a deterministic query stream, with open-loop (scheduled
+//! arrivals at a target rate) or closed-loop (bounded in-flight window)
+//! pacing, reporting qps / p50 / p99 / max and error counts.
+//!
+//! Open-loop latency is charged from each request's *scheduled* send
+//! time, not the moment the socket accepted it — when the server falls
+//! behind, the queueing delay counts against it (no coordinated
+//! omission).
+//!
+//! The query stream is exposed as [`connection_queries`] so the parity
+//! tests can replay exactly what the loadgen sent through the in-process
+//! [`InferenceService`](crate::serve::InferenceService) and compare θ
+//! bit-for-bit: request `seed`s name the service's RNG streams, making
+//! the wire answer independent of arrival order.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::{Duration, Instant};
+
+use super::frame;
+use super::proto::{self, Request, Response};
+use crate::bench::percentile;
+use crate::serve::service::synth_queries;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent connections.
+    pub connections: usize,
+    /// Requests **per connection**.
+    pub requests: usize,
+    /// Target total arrival rate in requests/sec across all connections;
+    /// 0 = closed loop (each connection keeps `window` in flight).
+    pub rate: f64,
+    /// Closed-loop in-flight window per connection.
+    pub window: usize,
+    /// Vocabulary the synthetic queries draw words from.
+    pub vocab: usize,
+    /// Mean document length (Poisson).
+    pub doc_len: f64,
+    /// Seed for the deterministic query streams.
+    pub seed: u64,
+    /// `min_generation` stamped on every INFER (0 = any).
+    pub min_generation: u64,
+    /// Collect every answer's θ into [`LoadReport::responses`] (parity
+    /// tests); off for pure load runs.
+    pub keep_responses: bool,
+    /// Give up on answers not seen by this deadline per connection.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            connections: 8,
+            requests: 64,
+            rate: 0.0,
+            window: 4,
+            vocab: 1_000,
+            doc_len: 20.0,
+            seed: 42,
+            min_generation: 0,
+            keep_responses: false,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The deterministic query stream of one connection: `(request seed,
+/// word ids)` per request. Pure function of `(cfg.seed, cfg.vocab,
+/// cfg.doc_len, cfg.requests, conn)` — the parity tests rebuild it to
+/// replay the identical load in-process.
+pub fn connection_queries(cfg: &LoadgenConfig, conn: usize) -> Vec<(u64, Vec<u32>)> {
+    let doc_seed = Rng::new(cfg.seed).derive(conn as u64).next_u64();
+    let docs = synth_queries(cfg.vocab, cfg.requests, cfg.doc_len, doc_seed);
+    // Request seeds from an independent derived stream: distinct across
+    // connections and requests, stable across runs.
+    let mut seeds = Rng::new(cfg.seed ^ 0x5EED_C0FF_EE00_0001).derive(conn as u64);
+    docs.into_iter().map(|d| (seeds.next_u64(), d)).collect()
+}
+
+/// One collected answer (with `keep_responses`).
+#[derive(Clone, Debug)]
+pub struct WireAnswer {
+    /// Connection index that sent the request.
+    pub conn: usize,
+    /// Request id (= index into that connection's query stream).
+    pub id: u64,
+    /// Request seed the stream carried.
+    pub seed: u64,
+    /// Generation that served it.
+    pub generation: u64,
+    /// Topic mixture, bit-exact off the wire.
+    pub theta: Vec<f64>,
+    /// Replicas that contributed.
+    pub served_by: Vec<u32>,
+    /// Server-side queue + service latency.
+    pub latency_micros: u64,
+}
+
+/// Aggregated load-run outcome.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Connections driven.
+    pub connections: usize,
+    /// Requests written to sockets.
+    pub sent: u64,
+    /// INFER_OK frames received.
+    pub answered: u64,
+    /// Error frames received + connection-level failures.
+    pub errors: u64,
+    /// Requests still unanswered at the per-connection deadline.
+    pub timed_out: u64,
+    /// Wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// answered / wall_secs.
+    pub qps: f64,
+    /// Client round-trip latency percentiles, milliseconds.
+    pub p50_ms: f64,
+    /// 99th percentile client RTT, ms.
+    pub p99_ms: f64,
+    /// Worst client RTT, ms.
+    pub max_ms: f64,
+    /// Server-stamped (`latency_micros`) p50, ms.
+    pub server_p50_ms: f64,
+    /// Server-stamped p99, ms.
+    pub server_p99_ms: f64,
+    /// Lowest generation observed across answers (0 if none).
+    pub min_generation: u64,
+    /// Highest generation observed across answers (0 if none).
+    pub max_generation: u64,
+    /// Every answer, when `keep_responses` was set.
+    pub responses: Vec<WireAnswer>,
+}
+
+impl LoadReport {
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "connections {}  sent {}  answered {}  errors {}  timed_out {}\n\
+             qps {:.0}  wall {:.2}s\n\
+             client  p50 {:.3} ms  p99 {:.3} ms  max {:.3} ms\n\
+             server  p50 {:.3} ms  p99 {:.3} ms\n\
+             generations seen {}..{}",
+            self.connections,
+            self.sent,
+            self.answered,
+            self.errors,
+            self.timed_out,
+            self.qps,
+            self.wall_secs,
+            self.p50_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.server_p50_ms,
+            self.server_p99_ms,
+            self.min_generation,
+            self.max_generation,
+        )
+    }
+}
+
+enum ClientStream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl ClientStream {
+    fn connect(addr: &str) -> io::Result<ClientStream> {
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix:") {
+            let s = UnixStream::connect(path)?;
+            s.set_nonblocking(true)?;
+            return Ok(ClientStream::Unix(s));
+        }
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        s.set_nonblocking(true)?;
+        Ok(ClientStream::Tcp(s))
+    }
+
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.read(buf),
+        }
+    }
+
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            ClientStream::Unix(s) => s.write(buf),
+        }
+    }
+}
+
+struct ConnOutcome {
+    sent: u64,
+    answered: u64,
+    errors: u64,
+    timed_out: u64,
+    /// Client RTT seconds per answered request.
+    latencies: Vec<f64>,
+    /// Server-stamped latency per answered request, µs.
+    server_lat: Vec<u64>,
+    min_gen: u64,
+    max_gen: u64,
+    answers: Vec<WireAnswer>,
+}
+
+/// The server handshake, via [`hello`].
+#[derive(Clone, Debug)]
+pub struct ServerHello {
+    /// Live serving generation at handshake time.
+    pub generation: u64,
+    /// Topic count.
+    pub k: u32,
+    /// Vocabulary size.
+    pub vocab: u32,
+    /// Serving family name.
+    pub family: String,
+}
+
+/// Connect, HELLO, and return the server's model shape — how
+/// `bench-serve --addr` learns the vocabulary to generate load against.
+pub fn hello(addr: &str, timeout: Duration) -> Result<ServerHello> {
+    let mut stream = ClientStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut wbuf = Vec::new();
+    proto::encode_request_into(
+        &mut wbuf,
+        &Request::Hello {
+            id: 0,
+            family: String::new(),
+        },
+    );
+    let deadline = Instant::now() + timeout;
+    let mut rbuf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if !wbuf.is_empty() {
+            match stream.write(&wbuf) {
+                Ok(n) => {
+                    wbuf.drain(..n);
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow::anyhow!("hello write: {e}")),
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(anyhow::anyhow!("server closed during HELLO")),
+            Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {}
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::anyhow!("hello read: {e}")),
+        }
+        if let Some((f, _)) = frame::decode(&rbuf).map_err(|e| anyhow::anyhow!("{e}"))? {
+            return match proto::decode_response(&f) {
+                Ok(Response::HelloOk {
+                    generation,
+                    k,
+                    vocab,
+                    family,
+                    ..
+                }) => Ok(ServerHello {
+                    generation,
+                    k,
+                    vocab,
+                    family,
+                }),
+                Ok(Response::Error { code, message, .. }) => {
+                    Err(anyhow::anyhow!("HELLO refused (code {code}): {message}"))
+                }
+                Ok(other) => Err(anyhow::anyhow!("unexpected HELLO answer: {other:?}")),
+                Err(e) => Err(anyhow::anyhow!("bad HELLO answer: {}", e.message)),
+            };
+        }
+        if Instant::now() > deadline {
+            return Err(anyhow::anyhow!("HELLO timed out after {timeout:?}"));
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+}
+
+/// Drive the configured load against `addr` (TCP `host:port` or
+/// `unix:/path`) and aggregate the outcome.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let started = Instant::now();
+    let outcomes: Vec<io::Result<ConnOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections.max(1))
+            .map(|conn| s.spawn(move || run_conn(addr, cfg, conn)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen connection thread panicked"))
+            .collect()
+    });
+    let wall_secs = started.elapsed().as_secs_f64();
+
+    let mut report = LoadReport {
+        connections: cfg.connections.max(1),
+        wall_secs,
+        min_generation: u64::MAX,
+        ..LoadReport::default()
+    };
+    let mut latencies = Vec::new();
+    let mut server_lat = Vec::new();
+    for out in outcomes {
+        let out = out.map_err(|e| anyhow::anyhow!("loadgen connection failed: {e}"))?;
+        report.sent += out.sent;
+        report.answered += out.answered;
+        report.errors += out.errors;
+        report.timed_out += out.timed_out;
+        latencies.extend(out.latencies);
+        server_lat.extend(out.server_lat.iter().map(|&u| u as f64 / 1_000.0));
+        if out.answered > 0 {
+            report.min_generation = report.min_generation.min(out.min_gen);
+            report.max_generation = report.max_generation.max(out.max_gen);
+        }
+        report.responses.extend(out.answers);
+    }
+    if report.min_generation == u64::MAX {
+        report.min_generation = 0;
+    }
+    let ms: Vec<f64> = latencies.iter().map(|&s| s * 1_000.0).collect();
+    report.qps = if wall_secs > 0.0 {
+        report.answered as f64 / wall_secs
+    } else {
+        0.0
+    };
+    if !ms.is_empty() {
+        report.p50_ms = percentile(&ms, 50.0);
+        report.p99_ms = percentile(&ms, 99.0);
+        report.max_ms = ms.iter().cloned().fold(0.0, f64::max);
+    }
+    if !server_lat.is_empty() {
+        report.server_p50_ms = percentile(&server_lat, 50.0);
+        report.server_p99_ms = percentile(&server_lat, 99.0);
+    }
+    Ok(report)
+}
+
+fn run_conn(addr: &str, cfg: &LoadgenConfig, conn_id: usize) -> io::Result<ConnOutcome> {
+    let mut stream = ClientStream::connect(addr)?;
+    let queries = connection_queries(cfg, conn_id);
+    let mut out = ConnOutcome {
+        sent: 0,
+        answered: 0,
+        errors: 0,
+        timed_out: 0,
+        latencies: Vec::with_capacity(queries.len()),
+        server_lat: Vec::with_capacity(queries.len()),
+        min_gen: u64::MAX,
+        max_gen: 0,
+        answers: Vec::new(),
+    };
+    let start = Instant::now();
+    let deadline = start + cfg.timeout;
+    // Open-loop: this connection's share of the total target rate.
+    let interval = if cfg.rate > 0.0 {
+        Some(Duration::from_secs_f64(
+            cfg.connections.max(1) as f64 / cfg.rate,
+        ))
+    } else {
+        None
+    };
+    let mut next_send = 0usize;
+    let mut inflight: HashMap<u64, Instant> = HashMap::new();
+    let mut wbuf: Vec<u8> = Vec::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        let mut progress = false;
+
+        // Encode every request that is due.
+        while next_send < queries.len() {
+            let charge = match interval {
+                Some(iv) => {
+                    let due = start + iv.mul_f64(next_send as f64);
+                    if due > Instant::now() {
+                        break;
+                    }
+                    due // open loop: latency includes server queueing delay
+                }
+                None => {
+                    if inflight.len() >= cfg.window.max(1) {
+                        break;
+                    }
+                    Instant::now()
+                }
+            };
+            let (seed, tokens) = &queries[next_send];
+            let id = next_send as u64;
+            proto::encode_request_into(
+                &mut wbuf,
+                &Request::Infer {
+                    id,
+                    seed: *seed,
+                    min_generation: cfg.min_generation,
+                    tokens: tokens.clone(),
+                },
+            );
+            inflight.insert(id, charge);
+            out.sent += 1;
+            next_send += 1;
+            progress = true;
+        }
+
+        // Flush.
+        while !wbuf.is_empty() {
+            match stream.write(&wbuf) {
+                Ok(0) => return finish_eof(out, inflight),
+                Ok(n) => {
+                    wbuf.drain(..n);
+                    progress = true;
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return finish_eof(out, inflight),
+            }
+        }
+
+        // Read.
+        loop {
+            match stream.read(&mut chunk) {
+                Ok(0) => return finish_eof(out, inflight),
+                Ok(n) => {
+                    rbuf.extend_from_slice(&chunk[..n]);
+                    progress = true;
+                    if n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return finish_eof(out, inflight),
+            }
+        }
+
+        // Decode answers.
+        let mut consumed = 0usize;
+        loop {
+            let (f, used) = match frame::decode(&rbuf[consumed..]) {
+                Ok(Some(hit)) => hit,
+                Ok(None) => break,
+                Err(_) => {
+                    // The server desynchronized us — unrecoverable.
+                    out.errors += 1 + inflight.len() as u64;
+                    return Ok(out);
+                }
+            };
+            consumed += used;
+            progress = true;
+            match proto::decode_response(&f) {
+                Ok(Response::InferOk {
+                    id,
+                    generation,
+                    latency_micros,
+                    theta,
+                    served_by,
+                    ..
+                }) => {
+                    if let Some(charged) = inflight.remove(&id) {
+                        out.latencies
+                            .push(charged.elapsed().as_secs_f64());
+                    }
+                    out.answered += 1;
+                    out.server_lat.push(latency_micros);
+                    out.min_gen = out.min_gen.min(generation);
+                    out.max_gen = out.max_gen.max(generation);
+                    if cfg.keep_responses {
+                        out.answers.push(WireAnswer {
+                            conn: conn_id,
+                            id,
+                            seed: queries
+                                .get(id as usize)
+                                .map(|(s, _)| *s)
+                                .unwrap_or(0),
+                            generation,
+                            theta,
+                            served_by,
+                            latency_micros,
+                        });
+                    }
+                }
+                Ok(Response::Error { id, .. }) => {
+                    inflight.remove(&id);
+                    out.errors += 1;
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    out.errors += 1;
+                }
+            }
+        }
+        if consumed > 0 {
+            rbuf.drain(..consumed);
+        }
+
+        let done = (out.answered + out.errors) as usize >= queries.len()
+            && next_send >= queries.len()
+            && wbuf.is_empty();
+        if done {
+            return Ok(out);
+        }
+        if Instant::now() > deadline {
+            out.timed_out = inflight.len() as u64;
+            return Ok(out);
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// The server went away mid-run: everything still in flight is an error.
+fn finish_eof(mut out: ConnOutcome, inflight: HashMap<u64, Instant>) -> io::Result<ConnOutcome> {
+    out.errors += inflight.len() as u64;
+    Ok(out)
+}

@@ -1,0 +1,77 @@
+//! Wire front-end: a framed protocol server on a thread-per-core
+//! reactor, plus the load-generation client that drives it — the layer
+//! that turns the in-process serving stack into a deployable inference
+//! tier behind a real network boundary (std-only TCP or Unix-domain
+//! sockets; no async runtime, no dependencies).
+//!
+//! # Reactor model
+//!
+//! One **accept thread** owns the (nonblocking) listener and hands each
+//! accepted socket to one of **N reactor threads**, round-robin. Each
+//! reactor ([`reactor`]) owns its connections outright — read buffers,
+//! write buffers, in-flight request table — so no lock is ever taken on
+//! a connection, and each reactor runs its **own**
+//! [`InferenceService`](crate::serve::InferenceService) micro-batch
+//! worker over the **shared** hot-reloadable
+//! [`QueryBackend`](crate::serve::QueryBackend) (a
+//! [`ServingHandle`](crate::serve::ServingHandle) or a multi-replica
+//! [`ReplicaSet`](crate::serve::ReplicaSet)). The per-reactor loop is:
+//! adopt handed-off sockets → drain readable bytes → decode frames →
+//! INFER frames become `submit_with_seed` jobs (micro-batching and
+//! back-pressure engage exactly as in-process) → poll reply channels →
+//! encode answers → flush. With the default one service worker per
+//! reactor, N reactors cost 2N threads — the thread-per-core budget.
+//!
+//! Determinism crosses the wire intact: every INFER carries an explicit
+//! request seed naming the service's RNG stream, so an answer is
+//! bit-identical to the in-process answer at the same service seed —
+//! independent of which reactor, which connection, or what arrival
+//! order. Hot reloads swap the backend generation under the reactors;
+//! in-flight micro-batches finish on the generation they pinned and
+//! every response reports the generation that served it.
+//!
+//! # Frame grammar
+//!
+//! Every message is one length-prefixed frame ([`frame`]):
+//!
+//! ```text
+//! [payload_len: u32 LE] [version: u8] [opcode: u8] [payload: len bytes]
+//! ```
+//!
+//! with a 1 MiB payload cap (an over-declared length is rejected the
+//! moment the 4 header bytes are readable — a hostile prefix cannot
+//! balloon the read buffer). On top of that, [`proto`] defines the
+//! messages; all payloads lead with a client-chosen correlation id
+//! (pipelining-safe), integers are little-endian, θ travels as IEEE-754
+//! bits:
+//!
+//! ```text
+//! HELLO(id, family?)           → HELLO_OK(id, generation, k, vocab, family)
+//! INFER(id, seed, min_gen, words) → INFER_OK(id, generation, latency_µs,
+//!                                            tokens, θ[], served_by[])
+//! STATS(id)                    → STATS_OK(id, generation, counters…)
+//! PING(id)                     → PONG(id)
+//! anything invalid             → ERROR(id, code, message)
+//! ```
+//!
+//! Malformed payloads, foreign versions, and oversize frames get an
+//! explicit ERROR frame and the connection closes (the stream can no
+//! longer be trusted frame-to-frame); an unknown opcode in a well-formed
+//! frame gets an ERROR and the connection survives. A family mismatch at
+//! HELLO closes; a generation mismatch on INFER answers only that
+//! request. Other connections are never affected.
+//!
+//! [`server`] assembles listener + accept thread + reactors into
+//! [`WireServer`]; [`loadgen`] is the measuring client (open-loop or
+//! closed-loop, qps/p50/p99/max, deterministic query streams shared with
+//! the parity tests).
+
+pub mod frame;
+pub mod loadgen;
+pub mod proto;
+pub mod reactor;
+pub mod server;
+
+pub use loadgen::{connection_queries, hello, LoadReport, LoadgenConfig, ServerHello, WireAnswer};
+pub use reactor::{Counters, ModelInfo};
+pub use server::{ListenAddr, WireConfig, WireServer, WireStats};

@@ -1,0 +1,738 @@
+//! Wire message grammar on top of the [`frame`](super::frame) codec.
+//!
+//! Every request and response payload starts with a caller-chosen `id`
+//! (u64) echoed verbatim in the answer, so clients may pipeline any
+//! number of requests per connection and match answers out of order.
+//! All integers are little-endian; `f64`s travel as their IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`), so a topic mixture crosses the wire
+//! **bit-exactly** — the property the routed-parity and in-process-parity
+//! tests assert end to end.
+//!
+//! ```text
+//! request  opcode  payload
+//! HELLO    0x01    id:u64  family:str        (family "" = no check)
+//! INFER    0x02    id:u64  seed:u64  min_generation:u64  n:u32  word:u32 ×n
+//! STATS    0x03    id:u64
+//! PING     0x04    id:u64
+//!
+//! response opcode  payload
+//! HELLO_OK 0x81    id:u64  generation:u64  k:u32  vocab:u32  family:str
+//! INFER_OK 0x82    id:u64  generation:u64  latency_micros:u64  tokens:u32
+//!                  n:u32  theta_bits:u64 ×n  m:u32  served_by:u32 ×m
+//! STATS_OK 0x83    id:u64  generation:u64  served:u64  errors:u64
+//!                  connections:u64  accepted:u64  frames_in:u64  reactors:u32
+//! PONG     0x84    id:u64
+//! ERROR    0xFF    id:u64  code:u8  message:str
+//!
+//! str ::= len:u32  utf8 ×len              (len ≤ 65536)
+//! ```
+//!
+//! Decoding is strict: short payloads, over-declared counts, non-UTF-8
+//! strings, and trailing garbage all fail with
+//! [`err::MALFORMED`], which the server converts into an ERROR frame.
+//! An unknown opcode in a well-formed frame is [`err::UNKNOWN_OPCODE`]
+//! (connection survives); a version-byte mismatch is
+//! [`err::BAD_VERSION`] (connection closes after the error frame).
+
+use super::frame::{Frame, PROTO_VERSION};
+
+/// Request/response opcodes. Responses set the high bit of the request
+/// they answer; ERROR answers anything.
+pub mod op {
+    /// Handshake: optional family cross-check, returns model shape.
+    pub const HELLO: u8 = 0x01;
+    /// Fold-in query: word ids + per-request RNG seed.
+    pub const INFER: u8 = 0x02;
+    /// Server-wide counters.
+    pub const STATS: u8 = 0x03;
+    /// Liveness probe.
+    pub const PING: u8 = 0x04;
+    /// Answer to [`HELLO`].
+    pub const HELLO_OK: u8 = 0x81;
+    /// Answer to [`INFER`].
+    pub const INFER_OK: u8 = 0x82;
+    /// Answer to [`STATS`].
+    pub const STATS_OK: u8 = 0x83;
+    /// Answer to [`PING`].
+    pub const PONG: u8 = 0x84;
+    /// Error answer to any request.
+    pub const ERROR: u8 = 0xFF;
+}
+
+/// Error-frame codes.
+pub mod err {
+    /// Payload failed to parse (short, over-declared, trailing bytes…).
+    pub const MALFORMED: u8 = 1;
+    /// Frame's version byte is not [`super::PROTO_VERSION`].
+    pub const BAD_VERSION: u8 = 2;
+    /// Well-formed frame, opcode this server does not speak.
+    pub const UNKNOWN_OPCODE: u8 = 3;
+    /// Declared frame length beyond the cap (connection closes).
+    pub const OVERSIZE: u8 = 4;
+    /// HELLO named a family the served snapshot does not belong to.
+    pub const FAMILY_MISMATCH: u8 = 5;
+    /// INFER demanded `min_generation` newer than what is live.
+    pub const GENERATION_MISMATCH: u8 = 6;
+    /// Server is shutting down; the request was not answered.
+    pub const SHUTTING_DOWN: u8 = 7;
+}
+
+/// Longest accepted string field (family names, error messages).
+const MAX_STR_BYTES: usize = 65_536;
+
+/// A client→server message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Handshake; `family` "" skips the family cross-check.
+    Hello {
+        /// Correlation id echoed in the answer.
+        id: u64,
+        /// Expected serving family name ("" = accept any).
+        family: String,
+    },
+    /// Fold a document in and return its topic mixture.
+    Infer {
+        /// Correlation id echoed in the answer.
+        id: u64,
+        /// Per-request RNG stream: the service derives
+        /// `Rng::new(service_seed).derive(seed)`, so the answer is
+        /// deterministic however requests interleave across connections.
+        seed: u64,
+        /// Refuse (GENERATION_MISMATCH) unless the live generation is at
+        /// least this; 0 accepts any.
+        min_generation: u64,
+        /// The document's word ids.
+        tokens: Vec<u32>,
+    },
+    /// Server-wide counter snapshot.
+    Stats {
+        /// Correlation id echoed in the answer.
+        id: u64,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Correlation id echoed in the answer.
+        id: u64,
+    },
+}
+
+/// A server→client message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Handshake answer: the served model's shape.
+    HelloOk {
+        /// Echo of the request id.
+        id: u64,
+        /// Live serving generation.
+        generation: u64,
+        /// Topic count (θ length of every INFER_OK).
+        k: u32,
+        /// Vocabulary size (valid word ids are `0..vocab`).
+        vocab: u32,
+        /// Serving family name (e.g. "LDA").
+        family: String,
+    },
+    /// A topic mixture.
+    InferOk {
+        /// Echo of the request id.
+        id: u64,
+        /// Generation that served the query.
+        generation: u64,
+        /// Queue + service time stamped by the service worker — the same
+        /// measurement the in-process bench reports.
+        latency_micros: u64,
+        /// Tokens folded in.
+        tokens: u32,
+        /// Topic mixture, bit-exact.
+        theta: Vec<f64>,
+        /// Replicas that contributed (empty on a single-model backend).
+        served_by: Vec<u32>,
+    },
+    /// Server-wide counters.
+    StatsOk {
+        /// Echo of the request id.
+        id: u64,
+        /// Live serving generation.
+        generation: u64,
+        /// INFER queries answered.
+        served: u64,
+        /// Error frames sent.
+        errors: u64,
+        /// Connections currently open.
+        connections: u64,
+        /// Connections accepted since start.
+        accepted: u64,
+        /// Frames decoded since start.
+        frames_in: u64,
+        /// Reactor threads.
+        reactors: u32,
+    },
+    /// Liveness answer.
+    Pong {
+        /// Echo of the request id.
+        id: u64,
+    },
+    /// Request-level failure (see [`err`] for codes).
+    Error {
+        /// Echo of the request id (0 when it could not be parsed).
+        id: u64,
+        /// One of the [`err`] codes.
+        code: u8,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// A protocol-level decode failure: the error code to answer with, the
+/// request id when one was recoverable, and a message for the frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError {
+    /// One of the [`err`] codes.
+    pub code: u8,
+    /// Best-effort request id recovered from the payload (0 if none).
+    pub id: u64,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+// ---- little-endian payload building ----------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let take = bytes.len().min(MAX_STR_BYTES);
+    put_u32(out, take as u32);
+    out.extend_from_slice(&bytes[..take]);
+}
+
+// ---- strict payload reading ------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!(
+                "payload truncated: wanted {n} more bytes, {} left",
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        if n > MAX_STR_BYTES {
+            return Err(format!("string field of {n} bytes exceeds the cap"));
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "string field is not UTF-8".to_string())
+    }
+
+    /// Error unless every payload byte was consumed — trailing garbage
+    /// marks a desynchronized or corrupt stream.
+    fn finish(self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} trailing bytes after the message body",
+                self.buf.len() - self.pos
+            ))
+        }
+    }
+}
+
+/// Best-effort request id from a payload (for error frames answering
+/// unparseable requests): every message begins with one.
+fn peek_id(payload: &[u8]) -> u64 {
+    if payload.len() >= 8 {
+        u64::from_le_bytes([
+            payload[0], payload[1], payload[2], payload[3], payload[4], payload[5], payload[6],
+            payload[7],
+        ])
+    } else {
+        0
+    }
+}
+
+// ---- requests ---------------------------------------------------------
+
+/// Encode a request as a complete frame, appended to `out`.
+pub fn encode_request_into(out: &mut Vec<u8>, req: &Request) {
+    let mut p = Vec::new();
+    let opcode = match req {
+        Request::Hello { id, family } => {
+            put_u64(&mut p, *id);
+            put_str(&mut p, family);
+            op::HELLO
+        }
+        Request::Infer {
+            id,
+            seed,
+            min_generation,
+            tokens,
+        } => {
+            put_u64(&mut p, *id);
+            put_u64(&mut p, *seed);
+            put_u64(&mut p, *min_generation);
+            put_u32(&mut p, tokens.len() as u32);
+            for &w in tokens {
+                put_u32(&mut p, w);
+            }
+            op::INFER
+        }
+        Request::Stats { id } => {
+            put_u64(&mut p, *id);
+            op::STATS
+        }
+        Request::Ping { id } => {
+            put_u64(&mut p, *id);
+            op::PING
+        }
+    };
+    super::frame::encode_into(out, opcode, &p);
+}
+
+/// Decode a request frame, validating version, opcode, and payload.
+pub fn decode_request(frame: &Frame) -> Result<Request, ProtoError> {
+    let id = peek_id(&frame.payload);
+    if frame.version != PROTO_VERSION {
+        return Err(ProtoError {
+            code: err::BAD_VERSION,
+            id,
+            message: format!(
+                "protocol version {} not supported (this server speaks {PROTO_VERSION})",
+                frame.version
+            ),
+        });
+    }
+    let malformed = |id: u64, m: String| ProtoError {
+        code: err::MALFORMED,
+        id,
+        message: m,
+    };
+    let mut r = Reader::new(&frame.payload);
+    match frame.opcode {
+        op::HELLO => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let family = r.str().map_err(|m| malformed(id, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Request::Hello { id, family })
+        }
+        op::INFER => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let seed = r.u64().map_err(|m| malformed(id, m))?;
+            let min_generation = r.u64().map_err(|m| malformed(id, m))?;
+            let n = r.u32().map_err(|m| malformed(id, m))? as usize;
+            // The count is bounded by the frame itself: refuse an
+            // over-declared count before allocating for it.
+            if n * 4 > frame.payload.len() {
+                return Err(malformed(
+                    id,
+                    format!(
+                        "declared {n} tokens but the payload holds at most {}",
+                        frame.payload.len() / 4
+                    ),
+                ));
+            }
+            let mut tokens = Vec::with_capacity(n);
+            for _ in 0..n {
+                tokens.push(r.u32().map_err(|m| malformed(id, m))?);
+            }
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Request::Infer {
+                id,
+                seed,
+                min_generation,
+                tokens,
+            })
+        }
+        op::STATS => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Request::Stats { id })
+        }
+        op::PING => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Request::Ping { id })
+        }
+        other => Err(ProtoError {
+            code: err::UNKNOWN_OPCODE,
+            id,
+            message: format!("unknown request opcode {other:#04x}"),
+        }),
+    }
+}
+
+// ---- responses --------------------------------------------------------
+
+/// Encode a response as a complete frame, appended to `out`.
+pub fn encode_response_into(out: &mut Vec<u8>, res: &Response) {
+    let mut p = Vec::new();
+    let opcode = match res {
+        Response::HelloOk {
+            id,
+            generation,
+            k,
+            vocab,
+            family,
+        } => {
+            put_u64(&mut p, *id);
+            put_u64(&mut p, *generation);
+            put_u32(&mut p, *k);
+            put_u32(&mut p, *vocab);
+            put_str(&mut p, family);
+            op::HELLO_OK
+        }
+        Response::InferOk {
+            id,
+            generation,
+            latency_micros,
+            tokens,
+            theta,
+            served_by,
+        } => {
+            put_u64(&mut p, *id);
+            put_u64(&mut p, *generation);
+            put_u64(&mut p, *latency_micros);
+            put_u32(&mut p, *tokens);
+            put_u32(&mut p, theta.len() as u32);
+            for &t in theta {
+                put_u64(&mut p, t.to_bits());
+            }
+            put_u32(&mut p, served_by.len() as u32);
+            for &r in served_by {
+                put_u32(&mut p, r);
+            }
+            op::INFER_OK
+        }
+        Response::StatsOk {
+            id,
+            generation,
+            served,
+            errors,
+            connections,
+            accepted,
+            frames_in,
+            reactors,
+        } => {
+            put_u64(&mut p, *id);
+            put_u64(&mut p, *generation);
+            put_u64(&mut p, *served);
+            put_u64(&mut p, *errors);
+            put_u64(&mut p, *connections);
+            put_u64(&mut p, *accepted);
+            put_u64(&mut p, *frames_in);
+            put_u32(&mut p, *reactors);
+            op::STATS_OK
+        }
+        Response::Pong { id } => {
+            put_u64(&mut p, *id);
+            op::PONG
+        }
+        Response::Error { id, code, message } => {
+            put_u64(&mut p, *id);
+            p.push(*code);
+            put_str(&mut p, message);
+            op::ERROR
+        }
+    };
+    super::frame::encode_into(out, opcode, &p);
+}
+
+/// Decode a response frame (the client side of [`decode_request`]).
+pub fn decode_response(frame: &Frame) -> Result<Response, ProtoError> {
+    let id = peek_id(&frame.payload);
+    if frame.version != PROTO_VERSION {
+        return Err(ProtoError {
+            code: err::BAD_VERSION,
+            id,
+            message: format!("response carries protocol version {}", frame.version),
+        });
+    }
+    let malformed = |id: u64, m: String| ProtoError {
+        code: err::MALFORMED,
+        id,
+        message: m,
+    };
+    let mut r = Reader::new(&frame.payload);
+    match frame.opcode {
+        op::HELLO_OK => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let generation = r.u64().map_err(|m| malformed(id, m))?;
+            let k = r.u32().map_err(|m| malformed(id, m))?;
+            let vocab = r.u32().map_err(|m| malformed(id, m))?;
+            let family = r.str().map_err(|m| malformed(id, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Response::HelloOk {
+                id,
+                generation,
+                k,
+                vocab,
+                family,
+            })
+        }
+        op::INFER_OK => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let generation = r.u64().map_err(|m| malformed(id, m))?;
+            let latency_micros = r.u64().map_err(|m| malformed(id, m))?;
+            let tokens = r.u32().map_err(|m| malformed(id, m))?;
+            let n = r.u32().map_err(|m| malformed(id, m))? as usize;
+            if n * 8 > frame.payload.len() {
+                return Err(malformed(id, format!("declared {n} θ entries overrun the payload")));
+            }
+            let mut theta = Vec::with_capacity(n);
+            for _ in 0..n {
+                theta.push(f64::from_bits(r.u64().map_err(|m| malformed(id, m))?));
+            }
+            let m_n = r.u32().map_err(|m| malformed(id, m))? as usize;
+            if m_n * 4 > frame.payload.len() {
+                return Err(malformed(id, format!("declared {m_n} replica ids overrun the payload")));
+            }
+            let mut served_by = Vec::with_capacity(m_n);
+            for _ in 0..m_n {
+                served_by.push(r.u32().map_err(|m| malformed(id, m))?);
+            }
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Response::InferOk {
+                id,
+                generation,
+                latency_micros,
+                tokens,
+                theta,
+                served_by,
+            })
+        }
+        op::STATS_OK => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let generation = r.u64().map_err(|m| malformed(id, m))?;
+            let served = r.u64().map_err(|m| malformed(id, m))?;
+            let errors = r.u64().map_err(|m| malformed(id, m))?;
+            let connections = r.u64().map_err(|m| malformed(id, m))?;
+            let accepted = r.u64().map_err(|m| malformed(id, m))?;
+            let frames_in = r.u64().map_err(|m| malformed(id, m))?;
+            let reactors = r.u32().map_err(|m| malformed(id, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Response::StatsOk {
+                id,
+                generation,
+                served,
+                errors,
+                connections,
+                accepted,
+                frames_in,
+                reactors,
+            })
+        }
+        op::PONG => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Response::Pong { id })
+        }
+        op::ERROR => {
+            let id = r.u64().map_err(|m| malformed(0, m))?;
+            let code = r.u8().map_err(|m| malformed(id, m))?;
+            let message = r.str().map_err(|m| malformed(id, m))?;
+            r.finish().map_err(|m| malformed(id, m))?;
+            Ok(Response::Error { id, code, message })
+        }
+        other => Err(ProtoError {
+            code: err::UNKNOWN_OPCODE,
+            id,
+            message: format!("unknown response opcode {other:#04x}"),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame;
+    use crate::util::rng::Rng;
+
+    fn round_trip_request(req: Request) -> Request {
+        let mut bytes = Vec::new();
+        encode_request_into(&mut bytes, &req);
+        let (f, n) = frame::decode(&bytes).unwrap().expect("complete");
+        assert_eq!(n, bytes.len());
+        decode_request(&f).expect("valid request")
+    }
+
+    fn round_trip_response(res: Response) -> Response {
+        let mut bytes = Vec::new();
+        encode_response_into(&mut bytes, &res);
+        let (f, n) = frame::decode(&bytes).unwrap().expect("complete");
+        assert_eq!(n, bytes.len());
+        decode_response(&f).expect("valid response")
+    }
+
+    #[test]
+    fn requests_round_trip_on_arbitrary_payloads() {
+        let mut rng = Rng::new(0x11E5);
+        for _ in 0..100 {
+            let req = match rng.below(4) {
+                0 => Request::Hello {
+                    id: rng.next_u64(),
+                    family: if rng.coin(0.5) { "LDA".into() } else { String::new() },
+                },
+                1 => Request::Infer {
+                    id: rng.next_u64(),
+                    seed: rng.next_u64(),
+                    min_generation: rng.next_u64() % 4,
+                    tokens: (0..rng.below(300)).map(|_| rng.next_u64() as u32).collect(),
+                },
+                2 => Request::Stats { id: rng.next_u64() },
+                _ => Request::Ping { id: rng.next_u64() },
+            };
+            assert_eq!(round_trip_request(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn responses_round_trip_with_bit_exact_theta() {
+        let mut rng = Rng::new(0x2E55);
+        for _ in 0..100 {
+            // Exotic but legal f64 values must survive bit-exactly.
+            let theta: Vec<f64> = (0..rng.below(64) + 1)
+                .map(|i| match i % 5 {
+                    0 => rng.f64(),
+                    1 => f64::MIN_POSITIVE,
+                    2 => 1.0 / 3.0,
+                    3 => 1e-300,
+                    _ => rng.f64() * 1e18,
+                })
+                .collect();
+            let res = Response::InferOk {
+                id: rng.next_u64(),
+                generation: rng.next_u64() % 100,
+                latency_micros: rng.next_u64() % 1_000_000,
+                tokens: rng.next_u64() as u32 % 1000,
+                theta: theta.clone(),
+                served_by: (0..rng.below(5)).map(|r| r as u32).collect(),
+            };
+            match round_trip_response(res.clone()) {
+                Response::InferOk { theta: got, .. } => {
+                    assert_eq!(got.len(), theta.len());
+                    for (a, b) in got.iter().zip(theta.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "θ not bit-exact");
+                    }
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+        let res = Response::Error {
+            id: 7,
+            code: err::FAMILY_MISMATCH,
+            message: "nope".into(),
+        };
+        assert_eq!(round_trip_response(res.clone()), res);
+        let stats = Response::StatsOk {
+            id: 1,
+            generation: 2,
+            served: 3,
+            errors: 4,
+            connections: 5,
+            accepted: 6,
+            frames_in: 7,
+            reactors: 8,
+        };
+        assert_eq!(round_trip_response(stats.clone()), stats);
+    }
+
+    #[test]
+    fn truncated_and_over_declared_payloads_are_malformed_not_panics() {
+        // Build a valid INFER, then mutilate the payload every way a
+        // hostile peer can while keeping the frame itself well-formed.
+        let req = Request::Infer {
+            id: 42,
+            seed: 9,
+            min_generation: 0,
+            tokens: vec![1, 2, 3, 4, 5],
+        };
+        let mut bytes = Vec::new();
+        encode_request_into(&mut bytes, &req);
+        let (full, _) = frame::decode(&bytes).unwrap().unwrap();
+        // Every strict payload prefix: MALFORMED, never a panic.
+        for cut in 0..full.payload.len() {
+            let f = Frame {
+                version: PROTO_VERSION,
+                opcode: op::INFER,
+                payload: full.payload[..cut].to_vec(),
+            };
+            let e = decode_request(&f).expect_err("truncated payload must fail");
+            assert_eq!(e.code, err::MALFORMED, "cut {cut}");
+        }
+        // Over-declared token count (count bytes live at offset 24).
+        let mut p = full.payload.clone();
+        p[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = decode_request(&Frame {
+            version: PROTO_VERSION,
+            opcode: op::INFER,
+            payload: p,
+        })
+        .expect_err("over-declared count must fail");
+        assert_eq!(e.code, err::MALFORMED);
+        assert_eq!(e.id, 42, "id recoverable from a malformed body");
+        // Trailing garbage after a valid body.
+        let mut p = full.payload.clone();
+        p.push(0xEE);
+        let e = decode_request(&Frame {
+            version: PROTO_VERSION,
+            opcode: op::INFER,
+            payload: p,
+        })
+        .expect_err("trailing bytes must fail");
+        assert_eq!(e.code, err::MALFORMED);
+    }
+
+    #[test]
+    fn version_and_opcode_violations_map_to_their_codes() {
+        let mut bytes = Vec::new();
+        encode_request_into(&mut bytes, &Request::Ping { id: 5 });
+        let (mut f, _) = frame::decode(&bytes).unwrap().unwrap();
+        f.version = 9;
+        let e = decode_request(&f).expect_err("bad version");
+        assert_eq!((e.code, e.id), (err::BAD_VERSION, 5));
+        let f = Frame {
+            version: PROTO_VERSION,
+            opcode: 0x77,
+            payload: 123u64.to_le_bytes().to_vec(),
+        };
+        let e = decode_request(&f).expect_err("unknown opcode");
+        assert_eq!((e.code, e.id), (err::UNKNOWN_OPCODE, 123));
+    }
+}

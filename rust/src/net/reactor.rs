@@ -1,0 +1,440 @@
+//! One reactor: a thread owning a set of nonblocking connections, a
+//! decode → micro-batch → encode loop, and its own
+//! [`InferenceService`] worker over the shared backend.
+//!
+//! The loop per iteration: adopt sockets handed off by the accept
+//! thread, drain readable bytes into each connection's read buffer,
+//! decode complete frames, convert INFER frames into
+//! [`InferenceService::submit_with_seed`] jobs (so the micro-batch path
+//! and the deterministic per-request RNG streams engage exactly as they
+//! do in-process), poll pending reply channels, encode finished answers
+//! into the write buffer, and flush what the socket will take. Control
+//! frames (HELLO/STATS/PING) are answered inline. A connection is
+//! dropped when the peer closes, on I/O error, when its write buffer
+//! outgrows the slow-consumer cap, or after a connection-fatal protocol
+//! error's error frame has been flushed.
+//!
+//! Queue back-pressure propagates naturally: `submit_with_seed` blocks
+//! while the service queue is full, which stalls this reactor's decode
+//! loop, which stops reading, which fills the peer's TCP window —
+//! exactly the cascade an open-loop overload needs to hit the client.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use super::frame::{self, FrameError};
+use super::proto::{self, err, Request, Response};
+use crate::serve::handle::QueryBackend;
+use crate::serve::infer::InferResult;
+use crate::serve::service::{InferenceService, ServeConfig};
+
+/// Sleep when a full pass over every connection made no progress.
+const IDLE_SLEEP: Duration = Duration::from_micros(200);
+
+/// Read chunk size per `read` call.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// What the server tells clients about the model behind it (the
+/// [`QueryBackend`] trait is deliberately metadata-free, so the server
+/// captures this once at startup).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Serving family name (e.g. "LDA") — HELLO cross-checks it.
+    pub family: String,
+    /// Topic count: the length of every INFER_OK θ.
+    pub k: u32,
+    /// Vocabulary size (ids ≥ vocab are legal but never-observed: they
+    /// fold in under pure smoothing).
+    pub vocab: u32,
+}
+
+/// Counters shared by the accept thread, every reactor, and
+/// [`WireServer::stats`](super::server::WireServer::stats).
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Connections accepted since start.
+    pub accepted: AtomicU64,
+    /// Connections currently open.
+    pub conns_open: AtomicU64,
+    /// Frames decoded since start.
+    pub frames_in: AtomicU64,
+    /// INFER queries answered.
+    pub served: AtomicU64,
+    /// Error frames sent.
+    pub errors: AtomicU64,
+    /// Set by shutdown; every thread exits its loop on observing it.
+    pub stop: AtomicBool,
+}
+
+/// A nonblocking byte stream — TCP or Unix-domain, one enum so the
+/// reactor loop is transport-agnostic.
+pub(crate) enum Stream {
+    /// Loopback/remote TCP.
+    Tcp(TcpStream),
+    /// Unix-domain socket.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+struct Conn {
+    stream: Stream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// In-flight INFER jobs: (request id, reply channel), answered in
+    /// whatever order the service finishes them (ids correlate).
+    pending: Vec<(u64, mpsc::Receiver<InferResult>)>,
+    /// Peer closed its write side; drop once nothing is left to answer.
+    read_closed: bool,
+    /// Connection-fatal protocol error seen; stop reading, drop once the
+    /// error frame (and any earlier answers) have flushed.
+    closing: bool,
+    /// Unrecoverable I/O state; drop immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: Stream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            pending: Vec::new(),
+            read_closed: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.dead
+            || ((self.closing || self.read_closed)
+                && self.wbuf.is_empty()
+                && self.pending.is_empty())
+    }
+}
+
+/// The reactor thread body. Owns its connections and its own
+/// [`InferenceService`] (micro-batching worker pool) over the shared
+/// backend; exits when `counters.stop` is set, closing every connection.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_reactor(
+    reactor_id: usize,
+    handoff: mpsc::Receiver<Stream>,
+    backend: Arc<dyn QueryBackend>,
+    info: ModelInfo,
+    service_cfg: ServeConfig,
+    counters: Arc<Counters>,
+    max_wbuf: usize,
+    reactors_total: u32,
+) {
+    let service = InferenceService::spawn(backend.clone(), service_cfg);
+    let mut conns: Vec<Conn> = Vec::new();
+    while !counters.stop.load(Ordering::Relaxed) {
+        // Adopt newly accepted sockets.
+        loop {
+            match handoff.try_recv() {
+                Ok(s) => conns.push(Conn::new(s)),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        let mut progress = false;
+        for conn in conns.iter_mut() {
+            progress |= service_conn(conn, &service, &backend, &info, &counters, reactors_total);
+            if conn.wbuf.len() > max_wbuf {
+                crate::warn!(
+                    "net",
+                    "reactor {reactor_id}: dropping slow consumer ({} buffered bytes)",
+                    conn.wbuf.len()
+                );
+                conn.dead = true;
+            }
+        }
+        let before = conns.len();
+        conns.retain(|c| {
+            if c.done() {
+                c.stream.shutdown();
+                false
+            } else {
+                true
+            }
+        });
+        let dropped = (before - conns.len()) as u64;
+        if dropped > 0 {
+            counters.conns_open.fetch_sub(dropped, Ordering::Relaxed);
+            progress = true;
+        }
+        if !progress {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+    counters
+        .conns_open
+        .fetch_sub(conns.len() as u64, Ordering::Relaxed);
+    for conn in &conns {
+        conn.stream.shutdown();
+    }
+    drop(conns);
+    service.shutdown();
+}
+
+/// One pass over one connection: read, decode, dispatch, poll replies,
+/// flush. Returns whether any byte or answer moved.
+fn service_conn(
+    conn: &mut Conn,
+    service: &InferenceService,
+    backend: &Arc<dyn QueryBackend>,
+    info: &ModelInfo,
+    counters: &Arc<Counters>,
+    reactors_total: u32,
+) -> bool {
+    let mut progress = false;
+
+    // Read what the socket has.
+    if !conn.read_closed && !conn.closing && !conn.dead {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    progress = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    progress = true;
+                    if n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    // Decode every complete frame and dispatch it.
+    let mut consumed = 0usize;
+    while !conn.closing && !conn.dead {
+        match frame::decode(&conn.rbuf[consumed..]) {
+            Ok(Some((f, used))) => {
+                consumed += used;
+                counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                handle_frame(conn, &f, service, backend, info, counters, reactors_total);
+                progress = true;
+            }
+            Ok(None) => break,
+            Err(FrameError::Oversize { declared }) => {
+                // The stream cannot re-synchronize after a bad length:
+                // one error frame, then close.
+                send_error(
+                    conn,
+                    counters,
+                    0,
+                    err::OVERSIZE,
+                    &format!("declared frame of {declared} bytes exceeds the cap"),
+                );
+                conn.closing = true;
+                progress = true;
+            }
+        }
+    }
+    if consumed > 0 {
+        conn.rbuf.drain(..consumed);
+    }
+
+    // Poll in-flight INFER replies.
+    if !conn.pending.is_empty() && !conn.dead {
+        let pending = std::mem::take(&mut conn.pending);
+        for (id, rx) in pending {
+            match rx.try_recv() {
+                Ok(res) => {
+                    counters.served.fetch_add(1, Ordering::Relaxed);
+                    send_response(
+                        conn,
+                        &Response::InferOk {
+                            id,
+                            generation: res.generation,
+                            latency_micros: res.latency_micros,
+                            tokens: res.tokens as u32,
+                            theta: res.theta,
+                            served_by: res.served_by,
+                        },
+                    );
+                    progress = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => conn.pending.push((id, rx)),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    send_error(conn, counters, id, err::SHUTTING_DOWN, "service stopped");
+                    progress = true;
+                }
+            }
+        }
+    }
+
+    // Flush what the socket will take.
+    while !conn.wbuf.is_empty() && !conn.dead {
+        match conn.stream.write(&conn.wbuf) {
+            Ok(0) => {
+                conn.dead = true;
+            }
+            Ok(n) => {
+                conn.wbuf.drain(..n);
+                progress = true;
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+            }
+        }
+    }
+
+    progress
+}
+
+fn send_response(conn: &mut Conn, res: &Response) {
+    proto::encode_response_into(&mut conn.wbuf, res);
+}
+
+fn send_error(conn: &mut Conn, counters: &Arc<Counters>, id: u64, code: u8, message: &str) {
+    counters.errors.fetch_add(1, Ordering::Relaxed);
+    send_response(
+        conn,
+        &Response::Error {
+            id,
+            code,
+            message: message.to_string(),
+        },
+    );
+}
+
+fn handle_frame(
+    conn: &mut Conn,
+    f: &frame::Frame,
+    service: &InferenceService,
+    backend: &Arc<dyn QueryBackend>,
+    info: &ModelInfo,
+    counters: &Arc<Counters>,
+    reactors_total: u32,
+) {
+    let req = match proto::decode_request(f) {
+        Ok(req) => req,
+        Err(e) => {
+            send_error(conn, counters, e.id, e.code, &e.message);
+            // A malformed payload or foreign version means the stream
+            // can't be trusted frame-to-frame; an unknown opcode arrived
+            // in a well-formed frame, so the connection survives it.
+            if e.code != err::UNKNOWN_OPCODE {
+                conn.closing = true;
+            }
+            return;
+        }
+    };
+    match req {
+        Request::Hello { id, family } => {
+            if !family.is_empty() && family != info.family {
+                send_error(
+                    conn,
+                    counters,
+                    id,
+                    err::FAMILY_MISMATCH,
+                    &format!("server family is {}, client expects {family}", info.family),
+                );
+                conn.closing = true;
+                return;
+            }
+            send_response(
+                conn,
+                &Response::HelloOk {
+                    id,
+                    generation: backend.generation(),
+                    k: info.k,
+                    vocab: info.vocab,
+                    family: info.family.clone(),
+                },
+            );
+        }
+        Request::Infer {
+            id,
+            seed,
+            min_generation,
+            tokens,
+        } => {
+            if min_generation > 0 && backend.generation() < min_generation {
+                send_error(
+                    conn,
+                    counters,
+                    id,
+                    err::GENERATION_MISMATCH,
+                    &format!(
+                        "serving generation {} < required {min_generation}",
+                        backend.generation()
+                    ),
+                );
+                return;
+            }
+            // May block on a full service queue — that *is* the
+            // back-pressure path (see module docs).
+            let rx = service.submit_with_seed(tokens, seed);
+            conn.pending.push((id, rx));
+        }
+        Request::Stats { id } => {
+            send_response(
+                conn,
+                &Response::StatsOk {
+                    id,
+                    generation: backend.generation(),
+                    served: counters.served.load(Ordering::Relaxed),
+                    errors: counters.errors.load(Ordering::Relaxed),
+                    connections: counters.conns_open.load(Ordering::Relaxed),
+                    accepted: counters.accepted.load(Ordering::Relaxed),
+                    frames_in: counters.frames_in.load(Ordering::Relaxed),
+                    reactors: reactors_total,
+                },
+            );
+        }
+        Request::Ping { id } => {
+            send_response(conn, &Response::Pong { id });
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! The wire server: one accept thread round-robining accepted sockets
+//! over N reactor threads ([`super::reactor`]), each reactor owning its
+//! connections and its own micro-batching [`InferenceService`] worker
+//! over the **shared** hot-reloadable backend.
+//!
+//! ```no_run
+//! use hplvm::net::{ListenAddr, ModelInfo, WireConfig, WireServer};
+//! use hplvm::serve::ServingHandle;
+//! use std::sync::Arc;
+//!
+//! let handle = ServingHandle::load_dir(std::path::Path::new("snapshots")).unwrap();
+//! let info = ModelInfo {
+//!     family: handle.model().kind().family_name().to_string(),
+//!     k: handle.model().k() as u32,
+//!     vocab: handle.model().vocab() as u32,
+//! };
+//! let server = WireServer::start(
+//!     handle.clone(),
+//!     info,
+//!     &ListenAddr::parse("127.0.0.1:0"),
+//!     WireConfig::default(),
+//! )
+//! .unwrap();
+//! println!("serving on {}", server.local_addr());
+//! handle.reload_latest().ok(); // hot reload: in-flight wire queries unaffected
+//! server.shutdown();
+//! ```
+//!
+//! [`InferenceService`]: crate::serve::InferenceService
+
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::reactor::{run_reactor, Counters, ModelInfo, Stream};
+use crate::serve::handle::QueryBackend;
+use crate::serve::service::ServeConfig;
+use crate::Result;
+
+/// Accept-thread poll interval when no connection is waiting.
+const ACCEPT_IDLE: Duration = Duration::from_micros(500);
+
+/// Where to listen.
+#[derive(Clone, Debug)]
+pub enum ListenAddr {
+    /// TCP `host:port` (port 0 picks a free port — read it back from
+    /// [`WireServer::local_addr`]).
+    Tcp(String),
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse a CLI-style address: `unix:/path/to.sock` for a Unix-domain
+    /// socket, anything else as TCP `host:port`.
+    pub fn parse(s: &str) -> ListenAddr {
+        #[cfg(unix)]
+        if let Some(path) = s.strip_prefix("unix:") {
+            return ListenAddr::Unix(PathBuf::from(path));
+        }
+        ListenAddr::Tcp(s.to_string())
+    }
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Tcp(a) => write!(f, "{a}"),
+            #[cfg(unix)]
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Wire-server configuration.
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Reactor threads (0 = one per available core).
+    pub reactors: usize,
+    /// Per-reactor [`InferenceService`](crate::serve::InferenceService)
+    /// shape. Default: one worker per reactor (the thread-per-core
+    /// budget: a reactor thread + its worker), shared service seed so
+    /// every reactor derives identical per-request streams.
+    pub service: ServeConfig,
+    /// Drop a connection whose unflushed write buffer exceeds this
+    /// (slow-consumer protection).
+    pub max_wbuf_bytes: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            reactors: 2,
+            service: ServeConfig {
+                workers: 1,
+                ..ServeConfig::default()
+            },
+            max_wbuf_bytes: 8 << 20,
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(true)?;
+                // Frames are small; Nagle would serialize request/response
+                // round-trips at ~40 ms each.
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(true)?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}
+
+/// Point-in-time server counters (see [`WireServer::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// Connections accepted since start.
+    pub accepted: u64,
+    /// Connections currently open.
+    pub connections: u64,
+    /// Frames decoded since start.
+    pub frames_in: u64,
+    /// INFER queries answered.
+    pub served: u64,
+    /// Error frames sent.
+    pub errors: u64,
+    /// Reactor threads.
+    pub reactors: u32,
+}
+
+/// A running wire front-end. [`shutdown`](Self::shutdown) (or drop)
+/// stops the accept thread, closes every connection, and joins the
+/// reactors.
+pub struct WireServer {
+    local: String,
+    counters: Arc<Counters>,
+    accept: Option<JoinHandle<()>>,
+    reactors: Vec<JoinHandle<()>>,
+    #[cfg(unix)]
+    unix_path: Option<PathBuf>,
+}
+
+impl WireServer {
+    /// Bind `addr` and start serving `backend` over the wire.
+    pub fn start(
+        backend: Arc<dyn QueryBackend>,
+        info: ModelInfo,
+        addr: &ListenAddr,
+        cfg: WireConfig,
+    ) -> Result<WireServer> {
+        let n_reactors = if cfg.reactors == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+        } else {
+            cfg.reactors
+        };
+        let (listener, local) = match addr {
+            ListenAddr::Tcp(a) => {
+                let l = TcpListener::bind(a)
+                    .map_err(|e| anyhow::anyhow!("bind {a}: {e}"))?;
+                let local = l
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| a.clone());
+                l.set_nonblocking(true)
+                    .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+                (Listener::Tcp(l), local)
+            }
+            #[cfg(unix)]
+            ListenAddr::Unix(path) => {
+                // A previous run's socket file would fail the bind.
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| anyhow::anyhow!("bind unix:{}: {e}", path.display()))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+                (Listener::Unix(l), format!("unix:{}", path.display()))
+            }
+        };
+        let counters = Arc::new(Counters::default());
+        let mut reactors = Vec::with_capacity(n_reactors);
+        let mut senders = Vec::with_capacity(n_reactors);
+        for r in 0..n_reactors {
+            let (tx, rx) = mpsc::channel::<Stream>();
+            senders.push(tx);
+            let backend = backend.clone();
+            let info = info.clone();
+            let service_cfg = cfg.service.clone();
+            let counters = counters.clone();
+            let max_wbuf = cfg.max_wbuf_bytes.max(1 << 16);
+            let reactors_total = n_reactors as u32;
+            reactors.push(
+                std::thread::Builder::new()
+                    .name(format!("wire-reactor-{r}"))
+                    .spawn(move || {
+                        run_reactor(
+                            r,
+                            rx,
+                            backend,
+                            info,
+                            service_cfg,
+                            counters,
+                            max_wbuf,
+                            reactors_total,
+                        )
+                    })
+                    .map_err(|e| anyhow::anyhow!("spawn reactor: {e}"))?,
+            );
+        }
+        let accept_counters = counters.clone();
+        let accept = std::thread::Builder::new()
+            .name("wire-accept".to_string())
+            .spawn(move || {
+                // Round-robin hand-off: reactor i gets every n-th socket.
+                let mut next = 0usize;
+                while !accept_counters.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok(stream) => {
+                            accept_counters.accepted.fetch_add(1, Ordering::Relaxed);
+                            accept_counters.conns_open.fetch_add(1, Ordering::Relaxed);
+                            if senders[next % senders.len()].send(stream).is_err() {
+                                // Reactor gone (shutdown race): undo.
+                                accept_counters.conns_open.fetch_sub(1, Ordering::Relaxed);
+                            }
+                            next = next.wrapping_add(1);
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_IDLE);
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            crate::warn!("net", "accept failed: {e}");
+                            std::thread::sleep(ACCEPT_IDLE);
+                        }
+                    }
+                }
+                // Dropping `senders` disconnects every reactor's handoff.
+            })
+            .map_err(|e| anyhow::anyhow!("spawn accept thread: {e}"))?;
+        crate::info!(
+            "net",
+            "wire server listening on {local} ({n_reactors} reactors)"
+        );
+        #[cfg(unix)]
+        let unix_path = match addr {
+            ListenAddr::Unix(p) => Some(p.clone()),
+            _ => None,
+        };
+        Ok(WireServer {
+            local,
+            counters,
+            accept: Some(accept),
+            reactors,
+            #[cfg(unix)]
+            unix_path,
+        })
+    }
+
+    /// The bound address — for TCP with port 0, the resolved `host:port`;
+    /// for Unix sockets, `unix:<path>`.
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Counter snapshot (the same numbers a STATS frame reports).
+    pub fn stats(&self) -> WireStats {
+        WireStats {
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            connections: self.counters.conns_open.load(Ordering::Relaxed),
+            frames_in: self.counters.frames_in.load(Ordering::Relaxed),
+            served: self.counters.served.load(Ordering::Relaxed),
+            errors: self.counters.errors.load(Ordering::Relaxed),
+            reactors: self.reactors.len() as u32,
+        }
+    }
+
+    /// Stop accepting, close every connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.counters.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.reactors.drain(..) {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

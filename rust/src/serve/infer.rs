@@ -75,6 +75,10 @@ pub struct InferResult {
     /// Queue + service latency; filled by the serving layer
     /// ([`super::service`]), zero for direct calls.
     pub latency: Duration,
+    /// `latency` in integer microseconds, stamped by the service worker —
+    /// the one measurement the wire protocol, the loadgen client, and the
+    /// in-process bench all report, so their numbers are comparable.
+    pub latency_micros: u64,
 }
 
 impl InferResult {
@@ -140,6 +144,7 @@ pub fn infer_with_proposals(
             generation: 0,
             served_by: Vec::new(),
             latency: Duration::ZERO,
+            latency_micros: 0,
         };
     }
 
@@ -247,6 +252,7 @@ pub fn infer_with_proposals(
         generation: 0,
         served_by: Vec::new(),
         latency: Duration::ZERO,
+        latency_micros: 0,
     }
 }
 

@@ -39,8 +39,14 @@
 //!   fixed seed. Reloads prepare per-replica but commit set-wide.
 //! * [`service`] — [`InferenceService`]: a bounded queue + worker pool
 //!   draining queries in micro-batches (each batch pins one generation
-//!   of either backend), with per-request deterministic RNG streams and
-//!   back-pressure on overload.
+//!   of either backend), with per-request deterministic RNG streams
+//!   (sequence-numbered, or caller-named via
+//!   [`InferenceService::submit_with_seed`]) and back-pressure on
+//!   overload.
+//!
+//! The network boundary lives one layer up: [`crate::net`] serves either
+//! backend over a framed wire protocol on a thread-per-core reactor,
+//! feeding decoded requests into this module's micro-batch path.
 //!
 //! ```no_run
 //! use hplvm::serve::{InferenceService, ReplicaSet, ServeConfig, ServingHandle};

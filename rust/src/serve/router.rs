@@ -67,6 +67,11 @@ pub const REPLICA_VNODES: usize = 128;
 /// word's statistics always live together on one replica.
 const ROUTE_MATRIX: u8 = 0;
 
+/// Documents at least this long gather their per-replica proposals on
+/// concurrent scoped threads; shorter ones stay on the calling thread,
+/// where the fan-out costs more than the cache lookups it parallelizes.
+const CONCURRENT_GATHER_MIN_TOKENS: usize = 64;
+
 /// The vocabulary partition: which replica owns which word.
 #[derive(Clone, Debug)]
 pub struct QueryRouter {
@@ -150,17 +155,54 @@ impl SetGeneration {
     /// replicas that contributed (ascending).
     pub fn infer_doc(&self, tokens: &[u32], cfg: &InferConfig, rng: &mut Rng) -> InferResult {
         let scatter = self.router.scatter(tokens);
+        let busy: Vec<usize> = scatter
+            .iter()
+            .enumerate()
+            .filter(|(_, idx)| !idx.is_empty())
+            .map(|(r, _)| r)
+            .collect();
+        let served_by: Vec<u32> = busy.iter().map(|&r| r as u32).collect();
         let mut gathered: Vec<Option<Arc<super::cache::WordProposal>>> =
             vec![None; tokens.len()];
-        let mut served_by = Vec::new();
-        for (r, indices) in scatter.iter().enumerate() {
-            if indices.is_empty() {
-                continue;
+        if busy.len() >= 2 && tokens.len() >= CONCURRENT_GATHER_MIN_TOKENS {
+            // Concurrent gather: one scoped thread per busy replica, each
+            // resolving only its own slice's words against its own alias
+            // cache (per-replica locks — no contention across threads).
+            // Proposal resolution never touches `rng`, and the results
+            // are merged back by token index, so the fold-in below
+            // consumes `rng` exactly as the sequential path does: the
+            // routed answer stays bit-identical to single-replica.
+            let parts: Vec<Vec<(usize, Arc<super::cache::WordProposal>)>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = busy
+                        .iter()
+                        .map(|&r| {
+                            let indices = &scatter[r];
+                            let slice = &self.models[r];
+                            s.spawn(move || {
+                                indices
+                                    .iter()
+                                    .map(|&i| (i, slice.proposal(tokens[i])))
+                                    .collect()
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("gather thread panicked"))
+                        .collect()
+                });
+            for part in parts {
+                for (i, p) in part {
+                    gathered[i] = Some(p);
+                }
             }
-            served_by.push(r as u32);
-            let slice = &self.models[r];
-            for &i in indices {
-                gathered[i] = Some(slice.proposal(tokens[i]));
+        } else {
+            for &r in &busy {
+                let slice = &self.models[r];
+                for &i in &scatter[r] {
+                    gathered[i] = Some(slice.proposal(tokens[i]));
+                }
             }
         }
         let proposals: Vec<_> = gathered.into_iter().flatten().collect();
@@ -414,12 +456,13 @@ impl ReplicaSet {
     ///
     /// The vocabulary is re-partitioned over a fresh consistent-hash
     /// router — a grow `N → N+1` re-homes only ≈`1/(N+1)` of the words —
-    /// and fresh [`Replica`]s are built with cold alias caches (ownership
-    /// changed, so caches refill on demand rather than pre-warm).
-    /// Queries in flight keep the [`SetGeneration`] they pinned, which
-    /// scatters over the *old* membership until the micro-batch
-    /// finishes: a resize never drops a query. Returns the new set
-    /// generation.
+    /// and each surviving replica's alias cache is **selectively
+    /// pre-warmed** with the resident words whose ownership did *not*
+    /// move (their tables are still valid under the new topology; only
+    /// the ≈`1/(N+1)` re-homed words start cold). Queries in flight keep
+    /// the [`SetGeneration`] they pinned, which scatters over the *old*
+    /// membership until the micro-batch finishes: a resize never drops a
+    /// query. Returns the new set generation.
     pub fn resize_with_stores(
         &self,
         meta: SnapshotMeta,
@@ -444,6 +487,25 @@ impl ReplicaSet {
             .into_iter()
             .map(Arc::new)
             .collect();
+        // Selective pre-warm: a replica that survives the resize keeps
+        // owning every word the new router still maps to it, and those
+        // words' alias tables are identical under the new topology. Carry
+        // them over warm (coldest-first, as `resident_words` yields them)
+        // so only the ≈1/(N+1) re-homed words pay a post-resize cache
+        // miss — the p99 softener the ROADMAP carried.
+        for (r, old) in outgoing.models.iter().enumerate() {
+            if r >= models.len() {
+                continue; // replica departs on a shrink
+            }
+            let kept: Vec<u32> = old
+                .resident_words()
+                .into_iter()
+                .filter(|&w| router.owner(w) == r as u32)
+                .collect();
+            if !kept.is_empty() {
+                models[r].prewarm_words(&kept);
+            }
+        }
         let fresh: Vec<Arc<Replica>> = models
             .iter()
             .enumerate()
@@ -637,6 +699,76 @@ mod tests {
         assert_eq!(solo.served_by, vec![0]);
         for (x, y) in want.theta.iter().zip(solo.theta.iter()) {
             assert_eq!(x.to_bits(), y.to_bits(), "shrunk θ diverged");
+        }
+    }
+
+    #[test]
+    fn concurrent_gather_matches_single_replica_bitwise() {
+        // A document long enough to cross CONCURRENT_GATHER_MIN_TOKENS
+        // spread over every replica exercises the scoped-thread gather —
+        // and the answer must still be bit-identical to the unsliced
+        // model, because proposal resolution never touches the RNG.
+        let single =
+            ServingModel::from_stores(toy_meta(), toy_stores(50), 1 << 20).unwrap();
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 4, 1 << 20).unwrap();
+        let doc: Vec<u32> = (0..CONCURRENT_GATHER_MIN_TOKENS * 3)
+            .map(|i| (i % 20) as u32)
+            .collect();
+        let cfg = InferConfig::default();
+        let a = infer_doc(&single, &doc, &cfg, &mut Rng::new(4242));
+        let b = set.infer(&doc, &cfg, &mut Rng::new(4242));
+        for (x, y) in a.theta.iter().zip(b.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "concurrent-gather θ diverged");
+        }
+        // All replicas own some of the 20-word vocabulary here, so the
+        // concurrent path (≥ 2 busy replicas) genuinely ran.
+        assert!(b.served_by.len() >= 2, "served_by = {:?}", b.served_by);
+        let mut sorted = b.served_by.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, b.served_by, "served_by must stay ascending");
+    }
+
+    #[test]
+    fn resize_prewarms_only_words_that_kept_their_owner() {
+        let set = ReplicaSet::from_stores(toy_meta(), toy_stores(50), 2, 1 << 20).unwrap();
+        // Make every word's alias table resident in the outgoing
+        // generation.
+        let gen1 = set.current();
+        for w in 0..20u32 {
+            for m in gen1.models() {
+                if m.has_row(w) {
+                    m.proposal(w);
+                }
+            }
+        }
+        let old_router = set.router();
+        let g = set.resize_with_stores(toy_meta(), &toy_stores(50), 3).unwrap();
+        assert_eq!(g, 2);
+        let new_router = set.router();
+        let gen2 = set.current();
+        for (r, m) in gen2.models().iter().enumerate().take(2) {
+            let stats = m.cache_stats();
+            // Words owned by r under BOTH routers were carried over warm.
+            let kept = (0..20u32)
+                .filter(|&w| {
+                    old_router.owner(w) == r as u32 && new_router.owner(w) == r as u32
+                })
+                .count() as u64;
+            assert_eq!(
+                stats.prewarmed, kept,
+                "replica {r}: prewarmed {} but {kept} words kept their owner",
+                stats.prewarmed
+            );
+            assert_eq!(stats.misses, 0, "pre-warm must not count as misses");
+            // And the pre-warmed words answer without a build: hits only.
+            for w in 0..20u32 {
+                if old_router.owner(w) == r as u32 && new_router.owner(w) == r as u32 {
+                    m.proposal(w);
+                }
+            }
+            let after = m.cache_stats();
+            assert_eq!(after.misses, 0, "replica {r}: a kept word went cold");
+            assert_eq!(after.hits, kept, "replica {r}: kept words must hit");
         }
     }
 

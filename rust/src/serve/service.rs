@@ -45,6 +45,9 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Fold-in chain settings.
     pub infer: InferConfig,
+    /// `serve --watch` snapshot-poll interval in milliseconds (the
+    /// wire server and the CLI watcher both read it from here).
+    pub watch_interval_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +58,7 @@ impl Default for ServeConfig {
             max_batch: 32,
             seed: 42,
             infer: InferConfig::default(),
+            watch_interval_ms: 200,
         }
     }
 }
@@ -62,6 +66,9 @@ impl Default for ServeConfig {
 struct Job {
     tokens: Vec<u32>,
     seq: u64,
+    /// Explicit RNG stream ([`InferenceService::submit_with_seed`]);
+    /// `None` derives from `seq` as before.
+    seed: Option<u64>,
     enqueued: Instant,
     reply: mpsc::Sender<InferResult>,
 }
@@ -144,6 +151,19 @@ impl InferenceService {
     /// (back-pressure). The receiver yields the result, or disconnects if
     /// the service shut down before the job ran.
     pub fn submit(&self, tokens: Vec<u32>) -> mpsc::Receiver<InferResult> {
+        self.enqueue(tokens, None)
+    }
+
+    /// Enqueue a query with an explicit RNG stream: the worker derives
+    /// `Rng::new(cfg.seed).derive(seed)` instead of using the request's
+    /// sequence number. This is what makes answers over the wire
+    /// bit-identical to in-process answers — the client names the stream,
+    /// so the result no longer depends on arrival order.
+    pub fn submit_with_seed(&self, tokens: Vec<u32>, seed: u64) -> mpsc::Receiver<InferResult> {
+        self.enqueue(tokens, Some(seed))
+    }
+
+    fn enqueue(&self, tokens: Vec<u32>, seed: Option<u64>) -> mpsc::Receiver<InferResult> {
         let (reply, rx) = mpsc::channel();
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let mut q = self.shared.queue.lock().unwrap();
@@ -154,6 +174,7 @@ impl InferenceService {
             q.jobs.push_back(Job {
                 tokens,
                 seq,
+                seed,
                 enqueued: Instant::now(),
                 reply,
             });
@@ -273,9 +294,11 @@ fn worker_loop(shared: &Shared) {
         // never this batch's pinned state.
         let pinned = shared.backend.pin();
         for job in batch {
-            let mut rng = Rng::new(shared.cfg.seed).derive(job.seq);
+            let stream = job.seed.unwrap_or(job.seq);
+            let mut rng = Rng::new(shared.cfg.seed).derive(stream);
             let mut res = pinned.infer(&job.tokens, &shared.cfg.infer, &mut rng);
             res.latency = job.enqueued.elapsed();
+            res.latency_micros = res.latency.as_micros() as u64;
             shared.served.fetch_add(1, Ordering::Relaxed);
             // The submitter may have stopped listening; that's fine.
             let _ = job.reply.send(res);
@@ -368,6 +391,54 @@ mod tests {
             out
         };
         assert_eq!(run(1, 1), run(4, 8));
+    }
+
+    #[test]
+    fn explicit_seed_pins_the_answer_regardless_of_arrival_order() {
+        // submit_with_seed names the RNG stream, so the same (doc, seed)
+        // answers identically whatever else is in flight and in whatever
+        // order requests arrive — the property the wire front-end's
+        // parity tests lean on.
+        let docs: Vec<Vec<u32>> = (0..10)
+            .map(|i| (0..5).map(|j| ((i * 3 + j) % 10) as u32).collect())
+            .collect();
+        let run = |order: Vec<usize>| -> Vec<Vec<f64>> {
+            let svc = InferenceService::spawn(
+                toy_model(),
+                ServeConfig {
+                    workers: 3,
+                    max_batch: 4,
+                    ..Default::default()
+                },
+            );
+            // Interleave unrelated traffic to shift sequence numbers.
+            let noise: Vec<_> = (0..7).map(|_| svc.submit(vec![1u32, 2])).collect();
+            let mut rxs: Vec<(usize, mpsc::Receiver<InferResult>)> = order
+                .iter()
+                .map(|&i| (i, svc.submit_with_seed(docs[i].clone(), 1000 + i as u64)))
+                .collect();
+            rxs.sort_by_key(|&(i, _)| i);
+            let out = rxs
+                .into_iter()
+                .map(|(_, rx)| rx.recv().unwrap().theta)
+                .collect();
+            for rx in noise {
+                rx.recv().unwrap();
+            }
+            svc.shutdown();
+            out
+        };
+        let forward: Vec<usize> = (0..10).collect();
+        let backward: Vec<usize> = (0..10).rev().collect();
+        assert_eq!(run(forward), run(backward));
+    }
+
+    #[test]
+    fn latency_micros_matches_the_duration_stamp() {
+        let svc = InferenceService::spawn(toy_model(), ServeConfig::default());
+        let res = svc.infer(vec![0u32, 1, 2, 3]).expect("served");
+        assert_eq!(res.latency_micros, res.latency.as_micros() as u64);
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,593 @@
+//! End-to-end tests for the wire front-end ([`hplvm::net`]): the framed
+//! protocol server on its thread-per-core reactor, driven by the load
+//! generator over real sockets.
+//!
+//! The contract under test: answers off the wire are **bit-identical**
+//! to in-process answers at the same service seed (request seeds travel
+//! in-band); a hot reload mid-stream advances generations with zero
+//! dropped or errored frames; routed (multi-replica) serving over the
+//! wire matches single-replica bit-for-bit; and malformed input —
+//! truncated frames, oversize lengths, foreign versions, unknown
+//! opcodes, garbage payloads — never takes the server down or disturbs
+//! other connections.
+
+use hplvm::net::loadgen;
+use hplvm::net::proto::{self, err, op, Request, Response};
+use hplvm::net::{
+    connection_queries, frame, ListenAddr, LoadgenConfig, ModelInfo, WireConfig, WireServer,
+};
+use hplvm::ps::snapshot::{self, SnapshotMeta, Store};
+use hplvm::serve::{InferenceService, ReplicaSet, ServeConfig, ServingHandle};
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deterministic toy statistics: every word observed, spread over `k`
+/// topics; `bump` perturbs the counts so generation 2 is a genuinely
+/// different model.
+fn write_snapshot(dir: &Path, k: u32, vocab: u32, bump: i32) {
+    let mut store = Store::new();
+    for w in 0..vocab {
+        let mut row = vec![0i32; k as usize];
+        row[(w % k) as usize] = 10 + (w % 7) as i32 + bump;
+        store.insert((0, w), row);
+    }
+    let meta = SnapshotMeta {
+        model: "AliasLDA".to_string(),
+        k,
+        alpha: 0.1,
+        beta: 0.01,
+        vocab_size: vocab,
+        slot: 0,
+        n_servers: 1,
+        vnodes: 8,
+        iterations: 1,
+        run_id: 0,
+        tables: None,
+    };
+    let bytes = snapshot::encode_store_meta(&store, &meta);
+    snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
+}
+
+fn snapshot_dir(tag: &str, k: u32, vocab: u32) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hplvm_wire_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    write_snapshot(&dir, k, vocab, 0);
+    dir
+}
+
+fn model_info(handle: &ServingHandle) -> ModelInfo {
+    let m = handle.model();
+    ModelInfo {
+        family: m.kind().family_name().to_string(),
+        k: m.k() as u32,
+        vocab: m.vocab() as u32,
+    }
+}
+
+/// Blocking raw client for the protocol-robustness tests.
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let _ = s.set_nodelay(true);
+    s
+}
+
+/// Read one frame off a blocking socket (10 s deadline). `None` = the
+/// peer closed (or went silent) without completing a frame.
+fn read_frame(s: &mut TcpStream, buf: &mut Vec<u8>) -> Option<frame::Frame> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Ok(Some((f, used))) = frame::decode(buf) {
+            buf.drain(..used);
+            return Some(f);
+        }
+        if Instant::now() > deadline {
+            return None;
+        }
+        match s.read(&mut chunk) {
+            Ok(0) => {
+                return match frame::decode(buf) {
+                    Ok(Some((f, used))) => {
+                        buf.drain(..used);
+                        Some(f)
+                    }
+                    _ => None,
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(ref e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return None,
+        }
+    }
+}
+
+fn expect_error(s: &mut TcpStream, buf: &mut Vec<u8>, want_code: u8, what: &str) {
+    let f = read_frame(s, buf).unwrap_or_else(|| panic!("{what}: no error frame"));
+    match proto::decode_response(&f) {
+        Ok(Response::Error { code, .. }) => {
+            assert_eq!(code, want_code, "{what}: wrong error code")
+        }
+        other => panic!("{what}: expected an error frame, got {other:?}"),
+    }
+}
+
+fn expect_pong(s: &mut TcpStream, buf: &mut Vec<u8>, want_id: u64, what: &str) {
+    let f = read_frame(s, buf).unwrap_or_else(|| panic!("{what}: no PONG"));
+    match proto::decode_response(&f) {
+        Ok(Response::Pong { id }) => assert_eq!(id, want_id, "{what}: PONG id"),
+        other => panic!("{what}: expected PONG, got {other:?}"),
+    }
+}
+
+/// The acceptance core: ≥64 requests in flight across 8 connections
+/// against a 2-reactor server, zero drops or errors, and every θ off the
+/// wire bit-identical to the in-process [`InferenceService`] answer at
+/// the same service seed + request seed.
+#[test]
+fn wire_answers_match_in_process_bitwise_under_concurrency() {
+    let dir = snapshot_dir("parity", 8, 64);
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let server = WireServer::start(
+        handle.clone(),
+        model_info(&handle),
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig::default(),
+    )
+    .expect("server start");
+
+    // 8 connections × window 16 = up to 128 requests in flight.
+    let lg = LoadgenConfig {
+        connections: 8,
+        requests: 16,
+        window: 16,
+        vocab: 64,
+        doc_len: 12.0,
+        keep_responses: true,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(server.local_addr(), &lg).expect("loadgen");
+    assert_eq!(report.errors, 0, "errored frames under concurrent load");
+    assert_eq!(report.timed_out, 0, "dropped requests under concurrent load");
+    assert_eq!(report.answered, 8 * 16, "every request must be answered");
+    assert_eq!(report.responses.len(), 8 * 16);
+
+    // Replay the identical streams in-process: same service seed (the
+    // default both here and in WireConfig::default), same request seeds.
+    let svc = InferenceService::spawn(handle.clone(), ServeConfig::default());
+    for ans in &report.responses {
+        let queries = connection_queries(&lg, ans.conn);
+        let (seed, tokens) = &queries[ans.id as usize];
+        assert_eq!(*seed, ans.seed, "stream seed mismatch");
+        let local = svc
+            .submit_with_seed(tokens.clone(), *seed)
+            .recv()
+            .expect("in-process answer");
+        assert_eq!(local.generation, ans.generation);
+        let wire_bits: Vec<u64> = ans.theta.iter().map(|t| t.to_bits()).collect();
+        let local_bits: Vec<u64> = local.theta.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(
+            wire_bits, local_bits,
+            "conn {} request {}: θ off the wire differs from in-process",
+            ans.conn, ans.id
+        );
+    }
+    svc.shutdown();
+
+    let stats = server.stats();
+    assert_eq!(stats.served, 8 * 16);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.accepted >= 8);
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hot reload mid-stream: swap in a new snapshot while the loadgen is
+/// pumping; generations advance 1 → 2, and not a single request drops
+/// or errors across the swap.
+#[test]
+fn hot_reload_mid_stream_advances_generations_with_zero_drops() {
+    let dir = snapshot_dir("reload", 8, 64);
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let server = WireServer::start(
+        handle.clone(),
+        model_info(&handle),
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig::default(),
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+
+    let lg = LoadgenConfig {
+        connections: 4,
+        requests: 150,
+        window: 4,
+        vocab: 64,
+        doc_len: 10.0,
+        timeout: Duration::from_secs(120),
+        ..LoadgenConfig::default()
+    };
+    let total = (lg.connections * lg.requests) as u64;
+    let client = {
+        let lg = lg.clone();
+        std::thread::spawn(move || loadgen::run(&addr, &lg).expect("loadgen"))
+    };
+
+    // Reload early in the stream so the bulk of the answers land on the
+    // new generation.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while server.stats().served < total / 20 {
+        assert!(Instant::now() < deadline, "load never got going");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    write_snapshot(&dir, 8, 64, 5);
+    assert_eq!(handle.reload(&dir).expect("reload"), 2);
+
+    let report = client.join().expect("client thread");
+    assert_eq!(report.errors, 0, "errors across the hot reload");
+    assert_eq!(report.timed_out, 0, "drops across the hot reload");
+    assert_eq!(report.answered, total, "every request answered");
+    assert!(report.min_generation >= 1);
+    assert_eq!(
+        report.max_generation, 2,
+        "no answer was served by the reloaded generation"
+    );
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Routed serving over the wire: a 3-replica backend answers
+/// bit-identically to a single-replica backend at the same seeds, long
+/// documents engage the concurrent scatter-gather, and answers report
+/// the replicas that served them.
+#[test]
+fn routed_wire_serving_is_bit_identical_to_single_replica() {
+    let dir = snapshot_dir("routed", 8, 96);
+    let set = ReplicaSet::load_dir(&dir, 3).expect("replica-set load");
+    let info = {
+        let m = set.current().models()[0].clone();
+        ModelInfo {
+            family: m.kind().family_name().to_string(),
+            k: m.k() as u32,
+            vocab: m.vocab() as u32,
+        }
+    };
+    let server = WireServer::start(
+        set.clone(),
+        info,
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig::default(),
+    )
+    .expect("server start");
+
+    // Mean length 96 ≫ the concurrent-gather threshold (64 tokens).
+    let lg = LoadgenConfig {
+        connections: 4,
+        requests: 8,
+        window: 4,
+        vocab: 96,
+        doc_len: 96.0,
+        keep_responses: true,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(server.local_addr(), &lg).expect("loadgen");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.timed_out, 0);
+    assert_eq!(report.answered, 4 * 8);
+
+    let single = ServingHandle::load_dir(&dir).expect("single-replica load");
+    let svc = InferenceService::spawn(single, ServeConfig::default());
+    let mut multi_replica_answers = 0usize;
+    for ans in &report.responses {
+        assert!(
+            !ans.served_by.is_empty(),
+            "routed answer must report its serving replicas"
+        );
+        if ans.served_by.len() >= 2 {
+            multi_replica_answers += 1;
+        }
+        let queries = connection_queries(&lg, ans.conn);
+        let (seed, tokens) = &queries[ans.id as usize];
+        let local = svc
+            .submit_with_seed(tokens.clone(), *seed)
+            .recv()
+            .expect("single-replica answer");
+        let wire_bits: Vec<u64> = ans.theta.iter().map(|t| t.to_bits()).collect();
+        let local_bits: Vec<u64> = local.theta.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(
+            wire_bits, local_bits,
+            "conn {} request {}: routed θ differs from single-replica",
+            ans.conn, ans.id
+        );
+    }
+    assert!(
+        multi_replica_answers > 0,
+        "no document scattered across ≥2 replicas — the gather path never ran"
+    );
+    svc.shutdown();
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Protocol robustness: truncated frames, oversize lengths, foreign
+/// versions, unknown opcodes, and garbage payloads each get the
+/// documented treatment — and a well-behaved connection opened before
+/// the abuse keeps working throughout.
+#[test]
+fn malformed_frames_never_kill_the_server_or_other_connections() {
+    let dir = snapshot_dir("abuse", 4, 32);
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let server = WireServer::start(
+        handle.clone(),
+        model_info(&handle),
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig::default(),
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+
+    // The bystander: a healthy connection that must survive everything.
+    let mut good = connect(&addr);
+    let mut good_buf = Vec::new();
+    let mut wire = Vec::new();
+    proto::encode_request_into(&mut wire, &Request::Ping { id: 1 });
+    good.write_all(&wire).unwrap();
+    expect_pong(&mut good, &mut good_buf, 1, "bystander warm-up");
+
+    // 1. Truncated frame, then the peer vanishes: header promises 100
+    //    payload bytes, 10 arrive. The server just sees a half frame and
+    //    an EOF — no panic, nothing to answer.
+    {
+        let mut s = connect(&addr);
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&100u32.to_le_bytes());
+        bad.push(frame::PROTO_VERSION);
+        bad.push(op::PING);
+        bad.extend_from_slice(&[0u8; 10]);
+        s.write_all(&bad).unwrap();
+        drop(s);
+    }
+
+    // 2. Oversize length: rejected from the 4 header bytes alone —
+    //    explicit error frame, then the connection closes.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        s.write_all(&(2u32 << 20).to_le_bytes()).unwrap();
+        s.write_all(&[frame::PROTO_VERSION, op::PING]).unwrap();
+        expect_error(&mut s, &mut buf, err::OVERSIZE, "oversize length");
+        assert!(
+            read_frame(&mut s, &mut buf).is_none(),
+            "oversize connection must close after the error frame"
+        );
+    }
+
+    // 3. Foreign protocol version: error frame (not a hang, not a
+    //    panic), then close.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        let mut bad = Vec::new();
+        frame::encode_parts_into(&mut bad, 99, op::PING, &7u64.to_le_bytes());
+        s.write_all(&bad).unwrap();
+        expect_error(&mut s, &mut buf, err::BAD_VERSION, "foreign version");
+        assert!(
+            read_frame(&mut s, &mut buf).is_none(),
+            "foreign-version connection must close after the error frame"
+        );
+    }
+
+    // 4. Unknown opcode in a well-formed frame: error frame, and the
+    //    connection SURVIVES — a later valid PING is answered.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        s.write_all(&frame::encode(0x55, &11u64.to_le_bytes())).unwrap();
+        expect_error(&mut s, &mut buf, err::UNKNOWN_OPCODE, "unknown opcode");
+        let mut ping = Vec::new();
+        proto::encode_request_into(&mut ping, &Request::Ping { id: 12 });
+        s.write_all(&ping).unwrap();
+        expect_pong(&mut s, &mut buf, 12, "after unknown opcode");
+    }
+
+    // 5. Garbage INFER payload (too short to parse): MALFORMED, close.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        s.write_all(&frame::encode(op::INFER, &[1, 2, 3])).unwrap();
+        expect_error(&mut s, &mut buf, err::MALFORMED, "garbage INFER");
+        assert!(
+            read_frame(&mut s, &mut buf).is_none(),
+            "malformed-payload connection must close after the error frame"
+        );
+    }
+
+    // The bystander still answers real queries.
+    let mut infer = Vec::new();
+    proto::encode_request_into(
+        &mut infer,
+        &Request::Infer {
+            id: 2,
+            seed: 7,
+            min_generation: 0,
+            tokens: vec![1, 2, 3, 4],
+        },
+    );
+    good.write_all(&infer).unwrap();
+    let f = read_frame(&mut good, &mut good_buf).expect("bystander INFER answer");
+    match proto::decode_response(&f) {
+        Ok(Response::InferOk { id, theta, .. }) => {
+            assert_eq!(id, 2);
+            assert_eq!(theta.len(), 4);
+            let sum: f64 = theta.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "θ must normalize (sum {sum})");
+        }
+        other => panic!("bystander expected INFER_OK, got {other:?}"),
+    }
+    assert!(server.stats().errors >= 4, "each abuse must be counted");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Application-level refusals: a HELLO naming the wrong family closes
+/// with FAMILY_MISMATCH; an INFER demanding a future generation gets
+/// GENERATION_MISMATCH but the connection keeps serving.
+#[test]
+fn family_and_generation_mismatches_get_explicit_error_frames() {
+    let dir = snapshot_dir("mismatch", 4, 32);
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let server = WireServer::start(
+        handle.clone(),
+        model_info(&handle),
+        &ListenAddr::parse("127.0.0.1:0"),
+        WireConfig::default(),
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+
+    // Family mismatch: error + close.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        let mut wire = Vec::new();
+        proto::encode_request_into(
+            &mut wire,
+            &Request::Hello {
+                id: 3,
+                family: "NotAFamily".to_string(),
+            },
+        );
+        s.write_all(&wire).unwrap();
+        expect_error(&mut s, &mut buf, err::FAMILY_MISMATCH, "family mismatch");
+        assert!(
+            read_frame(&mut s, &mut buf).is_none(),
+            "family-mismatch connection must close"
+        );
+    }
+
+    // Generation mismatch: error frame, connection survives.
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        let mut wire = Vec::new();
+        proto::encode_request_into(
+            &mut wire,
+            &Request::Infer {
+                id: 4,
+                seed: 1,
+                min_generation: 99,
+                tokens: vec![1, 2, 3],
+            },
+        );
+        s.write_all(&wire).unwrap();
+        expect_error(
+            &mut s,
+            &mut buf,
+            err::GENERATION_MISMATCH,
+            "future generation",
+        );
+        let mut ping = Vec::new();
+        proto::encode_request_into(&mut ping, &Request::Ping { id: 5 });
+        s.write_all(&ping).unwrap();
+        expect_pong(&mut s, &mut buf, 5, "after generation mismatch");
+    }
+
+    // The handshake + STATS report the model shape and live counters.
+    let shape = loadgen::hello(&addr, Duration::from_secs(10)).expect("HELLO");
+    assert_eq!(shape.k, 4);
+    assert_eq!(shape.vocab, 32);
+    assert_eq!(shape.generation, 1);
+    {
+        let mut s = connect(&addr);
+        let mut buf = Vec::new();
+        let mut wire = Vec::new();
+        proto::encode_request_into(&mut wire, &Request::Stats { id: 6 });
+        s.write_all(&wire).unwrap();
+        let f = read_frame(&mut s, &mut buf).expect("STATS answer");
+        match proto::decode_response(&f) {
+            Ok(Response::StatsOk {
+                id,
+                generation,
+                errors,
+                reactors,
+                ..
+            }) => {
+                assert_eq!(id, 6);
+                assert_eq!(generation, 1);
+                assert_eq!(errors, 2, "the two refusals above");
+                assert_eq!(reactors, WireConfig::default().reactors as u32);
+            }
+            other => panic!("expected STATS_OK, got {other:?}"),
+        }
+    }
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The same stack over a Unix-domain socket (the `unix:` address form).
+#[cfg(unix)]
+#[test]
+fn unix_socket_serving_round_trips() {
+    let dir = snapshot_dir("unix", 4, 32);
+    let sock = std::env::temp_dir().join(format!("hplvm_wire_{}.sock", std::process::id()));
+    let handle = ServingHandle::load_dir(&dir).expect("snapshot load");
+    let server = WireServer::start(
+        handle.clone(),
+        model_info(&handle),
+        &ListenAddr::parse(&format!("unix:{}", sock.display())),
+        WireConfig::default(),
+    )
+    .expect("server start");
+    assert_eq!(server.local_addr(), format!("unix:{}", sock.display()));
+
+    let lg = LoadgenConfig {
+        connections: 2,
+        requests: 8,
+        window: 4,
+        vocab: 32,
+        doc_len: 8.0,
+        keep_responses: true,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(server.local_addr(), &lg).expect("loadgen over unix socket");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.answered, 2 * 8);
+
+    // Unix-socket answers are the same bits as in-process answers.
+    let svc = InferenceService::spawn(handle.clone(), ServeConfig::default());
+    let ans = &report.responses[0];
+    let (seed, tokens) = &connection_queries(&lg, ans.conn)[ans.id as usize];
+    let local = svc
+        .submit_with_seed(tokens.clone(), *seed)
+        .recv()
+        .expect("in-process answer");
+    assert_eq!(
+        ans.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+        local.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+    );
+    svc.shutdown();
+    server.shutdown();
+    assert!(!sock.exists(), "socket file must be removed on shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `Arc<ServingHandle>` and `Arc<ReplicaSet>` both satisfy the
+/// `Arc<dyn QueryBackend>` the server takes — the compile-time seam the
+/// CLI relies on.
+#[test]
+fn server_takes_either_backend() {
+    let dir = snapshot_dir("seam", 4, 32);
+    let single: Arc<dyn hplvm::serve::QueryBackend> =
+        ServingHandle::load_dir(&dir).expect("single");
+    let routed: Arc<dyn hplvm::serve::QueryBackend> =
+        ReplicaSet::load_dir(&dir, 2).expect("routed");
+    assert_eq!(single.generation(), 1);
+    assert_eq!(routed.generation(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
