@@ -14,6 +14,7 @@ use hplvm::corpus::generator::{CorpusConfig, GenerativeModel};
 use hplvm::ps::msg::Payload;
 use hplvm::ps::network::{NetConfig, SimNet};
 use hplvm::sampler::alias_lda::AliasLda;
+use hplvm::sampler::counts::CountMatrix;
 use hplvm::sampler::hdp::AliasHdp;
 use hplvm::sampler::pdp::AliasPdp;
 use hplvm::sampler::sparse_lda::SparseLda;
@@ -43,6 +44,57 @@ fn bench_model<S: DocSampler>(
         // The borrow dance: time_units takes FnMut, rng lives outside.
         sweep(s, n_docs, rng);
     })
+}
+
+/// One K-panel case: drive a *raw* [`CountMatrix`] (not a full sampler —
+/// alias/proposal buffers at K=100k would be hundreds of MB and the
+/// panel would measure those, not the rows) with seeded synthetic
+/// tokens shaped like a converged model: skewed word frequencies, each
+/// word drawing from a small per-word topic menu, so rows stay sparse
+/// relative to K. Returns `(table_row, json_entry)`.
+fn memory_panel_case(k: usize) -> (Vec<String>, hplvm::util::json::Json) {
+    const PANEL_VOCAB: usize = 2_000;
+    const PANEL_TOKENS: usize = 400_000;
+    const TOPIC_MENU: usize = 32;
+    let mut m = CountMatrix::new(PANEL_VOCAB, k);
+    let mut rng = Rng::new(0xC0FFEE ^ k as u64);
+    let start = std::time::Instant::now();
+    for _ in 0..PANEL_TOKENS {
+        // min of two uniforms ≈ frequency skew toward low word ids.
+        let w = rng.below(PANEL_VOCAB).min(rng.below(PANEL_VOCAB));
+        let base = w.wrapping_mul(2_654_435_761) % k;
+        let t = (base + rng.below(TOPIC_MENU)) % k;
+        m.inc(w as u32, t, 1);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let inc_tokens_per_sec = PANEL_TOKENS as f64 / secs.max(1e-9);
+
+    let touched = m.iter_rows().count();
+    let resident = m.resident_row_bytes();
+    let dense = touched * 4 * k;
+    let ratio = dense as f64 / (resident.max(1)) as f64;
+    let rows = m.drain_deltas();
+    let wire: u64 = rows.iter().map(|(_, r)| r.wire_bytes()).sum();
+
+    let row = vec![
+        k.to_string(),
+        touched.to_string(),
+        resident.to_string(),
+        dense.to_string(),
+        format!("{ratio:.1}x"),
+        format!("{inc_tokens_per_sec:.0}"),
+        wire.to_string(),
+    ];
+    let json = Json::obj(vec![
+        ("k", Json::Num(k as f64)),
+        ("touched_words", Json::Num(touched as f64)),
+        ("resident_bytes", Json::Num(resident as f64)),
+        ("dense_bytes", Json::Num(dense as f64)),
+        ("dense_over_resident", Json::Num(ratio)),
+        ("inc_tokens_per_sec", Json::Num(inc_tokens_per_sec)),
+        ("drain_wire_bytes", Json::Num(wire as f64)),
+    ]);
+    (row, json)
 }
 
 fn main() {
@@ -128,6 +180,30 @@ fn main() {
         ]],
     );
 
+    // Hybrid-row memory + throughput panel at K ∈ {1k, 10k, 100k}: the
+    // acceptance tier for the fully-sparse model memory is ≥10× smaller
+    // resident bytes than dense at K=10k.
+    bench::section("hybrid-row memory panel — raw CountMatrix, 400k incs");
+    let mut panel_rows = Vec::new();
+    let mut panel_json = Vec::new();
+    for k in [1_000usize, 10_000, 100_000] {
+        let (row, json) = memory_panel_case(k);
+        panel_rows.push(row);
+        panel_json.push(json);
+    }
+    bench::table(
+        &[
+            "K",
+            "touched words",
+            "resident bytes",
+            "dense bytes",
+            "dense/resident",
+            "inc tokens/sec",
+            "drain wire bytes",
+        ],
+        &panel_rows,
+    );
+
     // Machine-readable trajectory at the repository root.
     let json = Json::obj(vec![
         ("bench", Json::Str("sampler_json".into())),
@@ -163,6 +239,7 @@ fn main() {
                 ("reduction", Json::Num(reduction)),
             ]),
         ),
+        ("memory_panel", Json::Arr(panel_json)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sampler.json");
     match std::fs::write(path, format!("{json}\n")) {

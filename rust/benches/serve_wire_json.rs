@@ -28,7 +28,7 @@ fn synthetic_model() -> ServingModel {
         let mut row = vec![0i32; K as usize];
         row[(w % K) as usize] = 40 + (w % 13) as i32;
         row[((w / 7) % K) as usize] += 15;
-        store.insert((0, w), row);
+        store.insert((0, w), row.into());
     }
     let meta = SnapshotMeta {
         model: "AliasLDA".to_string(),

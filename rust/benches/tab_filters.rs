@@ -37,6 +37,7 @@ fn main() {
             Filter {
                 magnitude_fraction: 0.25,
                 uniform_prob: 0.05,
+                cell_level: false,
             },
         ),
     ];

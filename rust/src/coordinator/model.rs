@@ -136,6 +136,28 @@ impl ModelSampler {
         }
     }
 
+    /// Export every replica's non-empty rows in wire form, keyed by the
+    /// same matrix ids [`matrices`] announces. Worker checkpoints carry
+    /// this so a segment resume restores the *pulled* replica state (which
+    /// includes other shards' contributions) instead of rebuilding from
+    /// local `z` alone.
+    ///
+    /// [`matrices`]: ModelSampler::matrices
+    pub fn export_replicas(&self) -> Vec<(u8, Vec<(u32, crate::ps::msg::RowData)>)> {
+        match self {
+            ModelSampler::Yahoo(s) => vec![(MATRIX_PRIMARY, s.nwt.export_rows())],
+            ModelSampler::Alias(s) => vec![(MATRIX_PRIMARY, s.nwt.export_rows())],
+            ModelSampler::Pdp(s) => vec![
+                (MATRIX_PRIMARY, s.m.export_rows()),
+                (MATRIX_TABLES, s.s.export_rows()),
+            ],
+            ModelSampler::Hdp(s) => vec![
+                (MATRIX_PRIMARY, s.nwt.export_rows()),
+                (MATRIX_TABLES, s.tables.export_rows()),
+            ],
+        }
+    }
+
     /// Fold pulled rows (sparse or dense wire form) into a replica +
     /// invalidate stale caches (§3.3).
     pub fn apply_rows(&mut self, matrix: u8, rows: &[(u32, crate::ps::msg::RowData)]) {
@@ -344,6 +366,7 @@ mod tests {
             iteration: 5,
             z: z.to_vec(),
             r: r.to_vec(),
+            replicas: Vec::new(),
         };
         let mut rng2 = Rng::new(99);
         let restored = ModelSampler::build(&cfg, d, 120, Some(&snap), &mut rng2);
@@ -376,6 +399,7 @@ mod tests {
             iteration: 7,
             z,
             r: Vec::new(),
+            replicas: Vec::new(),
         };
         let mut rng = Rng::new(5);
         let s = ModelSampler::build(&cfg, d.clone(), 120, Some(&snap), &mut rng);
@@ -411,6 +435,7 @@ mod tests {
                 iteration: 3,
                 z: z.to_vec(),
                 r: r.to_vec(),
+                replicas: Vec::new(),
             };
             let mut rng2 = Rng::new(77);
             let restored = ModelSampler::build(&cfg, d.clone(), 120, Some(&snap), &mut rng2);

@@ -128,6 +128,7 @@ fn outcome(
                 iteration,
                 z: z.to_vec(),
                 r: r.to_vec(),
+                replicas: sampler.export_replicas(),
             })
         }
     };
@@ -186,6 +187,18 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
         // it. Subsequent sampling moves are genuine deltas again.
         for (_m, replica) in sampler.matrices() {
             let _ = replica.drain_deltas();
+        }
+    }
+    // Restore pulled replica rows from the checkpoint, if it carries any.
+    // `ModelSampler::build` rebuilds replicas from local `z` alone, which
+    // drops the other shards' contributions that earlier pulls had folded
+    // in (and that the first post-resume sweeps would otherwise sample
+    // against). `apply_rows` overwrites row-wise, so this is exact: the
+    // announce path has already pushed its init deltas and the resume
+    // path has drained its delta log, so no pending delta is clobbered.
+    if let Some(snap) = ctx.resume.as_ref() {
+        for (m, rows) in &snap.replicas {
+            sampler.apply_rows(*m, rows);
         }
     }
 
@@ -332,6 +345,7 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
                 iteration,
                 z: z.to_vec(),
                 r: r.to_vec(),
+                replicas: sampler.export_replicas(),
             };
             let path = dir.join(format!("client_shard{}.snap", ctx.shard.id));
             let _ = snapshot::write_atomic(&path, &snapshot::encode_client(&snap));

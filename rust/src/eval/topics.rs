@@ -15,11 +15,11 @@ pub fn top_words(nwt: &CountMatrix, n: usize) -> Vec<Vec<(u32, i32)>> {
     let k = nwt.k();
     let mut tops: Vec<Vec<(u32, i32)>> = vec![Vec::new(); k];
     for (w, row) in nwt.iter_rows() {
-        for (t, &c) in row.iter().enumerate() {
+        row.for_each(|t, c| {
             if c > 0 {
-                tops[t].push((w, c));
+                tops[t as usize].push((w, c));
             }
-        }
+        });
     }
     for top in tops.iter_mut() {
         top.sort_unstable_by_key(|&(_, c)| std::cmp::Reverse(c));

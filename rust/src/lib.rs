@@ -77,14 +77,24 @@
 //! * **Layer 3 ([`ps`] + [`sampler`])** — the parameter server and the
 //!   sparse train-side hot path: node topology, simulated cluster
 //!   transport, server group / scheduler / server manager, samplers,
-//!   projection. [`sampler::counts::CountMatrix`]
+//!   projection. Model memory is fully sparse: every word-topic row —
+//!   replica, delta record, and server slot store alike — is a
+//!   [`sampler::counts::HybridRow`] that climbs a three-stage ladder as
+//!   it fills (sorted short list up to 8 cells → open-addressing hash →
+//!   dense `i32[K]` only past `~K/4` occupancy), so resident bytes track
+//!   `O(nnz)` instead of `O(K)` at K ≥ 10k while `inc`/`get` stay `O(1)`.
+//!   [`sampler::counts::CountMatrix`]
 //!   keeps an `O(k_w)` delta log and an incremental `1/(n_t+β̄)`
 //!   normalizer cache, rows travel as
 //!   [`sampler::counts::RowData`] (sparse below the density break-even,
-//!   dense above; [`ps::msg`] charges real encoded sizes), and the
+//!   dense above; [`ps::msg`] charges real encoded sizes — hybrid rows
+//!   encode to bit-identical wire bytes as the dense era), and the
 //!   per-word alias proposals rebuild in place over pooled buffers
 //!   ([`sampler::alias::AliasBuilder`]) — so a warm sampling sweep costs
 //!   `O(topics actually touched)` per token and allocates nothing.
+//!   [`ps::filter::Filter`] can additionally rank individual
+//!   `(word, topic)` cells by `|δ|` (`cell_level`) on top of the paper's
+//!   row-magnitude priority.
 //! * **Layer 2 (python/compile, build-time)** — JAX dense-math graphs
 //!   (φ normalization, dense alias proposals, the test-perplexity
 //!   estimator), AOT-lowered to HLO text in `artifacts/`.

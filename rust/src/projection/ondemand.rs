@@ -8,6 +8,7 @@
 
 use super::constraint::{project_pair, PairRule};
 use crate::ps::snapshot::Store;
+use crate::sampler::counts::HybridRow;
 
 /// Server-side projection hook over `(a_matrix, b_matrix)` pairs.
 #[derive(Clone, Debug)]
@@ -38,27 +39,49 @@ impl OnDemandProjection {
             if touched_matrix != am && touched_matrix != bm {
                 continue;
             }
-            // Both rows must exist to be comparable; absent = all zeros.
-            let a_row = store.get(&(am, word)).cloned().unwrap_or_default();
-            let b_row = store.get(&(bm, word)).cloned().unwrap_or_default();
-            let k = a_row.len().max(b_row.len());
+            // Only the union of non-zero topics can violate:
+            // `project_pair(rule, 0, 0) == (0, 0)` for every rule, so the
+            // scan is O(nnz) instead of O(K). Absent rows = all zeros.
+            let k = store.get(&(am, word)).map_or(0, |r| r.k()).max(
+                store.get(&(bm, word)).map_or(0, |r| r.k()),
+            );
             if k == 0 {
                 continue;
             }
-            let mut a_new = a_row.clone();
-            let mut b_new = b_row.clone();
-            a_new.resize(k, 0);
-            b_new.resize(k, 0);
+            let mut topics: Vec<u32> = Vec::new();
+            if let Some(r) = store.get(&(am, word)) {
+                r.for_each(|t, _| topics.push(t));
+            }
+            if let Some(r) = store.get(&(bm, word)) {
+                r.for_each(|t, _| topics.push(t));
+            }
+            topics.sort_unstable();
+            topics.dedup();
+            if topics.is_empty() {
+                continue;
+            }
+            let mut a_new = store
+                .get(&(am, word))
+                .cloned()
+                .unwrap_or_else(|| HybridRow::new(k));
+            let mut b_new = store
+                .get(&(bm, word))
+                .cloned()
+                .unwrap_or_else(|| HybridRow::new(k));
+            a_new.ensure_width(k);
+            b_new.ensure_width(k);
             let mut changed = false;
-            for t in 0..k {
-                let (a1, b1) = project_pair(rule, a_new[t], b_new[t]);
-                if a1 != a_new[t] {
-                    a_new[t] = a1;
+            for &t in &topics {
+                let t = t as usize;
+                let (a0, b0) = (a_new.get(t), b_new.get(t));
+                let (a1, b1) = project_pair(rule, a0, b0);
+                if a1 != a0 {
+                    a_new.set(t, a1);
                     corrections += 1;
                     changed = true;
                 }
-                if b1 != b_new[t] {
-                    b_new[t] = b1;
+                if b1 != b0 {
+                    b_new.set(t, b1);
                     corrections += 1;
                     changed = true;
                 }
@@ -79,39 +102,39 @@ mod tests {
     #[test]
     fn corrects_violating_store_rows() {
         let mut store = Store::new();
-        store.insert((0, 5), vec![3, 0, 1]); // m
-        store.insert((1, 5), vec![0, 2, 1]); // s: violations at t=0 (m>0,s=0) and t=1 (s>m)
+        store.insert((0, 5), vec![3, 0, 1].into()); // m
+        store.insert((1, 5), vec![0, 2, 1].into()); // s: violations at t=0 (m>0,s=0) and t=1 (s>m)
         let p = OnDemandProjection::pdp();
         let n = p.correct(&mut store, 0, 5);
         assert!(n >= 2);
-        assert_eq!(store[&(1, 5)], vec![1, 0, 1]);
-        assert_eq!(store[&(0, 5)], vec![3, 0, 1]);
+        assert_eq!(store[&(1, 5)], HybridRow::from(vec![1, 0, 1]));
+        assert_eq!(store[&(0, 5)], HybridRow::from(vec![3, 0, 1]));
     }
 
     #[test]
     fn absent_partner_row_is_created_when_needed() {
         let mut store = Store::new();
-        store.insert((0, 9), vec![4, 0]); // customers, no table row at all
+        store.insert((0, 9), vec![4, 0].into()); // customers, no table row at all
         let p = OnDemandProjection::pdp();
         let n = p.correct(&mut store, 0, 9);
         assert_eq!(n, 1);
-        assert_eq!(store[&(1, 9)], vec![1, 0]);
+        assert_eq!(store[&(1, 9)], HybridRow::from(vec![1, 0]));
     }
 
     #[test]
     fn untouched_matrices_are_ignored() {
         let mut store = Store::new();
-        store.insert((7, 1), vec![-5]);
+        store.insert((7, 1), vec![-5].into());
         let p = OnDemandProjection::pdp();
         assert_eq!(p.correct(&mut store, 7, 1), 0);
-        assert_eq!(store[&(7, 1)], vec![-5]);
+        assert_eq!(store[&(7, 1)], HybridRow::from(vec![-5]));
     }
 
     #[test]
     fn clean_rows_cost_nothing() {
         let mut store = Store::new();
-        store.insert((0, 2), vec![5, 2]);
-        store.insert((1, 2), vec![2, 1]);
+        store.insert((0, 2), vec![5, 2].into());
+        store.insert((1, 2), vec![2, 1].into());
         let p = OnDemandProjection::pdp();
         assert_eq!(p.correct(&mut store, 1, 2), 0);
     }

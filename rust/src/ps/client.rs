@@ -270,6 +270,7 @@ mod tests {
             Filter {
                 magnitude_fraction: 0.2,
                 uniform_prob: 0.0,
+                cell_level: false,
             },
             9,
         );

@@ -7,6 +7,20 @@
 //! pair: the top-`fraction` rows by L1 delta magnitude are sent, every
 //! other row is sent with probability `uniform_prob`, and unsent rows are
 //! *retained* (their deltas re-queued) for a later push.
+//!
+//! Two refinements over a plain sort-and-cut:
+//!
+//! - Row selection uses a partial selection (quickselect) instead of a
+//!   full sort — O(rows) expected instead of O(rows log rows); the sent
+//!   set is identical, only its internal order differs (the server fold
+//!   is order-insensitive).
+//! - `cell_level` ranks individual `(word, topic)` cells by |δ| rather
+//!   than whole rows by L1. At K ≥ 10k a hot word's row mixes a few large
+//!   deltas with thousands of ±1s; cell granularity sends the former now
+//!   and re-queues the latter, shrinking wire bytes for the same staleness
+//!   budget. Split rows go out as topic-sorted [`RowData::Sparse`] halves;
+//!   a row whose cells all land on one side keeps its original encoding,
+//!   so default-path wire bytes are bit-identical.
 
 use super::msg::RowData;
 use crate::util::rng::Rng;
@@ -14,11 +28,16 @@ use crate::util::rng::Rng;
 /// Filter configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Filter {
-    /// Fraction of candidate rows sent by magnitude priority (1.0 = send
-    /// everything, disabling the filter).
+    /// Fraction of candidate rows (or cells, when `cell_level`) sent by
+    /// magnitude priority (1.0 = send everything, disabling the filter).
     pub magnitude_fraction: f64,
-    /// Probability a non-selected row is sent anyway (staleness guard).
+    /// Probability a non-selected row/cell is sent anyway (staleness
+    /// guard).
     pub uniform_prob: f64,
+    /// Rank individual `(word, topic)` cells by |δ| instead of whole
+    /// rows by L1. Off by default: row mode is the paper's filter and
+    /// keeps wire encodings untouched.
+    pub cell_level: bool,
 }
 
 impl Default for Filter {
@@ -26,6 +45,27 @@ impl Default for Filter {
         Filter {
             magnitude_fraction: 1.0,
             uniform_prob: 0.0,
+            cell_level: false,
+        }
+    }
+}
+
+/// Visit the non-zero cells of either wire encoding in topic order.
+fn for_each_cell(row: &RowData, mut f: impl FnMut(u32, i32)) {
+    match row {
+        RowData::Dense(cells) => {
+            for (t, &v) in cells.iter().enumerate() {
+                if v != 0 {
+                    f(t as u32, v);
+                }
+            }
+        }
+        RowData::Sparse(pairs) => {
+            for &(t, v) in pairs {
+                if v != 0 {
+                    f(t, v);
+                }
+            }
         }
     }
 }
@@ -36,6 +76,7 @@ impl Filter {
         Filter {
             magnitude_fraction: 0.5,
             uniform_prob: 0.1,
+            cell_level: false,
         }
     }
 
@@ -50,10 +91,16 @@ impl Filter {
         if self.magnitude_fraction >= 1.0 || rows.len() <= 1 {
             return (rows, Vec::new());
         }
-        // Sort by descending L1 magnitude.
-        rows.sort_by_cached_key(|(_, r)| std::cmp::Reverse(r.l1()));
+        if self.cell_level {
+            return self.select_cells(rows, rng);
+        }
         let cut = ((rows.len() as f64) * self.magnitude_fraction).ceil() as usize;
         let cut = cut.clamp(1, rows.len());
+        // Partial selection: rows[..cut] holds the top-`cut` by L1
+        // (unordered) — O(rows) expected, no full sort.
+        if cut < rows.len() {
+            rows.select_nth_unstable_by_key(cut - 1, |(_, r)| std::cmp::Reverse(r.l1()));
+        }
         let mut send = Vec::with_capacity(cut);
         let mut retain = Vec::new();
         for (i, row) in rows.into_iter().enumerate() {
@@ -61,6 +108,70 @@ impl Filter {
                 send.push(row);
             } else {
                 retain.push(row);
+            }
+        }
+        (send, retain)
+    }
+
+    /// Cell-granularity selection: rank every non-zero `(word, topic)`
+    /// cell by |δ|, send the top `magnitude_fraction` of cells (ties
+    /// broken deterministically in input order), coin-rescue the rest,
+    /// and re-queue whatever remains. Lossless: the cell multiset of
+    /// `send ∪ retain` equals the input's.
+    fn select_cells(
+        &self,
+        rows: Vec<(u32, RowData)>,
+        rng: &mut Rng,
+    ) -> (Vec<(u32, RowData)>, Vec<(u32, RowData)>) {
+        let mut mags: Vec<u32> = Vec::new();
+        for (_, r) in &rows {
+            for_each_cell(r, |_, v| mags.push(v.unsigned_abs()));
+        }
+        let total = mags.len();
+        if total == 0 {
+            return (rows, Vec::new());
+        }
+        let cut = ((total as f64) * self.magnitude_fraction).ceil() as usize;
+        let cut = cut.clamp(1, total);
+        if cut >= total {
+            return (rows, Vec::new());
+        }
+        let (_, &mut thresh, _) =
+            mags.select_nth_unstable_by_key(cut - 1, |&m| std::cmp::Reverse(m));
+        let above = mags.iter().filter(|&&m| m > thresh).count();
+        // Cells strictly above the threshold always go; threshold ties
+        // share the remaining budget first-come-first-served so the sent
+        // cell count is exactly `cut` before any coin rescues.
+        let mut quota = cut - above;
+        let mut send = Vec::new();
+        let mut retain = Vec::new();
+        for (w, row) in rows {
+            let mut send_cells: Vec<(u32, i32)> = Vec::new();
+            let mut keep_cells: Vec<(u32, i32)> = Vec::new();
+            for_each_cell(&row, |t, v| {
+                let m = v.unsigned_abs();
+                let hit = m > thresh
+                    || (m == thresh && quota > 0 && {
+                        quota -= 1;
+                        true
+                    });
+                if hit || rng.coin(self.uniform_prob) {
+                    send_cells.push((t, v));
+                } else {
+                    keep_cells.push((t, v));
+                }
+            });
+            if keep_cells.is_empty() {
+                // Whole row selected (or empty): keep the original
+                // encoding byte-for-byte.
+                send.push((w, row));
+            } else if send_cells.is_empty() {
+                retain.push((w, row));
+            } else {
+                // `for_each_cell` visits topics in order, so both halves
+                // honour the sorted-sparse wire invariant.
+                send.push((w, RowData::Sparse(send_cells)));
+                retain.push((w, RowData::Sparse(keep_cells)));
             }
         }
         (send, retain)
@@ -92,6 +203,7 @@ mod tests {
         let f = Filter {
             magnitude_fraction: 0.34,
             uniform_prob: 0.0,
+            cell_level: false,
         };
         let mut rng = Rng::new(2);
         let (send, retain) = f.select(rows(&[1, 100, 5, 50, 2, 3]), &mut rng);
@@ -107,6 +219,7 @@ mod tests {
         let f = Filter {
             magnitude_fraction: 0.1,
             uniform_prob: 0.5,
+            cell_level: false,
         };
         let mut rng = Rng::new(3);
         let mut rescued = 0;
@@ -131,5 +244,101 @@ mod tests {
             .map(|(w, _)| *w)
             .collect();
         assert_eq!(words_in, words_out);
+    }
+
+    /// Collect the `(word, topic, value)` cell multiset of a batch.
+    fn cells_of(batch: &[(u32, RowData)]) -> Vec<(u32, u32, i32)> {
+        let mut out = Vec::new();
+        for (w, r) in batch {
+            for_each_cell(r, |t, v| out.push((*w, t, v)));
+        }
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn cell_level_sends_exact_budget_of_biggest_cells() {
+        let f = Filter {
+            magnitude_fraction: 0.25,
+            uniform_prob: 0.0,
+            cell_level: true,
+        };
+        let mut rng = Rng::new(5);
+        // 8 non-zero cells across 3 words; top-2 by |δ| are (w0,t1)=-9
+        // and (w2,t0)=7.
+        let input = vec![
+            (0u32, RowData::Dense(vec![1, -9, 2].into_boxed_slice())),
+            (1u32, RowData::Sparse(vec![(0, 3), (2, -2)])),
+            (2u32, RowData::Dense(vec![7, 0, 4].into_boxed_slice())),
+        ];
+        let (send, retain) = f.select(input, &mut rng);
+        let sent = cells_of(&send);
+        assert_eq!(sent, vec![(0, 1, -9), (2, 0, 7)]); // ceil(8·0.25) = 2
+        assert_eq!(cells_of(&retain).len(), 6);
+    }
+
+    #[test]
+    fn cell_level_breaks_ties_deterministically() {
+        let f = Filter {
+            magnitude_fraction: 0.5,
+            uniform_prob: 0.0,
+            cell_level: true,
+        };
+        // Four equal-magnitude cells: the budget (2) goes to the first
+        // two in input order, every run.
+        for seed in 0..8 {
+            let mut rng = Rng::new(seed);
+            let input = vec![
+                (0u32, RowData::Sparse(vec![(0, 5), (1, -5)])),
+                (1u32, RowData::Sparse(vec![(0, -5), (1, 5)])),
+            ];
+            let (send, _) = f.select(input, &mut rng);
+            assert_eq!(cells_of(&send), vec![(0, 0, 5), (0, 1, -5)]);
+        }
+    }
+
+    #[test]
+    fn cell_level_loses_nothing_and_keeps_wire_invariants() {
+        let f = Filter {
+            magnitude_fraction: 0.4,
+            uniform_prob: 0.25,
+            cell_level: true,
+        };
+        let mut rng = Rng::new(6);
+        let input = vec![
+            (3u32, RowData::Dense(vec![0, 2, -8, 1].into_boxed_slice())),
+            (7u32, RowData::Sparse(vec![(1, 1), (3, -4)])),
+            (9u32, RowData::Dense(vec![6, 0, 0, 6].into_boxed_slice())),
+            (11u32, RowData::Sparse(vec![(0, 1)])),
+        ];
+        let before = cells_of(&input);
+        let (send, retain) = f.select(input, &mut rng);
+        let mut after = cells_of(&send);
+        after.extend(cells_of(&retain));
+        after.sort_unstable();
+        assert_eq!(before, after);
+        // Split halves must be topic-sorted sparse rows.
+        for (_, r) in send.iter().chain(retain.iter()) {
+            if let RowData::Sparse(pairs) = r {
+                assert!(pairs.windows(2).all(|p| p[0].0 < p[1].0));
+            }
+        }
+    }
+
+    #[test]
+    fn cell_level_all_zero_rows_pass_through() {
+        let f = Filter {
+            magnitude_fraction: 0.5,
+            uniform_prob: 0.0,
+            cell_level: true,
+        };
+        let mut rng = Rng::new(7);
+        let input = vec![
+            (0u32, RowData::Dense(vec![0, 0].into_boxed_slice())),
+            (1u32, RowData::Sparse(Vec::new())),
+        ];
+        let (send, retain) = f.select(input, &mut rng);
+        assert_eq!(send.len(), 2);
+        assert!(retain.is_empty());
     }
 }

@@ -21,6 +21,7 @@ use super::network::SimNet;
 use super::ring::{Ring, SharedRing};
 use super::snapshot::{self, SnapshotMeta, Store};
 use crate::projection::ondemand::OnDemandProjection;
+use crate::sampler::counts::HybridRow;
 
 /// Server-group configuration.
 #[derive(Clone)]
@@ -137,11 +138,9 @@ impl ServerNode {
                         let row = self
                             .store
                             .entry((matrix, word))
-                            .or_insert_with(|| vec![0i32; width]);
-                        if row.len() < width {
-                            row.resize(width, 0);
-                        }
-                        delta.fold_saturating_into(row);
+                            .or_insert_with(|| HybridRow::new(width));
+                        row.ensure_width(width);
+                        row.fold_rowdata(&delta);
                         self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
                         if let Some(p) = &self.cfg.projection {
                             let n = p.correct(&mut self.store, matrix, word);
@@ -162,7 +161,7 @@ impl ServerNode {
                             // too; a never-touched row is an empty sparse
                             // row (all zeros, ~9 bytes on the wire).
                             let row = match self.store.get(&(matrix, w)) {
-                                Some(row) => RowData::from_dense_auto(row),
+                                Some(row) => row.to_rowdata(),
                                 None => RowData::Sparse(Vec::new()),
                             };
                             (w, row)
@@ -222,7 +221,7 @@ impl ServerNode {
                             by_matrix
                                 .entry(key.0)
                                 .or_default()
-                                .push((key.1, RowData::from_dense_auto(&row)));
+                                .push((key.1, row.to_rowdata()));
                         }
                     }
                     for (matrix, rows) in by_matrix {
@@ -262,7 +261,7 @@ impl ServerNode {
                     for (word, data) in rows {
                         let width = self.cfg.row_width.max(data.min_width());
                         self.store
-                            .insert((matrix, word), data.to_dense(width).into_vec());
+                            .insert((matrix, word), HybridRow::from_rowdata(&data, width));
                         self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
                     }
                     self.net.send(
@@ -799,7 +798,7 @@ mod tests {
         let net = fast_net();
         let me = net.add_node();
         let mut s0 = Store::new();
-        s0.insert((0, 2), vec![9, 1]);
+        s0.insert((0, 2), vec![9, 1].into());
         let group = ServerGroup::spawn_with_stores(
             &net,
             ServerConfig {

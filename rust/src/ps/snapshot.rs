@@ -35,18 +35,27 @@
 //!
 //! Encoders always write the current format; decoders accept all three.
 //!
+//! Client snapshots have their own two-version history: v1 (shares the
+//! `HPLVMSNP` magic) carries shard/iteration/`z`/`r`; v2 (`HPLVMCL2`,
+//! current) appends the pulled replica rows in [`RowData`] wire form so
+//! a resumed worker starts warm. v1 files still decode (empty replicas).
+//!
 //! A *session checkpoint* directory additionally carries a
 //! [`SessionMeta`] file ([`SESSION_META_NAME`]) next to the slot and
 //! client snapshots: run id, completed iteration, RNG epoch, and the
 //! config JSON — everything `TrainSession::resume` needs to continue the
 //! run in a fresh process under the same `run_id`.
 
+use crate::sampler::counts::{HybridRow, RowData};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-/// A server's store: `(matrix, word) → row`.
-pub type Store = HashMap<(u8, u32), Vec<i32>>;
+/// A server's store: `(matrix, word) → row`. Rows are [`HybridRow`]s —
+/// resident memory scales with each word's occupancy, not `K` — but the
+/// on-disk store body is unchanged from the dense era (full-width
+/// little-endian cells), so every format version stays bit-compatible.
+pub type Store = HashMap<(u8, u32), HybridRow>;
 
 const MAGIC: &[u8; 8] = b"HPLVMSNP";
 const MAGIC_V2: &[u8; 8] = b"HPLVMSN2";
@@ -183,12 +192,18 @@ fn encode_store_body(buf: &mut Vec<u8>, store: &Store) {
     // Deterministic order for reproducible files.
     let mut keys: Vec<&(u8, u32)> = store.keys().collect();
     keys.sort();
+    let mut scratch: Vec<i32> = Vec::new();
     for key in keys {
         let row = &store[key];
         buf.push(key.0);
         put_u32(buf, key.1);
-        put_u32(buf, row.len() as u32);
-        for &v in row {
+        put_u32(buf, row.k() as u32);
+        // Materialize through a reusable scratch row: the body stays the
+        // dense-era byte layout regardless of the in-memory form.
+        scratch.clear();
+        scratch.resize(row.k(), 0);
+        row.for_each(|t, v| scratch[t as usize] = v);
+        for &v in &scratch {
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
@@ -206,7 +221,9 @@ fn decode_store_body(r: &mut Reader<'_>) -> Option<Store> {
             let v = r.u32()? as i32;
             row.push(v);
         }
-        store.insert((matrix, word), row);
+        // Construct, don't add-diff: cell values (incl. i32::MIN) must
+        // land verbatim.
+        store.insert((matrix, word), HybridRow::from_dense(&row));
     }
     Some(store)
 }
@@ -473,8 +490,13 @@ pub fn decode_session(bytes: &[u8]) -> Option<SessionMeta> {
     })
 }
 
-/// A client's resumable state: its shard, completed iterations, and all
-/// topic assignments (`z`, plus the PDP/HDP table indicators).
+const MAGIC_CLIENT_V2: &[u8; 8] = b"HPLVMCL2";
+
+/// A client's resumable state: its shard, completed iterations, all
+/// topic assignments (`z`, plus the PDP/HDP table indicators), and —
+/// since client-format v2 — the pulled replica rows, so a resumed worker
+/// samples against the cluster-wide counts immediately instead of
+/// shard-local ones until its first post-resume pull.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ClientSnapshot {
     /// Shard this client was working.
@@ -485,12 +507,62 @@ pub struct ClientSnapshot {
     pub z: Vec<Vec<u32>>,
     /// Flattened table indicators, per document (empty for LDA).
     pub r: Vec<Vec<bool>>,
+    /// Pulled replica rows at snapshot time, per matrix id
+    /// (`(matrix, [(word, row)])`), in wire form. Empty for legacy (v1)
+    /// files; restore is then skipped and the first pull warms the
+    /// replica as before.
+    pub replicas: Vec<(u8, Vec<(u32, RowData)>)>,
 }
 
-/// Serialize a client snapshot.
+fn put_rowdata(buf: &mut Vec<u8>, data: &RowData) {
+    match data {
+        RowData::Dense(r) => {
+            buf.push(0);
+            put_u32(buf, r.len() as u32);
+            for &v in r.iter() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        RowData::Sparse(es) => {
+            buf.push(1);
+            put_u32(buf, es.len() as u32);
+            for &(t, v) in es {
+                put_u32(buf, t);
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn read_rowdata(r: &mut Reader<'_>) -> Option<RowData> {
+    match r.u8()? {
+        0 => {
+            let len = r.u32()? as usize;
+            let mut row = Vec::with_capacity(len);
+            for _ in 0..len {
+                row.push(r.u32()? as i32);
+            }
+            Some(RowData::Dense(row.into_boxed_slice()))
+        }
+        1 => {
+            let len = r.u32()? as usize;
+            let mut es = Vec::with_capacity(len);
+            for _ in 0..len {
+                let t = r.u32()?;
+                let v = r.u32()? as i32;
+                es.push((t, v));
+            }
+            Some(RowData::Sparse(es))
+        }
+        _ => None,
+    }
+}
+
+/// Serialize a client snapshot (current format, v2: appends the replica
+/// section after the v1 fields).
 pub fn encode_client(s: &ClientSnapshot) -> Vec<u8> {
     let mut buf = Vec::new();
-    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(MAGIC_CLIENT_V2);
     put_u64(&mut buf, s.shard as u64);
     put_u64(&mut buf, s.iteration);
     put_u32(&mut buf, s.z.len() as u32);
@@ -510,12 +582,26 @@ pub fn encode_client(s: &ClientSnapshot) -> Vec<u8> {
         }
         buf.extend_from_slice(&bits);
     }
+    put_u32(&mut buf, s.replicas.len() as u32);
+    for (matrix, rows) in &s.replicas {
+        buf.push(*matrix);
+        put_u32(&mut buf, rows.len() as u32);
+        for (w, data) in rows {
+            put_u32(&mut buf, *w);
+            put_rowdata(&mut buf, data);
+        }
+    }
     buf
 }
 
-/// Deserialize a client snapshot.
+/// Deserialize a client snapshot — current (v2) or legacy (v1, shares
+/// the store-v1 magic; decodes with `replicas` empty).
 pub fn decode_client(bytes: &[u8]) -> Option<ClientSnapshot> {
-    if bytes.len() < 8 || &bytes[..8] != MAGIC {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let v2 = &bytes[..8] == MAGIC_CLIENT_V2;
+    if !v2 && &bytes[..8] != MAGIC {
         return None;
     }
     let mut r = Reader { b: bytes, pos: 8 };
@@ -544,11 +630,26 @@ pub fn decode_client(bytes: &[u8]) -> Option<ClientSnapshot> {
         z.push(zd);
         rr.push(rd);
     }
+    let mut replicas = Vec::new();
+    if v2 {
+        let nmat = r.u32()? as usize;
+        for _ in 0..nmat {
+            let matrix = r.u8()?;
+            let nrows = r.u32()? as usize;
+            let mut rows = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                let w = r.u32()?;
+                rows.push((w, read_rowdata(&mut r)?));
+            }
+            replicas.push((matrix, rows));
+        }
+    }
     Some(ClientSnapshot {
         shard,
         iteration,
         z,
         r: rr,
+        replicas,
     })
 }
 
@@ -559,9 +660,9 @@ mod tests {
     #[test]
     fn store_roundtrip() {
         let mut store = Store::new();
-        store.insert((0, 5), vec![1, -2, 3]);
-        store.insert((1, 0), vec![0; 8]);
-        store.insert((0, 1000), vec![i32::MAX, i32::MIN]);
+        store.insert((0, 5), vec![1, -2, 3].into());
+        store.insert((1, 0), vec![0; 8].into());
+        store.insert((0, 1000), vec![i32::MAX, i32::MIN].into());
         let bytes = encode_store(&store);
         let back = decode_store(&bytes).unwrap();
         assert_eq!(store, back);
@@ -609,8 +710,8 @@ mod tests {
     #[test]
     fn store_meta_roundtrip_bit_for_bit() {
         let mut store = Store::new();
-        store.insert((0, 3), vec![7, 0, -1, 4]);
-        store.insert((1, 0), vec![2; 4]);
+        store.insert((0, 3), vec![7, 0, -1, 4].into());
+        store.insert((1, 0), vec![2; 4].into());
         for meta in [sample_meta(), sample_meta_tables()] {
             let bytes = encode_store_meta(&store, &meta);
             let (meta2, store2) = decode_store_meta(&bytes).unwrap();
@@ -628,7 +729,7 @@ mod tests {
     #[test]
     fn v1_files_decode_with_no_meta() {
         let mut store = Store::new();
-        store.insert((0, 9), vec![1, 2]);
+        store.insert((0, 9), vec![1, 2].into());
         let bytes = encode_store(&store);
         let (meta, back) = decode_store_meta(&bytes).unwrap();
         assert!(meta.is_none());
@@ -641,8 +742,8 @@ mod tests {
     #[test]
     fn v2_files_decode_with_no_table_section() {
         let mut store = Store::new();
-        store.insert((0, 9), vec![1, 2]);
-        store.insert((1, 9), vec![0, 1]);
+        store.insert((0, 9), vec![1, 2].into());
+        store.insert((1, 9), vec![0, 1].into());
         // Encode with the legacy writer: genuine v2 bytes.
         let bytes = encode_store_meta_v2(&store, &sample_meta_tables());
         let (meta, back) = decode_store_meta(&bytes).unwrap();
@@ -673,7 +774,7 @@ mod tests {
     fn meta_prefix_and_slot_meta_read_header_only() {
         let mut store = Store::new();
         for w in 0..50u32 {
-            store.insert((0, w), vec![1; 32]);
+            store.insert((0, w), vec![1; 32].into());
         }
         let meta = sample_meta_tables();
         let bytes = encode_store_meta(&store, &meta);
@@ -717,10 +818,53 @@ mod tests {
             iteration: 17,
             z: vec![vec![1, 2, 3], vec![], vec![9; 20]],
             r: vec![vec![true, false, true], vec![], vec![false; 20]],
+            replicas: vec![
+                (
+                    0,
+                    vec![
+                        (4, RowData::Sparse(vec![(0, 2), (7, -1)])),
+                        (9, RowData::Dense(vec![1, 0, 3, 0].into_boxed_slice())),
+                    ],
+                ),
+                (1, vec![(4, RowData::Sparse(vec![(2, 5)]))]),
+            ],
         };
         let bytes = encode_client(&snap);
         let back = decode_client(&bytes).unwrap();
         assert_eq!(snap, back);
+        // Truncations inside the replica section are rejected.
+        for cut in [bytes.len() - 1, bytes.len() - 5] {
+            assert!(decode_client(&bytes[..cut]).is_none(), "cut {cut}");
+        }
+    }
+
+    /// Legacy (v1) client snapshots — the old store-v1 magic, no replica
+    /// section — still decode, with `replicas` empty.
+    #[test]
+    fn client_v1_decodes_with_empty_replicas() {
+        let snap = ClientSnapshot {
+            shard: 1,
+            iteration: 5,
+            z: vec![vec![2, 0]],
+            r: vec![vec![true, true]],
+            replicas: vec![(0, vec![(3, RowData::Sparse(vec![(1, 1)]))])],
+        };
+        // Hand-build the v1 bytes: swap the magic, cut the replica tail.
+        let v2 = encode_client(&snap);
+        let mut v1 = v2.clone();
+        v1[..8].copy_from_slice(MAGIC);
+        // The replica section is the suffix after z/r; find it by
+        // encoding the same snapshot with no replicas.
+        let bare = encode_client(&ClientSnapshot {
+            replicas: Vec::new(),
+            ..snap.clone()
+        });
+        v1.truncate(bare.len() - 4); // minus the empty replica count
+        let back = decode_client(&v1).unwrap();
+        assert_eq!(back.shard, snap.shard);
+        assert_eq!(back.z, snap.z);
+        assert_eq!(back.r, snap.r);
+        assert!(back.replicas.is_empty());
     }
 
     #[test]
@@ -759,7 +903,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("hplvm_snap_test_{}", std::process::id()));
         let path = dir.join("s.snap");
         let mut store = Store::new();
-        store.insert((0, 1), vec![42]);
+        store.insert((0, 1), vec![42].into());
         write_atomic(&path, &encode_store(&store)).unwrap();
         let bytes = read_snapshot(&path).unwrap();
         assert_eq!(decode_store(&bytes).unwrap(), store);

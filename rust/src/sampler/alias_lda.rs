@@ -152,13 +152,24 @@ impl AliasLda {
         let mut p = self.proposals[w as usize]
             .take()
             .unwrap_or_else(|| WordProposal::empty(self.k));
-        let row = self.nwt.row(w);
+        // Baseline (zero-count) weight per topic, then patch the word's
+        // non-zero cells — O(K + nnz) instead of a row `get` per topic,
+        // and no dense ghost row is ever materialized.
         let mut qsum = 0.0;
         for t in 0..self.k {
-            let nwt = row.map_or(0, |r| r[t]).max(0) as f64;
-            let v = self.alpha * (nwt + self.beta) * self.nwt.inv_denom(t);
+            let v = self.alpha * self.beta * self.nwt.inv_denom(t);
             p.qw[t] = v;
             qsum += v;
+        }
+        if let Some(row) = self.nwt.row(w) {
+            let nwt_m = &self.nwt;
+            let (alpha, beta) = (self.alpha, self.beta);
+            row.for_each(|t, c| {
+                let t = t as usize;
+                let v = alpha * ((c.max(0) as f64) + beta) * nwt_m.inv_denom(t);
+                qsum += v - p.qw[t];
+                p.qw[t] = v;
+            });
         }
         p.qsum = qsum;
         self.alias_builder.build_into(&mut p.table, &p.qw);
@@ -219,7 +230,7 @@ impl AliasLda {
         let mut sparse_sum = 0.0;
         let wrow = self.nwt.row(w);
         for (t, c) in self.state.n_dt[d].iter() {
-            let nwt = wrow.map_or(0, |r| r[t as usize]).max(0) as f64;
+            let nwt = wrow.map_or(0, |r| r.get(t as usize)).max(0) as f64;
             let wgt = c as f64 * (nwt + self.beta) * self.nwt.inv_denom(t as usize);
             self.scratch_topics.push(t);
             self.scratch_weights.push(wgt);
@@ -238,13 +249,13 @@ impl AliasLda {
         let beta = self.beta;
         let q_of = |t: usize| {
             let ndt = state.n_dt[d].get(t as u32) as f64;
-            let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
+            let nwt = wrow.map_or(0, |r| r.get(t)).max(0) as f64;
             let sparse = ndt * (nwt + beta) * nwt_m.inv_denom(t);
             sparse + proposals[w as usize].as_ref().map_or(0.0, |p| p.qw[t])
         };
         let p_of = |t: usize| {
             let ndt = state.n_dt[d].get(t as u32) as f64;
-            let nwt = wrow.map_or(0, |r| r[t]).max(0) as f64;
+            let nwt = wrow.map_or(0, |r| r.get(t)).max(0) as f64;
             (ndt + alpha) * (nwt + beta) * nwt_m.inv_denom(t)
         };
 

@@ -1,38 +1,45 @@
-//! Shared sufficient-statistics matrices — the **sparse hot path**.
+//! Shared sufficient-statistics matrices — the **fully sparse hot path**.
 //!
 //! A [`CountMatrix`] is a client's local replica of one shared statistic
 //! (LDA: `n_tw`; PDP: `m_tw` and `s_tw`; HDP adds table counts). Rows are
-//! word-indexed, `K`-wide, lazily allocated (a shard only touches its own
+//! word-indexed, lazily allocated (a shard only touches its own
 //! vocabulary slice), and every mutation is mirrored into a **delta log**
 //! that the parameter-server client drains into batched row pushes (§5.3
 //! "batched communication").
 //!
-//! Three sparsity mechanisms make every per-token operation cost
-//! `O(topics actually touched)` instead of `O(K)`:
+//! Both the replica rows *and* the delta records are [`HybridRow`]s — a
+//! three-stage representation whose memory scales with **occupancy, not
+//! K**:
 //!
-//! * **Sparse delta log.** A token move touches 2 cells, so the per-word
-//!   delta record is a short unsorted `(topic, ±delta)` list (`DeltaRow`)
-//!   that spills to a dense `K`-wide row only past a density threshold
-//!   (`K/4` distinct topics). `inc` is `O(k_w)` with no `K`-wide
-//!   allocation; a word's record is allocated once and reused across
-//!   drain cycles, so the steady-state token loop allocates nothing.
-//! * **Sparse wire rows.** [`CountMatrix::drain_deltas`] emits [`RowData`]
-//!   — `Sparse(Vec<(topic, value)>)` when `8·nnz < 4·K`, `Dense` otherwise
-//!   — and the same enum carries pull responses, so both push and pull
-//!   traffic pay for the cells that exist, not for `K`
-//!   (see [`crate::ps::msg`] for the wire-size accounting).
-//! * **Incremental normalizers.** Every sampler denominator has the shape
-//!   `n_t + smoothing` (`β̄`, PDP `b`, `γ̄`). The matrix caches
-//!   `inv_denom[t] = 1/(max(n_t,0) + smoothing)` and refreshes it on each
-//!   total change (one division per `inc` instead of one per topic per
-//!   token in the samplers' inner loops). Enable with
-//!   [`CountMatrix::set_smoothing`]; read with [`CountMatrix::inv_denom`].
+//! * **Short list** (`≤ 8` entries): sorted `(topic, count)` pairs,
+//!   binary-searched. Covers the overwhelming majority of words at
+//!   paper scale (the average word touches a handful of topics).
+//! * **Open-addressing hash** (up to `~K/4` entries): power-of-two
+//!   table of `(u32 key, i32 val)` slots, linear probing, grown at 3/4
+//!   load. `inc`/`get` stay `O(1)`; iteration skips empty and
+//!   cancelled-to-zero slots.
+//! * **Dense `i32[K]`** — entered only past `K/4` occupancy (or when
+//!   the hash table would outweigh the dense row), where dense is both
+//!   smaller and faster to scan. A cached non-zero count keeps `nnz`
+//!   `O(1)` in every form.
 //!
-//! The replica-merge rule is the paper's: the server aggregates deltas from
-//! all clients; a pull overwrites the local row with the server value
-//! *plus* any still-unflushed local deltas, so local Gibbs moves are never
-//! lost (eventual consistency, §5.3). [`CountMatrix::apply_pull`] borrows
-//! the pending delta record in place — no per-pull clone.
+//! Conversion to/from the [`RowData`] wire forms is lossless and picks
+//! the same sparse/dense break-even (`8·nnz < 4·K`) as
+//! [`RowData::from_dense_auto`], so wire bytes are bit-identical to the
+//! dense era. Records are cleared (capacity kept), not removed, across
+//! drain cycles, so the steady-state token loop allocates nothing.
+//!
+//! The third sparsity mechanism is unchanged: every sampler denominator
+//! has the shape `n_t + smoothing` (`β̄`, PDP `b`, `γ̄`), and the matrix
+//! caches `inv_denom[t] = 1/(max(n_t,0) + smoothing)` refreshed on each
+//! total change (one division per `inc` instead of one per topic per
+//! token). Enable with [`CountMatrix::set_smoothing`]; read with
+//! [`CountMatrix::inv_denom`].
+//!
+//! The replica-merge rule is the paper's: the server aggregates deltas
+//! from all clients; a pull overwrites the local row with the server
+//! value *plus* any still-unflushed local deltas, so local Gibbs moves
+//! are never lost (eventual consistency, §5.3).
 
 use std::collections::HashMap;
 
@@ -151,70 +158,576 @@ impl RowData {
     }
 }
 
-/// A word's unflushed deltas: short list first, dense past the spill
-/// threshold. Entries are unsorted; zero deltas are removed eagerly so
-/// the linear probe stays `O(k_w)`. The dense form tracks its non-zero
-/// count so [`DeltaRow::nnz`] — and with it the matrix's live
-/// `pending` counter — stays `O(1)` in both forms.
+/// Short-list capacity before a row promotes to the hash form.
+const SHORT_MAX: usize = 8;
+
+/// Empty-slot marker in the open-addressing key table (`u32::MAX` is not
+/// a valid topic id — K is bounded well below it).
+const EMPTY: u32 = u32::MAX;
+
+/// Occupancy above which a row densifies: past `~K/4` distinct topics
+/// the dense `i32[K]` row is both smaller than the 8-byte-per-slot hash
+/// table and faster to scan.
+#[inline]
+fn dense_cut(k: usize) -> usize {
+    (k / 4).max(SHORT_MAX)
+}
+
+/// Open-addressing `(topic → count)` table: power-of-two capacity,
+/// Fibonacci-multiply hash, linear probing, no tombstones (a key whose
+/// value cancelled to zero keeps its slot until the next rehash so
+/// probe chains never break).
 #[derive(Clone, Debug)]
-enum DeltaRow {
-    Sparse(Vec<(u32, i32)>),
-    Dense { row: Box<[i32]>, nnz: usize },
+struct HashCells {
+    keys: Box<[u32]>,
+    vals: Box<[i32]>,
+    /// Slots holding a key — including zero-valued ones.
+    occupied: u32,
+    /// Slots holding a non-zero value.
+    nnz: u32,
 }
 
-impl DeltaRow {
-    fn new(spill: usize) -> DeltaRow {
-        // Pre-size to the spill threshold: the list converts to dense
-        // before it would ever reallocate.
-        DeltaRow::Sparse(Vec::with_capacity(spill))
+impl HashCells {
+    fn with_capacity(cap: usize) -> HashCells {
+        let cap = cap.next_power_of_two().max(16);
+        HashCells {
+            keys: vec![EMPTY; cap].into_boxed_slice(),
+            vals: vec![0i32; cap].into_boxed_slice(),
+            occupied: 0,
+            nnz: 0,
+        }
+    }
+
+    /// Probe for `t`: the slot holding it, or the first empty slot.
+    #[inline]
+    fn slot_of(&self, t: u32) -> usize {
+        let mask = self.keys.len() - 1;
+        let mut i = (t.wrapping_mul(0x9E37_79B9) as usize) & mask;
+        loop {
+            let k = self.keys[i];
+            if k == t || k == EMPTY {
+                return i;
+            }
+            i = (i + 1) & mask;
+        }
     }
 
     #[inline]
-    fn add(&mut self, topic: usize, delta: i32, k: usize, spill: usize) {
-        match self {
-            DeltaRow::Sparse(v) => {
-                for i in 0..v.len() {
-                    if v[i].0 as usize == topic {
-                        v[i].1 += delta;
-                        if v[i].1 == 0 {
-                            v.swap_remove(i);
-                        }
-                        return;
+    fn get(&self, t: u32) -> i32 {
+        let i = self.slot_of(t);
+        if self.keys[i] == t {
+            self.vals[i]
+        } else {
+            0
+        }
+    }
+
+    /// True when inserting one more key would push load past 3/4 (the
+    /// probe-chain guarantee; an empty slot must always exist).
+    #[inline]
+    fn wants_grow(&self) -> bool {
+        (self.occupied as usize + 1) * 4 > self.keys.len() * 3
+    }
+
+    /// Rebuild at a capacity sized for the live entries, dropping
+    /// cancelled-to-zero slots.
+    fn rehashed(&self) -> HashCells {
+        let mut next = HashCells::with_capacity((self.nnz as usize + 1) * 2);
+        for i in 0..self.keys.len() {
+            if self.keys[i] != EMPTY && self.vals[i] != 0 {
+                let j = next.slot_of(self.keys[i]);
+                next.keys[j] = self.keys[i];
+                next.vals[j] = self.vals[i];
+                next.occupied += 1;
+                next.nnz += 1;
+            }
+        }
+        next
+    }
+
+    /// Empty the table, keeping its capacity.
+    fn clear(&mut self) {
+        self.keys.fill(EMPTY);
+        self.vals.fill(0);
+        self.occupied = 0;
+        self.nnz = 0;
+    }
+}
+
+fn densify_short(v: &[(u32, i32)], k: usize) -> (Box<[i32]>, u32) {
+    let mut cells = vec![0i32; k].into_boxed_slice();
+    let mut nnz = 0u32;
+    for &(t, val) in v {
+        if val != 0 {
+            cells[t as usize] = val;
+            nnz += 1;
+        }
+    }
+    (cells, nnz)
+}
+
+fn densify_hash(h: &HashCells, k: usize) -> (Box<[i32]>, u32) {
+    let mut cells = vec![0i32; k].into_boxed_slice();
+    let mut nnz = 0u32;
+    for i in 0..h.keys.len() {
+        if h.keys[i] != EMPTY && h.vals[i] != 0 {
+            cells[h.keys[i] as usize] = h.vals[i];
+            nnz += 1;
+        }
+    }
+    (cells, nnz)
+}
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Short(Vec<(u32, i32)>),
+    Hash(HashCells),
+    Dense { cells: Box<[i32]>, nnz: u32 },
+}
+
+/// Which representation a [`HybridRow`] currently uses (diagnostics and
+/// the bench memory panel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowReprKind {
+    /// Sorted short list of `(topic, count)` pairs.
+    Short,
+    /// Open-addressing hash table.
+    Hash,
+    /// Full-width `i32[K]` row.
+    Dense,
+}
+
+/// A word-topic count row whose memory scales with occupancy, not `K`:
+/// sorted short list (≤ 8 pairs) → open-addressing hash → dense
+/// `i32[K]` only past `~K/4` occupancy. `O(1)` [`get`](HybridRow::get) /
+/// [`add`](HybridRow::add) / [`nnz`](HybridRow::nnz) in every form;
+/// [`for_each`](HybridRow::for_each) visits non-zeros only. Promotion is
+/// automatic and one-way under mutation; [`compact`](HybridRow::compact)
+/// demotes after bulk cancellation.
+#[derive(Clone, Debug)]
+pub struct HybridRow {
+    k: u32,
+    repr: Repr,
+}
+
+impl HybridRow {
+    /// Empty row of width `k`.
+    pub fn new(k: usize) -> HybridRow {
+        HybridRow {
+            k: k as u32,
+            repr: Repr::Short(Vec::with_capacity(SHORT_MAX)),
+        }
+    }
+
+    /// Build from a dense slice (width = `cells.len()`), keeping only
+    /// the non-zeros. The representation comes out right-sized.
+    pub fn from_dense(cells: &[i32]) -> HybridRow {
+        let mut row = HybridRow::new(cells.len());
+        for (t, &v) in cells.iter().enumerate() {
+            if v != 0 {
+                row.set(t, v);
+            }
+        }
+        row
+    }
+
+    /// Build from a wire row: width is `width`, widened if the row
+    /// carries a cell beyond it. Values are taken as absolute.
+    pub fn from_rowdata(data: &RowData, width: usize) -> HybridRow {
+        let mut row = HybridRow::new(width.max(data.min_width()));
+        match data {
+            RowData::Dense(r) => {
+                for (t, &v) in r.iter().enumerate() {
+                    if v != 0 {
+                        row.set(t, v);
                     }
                 }
-                if v.len() >= spill {
-                    // Density threshold crossed: spill to a dense row.
-                    let mut dense = vec![0i32; k].into_boxed_slice();
-                    for &(t, d) in v.iter() {
-                        dense[t as usize] = d;
+            }
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    if v != 0 {
+                        row.set(t as usize, v);
                     }
-                    dense[topic] += delta;
-                    let nnz = dense.iter().filter(|&&x| x != 0).count();
-                    *self = DeltaRow::Dense { row: dense, nnz };
+                }
+            }
+        }
+        row
+    }
+
+    /// Row width (`K`).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k as usize
+    }
+
+    /// Non-zero cell count — `O(1)` in every representation.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match &self.repr {
+            Repr::Short(v) => v.len(),
+            Repr::Hash(h) => h.nnz as usize,
+            Repr::Dense { nnz, .. } => *nnz as usize,
+        }
+    }
+
+    /// Current representation (diagnostics / bench panel).
+    pub fn repr_kind(&self) -> RowReprKind {
+        match &self.repr {
+            Repr::Short(_) => RowReprKind::Short,
+            Repr::Hash(_) => RowReprKind::Hash,
+            Repr::Dense { .. } => RowReprKind::Dense,
+        }
+    }
+
+    /// Value at `t` (0 when absent).
+    #[inline]
+    pub fn get(&self, t: usize) -> i32 {
+        debug_assert!(t < self.k as usize, "topic {} out of row width {}", t, self.k);
+        match &self.repr {
+            Repr::Short(v) => v
+                .binary_search_by_key(&(t as u32), |&(tt, _)| tt)
+                .map(|i| v[i].1)
+                .unwrap_or(0),
+            Repr::Hash(h) => h.get(t as u32),
+            Repr::Dense { cells, .. } => cells[t],
+        }
+    }
+
+    /// Core mutation: replace the cell at `t` with `f(current)`. Handles
+    /// the empty↔non-empty bookkeeping and representation promotion; `f`
+    /// is re-applied exactly once if the current form had no room.
+    #[inline]
+    fn update_with<F: Copy + Fn(i32) -> i32>(&mut self, t: usize, f: F) {
+        assert!(t < self.k as usize, "topic {} out of row width {}", t, self.k);
+        let t32 = t as u32;
+        let (applied, promote) = match &mut self.repr {
+            Repr::Short(v) => match v.binary_search_by_key(&t32, |&(tt, _)| tt) {
+                Ok(i) => {
+                    let nv = f(v[i].1);
+                    if nv == 0 {
+                        v.remove(i);
+                    } else {
+                        v[i].1 = nv;
+                    }
+                    (true, false)
+                }
+                Err(i) => {
+                    let nv = f(0);
+                    if nv == 0 {
+                        (true, false)
+                    } else if v.len() < SHORT_MAX {
+                        v.insert(i, (t32, nv));
+                        (true, false)
+                    } else {
+                        (false, true)
+                    }
+                }
+            },
+            Repr::Hash(h) => {
+                let i = h.slot_of(t32);
+                if h.keys[i] == t32 {
+                    let old = h.vals[i];
+                    let nv = f(old);
+                    h.vals[i] = nv;
+                    if old != 0 && nv == 0 {
+                        h.nnz -= 1;
+                    } else if old == 0 && nv != 0 {
+                        h.nnz += 1;
+                    }
+                    (true, h.nnz as usize > dense_cut(self.k as usize))
                 } else {
-                    v.push((topic as u32, delta));
+                    let nv = f(0);
+                    if nv == 0 {
+                        (true, false)
+                    } else if h.wants_grow() {
+                        (false, true)
+                    } else {
+                        h.keys[i] = t32;
+                        h.vals[i] = nv;
+                        h.occupied += 1;
+                        h.nnz += 1;
+                        (true, h.nnz as usize > dense_cut(self.k as usize))
+                    }
                 }
             }
-            DeltaRow::Dense { row, nnz } => {
-                let before = row[topic];
-                row[topic] += delta;
-                if before == 0 && row[topic] != 0 {
-                    *nnz += 1;
-                } else if before != 0 && row[topic] == 0 {
+            Repr::Dense { cells, nnz } => {
+                let old = cells[t];
+                let nv = f(old);
+                cells[t] = nv;
+                if old != 0 && nv == 0 {
                     *nnz -= 1;
+                } else if old == 0 && nv != 0 {
+                    *nnz += 1;
+                }
+                (true, false)
+            }
+        };
+        if promote {
+            self.promote();
+            if !applied {
+                self.update_with(t, f);
+            }
+        }
+    }
+
+    /// Move to the next representation: Short → Hash (or straight to
+    /// Dense at tiny `K`, where the short list already exceeds the
+    /// density cut), Hash → grown Hash, or → Dense once past the cut or
+    /// once the grown table would outweigh `i32[K]`.
+    fn promote(&mut self) {
+        let k = self.k as usize;
+        let cut = dense_cut(k);
+        let repr = std::mem::replace(&mut self.repr, Repr::Short(Vec::new()));
+        self.repr = match repr {
+            Repr::Short(v) => {
+                if SHORT_MAX >= cut {
+                    let (cells, nnz) = densify_short(&v, k);
+                    Repr::Dense { cells, nnz }
+                } else {
+                    let mut h = HashCells::with_capacity((v.len() + 1) * 2);
+                    for &(t, val) in &v {
+                        let i = h.slot_of(t);
+                        h.keys[i] = t;
+                        h.vals[i] = val;
+                        h.occupied += 1;
+                        h.nnz += 1;
+                    }
+                    Repr::Hash(h)
+                }
+            }
+            Repr::Hash(h) => {
+                let grown_cap = ((h.nnz as usize + 1) * 2).next_power_of_two().max(16);
+                if h.nnz as usize > cut || grown_cap * 8 >= k * 4 {
+                    let (cells, nnz) = densify_hash(&h, k);
+                    Repr::Dense { cells, nnz }
+                } else {
+                    Repr::Hash(h.rehashed())
+                }
+            }
+            dense @ Repr::Dense { .. } => dense,
+        };
+    }
+
+    /// `cell += d` (exact; overflow panics in debug like `i32` addition).
+    #[inline]
+    pub fn add(&mut self, t: usize, d: i32) {
+        if d == 0 {
+            return;
+        }
+        self.update_with(t, move |c| c + d);
+    }
+
+    /// `cell = cell.saturating_add(d)` (the server's push-apply).
+    #[inline]
+    pub fn add_saturating(&mut self, t: usize, d: i32) {
+        if d == 0 {
+            return;
+        }
+        self.update_with(t, move |c| c.saturating_add(d));
+    }
+
+    /// `cell = v`.
+    #[inline]
+    pub fn set(&mut self, t: usize, v: i32) {
+        self.update_with(t, move |_| v);
+    }
+
+    /// Visit every non-zero cell as `(topic, value)`. Short rows visit
+    /// in topic order; hash rows in table order; dense in topic order.
+    #[inline]
+    pub fn for_each<F: FnMut(u32, i32)>(&self, mut f: F) {
+        match &self.repr {
+            Repr::Short(v) => {
+                for &(t, val) in v {
+                    f(t, val);
+                }
+            }
+            Repr::Hash(h) => {
+                for i in 0..h.keys.len() {
+                    if h.keys[i] != EMPTY && h.vals[i] != 0 {
+                        f(h.keys[i], h.vals[i]);
+                    }
+                }
+            }
+            Repr::Dense { cells, .. } => {
+                for (t, &v) in cells.iter().enumerate() {
+                    if v != 0 {
+                        f(t as u32, v);
+                    }
                 }
             }
         }
     }
 
-    #[inline]
-    fn nnz(&self) -> usize {
-        match self {
-            DeltaRow::Sparse(v) => v.len(),
-            DeltaRow::Dense { nnz, .. } => *nnz,
+    /// Largest cell value, floored at 0 (dense rows always held zeros).
+    pub fn max_value(&self) -> i32 {
+        let mut m = 0;
+        self.for_each(|_, v| m = m.max(v));
+        m
+    }
+
+    /// Materialize as a full-width dense row.
+    pub fn to_dense_box(&self) -> Box<[i32]> {
+        let mut out = vec![0i32; self.k as usize].into_boxed_slice();
+        self.for_each(|t, v| out[t as usize] = v);
+        out
+    }
+
+    /// Encode for the wire, choosing the same sparse/dense break-even as
+    /// [`RowData::from_dense_auto`] (so wire bytes are bit-identical to
+    /// the dense era). Sparse output is sorted by topic.
+    pub fn to_rowdata(&self) -> RowData {
+        let nnz = self.nnz();
+        if 8 * nnz < 4 * self.k as usize {
+            let mut es = Vec::with_capacity(nnz);
+            self.for_each(|t, v| es.push((t, v)));
+            es.sort_unstable_by_key(|&(t, _)| t);
+            RowData::Sparse(es)
+        } else {
+            RowData::Dense(self.to_dense_box())
         }
     }
+
+    /// Fold a wire row in as **deltas** with saturating adds (the
+    /// server's push-apply; pairs with [`RowData::fold_saturating_into`]).
+    pub fn fold_rowdata(&mut self, data: &RowData) {
+        match data {
+            RowData::Dense(r) => {
+                for (t, &v) in r.iter().enumerate() {
+                    if v != 0 {
+                        self.add_saturating(t, v);
+                    }
+                }
+            }
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    if v != 0 {
+                        self.add_saturating(t as usize, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fold a wire row in as **deltas** with exact adds (the client's
+    /// requeue-after-filter path, where cancellation must be exact).
+    pub fn add_rowdata(&mut self, data: &RowData) {
+        match data {
+            RowData::Dense(r) => {
+                for (t, &v) in r.iter().enumerate() {
+                    if v != 0 {
+                        self.add(t, v);
+                    }
+                }
+            }
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    if v != 0 {
+                        self.add(t as usize, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Widen to at least `width` topics (no-op when already wide
+    /// enough). Sparse forms just adopt the new width; a dense row
+    /// reallocates and copies.
+    pub fn ensure_width(&mut self, width: usize) {
+        if width <= self.k as usize {
+            return;
+        }
+        if let Repr::Dense { cells, .. } = &mut self.repr {
+            let mut wider = vec![0i32; width].into_boxed_slice();
+            wider[..cells.len()].copy_from_slice(cells);
+            *cells = wider;
+        }
+        self.k = width as u32;
+    }
+
+    /// Zero every cell, keeping the representation and its capacity (the
+    /// delta log's drain path — steady state allocates nothing).
+    pub fn clear(&mut self) {
+        match &mut self.repr {
+            Repr::Short(v) => v.clear(),
+            Repr::Hash(h) => h.clear(),
+            Repr::Dense { cells, nnz } => {
+                cells.fill(0);
+                *nnz = 0;
+            }
+        }
+    }
+
+    /// Shrink to the smallest representation that fits the current
+    /// occupancy. Mutation only ever promotes; call this after bulk
+    /// cancellation when the smaller form matters.
+    pub fn compact(&mut self) {
+        let k = self.k as usize;
+        let nnz = self.nnz();
+        if nnz <= SHORT_MAX {
+            if matches!(self.repr, Repr::Short(_)) {
+                return;
+            }
+            let mut v = Vec::with_capacity(SHORT_MAX);
+            self.for_each(|t, val| v.push((t, val)));
+            v.sort_unstable_by_key(|&(t, _)| t);
+            self.repr = Repr::Short(v);
+        } else if nnz <= dense_cut(k) && SHORT_MAX < dense_cut(k) {
+            let mut h = HashCells::with_capacity((nnz + 1) * 2);
+            self.for_each(|t, val| {
+                let i = h.slot_of(t);
+                h.keys[i] = t;
+                h.vals[i] = val;
+                h.occupied += 1;
+                h.nnz += 1;
+            });
+            self.repr = Repr::Hash(h);
+        }
+        // Above the cut the dense form is already the right one.
+    }
+
+    /// Resident heap+inline bytes of this row (the bench memory panel's
+    /// per-row figure; a dense-era row was always `4·K` + header).
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<HybridRow>()
+            + match &self.repr {
+                Repr::Short(v) => v.capacity() * std::mem::size_of::<(u32, i32)>(),
+                Repr::Hash(h) => h.keys.len() * 8,
+                Repr::Dense { cells, .. } => cells.len() * 4,
+            }
+    }
 }
+
+impl Default for HybridRow {
+    fn default() -> Self {
+        HybridRow::new(0)
+    }
+}
+
+impl From<Vec<i32>> for HybridRow {
+    fn from(cells: Vec<i32>) -> HybridRow {
+        HybridRow::from_dense(&cells)
+    }
+}
+
+/// Content equality: same width, same non-zero cells (representation is
+/// irrelevant — a short, hash, and dense row holding the same cells are
+/// equal).
+impl PartialEq for HybridRow {
+    fn eq(&self, other: &HybridRow) -> bool {
+        if self.k != other.k || self.nnz() != other.nnz() {
+            return false;
+        }
+        let mut eq = true;
+        self.for_each(|t, v| {
+            if other.get(t as usize) != v {
+                eq = false;
+            }
+        });
+        eq
+    }
+}
+impl Eq for HybridRow {}
 
 #[inline]
 fn inv_of(total: i64, smoothing: f64) -> f64 {
@@ -222,11 +735,13 @@ fn inv_of(total: i64, smoothing: f64) -> f64 {
 }
 
 /// Client replica of a `V × K` count matrix with per-topic aggregates, a
-/// sparse delta log, and an incremental normalizer cache.
+/// sparse delta log, and an incremental normalizer cache. Rows and delta
+/// records are both [`HybridRow`]s, so resident memory scales with the
+/// topics a word actually uses, never with `K`.
 #[derive(Clone, Debug)]
 pub struct CountMatrix {
     k: usize,
-    rows: Vec<Option<Box<[i32]>>>,
+    rows: Vec<Option<HybridRow>>,
     /// Per-topic aggregate (`n_t` in LDA, `m_t`/`s_t` in PDP).
     totals: Vec<i64>,
     /// Normalizer smoothing mass (`β̄`, PDP `b`, `γ̄` — whatever the
@@ -238,16 +753,12 @@ pub struct CountMatrix {
     inv_denom: Vec<f64>,
     /// Unflushed local updates per touched row. Entries persist (cleared,
     /// not removed) across drains so the token loop never reallocates.
-    deltas: HashMap<u32, DeltaRow>,
+    deltas: HashMap<u32, HybridRow>,
     /// Live count of delta records with non-zero content, maintained on
     /// every empty↔non-empty record transition — [`pending_rows`]
     /// (Self::pending_rows) reads it in `O(1)` instead of scanning the
     /// touched vocabulary.
     pending: usize,
-    /// Sparse→dense spill threshold for delta records.
-    spill: usize,
-    /// Reusable decode buffer for sparse pulls.
-    pull_scratch: Vec<i32>,
 }
 
 impl CountMatrix {
@@ -261,8 +772,6 @@ impl CountMatrix {
             inv_denom: vec![f64::INFINITY; k],
             deltas: HashMap::new(),
             pending: 0,
-            spill: (k / 4).max(4),
-            pull_scratch: Vec::new(),
         }
     }
 
@@ -280,15 +789,15 @@ impl CountMatrix {
     #[inline]
     pub fn get(&self, word: u32, topic: usize) -> i32 {
         match &self.rows[word as usize] {
-            Some(r) => r[topic],
+            Some(r) => r.get(topic),
             None => 0,
         }
     }
 
     /// Borrow a row (`None` if the word was never touched).
     #[inline]
-    pub fn row(&self, word: u32) -> Option<&[i32]> {
-        self.rows[word as usize].as_deref()
+    pub fn row(&self, word: u32) -> Option<&HybridRow> {
+        self.rows[word as usize].as_ref()
     }
 
     /// Per-topic aggregates (`n_t`).
@@ -333,14 +842,6 @@ impl CountMatrix {
         (self.totals[topic] as f64).max(0.0) + self.smoothing
     }
 
-    fn ensure_row(&mut self, word: u32) -> &mut [i32] {
-        let slot = &mut self.rows[word as usize];
-        if slot.is_none() {
-            *slot = Some(vec![0i32; self.k].into_boxed_slice());
-        }
-        slot.as_deref_mut().unwrap()
-    }
-
     #[inline]
     fn bump_total(&mut self, topic: usize, delta: i64) {
         self.totals[topic] += delta;
@@ -348,20 +849,18 @@ impl CountMatrix {
     }
 
     /// Apply a local Gibbs move: `cell += delta`, mirrored into the sparse
-    /// delta log and the per-topic aggregate (+ normalizer cache). `O(k_w)`
-    /// and allocation-free once the word's delta record exists.
+    /// delta log and the per-topic aggregate (+ normalizer cache). `O(1)`
+    /// and allocation-free once the word's row and delta record exist.
     #[inline]
     pub fn inc(&mut self, word: u32, topic: usize, delta: i32) {
-        let row = self.ensure_row(word);
-        row[topic] += delta;
+        let k = self.k;
+        self.rows[word as usize]
+            .get_or_insert_with(|| HybridRow::new(k))
+            .add(topic, delta);
         self.bump_total(topic, delta as i64);
-        let (k, spill) = (self.k, self.spill);
-        let rec = self
-            .deltas
-            .entry(word)
-            .or_insert_with(|| DeltaRow::new(spill));
+        let rec = self.deltas.entry(word).or_insert_with(|| HybridRow::new(k));
         let was_empty = rec.nnz() == 0;
-        rec.add(topic, delta, k, spill);
+        rec.add(topic, delta);
         let now_empty = rec.nnz() == 0;
         if was_empty && !now_empty {
             self.pending += 1;
@@ -374,8 +873,10 @@ impl CountMatrix {
     /// statistics and for replaying a snapshot).
     #[inline]
     pub fn inc_local(&mut self, word: u32, topic: usize, delta: i32) {
-        let row = self.ensure_row(word);
-        row[topic] += delta;
+        let k = self.k;
+        self.rows[word as usize]
+            .get_or_insert_with(|| HybridRow::new(k))
+            .add(topic, delta);
         self.bump_total(topic, delta as i64);
     }
 
@@ -383,39 +884,13 @@ impl CountMatrix {
     /// row in the cheaper wire form (sparse below `8·nnz < 4·K`). Zero
     /// rows are skipped; records stay allocated for reuse.
     pub fn drain_deltas(&mut self) -> Vec<(u32, RowData)> {
-        let k = self.k;
         let mut out: Vec<(u32, RowData)> = Vec::new();
         for (&w, rec) in self.deltas.iter_mut() {
-            match rec {
-                DeltaRow::Sparse(v) => {
-                    if v.is_empty() {
-                        continue;
-                    }
-                    // Same break-even as `from_dense_auto`: at tiny K a
-                    // sparse record can still be cheaper to ship dense.
-                    if 8 * v.len() < 4 * k {
-                        let mut entries = v.clone();
-                        v.clear();
-                        entries.sort_unstable_by_key(|&(t, _)| t);
-                        out.push((w, RowData::Sparse(entries)));
-                    } else {
-                        let mut dense = vec![0i32; k];
-                        for &(t, d) in v.iter() {
-                            dense[t as usize] = d;
-                        }
-                        v.clear();
-                        out.push((w, RowData::Dense(dense.into_boxed_slice())));
-                    }
-                }
-                DeltaRow::Dense { row, nnz } => {
-                    if *nnz == 0 {
-                        continue;
-                    }
-                    out.push((w, RowData::from_dense_auto(row)));
-                    row.iter_mut().for_each(|x| *x = 0);
-                    *nnz = 0;
-                }
+            if rec.nnz() == 0 {
+                continue;
             }
+            out.push((w, rec.to_rowdata()));
+            rec.clear();
         }
         self.pending = 0;
         out.sort_unstable_by_key(|&(w, _)| w);
@@ -439,26 +914,10 @@ impl CountMatrix {
     /// Re-queue a delta row the communication filter chose to retain
     /// (folds into any newer pending deltas; does not touch counts).
     pub fn requeue_delta(&mut self, word: u32, row: RowData) {
-        let (k, spill) = (self.k, self.spill);
-        let rec = self
-            .deltas
-            .entry(word)
-            .or_insert_with(|| DeltaRow::new(spill));
+        let k = self.k;
+        let rec = self.deltas.entry(word).or_insert_with(|| HybridRow::new(k));
         let was_empty = rec.nnz() == 0;
-        match row {
-            RowData::Sparse(es) => {
-                for (t, v) in es {
-                    rec.add(t as usize, v, k, spill);
-                }
-            }
-            RowData::Dense(r) => {
-                for (t, &v) in r.iter().enumerate() {
-                    if v != 0 {
-                        rec.add(t, v, k, spill);
-                    }
-                }
-            }
-        }
+        rec.add_rowdata(&row);
         let now_empty = rec.nnz() == 0;
         if was_empty && !now_empty {
             self.pending += 1;
@@ -467,79 +926,112 @@ impl CountMatrix {
         }
     }
 
+    /// Take a word's row out, removing its current contents from the
+    /// aggregates. The caller repopulates it with the server view and
+    /// hands it back to [`pull_finish`](Self::pull_finish).
+    fn pull_begin(&mut self, word: u32) -> HybridRow {
+        let k = self.k;
+        let mut row = self.rows[word as usize]
+            .take()
+            .unwrap_or_else(|| HybridRow::new(k));
+        let totals = &mut self.totals;
+        let inv = &mut self.inv_denom;
+        let sm = self.smoothing;
+        row.for_each(|t, v| {
+            let t = t as usize;
+            totals[t] -= v as i64;
+            inv[t] = inv_of(totals[t], sm);
+        });
+        row.clear();
+        row
+    }
+
+    /// Fold the still-unflushed local deltas back into a freshly pulled
+    /// row (so local moves aren't erased) and put it back.
+    fn pull_finish(&mut self, word: u32, mut row: HybridRow) {
+        if let Some(rec) = self.deltas.get(&word) {
+            let totals = &mut self.totals;
+            let inv = &mut self.inv_denom;
+            let sm = self.smoothing;
+            rec.for_each(|t, dv| {
+                row.add(t as usize, dv);
+                let t = t as usize;
+                totals[t] += dv as i64;
+                inv[t] = inv_of(totals[t], sm);
+            });
+        }
+        self.rows[word as usize] = Some(row);
+    }
+
     /// Absorb a pulled server row: replica := server + unflushed local
     /// deltas (so local moves aren't erased), aggregates and normalizers
     /// fixed up. The pending record is borrowed, never cloned.
     pub fn apply_pull(&mut self, word: u32, server_row: &[i32]) {
         assert_eq!(server_row.len(), self.k);
-        self.ensure_row(word);
-        let row = self.rows[word as usize].as_deref_mut().unwrap();
-        // Overwrite with the server view…
-        for (t, cell) in row.iter_mut().enumerate() {
-            let d = (server_row[t] - *cell) as i64;
-            if d != 0 {
-                self.totals[t] += d;
-                self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
+        let mut row = self.pull_begin(word);
+        for (t, &v) in server_row.iter().enumerate() {
+            if v != 0 {
+                row.set(t, v);
+                self.bump_total(t, v as i64);
             }
-            *cell = server_row[t];
         }
-        // …then fold the still-unflushed local deltas back in.
-        match self.deltas.get(&word) {
-            Some(DeltaRow::Sparse(es)) => {
-                for &(t, dv) in es {
-                    let t = t as usize;
-                    row[t] += dv;
-                    self.totals[t] += dv as i64;
-                    self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
-                }
-            }
-            Some(DeltaRow::Dense { row: r, .. }) => {
-                for (t, &dv) in r.iter().enumerate() {
-                    if dv != 0 {
-                        row[t] += dv;
-                        self.totals[t] += dv as i64;
-                        self.inv_denom[t] = inv_of(self.totals[t], self.smoothing);
-                    }
-                }
-            }
-            None => {}
-        }
+        self.pull_finish(word, row);
     }
 
-    /// [`CountMatrix::apply_pull`] for a wire row in either form. Sparse
-    /// (and short dense — a server row born from narrow sparse pushes)
-    /// rows decode through a reusable scratch buffer, padding elided
-    /// cells with 0; no per-pull allocation in steady state.
+    /// [`CountMatrix::apply_pull`] for a wire row in either form, with no
+    /// dense scratch: non-zero cells write straight into the hybrid row.
+    /// A dense row wider than `K` is clamped; shorter is zero-padded; a
+    /// sparse entry beyond `K` is a logic error and panics.
     pub fn apply_pull_row(&mut self, word: u32, server_row: &RowData) {
+        let mut row = self.pull_begin(word);
         match server_row {
-            RowData::Dense(r) if r.len() == self.k => self.apply_pull(word, r),
-            other => {
-                let mut scratch = std::mem::take(&mut self.pull_scratch);
-                scratch.clear();
-                scratch.resize(self.k, 0);
-                match other {
-                    RowData::Dense(r) => {
-                        let n = r.len().min(self.k);
-                        scratch[..n].copy_from_slice(&r[..n]);
-                    }
-                    RowData::Sparse(es) => {
-                        for &(t, v) in es {
-                            scratch[t as usize] = v;
-                        }
+            RowData::Dense(r) => {
+                let n = r.len().min(self.k);
+                for (t, &v) in r[..n].iter().enumerate() {
+                    if v != 0 {
+                        row.set(t, v);
+                        self.bump_total(t, v as i64);
                     }
                 }
-                self.apply_pull(word, &scratch);
-                self.pull_scratch = scratch;
+            }
+            RowData::Sparse(es) => {
+                for &(t, v) in es {
+                    if v != 0 {
+                        row.set(t as usize, v);
+                        self.bump_total(t as usize, v as i64);
+                    }
+                }
             }
         }
+        self.pull_finish(word, row);
     }
 
     /// Iterate allocated rows.
-    pub fn iter_rows(&self) -> impl Iterator<Item = (u32, &[i32])> {
+    pub fn iter_rows(&self) -> impl Iterator<Item = (u32, &HybridRow)> {
         self.rows
             .iter()
             .enumerate()
-            .filter_map(|(w, r)| r.as_deref().map(|r| (w as u32, r)))
+            .filter_map(|(w, r)| r.as_ref().map(|r| (w as u32, r)))
+    }
+
+    /// Snapshot every non-empty replica row in wire form (the worker
+    /// checkpoint's warm-resume payload).
+    pub fn export_rows(&self) -> Vec<(u32, RowData)> {
+        self.iter_rows()
+            .filter(|(_, r)| r.nnz() > 0)
+            .map(|(w, r)| (w, r.to_rowdata()))
+            .collect()
+    }
+
+    /// Resident bytes held by allocated replica rows (excluding the
+    /// row-pointer table and the delta log) — the bench memory panel's
+    /// numerator; the dense era held `4·K` per touched word.
+    pub fn resident_row_bytes(&self) -> usize {
+        self.rows
+            .iter()
+            .flatten()
+            .map(|r| r.resident_bytes())
+            .sum()
     }
 
     /// Recompute per-topic aggregates from scratch (consistency repair /
@@ -547,9 +1039,7 @@ impl CountMatrix {
     pub fn rebuild_totals(&mut self) {
         let mut totals = vec![0i64; self.k];
         for row in self.rows.iter().flatten() {
-            for (t, &c) in row.iter().enumerate() {
-                totals[t] += c as i64;
-            }
+            row.for_each(|t, c| totals[t as usize] += c as i64);
         }
         self.totals = totals;
         for t in 0..self.k {
@@ -564,7 +1054,11 @@ impl CountMatrix {
         let mut nonzero = 0u64;
         for row in self.rows.iter().flatten() {
             words += 1;
-            nonzero += row.iter().filter(|&&c| c > 0).count() as u64;
+            row.for_each(|_, c| {
+                if c > 0 {
+                    nonzero += 1;
+                }
+            });
         }
         if words == 0 {
             0.0
@@ -588,7 +1082,7 @@ mod tests {
         assert_eq!(m.get(3, 0), 0);
         assert_eq!(m.total(1), 3);
         assert_eq!(m.grand_total(), 4);
-        assert_eq!(m.row(0), None);
+        assert!(m.row(0).is_none());
     }
 
     #[test]
@@ -614,7 +1108,7 @@ mod tests {
     fn delta_log_spills_to_dense_and_back_to_sparse_wire() {
         let k = 64;
         let mut m = CountMatrix::new(4, k);
-        // Touch more than k/4 = 16 distinct topics → record spills dense.
+        // Touch more than k/4 = 16 distinct topics → record goes dense.
         for t in 0..20 {
             m.inc(1, t, 1);
         }
@@ -705,7 +1199,7 @@ mod tests {
 
     /// The O(1) pending counter agrees with the scan it replaced across
     /// every mutation path: inc (including cancel-to-zero), drain,
-    /// requeue, and the sparse→dense spill.
+    /// requeue, and the short→hash→dense promotions.
     #[test]
     fn pending_counter_matches_scan() {
         let mut m = CountMatrix::new(40, 16);
@@ -726,7 +1220,7 @@ mod tests {
             assert_eq!(m.pending_rows(), m.pending_rows_scan(), "step {step}");
         }
 
-        // Spill to dense, then cancel every cell back to zero: the
+        // Promote to dense, then cancel every cell back to zero: the
         // counter must follow the record through both transitions.
         let mut m = CountMatrix::new(4, 64);
         for t in 0..40 {
@@ -793,5 +1287,177 @@ mod tests {
         assert_eq!(row, vec![3, i32::MAX, 0]);
         RowData::Dense(vec![1, -1, 7].into_boxed_slice()).fold_saturating_into(&mut row);
         assert_eq!(row, vec![4, i32::MAX - 1, 7]);
+    }
+
+    // ---- HybridRow ----
+
+    /// Random adds and sets against a dense oracle, across every
+    /// promotion boundary, at a K small enough to skip the hash stage
+    /// (8 ≥ K/4), a mid K, and a large sparse K.
+    #[test]
+    fn hybrid_row_matches_dense_oracle() {
+        for &k in &[8usize, 64, 1000] {
+            let mut row = HybridRow::new(k);
+            let mut oracle = vec![0i32; k];
+            let mut rng = crate::util::rng::Rng::new(42 + k as u64);
+            for step in 0..4000 {
+                let t = rng.below(k);
+                if rng.coin(0.8) {
+                    let d = if rng.coin(0.5) { 1 } else { -1 };
+                    row.add(t, d);
+                    oracle[t] += d;
+                } else {
+                    let v = rng.below(7) as i32 - 3;
+                    row.set(t, v);
+                    oracle[t] = v;
+                }
+                assert_eq!(row.get(t), oracle[t], "k={k} step={step}");
+            }
+            let nnz = oracle.iter().filter(|&&v| v != 0).count();
+            assert_eq!(row.nnz(), nnz, "k={k}");
+            assert_eq!(&*row.to_dense_box(), &oracle[..], "k={k}");
+            let mut visited = vec![0i32; k];
+            row.for_each(|t, v| {
+                assert_ne!(v, 0);
+                visited[t as usize] = v;
+            });
+            assert_eq!(visited, oracle, "for_each k={k}");
+            assert_eq!(row, HybridRow::from_dense(&oracle), "eq k={k}");
+        }
+    }
+
+    /// The representation ladder promotes at the documented thresholds:
+    /// ≤8 entries short, ≤K/4 hash, dense past the cut — and `compact`
+    /// walks back down after cancellation.
+    #[test]
+    fn hybrid_row_promotes_at_thresholds() {
+        let k = 256; // dense_cut = 64
+        let mut row = HybridRow::new(k);
+        for t in 0..8 {
+            row.add(t, 1);
+        }
+        assert_eq!(row.repr_kind(), RowReprKind::Short);
+        row.add(8, 1);
+        assert_eq!(row.repr_kind(), RowReprKind::Hash);
+        for t in 9..=64 {
+            row.add(t, 1);
+        }
+        assert_eq!(row.nnz(), 65);
+        assert_eq!(row.repr_kind(), RowReprKind::Dense);
+        assert_eq!(row.resident_bytes() - std::mem::size_of::<HybridRow>(), 4 * k);
+        // Cancel back down; mutation never demotes, compact does.
+        for t in 3..=64 {
+            row.add(t, -1);
+        }
+        assert_eq!(row.repr_kind(), RowReprKind::Dense);
+        row.compact();
+        assert_eq!(row.repr_kind(), RowReprKind::Short);
+        assert_eq!(row.nnz(), 3);
+        assert_eq!(row, HybridRow::from_dense(&{
+            let mut d = vec![0i32; k];
+            d[0] = 1;
+            d[1] = 1;
+            d[2] = 1;
+            d
+        }));
+    }
+
+    /// At tiny K the short list promotes straight to dense (a hash
+    /// table would cost more than the row).
+    #[test]
+    fn hybrid_row_skips_hash_stage_at_tiny_k() {
+        let k = 16; // dense_cut = max(4, 8) = 8 ≤ SHORT_MAX
+        let mut row = HybridRow::new(k);
+        for t in 0..9 {
+            row.add(t, 1);
+        }
+        assert_eq!(row.repr_kind(), RowReprKind::Dense);
+        assert_eq!(row.nnz(), 9);
+    }
+
+    /// Wire encoding from a hybrid row is bit-identical to the dense
+    /// era's `from_dense_auto` at every occupancy.
+    #[test]
+    fn hybrid_to_rowdata_matches_from_dense_auto() {
+        let k = 96;
+        let mut row = HybridRow::new(k);
+        let mut dense = vec![0i32; k];
+        let mut rng = crate::util::rng::Rng::new(7);
+        for step in 0..600 {
+            let t = rng.below(k);
+            let d = if rng.coin(0.6) { 2 } else { -1 };
+            row.add(t, d);
+            dense[t] += d;
+            if step % 13 == 0 {
+                assert_eq!(row.to_rowdata(), RowData::from_dense_auto(&dense), "step {step}");
+            }
+        }
+    }
+
+    /// fold_rowdata (saturating) matches the slice-level
+    /// `fold_saturating_into` the server used in the dense era.
+    #[test]
+    fn hybrid_fold_rowdata_matches_slice_fold() {
+        let k = 32;
+        let mut row = HybridRow::from_dense(&{
+            let mut d = vec![0i32; k];
+            d[1] = 5;
+            d[7] = i32::MAX;
+            d[20] = -3;
+            d
+        });
+        let mut oracle = row.to_dense_box();
+        for data in [
+            RowData::Sparse(vec![(1, 2), (7, 9), (13, -4)]),
+            RowData::Dense(vec![1i32; k].into_boxed_slice()),
+        ] {
+            data.fold_saturating_into(&mut oracle);
+            row.fold_rowdata(&data);
+            assert_eq!(&*row.to_dense_box(), &*oracle);
+        }
+    }
+
+    /// clear() keeps capacity (the drain loop's steady state) and
+    /// ensure_width widens dense rows losslessly.
+    #[test]
+    fn hybrid_clear_and_widen() {
+        let k = 64;
+        let mut row = HybridRow::new(k);
+        for t in 0..20 {
+            row.add(t, 1);
+        }
+        let bytes = row.resident_bytes();
+        row.clear();
+        assert_eq!(row.nnz(), 0);
+        assert_eq!(row.resident_bytes(), bytes, "clear must keep capacity");
+        row.add(3, 7);
+        row.ensure_width(128);
+        assert_eq!(row.k(), 128);
+        assert_eq!(row.get(3), 7);
+        assert_eq!(row.get(100), 0);
+        // from_rowdata widens past the requested width when needed.
+        let wide = HybridRow::from_rowdata(&RowData::Sparse(vec![(200, 4)]), 64);
+        assert_eq!(wide.k(), 201);
+        assert_eq!(wide.get(200), 4);
+    }
+
+    #[test]
+    fn matrix_export_rows_roundtrip() {
+        let mut m = CountMatrix::new(12, 48);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..400 {
+            m.inc(rng.below(12) as u32, rng.below(48), 1);
+        }
+        let rows = m.export_rows();
+        let mut m2 = CountMatrix::new(12, 48);
+        for (w, data) in &rows {
+            m2.apply_pull_row(*w, data);
+        }
+        for w in 0..12u32 {
+            for t in 0..48 {
+                assert_eq!(m.get(w, t), m2.get(w, t), "w={w} t={t}");
+            }
+        }
+        assert_eq!(m.totals(), m2.totals());
     }
 }

@@ -261,9 +261,7 @@ impl AliasPdp {
     pub fn ensure_stirling_capacity(&mut self) {
         let mut maxm = 0usize;
         for (_, row) in self.m.iter_rows() {
-            for &c in row {
-                maxm = maxm.max(c.max(0) as usize);
-            }
+            maxm = maxm.max(row.max_value().max(0) as usize);
         }
         self.stirling.grow_to(maxm + 2);
     }
@@ -371,12 +369,7 @@ impl AliasPdp {
         self.remove_token(d, w, old_t, old_r);
 
         // Keep Stirling coverage ahead of the biggest count for this word.
-        let row_max = self
-            .m
-            .row(w)
-            .map(|r| r.iter().copied().max().unwrap_or(0))
-            .unwrap_or(0)
-            .max(0) as usize;
+        let row_max = self.m.row(w).map_or(0, |r| r.max_value()).max(0) as usize;
         if row_max + 1 > self.stirling.max_n() {
             self.stirling.grow_to(row_max + 2);
         }

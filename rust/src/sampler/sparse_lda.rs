@@ -113,11 +113,11 @@ impl SparseLda {
     pub fn refresh_word(&mut self, w: u32) {
         let mut sc = SparseCounts::new();
         if let Some(row) = self.nwt.row(w) {
-            for (t, &c) in row.iter().enumerate() {
+            row.for_each(|t, c| {
                 if c > 0 {
-                    sc.set_raw(t as u32, c as u32);
+                    sc.set_raw(t, c as u32);
                 }
-            }
+            });
         }
         self.word_topics[w as usize] = sc;
         self.s_dirty = true;

@@ -40,6 +40,7 @@
 
 use crate::config::ModelKind;
 use crate::ps::snapshot::{SnapshotMeta, Store, TableHyper};
+use crate::sampler::counts::HybridRow;
 use crate::sampler::hdp::{dirichlet_predictive, root_stick};
 use crate::sampler::pdp::pyp_predictive;
 use crate::Result;
@@ -83,7 +84,9 @@ pub trait ServingFamily: Send + Sync {
 /// are disjoint by consistent hashing, so the global statistic is the
 /// row-wise (saturating) sum.
 struct Merged {
-    rows: Vec<Option<Box<[i32]>>>,
+    /// Hybrid rows: a 1M-vocab slice at K=10k holds O(nnz) per word, not
+    /// a dense `i32[K]` ghost per touched word.
+    rows: Vec<Option<HybridRow>>,
     /// Per-topic totals over clamped entries (eventual consistency can
     /// leave transient negatives in a snapshot; clamp at the aggregate
     /// like the samplers do).
@@ -117,7 +120,7 @@ impl Merged {
                 }
             }
         }
-        let mut rows: Vec<Vec<Option<Box<[i32]>>>> =
+        let mut rows: Vec<Vec<Option<HybridRow>>> =
             (0..parts).map(|_| vec![None; vocab]).collect();
         let mut totals = vec![0i64; k];
         let mut scratch = vec![0i32; k];
@@ -128,16 +131,19 @@ impl Merged {
             scratch.iter_mut().for_each(|c| *c = 0);
             for store in stores {
                 if let Some(row) = store.get(&(matrix, w)) {
-                    for (t, &v) in row.iter().take(k).enumerate() {
-                        scratch[t] = scratch[t].saturating_add(v);
-                    }
+                    row.for_each(|t, v| {
+                        let t = t as usize;
+                        if t < k {
+                            scratch[t] = scratch[t].saturating_add(v);
+                        }
+                    });
                 }
             }
             for (t, &v) in scratch.iter().enumerate() {
                 totals[t] += v.max(0) as i64;
             }
             let part = (owner(w) as usize).min(parts - 1);
-            rows[part][w as usize] = Some(scratch.clone().into_boxed_slice());
+            rows[part][w as usize] = Some(HybridRow::from_dense(&scratch));
         }
         rows.into_iter()
             .map(|rows| Merged {
@@ -158,8 +164,8 @@ impl Merged {
     /// Clamped cell read (0 for never-observed words).
     #[inline]
     fn count(&self, w: u32, t: usize) -> i32 {
-        match self.rows.get(w as usize).and_then(|r| r.as_deref()) {
-            Some(row) => row[t].max(0),
+        match self.rows.get(w as usize).and_then(|r| r.as_ref()) {
+            Some(row) => row.get(t).max(0),
             None => 0,
         }
     }
@@ -520,8 +526,8 @@ mod tests {
             } else {
                 (vec![0, 40], vec![0, 4])
             };
-            s.insert((0, w), m_row);
-            s.insert((1, w), s_row);
+            s.insert((0, w), m_row.into());
+            s.insert((1, w), s_row.into());
         }
         vec![s]
     }
@@ -530,7 +536,7 @@ mod tests {
     fn lda_family_phi_normalizes() {
         let mut s = Store::new();
         for w in 0..10u32 {
-            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] });
+            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] }.into());
         }
         let fam = family_from_stores(&meta("AliasLDA", 2, None), &[s]).unwrap();
         assert_eq!(fam.kind(), ModelKind::AliasLda);
@@ -563,9 +569,9 @@ mod tests {
     fn hdp_family_prior_follows_root_tables() {
         let mut s = Store::new();
         for w in 0..10u32 {
-            s.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+            s.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] }.into());
         }
-        s.insert((1, 0), vec![6, 2, 0]); // root: topic 0 has 3× topic 1
+        s.insert((1, 0), vec![6, 2, 0].into()); // root: topic 0 has 3× topic 1
         let fam =
             family_from_stores(&meta("AliasHDP", 3, Some(hdp_hyper())), &[s]).unwrap();
         assert_eq!(fam.kind(), ModelKind::AliasHdp);
@@ -602,7 +608,7 @@ mod tests {
     fn sliced_family_keeps_global_normalizers() {
         let mut s = Store::new();
         for w in 0..10u32 {
-            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] });
+            s.insert((0, w), if w < 5 { vec![7, 0] } else { vec![0, 7] }.into());
         }
         let meta = meta("AliasLDA", 2, None);
         let full = family_from_stores(&meta, std::slice::from_ref(&s)).unwrap();
@@ -629,9 +635,9 @@ mod tests {
         // HDP: the root row survives slicing even when word 0 is not owned.
         let mut h = Store::new();
         for w in 0..10u32 {
-            h.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+            h.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] }.into());
         }
-        h.insert((1, 0), vec![6, 2, 0]);
+        h.insert((1, 0), vec![6, 2, 0].into());
         let hmeta = meta_hdp();
         let full = family_from_stores(&hmeta, std::slice::from_ref(&h)).unwrap();
         let none = |_w: u32| false;
@@ -660,10 +666,10 @@ mod tests {
         let mut lda_store = Store::new();
         let mut hdp_store = Store::new();
         for w in 0..10u32 {
-            lda_store.insert((0, w), if w < 5 { vec![7, 0] } else { vec![-2, 7] });
-            hdp_store.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] });
+            lda_store.insert((0, w), if w < 5 { vec![7, 0] } else { vec![-2, 7] }.into());
+            hdp_store.insert((0, w), if w < 5 { vec![30, 0, 0] } else { vec![0, 30, 0] }.into());
         }
-        hdp_store.insert((1, 0), vec![6, 2, 0]);
+        hdp_store.insert((1, 0), vec![6, 2, 0].into());
         let cases: Vec<(SnapshotMeta, Vec<Store>)> = vec![
             (meta("AliasLDA", 2, None), vec![lda_store]),
             (meta("AliasPDP", 2, Some(pdp_hyper())), pdp_stores()),
@@ -708,10 +714,10 @@ mod tests {
     #[test]
     fn merge_adds_across_slots_and_clamps_negatives() {
         let mut a = Store::new();
-        a.insert((0, 1), vec![3, -5]);
+        a.insert((0, 1), vec![3, -5].into());
         let mut b = Store::new();
-        b.insert((0, 1), vec![1, 2]);
-        b.insert((0, 2), vec![0, 4]);
+        b.insert((0, 1), vec![1, 2].into());
+        b.insert((0, 2), vec![0, 4].into());
         let stores = [a, b];
         let m = Merged::build_parts(&stores, 0, 10, 2, 1, &|_| 0)
             .pop()

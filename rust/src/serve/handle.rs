@@ -270,7 +270,7 @@ mod tests {
         let mut store = Store::new();
         for w in 0..10u32 {
             let row = if w < 5 { vec![weight, 0] } else { vec![0, weight] };
-            store.insert((0, w), row);
+            store.insert((0, w), row.into());
         }
         ServingModel::from_stores(toy_meta("AliasLDA"), vec![store], 1 << 20).unwrap()
     }
@@ -301,7 +301,7 @@ mod tests {
         ));
         std::fs::remove_dir_all(&dir).ok();
         let mut store = Store::new();
-        store.insert((0, 1), vec![5, 0]);
+        store.insert((0, 1), vec![5, 0].into());
         let bytes = snapshot::encode_store_meta(&store, &toy_meta("AliasLDA"));
         snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
 
@@ -310,7 +310,7 @@ mod tests {
         assert_eq!(h.dir().as_deref(), Some(dir.as_path()));
 
         // New snapshot content → reload_latest picks it up as gen 2.
-        store.insert((0, 2), vec![0, 7]);
+        store.insert((0, 2), vec![0, 7].into());
         let bytes = snapshot::encode_store_meta(&store, &toy_meta("AliasLDA"));
         snapshot::write_atomic(&dir.join("server_slot0.snap"), &bytes).unwrap();
         let g = h.reload_latest().unwrap();
@@ -334,8 +334,8 @@ mod tests {
         ));
         std::fs::remove_dir_all(&dir).ok();
         let mut store = Store::new();
-        store.insert((0, 1), vec![5, 3]);
-        store.insert((1, 1), vec![1, 1]);
+        store.insert((0, 1), vec![5, 3].into());
+        store.insert((1, 1), vec![1, 1].into());
         let mut meta = toy_meta("AliasPDP");
         meta.tables = Some(snapshot::TableHyper {
             discount: 0.1,
@@ -368,7 +368,7 @@ mod tests {
         let mut meta3 = toy_meta("AliasLDA");
         meta3.k = 3;
         let mut store = Store::new();
-        store.insert((0, 1), vec![1, 2, 3]);
+        store.insert((0, 1), vec![1, 2, 3].into());
         let wide = ServingModel::from_stores(meta3, vec![store], 1 << 20).unwrap();
         let msg = match h.install(wide) {
             Ok(_) => panic!("K=2 → K=3 swap must be refused"),

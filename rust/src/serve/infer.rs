@@ -282,7 +282,7 @@ mod tests {
         let mut store = Store::new();
         for w in 0..10u32 {
             let row = if w < 5 { vec![100, 0] } else { vec![0, 100] };
-            store.insert((0, w), row);
+            store.insert((0, w), row.into());
         }
         ServingModel::from_stores(meta("AliasLDA", 2, None), vec![store], 1 << 20).unwrap()
     }
@@ -296,8 +296,8 @@ mod tests {
             } else {
                 (vec![0, 100], vec![0, 8])
             };
-            store.insert((0, w), m);
-            store.insert((1, w), s);
+            store.insert((0, w), m.into());
+            store.insert((1, w), s.into());
         }
         let meta = meta(
             "AliasPDP",
@@ -320,9 +320,9 @@ mod tests {
             } else {
                 vec![0, 100, 0]
             };
-            store.insert((0, w), row);
+            store.insert((0, w), row.into());
         }
-        store.insert((1, 0), vec![10, 10, 0]);
+        store.insert((1, 0), vec![10, 10, 0].into());
         let meta = meta(
             "AliasHDP",
             3,

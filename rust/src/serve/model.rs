@@ -442,11 +442,11 @@ mod tests {
     #[test]
     fn merges_slot_stores() {
         let mut a = Store::new();
-        a.insert((0, 1), vec![3, 0, 1]);
+        a.insert((0, 1), vec![3, 0, 1].into());
         let mut b = Store::new();
-        b.insert((0, 2), vec![0, 5, 0]);
-        b.insert((0, 1), vec![1, 0, 0]); // overlap adds
-        b.insert((1, 2), vec![9, 9, 9]); // table matrix, not primary mass
+        b.insert((0, 2), vec![0, 5, 0].into());
+        b.insert((0, 1), vec![1, 0, 0].into()); // overlap adds
+        b.insert((1, 2), vec![9, 9, 9].into()); // table matrix, not primary mass
         let m = ServingModel::from_stores(meta(3, 2), vec![a, b], 1 << 20).unwrap();
         assert_eq!(m.k(), 3);
         assert_eq!(m.vocab(), 10);
@@ -479,8 +479,8 @@ mod tests {
             } else {
                 (vec![0, 40], vec![0, 4])
             };
-            store.insert((0, w), mr);
-            store.insert((1, w), sr);
+            store.insert((0, w), mr.into());
+            store.insert((1, w), sr.into());
         }
         let mut pdp = meta(2, 1);
         pdp.model = "AliasPDP".to_string();
@@ -506,7 +506,7 @@ mod tests {
             meta(2, 1),
             vec![{
                 let mut s = Store::new();
-                s.insert((0, 1), vec![3, 1]);
+                s.insert((0, 1), vec![3, 1].into());
                 s
             }],
             1 << 20,
@@ -528,7 +528,7 @@ mod tests {
         let stores = || {
             let mut s = Store::new();
             for w in 0..10u32 {
-                s.insert((0, w), if w < 5 { vec![9, 0] } else { vec![0, 9] });
+                s.insert((0, w), if w < 5 { vec![9, 0] } else { vec![0, 9] }.into());
             }
             vec![s]
         };
@@ -552,7 +552,7 @@ mod tests {
     #[test]
     fn proposal_matches_phi_and_caches() {
         let mut s = Store::new();
-        s.insert((0, 4), vec![10, 0]);
+        s.insert((0, 4), vec![10, 0].into());
         let m = ServingModel::from_stores(meta(2, 1), vec![s], 1 << 20).unwrap();
         let p = m.proposal(4);
         for t in 0..2 {

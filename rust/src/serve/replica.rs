@@ -128,7 +128,7 @@ mod tests {
     fn toy_stores() -> Vec<Store> {
         let mut s = Store::new();
         for w in 0..10u32 {
-            s.insert((0, w), if w < 5 { vec![6, 0] } else { vec![0, 6] });
+            s.insert((0, w), if w < 5 { vec![6, 0] } else { vec![0, 6] }.into());
         }
         vec![s]
     }

@@ -599,7 +599,7 @@ mod tests {
     fn toy_stores(weight: i32) -> Vec<Store> {
         let mut s = Store::new();
         for w in 0..20u32 {
-            s.insert((0, w), if w < 10 { vec![weight, 0] } else { vec![0, weight] });
+            s.insert((0, w), if w < 10 { vec![weight, 0] } else { vec![0, weight] }.into());
         }
         vec![s]
     }
@@ -778,7 +778,7 @@ mod tests {
         let mut wide = toy_meta();
         wide.k = 3;
         let mut s = Store::new();
-        s.insert((0, 1), vec![1, 2, 3]);
+        s.insert((0, 1), vec![1, 2, 3].into());
         assert!(set.install_stores(wide.clone(), &[s.clone()]).is_err());
         // Resizes apply the same family/shape guard.
         assert!(set.resize_with_stores(wide, &[s], 3).is_err());

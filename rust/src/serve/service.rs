@@ -319,7 +319,7 @@ mod tests {
         let mut store = Store::new();
         for w in 0..10u32 {
             let row = if w < 5 { vec![weight, 0] } else { vec![0, weight] };
-            store.insert((0, w), row);
+            store.insert((0, w), row.into());
         }
         let meta = SnapshotMeta {
             model: "AliasLDA".to_string(),
@@ -518,7 +518,7 @@ mod tests {
         // RNG stream, bit-identical slice proposals).
         let mut store = Store::new();
         for w in 0..10u32 {
-            store.insert((0, w), if w < 5 { vec![80, 0] } else { vec![0, 80] });
+            store.insert((0, w), if w < 5 { vec![80, 0] } else { vec![0, 80] }.into());
         }
         let meta = SnapshotMeta {
             model: "AliasLDA".to_string(),

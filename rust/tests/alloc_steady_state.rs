@@ -139,3 +139,21 @@ fn warm_sampler_sweeps_allocate_nearly_nothing() {
         "AliasHDP: {a} allocations over {n} tokens in a warm sweep"
     );
 }
+
+/// The hybrid-row regime the refactor targets: K=10k, where every
+/// word-topic row lives far below the dense cutoff (a 30-token doc over a
+/// 200-word vocabulary touches a handful of topics per word). Warm sweeps
+/// must stay under 1 allocation per 100 tokens — short-list and hash rows
+/// mutate in place, and promotions are one-time per-word events absorbed
+/// by the warmup sweeps.
+#[test]
+fn warm_sweeps_stay_allocation_free_at_k10k() {
+    let (docs, tokens) = lda_corpus(4);
+    let mut rng = Rng::new(23);
+    let mut alias = AliasLda::new(docs, 200, 10_000, 0.1, 0.01, &mut rng);
+    let (a, n) = measure(&mut alias, 100, tokens, &mut rng, 3);
+    assert!(
+        a * 100 <= n,
+        "AliasLDA K=10k: {a} allocations over {n} tokens in a warm sweep"
+    );
+}

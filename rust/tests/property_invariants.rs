@@ -116,6 +116,7 @@ fn prop_filter_select_is_a_partition() {
         let filter = Filter {
             magnitude_fraction: rng.f64(),
             uniform_prob: rng.f64() * 0.5,
+            cell_level: false,
         };
         let mut expected: Vec<(u32, RowData)> = rows.clone();
         let (send, retain) = filter.select(rows, &mut rng);
@@ -134,6 +135,7 @@ fn prop_filter_select_is_a_partition() {
         let passthrough = Filter {
             magnitude_fraction: 1.0,
             uniform_prob: 0.0,
+            cell_level: false,
         };
         let rows2: Vec<(u32, RowData)> = expected.clone();
         let (send2, retain2) = passthrough.select(rows2, &mut rng);
@@ -507,7 +509,7 @@ fn prop_snapshot_roundtrip_random() {
             let row: Vec<i32> = (0..rng.below(16))
                 .map(|_| rng.below(100_000) as i32 - 50_000)
                 .collect();
-            store.insert(key, row);
+            store.insert(key, row.into());
         }
         let bytes = snapshot::encode_store(&store);
         assert_eq!(snapshot::decode_store(&bytes).unwrap(), store);
@@ -549,6 +551,30 @@ fn prop_snapshot_roundtrip_random() {
                 .collect(),
             r: (0..n_docs)
                 .map(|_| (0..rng.below(30)).map(|_| rng.coin(0.5)).collect())
+                .collect(),
+            replicas: (0..rng.below(3))
+                .map(|m| {
+                    let rows = (0..rng.below(5))
+                        .map(|w| {
+                            let row = if rng.coin(0.5) {
+                                RowData::Dense(
+                                    (0..1 + rng.below(6))
+                                        .map(|_| rng.below(50) as i32 - 25)
+                                        .collect::<Vec<_>>()
+                                        .into_boxed_slice(),
+                                )
+                            } else {
+                                RowData::Sparse(
+                                    (0..rng.below(4))
+                                        .map(|t| (t as u32, rng.below(50) as i32 - 25))
+                                        .collect(),
+                                )
+                            };
+                            (w as u32, row)
+                        })
+                        .collect();
+                    (m as u8, rows)
+                })
                 .collect(),
         };
         // r rows must match z rows in length for the roundtrip contract.

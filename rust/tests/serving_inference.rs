@@ -241,7 +241,7 @@ fn v2_lda_snapshots_still_serve() {
     std::fs::remove_dir_all(&dir).ok();
     let mut store = Store::new();
     for w in 0..10u32 {
-        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] });
+        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] }.into());
     }
     let meta = SnapshotMeta {
         model: "AliasLDA".to_string(),
@@ -436,7 +436,7 @@ fn family_fixtures() -> Vec<(
     for w in 0..V {
         let mut row = vec![0i32; 4];
         row[(w / 12) as usize] = 60 + (w % 5) as i32;
-        lda.insert((0, w), row);
+        lda.insert((0, w), row.into());
     }
     out.push(("lda", synth_meta("AliasLDA", 4, V), vec![lda]));
 
@@ -448,8 +448,8 @@ fn family_fixtures() -> Vec<(
         let mut s_row = vec![0i32; 3];
         m_row[t] = 40 + (w % 4) as i32;
         s_row[t] = 4 + (w % 3) as i32;
-        pdp.insert((0, w), m_row);
-        pdp.insert((1, w), s_row);
+        pdp.insert((0, w), m_row.into());
+        pdp.insert((1, w), s_row.into());
     }
     let mut pdp_meta = synth_meta("AliasPDP", 3, V);
     pdp_meta.tables = Some(TableHyper {
@@ -464,9 +464,9 @@ fn family_fixtures() -> Vec<(
     for w in 0..V {
         let mut row = vec![0i32; 4];
         row[(w % 3) as usize] = 50 + (w % 6) as i32;
-        hdp.insert((0, w), row);
+        hdp.insert((0, w), row.into());
     }
-    hdp.insert((1, 0), vec![9, 6, 3, 0]);
+    hdp.insert((1, 0), vec![9, 6, 3, 0].into());
     let mut hdp_meta = synth_meta("AliasHDP", 4, V);
     hdp_meta.tables = Some(TableHyper {
         discount: 0.0,
@@ -614,7 +614,7 @@ fn reload_prewarms_alias_cache_so_hot_words_never_rebuild() {
     std::fs::remove_dir_all(&dir).ok();
     let mut store = Store::new();
     for w in 0..10u32 {
-        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] });
+        store.insert((0, w), if w < 5 { vec![50, 0] } else { vec![0, 50] }.into());
     }
     let meta = synth_meta("AliasLDA", 2, 10);
     let bytes = snapshot::encode_store_meta(&store, &meta);

@@ -130,7 +130,7 @@ fn toy_stores(vocab: u32) -> Vec<Store> {
     for w in 0..vocab {
         let mut row = vec![0i32; 4];
         row[(w % 4) as usize] = 10 + (w % 7) as i32;
-        s.insert((0, w), row);
+        s.insert((0, w), row.into());
     }
     vec![s]
 }

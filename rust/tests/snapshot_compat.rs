@@ -46,7 +46,7 @@ fn family_fixtures() -> Vec<(&'static str, SnapshotMeta, Store)> {
     for w in 0..V {
         let mut row = vec![0i32; 4];
         row[(w / 12) as usize] = 60 + (w % 5) as i32;
-        lda.insert((0, w), row);
+        lda.insert((0, w), row.into());
     }
     out.push(("lda", synth_meta("AliasLDA", 4, V), lda));
 
@@ -57,8 +57,8 @@ fn family_fixtures() -> Vec<(&'static str, SnapshotMeta, Store)> {
         let mut s_row = vec![0i32; 3];
         m_row[t] = 40 + (w % 4) as i32;
         s_row[t] = 4 + (w % 3) as i32;
-        pdp.insert((0, w), m_row);
-        pdp.insert((1, w), s_row);
+        pdp.insert((0, w), m_row.into());
+        pdp.insert((1, w), s_row.into());
     }
     let mut pdp_meta = synth_meta("AliasPDP", 3, V);
     pdp_meta.tables = Some(TableHyper {
@@ -72,9 +72,9 @@ fn family_fixtures() -> Vec<(&'static str, SnapshotMeta, Store)> {
     for w in 0..V {
         let mut row = vec![0i32; 4];
         row[(w % 3) as usize] = 50 + (w % 6) as i32;
-        hdp.insert((0, w), row);
+        hdp.insert((0, w), row.into());
     }
-    hdp.insert((1, 0), vec![9, 6, 3, 0]);
+    hdp.insert((1, 0), vec![9, 6, 3, 0].into());
     let mut hdp_meta = synth_meta("AliasHDP", 4, V);
     hdp_meta.tables = Some(TableHyper {
         discount: 0.0,

@@ -1,0 +1,251 @@
+//! Property tests for the hybrid word-topic row (short-list → hash →
+//! dense) and its conversions: dense/`RowData` round-trips across the
+//! promotion thresholds, fold/add equivalence against a dense oracle,
+//! wire-form parity with the dense-era encoder, the cell-level filter's
+//! losslessness, and the client-snapshot v2 replica section.
+
+use hplvm::ps::filter::Filter;
+use hplvm::ps::snapshot::{self, ClientSnapshot};
+use hplvm::sampler::counts::{CountMatrix, HybridRow, RowData, RowReprKind};
+use hplvm::util::rng::Rng;
+
+/// Apply a random op sequence to both a [`HybridRow`] and a dense oracle
+/// vector, spread over topic ranges that cross the short→hash→dense
+/// promotion thresholds.
+fn drive(k: usize, ops: usize, seed: u64) -> (HybridRow, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let mut row = HybridRow::new(k);
+    let mut oracle = vec![0i32; k];
+    for _ in 0..ops {
+        // Skew topics toward a small hot set so nnz grows slowly enough
+        // to exercise every representation on the way up.
+        let t = if rng.coin(0.5) {
+            rng.below(8.min(k))
+        } else {
+            rng.below(k)
+        };
+        match rng.below(4) {
+            0 => {
+                let d = rng.below(9) as i32 - 4;
+                row.add(t, d);
+                oracle[t] = oracle[t].wrapping_add(d);
+            }
+            1 => {
+                let v = rng.below(100) as i32 - 50;
+                row.set(t, v);
+                oracle[t] = v;
+            }
+            2 => {
+                // Drive a cell back to exactly zero (nnz shrink path).
+                row.set(t, 0);
+                oracle[t] = 0;
+            }
+            _ => {
+                let d = rng.below(5) as i32;
+                row.add_saturating(t, d);
+                oracle[t] = oracle[t].saturating_add(d);
+            }
+        }
+    }
+    (row, oracle)
+}
+
+fn assert_matches_oracle(row: &HybridRow, oracle: &[i32], ctx: &str) {
+    assert_eq!(row.k(), oracle.len(), "{ctx}: width");
+    for (t, &v) in oracle.iter().enumerate() {
+        assert_eq!(row.get(t), v, "{ctx}: cell {t}");
+    }
+    assert_eq!(
+        row.nnz(),
+        oracle.iter().filter(|&&v| v != 0).count(),
+        "{ctx}: nnz"
+    );
+    assert_eq!(&*row.to_dense_box(), oracle, "{ctx}: to_dense_box");
+}
+
+#[test]
+fn prop_hybrid_row_tracks_dense_oracle_across_promotions() {
+    for (k, ops, seed) in [
+        (4usize, 200usize, 1u64), // tiny K: short → dense directly
+        (16, 300, 2),             // dense cut = 8: short ↔ dense boundary
+        (64, 600, 3),             // short → hash → dense
+        (256, 2_000, 4),          // full ladder with a real hash stage
+        (10_000, 3_000, 5),       // target regime: stays hash
+    ] {
+        let (row, oracle) = drive(k, ops, seed);
+        assert_matches_oracle(&row, &oracle, &format!("k={k}"));
+        // from_dense of the oracle equals the incrementally-built row.
+        assert_eq!(row, HybridRow::from_dense(&oracle), "k={k}: from_dense");
+    }
+}
+
+#[test]
+fn prop_rowdata_roundtrip_and_wire_parity() {
+    for seed in 0..20u64 {
+        let k = [8usize, 32, 128, 1_024][seed as usize % 4];
+        let (row, oracle) = drive(k, 50 + 40 * seed as usize, 100 + seed);
+        // to_rowdata picks the same encoding and bytes as the dense-era
+        // encoder fed the full-width row — wire traffic is bit-identical.
+        let ours = row.to_rowdata();
+        let dense_era = RowData::from_dense_auto(&oracle);
+        assert_eq!(ours, dense_era, "k={k} seed={seed}: wire form");
+        assert_eq!(ours.wire_bytes(), dense_era.wire_bytes());
+        // Lossless both ways, whatever the width hint.
+        let back = HybridRow::from_rowdata(&ours, k);
+        assert_eq!(back, row, "k={k} seed={seed}: from_rowdata");
+        assert_eq!(&*ours.to_dense(k), &oracle[..]);
+    }
+}
+
+#[test]
+fn promotion_thresholds_and_kinds() {
+    // Short list holds the first 8 distinct topics.
+    let k = 256usize;
+    let mut row = HybridRow::new(k);
+    for t in 0..8 {
+        row.add(t, 1);
+    }
+    assert_eq!(row.repr_kind(), RowReprKind::Short);
+    // 9th distinct topic spills to the hash stage (dense cut is k/4=64).
+    row.add(100, 1);
+    assert_eq!(row.repr_kind(), RowReprKind::Hash);
+    // Crossing ~K/4 occupancy promotes to dense.
+    for t in 0..80 {
+        row.add(t, 1);
+    }
+    assert_eq!(row.repr_kind(), RowReprKind::Dense);
+    assert_eq!(row.nnz(), 81);
+
+    // Tiny K skips the hash stage: the 9th topic goes straight dense.
+    let mut tiny = HybridRow::new(16);
+    for t in 0..9 {
+        tiny.add(t, 1);
+    }
+    assert_eq!(tiny.repr_kind(), RowReprKind::Dense);
+
+    // compact() demotes a dense row whose nnz collapsed.
+    let mut big = HybridRow::from_dense(&vec![1; 256]);
+    assert_eq!(big.repr_kind(), RowReprKind::Dense);
+    for t in 0..253 {
+        big.set(t, 0);
+    }
+    big.compact();
+    assert_ne!(big.repr_kind(), RowReprKind::Dense);
+    assert_eq!(big.nnz(), 3);
+    assert_eq!(big.get(254), 1);
+}
+
+#[test]
+fn prop_fold_and_add_match_dense_oracle() {
+    for seed in 0..10u64 {
+        let k = 64usize;
+        let (mut row, mut oracle) = drive(k, 150, 200 + seed);
+        let (delta_row, delta) = drive(k, 100, 300 + seed);
+        let wire = delta_row.to_rowdata();
+
+        let mut folded = row.clone();
+        folded.fold_rowdata(&wire);
+        for (t, &d) in delta.iter().enumerate() {
+            let want = oracle[t].saturating_add(d);
+            assert_eq!(folded.get(t), want, "seed={seed}: fold cell {t}");
+        }
+
+        row.add_rowdata(&wire);
+        for (t, &d) in delta.iter().enumerate() {
+            oracle[t] = oracle[t].wrapping_add(d);
+            assert_eq!(row.get(t), oracle[t], "seed={seed}: add cell {t}");
+        }
+    }
+}
+
+#[test]
+fn prop_count_matrix_export_import_roundtrip() {
+    let mut rng = Rng::new(77);
+    let (vocab, k) = (40usize, 500usize);
+    let mut m = CountMatrix::new(vocab, k);
+    for _ in 0..5_000 {
+        let w = rng.below(vocab) as u32;
+        let t = rng.below(k);
+        m.inc_local(w, t, 1 + rng.below(3) as i32);
+    }
+    let exported = m.export_rows();
+    let mut m2 = CountMatrix::new(vocab, k);
+    for (w, row) in &exported {
+        m2.apply_pull_row(*w, row);
+    }
+    for w in 0..vocab as u32 {
+        for t in 0..k {
+            assert_eq!(m2.get(w, t), m.get(w, t), "word {w} topic {t}");
+        }
+    }
+    assert_eq!(m2.totals(), m.totals());
+}
+
+#[test]
+fn prop_cell_filter_partition_is_lossless() {
+    let mut rng = Rng::new(99);
+    for trial in 0..30u64 {
+        let filter = Filter {
+            magnitude_fraction: rng.f64(),
+            uniform_prob: rng.f64() * 0.5,
+            cell_level: true,
+        };
+        let k = 32usize;
+        let rows: Vec<(u32, RowData)> = (0..2 + rng.below(10))
+            .map(|w| {
+                let (row, dense) = drive(k, rng.below(60), 1_000 + trial * 100 + w as u64);
+                let data = if rng.coin(0.5) {
+                    row.to_rowdata()
+                } else {
+                    RowData::Dense(dense.into_boxed_slice())
+                };
+                (w as u32, data)
+            })
+            .collect();
+        // Dense totals per word before/after must match exactly.
+        let total_of = |batch: &[(u32, RowData)]| -> Vec<(u32, Vec<i32>)> {
+            let mut m: std::collections::BTreeMap<u32, Vec<i32>> = Default::default();
+            for (w, r) in batch {
+                let acc = m.entry(*w).or_insert_with(|| vec![0i32; k]);
+                for (t, &v) in r.to_dense(k).iter().enumerate() {
+                    acc[t] += v;
+                }
+            }
+            m.into_iter().collect()
+        };
+        let before = total_of(&rows);
+        let (send, retain) = filter.select(rows, &mut rng);
+        let mut merged = send;
+        merged.extend(retain);
+        assert_eq!(total_of(&merged), before, "trial {trial}");
+    }
+}
+
+#[test]
+fn client_snapshot_v2_replicas_roundtrip() {
+    let snap = ClientSnapshot {
+        shard: 2,
+        iteration: 9,
+        z: vec![vec![0, 1, 2]],
+        r: vec![vec![false, true, false]],
+        replicas: vec![
+            (0, vec![(4, RowData::Sparse(vec![(0, 3), (7, -1)]))]),
+            (
+                1,
+                vec![(0, RowData::Dense(vec![5, 0, 2].into_boxed_slice()))],
+            ),
+        ],
+    };
+    let bytes = snapshot::encode_client(&snap);
+    assert_eq!(snapshot::decode_client(&bytes).unwrap(), snap);
+
+    // Replica rows survive a HybridRow round-trip too (the worker's
+    // checkpoint → export_rows → apply_pull_row path).
+    for (_, rows) in &snap.replicas {
+        for (_, data) in rows {
+            let width = data.min_width().max(8);
+            let row = HybridRow::from_rowdata(data, width);
+            assert_eq!(&*row.to_dense_box(), &*data.to_dense(width));
+        }
+    }
+}

@@ -32,7 +32,7 @@ fn write_snapshot(dir: &Path, k: u32, vocab: u32, bump: i32) {
     for w in 0..vocab {
         let mut row = vec![0i32; k as usize];
         row[(w % k) as usize] = 10 + (w % 7) as i32 + bump;
-        store.insert((0, w), row);
+        store.insert((0, w), row.into());
     }
     let meta = SnapshotMeta {
         model: "AliasLDA".to_string(),
