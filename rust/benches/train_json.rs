@@ -6,7 +6,11 @@
 //! * whole-cluster tokens/sec, wall seconds, and final perplexity for a
 //!   fixed seeded LDA and PDP config through `Trainer::run`, and
 //! * the session lifecycle costs: checkpoint seconds (acknowledged
-//!   cluster snapshot) and resume seconds (fresh topology from disk).
+//!   cluster snapshot) and resume seconds (fresh topology from disk),
+//!   plus the incremental-checkpoint byte panel: segment bytes written
+//!   by the first (full base) checkpoint vs. by an immediate second
+//!   one (carried by hardlink — the v4 store's O(rows changed) claim
+//!   in numbers).
 //!
 //! Regenerate with `cargo bench --bench train_json`.
 
@@ -16,7 +20,28 @@ use hplvm::coordinator::session::TrainSession;
 use hplvm::coordinator::trainer::Trainer;
 use hplvm::corpus::source::SyntheticSource;
 use hplvm::util::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Segment files in a checkpoint dir: name → byte length. Carried
+/// segments keep their names across checkpoints, so bytes under names
+/// *not* present in the previous checkpoint are the bytes this
+/// checkpoint actually wrote.
+fn seg_files(dir: &Path) -> HashMap<String, u64> {
+    let mut out = HashMap::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if hplvm::ps::snapshot::is_segment_name(&name) {
+                if let Ok(md) = entry.metadata() {
+                    out.insert(name, md.len());
+                }
+            }
+        }
+    }
+    out
+}
 
 fn cfg(model: ModelKind) -> TrainConfig {
     let mut cfg = TrainConfig::default();
@@ -79,6 +104,19 @@ fn main() {
     let t = Instant::now();
     session.checkpoint(&ckpt).expect("checkpoint");
     let checkpoint_secs = t.elapsed().as_secs_f64();
+    // Incremental-checkpoint byte panel: an immediate second checkpoint
+    // carries every segment forward and should write ≈0 new bytes.
+    let ckpt2 = std::env::temp_dir().join(format!("hplvm_bench_ckpt2_{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt2).ok();
+    let first = seg_files(&ckpt);
+    let first_bytes: u64 = first.values().sum();
+    session.checkpoint(&ckpt2).expect("second checkpoint");
+    let second_bytes: u64 = seg_files(&ckpt2)
+        .iter()
+        .filter(|(name, _)| !first.contains_key(*name))
+        .map(|(_, len)| len)
+        .sum();
+    std::fs::remove_dir_all(&ckpt2).ok();
     let _ = session.finish().expect("finish");
     let t = Instant::now();
     let mut resumed = TrainSession::resume(&ckpt).expect("resume");
@@ -88,11 +126,19 @@ fn main() {
     std::fs::remove_dir_all(&ckpt).ok();
     bench::section("session lifecycle");
     bench::table(
-        &["checkpoint s", "resume s", "resumed perplexity"],
+        &[
+            "checkpoint s",
+            "resume s",
+            "resumed perplexity",
+            "ckpt1 seg bytes",
+            "ckpt2 new bytes",
+        ],
         &[vec![
             format!("{checkpoint_secs:.3}"),
             format!("{resume_secs:.3}"),
             format!("{resumed_perp:.1}"),
+            format!("{first_bytes}"),
+            format!("{second_bytes}"),
         ]],
     );
 
@@ -134,6 +180,8 @@ fn main() {
                 ("checkpoint_secs", Json::Num(checkpoint_secs)),
                 ("resume_secs", Json::Num(resume_secs)),
                 ("resumed_final_perplexity", Json::Num(resumed_perp)),
+                ("checkpoint_segment_bytes_first", Json::Num(first_bytes as f64)),
+                ("checkpoint_segment_bytes_second", Json::Num(second_bytes as f64)),
             ]),
         ),
     ]);

@@ -50,6 +50,7 @@ use std::time::Duration;
 use crate::config::{ModelKind, TrainConfig};
 use crate::coordinator::TrainSession;
 use crate::corpus::source::SyntheticSource;
+use crate::net::Pacer;
 use crate::ps::server::HandoffStats;
 use crate::serve::{InferConfig, ReplicaSet};
 use crate::util::rng::Rng;
@@ -378,14 +379,20 @@ impl ChaosHarness {
             std::thread::spawn(move || {
                 let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
                 let icfg = InferConfig::default();
+                // Absolute-deadline pacing: sleep-after-infer would add
+                // each query's service time to the 200µs period and the
+                // stream would sag under exactly the chaos-induced
+                // latency it exists to probe.
+                let mut pacer =
+                    Pacer::new(std::time::Instant::now(), Duration::from_micros(200));
                 while !stop.load(Ordering::Relaxed) {
+                    pacer.wait();
                     let doc: Vec<u32> =
                         (0..16).map(|_| rng.below(vocab) as u32).collect();
                     q_sent.fetch_add(1, Ordering::Relaxed);
                     let res = set.infer(&doc, &icfg, &mut rng);
                     debug_assert!(!res.theta.is_empty());
                     q_answered.fetch_add(1, Ordering::Relaxed);
-                    std::thread::sleep(Duration::from_micros(200));
                 }
             })
         };

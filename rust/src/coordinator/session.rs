@@ -203,6 +203,11 @@ pub struct TrainSession {
     iteration: u64,
     /// Segment counter — salts per-segment worker RNG streams.
     epoch: u64,
+    /// Checkpoint counter — each [`checkpoint`](Self::checkpoint) call
+    /// gets a fresh epoch, and only `SnapshotAck`s echoing it count
+    /// toward that checkpoint's quorum (a duplicate or stale ack can
+    /// never satisfy the quorum for a slot that didn't serialize).
+    snapshot_epoch: u64,
     eval_every: u64,
     /// Per-shard sampler state carried across segments.
     states: Vec<Option<ClientSnapshot>>,
@@ -285,12 +290,15 @@ impl TrainSession {
         let n_servers = cfg.cluster.n_servers();
         let mut stores = Vec::with_capacity(n_servers);
         for slot in 0..n_servers {
-            let path = dir.join(snapshot::slot_snapshot_name(slot));
-            let bytes = snapshot::read_snapshot(&path).ok_or_else(|| {
-                anyhow::anyhow!("partial checkpoint: missing {}", path.display())
-            })?;
-            let (meta, store) = snapshot::decode_store_meta(&bytes)
-                .ok_or_else(|| anyhow::anyhow!("corrupt slot snapshot {}", path.display()))?;
+            let name = snapshot::slot_snapshot_name(slot);
+            anyhow::ensure!(
+                dir.join(&name).exists(),
+                "partial checkpoint: missing {}",
+                dir.join(&name).display()
+            );
+            // Any format v1–v4: full dumps load directly, a v4 manifest
+            // replays its segment set (torn segments are hard errors).
+            let (meta, store, _generation) = snapshot::load_slot_file(dir, &name)?;
             if let Some(meta) = meta {
                 anyhow::ensure!(
                     meta.run_id == sm.run_id,
@@ -484,6 +492,7 @@ impl TrainSession {
             run_id,
             iteration,
             epoch,
+            snapshot_epoch: 0,
             eval_every,
             states,
             pending_client_kills,
@@ -933,7 +942,12 @@ impl TrainSession {
         let _ = self.net.drain_ready(self.scheduler_node);
 
         // Server slot stores, with acknowledged round-trips (re-requested
-        // on a cadence: the transport may drop either direction).
+        // on a cadence: the transport may drop either direction). Each
+        // checkpoint runs under a fresh epoch; quorum counts (slot,
+        // epoch) pairs, so a duplicated or stale ack can't stand in for
+        // a slot that never serialized this time.
+        self.snapshot_epoch += 1;
+        let epoch = self.snapshot_epoch;
         let group = self.group.as_ref().unwrap();
         let n_slots = self.cfg.cluster.n_servers();
         let mut acked = vec![false; n_slots];
@@ -958,6 +972,7 @@ impl TrainSession {
                             group.node_for_slot(slot as u32),
                             Payload::SnapshotReq {
                                 dir: dir.to_path_buf(),
+                                epoch,
                             },
                         );
                     }
@@ -972,12 +987,15 @@ impl TrainSession {
                     slot,
                     ok,
                     dir: acked_dir,
+                    epoch: acked_epoch,
                 } = env.payload
                 {
-                    // Only acks for *this* checkpoint's directory count —
-                    // a stale ack from an earlier checkpoint's retry must
-                    // not mark a slot done it never wrote here.
-                    if acked_dir != dir {
+                    // Only acks for *this* checkpoint count: the epoch is
+                    // the dedup key (a stale ack from an earlier
+                    // checkpoint — even into the same directory — must
+                    // not mark a slot done it never wrote here), the
+                    // directory check stays as defense in depth.
+                    if acked_epoch != epoch || acked_dir != dir {
                         continue;
                     }
                     anyhow::ensure!(

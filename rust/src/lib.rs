@@ -94,7 +94,12 @@
 //!   `O(topics actually touched)` per token and allocates nothing.
 //!   [`ps::filter::Filter`] can additionally rank individual
 //!   `(word, topic)` cells by `|δ|` (`cell_level`) on top of the paper's
-//!   row-magnitude priority.
+//!   row-magnitude priority. Durability is incremental: each server
+//!   slot's live store doubles as an LSM *memtable*, and a
+//!   [`ps::snapshot::SegmentLog`] seals checkpoint deltas into
+//!   immutable, footer-checksummed segment files under an atomically
+//!   renamed manifest (v4), compacting at seal time — a torn checkpoint
+//!   leaves only unreferenced (inert) files, never a half-read store.
 //! * **Layer 2 (python/compile, build-time)** — JAX dense-math graphs
 //!   (φ normalization, dense alias proposals, the test-perplexity
 //!   estimator), AOT-lowered to HLO text in `artifacts/`.
@@ -104,12 +109,21 @@
 //!   the PJRT C API (`xla` crate) so the evaluation path runs the compiled
 //!   kernels with **no python at training time**.
 //!
-//! Training hands off to serving through [`ps::snapshot`]: v3 server
+//! Training hands off to serving through [`ps::snapshot`]: server
 //! snapshots carry the hyperparameters (model, K, α, β), the ring
 //! geometry, and — for the table-constrained families — the
 //! [`ps::snapshot::TableHyper`] section (PDP `a`/`b`/`γ`, HDP `b₀`/`b₁`),
 //! so a snapshot directory is all the inference server needs for any
-//! family; v1/v2 files still decode.
+//! family; v1/v2/v3 files still decode. Session checkpoints write the
+//! **v4 segmented format**: each slot file is an LSM-style manifest
+//! naming immutable, checksummed segment files ([`ps::snapshot::SegmentLog`]
+//! seals only the rows dirtied since the last seal and carries the rest
+//! forward by hardlink), so a steady-state `checkpoint(dir)` costs
+//! O(rows changed) instead of O(model). On the serving side the same
+//! structure powers **generation-diff reloads**: a `--watch` reload of a
+//! v4 directory replays only the segments newer than the resident
+//! generation ([`serve::ResidentStores`]) and is bit-identical to a full
+//! decode, with [`serve::ReloadStats`] reporting which path ran.
 //!
 //! ## Quickstart
 //!
@@ -157,8 +171,11 @@
 //! `serving_router.rs` (serving), `wire_server.rs` (the network
 //! front-end: loadgen vs in-process parity, hot reload under load,
 //! malformed-frame robustness), `session_resume.rs`
-//! (checkpoint/resume), and `chaos_scenarios.rs` (elastic membership +
-//! fault drills). Every chaos scenario derives
+//! (checkpoint/resume), `snapshot_compat.rs` /
+//! `snapshot_incremental.rs` (the on-disk format matrix and the v4
+//! segment store: byte-proportional re-checkpoints, torn-checkpoint
+//! recovery, diff-reload bit-identity), and `chaos_scenarios.rs`
+//! (elastic membership + fault drills). Every chaos scenario derives
 //! its fault schedule from one seed; set the `CHAOS_SEED` environment
 //! variable to replay a failing CI seed locally with one command:
 //!

@@ -509,6 +509,15 @@ impl Backend {
         }
     }
 
+    /// Whether the last reload decoded the whole directory or overlaid
+    /// only the segments newer than the resident generation.
+    fn last_reload_stats(&self) -> hplvm::serve::ReloadStats {
+        match self {
+            Backend::Single(h) => h.last_reload_stats(),
+            Backend::Set(s) => s.last_reload_stats(),
+        }
+    }
+
     fn query_backend(&self) -> Arc<dyn QueryBackend> {
         match self {
             Backend::Single(h) => h.clone(),
@@ -603,7 +612,23 @@ fn spawn_watcher(
             }
             pending = None;
             match backend.reload(&dir) {
-                Ok(g) => hplvm::info!("serve", "hot-reloaded snapshots → generation {g}"),
+                Ok(g) => {
+                    let st = backend.last_reload_stats();
+                    if st.full {
+                        hplvm::info!(
+                            "serve",
+                            "hot-reloaded snapshots → generation {g} (full decode)"
+                        );
+                    } else {
+                        hplvm::info!(
+                            "serve",
+                            "hot-reloaded snapshots → generation {g} \
+                             (diff: {} segments, {} rows)",
+                            st.segments,
+                            st.rows
+                        );
+                    }
+                }
                 // Mark the failed fingerprint as seen either way: a
                 // permanently bad directory is reported once, then
                 // retried only when the directory changes again.

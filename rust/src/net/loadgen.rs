@@ -85,6 +85,72 @@ pub fn connection_queries(cfg: &LoadgenConfig, conn: usize) -> Vec<(u64, Vec<u32
     docs.into_iter().map(|d| (seeds.next_u64(), d)).collect()
 }
 
+/// Absolute-deadline pacer for fixed-rate loops.
+///
+/// The naive pattern — do the tick's work, then `sleep(interval)` —
+/// drifts: tick `i` starts after `Σ(workⱼ + interval)`, so every
+/// microsecond of work (or sleep overshoot) pushes the whole schedule
+/// later, and the achieved rate sags below the target the longer the
+/// run. A `Pacer` fixes the schedule up front instead: tick `i` is due
+/// at `start + i·interval`, independent of how long any tick took. A
+/// slow tick is followed by immediately-due catch-up ticks, so the
+/// long-run rate holds exactly. Used by the open-loop send schedule
+/// here and by the chaos harness's query stream.
+#[derive(Clone, Debug)]
+pub struct Pacer {
+    start: Instant,
+    interval: Duration,
+    next: u64,
+}
+
+impl Pacer {
+    /// A pacer whose tick `i` is due at `start + i·interval`.
+    pub fn new(start: Instant, interval: Duration) -> Pacer {
+        Pacer {
+            start,
+            interval,
+            next: 0,
+        }
+    }
+
+    /// Deadline of the next unconsumed tick.
+    pub fn due(&self) -> Instant {
+        self.start + self.interval.mul_f64(self.next as f64)
+    }
+
+    /// Is the next tick due at `now`?
+    pub fn is_due(&self, now: Instant) -> bool {
+        self.due() <= now
+    }
+
+    /// Consume the next tick, returning its scheduled deadline — the
+    /// instant an open-loop load generator charges latency from, so
+    /// server queueing delay counts against the server (no coordinated
+    /// omission).
+    pub fn consume(&mut self) -> Instant {
+        let due = self.due();
+        self.next += 1;
+        due
+    }
+
+    /// Ticks consumed so far.
+    pub fn ticks(&self) -> u64 {
+        self.next
+    }
+
+    /// Block until the next tick is due, then consume it. Behind
+    /// schedule this returns immediately — missed deadlines are
+    /// consumed one per call, preserving the long-run rate.
+    pub fn wait(&mut self) -> Instant {
+        let due = self.due();
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        self.consume()
+    }
+}
+
 /// One collected answer (with `keep_responses`).
 #[derive(Clone, Debug)]
 pub struct WireAnswer {
@@ -366,10 +432,13 @@ fn run_conn(addr: &str, cfg: &LoadgenConfig, conn_id: usize) -> io::Result<ConnO
     };
     let start = Instant::now();
     let deadline = start + cfg.timeout;
-    // Open-loop: this connection's share of the total target rate.
-    let interval = if cfg.rate > 0.0 {
-        Some(Duration::from_secs_f64(
-            cfg.connections.max(1) as f64 / cfg.rate,
+    // Open-loop: this connection's share of the total target rate, paced
+    // against absolute deadlines so per-request work can't slip the
+    // schedule.
+    let mut pacer = if cfg.rate > 0.0 {
+        Some(Pacer::new(
+            start,
+            Duration::from_secs_f64(cfg.connections.max(1) as f64 / cfg.rate),
         ))
     } else {
         None
@@ -384,13 +453,12 @@ fn run_conn(addr: &str, cfg: &LoadgenConfig, conn_id: usize) -> io::Result<ConnO
 
         // Encode every request that is due.
         while next_send < queries.len() {
-            let charge = match interval {
-                Some(iv) => {
-                    let due = start + iv.mul_f64(next_send as f64);
-                    if due > Instant::now() {
+            let charge = match pacer.as_mut() {
+                Some(p) => {
+                    if !p.is_due(Instant::now()) {
                         break;
                     }
-                    due // open loop: latency includes server queueing delay
+                    p.consume() // open loop: latency includes server queueing delay
                 }
                 None => {
                     if inflight.len() >= cfg.window.max(1) {
@@ -527,4 +595,49 @@ fn run_conn(addr: &str, cfg: &LoadgenConfig, conn_id: usize) -> io::Result<ConnO
 fn finish_eof(mut out: ConnOutcome, inflight: HashMap<u64, Instant>) -> io::Result<ConnOutcome> {
     out.errors += inflight.len() as u64;
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pacer_schedule_is_anchored_not_cumulative() {
+        let start = Instant::now();
+        let iv = Duration::from_millis(10);
+        let mut p = Pacer::new(start, iv);
+        // The deadline of tick i depends only on i, never on when the
+        // previous ticks were consumed — so no per-tick cost can
+        // accumulate into the schedule (the drift the sleep-after-work
+        // loop suffers from).
+        for i in 0..1000u64 {
+            let due = p.consume();
+            let want = iv.mul_f64(i as f64).as_secs_f64();
+            let got = due.duration_since(start).as_secs_f64();
+            assert!((got - want).abs() < 1e-9, "tick {i}: due {got}, want {want}");
+        }
+        assert_eq!(p.ticks(), 1000);
+        // After 1000 consumed ticks the next deadline sits exactly 10s
+        // past start; the drifting loop's would be 10s plus the sum of
+        // every tick's work time.
+        let horizon = p.due().duration_since(start).as_secs_f64();
+        assert!((horizon - 10.0).abs() < 1e-6, "{horizon}");
+    }
+
+    #[test]
+    fn pacer_releases_backlog_when_behind_schedule() {
+        // Anchor 55ms in the past: ticks at 0,10,…,50ms are already due
+        // and must be released immediately (catch-up preserves the
+        // long-run rate), not rescheduled from "now".
+        let start = Instant::now() - Duration::from_millis(55);
+        let mut p = Pacer::new(start, Duration::from_millis(10));
+        let now = Instant::now();
+        let mut released = 0;
+        while p.is_due(now) {
+            p.consume();
+            released += 1;
+        }
+        assert!(released >= 6, "only {released} backlogged ticks released");
+        assert!(!p.is_due(now), "catch-up must stop at the schedule edge");
+    }
 }

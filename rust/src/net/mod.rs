@@ -72,6 +72,8 @@ pub mod proto;
 pub mod reactor;
 pub mod server;
 
-pub use loadgen::{connection_queries, hello, LoadReport, LoadgenConfig, ServerHello, WireAnswer};
+pub use loadgen::{
+    connection_queries, hello, LoadReport, LoadgenConfig, Pacer, ServerHello, WireAnswer,
+};
 pub use reactor::{Counters, ModelInfo};
 pub use server::{ListenAddr, WireConfig, WireServer, WireStats};

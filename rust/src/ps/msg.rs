@@ -87,6 +87,11 @@ pub enum Payload {
     SnapshotReq {
         /// Directory to write `server_slot{slot}.snap` into.
         dir: std::path::PathBuf,
+        /// Checkpoint epoch — a per-session counter identifying *this*
+        /// checkpoint attempt. The server seals at most once per epoch
+        /// (request retries re-ack the recorded outcome instead of
+        /// re-serializing) and echoes it in the ack.
+        epoch: u64,
     },
     /// Server → coordinator: checkpoint snapshot written (or failed).
     SnapshotAck {
@@ -98,6 +103,12 @@ pub enum Payload {
         /// a stale ack from an earlier checkpoint's retry can never
         /// satisfy a later checkpoint into a different directory.
         dir: std::path::PathBuf,
+        /// Echoed from the request. The coordinator counts quorum by
+        /// `(slot, epoch)`: a duplicate delivery of one ack, or a stale
+        /// ack from a previous checkpoint into the *same* directory, can
+        /// never satisfy the quorum for a slot that did not serialize in
+        /// this epoch.
+        epoch: u64,
     },
     /// Elasticity controller → server: the ring is growing to
     /// `new_slots` logical slots — rebuild the ring locally (it is a pure
@@ -158,8 +169,8 @@ impl Payload {
             Payload::PullReq { words, .. } => 16 + 4 * words.len() as u64,
             Payload::Progress { .. } => 32,
             Payload::HandoffReq { .. } | Payload::HandoffAck { .. } => 24,
-            Payload::SnapshotReq { dir } | Payload::SnapshotAck { dir, .. } => {
-                16 + dir.as_os_str().len() as u64
+            Payload::SnapshotReq { dir, .. } | Payload::SnapshotAck { dir, .. } => {
+                24 + dir.as_os_str().len() as u64
             }
             Payload::Heartbeat | Payload::Control(_) => 8,
         }

@@ -93,6 +93,17 @@ struct ServerNode {
     /// Group-wide shutdown flag — a replacement node spawned *during*
     /// shutdown would otherwise never receive its Terminate.
     shutdown: Arc<AtomicBool>,
+    /// Segment bookkeeping for v4 incremental session checkpoints:
+    /// which keys changed/drained since the last seal and which
+    /// immutable segments the last manifest referenced. The live
+    /// `store` is the memtable. Periodic cadence and shutdown snapshots
+    /// keep writing full v3 dumps (one self-compacting file).
+    seglog: snapshot::SegmentLog,
+    /// Outcome of the most recent seal, keyed by checkpoint epoch — a
+    /// retried `SnapshotReq` re-acks this instead of resealing, so a
+    /// duplicate request (or duplicate ack delivery) can never count a
+    /// slot that failed to serialize as checkpointed.
+    last_seal: Option<(u64, bool)>,
 }
 
 impl ServerNode {
@@ -141,6 +152,7 @@ impl ServerNode {
                             .or_insert_with(|| HybridRow::new(width));
                         row.ensure_width(width);
                         row.fold_rowdata(&delta);
+                        self.seglog.mark_dirty((matrix, word));
                         self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
                         if let Some(p) = &self.cfg.projection {
                             let n = p.correct(&mut self.store, matrix, word);
@@ -177,13 +189,26 @@ impl ServerNode {
                         },
                     );
                 }
-                Payload::SnapshotReq { dir } => {
-                    // Session checkpoint: write this slot's store into the
-                    // requested directory and acknowledge (echoing the
-                    // directory — the requester's dedup key). Idempotent:
-                    // a retried request rewrites the same bytes atomically.
-                    let path = dir.join(snapshot::slot_snapshot_name(self.slot));
-                    let ok = self.write_snapshot_to(&path);
+                Payload::SnapshotReq { dir, epoch } => {
+                    // Session checkpoint: seal the delta accumulated since
+                    // the last checkpoint into the segment log (v4
+                    // manifest + immutable segments, carrying unchanged
+                    // segments by hardlink) instead of dumping the whole
+                    // store. Idempotent per epoch: a retried request
+                    // re-acks the recorded outcome rather than resealing.
+                    let ok = match self.last_seal {
+                        Some((e, ok)) if e == epoch => ok,
+                        _ => {
+                            let mut meta = self.cfg.meta.clone();
+                            meta.slot = self.slot as u32;
+                            let ok = self.seglog.seal_to(&dir, &self.store, &meta).is_ok();
+                            if ok {
+                                self.stats.snapshots.fetch_add(1, Ordering::Relaxed);
+                            }
+                            self.last_seal = Some((epoch, ok));
+                            ok
+                        }
+                    };
                     self.net.send(
                         self.id,
                         env.from,
@@ -191,6 +216,7 @@ impl ServerNode {
                             slot: self.slot as u32,
                             ok,
                             dir,
+                            epoch,
                         },
                     );
                 }
@@ -218,6 +244,7 @@ impl ServerNode {
                         std::collections::HashMap::new();
                     for key in keys {
                         if let Some(row) = self.store.remove(&key) {
+                            self.seglog.mark_removed(key);
                             by_matrix
                                 .entry(key.0)
                                 .or_default()
@@ -262,6 +289,7 @@ impl ServerNode {
                         let width = self.cfg.row_width.max(data.min_width());
                         self.store
                             .insert((matrix, word), HybridRow::from_rowdata(&data, width));
+                        self.seglog.mark_dirty((matrix, word));
                         self.stats.rows_applied.fetch_add(1, Ordering::Relaxed);
                     }
                     self.net.send(
@@ -424,6 +452,10 @@ impl Elastic {
             store: Store::new(),
             stats: st.clone(),
             shutdown: self.shutdown.clone(),
+            // A grow-spawned slot has no segment history: its first
+            // checkpoint seal writes a fresh full base.
+            seglog: snapshot::SegmentLog::new(old_n as u32),
+            last_seal: None,
         };
         self.server_handles
             .lock()
@@ -510,6 +542,8 @@ impl ServerGroup {
                 store,
                 stats: st.clone(),
                 shutdown: shutdown.clone(),
+                seglog: snapshot::SegmentLog::new(slot as u32),
+                last_seal: None,
             };
             handles
                 .lock()
@@ -576,9 +610,20 @@ impl ServerGroup {
                         // Freeze the whole system (paper §5.4).
                         frozen.store(true, Ordering::SeqCst);
                         let new_id = net.add_node();
-                        let store = ServerNode::snapshot_path(&cfg, slot)
-                            .and_then(|p| snapshot::read_snapshot(&p))
-                            .and_then(|b| snapshot::decode_store(&b))
+                        // Restore from the most recent snapshot in any
+                        // format (cadence snapshots are full v3 dumps;
+                        // a checkpoint dir may hold a v4 manifest).
+                        let store = cfg
+                            .snapshot_dir
+                            .as_ref()
+                            .and_then(|d| {
+                                snapshot::load_slot_file(
+                                    d,
+                                    &snapshot::slot_snapshot_name(slot),
+                                )
+                                .ok()
+                            })
+                            .map(|(_, store, _)| store)
                             .unwrap_or_default();
                         let st = Arc::new(ServerStats::default());
                         let node = ServerNode {
@@ -590,6 +635,10 @@ impl ServerGroup {
                             store,
                             stats: st.clone(),
                             shutdown: shutdown.clone(),
+                            // The replacement restarts segment history:
+                            // its first seal writes a fresh full base.
+                            seglog: snapshot::SegmentLog::new(slot as u32),
+                            last_seal: None,
                         };
                         handles
                             .lock()
@@ -822,22 +871,48 @@ mod tests {
         let dir =
             std::env::temp_dir().join(format!("hplvm_ckpt_req_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        net.send(me, server, Payload::SnapshotReq { dir: dir.clone() });
+        net.send(me, server, Payload::SnapshotReq { dir: dir.clone(), epoch: 1 });
         let acked = loop {
             let env = net
                 .recv_timeout(me, Duration::from_secs(2))
                 .expect("checkpoint ack timed out");
-            if let Payload::SnapshotAck { slot, ok, dir: acked_dir } = env.payload {
+            if let Payload::SnapshotAck { slot, ok, dir: acked_dir, epoch } = env.payload {
                 assert_eq!(acked_dir, dir, "ack must echo the checkpoint dir");
+                assert_eq!(epoch, 1, "ack must echo the checkpoint epoch");
                 break (slot, ok);
             }
         };
         assert_eq!(acked, (0, true));
+        // The slot file is a v4 manifest: the legacy full-dump reader
+        // refuses it, the directory-aware loader replays it exactly.
         let bytes = snapshot::read_snapshot(&dir.join(snapshot::slot_snapshot_name(0)))
             .expect("checkpoint file missing");
-        let (meta, store) = snapshot::decode_store_meta(&bytes).unwrap();
+        assert!(
+            snapshot::decode_store_meta(&bytes).is_none(),
+            "a v4 manifest must not decode as a pre-v4 full dump"
+        );
+        let (meta, store, generation) =
+            snapshot::load_slot_file(&dir, &snapshot::slot_snapshot_name(0)).unwrap();
         assert_eq!(store, s0);
+        assert_eq!(generation, 1, "first seal writes base generation 1");
         assert_eq!(meta.unwrap().run_id, 0x5E55, "run id must stamp checkpoints");
+        // A retried request in the same epoch re-acks the recorded
+        // outcome without resealing.
+        net.send(me, server, Payload::SnapshotReq { dir: dir.clone(), epoch: 1 });
+        loop {
+            let env = net
+                .recv_timeout(me, Duration::from_secs(2))
+                .expect("retry ack timed out");
+            if let Payload::SnapshotAck { ok, epoch, .. } = env.payload {
+                assert!(ok);
+                assert_eq!(epoch, 1);
+                break;
+            }
+        }
+        let seals = group.stats.read().unwrap()[0]
+            .snapshots
+            .load(Ordering::Relaxed);
+        assert_eq!(seals, 1, "retried request must not reseal");
         group.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -19,7 +19,7 @@
 //!   `K`, α, β, vocabulary size, and the ring geometry
 //!   (`slot`/`n_servers`/`vnodes`). Still decodes, with
 //!   `meta.tables = None`.
-//! * **v3** (`HPLVMSN3`, current) — appends, after the v2 fields: a
+//! * **v3** (`HPLVMSN3`) — appends, after the v2 fields: a
 //!   `run_id` nonce identifying the producing training run (slot files
 //!   from different runs must never merge, even when every configured
 //!   hyperparameter matches), then an *optional table-statistics
@@ -32,8 +32,48 @@
 //!   PDP/HDP serving families need to rebuild the frozen predictive
 //!   distributions. LDA snapshots write `has_tables = 0` and are
 //!   byte-identical to v2 apart from the magic and that one byte.
+//! * **v4** (`HPLVMSN4`, current for *session checkpoints*) — the slot
+//!   file becomes an LSM-style **manifest** instead of a full dump: the
+//!   same v3 meta fields, then a `generation` watermark and the list of
+//!   immutable **segment** files (`HPLVMSEG`, named
+//!   `slot{slot}-{gen:06}-{base|delta}.seg`) whose last-writer-wins fold
+//!   *is* the store. Cadence and shutdown snapshots still write full v3
+//!   dumps (a single self-compacting file); only acknowledged
+//!   `checkpoint(dir)` seals segments. Pre-v4 readers refuse a manifest
+//!   outright ([`decode_store_meta`] returns `None` — the magic is
+//!   unknown to them) rather than mis-decoding it.
 //!
-//! Encoders always write the current format; decoders accept all three.
+//! ## Segment lifecycle (v4)
+//!
+//! Each server slot's live [`HybridRow`] store is the *memtable* — the
+//! authoritative, complete state. A [`SegmentLog`] tracks which keys
+//! changed (dirty) or were drained away (tombstones) since the last
+//! seal. [`SegmentLog::seal_to`] turns a checkpoint into O(delta) work:
+//!
+//! 1. carry the previous checkpoint's live segments into the target
+//!    directory by hardlink (copy fallback) — no bytes rewritten;
+//! 2. seal the dirty keys + tombstones into one new immutable *delta*
+//!    segment (absolute rows in [`RowData`] wire form; an empty row is a
+//!    tombstone — absent and all-zero are the same state);
+//! 3. write the manifest naming the live set, **atomically and last**.
+//!
+//! The compactor runs *at seal time*: once the live set would exceed a
+//! small bound (base + a handful of deltas), the seal writes a fresh
+//! full base from the memtable instead — valid because the memtable is
+//! by construction exactly fold(sealed segments) + unsealed dirty delta.
+//! No background pass, no orphan rewrites, minimal crash surface.
+//!
+//! Crash consistency: every file is written temp-then-rename, manifest
+//! last, so a crash mid-checkpoint leaves at worst *unreferenced*
+//! segment files next to the previous (still complete) manifest —
+//! readers only open manifest-referenced segments, so orphans (even
+//! truncated ones) are inert. Every segment carries a 16-byte footer
+//! (`body_len`, FNV-1a checksum); a *referenced* segment that fails the
+//! footer check is a hard, named error — never folded silently.
+//!
+//! Encoders for full dumps always write v3; decoders accept v1–v3 at
+//! the byte level and v1–v4 through the directory-aware
+//! [`load_slot_file`].
 //!
 //! Client snapshots have their own two-version history: v1 (shares the
 //! `HPLVMSNP` magic) carries shard/iteration/`z`/`r`; v2 (`HPLVMCL2`,
@@ -47,9 +87,9 @@
 //! run in a fresh process under the same `run_id`.
 
 use crate::sampler::counts::{HybridRow, RowData};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// A server's store: `(matrix, word) → row`. Rows are [`HybridRow`]s —
 /// resident memory scales with each word's occupancy, not `K` — but the
@@ -60,6 +100,8 @@ pub type Store = HashMap<(u8, u32), HybridRow>;
 const MAGIC: &[u8; 8] = b"HPLVMSNP";
 const MAGIC_V2: &[u8; 8] = b"HPLVMSN2";
 const MAGIC_V3: &[u8; 8] = b"HPLVMSN3";
+const MAGIC_V4: &[u8; 8] = b"HPLVMSN4";
+const MAGIC_SEGMENT: &[u8; 8] = b"HPLVMSEG";
 
 /// Table-side hyperparameters (v3 section) — present for model families
 /// whose sufficient statistics include table counts (PDP/HDP).
@@ -295,6 +337,13 @@ fn decode_header(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Reader<'_>)> {
     if !v3 && &bytes[..8] != MAGIC_V2 {
         return None;
     }
+    let meta = read_meta_fields(&mut r, v3)?;
+    Some((Some(meta), r))
+}
+
+/// Read the [`SnapshotMeta`] field block shared by v2/v3 headers and the
+/// v4 manifest (`with_v3_tail` adds the `run_id` + table section).
+fn read_meta_fields(r: &mut Reader<'_>, with_v3_tail: bool) -> Option<SnapshotMeta> {
     let mut meta = SnapshotMeta {
         model: r.str()?,
         k: r.u32()?,
@@ -308,7 +357,7 @@ fn decode_header(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Reader<'_>)> {
         run_id: 0,
         tables: None,
     };
-    if v3 {
+    if with_v3_tail {
         meta.run_id = r.u64()?;
         meta.tables = match r.u8()? {
             0 => None,
@@ -320,7 +369,7 @@ fn decode_header(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Reader<'_>)> {
             _ => return None,
         };
     }
-    Some((Some(meta), r))
+    Some(meta)
 }
 
 /// Deserialize a server store plus its metadata (`None` for v1 files;
@@ -332,8 +381,14 @@ pub fn decode_store_meta(bytes: &[u8]) -> Option<(Option<SnapshotMeta>, Store)> 
 
 /// Decode only the metadata header from a byte *prefix* of a snapshot —
 /// the store body may be truncated or absent. `Some(None)` = valid v1
-/// prefix (no header); `None` = not a snapshot prefix.
+/// prefix (no header); `None` = not a snapshot prefix. Understands the
+/// v4 manifest header too (the `serve --watch` fingerprint probe must
+/// see `run_id` changes regardless of format).
 pub fn decode_meta_prefix(bytes: &[u8]) -> Option<Option<SnapshotMeta>> {
+    if bytes.len() >= 8 && &bytes[..8] == MAGIC_V4 {
+        let mut r = Reader { b: bytes, pos: 8 };
+        return read_meta_fields(&mut r, true).map(Some);
+    }
     decode_header(bytes).map(|(meta, _)| meta)
 }
 
@@ -399,6 +454,501 @@ pub fn read_snapshot(path: &Path) -> Option<Vec<u8>> {
     let mut buf = Vec::new();
     f.read_to_end(&mut buf).ok()?;
     Some(buf)
+}
+
+// ---------------------------------------------------------------------
+// v4: segmented slot snapshots (manifest + immutable segment files)
+// ---------------------------------------------------------------------
+
+/// What a segment contains relative to the segments before it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// A complete dump of the store at its generation — replay starts
+    /// here; everything referenced before it is superseded.
+    Base,
+    /// Only the rows that changed (plus tombstones) since the previous
+    /// referenced segment.
+    Delta,
+}
+
+impl SegmentKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            SegmentKind::Base => 0,
+            SegmentKind::Delta => 1,
+        }
+    }
+    fn from_u8(v: u8) -> Option<SegmentKind> {
+        match v {
+            0 => Some(SegmentKind::Base),
+            1 => Some(SegmentKind::Delta),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry: an immutable segment file in the live set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentRef {
+    /// File name next to the manifest (see [`segment_name`]).
+    pub name: String,
+    /// Base or delta.
+    pub kind: SegmentKind,
+    /// Seal generation — replay order, strictly increasing.
+    pub generation: u64,
+    /// Expected byte length of the segment body (file length minus the
+    /// 16-byte footer); cross-checked against the footer on load.
+    pub body_len: u64,
+    /// Expected FNV-1a checksum of the body; ditto.
+    pub checksum: u64,
+}
+
+/// A v4 slot snapshot: metadata + the live segment set whose in-order
+/// fold is the store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Same self-describing header every v3 dump carries.
+    pub meta: SnapshotMeta,
+    /// Highest generation among the referenced segments — the watermark
+    /// generation-diff reloads compare against. Unchanged by a
+    /// checkpoint that sealed nothing new.
+    pub generation: u64,
+    /// The live set, in replay (generation) order.
+    pub segments: Vec<SegmentRef>,
+}
+
+/// Canonical segment filename: `slot{slot}-{gen:06}-{base|delta}.seg`.
+pub fn segment_name(slot: u32, generation: u64, kind: SegmentKind) -> String {
+    let kind = match kind {
+        SegmentKind::Base => "base",
+        SegmentKind::Delta => "delta",
+    };
+    format!("slot{slot}-{generation:06}-{kind}.seg")
+}
+
+/// Does `name` name a segment file?
+pub fn is_segment_name(name: &str) -> bool {
+    name.starts_with("slot") && name.ends_with(".seg")
+}
+
+/// FNV-1a 64 — the segment footer checksum. Not cryptographic; it
+/// detects truncation and bit rot, which is all the torn-checkpoint
+/// story needs.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a v4 manifest.
+pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(192 + m.segments.len() * 64);
+    buf.extend_from_slice(MAGIC_V4);
+    put_meta_v2_fields(&mut buf, &m.meta);
+    put_u64(&mut buf, m.meta.run_id);
+    match &m.meta.tables {
+        None => buf.push(0),
+        Some(t) => {
+            buf.push(1);
+            put_f64(&mut buf, t.discount);
+            put_f64(&mut buf, t.concentration);
+            put_f64(&mut buf, t.root);
+        }
+    }
+    put_u64(&mut buf, m.generation);
+    put_u32(&mut buf, m.segments.len() as u32);
+    for seg in &m.segments {
+        put_str(&mut buf, &seg.name);
+        buf.push(seg.kind.to_u8());
+        put_u64(&mut buf, seg.generation);
+        put_u64(&mut buf, seg.body_len);
+        put_u64(&mut buf, seg.checksum);
+    }
+    buf
+}
+
+/// Deserialize a v4 manifest. `None` for anything else (including every
+/// pre-v4 format — the caller dispatches on the magic).
+pub fn decode_manifest(bytes: &[u8]) -> Option<Manifest> {
+    if bytes.len() < 8 || &bytes[..8] != MAGIC_V4 {
+        return None;
+    }
+    let mut r = Reader { b: bytes, pos: 8 };
+    let meta = read_meta_fields(&mut r, true)?;
+    let generation = r.u64()?;
+    let n = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        segments.push(SegmentRef {
+            name: r.str()?,
+            kind: SegmentKind::from_u8(r.u8()?)?,
+            generation: r.u64()?,
+            body_len: r.u64()?,
+            checksum: r.u64()?,
+        });
+    }
+    Some(Manifest {
+        meta,
+        generation,
+        segments,
+    })
+}
+
+/// An empty row is a tombstone: absent and all-zero are the same state
+/// (counts are sums of increments; a key with no mass carries no
+/// information), so replay removes the key instead of storing a zero
+/// row. The rule is uniform across full replay and diff overlay, which
+/// is what keeps both paths producing identical stores.
+pub fn rowdata_is_tombstone(data: &RowData) -> bool {
+    match data {
+        RowData::Sparse(es) => es.is_empty(),
+        RowData::Dense(r) => r.iter().all(|&v| v == 0),
+    }
+}
+
+/// Serialize an immutable segment: header, absolute rows in [`RowData`]
+/// wire form, and the 16-byte `[body_len][fnv1a]` footer the torn-file
+/// detection hangs off.
+pub fn encode_segment(
+    slot: u32,
+    generation: u64,
+    kind: SegmentKind,
+    rows: &[((u8, u32), RowData)],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + rows.len() * 24);
+    buf.extend_from_slice(MAGIC_SEGMENT);
+    put_u32(&mut buf, slot);
+    put_u64(&mut buf, generation);
+    buf.push(kind.to_u8());
+    put_u32(&mut buf, rows.len() as u32);
+    for ((matrix, word), data) in rows {
+        buf.push(*matrix);
+        put_u32(&mut buf, *word);
+        put_rowdata(&mut buf, data);
+    }
+    let body_len = buf.len() as u64;
+    let checksum = fnv1a(&buf);
+    put_u64(&mut buf, body_len);
+    put_u64(&mut buf, checksum);
+    buf
+}
+
+/// Deserialize a segment, validating the footer *before* trusting any of
+/// the body (a truncated or bit-rotted file fails the length or
+/// checksum test and returns `None` — it is never partially folded).
+#[allow(clippy::type_complexity)]
+pub fn decode_segment(bytes: &[u8]) -> Option<(u32, u64, SegmentKind, Vec<((u8, u32), RowData)>)> {
+    // magic + slot + gen + kind + count + footer
+    if bytes.len() < 8 + 4 + 8 + 1 + 4 + 16 || &bytes[..8] != MAGIC_SEGMENT {
+        return None;
+    }
+    let body_end = bytes.len() - 16;
+    let body_len = u64::from_le_bytes(bytes[body_end..body_end + 8].try_into().ok()?);
+    let checksum = u64::from_le_bytes(bytes[body_end + 8..].try_into().ok()?);
+    if body_len != body_end as u64 || fnv1a(&bytes[..body_end]) != checksum {
+        return None;
+    }
+    let mut r = Reader {
+        b: &bytes[..body_end],
+        pos: 8,
+    };
+    let slot = r.u32()?;
+    let generation = r.u64()?;
+    let kind = SegmentKind::from_u8(r.u8()?)?;
+    let n = r.u32()? as usize;
+    let mut rows = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let matrix = r.u8()?;
+        let word = r.u32()?;
+        rows.push(((matrix, word), read_rowdata(&mut r)?));
+    }
+    Some((slot, generation, kind, rows))
+}
+
+/// Load and validate one manifest-referenced segment. Missing, truncated,
+/// or corrupt referenced segments are hard errors naming the file —
+/// unlike *unreferenced* leftovers, which loaders never open.
+#[allow(clippy::type_complexity)]
+pub fn load_segment(dir: &Path, seg: &SegmentRef) -> crate::Result<Vec<((u8, u32), RowData)>> {
+    let path = dir.join(&seg.name);
+    let bytes = read_snapshot(&path).ok_or_else(|| {
+        anyhow::anyhow!(
+            "manifest references segment {} but it cannot be read — \
+             the checkpoint directory is incomplete",
+            path.display()
+        )
+    })?;
+    if bytes.len() < 16 || bytes.len() as u64 != seg.body_len + 16 {
+        anyhow::bail!(
+            "segment {} is truncated ({} bytes, manifest expects {}) — \
+             refusing to fold a torn checkpoint",
+            path.display(),
+            bytes.len(),
+            seg.body_len + 16
+        );
+    }
+    let (_, generation, _, rows) = decode_segment(&bytes).ok_or_else(|| {
+        anyhow::anyhow!(
+            "segment {} fails its footer length/checksum — \
+             refusing to fold a torn checkpoint",
+            path.display()
+        )
+    })?;
+    if fnv1a(&bytes[..bytes.len() - 16]) != seg.checksum || generation != seg.generation {
+        anyhow::bail!(
+            "segment {} does not match its manifest entry (generation/checksum mismatch)",
+            path.display()
+        );
+    }
+    Ok(rows)
+}
+
+/// Apply one segment's rows onto a store, last-writer-wins, with the
+/// empty-row tombstone rule. `k` is the row width the model trains at
+/// (rows may carry fewer cells in sparse form).
+pub fn apply_segment_rows(store: &mut Store, rows: &[((u8, u32), RowData)], k: u32) {
+    for (key, data) in rows {
+        if rowdata_is_tombstone(data) {
+            store.remove(key);
+        } else {
+            let width = (k as usize).max(data.min_width());
+            store.insert(*key, HybridRow::from_rowdata(data, width));
+        }
+    }
+}
+
+/// Replay a manifest's segments (generation order) into a full store.
+pub fn load_manifest_store(dir: &Path, manifest: &Manifest) -> crate::Result<Store> {
+    let mut segs: Vec<&SegmentRef> = manifest.segments.iter().collect();
+    segs.sort_by_key(|s| s.generation);
+    let mut store = Store::new();
+    for seg in segs {
+        let rows = load_segment(dir, seg)?;
+        apply_segment_rows(&mut store, &rows, manifest.meta.k);
+    }
+    Ok(store)
+}
+
+/// Directory-aware slot-snapshot loader: reads `dir/name` in any format
+/// v1–v4 and returns `(meta, store, generation)`. Full dumps (v1–v3)
+/// load as before with generation 0; a v4 manifest replays its segment
+/// set. This is the one entry point session resume, manager failover,
+/// and the serving loader share.
+pub fn load_slot_file(dir: &Path, name: &str) -> crate::Result<(Option<SnapshotMeta>, Store, u64)> {
+    let (meta, store, generation, _) = load_slot_file_tracked(dir, name)?;
+    Ok((meta, store, generation))
+}
+
+/// [`load_slot_file`], additionally returning the manifest's segment
+/// references (`None` for v1–v3 full dumps). The serving layer's
+/// generation-diff reload records these as its resident watermark; taking
+/// them from the same bytes the store was replayed from keeps the record
+/// race-free against a checkpoint landing between two reads of the file.
+#[allow(clippy::type_complexity)]
+pub fn load_slot_file_tracked(
+    dir: &Path,
+    name: &str,
+) -> crate::Result<(Option<SnapshotMeta>, Store, u64, Option<Vec<SegmentRef>>)> {
+    let path = dir.join(name);
+    let bytes = read_snapshot(&path)
+        .ok_or_else(|| anyhow::anyhow!("cannot read snapshot {}", path.display()))?;
+    if bytes.len() >= 8 && &bytes[..8] == MAGIC_V4 {
+        let manifest = decode_manifest(&bytes).ok_or_else(|| {
+            anyhow::anyhow!("corrupt v4 snapshot manifest {}", path.display())
+        })?;
+        let store = load_manifest_store(dir, &manifest)?;
+        Ok((
+            Some(manifest.meta),
+            store,
+            manifest.generation,
+            Some(manifest.segments),
+        ))
+    } else {
+        let (meta, store) = decode_store_meta(&bytes).ok_or_else(|| {
+            anyhow::anyhow!("{} is not a slot snapshot in any known format", path.display())
+        })?;
+        Ok((meta, store, 0, None))
+    }
+}
+
+/// Read just the manifest of a v4 slot file; `None` for pre-v4 formats
+/// or unreadable files. Generation-diff reloads use this to decide how
+/// much of the segment set they actually need to open.
+pub fn read_manifest(path: &Path) -> Option<Manifest> {
+    decode_manifest(&read_snapshot(path)?)
+}
+
+/// Live-set bound: base + this many deltas before the seal rebases into
+/// a fresh full dump. Small enough that replay stays a handful of file
+/// reads; large enough that steady-state checkpoints stay O(delta).
+const MAX_LIVE_SEGMENTS: usize = 5;
+
+/// Per-slot segment bookkeeping: which keys changed since the last seal,
+/// which were drained away, and which immutable segments the last
+/// manifest referenced (so the next seal can carry them by hardlink).
+///
+/// The live store itself is the memtable; `SegmentLog` never owns row
+/// data, only names and dirt.
+#[derive(Debug, Default)]
+pub struct SegmentLog {
+    slot: u32,
+    /// Next seal generation (generations are per-slot, strictly
+    /// increasing, and only advance when a segment is actually written).
+    next_gen: u64,
+    /// Live set of the last successful seal, in replay order.
+    segments: Vec<SegmentRef>,
+    /// Directory that last seal wrote into — the hardlink source.
+    last_dir: Option<PathBuf>,
+    /// Keys touched (inserted/folded) since the last seal.
+    dirty: HashSet<(u8, u32)>,
+    /// Keys removed (drained by handoff) since the last seal.
+    tombstones: HashSet<(u8, u32)>,
+}
+
+impl SegmentLog {
+    /// Fresh log for `slot` — first seal writes a full base.
+    pub fn new(slot: u32) -> SegmentLog {
+        SegmentLog {
+            slot,
+            next_gen: 1,
+            ..SegmentLog::default()
+        }
+    }
+
+    /// Record a key whose row changed in the live store.
+    pub fn mark_dirty(&mut self, key: (u8, u32)) {
+        self.tombstones.remove(&key);
+        self.dirty.insert(key);
+    }
+
+    /// Record a key removed from the live store (ring handoff drain).
+    pub fn mark_removed(&mut self, key: (u8, u32)) {
+        self.dirty.remove(&key);
+        self.tombstones.insert(key);
+    }
+
+    /// Pending dirty + tombstoned keys (what the next delta would seal).
+    pub fn pending(&self) -> usize {
+        self.dirty.len() + self.tombstones.len()
+    }
+
+    /// Seal the current state into `dir`: carry the previous live set,
+    /// write at most one new segment (delta of the dirt, or a fresh base
+    /// when rebasing / starting out / the carry source is gone), then
+    /// the manifest — atomically, last. On success the log's live set
+    /// points at `dir`; on error nothing is adopted (the previous
+    /// checkpoint, if any, is still complete because its manifest was
+    /// never overwritten mid-write).
+    pub fn seal_to(&mut self, dir: &Path, store: &Store, meta: &SnapshotMeta) -> crate::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let rebase = self.segments.len() >= MAX_LIVE_SEGMENTS;
+        let carried = if self.segments.is_empty() || rebase {
+            None
+        } else {
+            self.carry_segments(dir)
+        };
+        let gen = self.next_gen;
+        let mut wrote_segment = false;
+        let segments = match carried {
+            Some(mut segs) => {
+                let mut rows: Vec<((u8, u32), RowData)> = Vec::new();
+                let mut dirty: Vec<(u8, u32)> = self.dirty.iter().copied().collect();
+                dirty.sort_unstable();
+                for key in dirty {
+                    if let Some(row) = store.get(&key) {
+                        rows.push((key, row.to_rowdata()));
+                    } else {
+                        // Marked dirty but no longer present: tombstone.
+                        rows.push((key, RowData::Sparse(Vec::new())));
+                    }
+                }
+                let mut tombs: Vec<(u8, u32)> = self.tombstones.iter().copied().collect();
+                tombs.sort_unstable();
+                for key in tombs {
+                    rows.push((key, RowData::Sparse(Vec::new())));
+                }
+                if !rows.is_empty() {
+                    segs.push(self.write_segment(dir, gen, SegmentKind::Delta, &rows)?);
+                    wrote_segment = true;
+                }
+                segs
+            }
+            None => {
+                // Fresh full base from the memtable (first seal, rebase
+                // threshold hit, or the carry source vanished).
+                let mut keys: Vec<&(u8, u32)> = store.keys().collect();
+                keys.sort();
+                let rows: Vec<((u8, u32), RowData)> = keys
+                    .into_iter()
+                    .map(|&key| (key, store[&key].to_rowdata()))
+                    .collect();
+                let seg = self.write_segment(dir, gen, SegmentKind::Base, &rows)?;
+                wrote_segment = true;
+                vec![seg]
+            }
+        };
+        let generation = segments.iter().map(|s| s.generation).max().unwrap_or(0);
+        let manifest = Manifest {
+            meta: meta.clone(),
+            generation,
+            segments: segments.clone(),
+        };
+        write_atomic(
+            &dir.join(slot_snapshot_name(self.slot as usize)),
+            &encode_manifest(&manifest),
+        )?;
+        if wrote_segment {
+            self.next_gen = gen + 1;
+        }
+        self.segments = segments;
+        self.last_dir = Some(dir.to_path_buf());
+        self.dirty.clear();
+        self.tombstones.clear();
+        Ok(())
+    }
+
+    fn write_segment(
+        &self,
+        dir: &Path,
+        generation: u64,
+        kind: SegmentKind,
+        rows: &[((u8, u32), RowData)],
+    ) -> crate::Result<SegmentRef> {
+        let name = segment_name(self.slot, generation, kind);
+        let bytes = encode_segment(self.slot, generation, kind, rows);
+        let body_end = bytes.len() - 16;
+        let body_len = body_end as u64;
+        let checksum = fnv1a(&bytes[..body_end]);
+        write_atomic(&dir.join(&name), &bytes)?;
+        Ok(SegmentRef {
+            name,
+            kind,
+            generation,
+            body_len,
+            checksum,
+        })
+    }
+
+    /// Bring the previous live set into `dir` by hardlink (copy when
+    /// linking fails, e.g. across filesystems). `None` on any failure —
+    /// the caller then falls back to a fresh full base, which is always
+    /// valid because the live store is complete.
+    fn carry_segments(&self, dir: &Path) -> Option<Vec<SegmentRef>> {
+        let src_dir = self.last_dir.as_ref()?;
+        let mut out = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            let src = src_dir.join(&seg.name);
+            let dst = dir.join(&seg.name);
+            if src != dst && !dst.exists() && std::fs::hard_link(&src, &dst).is_err() {
+                std::fs::copy(&src, &dst).ok()?;
+            }
+            out.push(seg.clone());
+        }
+        Some(out)
+    }
 }
 
 const MAGIC_SESSION: &[u8; 8] = b"HPLVMSES";
@@ -896,6 +1446,175 @@ mod tests {
         assert!(decode_session(b"nonsense----------------").is_none());
         // A store snapshot is not a session meta.
         assert!(decode_session(&encode_store(&Store::new())).is_none());
+    }
+
+    #[test]
+    fn segment_roundtrip_and_footer_rejects_torn_files() {
+        let rows: Vec<((u8, u32), RowData)> = vec![
+            ((0, 3), RowData::Sparse(vec![(1, 4), (7, -2)])),
+            ((0, 9), RowData::Dense(vec![1, 0, 3, 0].into_boxed_slice())),
+            ((1, 3), RowData::Sparse(Vec::new())), // tombstone
+        ];
+        let bytes = encode_segment(2, 7, SegmentKind::Delta, &rows);
+        let (slot, generation, kind, back) = decode_segment(&bytes).unwrap();
+        assert_eq!((slot, generation, kind), (2, 7, SegmentKind::Delta));
+        assert_eq!(back, rows);
+        // Any truncation fails the footer length check; any flipped bit
+        // fails the checksum.
+        for cut in [0, 8, 20, bytes.len() - 1] {
+            assert!(decode_segment(&bytes[..cut]).is_none(), "cut {cut}");
+        }
+        let mut flipped = bytes.clone();
+        flipped[10] ^= 0x40;
+        assert!(decode_segment(&flipped).is_none());
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_pre_v4_readers_refuse() {
+        let manifest = Manifest {
+            meta: sample_meta_tables(),
+            generation: 9,
+            segments: vec![
+                SegmentRef {
+                    name: segment_name(1, 4, SegmentKind::Base),
+                    kind: SegmentKind::Base,
+                    generation: 4,
+                    body_len: 123,
+                    checksum: 0xABCD,
+                },
+                SegmentRef {
+                    name: segment_name(1, 9, SegmentKind::Delta),
+                    kind: SegmentKind::Delta,
+                    generation: 9,
+                    body_len: 17,
+                    checksum: 0x5A5A,
+                },
+            ],
+        };
+        let bytes = encode_manifest(&manifest);
+        assert_eq!(decode_manifest(&bytes).unwrap(), manifest);
+        // The --watch meta probe reads v4 headers…
+        assert_eq!(
+            decode_meta_prefix(&bytes).unwrap().unwrap(),
+            manifest.meta
+        );
+        // …but the pre-v4 full-dump reader refuses the unknown magic
+        // outright instead of mis-decoding the manifest as a store.
+        assert!(decode_store_meta(&bytes).is_none());
+        for cut in [7, 12, bytes.len() - 1] {
+            assert!(decode_manifest(&bytes[..cut]).is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn segment_log_seals_base_then_delta_and_replays_identically() {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_seglog_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let meta = SnapshotMeta {
+            k: 4,
+            ..sample_meta()
+        };
+        let mut store = Store::new();
+        store.insert((0, 1), vec![1, 0, 2, 0].into());
+        store.insert((0, 2), vec![0, 5, 0, 0].into());
+        let mut log = SegmentLog::new(meta.slot);
+        log.seal_to(&dir, &store, &meta).unwrap();
+        let (m1, s1, g1) = load_slot_file(&dir, &slot_snapshot_name(meta.slot as usize)).unwrap();
+        assert_eq!(m1.unwrap(), meta);
+        assert_eq!(s1, store);
+        assert_eq!(g1, 1);
+
+        // Mutate: change one row, drop one, add one — seal a delta.
+        store.insert((0, 1), vec![1, 1, 2, 0].into());
+        store.remove(&(0, 2));
+        store.insert((1, 7), vec![0, 0, 0, 9].into());
+        log.mark_dirty((0, 1));
+        log.mark_removed((0, 2));
+        log.mark_dirty((1, 7));
+        log.seal_to(&dir, &store, &meta).unwrap();
+        let (_, s2, g2) = load_slot_file(&dir, &slot_snapshot_name(meta.slot as usize)).unwrap();
+        assert_eq!(s2, store, "delta replay must reproduce the memtable");
+        assert_eq!(g2, 2);
+        let manifest =
+            read_manifest(&dir.join(slot_snapshot_name(meta.slot as usize))).unwrap();
+        assert_eq!(manifest.segments.len(), 2);
+        assert_eq!(manifest.segments[0].kind, SegmentKind::Base);
+        assert_eq!(manifest.segments[1].kind, SegmentKind::Delta);
+
+        // A no-change seal advances nothing: same generation, no new
+        // segment, and the store still replays.
+        log.seal_to(&dir, &store, &meta).unwrap();
+        let (_, s3, g3) = load_slot_file(&dir, &slot_snapshot_name(meta.slot as usize)).unwrap();
+        assert_eq!(s3, store);
+        assert_eq!(g3, 2, "no dirt, no new generation");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_log_rebases_at_live_set_bound() {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_seglog_rebase_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let meta = SnapshotMeta {
+            k: 2,
+            slot: 0,
+            ..sample_meta()
+        };
+        let mut store = Store::new();
+        let mut log = SegmentLog::new(0);
+        for i in 0..10u32 {
+            store.insert((0, i), vec![i as i32 + 1, 0].into());
+            log.mark_dirty((0, i));
+            log.seal_to(&dir, &store, &meta).unwrap();
+            let manifest =
+                read_manifest(&dir.join(slot_snapshot_name(0))).unwrap();
+            assert!(
+                manifest.segments.len() <= MAX_LIVE_SEGMENTS,
+                "live set bounded: {} segments after seal {}",
+                manifest.segments.len(),
+                i
+            );
+            let (_, loaded, _) = load_slot_file(&dir, &slot_snapshot_name(0)).unwrap();
+            assert_eq!(loaded, store, "replay identical after seal {i}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn referenced_truncated_segment_is_a_named_hard_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_seglog_torn_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let meta = SnapshotMeta {
+            k: 2,
+            slot: 0,
+            ..sample_meta()
+        };
+        let mut store = Store::new();
+        store.insert((0, 1), vec![3, 4].into());
+        let mut log = SegmentLog::new(0);
+        log.seal_to(&dir, &store, &meta).unwrap();
+        // Truncate the referenced base segment in place.
+        let seg_path = dir.join(segment_name(0, 1, SegmentKind::Base));
+        let bytes = std::fs::read(&seg_path).unwrap();
+        std::fs::write(&seg_path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load_slot_file(&dir, &slot_snapshot_name(0)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("slot0-000001-base.seg") && msg.contains("torn"),
+            "diagnostic must name the segment: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

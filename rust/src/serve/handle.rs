@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use super::infer::{infer_doc, InferConfig, InferResult};
-use super::model::{ServingModel, DEFAULT_CACHE_BYTES};
+use super::model::{ReloadStats, ResidentStores, ServingModel, DEFAULT_CACHE_BYTES};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -93,6 +93,15 @@ pub struct ServingHandle {
     cache_bytes: usize,
     /// The directory backing this handle (None for in-memory models).
     dir: Mutex<Option<PathBuf>>,
+    /// Decoded stores of the last committed load — the generation-diff
+    /// reload cache (None until a v4 directory loads, cleared on any
+    /// reload error so the next attempt decodes from scratch). Also the
+    /// reload serialization point: the lock is held across the whole
+    /// load-and-commit so two concurrent reloads cannot interleave their
+    /// overlays.
+    resident: Mutex<Option<ResidentStores>>,
+    /// How the last successful directory load actually loaded.
+    last_reload: Mutex<ReloadStats>,
 }
 
 impl ServingHandle {
@@ -104,8 +113,13 @@ impl ServingHandle {
 
     /// Load generation 1 with an explicit alias-cache byte budget.
     pub fn load_dir_with_budget(dir: &Path, cache_bytes: usize) -> Result<Arc<ServingHandle>> {
-        let model = ServingModel::load_dir_with_budget(dir, cache_bytes)?;
-        Ok(Arc::new(Self::new(model, cache_bytes, Some(dir.to_path_buf()))))
+        let mut resident = None;
+        let (meta, stores, stats) = ServingModel::load_dir_stores_cached(dir, &mut resident)?;
+        let model = ServingModel::from_stores(meta, stores, cache_bytes)?;
+        let h = Self::new(model, cache_bytes, Some(dir.to_path_buf()));
+        *h.resident.lock().unwrap() = resident;
+        *h.last_reload.lock().unwrap() = stats;
+        Ok(Arc::new(h))
     }
 
     /// Wrap an already-built model (tests, tools, synthetic stores).
@@ -122,6 +136,8 @@ impl ServingHandle {
             next_gen: AtomicU64::new(2),
             cache_bytes,
             dir: Mutex::new(dir),
+            resident: Mutex::new(None),
+            last_reload: Mutex::new(ReloadStats::default()),
         }
     }
 
@@ -203,26 +219,54 @@ impl ServingHandle {
     }
 
     /// Load a (presumably newer) snapshot generation from `dir` and swap
-    /// it in. The load runs on the caller's thread with no lock held —
-    /// call from a background thread to keep serving undisturbed; the
-    /// swap itself is O(1). Returns the new generation number; on error
-    /// (a different family, or losing a race against a concurrent newer
+    /// it in. The load runs on the caller's thread with no serving lock
+    /// held — call from a background thread to keep serving undisturbed;
+    /// the swap itself is O(1). When the directory is a v4 checkpoint
+    /// whose segment history extends the resident cache's watermark, only
+    /// the segments written since the last load are read
+    /// ([`ServingModel::load_dir_stores_cached`]) — and the rebuilt model
+    /// goes through the same [`ServingModel::from_stores`] terminal path
+    /// as a full decode, so the committed generation is bit-identical
+    /// either way. Returns the new generation number; on error (a
+    /// different family, or losing a race against a concurrent newer
     /// install) the handle keeps serving its current generation
-    /// untouched and its backing directory is not repointed.
+    /// untouched, its backing directory is not repointed, and the diff
+    /// cache is dropped so the next attempt decodes from scratch.
     pub fn reload(&self, dir: &Path) -> Result<u64> {
-        let model = ServingModel::load_dir_with_budget(dir, self.cache_bytes)?;
-        // Pre-warm the incoming generation's alias cache from the
-        // outgoing one's resident word set (still outside any lock):
-        // post-swap queries for previously-hot words hit instead of
-        // paying a cold O(K) rebuild each.
-        model.prewarm_from(&self.model());
-        let (generation, won) = self.commit(model, Some(dir))?;
-        anyhow::ensure!(
-            won,
-            "reload superseded: generation {generation} was installed \
-             concurrently and is newer; this load was discarded"
-        );
-        Ok(generation)
+        let mut resident = self.resident.lock().unwrap();
+        let loaded: Result<(u64, ReloadStats)> = (|| {
+            let (meta, stores, stats) = ServingModel::load_dir_stores_cached(dir, &mut resident)?;
+            let model = ServingModel::from_stores(meta, stores, self.cache_bytes)?;
+            // Pre-warm the incoming generation's alias cache from the
+            // outgoing one's resident word set (still outside the swap
+            // lock): post-swap queries for previously-hot words hit
+            // instead of paying a cold O(K) rebuild each.
+            model.prewarm_from(&self.model());
+            let (generation, won) = self.commit(model, Some(dir))?;
+            anyhow::ensure!(
+                won,
+                "reload superseded: generation {generation} was installed \
+                 concurrently and is newer; this load was discarded"
+            );
+            Ok((generation, stats))
+        })();
+        match loaded {
+            Ok((generation, stats)) => {
+                *self.last_reload.lock().unwrap() = stats;
+                Ok(generation)
+            }
+            Err(e) => {
+                *resident = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// How the last successful directory load actually loaded: a full
+    /// decode, or a generation-diff overlay (and of how many segments /
+    /// rows). The `serve --watch` loop logs this per reload.
+    pub fn last_reload_stats(&self) -> ReloadStats {
+        *self.last_reload.lock().unwrap()
     }
 
     /// [`reload`](Self::reload) from the directory this handle was last
@@ -322,6 +366,58 @@ mod tests {
         assert!(h.reload(&empty).is_err());
         assert_eq!(h.generation(), 2);
         assert_eq!(h.model().total_tokens(), 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v4_reload_takes_the_generation_diff_path_bitwise() {
+        use crate::eval::perplexity::TopicModelView;
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_handle_diff_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = Store::new();
+        for w in 0..10u32 {
+            let row = if w < 5 { vec![9, 0] } else { vec![0, 9] };
+            store.insert((0, w), row.into());
+        }
+        let mut log = snapshot::SegmentLog::new(0);
+        log.seal_to(&dir, &store, &toy_meta("AliasLDA")).unwrap();
+
+        let h = ServingHandle::load_dir(&dir).unwrap();
+        assert!(h.last_reload_stats().full, "first load decodes fully");
+
+        // Unchanged directory → the diff path opens zero segments.
+        let g = h.reload(&dir).unwrap();
+        assert_eq!(g, 2);
+        let st = h.last_reload_stats();
+        assert_eq!((st.full, st.segments, st.rows), (false, 0, 0), "{st:?}");
+
+        // One changed row sealed as a delta → the reload reads exactly
+        // that one segment and one row...
+        store.insert((0, 3), vec![1, 2].into());
+        log.mark_dirty((0, 3));
+        log.seal_to(&dir, &store, &toy_meta("AliasLDA")).unwrap();
+        let g = h.reload(&dir).unwrap();
+        assert_eq!(g, 3);
+        let st = h.last_reload_stats();
+        assert_eq!((st.full, st.segments, st.rows), (false, 1, 1), "{st:?}");
+
+        // ...and the committed model is bit-identical to a full decode
+        // of the same directory (shared `from_stores` terminal path).
+        let full = ServingModel::load_dir(&dir).unwrap();
+        assert_eq!(h.model().total_tokens(), full.total_tokens());
+        for w in 0..10u32 {
+            for t in 0..2 {
+                assert_eq!(
+                    h.model().phi(w, t).to_bits(),
+                    full.phi(w, t).to_bits(),
+                    "φ({w},{t}) diverged between diff and full reload"
+                );
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -26,7 +26,10 @@
 //!   picks up newer snapshots without dropping the in-flight queue —
 //!   pre-warming the incoming generation's alias cache from the outgoing
 //!   resident word set — and responses report the generation that served
-//!   them. The [`QueryBackend`] / [`PinnedGeneration`] traits abstract
+//!   them. Reloads of a v4 (segmented) checkpoint stream go through a
+//!   resident-store diff cache ([`model::ResidentStores`]): only the
+//!   segments written since the previous load are read, and
+//!   [`model::ReloadStats`] reports which path ran. The [`QueryBackend`] / [`PinnedGeneration`] traits abstract
 //!   "pin a generation, answer queries" over both serving topologies.
 //! * [`router`] / [`replica`] — multi-replica serving:
 //!   [`ReplicaSet`] partitions the vocabulary over N [`Replica`]s with
@@ -77,7 +80,7 @@ pub use cache::{AliasCache, CacheStats, WordProposal};
 pub use family::{HdpFamily, LdaFamily, PdpFamily, ServingFamily};
 pub use handle::{ModelGeneration, PinnedGeneration, QueryBackend, ServingHandle};
 pub use infer::{infer_doc, infer_with_proposals, InferConfig, InferResult};
-pub use model::ServingModel;
+pub use model::{ReloadStats, ResidentStores, ServingModel};
 pub use replica::Replica;
 pub use router::{QueryRouter, ReplicaSet, SetGeneration, REPLICA_VNODES};
 pub use service::{run_queries, synth_queries, InferenceService, ServeConfig, ServeStats};

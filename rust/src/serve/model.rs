@@ -8,7 +8,10 @@
 //! carries the hyperparameters and the ring geometry — and, since v3, the
 //! table-side hyperparameters — making the directory fully
 //! self-describing: [`ServingModel::load_dir`] dispatches to the right
-//! family (LDA, PDP, or HDP) with no training config in sight.
+//! family (LDA, PDP, or HDP) with no training config in sight. v4
+//! checkpoint directories (manifest + immutable segments) load through
+//! the same path — [`crate::ps::snapshot::load_slot_file`] replays each
+//! slot's segment set into the identical store a full dump would carry.
 //!
 //! The model owns the [`AliasCache`] of per-word proposals. A cached
 //! [`WordProposal`] holds the word's frozen φ row plus an alias table
@@ -31,6 +34,53 @@ use crate::Result;
 
 /// Default alias-cache budget (64 MiB ≈ 3k resident tables at K=1024).
 pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
+
+/// One decoded slot file, as [`ServingModel::load_dir_slots`] returns it:
+/// the store plus everything the resident diff cache needs to recognize
+/// it again (`segments` is `None` for v1–v3 full dumps).
+struct LoadedSlot {
+    name: String,
+    meta: Option<SnapshotMeta>,
+    store: Store,
+    generation: u64,
+    segments: Option<Vec<snapshot::SegmentRef>>,
+}
+
+/// How the last reload through [`ServingModel::load_dir_stores_cached`]
+/// actually loaded: a whole-directory decode, or a generation-diff
+/// overlay of only the segments written since the previous load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReloadStats {
+    /// `true` when every slot file was fully decoded; `false` when only
+    /// segments newer than the resident watermarks were read.
+    pub full: bool,
+    /// Segment files opened on the diff path (0 on a full load — and on
+    /// a diff reload of an unchanged directory).
+    pub segments: usize,
+    /// Rows applied from those segments.
+    pub rows: usize,
+}
+
+/// Decoded slot stores kept resident between reloads, with the segment
+/// watermark each was replayed to. [`ServingModel::load_dir_stores_cached`]
+/// consults and refreshes this so `serve --watch` reloads of a v4
+/// checkpoint stream pay `O(segments written since)` instead of
+/// re-decoding the whole model every poll.
+pub struct ResidentStores {
+    /// Header of the load the stores came from (`run_id` gates the diff).
+    meta: SnapshotMeta,
+    /// Per slot file, in sorted-name order (the loaders' merge order).
+    slots: Vec<ResidentSlot>,
+}
+
+/// One slot's resident state: its decoded store and the exact segment
+/// list (sorted by generation) that store was replayed from.
+struct ResidentSlot {
+    name: String,
+    generation: u64,
+    segments: Vec<snapshot::SegmentRef>,
+    store: Store,
+}
 
 /// Immutable family statistics + lazily-built per-word alias tables.
 pub struct ServingModel {
@@ -84,7 +134,26 @@ impl ServingModel {
     /// [`ReplicaSet`](super::router::ReplicaSet) loader, which builds one
     /// vocabulary slice per replica from one decode of the same stores.
     pub fn load_dir_stores(dir: &Path) -> Result<(SnapshotMeta, Vec<Store>)> {
-        let mut slots: Vec<(String, Option<SnapshotMeta>, Store)> = Vec::new();
+        let (meta, stores, _) = Self::load_dir_stores_versioned(dir)?;
+        Ok((meta, stores))
+    }
+
+    /// [`load_dir_stores`](Self::load_dir_stores), additionally returning
+    /// each slot's segment **generation** (0 for full-dump v1–v3 files) in
+    /// the same order as the stores. The generation-diff reload compares
+    /// these against its resident watermarks to decide whether overlaying
+    /// only the newer segments is valid.
+    pub fn load_dir_stores_versioned(dir: &Path) -> Result<(SnapshotMeta, Vec<Store>, Vec<u64>)> {
+        let (meta, slots) = Self::load_dir_slots(dir)?;
+        let (stores, generations) = slots.into_iter().map(|s| (s.store, s.generation)).unzip();
+        Ok((meta, stores, generations))
+    }
+
+    /// The full-decode loader behind every directory load: read and
+    /// cross-validate each slot file, keeping its name and (for v4
+    /// manifests) its segment references alongside the decoded store.
+    fn load_dir_slots(dir: &Path) -> Result<(SnapshotMeta, Vec<LoadedSlot>)> {
+        let mut slots: Vec<LoadedSlot> = Vec::new();
         let entries = std::fs::read_dir(dir)
             .map_err(|e| anyhow::anyhow!("cannot read snapshot dir {}: {e}", dir.display()))?;
         for entry in entries.flatten() {
@@ -92,13 +161,19 @@ impl ServingModel {
             if !snapshot::is_slot_snapshot_name(&name) {
                 continue;
             }
-            let bytes = snapshot::read_snapshot(&entry.path())
-                .ok_or_else(|| anyhow::anyhow!("unreadable snapshot {name}"))?;
-            let (m, store) = snapshot::decode_store_meta(&bytes)
-                .ok_or_else(|| anyhow::anyhow!("corrupt snapshot {name}"))?;
-            slots.push((name, m, store));
+            // Any format v1–v4: full dumps decode in place, a v4 manifest
+            // replays its segment set (a torn referenced segment is a
+            // hard error naming the file).
+            let (m, store, generation, segments) = snapshot::load_slot_file_tracked(dir, &name)?;
+            slots.push(LoadedSlot {
+                name,
+                meta: m,
+                store,
+                generation,
+                segments,
+            });
         }
-        slots.sort_by(|a, b| a.0.cmp(&b.0));
+        slots.sort_by(|a, b| a.name.cmp(&b.name));
         anyhow::ensure!(
             !slots.is_empty(),
             "no server_slot*.snap files in {} — train with --snapshot-dir first",
@@ -106,7 +181,7 @@ impl ServingModel {
         );
         let meta = slots
             .iter()
-            .find_map(|(_, m, _)| m.clone())
+            .find_map(|s| s.meta.clone())
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "snapshots in {} predate the v2 format and carry no \
@@ -118,13 +193,13 @@ impl ServingModel {
         // it would dodge every consistency check below (no header to
         // compare), so refuse outright rather than merge mixed runs.
         anyhow::ensure!(
-            slots.iter().all(|(_, m, _)| m.is_some()),
+            slots.iter().all(|s| s.meta.is_some()),
             "snapshot dir {} mixes v2+ and pre-v2 slot files — stale \
              snapshots from an earlier run; re-train to regenerate",
             dir.display()
         );
-        for (_, m, _) in slots.iter() {
-            if let Some(m) = m {
+        for s in slots.iter() {
+            if let Some(m) = &s.meta {
                 anyhow::ensure!(
                     m.k == meta.k && m.n_servers == meta.n_servers && m.vnodes == meta.vnodes,
                     "snapshot slots disagree on ring/model geometry \
@@ -179,9 +254,9 @@ impl ServingModel {
         // owns its arc. A mismatch means mixed snapshot generations.
         let ring = Ring::new(meta.n_servers as usize, meta.vnodes as usize);
         let mut misrouted = 0u64;
-        for (_, m, store) in slots.iter() {
-            if let Some(m) = m {
-                for &(matrix, word) in store.keys() {
+        for s in slots.iter() {
+            if let Some(m) = &s.meta {
+                for &(matrix, word) in s.store.keys() {
                     if ring.route(matrix, word) != m.slot {
                         misrouted += 1;
                     }
@@ -195,7 +270,174 @@ impl ServingModel {
                  snapshot dir may mix runs"
             );
         }
-        Ok((meta, slots.into_iter().map(|(_, _, s)| s).collect()))
+        Ok((meta, slots))
+    }
+
+    /// Directory load through a **resident-store cache**: the
+    /// generation-diff reload path behind [`super::handle::ServingHandle`]
+    /// and [`super::router::ReplicaSet`].
+    ///
+    /// When `cache` holds the decoded stores of a previous load and the
+    /// directory's slot files are v4 manifests whose histories are
+    /// append-only extensions of the cached watermarks (same slot set,
+    /// same `run_id`, every segment at or below the watermark identical
+    /// to what the resident stores were replayed from), only the
+    /// segments **newer** than each watermark are read and overlaid onto
+    /// clones of the resident stores — `O(delta)` file I/O and decode
+    /// instead of `O(model)`. The overlay replays exactly the suffix a
+    /// full replay would apply on top of the identical prefix state, so
+    /// the returned stores are bit-identical to a full decode of the same
+    /// directory; anything the eligibility checks cannot prove falls back
+    /// to the full loader (which re-validates with its usual
+    /// diagnostics). On either path the cache is refreshed (or cleared,
+    /// for pre-v4 directories) so the next reload diffs against this one.
+    ///
+    /// The cache trades memory for reload latency: it keeps one decoded
+    /// copy of every slot store between reloads.
+    pub fn load_dir_stores_cached(
+        dir: &Path,
+        cache: &mut Option<ResidentStores>,
+    ) -> Result<(SnapshotMeta, Vec<Store>, ReloadStats)> {
+        if let Some(resident) = cache.take() {
+            if let Some((meta, stores, fresh, stats)) =
+                Self::overlay_newer_segments(dir, &resident)?
+            {
+                *cache = Some(fresh);
+                return Ok((meta, stores, stats));
+            }
+        }
+        let (meta, slots) = Self::load_dir_slots(dir)?;
+        // Only an all-v4 directory can seed the diff cache: full dumps
+        // carry no segment history to diff against.
+        if slots.iter().all(|s| s.segments.is_some()) {
+            *cache = Some(ResidentStores {
+                meta: meta.clone(),
+                slots: slots
+                    .iter()
+                    .map(|s| {
+                        let mut segments = s.segments.clone().unwrap_or_default();
+                        segments.sort_by_key(|r| r.generation);
+                        ResidentSlot {
+                            name: s.name.clone(),
+                            generation: s.generation,
+                            segments,
+                            store: s.store.clone(),
+                        }
+                    })
+                    .collect(),
+            });
+        }
+        let stores = slots.into_iter().map(|s| s.store).collect();
+        Ok((
+            meta,
+            stores,
+            ReloadStats {
+                full: true,
+                segments: 0,
+                rows: 0,
+            },
+        ))
+    }
+
+    /// The diff path of [`load_dir_stores_cached`]: `Ok(None)` means
+    /// "not eligible, take the full path"; `Err` means the directory is
+    /// damaged in a way a full reload would also refuse (e.g. a manifest
+    /// referencing a torn segment).
+    #[allow(clippy::type_complexity)]
+    fn overlay_newer_segments(
+        dir: &Path,
+        resident: &ResidentStores,
+    ) -> Result<Option<(SnapshotMeta, Vec<Store>, ResidentStores, ReloadStats)>> {
+        let mut names: Vec<String> = match std::fs::read_dir(dir) {
+            Ok(entries) => entries
+                .flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| snapshot::is_slot_snapshot_name(n))
+                .collect(),
+            Err(_) => return Ok(None),
+        };
+        names.sort();
+        if names.len() != resident.slots.len()
+            || names
+                .iter()
+                .zip(&resident.slots)
+                .any(|(n, s)| *n != s.name)
+        {
+            return Ok(None); // slot set changed — different run shape
+        }
+        let mut manifests = Vec::with_capacity(names.len());
+        for name in &names {
+            match snapshot::read_manifest(&dir.join(name)) {
+                Some(m) => manifests.push(m),
+                None => return Ok(None), // pre-v4 dump (or unreadable)
+            }
+        }
+        // Same run and geometry as the resident state; manifests must
+        // also agree among themselves (slot id aside) — anything less
+        // goes through the full loader and its mixed-run diagnostics.
+        let meta = manifests[0].meta.clone();
+        if meta.run_id != resident.meta.run_id
+            || meta.k != resident.meta.k
+            || meta.n_servers != resident.meta.n_servers
+            || meta.vnodes != resident.meta.vnodes
+        {
+            return Ok(None);
+        }
+        for m in &manifests[1..] {
+            let mut a = m.meta.clone();
+            a.slot = meta.slot;
+            if a != meta {
+                return Ok(None);
+            }
+        }
+        let mut stats = ReloadStats {
+            full: false,
+            segments: 0,
+            rows: 0,
+        };
+        let mut fresh = Vec::with_capacity(manifests.len());
+        let mut stores = Vec::with_capacity(manifests.len());
+        for (slot, manifest) in resident.slots.iter().zip(&manifests) {
+            let mut segments = manifest.segments.clone();
+            segments.sort_by_key(|r| r.generation);
+            // Append-only since the watermark: every referenced segment
+            // at or below it must be exactly the one the resident store
+            // replayed (name, kind, generation, length, checksum). A
+            // rebase or a failover-restarted segment log rewrites
+            // history — checksums diverge and we fall back to full.
+            if manifest.generation < slot.generation {
+                return Ok(None);
+            }
+            let split = segments.partition_point(|r| r.generation <= slot.generation);
+            if segments[..split] != slot.segments[..] {
+                return Ok(None);
+            }
+            let mut store = slot.store.clone();
+            for seg in &segments[split..] {
+                let rows = snapshot::load_segment(dir, seg)?;
+                if seg.kind == snapshot::SegmentKind::Base {
+                    // A base supersedes everything before it (only
+                    // reachable here from an empty watermark, but keep
+                    // replay semantics exact regardless).
+                    store.clear();
+                }
+                stats.segments += 1;
+                stats.rows += rows.len();
+                snapshot::apply_segment_rows(&mut store, &rows, manifest.meta.k);
+            }
+            fresh.push(ResidentSlot {
+                name: slot.name.clone(),
+                generation: manifest.generation,
+                segments,
+                store: store.clone(),
+            });
+            stores.push(store);
+        }
+        let resident = ResidentStores {
+            meta: meta.clone(),
+            slots: fresh,
+        };
+        Ok(Some((meta, stores, resident, stats)))
     }
 
     /// Build from already-decoded stores (exposed for tests and tools).

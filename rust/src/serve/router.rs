@@ -49,7 +49,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use super::handle::{PinnedGeneration, QueryBackend};
 use super::infer::{infer_with_proposals, InferConfig, InferResult};
-use super::model::{ServingModel, DEFAULT_CACHE_BYTES};
+use super::model::{ReloadStats, ResidentStores, ServingModel, DEFAULT_CACHE_BYTES};
 use super::replica::Replica;
 use crate::config::ModelKind;
 use crate::ps::ring::Ring;
@@ -251,6 +251,13 @@ pub struct ReplicaSet {
     cache_bytes: usize,
     /// The directory backing this set (None for in-memory sets).
     dir: Mutex<Option<PathBuf>>,
+    /// Decoded stores of the last committed load — the generation-diff
+    /// reload cache (None until a v4 directory loads, cleared on any
+    /// reload error). Held across the whole reload, which also
+    /// serializes concurrent reloads against each other.
+    resident: Mutex<Option<ResidentStores>>,
+    /// How the last successful directory load actually loaded.
+    last_reload: Mutex<ReloadStats>,
 }
 
 impl ReplicaSet {
@@ -266,9 +273,12 @@ impl ReplicaSet {
         replicas: usize,
         cache_bytes: usize,
     ) -> Result<Arc<ReplicaSet>> {
-        let (meta, stores) = ServingModel::load_dir_stores(dir)?;
+        let mut resident = None;
+        let (meta, stores, stats) = ServingModel::load_dir_stores_cached(dir, &mut resident)?;
         let set = Self::build(meta, &stores, replicas, cache_bytes)?;
         *set.dir.lock().unwrap() = Some(dir.to_path_buf());
+        *set.resident.lock().unwrap() = resident;
+        *set.last_reload.lock().unwrap() = stats;
         Ok(set)
     }
 
@@ -315,6 +325,8 @@ impl ReplicaSet {
             next_gen: AtomicU64::new(2),
             cache_bytes,
             dir: Mutex::new(None),
+            resident: Mutex::new(None),
+            last_reload: Mutex::new(ReloadStats::default()),
         }))
     }
 
@@ -546,13 +558,39 @@ impl ReplicaSet {
 
     /// Reload a (presumably newer) snapshot directory into every replica
     /// and commit set-wide. The expensive part (decode + N slice builds +
-    /// pre-warms) runs on the caller's thread with no lock held; on error
-    /// the set keeps serving its current generation untouched.
+    /// pre-warms) runs on the caller's thread with no serving lock held;
+    /// on error the set keeps serving its current generation untouched
+    /// (and the diff cache is dropped so the next attempt decodes from
+    /// scratch). A v4 directory extending the resident cache's segment
+    /// watermarks loads `O(delta)` — only the segments written since the
+    /// previous load are read — and commits through the same
+    /// [`install_stores`](Self::install_stores) terminal path as a full
+    /// decode, so the served generation is bit-identical either way.
     pub fn reload(&self, dir: &Path) -> Result<u64> {
-        let (meta, stores) = ServingModel::load_dir_stores(dir)?;
-        let generation = self.install_stores(meta, &stores)?;
-        *self.dir.lock().unwrap() = Some(dir.to_path_buf());
-        Ok(generation)
+        let mut resident = self.resident.lock().unwrap();
+        let loaded: Result<(u64, ReloadStats)> = (|| {
+            let (meta, stores, stats) = ServingModel::load_dir_stores_cached(dir, &mut resident)?;
+            let generation = self.install_stores(meta, &stores)?;
+            Ok((generation, stats))
+        })();
+        match loaded {
+            Ok((generation, stats)) => {
+                *self.dir.lock().unwrap() = Some(dir.to_path_buf());
+                *self.last_reload.lock().unwrap() = stats;
+                Ok(generation)
+            }
+            Err(e) => {
+                *resident = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// How the last successful directory load actually loaded: a full
+    /// decode, or a generation-diff overlay (and of how many segments /
+    /// rows). The `serve --watch` loop logs this per reload.
+    pub fn last_reload_stats(&self) -> ReloadStats {
+        *self.last_reload.lock().unwrap()
     }
 
     /// [`reload`](Self::reload) from the directory this set was last
@@ -770,6 +808,44 @@ mod tests {
             assert_eq!(after.misses, 0, "replica {r}: a kept word went cold");
             assert_eq!(after.hits, kept, "replica {r}: kept words must hit");
         }
+    }
+
+    #[test]
+    fn v4_set_reload_takes_the_diff_path_and_stays_bit_identical() {
+        use crate::ps::snapshot;
+        let dir = std::env::temp_dir().join(format!(
+            "hplvm_set_diff_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut store = toy_stores(50).remove(0);
+        let mut log = snapshot::SegmentLog::new(0);
+        log.seal_to(&dir, &store, &toy_meta()).unwrap();
+
+        let set = ReplicaSet::load_dir(&dir, 3).unwrap();
+        assert!(set.last_reload_stats().full, "first load decodes fully");
+
+        // One changed row sealed as a delta → the set reload reads one
+        // segment / one row and commits a generation bit-identical to
+        // the unsliced full decode.
+        store.insert((0, 7), vec![3, 4].into());
+        log.mark_dirty((0, 7));
+        log.seal_to(&dir, &store, &toy_meta()).unwrap();
+        let g = set.reload_latest().unwrap();
+        assert_eq!(g, 2);
+        let st = set.last_reload_stats();
+        assert_eq!((st.full, st.segments, st.rows), (false, 1, 1), "{st:?}");
+
+        let single = ServingModel::load_dir(&dir).unwrap();
+        let doc: Vec<u32> = (0..30).map(|i| (i % 20) as u32).collect();
+        let cfg = InferConfig::default();
+        let a = infer_doc(&single, &doc, &cfg, &mut Rng::new(91));
+        let b = set.infer(&doc, &cfg, &mut Rng::new(91));
+        for (x, y) in a.theta.iter().zip(b.theta.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "diff-reloaded θ diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,20 +1,27 @@
 //! Snapshot format compatibility matrix — one table-driven test.
 //!
-//! Three snapshot formats exist on disk: v1 (`HPLVMSNP`, store body
+//! Four snapshot formats exist on disk: v1 (`HPLVMSNP`, store body
 //! only, no metadata), v2 (`HPLVMSN2`, hyperparameter header, no table
 //! section), v3 (`HPLVMSN3`, + `run_id` + optional table-side
-//! hyperparameters). Which combinations serve is a contract the
-//! individual PR-era tests asserted piecemeal; this file pins the whole
-//! matrix in one place:
+//! hyperparameters), and v4 (`HPLVMSN4`, the slot file is an LSM-style
+//! *manifest* naming immutable segment files instead of carrying the
+//! store body). Which combinations serve is a contract the individual
+//! PR-era tests asserted piecemeal; this file pins the whole matrix in
+//! one place:
 //!
 //! | format | LDA    | PDP    | HDP    |
 //! |--------|--------|--------|--------|
 //! | v1     | refuse | refuse | refuse | (no hyperparameters at all)
 //! | v2     | serve  | refuse | refuse | (PDP/HDP need the v3 table section)
 //! | v3     | serve  | serve  | serve  |
+//! | v4     | serve  | serve  | serve  | (manifest + segment replay)
 //!
 //! A refused load must also say *why* in a way that points at the fix
-//! (re-train), so each refusal asserts its diagnostic substring.
+//! (re-train), so each refusal asserts its diagnostic substring. The v4
+//! row additionally pins the *reader* direction of the contract: a
+//! pre-v4 full-dump reader ([`snapshot::decode_store_meta`]) must refuse
+//! a v4 manifest outright — its magic is unknown to them — rather than
+//! misread the segment list as row data.
 
 use hplvm::ps::snapshot::{self, SnapshotMeta, Store, TableHyper};
 use hplvm::serve::ServingModel;
@@ -91,50 +98,80 @@ fn format_family_matrix_accepts_and_refuses_exactly_as_documented() {
     let _ = std::fs::remove_dir_all(&base);
 
     for (family, meta, store) in family_fixtures() {
-        for version in ["v1", "v2", "v3"] {
+        for version in ["v1", "v2", "v3", "v4"] {
             let dir = base.join(format!("{family}_{version}"));
             std::fs::create_dir_all(&dir).unwrap();
-            let bytes = match version {
-                // v1: store body only — no header to interpret.
-                "v1" => snapshot::encode_store(&store),
-                // v2: hyperparameter header, table section impossible
-                // (the encoder ignores meta.tables — v2 had nowhere to
-                // put it), which is exactly what makes PDP/HDP
-                // unservable from v2 files.
-                "v2" => snapshot::encode_store_meta_v2(&store, &meta),
-                _ => snapshot::encode_store_meta(&store, &meta),
-            };
-            snapshot::write_atomic(&dir.join(snapshot::slot_snapshot_name(0)), &bytes)
-                .unwrap();
+            if version == "v4" {
+                // v4: written by the segment log's seal — a manifest
+                // named like the legacy slot file plus immutable
+                // segment files next to it.
+                let mut log = snapshot::SegmentLog::new(0);
+                log.seal_to(&dir, &store, &meta).unwrap();
+                let name = snapshot::slot_snapshot_name(0);
+                let manifest_bytes = std::fs::read(dir.join(&name)).unwrap();
+                // Pre-v4 full-dump readers must refuse the manifest
+                // outright (unknown magic), never misread it...
+                assert!(
+                    snapshot::decode_store_meta(&manifest_bytes).is_none(),
+                    "{family}: a v4 manifest must not decode as a pre-v4 full dump"
+                );
+                // ...while the header-only probe (the `--watch`
+                // fingerprint) and the versioned loader understand it.
+                let m = snapshot::decode_meta_prefix(&manifest_bytes)
+                    .expect("v4 header probe must parse")
+                    .expect("v4 carries a header");
+                assert_eq!(m.run_id, meta.run_id);
+                assert_eq!(m.tables, meta.tables);
+                let (lm, lstore, generation) =
+                    snapshot::load_slot_file(&dir, &name).unwrap();
+                assert_eq!(lstore, store, "{family} v4 segment replay round-trip");
+                assert_eq!(lm.unwrap().model, meta.model);
+                assert_eq!(generation, 1, "first seal is generation 1");
+            } else {
+                let bytes = match version {
+                    // v1: store body only — no header to interpret.
+                    "v1" => snapshot::encode_store(&store),
+                    // v2: hyperparameter header, table section impossible
+                    // (the encoder ignores meta.tables — v2 had nowhere to
+                    // put it), which is exactly what makes PDP/HDP
+                    // unservable from v2 files.
+                    "v2" => snapshot::encode_store_meta_v2(&store, &meta),
+                    _ => snapshot::encode_store_meta(&store, &meta),
+                };
+                snapshot::write_atomic(&dir.join(snapshot::slot_snapshot_name(0)), &bytes)
+                    .unwrap();
 
-            // Round-trip sanity: every format still *decodes* — the
-            // refusals below are serving-layer policy, not parse errors.
-            let (decoded_meta, decoded_store) =
-                snapshot::decode_store_meta(&bytes).expect("all formats must decode");
-            assert_eq!(decoded_store, store, "{family} {version} store round-trip");
-            match version {
-                "v1" => assert!(decoded_meta.is_none(), "v1 carries no header"),
-                "v2" => {
-                    let m = decoded_meta.unwrap();
-                    assert_eq!(m.model, meta.model);
-                    assert_eq!(m.run_id, 0, "v2 predates run ids");
-                    assert!(m.tables.is_none(), "v2 has no table section");
-                }
-                _ => {
-                    let m = decoded_meta.unwrap();
-                    assert_eq!(m.run_id, meta.run_id);
-                    assert_eq!(m.tables, meta.tables);
+                // Round-trip sanity: every pre-v4 format still *decodes*
+                // — the refusals below are serving-layer policy, not
+                // parse errors.
+                let (decoded_meta, decoded_store) =
+                    snapshot::decode_store_meta(&bytes).expect("all formats must decode");
+                assert_eq!(decoded_store, store, "{family} {version} store round-trip");
+                match version {
+                    "v1" => assert!(decoded_meta.is_none(), "v1 carries no header"),
+                    "v2" => {
+                        let m = decoded_meta.unwrap();
+                        assert_eq!(m.model, meta.model);
+                        assert_eq!(m.run_id, 0, "v2 predates run ids");
+                        assert!(m.tables.is_none(), "v2 has no table section");
+                    }
+                    _ => {
+                        let m = decoded_meta.unwrap();
+                        assert_eq!(m.run_id, meta.run_id);
+                        assert_eq!(m.tables, meta.tables);
+                    }
                 }
             }
 
-            let serves = matches!((version, family), ("v3", _) | ("v2", "lda"));
+            let serves =
+                matches!((version, family), ("v3", _) | ("v4", _) | ("v2", "lda"));
             match (serves, ServingModel::load_dir(&dir)) {
                 (true, Ok(model)) => {
                     assert_eq!(model.kind().family_name(), family);
                     assert!(model.total_tokens() > 0, "{family} {version}");
                     assert_eq!(
                         model.meta().tables.is_some(),
-                        version == "v3" && family != "lda",
+                        matches!(version, "v3" | "v4") && family != "lda",
                     );
                 }
                 (true, Err(e)) => {

@@ -1,0 +1,299 @@
+//! Incremental (v4) checkpoint integration tests: byte proportionality,
+//! torn-checkpoint recovery, and generation-diff serving reloads — the
+//! LSM snapshot store exercised end-to-end through a real
+//! `TrainSession`, not synthetic stores.
+//!
+//! The contract under test:
+//!
+//! * a second `checkpoint(dir)` writes bytes proportional to the rows
+//!   that changed since the first — an immediate re-checkpoint carries
+//!   every segment forward (by hardlink where the filesystem allows)
+//!   and writes (almost) nothing new;
+//! * a crash between sealing a segment and renaming the manifest leaves
+//!   only *unreferenced* files, which every reader ignores — resume and
+//!   serving both work and token totals are conserved;
+//! * a *referenced* segment that is truncated is a hard, named error —
+//!   never folded silently;
+//! * a serving reload after more training takes the generation-diff
+//!   path and stays bit-identical to a from-scratch full load.
+
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::session::TrainSession;
+use hplvm::corpus::source::SyntheticSource;
+use hplvm::eval::perplexity::TopicModelView;
+use hplvm::ps::snapshot::{self, SegmentKind};
+use hplvm::serve::{ServingHandle, ServingModel};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 10;
+    cfg.corpus.n_docs = 200;
+    cfg.corpus.vocab_size = 400;
+    cfg.corpus.n_topics = 10;
+    cfg.corpus.doc_len_mean = 20.0;
+    cfg.cluster.clients = 2;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(100);
+    cfg.iterations = 8;
+    cfg.eval_every = 8;
+    cfg.test_docs = 20;
+    cfg.seed = seed;
+    cfg.corpus.seed = seed;
+    cfg.cluster.net.seed = seed ^ 0x7EA7;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hplvm_incr_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Every segment file in `dir`: name → byte length.
+fn seg_files(dir: &Path) -> HashMap<String, u64> {
+    let mut out = HashMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if snapshot::is_segment_name(&name) {
+            out.insert(name, entry.metadata().unwrap().len());
+        }
+    }
+    out
+}
+
+/// (device, inode) identity — two paths with the same pair are the same
+/// file, i.e. the carry was a hardlink and rewrote zero bytes.
+#[cfg(unix)]
+fn file_id(path: &Path) -> (u64, u64) {
+    use std::os::unix::fs::MetadataExt;
+    let md = std::fs::metadata(path).unwrap();
+    (md.dev(), md.ino())
+}
+
+/// The acceptance criterion: checkpoint bytes are proportional to rows
+/// changed. An immediate re-checkpoint (zero training in between) must
+/// carry the previous live set forward and write (almost — the SimNet
+/// may deliver a straggler push between the two seals) no new segment
+/// bytes; a checkpoint after more training writes delta segments.
+#[test]
+fn second_checkpoint_writes_bytes_proportional_to_changed_rows() {
+    let cfg = base_cfg(71);
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(4).unwrap();
+
+    let d1 = tmpdir("bytes1");
+    let d2 = tmpdir("bytes2");
+    let d3 = tmpdir("bytes3");
+    session.checkpoint(&d1).unwrap();
+    session.checkpoint(&d2).unwrap();
+
+    let segs1 = seg_files(&d1);
+    let segs2 = seg_files(&d2);
+    assert!(!segs1.is_empty(), "a v4 checkpoint must write segment files");
+    let base_bytes: u64 = segs1.values().sum();
+    // Carried segments keep their names; anything newly sealed gets a
+    // fresh generation number and therefore a fresh name.
+    let new_bytes: u64 = segs2
+        .iter()
+        .filter(|(name, _)| !segs1.contains_key(*name))
+        .map(|(_, len)| len)
+        .sum();
+    assert!(
+        new_bytes * 4 < base_bytes,
+        "re-checkpoint with no training wrote {new_bytes} of {base_bytes} \
+         base bytes — the live set was not carried forward"
+    );
+    // On Unix the carry is a hardlink: same device and inode, zero bytes
+    // rewritten — not even a copy.
+    #[cfg(unix)]
+    for name in segs2.keys().filter(|n| segs1.contains_key(*n)) {
+        assert_eq!(
+            file_id(&d1.join(name)),
+            file_id(&d2.join(name)),
+            "{name} was copied, not hardlinked"
+        );
+    }
+
+    // More training dirties rows; the next checkpoint seals them as
+    // *delta* segments on top of the carried set and advances the
+    // manifest generation.
+    session.run_to(6).unwrap();
+    session.checkpoint(&d3).unwrap();
+    let segs3 = seg_files(&d3);
+    let fresh: Vec<&String> = segs3
+        .keys()
+        .filter(|n| !segs2.contains_key(*n))
+        .collect();
+    assert!(
+        !fresh.is_empty(),
+        "training between checkpoints must seal at least one new segment"
+    );
+    for name in &fresh {
+        assert!(
+            name.ends_with("-delta.seg"),
+            "{name}: post-training seal should be a delta, not a rebase"
+        );
+    }
+    let m1 = snapshot::read_manifest(&d1.join(snapshot::slot_snapshot_name(0)))
+        .expect("slot 0 manifest in d1");
+    let m3 = snapshot::read_manifest(&d3.join(snapshot::slot_snapshot_name(0)))
+        .expect("slot 0 manifest in d3");
+    assert!(
+        m3.generation > m1.generation,
+        "sealing new rows must advance the manifest generation"
+    );
+
+    // Every checkpoint in the chain still serves.
+    let model = ServingModel::load_dir(&d3).expect("incremental checkpoint must serve");
+    assert!(model.total_tokens() > 0);
+    let _ = session.finish().unwrap();
+
+    for d in [&d1, &d2, &d3] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// A crash between sealing a segment and renaming the manifest leaves
+/// orphan segment files — valid or truncated — next to a complete
+/// manifest. Readers open only manifest-referenced files, so orphans are
+/// inert: resume works, serving works, token totals are conserved. A
+/// truncated *referenced* segment, by contrast, is a hard error naming
+/// the file.
+#[test]
+fn torn_checkpoint_orphans_are_inert_but_referenced_truncation_refuses() {
+    let cfg = base_cfg(73);
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(4).unwrap();
+    let ckpt = tmpdir("torn");
+    session.checkpoint(&ckpt).unwrap();
+    let _ = session.finish().unwrap();
+
+    let tokens_before = ServingModel::load_dir(&ckpt).unwrap().total_tokens();
+    assert!(tokens_before > 0);
+
+    // Simulate the crash window: a fully-written orphan delta (sealed,
+    // never referenced — the manifest rename never happened) and a
+    // truncated one (the crash hit mid-write, before the atomic rename
+    // would have published it).
+    let orphan = snapshot::encode_segment(0, 999, SegmentKind::Delta, &[]);
+    std::fs::write(
+        ckpt.join(snapshot::segment_name(0, 999, SegmentKind::Delta)),
+        &orphan,
+    )
+    .unwrap();
+    std::fs::write(
+        ckpt.join(snapshot::segment_name(0, 998, SegmentKind::Delta)),
+        &orphan[..orphan.len() / 2],
+    )
+    .unwrap();
+
+    // Serving: same model, same totals — the orphans were never opened.
+    let tokens_after = ServingModel::load_dir(&ckpt)
+        .expect("orphan segments must not break serving")
+        .total_tokens();
+    assert_eq!(tokens_before, tokens_after, "orphans changed the fold");
+
+    // Resume: the checkpoint is still a valid continuation point, and
+    // the resumed run can keep training and re-checkpoint.
+    let mut resumed =
+        TrainSession::resume(&ckpt).expect("orphan segments must not break resume");
+    assert_eq!(resumed.iteration(), 4);
+    resumed.run_for(1).unwrap();
+    let ckpt2 = tmpdir("torn2");
+    resumed.checkpoint(&ckpt2).unwrap();
+    let _ = resumed.finish().unwrap();
+    assert!(ServingModel::load_dir(&ckpt2).unwrap().total_tokens() > 0);
+
+    // Now damage a segment the manifest *does* reference: that must be
+    // a hard, named refusal — in serving and in resume alike.
+    let manifest = snapshot::read_manifest(&ckpt.join(snapshot::slot_snapshot_name(0)))
+        .expect("slot 0 manifest");
+    let victim = &manifest.segments[0].name;
+    let bytes = std::fs::read(ckpt.join(victim)).unwrap();
+    std::fs::write(ckpt.join(victim), &bytes[..bytes.len() - 20]).unwrap();
+
+    let err = match ServingModel::load_dir(&ckpt) {
+        Ok(_) => panic!("truncated referenced segment must refuse to serve"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(
+        err.contains(victim.as_str()) && err.contains("torn"),
+        "refusal must name the file and the tear: {err}"
+    );
+    let err = match TrainSession::resume(&ckpt) {
+        Ok(_) => panic!("truncated referenced segment must refuse to resume"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("torn"), "resume refusal must explain itself: {err}");
+
+    std::fs::remove_dir_all(&ckpt).ok();
+    std::fs::remove_dir_all(&ckpt2).ok();
+}
+
+/// `--watch`-style reload after more training goes through the
+/// generation-diff path (only the new segments are read) and the
+/// resulting model is bit-identical to a from-scratch full load of the
+/// same directory.
+#[test]
+fn generation_diff_reload_matches_full_load_bitwise() {
+    let cfg = base_cfg(79);
+    let src = SyntheticSource::new(cfg.corpus.clone());
+    let mut session = TrainSession::start(cfg, &src).unwrap();
+    session.run_to(4).unwrap();
+    let ckpt = tmpdir("diffreload");
+    session.checkpoint(&ckpt).unwrap();
+
+    let handle = ServingHandle::load_dir(&ckpt).unwrap();
+    assert!(
+        handle.last_reload_stats().full,
+        "the first load has no resident stores to diff against"
+    );
+    let gen0 = handle.generation();
+
+    // Train on, checkpoint into the *same* directory (the watch target),
+    // reload: only the freshly sealed segments should be replayed.
+    session.run_to(6).unwrap();
+    session.checkpoint(&ckpt).unwrap();
+    let _ = session.finish().unwrap();
+    let gen1 = handle.reload(&ckpt).unwrap();
+    assert!(gen1 > gen0, "reload must advance the serving generation");
+    let stats = handle.last_reload_stats();
+    assert!(!stats.full, "second load of a v4 dir must take the diff path");
+    assert!(
+        stats.segments >= 1 && stats.rows >= 1,
+        "training dirtied rows, so the diff must have replayed some: {stats:?}"
+    );
+
+    // Bit-identity: the diff-overlaid model answers exactly like a model
+    // decoded from scratch — same φ bits, same priors, same totals.
+    let fresh = ServingModel::load_dir(&ckpt).unwrap();
+    let live = handle.model();
+    assert_eq!(live.total_tokens(), fresh.total_tokens());
+    assert_eq!(live.k(), fresh.k());
+    for t in 0..fresh.k() {
+        assert_eq!(live.doc_prior(t).to_bits(), fresh.doc_prior(t).to_bits());
+    }
+    let vocab = fresh.meta().vocab_size;
+    for w in 0..vocab {
+        for t in 0..fresh.k() {
+            assert_eq!(
+                live.phi(w, t).to_bits(),
+                fresh.phi(w, t).to_bits(),
+                "φ({w},{t}) diverged between diff reload and full load"
+            );
+        }
+    }
+
+    std::fs::remove_dir_all(&ckpt).ok();
+}
