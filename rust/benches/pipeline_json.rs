@@ -1,0 +1,159 @@
+//! Deterministic streaming-pipeline bench. Prints a summary table AND
+//! writes `BENCH_pipeline.json` at the repository root so the repo
+//! carries a machine-readable train-while-serve trajectory across PRs,
+//! next to `BENCH_train.json`:
+//!
+//! * **ingest rate** — documents/second through the full loop (stream →
+//!   live session → sweeps → checkpoints), overall and per batch;
+//! * **freshness lag** — p50/p99 of the per-batch ingested-minus-
+//!   servable document gap, plus the peak and the final (must-be-zero)
+//!   value;
+//! * **reload cadence** — serving reloads performed, seconds between
+//!   them, and the distinct generations the query load observed, with
+//!   the zero-drop query counters alongside.
+//!
+//! Regenerate with `cargo bench --bench pipeline_json`.
+
+use hplvm::bench;
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::corpus::generator::CorpusConfig;
+use hplvm::corpus::source::write_docword;
+use hplvm::corpus::stream::StreamingSource;
+use hplvm::pipeline::{Pipeline, PipelineConfig};
+use hplvm::util::json::Json;
+use std::time::Duration;
+
+const N_DOCS: usize = 600;
+const VOCAB: usize = 500;
+const CHUNK_DOCS: usize = 80;
+
+fn train_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 12;
+    cfg.cluster.clients = 2;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(50);
+    cfg.iterations = 8;
+    cfg.eval_every = 4;
+    cfg.test_docs = 20;
+    cfg.seed = 11;
+    cfg.cluster.net.seed = 11 ^ 0x7EA7;
+    cfg
+}
+
+fn main() {
+    println!("# Streaming train-while-serve pipeline (BENCH_pipeline.json)");
+
+    // One seeded corpus, streamed from disk in bounded chunks.
+    let mut gen = CorpusConfig::default();
+    gen.n_docs = N_DOCS;
+    gen.vocab_size = VOCAB;
+    gen.n_topics = 12;
+    gen.doc_len_mean = 16.0;
+    gen.seed = 11;
+    let (corpus, _vocab) = gen.generate();
+    let dir = std::env::temp_dir().join(format!("hplvm_bench_pipeline_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("bench tmpdir");
+    let docword = dir.join("docword.bench.txt");
+    write_docword(&docword, &corpus).expect("write docword");
+
+    let mut cfg = PipelineConfig::new(train_cfg(), dir.join("ckpt"));
+    cfg.checkpoint_every_batches = 2;
+    cfg.replicas = 2;
+    cfg.query_interval = Duration::from_millis(1);
+    cfg.warmup_sweeps = 4;
+
+    let mut stream = StreamingSource::open(&docword, CHUNK_DOCS).expect("open stream");
+    let report = Pipeline::run(cfg, &mut stream).expect("pipeline run");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let lags: Vec<f64> = report.samples.iter().map(|s| s.freshness_lag as f64).collect();
+    let rates: Vec<f64> = report
+        .samples
+        .iter()
+        .filter(|s| s.ingest_docs_per_sec > 0.0)
+        .map(|s| s.ingest_docs_per_sec)
+        .collect();
+    let lag_p50 = bench::percentile(&lags, 50.0);
+    let lag_p99 = bench::percentile(&lags, 99.0);
+    let reload_cadence_secs = report.wall_secs / report.reloads.max(1) as f64;
+
+    bench::section("streaming ingest + online train-while-serve");
+    bench::table(
+        &[
+            "docs", "batches", "ingest docs/s", "lag p50", "lag p99", "reloads",
+            "cadence s", "gens", "queries", "perplexity",
+        ],
+        &[vec![
+            format!("{}", report.docs_streamed),
+            format!("{}", report.batches),
+            format!("{:.0}", report.ingest_docs_per_sec()),
+            format!("{lag_p50:.0}"),
+            format!("{lag_p99:.0}"),
+            format!("{}", report.reloads),
+            format!("{reload_cadence_secs:.2}"),
+            format!("{}", report.generations_observed.len()),
+            format!("{}/{}", report.queries_answered, report.queries_sent),
+            format!("{:.1}", report.final_perplexity),
+        ]],
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("pipeline_json".into())),
+        (
+            "regenerate",
+            Json::Str("cargo bench --bench pipeline_json".into()),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("n_docs", Json::Num(N_DOCS as f64)),
+                ("vocab", Json::Num(VOCAB as f64)),
+                ("chunk_docs", Json::Num(CHUNK_DOCS as f64)),
+                ("k", Json::Num(12.0)),
+                ("clients", Json::Num(2.0)),
+                ("checkpoint_every_batches", Json::Num(2.0)),
+            ]),
+        ),
+        (
+            "ingest",
+            Json::obj(vec![
+                ("docs_per_sec", Json::Num(report.ingest_docs_per_sec())),
+                ("batch_docs_per_sec_p50", Json::Num(bench::percentile(&rates, 50.0))),
+                ("docs_streamed", Json::Num(report.docs_streamed as f64)),
+                ("peak_chunk_docs", Json::Num(report.peak_chunk_docs as f64)),
+                ("wall_secs", Json::Num(report.wall_secs)),
+            ]),
+        ),
+        (
+            "freshness_lag_docs",
+            Json::obj(vec![
+                ("p50", Json::Num(lag_p50)),
+                ("p99", Json::Num(lag_p99)),
+                ("peak", Json::Num(report.peak_lag() as f64)),
+                ("final", Json::Num(report.final_lag() as f64)),
+            ]),
+        ),
+        (
+            "serving",
+            Json::obj(vec![
+                ("reloads", Json::Num(report.reloads as f64)),
+                ("reload_cadence_secs", Json::Num(reload_cadence_secs)),
+                (
+                    "generations_observed",
+                    Json::Num(report.generations_observed.len() as f64),
+                ),
+                ("queries_sent", Json::Num(report.queries_sent as f64)),
+                ("queries_answered", Json::Num(report.queries_answered as f64)),
+            ]),
+        ),
+        ("final_perplexity", Json::Num(report.final_perplexity)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
+    match std::fs::write(path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

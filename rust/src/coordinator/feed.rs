@@ -1,0 +1,121 @@
+//! Lazy shard delivery: the per-shard document feed.
+//!
+//! Spawn-time sharding hands every worker its whole shard up front —
+//! fine for segment training, wrong for the online loop where documents
+//! arrive continuously and the corpus may never be resident at once. A
+//! [`DocFeed`] is the pull side of lazy sharding: the session appends
+//! newly ingested documents per shard
+//! ([`TrainSession::ingest`](super::TrainSession::ingest)), and the live
+//! worker drains the feed at iteration boundaries (and while parked),
+//! absorbing the new documents into its sampler without a respawn.
+//!
+//! Ordering is the correctness contract: documents enter the feed in the
+//! same order the session appends them to `Shard::docs`, and the worker
+//! appends drained documents to its sampler in feed order — so the
+//! barrier-free disk snapshots' `z` rows stay index-aligned with the
+//! shard, and a failover respawn (which reads `Shard::docs` directly and
+//! [`clear_pending`](DocFeed::clear_pending)s the feed) resumes the
+//! identical document list.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::corpus::doc::Document;
+
+/// A per-shard queue of freshly ingested documents plus the ingest
+/// accounting the pipeline's freshness metric reads.
+#[derive(Default)]
+pub struct DocFeed {
+    q: Mutex<VecDeque<Document>>,
+    pushed_docs: AtomicU64,
+    pushed_tokens: AtomicU64,
+    absorbed_docs: AtomicU64,
+}
+
+impl DocFeed {
+    /// An empty feed.
+    pub fn new() -> DocFeed {
+        DocFeed::default()
+    }
+
+    /// Append one document (session side). Callers push in `Shard::docs`
+    /// order — see the module docs.
+    pub fn push(&self, doc: Document) {
+        self.pushed_tokens.fetch_add(doc.len() as u64, Ordering::Relaxed);
+        self.pushed_docs.fetch_add(1, Ordering::Relaxed);
+        self.q.lock().unwrap().push_back(doc);
+    }
+
+    /// Documents queued but not yet taken by the worker.
+    pub fn pending_docs(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    /// Drain everything queued (worker side), in push order. The drained
+    /// documents count as absorbed — they become part of the live
+    /// sampler immediately after this call.
+    pub fn take_pending(&self) -> Vec<Document> {
+        let docs: Vec<Document> = self.q.lock().unwrap().drain(..).collect();
+        self.absorbed_docs.fetch_add(docs.len() as u64, Ordering::Relaxed);
+        docs
+    }
+
+    /// Discard everything queued without handing it to a worker — the
+    /// respawn path, where the replacement worker reads the full
+    /// `Shard::docs` (which already contains these documents) instead.
+    /// They count as absorbed: the new incarnation samples them.
+    pub fn clear_pending(&self) {
+        let mut q = self.q.lock().unwrap();
+        self.absorbed_docs.fetch_add(q.len() as u64, Ordering::Relaxed);
+        q.clear();
+    }
+
+    /// Total documents ever pushed.
+    pub fn pushed_docs(&self) -> u64 {
+        self.pushed_docs.load(Ordering::Relaxed)
+    }
+
+    /// Total tokens ever pushed.
+    pub fn pushed_tokens(&self) -> u64 {
+        self.pushed_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Total documents taken (or cleared) off the feed.
+    pub fn absorbed_docs(&self) -> u64 {
+        self.absorbed_docs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(words: &[u32]) -> Document {
+        Document {
+            tokens: words.to_vec(),
+        }
+    }
+
+    #[test]
+    fn feed_preserves_order_and_counts() {
+        let f = DocFeed::new();
+        f.push(doc(&[1, 2]));
+        f.push(doc(&[3]));
+        assert_eq!(f.pending_docs(), 2);
+        assert_eq!((f.pushed_docs(), f.pushed_tokens()), (2, 3));
+        assert_eq!(f.absorbed_docs(), 0);
+        let got = f.take_pending();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].tokens, vec![1, 2], "FIFO order");
+        assert_eq!(got[1].tokens, vec![3]);
+        assert_eq!(f.absorbed_docs(), 2);
+        assert_eq!(f.pending_docs(), 0);
+        assert!(f.take_pending().is_empty());
+
+        f.push(doc(&[4]));
+        f.clear_pending();
+        assert_eq!(f.pending_docs(), 0);
+        assert_eq!(f.absorbed_docs(), 3, "cleared docs count as absorbed");
+    }
+}

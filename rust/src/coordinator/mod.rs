@@ -3,14 +3,18 @@
 //! into the paper's full training loop (§5.2, §6) — exposed as a
 //! long-lived, resumable [`TrainSession`] (segments, cluster checkpoints,
 //! streaming [`TrainObserver`] metrics) with the one-shot
-//! [`Trainer::run`] kept as a single-segment wrapper.
+//! [`Trainer::run`] kept as a single-segment wrapper. Online mode adds
+//! lazy sharding ([`DocFeed`]) and parked workers, the substrate the
+//! [`pipeline`](crate::pipeline) tier drives.
 
+pub mod feed;
 pub mod metrics;
 pub mod model;
 pub mod session;
 pub mod trainer;
 pub mod worker;
 
+pub use feed::DocFeed;
 pub use metrics::{IterRecord, IterStats, RecordFold, TrainReport};
 pub use model::ModelSampler;
 pub use session::{

@@ -201,6 +201,124 @@ impl ModelSampler {
         }
     }
 
+    /// Re-log the statistics contributions of documents `from..` as
+    /// fresh, *pushable* deltas — the appended-document announce used by
+    /// online ingest.
+    ///
+    /// Precondition: the caller rebuilt this sampler over old+new docs,
+    /// **drained** the rebuild's init delta log, and applied the
+    /// pre-append exported replica rows (`have` is their row keyset per
+    /// matrix, each sorted ascending). After that overwrite, rows the new
+    /// documents touch fall in two classes: rows *in* the export now
+    /// carry the pre-append value and just need the new tokens added;
+    /// rows *absent* from it still carry the rebuild's raw counts and
+    /// must be zeroed first, or the logged increments below would double
+    /// them locally. (A row any *old* document touches is always in the
+    /// export — its counts are ≥ 1 and non-negative — so zeroing absent
+    /// rows never erases old contributions.) Both classes end with
+    /// `local = pre-append value + new tokens` and a delta log carrying
+    /// exactly the new documents' counts, which the next `push_matrix`
+    /// ships to the servers.
+    pub fn announce_appended(&mut self, from: usize, have: &[(u8, Vec<u32>)]) {
+        use crate::ps::msg::RowData;
+        let has = |m: u8, w: u32| {
+            have.iter()
+                .any(|(mm, ws)| *mm == m && ws.binary_search(&w).is_ok())
+        };
+        // Token events for the appended documents: every token adds one
+        // count to the primary matrix; table-opening tokens (`r`) add one
+        // to the tables matrix — per word for PDP, the shared root row 0
+        // for HDP.
+        let tables_row_is_root = matches!(self, ModelSampler::Hdp(_));
+        let has_tables = matches!(self, ModelSampler::Pdp(_) | ModelSampler::Hdp(_));
+        let mut events: Vec<(u8, u32, u32)> = Vec::new();
+        {
+            let (z, r) = self.assignments();
+            let docs = self.docs();
+            for d in from..docs.len() {
+                for (j, &w) in docs[d].tokens.iter().enumerate() {
+                    let t = z[d][j];
+                    events.push((MATRIX_PRIMARY, w, t));
+                    if has_tables && r.get(d).and_then(|rd| rd.get(j)).copied().unwrap_or(false)
+                    {
+                        let row = if tables_row_is_root { 0 } else { w };
+                        events.push((MATRIX_TABLES, row, t));
+                    }
+                }
+            }
+        }
+        // Zero the touched rows the export did not carry.
+        let mut zero: Vec<(u8, u32)> = events
+            .iter()
+            .map(|&(m, w, _)| (m, w))
+            .filter(|&(m, w)| !has(m, w))
+            .collect();
+        zero.sort_unstable();
+        zero.dedup();
+        for &(m, w) in &zero {
+            self.apply_rows(m, &[(w, RowData::Sparse(Vec::new()))]);
+        }
+        // Replay through the delta-*logging* increment path (`inc`, not
+        // `inc_local`), then refresh the alias/normalizer caches for
+        // every word whose row moved.
+        for &(m, w, t) in &events {
+            let t = t as usize;
+            match self {
+                ModelSampler::Yahoo(s) => s.nwt.inc(w, t, 1),
+                ModelSampler::Alias(s) => s.nwt.inc(w, t, 1),
+                ModelSampler::Pdp(s) => {
+                    if m == MATRIX_PRIMARY {
+                        s.m.inc(w, t, 1)
+                    } else {
+                        s.s.inc(w, t, 1)
+                    }
+                }
+                ModelSampler::Hdp(s) => {
+                    if m == MATRIX_PRIMARY {
+                        s.nwt.inc(w, t, 1)
+                    } else {
+                        s.tables.inc(w, t, 1)
+                    }
+                }
+            }
+        }
+        let mut words: Vec<u32> = events
+            .iter()
+            .filter(|&&(m, _, _)| m == MATRIX_PRIMARY)
+            .map(|&(_, w, _)| w)
+            .collect();
+        words.sort_unstable();
+        words.dedup();
+        let tables_moved = events.iter().any(|&(m, _, _)| m == MATRIX_TABLES);
+        match self {
+            ModelSampler::Yahoo(s) => {
+                for &w in &words {
+                    s.refresh_word(w);
+                }
+            }
+            ModelSampler::Alias(s) => {
+                for &w in &words {
+                    s.invalidate_word(w);
+                }
+            }
+            ModelSampler::Pdp(s) => {
+                for &w in &words {
+                    s.invalidate_word(w);
+                }
+            }
+            ModelSampler::Hdp(s) => {
+                if tables_moved {
+                    // θ₀ changed for every word's dense proposal.
+                    s.invalidate_all();
+                } else {
+                    for &w in &words {
+                        s.invalidate_word(w);
+                    }
+                }
+            }
+        }
+    }
+
     /// Evaluation view.
     pub fn view(&self) -> &dyn TopicModelView {
         match self {
@@ -453,6 +571,104 @@ mod tests {
                 "{kind:?} restored statistics must cover the same tokens"
             );
         }
+    }
+
+    /// Online ingest's appended-document announce: after a rebuild over
+    /// old+new docs, drain → apply pre-append export → announce_appended
+    /// must leave (a) local statistics equal to the pre-append values
+    /// plus exactly the new documents' tokens — including rows the
+    /// export never carried — and (b) a delta log carrying exactly the
+    /// new documents' counts, so the next push ships them once.
+    #[test]
+    fn announce_appended_logs_exactly_the_new_docs() {
+        let mk = |words: &[u32]| Document {
+            tokens: words.to_vec(),
+        };
+        // Old docs touch words {0,1,2}; new docs touch {2,3,4} — rows 3
+        // and 4 are absent from the pre-append export (the zeroing path).
+        let old = vec![mk(&[0, 1]), mk(&[1, 2])];
+        let new = vec![mk(&[2, 3]), mk(&[3, 3, 4])];
+        let mut cfg = TrainConfig::default();
+        cfg.model = ModelKind::AliasLda;
+        cfg.params.topics = 4;
+
+        let mut rng = Rng::new(21);
+        let s1 = ModelSampler::build(&cfg, old.clone(), 10, None, &mut rng);
+        let (z1, r1) = s1.assignments();
+        let snap = crate::ps::snapshot::ClientSnapshot {
+            shard: 0,
+            iteration: 1,
+            z: z1.to_vec(),
+            r: r1.to_vec(),
+            replicas: s1.export_replicas(),
+        };
+        let old_counts: Vec<Vec<i32>> = (0..5)
+            .map(|w| (0..4).map(|t| s1.primary().get(w, t)).collect())
+            .collect();
+
+        let mut all = old.clone();
+        all.extend(new.clone());
+        let mut rng2 = Rng::new(77);
+        let mut s2 = ModelSampler::build(&cfg, all, 10, Some(&snap), &mut rng2);
+        for (_m, rep) in s2.matrices() {
+            let _ = rep.drain_deltas();
+        }
+        for (m, rows) in &snap.replicas {
+            s2.apply_rows(*m, rows);
+        }
+        let have: Vec<(u8, Vec<u32>)> = snap
+            .replicas
+            .iter()
+            .map(|(m, rows)| {
+                let mut ws: Vec<u32> = rows.iter().map(|&(w, _)| w).collect();
+                ws.sort_unstable();
+                (*m, ws)
+            })
+            .collect();
+        s2.announce_appended(old.len(), &have);
+
+        // (a) Locals: pre-append value + one per appended token at its
+        // assignment.
+        let (z2, _) = s2.assignments();
+        let mut expect = old_counts.clone();
+        for (d, doc) in new.iter().enumerate() {
+            for (j, &w) in doc.tokens.iter().enumerate() {
+                expect[w as usize][z2[old.len() + d][j] as usize] += 1;
+            }
+        }
+        for w in 0..5u32 {
+            for t in 0..4 {
+                assert_eq!(
+                    s2.primary().get(w, t),
+                    expect[w as usize][t],
+                    "cell ({w},{t})"
+                );
+            }
+        }
+        assert_eq!(
+            s2.primary().grand_total(),
+            4 + 5,
+            "old tokens + appended tokens"
+        );
+
+        // (b) The delta log drains to exactly the new docs' counts.
+        let mut mats = s2.matrices();
+        let (_, rep) = &mut mats[0];
+        let mut logged = 0i64;
+        let mut logged_words = Vec::new();
+        for (w, row) in rep.drain_deltas() {
+            logged_words.push(w);
+            logged += match row {
+                crate::ps::msg::RowData::Sparse(cells) => {
+                    cells.iter().map(|&(_, c)| c as i64).sum::<i64>()
+                }
+                crate::ps::msg::RowData::Dense(cells) => {
+                    cells.iter().map(|&c| c as i64).sum::<i64>()
+                }
+            };
+        }
+        assert_eq!(logged, 5, "delta log carries exactly the appended tokens");
+        assert_eq!(logged_words, vec![2, 3, 4], "only rows the new docs touch");
     }
 
     #[test]

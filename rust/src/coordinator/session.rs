@@ -26,6 +26,12 @@
 //! * Per-iteration metrics stream through a [`TrainObserver`] as they
 //!   happen (replacing the old shared-`Vec` sink), so a CLI can print
 //!   live progress and embedders can watch convergence without polling.
+//! * **Online mode** ([`TrainSession::set_park_workers`] +
+//!   [`TrainSession::ingest`] + [`TrainSession::run_online`]): workers
+//!   park at the segment target instead of exiting, the next segment
+//!   raises their target in place, and freshly arrived documents are
+//!   round-robined onto shards and absorbed at iteration boundaries —
+//!   the substrate the [`pipeline`](crate::pipeline) tier drives.
 //!
 //! `Trainer::run` survives as a one-segment wrapper over this API.
 
@@ -34,6 +40,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use super::feed::DocFeed;
 use super::metrics::{IterRecord, RecordFold, TrainReport};
 use super::worker::{spawn_worker, WorkerCtx, WorkerExit};
 use crate::config::{ProjectionMode, TrainConfig};
@@ -223,6 +230,21 @@ pub struct TrainSession {
     /// Median completed-iteration probe, stored by the control loop so
     /// observers on other threads can pace fault injection.
     progress: Arc<AtomicU64>,
+    /// Park workers at the segment target instead of terminating them
+    /// (the online loop) — see [`set_park_workers`](Self::set_park_workers).
+    park_workers: bool,
+    /// Workers parked at the previous segment's target, reusable by the
+    /// next [`run_to`](Self::run_to) via a target raise.
+    parked: Vec<LiveWorker>,
+    /// Per-shard lazy-sharding feeds: [`ingest`](Self::ingest) pushes
+    /// here, live workers drain at iteration boundaries.
+    feeds: Vec<Arc<DocFeed>>,
+    /// Documents the session started with (before any online ingest).
+    base_docs: u64,
+    /// Round-robin shard cursor for ingested documents — continues
+    /// [`ShardSet::partition`]'s `i % n_shards` rule across the
+    /// startup/online boundary.
+    ingest_cursor: usize,
     t0: Instant,
 }
 
@@ -473,6 +495,8 @@ impl TrainSession {
         let eval_every = cfg.eval_every;
         let pending_client_kills = cfg.failures.kill_clients.clone();
         let pending_server_kills = cfg.failures.kill_servers.clone();
+        let feeds = (0..shards.len()).map(|_| Arc::new(DocFeed::new())).collect();
+        let base_docs = shards.shards.iter().map(|s| s.docs.len() as u64).sum();
         Ok(TrainSession {
             sink: Arc::new(RecordingObserver::new(observer.clone())),
             user_observer: observer,
@@ -500,6 +524,15 @@ impl TrainSession {
             reassignments: 0,
             live_workers: Arc::new(RwLock::new(Vec::new())),
             progress: Arc::new(AtomicU64::new(iteration)),
+            park_workers: false,
+            parked: Vec::new(),
+            feeds,
+            base_docs,
+            // Continue the round-robin where the startup partition left
+            // off: ingested doc j lands on shard (base + j) % n, exactly
+            // where `ShardSet::partition` over the concatenated corpus
+            // would have put it.
+            ingest_cursor: base_docs as usize,
             t0: Instant::now(),
         })
     }
@@ -581,6 +614,146 @@ impl TrainSession {
         self.reassignments
     }
 
+    /// Park worker threads at the segment target instead of terminating
+    /// them (the online train-while-serve loop). Parked workers idle on
+    /// the control channel; the next segment raises their target
+    /// ([`Control::RaiseTarget`]) instead of paying a thread respawn and
+    /// sampler rebuild — which matters when segments are one or two
+    /// sweeps long. Requires a snapshot directory: with no thread join
+    /// at segment end, the session reads each shard's segment-end state
+    /// from its barrier-free disk snapshot. Turning park mode *off*
+    /// retires any currently parked workers (terminate + join).
+    pub fn set_park_workers(&mut self, park: bool) -> Result<()> {
+        if park {
+            anyhow::ensure!(
+                self.snapshot_dir.is_some(),
+                "park mode requires a snapshot directory (set \
+                 cluster.snapshot_every or cluster.snapshot_dir): parked \
+                 workers hand segment-end state back via disk snapshots"
+            );
+        }
+        self.park_workers = park;
+        if !park {
+            self.retire_parked();
+        }
+        Ok(())
+    }
+
+    /// Ingest freshly arrived documents into the live session (online
+    /// training). Documents are validated against the session vocabulary,
+    /// then round-robined onto shards continuing the startup partition's
+    /// `i % n_shards` rule; live (or parked) workers absorb them at their
+    /// next iteration boundary, and the counts reach the servers without
+    /// waiting for a segment boundary. Empty documents are dropped, like
+    /// the corpus readers drop them. Returns the number accepted.
+    pub fn ingest(&mut self, docs: &[crate::corpus::doc::Document]) -> Result<usize> {
+        anyhow::ensure!(self.group.is_some(), "session already finished");
+        for d in docs {
+            for &w in &d.tokens {
+                anyhow::ensure!(
+                    (w as usize) < self.vocab,
+                    "ingested document carries word id {w} outside the \
+                     session vocabulary ({})",
+                    self.vocab
+                );
+            }
+        }
+        let n_shards = self.shards.len();
+        let mut accepted = 0usize;
+        for d in docs {
+            if d.tokens.is_empty() {
+                continue;
+            }
+            let s = self.ingest_cursor % n_shards;
+            self.ingest_cursor += 1;
+            self.shards.shards[s].docs.push(d.clone());
+            self.shards.shards[s].tokens += d.tokens.len();
+            self.feeds[s].push(d.clone());
+            accepted += 1;
+        }
+        Ok(accepted)
+    }
+
+    /// One online mini-batch step: ensure park mode, then run a short
+    /// segment of `sweeps` Gibbs sweeps (at least one) over everything
+    /// ingested so far. The pipeline driver alternates
+    /// [`ingest`](Self::ingest) and `run_online`.
+    pub fn run_online(&mut self, sweeps: u64) -> Result<SegmentReport> {
+        if !self.park_workers {
+            self.set_park_workers(true)?;
+        }
+        self.run_for(sweeps.max(1))
+    }
+
+    /// Total documents this session has ever been given: the startup
+    /// corpus plus everything [`ingest`](Self::ingest)ed.
+    pub fn docs_ingested(&self) -> u64 {
+        self.base_docs + self.feeds.iter().map(|f| f.pushed_docs()).sum::<u64>()
+    }
+
+    /// Documents workers have actually absorbed into their samplers (≤
+    /// [`docs_ingested`](Self::docs_ingested); the difference is queued
+    /// on feeds).
+    pub fn docs_absorbed(&self) -> u64 {
+        self.base_docs + self.feeds.iter().map(|f| f.absorbed_docs()).sum::<u64>()
+    }
+
+    /// Re-read every shard's barrier-free disk snapshot into the
+    /// session's carried states (the park-mode segment handoff).
+    fn refresh_states_from_disk(&mut self) {
+        let Some(dir) = self.snapshot_dir.clone() else { return };
+        for i in 0..self.states.len() {
+            if let Some(s) = snapshot::read_snapshot(&dir.join(format!("client_shard{i}.snap")))
+                .and_then(|b| snapshot::decode_client(&b))
+                .filter(|s| s.shard == i)
+            {
+                self.states[i] = Some(s);
+            }
+        }
+    }
+
+    /// Terminate and join any parked workers, folding their final state
+    /// into the session (the join-based handoff — fresher than the last
+    /// disk snapshot if the worker absorbed documents while parked).
+    fn retire_parked(&mut self) {
+        let live = std::mem::take(&mut self.parked);
+        if live.is_empty() {
+            return;
+        }
+        let grace = Instant::now() + Duration::from_secs(15);
+        let mut next_send = Instant::now();
+        while !live.iter().all(|w| w.handle.is_finished()) {
+            if Instant::now() > grace {
+                for w in &live {
+                    self.net.kill(w.node);
+                }
+                break;
+            }
+            if Instant::now() >= next_send {
+                // Re-sent on a cadence: the transport may drop any copy.
+                for w in &live {
+                    if !w.handle.is_finished() {
+                        self.net.send(
+                            self.scheduler_node,
+                            w.node,
+                            Payload::Control(Control::Terminate),
+                        );
+                    }
+                }
+                next_send = Instant::now() + Duration::from_millis(200);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for w in live {
+            if let Ok(out) = w.handle.join() {
+                if let Some(state) = out.state {
+                    self.states[w.shard] = Some(state);
+                }
+            }
+        }
+        self.live_workers.write().unwrap().clear();
+    }
+
     /// Train `n` more iterations (one segment).
     pub fn run_for(&mut self, n: u64) -> Result<SegmentReport> {
         self.run_to(self.iteration.saturating_add(n))
@@ -652,6 +825,8 @@ impl TrainSession {
                 eval_every: self.eval_every,
                 announce_init,
                 rng_salt: self.epoch,
+                park: self.park_workers,
+                feed: Some(self.feeds[shard_idx].clone()),
             };
             LiveWorker {
                 shard: shard_idx,
@@ -664,13 +839,35 @@ impl TrainSession {
         // resumed segment must not — the servers already carry every
         // shard's counts (double-pushing would double the statistics).
         let announce = start_iteration == 0;
-        let mut live: Vec<LiveWorker> = Vec::new();
-        for s in 0..self.shards.len() {
-            let mut slowdown = cfg.cluster.worker_slowdown;
-            if cfg.cluster.slow_clients.contains(&s) {
-                slowdown = (slowdown * 10).max(Duration::from_millis(2));
+        let mut live: Vec<LiveWorker> = std::mem::take(&mut self.parked);
+        let reused = !live.is_empty();
+        if reused {
+            // Parked workers resume in place: raise their target instead
+            // of paying a respawn + sampler rebuild per segment. The
+            // raise is re-sent on a cadence in the control loop below —
+            // the lossy transport may drop any single copy.
+            for w in &live {
+                self.net.send(
+                    self.scheduler_node,
+                    w.node,
+                    Payload::Control(Control::RaiseTarget(target)),
+                );
             }
-            live.push(spawn(s, self.states[s].clone(), slowdown, announce, &self.net));
+        } else {
+            // A fresh spawn reads the full `Shard::docs` — which already
+            // contains everything ingested so far — so the queued feed
+            // copies must be dropped or the worker would absorb them
+            // twice.
+            for f in &self.feeds {
+                f.clear_pending();
+            }
+            for s in 0..self.shards.len() {
+                let mut slowdown = cfg.cluster.worker_slowdown;
+                if cfg.cluster.slow_clients.contains(&s) {
+                    slowdown = (slowdown * 10).max(Duration::from_millis(2));
+                }
+                live.push(spawn(s, self.states[s].clone(), slowdown, announce, &self.net));
+            }
         }
         *self.live_workers.write().unwrap() =
             live.iter().map(|w| (w.shard, w.node)).collect();
@@ -706,6 +903,7 @@ impl TrainSession {
             + Duration::from_secs(120)
             + Duration::from_millis(span * self.shards.total_tokens() as u64 / 500);
         let mut deadline_hit = false;
+        let mut next_raise = Instant::now() + Duration::from_millis(200);
 
         loop {
             // Drain progress reports.
@@ -743,6 +941,26 @@ impl TrainSession {
             }
             let median = scheduler.median_progress();
             self.progress.store(median, Ordering::Relaxed);
+
+            // Reused parked workers learned the new target via a
+            // RaiseTarget message — which the lossy transport may have
+            // dropped. Re-send on a cadence to any shard still short of
+            // the target (a duplicate raise is idempotent: workers take
+            // `max`).
+            if reused && Instant::now() >= next_raise {
+                for w in &live {
+                    if scheduler.shards()[w.shard].iteration < target
+                        && !self.net.is_dead(w.node)
+                    {
+                        self.net.send(
+                            self.scheduler_node,
+                            w.node,
+                            Payload::Control(Control::RaiseTarget(target)),
+                        );
+                    }
+                }
+                next_raise = Instant::now() + Duration::from_millis(200);
+            }
 
             // Failure injection (absolute iterations, so a plan spanning
             // segment boundaries still fires exactly once).
@@ -815,6 +1033,10 @@ impl TrainSession {
                     .and_then(|p| snapshot::read_snapshot(&p))
                     .and_then(|b| snapshot::decode_client(&b))
                     .filter(|s| s.shard == shard_idx);
+                // The replacement reads the full `Shard::docs` (ingested
+                // documents included); drop the dead incarnation's
+                // undrained feed copies so they aren't absorbed twice.
+                self.feeds[shard_idx].clear_pending();
                 let old = std::mem::replace(
                     &mut live[i],
                     spawn(shard_idx, resume, Duration::ZERO, true, &self.net),
@@ -830,13 +1052,17 @@ impl TrainSession {
                 // 90% rule (§6): tell everyone to stop at their next sync
                 // point. Workers exit carrying their sampler state — the
                 // segment handoff — so Terminate replaces the old
-                // kill-on-quorum (which destroyed the state).
-                for w in &live {
-                    self.net.send(
-                        self.scheduler_node,
-                        w.node,
-                        Payload::Control(Control::Terminate),
-                    );
+                // kill-on-quorum (which destroyed the state). In park
+                // mode nobody is told to stop: workers idle at the
+                // target and the session reads their state from disk.
+                if !self.park_workers {
+                    for w in &live {
+                        self.net.send(
+                            self.scheduler_node,
+                            w.node,
+                            Payload::Control(Control::Terminate),
+                        );
+                    }
                 }
                 break;
             }
@@ -850,26 +1076,56 @@ impl TrainSession {
             }
         }
 
-        // Grace period for Terminated workers to reach a sync point and
-        // hand their state back; anything still running past it is killed
-        // (its shard keeps the previous segment's state).
-        if !deadline_hit {
+        if self.park_workers && !deadline_hit {
+            // Park handoff: workers stay alive at the target. Give the
+            // sub-quorum stragglers a grace window to catch up (parked
+            // workers re-announce progress, so a lost final report heals
+            // here), then read every shard's segment-end state from its
+            // barrier-free disk snapshot — the join-based handoff below
+            // only exists for exiting workers.
             let grace = Instant::now() + Duration::from_secs(15);
-            while !live.iter().all(|w| w.handle.is_finished()) {
+            while scheduler.shards().iter().any(|sh| sh.iteration < target) {
                 if Instant::now() > grace {
-                    for w in &live {
-                        self.net.kill(w.node);
-                    }
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                while let Some(env) = self
+                    .net
+                    .recv_timeout(self.scheduler_node, Duration::from_millis(5))
+                {
+                    if let Payload::Progress {
+                        shard,
+                        iteration,
+                        tokens,
+                    } = env.payload
+                    {
+                        scheduler.record(shard, env.from, iteration, tokens);
+                    }
+                }
             }
-        }
-        for w in live {
-            if let Ok(out) = w.handle.join() {
-                if let Some(state) = out.state {
-                    debug_assert_ne!(out.exit, WorkerExit::Killed);
-                    self.states[w.shard] = Some(state);
+            self.refresh_states_from_disk();
+            self.parked = live;
+        } else {
+            // Grace period for Terminated workers to reach a sync point
+            // and hand their state back; anything still running past it
+            // is killed (its shard keeps the previous segment's state).
+            if !deadline_hit {
+                let grace = Instant::now() + Duration::from_secs(15);
+                while !live.iter().all(|w| w.handle.is_finished()) {
+                    if Instant::now() > grace {
+                        for w in &live {
+                            self.net.kill(w.node);
+                        }
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            for w in live {
+                if let Ok(out) = w.handle.join() {
+                    if let Some(state) = out.state {
+                        debug_assert_ne!(out.exit, WorkerExit::Killed);
+                        self.states[w.shard] = Some(state);
+                    }
                 }
             }
         }
@@ -927,6 +1183,13 @@ impl TrainSession {
             + self.cfg.cluster.net.jitter * 4
             + Duration::from_millis(2);
         std::thread::sleep(settle);
+
+        // Parked workers never hand state back through a join — pull
+        // their freshest barrier-free disk snapshots (they re-snapshot
+        // whenever they absorb documents while parked).
+        if !self.parked.is_empty() {
+            self.refresh_states_from_disk();
+        }
 
         // Client states (barrier-free: whatever each shard last reached).
         for state in self.states.iter().flatten() {
@@ -1055,6 +1318,7 @@ impl TrainSession {
     /// snapshot dir); the auto-created temp snapshot dir is removed
     /// *unless* a [`checkpoint`](Self::checkpoint) was written into it.
     pub fn finish(mut self) -> Result<TrainReport> {
+        self.retire_parked();
         let report = self.report();
         if let Some(group) = self.group.take() {
             group.shutdown();
@@ -1070,8 +1334,13 @@ impl TrainSession {
 
 impl Drop for TrainSession {
     fn drop(&mut self) {
-        // A dropped (not finished) session still stops its server threads;
-        // the auto temp dir is left behind for post-mortems.
+        // A dropped (not finished) session still stops its server threads
+        // and parked worker threads; the auto temp dir is left behind
+        // for post-mortems. Parked nodes are killed (not joined — a Drop
+        // must not block): the park loop polls `is_dead` and exits.
+        for w in &self.parked {
+            self.net.kill(w.node);
+        }
         if let Some(group) = self.group.take() {
             group.shutdown();
         }
@@ -1204,5 +1473,62 @@ mod tests {
         assert!(obs.iters.load(Ordering::Relaxed) >= 4);
         assert!(total.per_iteration.len() >= seg2.report.per_iteration.len());
         assert!(total.final_perplexity().is_finite());
+    }
+
+    /// Online mode: workers park at the target, the next segment raises
+    /// it in place, and documents ingested between segments are absorbed
+    /// mid-run — counters and segment boundaries stay coherent across
+    /// the park boundary.
+    #[test]
+    fn parked_workers_absorb_ingested_docs_across_segments() {
+        use crate::corpus::doc::Document;
+        let mut cfg = tiny_cfg();
+        cfg.cluster.snapshot_every = Some(Duration::from_millis(50));
+        let src = SyntheticSource::new(cfg.corpus.clone());
+        let mut s = TrainSession::start(cfg, &src).unwrap();
+        s.set_park_workers(true).unwrap();
+        let base = s.docs_ingested();
+        assert_eq!(base, s.docs_absorbed());
+        let seg1 = s.run_online(2).unwrap();
+        assert_eq!((seg1.start_iteration, seg1.end_iteration), (0, 2));
+
+        let vocab = s.vocab() as u32;
+        let docs: Vec<Document> = (0..6u32)
+            .map(|i| Document {
+                tokens: vec![i % vocab, (i + 1) % vocab, (i + 2) % vocab],
+            })
+            .collect();
+        assert_eq!(s.ingest(&docs).unwrap(), 6);
+        assert_eq!(s.docs_ingested(), base + 6);
+
+        let seg2 = s.run_online(2).unwrap();
+        assert_eq!(
+            (seg2.start_iteration, seg2.end_iteration),
+            (2, 4),
+            "the raised target continues the same iteration line"
+        );
+        assert_eq!(s.docs_absorbed(), base + 6, "workers drained the feeds");
+        assert!(seg2.report.final_perplexity().is_finite());
+
+        // An out-of-vocabulary ingest is refused before any mutation.
+        let bad = vec![Document {
+            tokens: vec![vocab + 7],
+        }];
+        assert!(s.ingest(&bad).is_err());
+        assert_eq!(s.docs_ingested(), base + 6);
+        let _ = s.finish().unwrap();
+    }
+
+    /// Park mode without a snapshot directory is refused: the session
+    /// reads parked workers' segment-end state from disk.
+    #[test]
+    fn park_mode_requires_a_snapshot_dir() {
+        let cfg = tiny_cfg();
+        assert!(cfg.cluster.snapshot_every.is_none());
+        let src = SyntheticSource::new(cfg.corpus.clone());
+        let mut s = TrainSession::start(cfg, &src).unwrap();
+        let err = format!("{:#}", s.set_park_workers(true).unwrap_err());
+        assert!(err.contains("snapshot"), "{err}");
+        let _ = s.finish().unwrap();
     }
 }

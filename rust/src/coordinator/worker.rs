@@ -5,10 +5,22 @@
 //! iteration, evaluate perplexity on the paper's cadence, snapshot, and
 //! obey the scheduler's control messages.
 //!
-//! Workers are *segment-scoped*: a [`TrainSession`](super::TrainSession)
-//! spawns them with a target iteration, and a cleanly exiting worker
-//! hands its final sampler state back ([`WorkerOutcome`]) so the next
-//! segment — or a checkpoint — continues exactly where it stopped.
+//! Workers are *segment-scoped* by default: a
+//! [`TrainSession`](super::TrainSession) spawns them with a target
+//! iteration, and a cleanly exiting worker hands its final sampler state
+//! back ([`WorkerOutcome`]) so the next segment — or a checkpoint —
+//! continues exactly where it stopped.
+//!
+//! In **park mode** (the online loop) a worker that reaches its target
+//! does not exit: it flushes, writes its barrier-free disk snapshot, and
+//! idles on the control channel until the session raises the target
+//! ([`Control::RaiseTarget`]) — amortizing the respawn + sampler rebuild
+//! over the online loop's many short segments. Parked or running, a
+//! worker with a [`DocFeed`](super::feed::DocFeed) absorbs freshly
+//! ingested documents at iteration boundaries (lazy sharding): it
+//! self-snapshots, rebuilds over old+new docs, restores the pulled
+//! replica rows, and re-logs exactly the new documents' counts as
+//! pushable deltas ([`ModelSampler::announce_appended`]).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -101,6 +113,16 @@ pub struct WorkerCtx {
     /// Per-segment RNG salt: a resumed run must not replay segment 1's
     /// random streams.
     pub rng_salt: u64,
+    /// Park at the target instead of exiting: idle on the control
+    /// channel until [`Control::RaiseTarget`] raises it (or Terminate /
+    /// Kill arrives). The session reads segment-end state from the disk
+    /// snapshots while a worker is parked, so park mode requires a
+    /// `snapshot_dir`.
+    pub park: bool,
+    /// Lazy-sharding document feed: freshly ingested documents this
+    /// worker absorbs at iteration boundaries (and while parked).
+    /// `None` = static shard.
+    pub feed: Option<Arc<super::feed::DocFeed>>,
 }
 
 /// Spawn a worker thread.
@@ -135,13 +157,113 @@ fn outcome(
     WorkerOutcome { exit, state }
 }
 
+/// Barrier-free client snapshot (§5.4): overwrite this shard's disk
+/// snapshot with the sampler's current state.
+fn write_disk_snapshot(sampler: &ModelSampler, ctx: &WorkerCtx, iteration: u64) {
+    if let Some(dir) = &ctx.snapshot_dir {
+        let (z, r) = sampler.assignments();
+        let snap = ClientSnapshot {
+            shard: ctx.shard.id,
+            iteration,
+            z: z.to_vec(),
+            r: r.to_vec(),
+            replicas: sampler.export_replicas(),
+        };
+        let path = dir.join(format!("client_shard{}.snap", ctx.shard.id));
+        let _ = snapshot::write_atomic(&path, &snapshot::encode_client(&snap));
+    }
+}
+
+/// The per-matrix sorted row keysets of an exported replica set — the
+/// `have` argument [`ModelSampler::announce_appended`] consumes.
+fn exported_keys(
+    replicas: &[(u8, Vec<(u32, crate::ps::msg::RowData)>)],
+) -> Vec<(u8, Vec<u32>)> {
+    replicas
+        .iter()
+        .map(|(m, rows)| {
+            let mut ws: Vec<u32> = rows.iter().map(|&(w, _)| w).collect();
+            ws.sort_unstable();
+            (*m, ws)
+        })
+        .collect()
+}
+
+/// Drain the feed and fold the new documents into the live sampler
+/// (lazy sharding). Returns the number of documents absorbed.
+///
+/// The sequence is the appended-document announce: flush outstanding
+/// deltas (the rebuild below would discard the log), self-snapshot the
+/// assignments and pulled replica rows, rebuild over old+new documents
+/// (old `z` survives verbatim, new docs get fresh init), drain the
+/// rebuild's init log, restore the pulled rows, then re-log exactly the
+/// new documents' counts ([`ModelSampler::announce_appended`]) and push
+/// them — so the servers see each ingested token exactly once and the
+/// serving tier's freshness doesn't wait for the next sync point.
+#[allow(clippy::too_many_arguments)]
+fn absorb_feed(
+    sampler: &mut ModelSampler,
+    client: &mut PsClient,
+    ctx: &WorkerCtx,
+    seen: &mut [bool],
+    shard_words: &mut Vec<u32>,
+    iteration: u64,
+    rng: &mut Rng,
+) -> usize {
+    let Some(feed) = &ctx.feed else { return 0 };
+    if feed.pending_docs() == 0 {
+        return 0;
+    }
+    for (m, replica) in sampler.matrices() {
+        client.push_matrix(m, replica);
+    }
+    let new_docs = feed.take_pending();
+    if new_docs.is_empty() {
+        return 0;
+    }
+    let absorbed = new_docs.len();
+    let (z, r) = sampler.assignments();
+    let snap = ClientSnapshot {
+        shard: ctx.shard.id,
+        iteration,
+        z: z.to_vec(),
+        r: r.to_vec(),
+        replicas: sampler.export_replicas(),
+    };
+    let mut docs = sampler.docs().to_vec();
+    for d in &new_docs {
+        for &w in &d.tokens {
+            if let Some(s) = seen.get_mut(w as usize) {
+                if !*s {
+                    *s = true;
+                    shard_words.push(w);
+                }
+            }
+        }
+    }
+    docs.extend(new_docs);
+    shard_words.sort_unstable();
+    *sampler = ModelSampler::build(&ctx.cfg, docs, ctx.vocab, Some(&snap), rng);
+    for (_m, replica) in sampler.matrices() {
+        let _ = replica.drain_deltas();
+    }
+    for (m, rows) in &snap.replicas {
+        sampler.apply_rows(*m, rows);
+    }
+    sampler.announce_appended(snap.z.len(), &exported_keys(&snap.replicas));
+    for (m, replica) in sampler.matrices() {
+        client.push_matrix(m, replica);
+    }
+    absorbed
+}
+
 fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
     let cfg = &*ctx.cfg;
     let mut rng = Rng::new(cfg.seed)
         .derive(1000 + ctx.node as u64)
         .derive(ctx.rng_salt);
     let start_iteration = ctx.resume.as_ref().map(|s| s.iteration).unwrap_or(0);
-    let target = ctx.target_iter;
+    let mut target = ctx.target_iter;
     let mut sampler = ModelSampler::build(
         cfg,
         ctx.shard.docs.clone(),
@@ -160,21 +282,18 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
     );
 
     // The words this shard touches (plus the tables row for HDP) — the
-    // pull set.
-    let mut shard_words: Vec<u32> = {
-        let mut seen = vec![false; ctx.vocab];
-        for d in &ctx.shard.docs {
-            for &w in &d.tokens {
-                seen[w as usize] = true;
-            }
+    // pull set. `seen` is kept: absorbed documents extend it in place.
+    let mut seen = vec![false; ctx.vocab];
+    for d in &ctx.shard.docs {
+        for &w in &d.tokens {
+            seen[w as usize] = true;
         }
-        (0..ctx.vocab as u32)
-            .filter(|&w| seen[w as usize])
-            .collect()
-    };
-    shard_words.sort_unstable();
+    }
+    let mut shard_words: Vec<u32> = (0..ctx.vocab as u32)
+        .filter(|&w| seen[w as usize])
+        .collect();
 
-    let n_docs = ctx.shard.docs.len();
+    let mut n_docs = ctx.shard.docs.len();
     let mut iteration = start_iteration;
     if ctx.announce_init {
         // Push the (re)initialization deltas so global counts include us.
@@ -200,11 +319,106 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
         for (m, rows) in &snap.replicas {
             sampler.apply_rows(*m, rows);
         }
+        // Documents appended to the shard since that snapshot was taken
+        // (online ingest between segments): their counts are neither on
+        // the servers nor in the restored rows — announce exactly them.
+        // The announce path above already pushed *every* document's init
+        // deltas, so this applies to resumes only.
+        if !ctx.announce_init && snap.z.len() < sampler.docs().len() {
+            sampler.announce_appended(snap.z.len(), &exported_keys(&snap.replicas));
+            for (m, replica) in sampler.matrices() {
+                client.push_matrix(m, replica);
+            }
+        }
     }
 
-    while iteration < target {
+    loop {
         if ctx.net.is_dead(ctx.node) {
             return outcome(WorkerExit::Killed, &sampler, ctx.shard.id, iteration);
+        }
+        // Iteration boundary: absorb freshly ingested documents.
+        if absorb_feed(
+            &mut sampler,
+            &mut client,
+            &ctx,
+            &mut seen,
+            &mut shard_words,
+            iteration,
+            &mut rng,
+        ) > 0
+        {
+            n_docs = sampler.docs().len();
+        }
+        if iteration >= target {
+            if !ctx.park {
+                break;
+            }
+            // Park at the target (§5.4 online): flush, leave the disk
+            // snapshot the session reads segment-end state from, then
+            // idle on the control channel. Progress re-announces double
+            // as liveness beats *and* cover a final report the lossy
+            // transport dropped; a stale raise (target ≤ completed) is
+            // ignored.
+            for (m, replica) in sampler.matrices() {
+                client.push_matrix(m, replica);
+            }
+            write_disk_snapshot(&sampler, &ctx, iteration);
+            let mut raised = false;
+            let mut last_report = Instant::now() - Duration::from_secs(1);
+            while !raised {
+                if ctx.net.is_dead(ctx.node) {
+                    return outcome(WorkerExit::Killed, &sampler, ctx.shard.id, iteration);
+                }
+                if absorb_feed(
+                    &mut sampler,
+                    &mut client,
+                    &ctx,
+                    &mut seen,
+                    &mut shard_words,
+                    iteration,
+                    &mut rng,
+                ) > 0
+                {
+                    n_docs = sampler.docs().len();
+                    write_disk_snapshot(&sampler, &ctx, iteration);
+                }
+                for ev in client.drain_responses(Duration::from_millis(2)) {
+                    match ev {
+                        ClientEvent::Rows(m, rows) => sampler.apply_rows(m, &rows),
+                        ClientEvent::Control(Control::Kill) => {
+                            return outcome(
+                                WorkerExit::Killed,
+                                &sampler,
+                                ctx.shard.id,
+                                iteration,
+                            )
+                        }
+                        ClientEvent::Control(Control::Terminate) => {
+                            return outcome(
+                                WorkerExit::Terminated,
+                                &sampler,
+                                ctx.shard.id,
+                                iteration,
+                            )
+                        }
+                        ClientEvent::Control(Control::RaiseTarget(t)) => {
+                            if t > iteration {
+                                target = target.max(t);
+                                raised = true;
+                            }
+                        }
+                        ClientEvent::Control(Control::Reroute) => {}
+                    }
+                }
+                if last_report.elapsed() >= Duration::from_millis(25) {
+                    client.report_progress(ctx.scheduler, ctx.shard.id, iteration, 0);
+                    last_report = Instant::now();
+                }
+                if !raised {
+                    std::thread::sleep(Duration::from_millis(3));
+                }
+            }
+            continue;
         }
         let iter_watch = Instant::now();
         let mut sample_watch = Stopwatch::new();
@@ -246,6 +460,9 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
                                 iteration,
                             )
                         }
+                        ClientEvent::Control(Control::RaiseTarget(t)) => {
+                            target = target.max(t);
+                        }
                         ClientEvent::Control(Control::Reroute) => {}
                     }
                 }
@@ -280,6 +497,9 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
                 }
                 ClientEvent::Control(Control::Terminate) => {
                     return outcome(WorkerExit::Terminated, &sampler, ctx.shard.id, iteration)
+                }
+                ClientEvent::Control(Control::RaiseTarget(t)) => {
+                    target = target.max(t);
                 }
                 ClientEvent::Control(Control::Reroute) => {}
             }
@@ -338,18 +558,7 @@ fn run_worker(ctx: WorkerCtx) -> WorkerOutcome {
         client.report_progress(ctx.scheduler, ctx.shard.id, iteration, tokens);
 
         // Barrier-free client snapshot (§5.4).
-        if let Some(dir) = &ctx.snapshot_dir {
-            let (z, r) = sampler.assignments();
-            let snap = ClientSnapshot {
-                shard: ctx.shard.id,
-                iteration,
-                z: z.to_vec(),
-                r: r.to_vec(),
-                replicas: sampler.export_replicas(),
-            };
-            let path = dir.join(format!("client_shard{}.snap", ctx.shard.id));
-            let _ = snapshot::write_atomic(&path, &snapshot::encode_client(&snap));
-        }
+        write_disk_snapshot(&sampler, &ctx, iteration);
     }
 
     // Flush remaining deltas before leaving.

@@ -16,15 +16,38 @@
 //! Corpus *acquisition* is pluggable ([`source::CorpusSource`]): the
 //! synthetic generator is one source among others — a docword file on
 //! disk ([`source::FileSource`]) trains through the identical path.
+//!
+//! ## Streaming: the chunk contract
+//!
+//! Corpora that outgrow RAM stream instead of loading: a
+//! [`stream::CorpusStream`] (concretely [`stream::StreamingSource`] over
+//! a docword file) hands out documents in bounded chunks of at most
+//! `chunk_docs` complete documents per call, retaining only the single
+//! document currently being assembled across calls. Chunks **partition**
+//! the corpus: concatenated in order they equal exactly what
+//! [`read_docword`] returns — same documents, same order, same bags,
+//! empty documents dropped — even when a chunk boundary falls inside one
+//! document's triple run. Both readers share one parser and fail with
+//! the same named [`source::DocwordError`]s (path + line number), and
+//! both enforce doc-id monotonicity — the property that lets the
+//! streaming reader seal a document the moment its id stops appearing.
+//! Lazy sharding assigns streamed document *i* to shard `i % n_shards`,
+//! which is precisely [`ShardSet::partition`]'s round-robin rule, so a
+//! streamed corpus shards identically to a loaded one.
 
 pub mod doc;
 pub mod generator;
 pub mod shard;
 pub mod source;
+pub mod stream;
 pub mod vocab;
 
 pub use doc::{Corpus, Document};
 pub use generator::{CorpusConfig, GenerativeModel};
 pub use shard::{Shard, ShardSet};
-pub use source::{read_docword, write_docword, CorpusSource, FileSource, SyntheticSource};
+pub use source::{
+    read_docword, write_docword, CorpusSource, DocwordError, DocwordHeader, FileSource,
+    SyntheticSource,
+};
+pub use stream::{CorpusStream, StreamingSource};
 pub use vocab::Vocabulary;

@@ -34,6 +34,269 @@ use super::doc::{Corpus, Document};
 use super::generator::CorpusConfig;
 use crate::Result;
 
+/// A named, hard docword parse failure. Every variant carries the file
+/// path, and every body-level variant the 1-based line number, so a bad
+/// multi-gigabyte corpus file is diagnosable without bisecting it by
+/// hand. Produced by [`read_docword`], [`FileSource::load`], and the
+/// streaming reader ([`StreamingSource`](super::stream::StreamingSource)),
+/// which all parse through the same helpers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DocwordError {
+    /// The file ended before the three-line `D / W / NNZ` header did.
+    TruncatedHeader { path: PathBuf, field: &'static str },
+    /// A header line that is not a positive integer.
+    BadHeader {
+        path: PathBuf,
+        line: usize,
+        field: &'static str,
+        text: String,
+    },
+    /// The header declares zero documents or an empty vocabulary.
+    EmptyDeclaration { path: PathBuf, what: &'static str },
+    /// A body line that is not three whitespace-separated integers.
+    BadTriple {
+        path: PathBuf,
+        line: usize,
+        text: String,
+    },
+    /// A doc id outside `1..=D`.
+    DocIdRange {
+        path: PathBuf,
+        line: usize,
+        doc: usize,
+        n_docs: usize,
+    },
+    /// A word id outside `1..=W`.
+    WordIdRange {
+        path: PathBuf,
+        line: usize,
+        word: usize,
+        vocab: usize,
+    },
+    /// A doc id smaller than the one before it. The UCI layout sorts
+    /// triples by document; monotonicity is also what lets the streaming
+    /// reader emit a document the moment its id stops appearing.
+    NonMonotonicDoc {
+        path: PathBuf,
+        line: usize,
+        doc: usize,
+        prev: usize,
+    },
+    /// The body carried a different number of triples than `NNZ` declared.
+    NnzMismatch {
+        path: PathBuf,
+        declared: usize,
+        seen: usize,
+    },
+    /// Every declared document was empty.
+    NoTokens { path: PathBuf },
+    /// An underlying I/O failure (open or read).
+    Io {
+        path: PathBuf,
+        line: Option<usize>,
+        msg: String,
+    },
+}
+
+impl std::fmt::Display for DocwordError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DocwordError::TruncatedHeader { path, field } => write!(
+                f,
+                "docword file {} truncated before the {field} header",
+                path.display()
+            ),
+            DocwordError::BadHeader {
+                path,
+                line,
+                field,
+                text,
+            } => write!(
+                f,
+                "bad {field} header {text:?} at {}:{line}",
+                path.display()
+            ),
+            DocwordError::EmptyDeclaration { path, what } => {
+                write!(f, "docword file {} declares {what}", path.display())
+            }
+            DocwordError::BadTriple { path, line, text } => {
+                write!(f, "bad docword triple {text:?} at {}:{line}", path.display())
+            }
+            DocwordError::DocIdRange {
+                path,
+                line,
+                doc,
+                n_docs,
+            } => write!(
+                f,
+                "doc id {doc} outside 1..={n_docs} at {}:{line}",
+                path.display()
+            ),
+            DocwordError::WordIdRange {
+                path,
+                line,
+                word,
+                vocab,
+            } => write!(
+                f,
+                "word id {word} outside 1..={vocab} at {}:{line}",
+                path.display()
+            ),
+            DocwordError::NonMonotonicDoc {
+                path,
+                line,
+                doc,
+                prev,
+            } => write!(
+                f,
+                "non-monotonic doc id {doc} after {prev} at {}:{line} \
+                 (docword triples must be sorted by document)",
+                path.display()
+            ),
+            DocwordError::NnzMismatch {
+                path,
+                declared,
+                seen,
+            } => write!(
+                f,
+                "docword file {} declares {declared} entries but carries {seen}",
+                path.display()
+            ),
+            DocwordError::NoTokens { path } => {
+                write!(f, "docword file {} contains no tokens", path.display())
+            }
+            DocwordError::Io { path, line, msg } => match line {
+                Some(line) => {
+                    write!(f, "read error at {}:{line}: {msg}", path.display())
+                }
+                None => write!(f, "cannot read docword file {}: {msg}", path.display()),
+            },
+        }
+    }
+}
+
+impl std::error::Error for DocwordError {}
+
+/// The three-line `D / W / NNZ` docword header.
+#[derive(Clone, Copy, Debug)]
+pub struct DocwordHeader {
+    /// Declared document count (`D`).
+    pub n_docs: usize,
+    /// Declared vocabulary size (`W`; word ids are `1..=W`).
+    pub vocab: usize,
+    /// Declared triple count (`NNZ`).
+    pub nnz: usize,
+}
+
+/// Parse the header from an already-opened line iterator, skipping
+/// comments and blank lines. Shared by the whole-file and streaming
+/// readers so both fail with the same named errors.
+pub(crate) fn parse_header(
+    path: &Path,
+    lines: &mut std::iter::Enumerate<std::io::Lines<std::io::BufReader<std::fs::File>>>,
+) -> Result<DocwordHeader> {
+    let mut field = |name: &'static str| -> Result<usize> {
+        loop {
+            let (i, line) = lines.next().ok_or_else(|| DocwordError::TruncatedHeader {
+                path: path.to_path_buf(),
+                field: name,
+            })?;
+            let line = line.map_err(|e| DocwordError::Io {
+                path: path.to_path_buf(),
+                line: Some(i + 1),
+                msg: e.to_string(),
+            })?;
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            return line.parse().map_err(|_| {
+                DocwordError::BadHeader {
+                    path: path.to_path_buf(),
+                    line: i + 1,
+                    field: name,
+                    text: line.to_string(),
+                }
+                .into()
+            });
+        }
+    };
+    let n_docs = field("D")?;
+    let vocab = field("W")?;
+    let nnz = field("NNZ")?;
+    if n_docs == 0 {
+        return Err(DocwordError::EmptyDeclaration {
+            path: path.to_path_buf(),
+            what: "zero documents",
+        }
+        .into());
+    }
+    if vocab == 0 {
+        return Err(DocwordError::EmptyDeclaration {
+            path: path.to_path_buf(),
+            what: "an empty vocabulary",
+        }
+        .into());
+    }
+    Ok(DocwordHeader { n_docs, vocab, nnz })
+}
+
+/// Parse one body line into a `(doc, word, count)` triple — `Ok(None)`
+/// for comments and blank lines — and validate ids against the header
+/// and the previous doc id (monotonicity). 1-based ids, as in the file.
+pub(crate) fn parse_triple(
+    path: &Path,
+    lineno: usize,
+    raw: &str,
+    header: &DocwordHeader,
+    last_doc: usize,
+) -> Result<Option<(usize, usize, usize)>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let bad = || DocwordError::BadTriple {
+        path: path.to_path_buf(),
+        line: lineno,
+        text: line.to_string(),
+    };
+    let mut it = line.split_whitespace();
+    let d: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+    let w: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+    let c: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+    if it.next().is_some() {
+        return Err(bad().into());
+    }
+    if !(1..=header.n_docs).contains(&d) {
+        return Err(DocwordError::DocIdRange {
+            path: path.to_path_buf(),
+            line: lineno,
+            doc: d,
+            n_docs: header.n_docs,
+        }
+        .into());
+    }
+    if !(1..=header.vocab).contains(&w) {
+        return Err(DocwordError::WordIdRange {
+            path: path.to_path_buf(),
+            line: lineno,
+            word: w,
+            vocab: header.vocab,
+        }
+        .into());
+    }
+    if d < last_doc {
+        return Err(DocwordError::NonMonotonicDoc {
+            path: path.to_path_buf(),
+            line: lineno,
+            doc: d,
+            prev: last_doc,
+        }
+        .into());
+    }
+    Ok(Some((d, w, c)))
+}
+
 /// Where a training session's corpus comes from.
 pub trait CorpusSource {
     /// Load (or synthesize) the corpus. Called once at session start; a
@@ -146,73 +409,57 @@ impl CorpusSource for FileSource {
 /// Read a docword file into a [`Corpus`]. Word ids are 1-based in the
 /// file and 0-based in the corpus; a word's `c` occurrences expand into
 /// `c` tokens (bag-of-words — the samplers never observe token order).
+/// Malformed files fail with a named [`DocwordError`] carrying the path
+/// and line number.
 pub fn read_docword(path: &Path) -> Result<Corpus> {
-    let file = std::fs::File::open(path)
-        .map_err(|e| anyhow::anyhow!("cannot read docword file {}: {e}", path.display()))?;
+    let file = std::fs::File::open(path).map_err(|e| DocwordError::Io {
+        path: path.to_path_buf(),
+        line: None,
+        msg: e.to_string(),
+    })?;
     let mut lines = std::io::BufReader::new(file).lines().enumerate();
-    let mut header = |name: &str| -> Result<usize> {
-        loop {
-            let (i, line) = lines
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("docword file truncated before {name}"))?;
-            let line = line.map_err(|e| anyhow::anyhow!("read error at line {}: {e}", i + 1))?;
-            let line = line.split('#').next().unwrap_or("").trim();
-            if line.is_empty() {
-                continue;
-            }
-            return line
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad {name} header {line:?} at line {}", i + 1));
-        }
-    };
-    let n_docs: usize = header("D")?;
-    let vocab: usize = header("W")?;
-    let nnz: usize = header("NNZ")?;
-    anyhow::ensure!(n_docs > 0, "docword file declares zero documents");
-    anyhow::ensure!(vocab > 0, "docword file declares an empty vocabulary");
+    let header = parse_header(path, &mut lines)?;
 
-    let mut docs: Vec<Document> = (0..n_docs).map(|_| Document::default()).collect();
+    let mut docs: Vec<Document> = (0..header.n_docs).map(|_| Document::default()).collect();
     let mut seen = 0usize;
+    let mut last_doc = 0usize;
     for (i, line) in lines {
-        let line = line.map_err(|e| anyhow::anyhow!("read error at line {}: {e}", i + 1))?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let line = line.map_err(|e| DocwordError::Io {
+            path: path.to_path_buf(),
+            line: Some(i + 1),
+            msg: e.to_string(),
+        })?;
+        let Some((d, w, c)) = parse_triple(path, i + 1, &line, &header, last_doc)? else {
             continue;
-        }
-        let mut it = line.split_whitespace();
-        let bad = || anyhow::anyhow!("bad docword triple {line:?} at line {}", i + 1);
-        let d: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
-        let w: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
-        let c: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(bad)?;
-        anyhow::ensure!(it.next().is_none(), "trailing fields at line {}", i + 1);
-        anyhow::ensure!(
-            (1..=n_docs).contains(&d),
-            "doc id {d} outside 1..={n_docs} at line {}",
-            i + 1
-        );
-        anyhow::ensure!(
-            (1..=vocab).contains(&w),
-            "word id {w} outside 1..={vocab} at line {}",
-            i + 1
-        );
+        };
+        last_doc = d;
         let tokens = &mut docs[d - 1].tokens;
         for _ in 0..c {
             tokens.push((w - 1) as u32);
         }
         seen += 1;
     }
-    anyhow::ensure!(
-        seen == nnz,
-        "docword file declares {nnz} entries but carries {seen}"
-    );
+    if seen != header.nnz {
+        return Err(DocwordError::NnzMismatch {
+            path: path.to_path_buf(),
+            declared: header.nnz,
+            seen,
+        }
+        .into());
+    }
     // Empty documents contribute nothing and would break the Gibbs loop's
     // assumption that every doc has at least one token when evaluating;
     // drop them (the paper's pipeline filters them upstream too).
     docs.retain(|d| !d.is_empty());
-    anyhow::ensure!(!docs.is_empty(), "docword file contains no tokens");
+    if docs.is_empty() {
+        return Err(DocwordError::NoTokens {
+            path: path.to_path_buf(),
+        }
+        .into());
+    }
     Ok(Corpus {
         docs,
-        vocab_size: vocab,
+        vocab_size: header.vocab,
         true_topics: 0,
     })
 }
@@ -383,6 +630,44 @@ mod tests {
         assert_eq!(ok.total_tokens(), 4);
         assert_eq!(ok.docs[0].tokens, vec![1, 1, 1]);
         assert_eq!(ok.docs[1].tokens, vec![4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite: parse failures are named errors carrying the file path
+    /// and the 1-based line number — a bad line in a huge corpus file is
+    /// diagnosable from the message alone.
+    #[test]
+    fn parse_errors_name_the_path_and_line() {
+        let dir = tmpdir("named_errors");
+        let write = |name: &str, text: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, text).unwrap();
+            p
+        };
+        let msg = |p: &PathBuf| format!("{}", read_docword(p).unwrap_err());
+        // Truncated header names the missing field and the file.
+        let p = write("trunc", "3\n10\n");
+        let m = msg(&p);
+        assert!(m.contains("truncated before the NNZ header"), "{m}");
+        assert!(m.contains("trunc"), "{m}");
+        // Bad header names the field and the line.
+        let m = msg(&write("badhdr", "3\nfoo\n1\n1 1 1\n"));
+        assert!(m.contains("bad W header") && m.contains(":2"), "{m}");
+        // Out-of-range word id carries the line number.
+        let m = msg(&write("wrange", "1\n5\n1\n1 9 2\n"));
+        assert!(m.contains("word id 9 outside 1..=5"), "{m}");
+        assert!(m.contains(":4"), "{m}");
+        // Out-of-range doc id likewise.
+        let m = msg(&write("drange", "1\n5\n1\n4 2 2\n"));
+        assert!(m.contains("doc id 4 outside 1..=1") && m.contains(":4"), "{m}");
+        // Non-monotonic doc ids are a hard error (the UCI layout sorts by
+        // document; the streaming reader depends on it).
+        let m = msg(&write("mono", "2\n5\n3\n2 1 1\n1 2 1\n2 3 1\n"));
+        assert!(m.contains("non-monotonic doc id 1 after 2"), "{m}");
+        assert!(m.contains(":5"), "{m}");
+        // NNZ mismatch names both counts.
+        let m = msg(&write("nnz", "1\n5\n3\n1 2 2\n"));
+        assert!(m.contains("declares 3 entries but carries 1"), "{m}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

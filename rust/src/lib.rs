@@ -11,6 +11,20 @@
 //!
 //! ## Layering
 //!
+//! * **Layer 8 ([`pipeline`])** — streaming ingest + online
+//!   train-while-serve: [`pipeline::Pipeline::run`] pulls a corpus
+//!   through a bounded-memory [`corpus::CorpusStream`] in chunks,
+//!   ingests each chunk into a *live* [`coordinator::TrainSession`]
+//!   (park mode: workers idle at their target and resume on a
+//!   target-raise control message; lazy sharding: ingested documents
+//!   reach workers through per-shard [`coordinator::DocFeed`]s), runs
+//!   the decaying sweep schedule of an [`pipeline::OnlinePolicy`]
+//!   (`ρ_t = (τ+t)^{−κ}`, the online-learning step-weight analogue),
+//!   checkpoints on a cadence, and hot-reloads a
+//!   [`serve::ReplicaSet`] over each checkpoint generation under
+//!   continuous query load — emitting a [`pipeline::PipelineReport`]
+//!   time series of ingest rate, serving-generation freshness lag, and
+//!   held-out perplexity.
 //! * **Layer 6 ([`net`])** — the wire front-end: a length-prefixed
 //!   framed protocol ([`net::proto`]: HELLO/INFER/STATS/PING, versioned
 //!   header, explicit error frames) served by a **thread-per-core
@@ -174,7 +188,10 @@
 //! (checkpoint/resume), `snapshot_compat.rs` /
 //! `snapshot_incremental.rs` (the on-disk format matrix and the v4
 //! segment store: byte-proportional re-checkpoints, torn-checkpoint
-//! recovery, diff-reload bit-identity), and `chaos_scenarios.rs`
+//! recovery, diff-reload bit-identity), `online_pipeline.rs` (the
+//! streaming train-while-serve loop end-to-end: bounded chunk buffer,
+//! live reloads under query load, online-vs-offline perplexity
+//! parity), and `chaos_scenarios.rs`
 //! (elastic membership + fault drills). Every chaos scenario derives
 //! its fault schedule from one seed; set the `CHAOS_SEED` environment
 //! variable to replay a failing CI seed locally with one command:
@@ -190,6 +207,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod eval;
 pub mod net;
+pub mod pipeline;
 pub mod projection;
 pub mod ps;
 pub mod runtime;

@@ -23,6 +23,14 @@
 //! hplvm chaos [--seed S] [--replicas R] [--warmup N] [--iterations N]
 //!                            # elastic-membership chaos drill: kill and
 //!                            # resize the live cluster under load
+//! hplvm pipeline [--corpus-file FILE] [--chunk-docs N] [--docs N] [--vocab V]
+//!             [--model NAME] [--topics K] [--clients N] [--replicas R]
+//!             [--checkpoint-dir DIR] [--checkpoint-every B] [--warmup N]
+//!             [--kappa X] [--tau X] [--base-sweeps N] [--seed S]
+//!                            # streaming ingest + online train-while-serve:
+//!                            # bounded chunks through a live session with
+//!                            # cadence checkpoints hot-reloading the
+//!                            # serving tier under query load
 //! hplvm eval-engine          # check PJRT artifacts load and execute
 //! hplvm info                 # print the resolved configuration
 //! ```
@@ -43,7 +51,7 @@ use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: hplvm <train|serve|bench-serve|infer|chaos|eval-engine|info> [options]\n\
+        "usage: hplvm <train|serve|bench-serve|infer|chaos|pipeline|eval-engine|info> [options]\n\
          train options:\n\
            --model NAME          yahoolda | aliaslda | pdp | hdp\n\
            --clients N           client (worker) count\n\
@@ -119,7 +127,30 @@ fn usage() -> ! {
            --replicas R          initial serving replica count (default 2)\n\
            --warmup N            pre-chaos iterations (default 4)\n\
            --iterations N        absolute iteration target of the chaotic\n\
-                                 segment (default 16)"
+                                 segment (default 16)\n\
+         pipeline options:\n\
+           --corpus-file FILE    stream this docword file (UCI bag-of-words\n\
+                                 layout); default: generate a synthetic\n\
+                                 corpus and stream it from a temp file\n\
+           --chunk-docs N        documents per streamed chunk — the\n\
+                                 resident stream-buffer bound (default 200)\n\
+           --docs N              synthetic corpus documents (default 1000)\n\
+           --vocab V             synthetic vocabulary size (default 1000)\n\
+           --model NAME          yahoolda | aliaslda | pdp | hdp\n\
+           --topics K            topic count (default 16)\n\
+           --clients N           client (worker) count (default 2)\n\
+           --replicas R          serving replicas (default 2)\n\
+           --checkpoint-dir DIR  cluster checkpoints + serving reload\n\
+                                 source (default: a temp directory)\n\
+           --checkpoint-every B  checkpoint + reload every B batches\n\
+                                 (default 2)\n\
+           --warmup N            bootstrap-chunk sweeps before serving\n\
+                                 starts (default 4)\n\
+           --kappa X             online decay exponent in (0.5, 1]\n\
+                                 (default 0.7)\n\
+           --tau X               online decay delay ≥ 0 (default 1)\n\
+           --base-sweeps N       sweeps for the first batch (default 4)\n\
+           --seed S              global seed"
     );
     std::process::exit(2)
 }
@@ -448,6 +479,166 @@ fn cmd_chaos(a: ChaosArgs) -> hplvm::Result<()> {
         hplvm::chaos::ChaosHarness::new(cfg, plan, a.replicas, a.warmup, a.target).run()?;
     print!("{}", report.render());
     println!("reproduce with: CHAOS_SEED={} hplvm chaos", report.seed);
+    Ok(())
+}
+
+struct PipelineArgs {
+    corpus_file: Option<std::path::PathBuf>,
+    chunk_docs: usize,
+    docs: usize,
+    vocab: usize,
+    model: ModelKind,
+    topics: usize,
+    clients: usize,
+    replicas: usize,
+    checkpoint_dir: Option<std::path::PathBuf>,
+    checkpoint_every: u64,
+    warmup: u64,
+    kappa: f64,
+    tau: f64,
+    base_sweeps: u64,
+    seed: u64,
+}
+
+fn parse_pipeline_args(args: &[String]) -> PipelineArgs {
+    let mut out = PipelineArgs {
+        corpus_file: None,
+        chunk_docs: 200,
+        docs: 1000,
+        vocab: 1000,
+        model: ModelKind::AliasLda,
+        topics: 16,
+        clients: 2,
+        replicas: 2,
+        checkpoint_dir: None,
+        checkpoint_every: 2,
+        warmup: 4,
+        kappa: 0.7,
+        tau: 1.0,
+        base_sweeps: 4,
+        seed: 42,
+    };
+    let mut it = ArgIter { args, i: 0 };
+    while let Some(arg) = it.next() {
+        match arg {
+            "--corpus-file" => out.corpus_file = Some(it.value("--corpus-file").into()),
+            "--chunk-docs" => {
+                out.chunk_docs = it.value("--chunk-docs").parse().unwrap_or_else(|_| usage())
+            }
+            "--docs" => out.docs = it.value("--docs").parse().unwrap_or_else(|_| usage()),
+            "--vocab" => out.vocab = it.value("--vocab").parse().unwrap_or_else(|_| usage()),
+            "--model" => {
+                let v = it.value("--model");
+                out.model = ModelKind::parse(v).unwrap_or_else(|| usage());
+            }
+            "--topics" => out.topics = it.value("--topics").parse().unwrap_or_else(|_| usage()),
+            "--clients" => {
+                out.clients = it.value("--clients").parse().unwrap_or_else(|_| usage())
+            }
+            "--replicas" => {
+                out.replicas = it.value("--replicas").parse().unwrap_or_else(|_| usage())
+            }
+            "--checkpoint-dir" => {
+                out.checkpoint_dir = Some(it.value("--checkpoint-dir").into())
+            }
+            "--checkpoint-every" => {
+                out.checkpoint_every = it
+                    .value("--checkpoint-every")
+                    .parse()
+                    .unwrap_or_else(|_| usage())
+            }
+            "--warmup" => out.warmup = it.value("--warmup").parse().unwrap_or_else(|_| usage()),
+            "--kappa" => out.kappa = it.value("--kappa").parse().unwrap_or_else(|_| usage()),
+            "--tau" => out.tau = it.value("--tau").parse().unwrap_or_else(|_| usage()),
+            "--base-sweeps" => {
+                out.base_sweeps = it.value("--base-sweeps").parse().unwrap_or_else(|_| usage())
+            }
+            "--seed" => out.seed = it.value("--seed").parse().unwrap_or_else(|_| usage()),
+            "-v" => logging::set_level(Level::Debug),
+            "-q" => logging::set_level(Level::Warn),
+            _ => {
+                eprintln!("unknown option {arg}");
+                usage()
+            }
+        }
+    }
+    if out.chunk_docs == 0 {
+        eprintln!("--chunk-docs must be at least 1");
+        usage()
+    }
+    out
+}
+
+/// `hplvm pipeline`: stream a docword file (or a freshly generated
+/// synthetic corpus spilled to a temp file) through the online
+/// train-while-serve loop and print the [`hplvm::pipeline::PipelineReport`]
+/// time series.
+fn cmd_pipeline(a: PipelineArgs) -> hplvm::Result<()> {
+    use hplvm::corpus::stream::{CorpusStream, StreamingSource};
+    use hplvm::pipeline::{OnlinePolicy, Pipeline, PipelineConfig};
+
+    let tmp = std::env::temp_dir().join(format!("hplvm_pipeline_{}", std::process::id()));
+    let scratch = a.corpus_file.is_none() || a.checkpoint_dir.is_none();
+    if scratch {
+        std::fs::create_dir_all(&tmp)?;
+    }
+    let path = match &a.corpus_file {
+        Some(p) => p.clone(),
+        None => {
+            // No file given: generate the seeded synthetic corpus and
+            // spill it to disk, then stream it back like any other file.
+            let mut gen = hplvm::corpus::generator::CorpusConfig::default();
+            gen.n_docs = a.docs;
+            gen.vocab_size = a.vocab;
+            gen.n_topics = a.topics.min(64);
+            gen.seed = a.seed;
+            let (corpus, _vocab) = gen.generate();
+            let p = tmp.join("docword.pipeline.txt");
+            hplvm::corpus::source::write_docword(&p, &corpus)?;
+            println!(
+                "generated {} synthetic docs (vocab {}) → {}",
+                a.docs,
+                a.vocab,
+                p.display()
+            );
+            p
+        }
+    };
+    let ckpt = a
+        .checkpoint_dir
+        .clone()
+        .unwrap_or_else(|| tmp.join("ckpt"));
+
+    let mut train = TrainConfig::default();
+    train.model = a.model;
+    train.params.topics = a.topics;
+    train.cluster.clients = a.clients;
+    train.seed = a.seed;
+    train.eval_every = 2;
+    // The held-out split comes out of the bootstrap chunk, so it must
+    // fit inside one chunk with room to train on the rest.
+    train.test_docs = (a.chunk_docs / 4).clamp(1, 200);
+
+    let mut cfg = PipelineConfig::new(train, ckpt);
+    cfg.policy = OnlinePolicy::new(a.kappa, a.tau, a.base_sweeps)?;
+    cfg.checkpoint_every_batches = a.checkpoint_every;
+    cfg.replicas = a.replicas;
+    cfg.warmup_sweeps = a.warmup;
+
+    let mut stream = StreamingSource::open(&path, a.chunk_docs)?;
+    println!(
+        "streaming {} (vocab {}) in {}-doc chunks | checkpoint every {} batches → {} replicas",
+        stream.describe(),
+        stream.vocab_size(),
+        a.chunk_docs,
+        a.checkpoint_every,
+        a.replicas,
+    );
+    let report = Pipeline::run(cfg, &mut stream)?;
+    print!("{}", report.render());
+    if scratch {
+        std::fs::remove_dir_all(&tmp).ok();
+    }
     Ok(())
 }
 
@@ -1132,6 +1323,13 @@ fn main() {
             let a = parse_chaos_args(&args[1..]);
             if let Err(e) = cmd_chaos(a) {
                 eprintln!("chaos drill failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "pipeline" => {
+            let a = parse_pipeline_args(&args[1..]);
+            if let Err(e) = cmd_pipeline(a) {
+                eprintln!("pipeline failed: {e:#}");
                 std::process::exit(1);
             }
         }

@@ -1,0 +1,395 @@
+//! The pipeline driver: stream → live session → serving tier.
+//!
+//! [`Pipeline::run`] owns the long-lived loop:
+//!
+//! 1. **Bootstrap** — pull the first chunk off the [`CorpusStream`],
+//!    start a [`TrainSession`] over it (park mode on), and run the
+//!    warm-up sweeps. The stream's header vocabulary sizes the model, so
+//!    later chunks can carry words the bootstrap chunk never showed.
+//! 2. **Serve** — checkpoint the cluster and load a [`ReplicaSet`] over
+//!    the checkpoint directory. A query thread fires fold-in queries on
+//!    a fixed cadence ([`Pacer`]) against the set for the whole run —
+//!    reloads must never drop or block a query.
+//! 3. **Stream** — for each subsequent chunk: ingest it into the live
+//!    session ([`TrainSession::ingest`]), run the sweeps the
+//!    [`OnlinePolicy`] assigns the batch, and on the checkpoint cadence
+//!    write a fresh cluster checkpoint and [`ReplicaSet::reload`] the
+//!    serving tier in place — each reload is a new model generation
+//!    answering queries.
+//!
+//! Only one chunk of the corpus is ever resident in the driver
+//! (`peak_chunk_docs` proves it); the session's shards grow, but the
+//! stream-side buffer stays bounded. Each batch appends a
+//! [`PipelineSample`] to the report: ingest rate, the serving
+//! **freshness lag** (documents ingested but not yet inside the served
+//! generation — the distance between the train and serve tiers), the
+//! live generation number, and the segment's held-out perplexity.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::policy::OnlinePolicy;
+use crate::config::TrainConfig;
+use crate::coordinator::TrainSession;
+use crate::corpus::doc::Corpus;
+use crate::corpus::source::CorpusSource;
+use crate::corpus::stream::CorpusStream;
+use crate::net::Pacer;
+use crate::serve::{InferConfig, ReplicaSet};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// A [`CorpusSource`] over the already-pulled bootstrap chunk — the
+/// adapter that lets [`TrainSession::start`] (which wants a whole
+/// corpus) begin from the first chunk of a stream.
+struct BootstrapSource {
+    corpus: Corpus,
+}
+
+impl CorpusSource for BootstrapSource {
+    fn load(&self) -> Result<Corpus> {
+        Ok(self.corpus.clone())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "streaming bootstrap chunk ({} docs, vocab {})",
+            self.corpus.docs.len(),
+            self.corpus.vocab_size
+        )
+    }
+}
+
+/// Everything [`Pipeline::run`] needs beyond the stream itself.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Cluster + model configuration for the live session. A snapshot
+    /// cadence is forced on (park mode requires disk snapshots) when the
+    /// config doesn't set one.
+    pub train: TrainConfig,
+    /// Sweeps-per-batch schedule.
+    pub policy: OnlinePolicy,
+    /// Directory cluster checkpoints go to — also the directory the
+    /// serving tier loads and reloads from.
+    pub checkpoint_dir: PathBuf,
+    /// Checkpoint + serving reload every this many streamed batches.
+    pub checkpoint_every_batches: u64,
+    /// Serving replicas in the [`ReplicaSet`].
+    pub replicas: usize,
+    /// Cadence of the background query load.
+    pub query_interval: Duration,
+    /// Tokens per synthetic query document.
+    pub query_doc_len: usize,
+    /// Gibbs sweeps over the bootstrap chunk before serving starts.
+    pub warmup_sweeps: u64,
+}
+
+impl PipelineConfig {
+    /// Defaults sized for the in-process loop: checkpoint every 2
+    /// batches, 2 serving replicas, a query every 2 ms.
+    pub fn new(train: TrainConfig, checkpoint_dir: PathBuf) -> PipelineConfig {
+        PipelineConfig {
+            train,
+            policy: OnlinePolicy::default(),
+            checkpoint_dir,
+            checkpoint_every_batches: 2,
+            replicas: 2,
+            query_interval: Duration::from_millis(2),
+            query_doc_len: 16,
+            warmup_sweeps: 4,
+        }
+    }
+}
+
+/// One row of the pipeline's time series — emitted per mini-batch.
+#[derive(Clone, Debug)]
+pub struct PipelineSample {
+    /// 1-based mini-batch index (1 = the bootstrap chunk).
+    pub batch: u64,
+    /// Documents given to the session so far (bootstrap + ingested).
+    pub docs_ingested: u64,
+    /// Documents inside the generation the serving tier currently
+    /// answers with (the session's absorbed count at the last reload).
+    pub docs_servable: u64,
+    /// `docs_ingested − docs_servable`: the model-generation freshness
+    /// lag in documents.
+    pub freshness_lag: u64,
+    /// Serving generation live when the sample was taken.
+    pub generation: u64,
+    /// This batch's ingest throughput (chunk docs / batch wall time,
+    /// sampling included).
+    pub ingest_docs_per_sec: f64,
+    /// Held-out perplexity at the end of the batch's segment.
+    pub perplexity: f64,
+    /// Sweeps the policy assigned this batch.
+    pub sweeps: u64,
+}
+
+/// What a whole [`Pipeline::run`] produced.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// Per-batch time series, bootstrap first, final catch-up row last.
+    pub samples: Vec<PipelineSample>,
+    /// Mini-batches processed (bootstrap included).
+    pub batches: u64,
+    /// Documents pulled off the stream (bootstrap included).
+    pub docs_streamed: u64,
+    /// Largest single chunk the driver ever held — the resident-memory
+    /// bound the streaming claim rests on.
+    pub peak_chunk_docs: usize,
+    /// Queries the background load fired.
+    pub queries_sent: u64,
+    /// Queries that came back with a mixture (must equal
+    /// `queries_sent`: reloads drop nothing).
+    pub queries_answered: u64,
+    /// Distinct serving generations the query thread observed, ascending.
+    pub generations_observed: Vec<u64>,
+    /// Serving reloads performed (initial load included).
+    pub reloads: u64,
+    /// End-to-end wall time.
+    pub wall_secs: f64,
+    /// Held-out perplexity after the final catch-up checkpoint.
+    pub final_perplexity: f64,
+}
+
+impl PipelineReport {
+    /// Freshness lag of the last sample (0 after the final catch-up).
+    pub fn final_lag(&self) -> u64 {
+        self.samples.last().map(|s| s.freshness_lag).unwrap_or(0)
+    }
+
+    /// Largest freshness lag any sample saw.
+    pub fn peak_lag(&self) -> u64 {
+        self.samples.iter().map(|s| s.freshness_lag).max().unwrap_or(0)
+    }
+
+    /// Mean ingest throughput over the streamed batches.
+    pub fn ingest_docs_per_sec(&self) -> f64 {
+        self.docs_streamed as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Human summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pipeline: {} batches, {} docs streamed (peak chunk {} docs)\n",
+            self.batches, self.docs_streamed, self.peak_chunk_docs
+        ));
+        out.push_str(&format!(
+            "ingest {:.0} docs/s | {} reloads, generations {:?}\n",
+            self.ingest_docs_per_sec(),
+            self.reloads,
+            self.generations_observed
+        ));
+        out.push_str(&format!(
+            "queries {}/{} answered | lag peak {} docs, final {} docs\n",
+            self.queries_answered,
+            self.queries_sent,
+            self.peak_lag(),
+            self.final_lag()
+        ));
+        out.push_str(&format!(
+            "final held-out perplexity {:.1} ({:.1}s wall)\n",
+            self.final_perplexity, self.wall_secs
+        ));
+        out.push_str("batch  docs_in  servable  lag  gen  sweeps  docs/s  perplexity\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{:>5}  {:>7}  {:>8}  {:>3}  {:>3}  {:>6}  {:>6.0}  {:>10.1}\n",
+                s.batch,
+                s.docs_ingested,
+                s.docs_servable,
+                s.freshness_lag,
+                s.generation,
+                s.sweeps,
+                s.ingest_docs_per_sec,
+                s.perplexity
+            ));
+        }
+        out
+    }
+}
+
+/// The train-while-serve pipeline. See the module docs for the loop.
+pub struct Pipeline;
+
+impl Pipeline {
+    /// Stream `stream` end-to-end through a live session with a serving
+    /// tier attached, returning the full time series. The stream is
+    /// consumed; the session and serving set are torn down before
+    /// returning.
+    pub fn run(cfg: PipelineConfig, stream: &mut dyn CorpusStream) -> Result<PipelineReport> {
+        anyhow::ensure!(cfg.replicas >= 1, "need at least one serving replica");
+        anyhow::ensure!(
+            cfg.checkpoint_every_batches >= 1,
+            "checkpoint_every_batches must be ≥ 1"
+        );
+        anyhow::ensure!(cfg.query_doc_len >= 1, "query_doc_len must be ≥ 1");
+        let t0 = Instant::now();
+
+        // 1. Bootstrap: first chunk → session.
+        let first = stream.next_chunk()?.ok_or_else(|| {
+            anyhow::anyhow!("stream {} carries no documents", stream.describe())
+        })?;
+        let mut peak_chunk_docs = first.len();
+        let mut docs_streamed = first.len() as u64;
+        anyhow::ensure!(
+            first.len() > cfg.train.test_docs,
+            "bootstrap chunk ({} docs) must exceed the held-out split \
+             ({} docs) — raise chunk_docs or lower test_docs",
+            first.len(),
+            cfg.train.test_docs
+        );
+        let mut train_cfg = cfg.train.clone();
+        if train_cfg.cluster.snapshot_every.is_none() {
+            // Park mode hands segment state back via disk snapshots.
+            train_cfg.cluster.snapshot_every = Some(Duration::from_millis(100));
+        }
+        let boot = BootstrapSource {
+            corpus: Corpus {
+                docs: first,
+                vocab_size: stream.vocab_size(),
+                true_topics: 0,
+            },
+        };
+        let mut session = TrainSession::start(train_cfg, &boot)?;
+        session.set_park_workers(true)?;
+        let mut batch: u64 = 1;
+        let warmup = cfg.warmup_sweeps.max(1);
+        let boot_start = Instant::now();
+        let boot_seg = session.run_online(warmup)?;
+
+        // 2. Serve: checkpoint and attach the replica set + query load.
+        session.checkpoint(&cfg.checkpoint_dir)?;
+        let set = ReplicaSet::load_dir(&cfg.checkpoint_dir, cfg.replicas)?;
+        let mut reloads: u64 = 1;
+        let mut docs_servable = session.docs_absorbed();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let q_sent = Arc::new(AtomicU64::new(0));
+        let q_answered = Arc::new(AtomicU64::new(0));
+        let gens_seen = Arc::new(Mutex::new(BTreeSet::new()));
+        let query_thread = {
+            let set = set.clone();
+            let stop = stop.clone();
+            let q_sent = q_sent.clone();
+            let q_answered = q_answered.clone();
+            let gens_seen = gens_seen.clone();
+            let vocab = session.vocab();
+            let doc_len = cfg.query_doc_len;
+            let interval = cfg.query_interval;
+            let seed = cfg.train.seed ^ 0x5E12_FE;
+            std::thread::Builder::new()
+                .name("pipeline-query".into())
+                .spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    let icfg = InferConfig {
+                        burnin: 2,
+                        samples: 1,
+                        mh_steps: 2,
+                    };
+                    let mut pacer = Pacer::new(Instant::now(), interval);
+                    while !stop.load(Ordering::Relaxed) {
+                        pacer.wait();
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let tokens: Vec<u32> =
+                            (0..doc_len).map(|_| rng.below(vocab) as u32).collect();
+                        q_sent.fetch_add(1, Ordering::Relaxed);
+                        let res = set.infer(&tokens, &icfg, &mut rng);
+                        if !res.theta.is_empty() {
+                            q_answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        gens_seen.lock().unwrap().insert(set.generation());
+                    }
+                })
+                .expect("spawn query thread")
+        };
+
+        let mut samples = vec![PipelineSample {
+            batch,
+            docs_ingested: session.docs_ingested(),
+            docs_servable,
+            freshness_lag: session.docs_ingested().saturating_sub(docs_servable),
+            generation: set.generation(),
+            ingest_docs_per_sec: docs_streamed as f64
+                / boot_start.elapsed().as_secs_f64().max(1e-9),
+            perplexity: boot_seg.report.final_perplexity(),
+            sweeps: warmup,
+        }];
+
+        // 3. Stream: ingest → online sweeps → cadence checkpoint/reload.
+        let mut streamed_batches: u64 = 0;
+        let mut final_perplexity = boot_seg.report.final_perplexity();
+        while let Some(chunk) = stream.next_chunk()? {
+            batch += 1;
+            streamed_batches += 1;
+            peak_chunk_docs = peak_chunk_docs.max(chunk.len());
+            docs_streamed += chunk.len() as u64;
+            let batch_start = Instant::now();
+            session.ingest(&chunk)?;
+            let sweeps = cfg.policy.sweeps_for(batch);
+            let seg = session.run_online(sweeps)?;
+            final_perplexity = seg.report.final_perplexity();
+            if streamed_batches % cfg.checkpoint_every_batches == 0 {
+                session.checkpoint(&cfg.checkpoint_dir)?;
+                set.reload(&cfg.checkpoint_dir)?;
+                reloads += 1;
+                docs_servable = session.docs_absorbed();
+            }
+            let ingested = session.docs_ingested();
+            samples.push(PipelineSample {
+                batch,
+                docs_ingested: ingested,
+                docs_servable,
+                freshness_lag: ingested.saturating_sub(docs_servable),
+                generation: set.generation(),
+                ingest_docs_per_sec: chunk.len() as f64
+                    / batch_start.elapsed().as_secs_f64().max(1e-9),
+                perplexity: final_perplexity,
+                sweeps,
+            });
+        }
+
+        // Final catch-up: everything ingested becomes servable.
+        session.checkpoint(&cfg.checkpoint_dir)?;
+        set.reload(&cfg.checkpoint_dir)?;
+        reloads += 1;
+        docs_servable = session.docs_absorbed();
+        let ingested = session.docs_ingested();
+        samples.push(PipelineSample {
+            batch,
+            docs_ingested: ingested,
+            docs_servable,
+            freshness_lag: ingested.saturating_sub(docs_servable),
+            generation: set.generation(),
+            ingest_docs_per_sec: 0.0,
+            perplexity: final_perplexity,
+            sweeps: 0,
+        });
+
+        // Tear down: stop the query load, then the cluster.
+        stop.store(true, Ordering::Relaxed);
+        let _ = query_thread.join();
+        let _ = session.finish()?;
+
+        let generations_observed: Vec<u64> =
+            gens_seen.lock().unwrap().iter().copied().collect();
+        Ok(PipelineReport {
+            samples,
+            batches: batch,
+            docs_streamed,
+            peak_chunk_docs,
+            queries_sent: q_sent.load(Ordering::Relaxed),
+            queries_answered: q_answered.load(Ordering::Relaxed),
+            generations_observed,
+            reloads,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            final_perplexity,
+        })
+    }
+}

@@ -1,0 +1,35 @@
+//! Streaming ingest + online train-while-serve (Layer 8).
+//!
+//! The paper's production setting is not "load a corpus, train, stop":
+//! documents arrive continuously, the model trains forever, and the
+//! serving tier answers queries against snapshots that trail training by
+//! a bounded, shrinking lag. This tier composes the subsystems below it
+//! into that long-lived loop:
+//!
+//! * the **streaming corpus** layer ([`crate::corpus::stream`]) reads
+//!   docword files in bounded chunks — constant stream-side resident
+//!   memory no matter the corpus size;
+//! * the **online session** ([`crate::coordinator::TrainSession`] in
+//!   park mode) ingests each chunk into live workers via lazy sharding
+//!   ([`crate::coordinator::DocFeed`]) and raises parked workers'
+//!   targets instead of respawning threads per mini-batch;
+//! * the **update policy** ([`OnlinePolicy`]) maps the online-learning
+//!   literature's decaying step weights `ρ_t = (τ+t)^{−κ}` onto the
+//!   collapsed-Gibbs knob we actually have — sweeps per mini-batch;
+//! * the **checkpoint store** ([`crate::ps::snapshot`], incremental v4
+//!   segments) turns the live cluster into an on-disk generation on a
+//!   cadence;
+//! * the **serving tier** ([`crate::serve::ReplicaSet`]) hot-reloads
+//!   each generation under continuous query load — zero dropped
+//!   queries across reloads.
+//!
+//! [`Pipeline::run`] drives the loop and emits a [`PipelineReport`]
+//! time series: ingest rate, serving generation, model-generation
+//! **freshness lag** (documents ingested but not yet servable), and
+//! held-out perplexity per mini-batch.
+
+pub mod driver;
+pub mod policy;
+
+pub use driver::{Pipeline, PipelineConfig, PipelineReport, PipelineSample};
+pub use policy::OnlinePolicy;

@@ -1,0 +1,142 @@
+//! The online update policy: a decaying mini-batch schedule.
+//!
+//! Stochastic/online variational treatments of latent variable models
+//! (Hoffman et al.'s online LDA; Archambeau & Ermis's incremental
+//! variational framework) weight each mini-batch's contribution by a
+//! Robbins–Monro step size
+//!
+//! ```text
+//! ρ_t = s · (τ + t)^(−κ),   κ ∈ (0.5, 1]
+//! ```
+//!
+//! so early batches move the model a lot and late batches refine it,
+//! with Σρ_t = ∞ and Σρ_t² < ∞ guaranteeing convergence. A collapsed
+//! Gibbs sampler has no explicit step size to decay — each ingested
+//! token permanently joins the count matrices with weight 1. What *is*
+//! free to schedule is **how much sampling effort each mini-batch
+//! gets**: the number of full Gibbs sweeps the live session runs after
+//! ingesting a batch. [`OnlinePolicy`] maps the Archambeau-style decay
+//! onto that knob — batch `t` receives `round(base · ρ_t/ρ_1)` sweeps,
+//! clamped to `[min, max]` — so the early stream (where the model is
+//! still plastic and per-batch mixing matters most) gets the most
+//! sweeps, and the late stream (where each batch is a small perturbation
+//! of a converged model) amortizes down to the floor. The floor is never
+//! 0: every batch must be sampled at least once or its tokens would sit
+//! at their random initialization.
+
+use crate::Result;
+
+/// Decaying sweeps-per-mini-batch schedule (see the module docs).
+#[derive(Clone, Debug)]
+pub struct OnlinePolicy {
+    kappa: f64,
+    tau: f64,
+    base_sweeps: u64,
+    min_sweeps: u64,
+    max_sweeps: u64,
+}
+
+impl OnlinePolicy {
+    /// A policy with decay exponent `kappa` (must lie in `(0.5, 1]`, the
+    /// Robbins–Monro range), delay `tau ≥ 0` (larger = slower early
+    /// decay), and `base_sweeps ≥ 1` sweeps for the first batch. Bounds
+    /// default to `[1, base_sweeps]`.
+    pub fn new(kappa: f64, tau: f64, base_sweeps: u64) -> Result<OnlinePolicy> {
+        anyhow::ensure!(
+            kappa > 0.5 && kappa <= 1.0,
+            "kappa must lie in (0.5, 1] — the Robbins–Monro range where \
+             the step series diverges but its squares converge — got {kappa}"
+        );
+        anyhow::ensure!(
+            tau.is_finite() && tau >= 0.0,
+            "tau must be a finite non-negative delay, got {tau}"
+        );
+        anyhow::ensure!(base_sweeps >= 1, "base_sweeps must be ≥ 1");
+        Ok(OnlinePolicy {
+            kappa,
+            tau,
+            base_sweeps,
+            min_sweeps: 1,
+            max_sweeps: base_sweeps,
+        })
+    }
+
+    /// Override the sweep clamp (`1 ≤ min ≤ max`).
+    pub fn with_bounds(mut self, min_sweeps: u64, max_sweeps: u64) -> Result<OnlinePolicy> {
+        anyhow::ensure!(
+            min_sweeps >= 1 && min_sweeps <= max_sweeps,
+            "sweep bounds must satisfy 1 ≤ min ≤ max, got [{min_sweeps}, {max_sweeps}]"
+        );
+        self.min_sweeps = min_sweeps;
+        self.max_sweeps = max_sweeps;
+        Ok(self)
+    }
+
+    /// The raw step weight `ρ_t = (τ + t)^(−κ)` for 1-based batch `t`.
+    pub fn rho(&self, t: u64) -> f64 {
+        (self.tau + t.max(1) as f64).powf(-self.kappa)
+    }
+
+    /// Gibbs sweeps 1-based batch `t` receives:
+    /// `clamp(round(base · ρ_t/ρ_1), min, max)`.
+    pub fn sweeps_for(&self, t: u64) -> u64 {
+        let scale = self.rho(t) / self.rho(1);
+        let s = (self.base_sweeps as f64 * scale).round() as u64;
+        s.clamp(self.min_sweeps, self.max_sweeps)
+    }
+}
+
+impl Default for OnlinePolicy {
+    /// `κ = 0.7, τ = 1, base = 4` — mid-range decay, a common default in
+    /// the online-LDA literature.
+    fn default() -> OnlinePolicy {
+        OnlinePolicy::new(0.7, 1.0, 4).expect("default policy is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kappa_outside_robbins_monro_is_refused() {
+        for bad in [0.5, 0.49, 1.01, 0.0, -1.0] {
+            let err = format!("{:#}", OnlinePolicy::new(bad, 1.0, 4).unwrap_err());
+            assert!(err.contains("kappa"), "{err}");
+        }
+        assert!(OnlinePolicy::new(0.7, f64::NAN, 4).is_err());
+        assert!(OnlinePolicy::new(0.7, -1.0, 4).is_err());
+        assert!(OnlinePolicy::new(0.7, 1.0, 0).is_err());
+        assert!(OnlinePolicy::new(0.7, 1.0, 4)
+            .unwrap()
+            .with_bounds(3, 2)
+            .is_err());
+    }
+
+    #[test]
+    fn sweeps_decay_monotonically_to_the_floor() {
+        let p = OnlinePolicy::new(0.9, 1.0, 8).unwrap();
+        assert_eq!(p.sweeps_for(1), 8, "first batch gets the full base");
+        let schedule: Vec<u64> = (1..=200).map(|t| p.sweeps_for(t)).collect();
+        for w in schedule.windows(2) {
+            assert!(w[1] <= w[0], "sweep counts never increase: {schedule:?}");
+        }
+        assert_eq!(*schedule.last().unwrap(), 1, "late batches hit the floor");
+        assert!(schedule.iter().all(|&s| (1..=8).contains(&s)));
+    }
+
+    #[test]
+    fn higher_kappa_decays_faster() {
+        let fast = OnlinePolicy::new(1.0, 1.0, 8).unwrap();
+        let slow = OnlinePolicy::new(0.6, 1.0, 8).unwrap();
+        for t in [5u64, 20, 80] {
+            assert!(
+                fast.sweeps_for(t) <= slow.sweeps_for(t),
+                "κ=1.0 must not outspend κ=0.6 at batch {t}"
+            );
+        }
+        // And a large τ delays the decay.
+        let delayed = OnlinePolicy::new(1.0, 100.0, 8).unwrap();
+        assert!(delayed.sweeps_for(5) > fast.sweeps_for(5));
+    }
+}

@@ -40,6 +40,12 @@ pub enum Control {
     /// Server manager → clients: routing epoch changed; re-resolve
     /// servers (after a server failover).
     Reroute,
+    /// Session → parked worker: raise the target iteration and resume
+    /// sampling. Workers in park mode idle at their target instead of
+    /// exiting, so the online loop's very short segments don't pay a
+    /// thread respawn + sampler rebuild each time; a raise below the
+    /// worker's completed iteration count is stale and ignored.
+    RaiseTarget(u64),
 }
 
 /// Message payloads.

@@ -1,0 +1,174 @@
+//! End-to-end streaming train-while-serve pipeline: a corpus several
+//! times larger than the chunk buffer flows through [`Pipeline::run`]
+//! while a background query load hits the serving tier continuously.
+//!
+//! The acceptance claims, in one run:
+//!
+//! * **bounded memory** — the driver never holds more than `chunk_docs`
+//!   documents of the stream at once (`peak_chunk_docs`);
+//! * **live reloads** — the `ReplicaSet` serves ≥ 3 distinct model
+//!   generations mid-stream and drops zero queries across reloads;
+//! * **quality** — post-stream held-out perplexity beats chance
+//!   decisively and lands in the same regime as an equivalent offline
+//!   run over the same docword file (statistical, like
+//!   `session_resume.rs`: seeded RNGs, but thread interleaving perturbs
+//!   trajectories under eventual consistency);
+//! * **freshness** — the ingest-to-servable lag is finite throughout,
+//!   shrinks after the final catch-up checkpoint, and ends at zero.
+
+use hplvm::config::{ModelKind, TrainConfig};
+use hplvm::coordinator::session::TrainSession;
+use hplvm::corpus::generator::CorpusConfig;
+use hplvm::corpus::source::{write_docword, FileSource};
+use hplvm::corpus::stream::{CorpusStream, StreamingSource};
+use hplvm::pipeline::{OnlinePolicy, Pipeline, PipelineConfig};
+use std::path::PathBuf;
+use std::time::Duration;
+
+const CHUNK_DOCS: usize = 60;
+const N_DOCS: usize = 400;
+const VOCAB: usize = 300;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hplvm_pipeline_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = ModelKind::AliasLda;
+    cfg.params.topics = 8;
+    cfg.cluster.clients = 2;
+    cfg.cluster.net.base_latency = Duration::from_micros(50);
+    cfg.cluster.net.jitter = Duration::from_micros(100);
+    cfg.iterations = 8;
+    cfg.eval_every = 2;
+    cfg.test_docs = 12;
+    cfg.seed = seed;
+    cfg.cluster.net.seed = seed ^ 0x7EA7;
+    cfg
+}
+
+/// Write one seeded synthetic corpus to a docword file both the
+/// streaming and offline runs read.
+fn write_corpus(tag: &str) -> PathBuf {
+    let mut gen = CorpusConfig::default();
+    gen.n_docs = N_DOCS;
+    gen.vocab_size = VOCAB;
+    gen.n_topics = 8;
+    gen.doc_len_mean = 12.0;
+    gen.seed = 77;
+    let (corpus, _vocab) = gen.generate();
+    assert_eq!(corpus.docs.len(), N_DOCS);
+    let dir = tmpdir(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("docword.stream.txt");
+    write_docword(&path, &corpus).unwrap();
+    path
+}
+
+#[test]
+fn streamed_corpus_trains_and_serves_online() {
+    let path = write_corpus("e2e");
+    let ckpt = tmpdir("e2e_ckpt");
+
+    let mut cfg = PipelineConfig::new(train_cfg(4242), ckpt);
+    cfg.policy = OnlinePolicy::default();
+    cfg.checkpoint_every_batches = 2;
+    cfg.replicas = 2;
+    cfg.query_interval = Duration::from_millis(1);
+    cfg.warmup_sweeps = 4;
+
+    let policy = cfg.policy.clone();
+    let warmup = cfg.warmup_sweeps;
+    let mut stream = StreamingSource::open(&path, CHUNK_DOCS).unwrap();
+    assert_eq!(stream.vocab_size(), VOCAB);
+    let report = Pipeline::run(cfg, &mut stream).unwrap();
+    println!("{}", report.render());
+
+    // (a) Bounded streaming memory: the corpus is ~7× the chunk buffer,
+    // yet the driver never held more than one chunk.
+    assert_eq!(report.docs_streamed, N_DOCS as u64);
+    assert!(
+        report.peak_chunk_docs <= CHUNK_DOCS,
+        "peak resident chunk {} exceeds the {CHUNK_DOCS}-doc bound",
+        report.peak_chunk_docs
+    );
+    let expected_batches = (N_DOCS as u64).div_ceil(CHUNK_DOCS as u64);
+    assert_eq!(report.batches, expected_batches);
+
+    // (b) Live serving: ≥ 3 generations answered queries mid-stream and
+    // no query was dropped or left unanswered across any reload.
+    assert!(report.queries_sent > 0, "query load never fired");
+    assert_eq!(
+        report.queries_answered, report.queries_sent,
+        "reloads dropped queries"
+    );
+    assert!(
+        report.generations_observed.len() >= 3,
+        "want ≥ 3 served generations, saw {:?}",
+        report.generations_observed
+    );
+    assert!(
+        report.reloads >= 3,
+        "want ≥ 3 serving reloads, got {}",
+        report.reloads
+    );
+    for w in report.generations_observed.windows(2) {
+        assert!(w[0] < w[1], "generations must ascend: {w:?}");
+    }
+
+    // (c) Quality: beats chance decisively, same regime as offline.
+    let chance = VOCAB as f64;
+    assert!(report.final_perplexity.is_finite());
+    assert!(
+        report.final_perplexity < 0.9 * chance,
+        "online perplexity {:.1} does not beat chance {chance:.1}",
+        report.final_perplexity
+    );
+    let total_sweeps: u64 =
+        warmup + (2..=expected_batches).map(|t| policy.sweeps_for(t)).sum::<u64>();
+    let src = FileSource::new(&path);
+    let mut offline = TrainSession::start(train_cfg(4242), &src).unwrap();
+    offline.run_to(total_sweeps).unwrap();
+    let p_offline = offline.finish().unwrap().final_perplexity();
+    assert!(p_offline.is_finite() && p_offline > 0.0);
+    assert!(
+        report.final_perplexity < 3.0 * p_offline,
+        "online {:.1} left the offline regime ({p_offline:.1})",
+        report.final_perplexity
+    );
+
+    // (d) Freshness: lag spikes while batches queue between checkpoints,
+    // then the catch-up checkpoint drains it to zero.
+    assert!(report.peak_lag() > 0, "stream never produced a lag");
+    assert!(report.peak_lag() <= N_DOCS as u64);
+    assert_eq!(report.final_lag(), 0, "catch-up checkpoint must drain the lag");
+    let last = report.samples.last().unwrap();
+    assert!(last.freshness_lag < report.peak_lag());
+    assert_eq!(last.docs_ingested, N_DOCS as u64);
+    assert_eq!(last.docs_servable, N_DOCS as u64);
+    // Every sample stays within the documents actually streamed.
+    for s in &report.samples {
+        assert!(s.freshness_lag <= s.docs_ingested);
+        assert!(s.docs_ingested <= N_DOCS as u64);
+    }
+}
+
+#[test]
+fn bootstrap_chunk_must_cover_the_heldout_split() {
+    let path = write_corpus("boot");
+    let ckpt = tmpdir("boot_ckpt");
+    let mut cfg = PipelineConfig::new(train_cfg(7), ckpt);
+    cfg.train.test_docs = 30;
+    // A 10-doc bootstrap chunk cannot carry a 30-doc held-out split.
+    let mut stream = StreamingSource::open(&path, 10).unwrap();
+    let err = format!("{:#}", Pipeline::run(cfg, &mut stream).unwrap_err());
+    assert!(err.contains("bootstrap chunk"), "{err}");
+    assert!(err.contains("held-out"), "{err}");
+}
